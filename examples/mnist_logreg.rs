@@ -1,0 +1,68 @@
+//! MNIST-like logistic regression under all four gradient-based methods
+//! (Figure 4 / Table 2 workload), on either backend:
+//!
+//!     cargo run --release --example mnist_logreg -- [native|pjrt] [iters]
+//!
+//! `pjrt` runs every worker's gradient through the AOT HLO artifact
+//! (L2 jax graph + L1 Pallas kernels, compiled once at startup) — build
+//! them first with `make artifacts`.  Shapes are fixed by the artifacts:
+//! 10 000 train / 2 000 test, M = 10.
+
+use laq::algo::{build_native, build_pjrt};
+use laq::config::{Algo, Backend, RunCfg};
+use laq::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    laq::util::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let backend = match args.first().map(|s| s.as_str()) {
+        Some("pjrt") => Backend::Pjrt,
+        _ => Backend::Native,
+    };
+    let iters: usize = args
+        .get(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if backend == Backend::Pjrt { 60 } else { 400 });
+
+    let rt = if backend == Backend::Pjrt {
+        let rt = Runtime::open("artifacts").map_err(|e| anyhow::anyhow!("{e}"))?;
+        rt.warmup(&["logreg_grad"]).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Some(rt)
+    } else {
+        None
+    };
+
+    println!("backend: {backend:?}, iters: {iters}\n");
+    let mut results = Vec::new();
+    for algo in [Algo::Gd, Algo::Qgd, Algo::Lag, Algo::Laq] {
+        let mut cfg = RunCfg::paper_logreg(algo);
+        cfg.backend = backend;
+        cfg.iters = iters;
+        if backend == Backend::Native {
+            cfg.data.n_train = 4_000;
+            cfg.data.n_test = 1_000;
+        }
+        let mut trainer = match &rt {
+            Some(rt) => build_pjrt(&cfg, std::rc::Rc::clone(rt)),
+            None => build_native(&cfg),
+        }
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let res = trainer.run().map_err(|e| anyhow::anyhow!("{e}"))?;
+        println!(
+            "{:<4} | loss {:.5} | acc {:.4} | rounds {:>6} | bits {:>13} | sim {:.2}s",
+            res.algo,
+            res.final_loss(),
+            res.final_accuracy.unwrap_or(0.0),
+            res.total_rounds,
+            res.total_bits,
+            res.sim_time,
+        );
+        res.write_to(std::path::Path::new("results/example_mnist"), &res.algo.to_lowercase())?;
+        results.push(res);
+    }
+    println!("\ntraces written to results/example_mnist/*.csv");
+    println!(
+        "expected ordering (paper Fig. 4): bits LAQ < LAG < QGD < GD; rounds LAG ~ LAQ << QGD = GD"
+    );
+    Ok(())
+}

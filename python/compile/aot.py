@@ -1,0 +1,145 @@
+"""AOT lowering: jax (L2, calling L1 Pallas kernels) -> HLO text artifacts.
+
+HLO *text* is the interchange format — NOT `.serialize()`: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`).  The text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run `python -m compile.aot --out ../artifacts` from `python/`, or just
+`make artifacts` at the repo root.  Emits one `<name>.hlo.txt` per entry
+plus `manifest.json` describing every artifact's I/O signature and baked-in
+constants, which `rust/src/runtime` consumes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# ---------------------------------------------------------------------------
+# Experiment-scale constants, shared with the rust side via the manifest.
+# (Scaled-down MNIST-like problem: see DESIGN.md §3 substitutions.)
+# ---------------------------------------------------------------------------
+N_TOTAL = 10_000          # train samples across all workers
+N_TEST = 2_000
+N_WORKERS = 10
+N_SHARD = N_TOTAL // N_WORKERS
+N_FEATURES = 784
+N_CLASSES = 10
+HIDDEN = 200
+L2 = 0.01
+BATCH_SHARD = 50          # stochastic: minibatch 500 across 10 workers
+
+TFM_WORKERS = 4
+TFM_BATCH = 4             # sequences per worker per step
+
+
+def _entries():
+    """name -> (fn, example_args, meta). Order = manifest order."""
+    ents = {}
+
+    def add(name, triple):
+        fn, args, meta = triple
+        ents[name] = (fn, args, dict(meta, name=name))
+
+    # -- full-gradient path (Figures 4/6, Table 2) --
+    add("logreg_grad", model.make_logreg_grad(
+        N_SHARD, N_FEATURES, N_CLASSES, N_TOTAL, L2, N_WORKERS))
+    add("logreg_predict", model.make_logreg_predict(
+        N_TEST, N_FEATURES, N_CLASSES))
+
+    # -- stochastic path (Figures 7/8, Table 3) --
+    add("logreg_grad_batch", model.make_logreg_grad(
+        BATCH_SHARD, N_FEATURES, N_CLASSES,
+        BATCH_SHARD * N_WORKERS, L2, N_WORKERS))
+
+    # -- neural-network path (Figures 5/8, Tables 2/3) --
+    add("mlp_grad", model.make_mlp_grad(
+        N_SHARD, N_FEATURES, HIDDEN, N_CLASSES, N_TOTAL, L2, N_WORKERS))
+    add("mlp_grad_batch", model.make_mlp_grad(
+        BATCH_SHARD, N_FEATURES, HIDDEN, N_CLASSES,
+        BATCH_SHARD * N_WORKERS, L2, N_WORKERS))
+    add("mlp_predict", model.make_mlp_predict(
+        N_TEST, N_FEATURES, HIDDEN, N_CLASSES))
+
+    # -- the L1 quantizer on the artifact path (rust codec cross-check) --
+    add("quantize_b3", model.make_quantize(
+        N_CLASSES * N_FEATURES, bits=3))
+
+    # -- e2e transformer example --
+    from compile.kernels import ref
+    cfg = ref.tfm_config()
+    toks_per_step = TFM_WORKERS * TFM_BATCH * (cfg["seq_len"] - 1)
+    add("tfm_grad", model.make_tfm_grad(
+        TFM_BATCH, cfg, n_global_tokens=toks_per_step, l2=1e-4,
+        n_workers=TFM_WORKERS))
+
+    # -- tiny shapes for fast rust integration tests --
+    add("logreg_grad_tiny", model.make_logreg_grad(
+        64, 32, 4, 256, L2, 4))
+    add("quantize_tiny", model.make_quantize(128, bits=3))
+
+    return ents
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+_DT = {"float32": "f32", "int32": "i32"}
+
+
+def _sig(avals):
+    return [{"shape": list(a.shape), "dtype": _DT[str(a.dtype)]} for a in avals]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact names to (re)build")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {"artifacts": []}
+    for name, (fn, ex_args, meta) in _entries().items():
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out, fname)
+        if only is None or name in only:
+            lowered = jax.jit(fn).lower(*ex_args)
+            out_avals = jax.tree_util.tree_leaves(lowered.out_info)
+            text = to_hlo_text(lowered)
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"  {name}: {len(text)} chars -> {fname}", flush=True)
+        else:
+            lowered = jax.jit(fn).lower(*ex_args)  # still need signature
+            out_avals = jax.tree_util.tree_leaves(lowered.out_info)
+        manifest["artifacts"].append({
+            "name": name,
+            "file": fname,
+            "inputs": _sig(ex_args),
+            "outputs": [{"shape": list(a.shape), "dtype": _DT[str(a.dtype)]}
+                        for a in out_avals],
+            "meta": meta,
+        })
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,128 @@
+"""L1 Pallas kernel: gradient-innovation quantization (paper eqs. (5)-(6)).
+
+Worker m quantizes the *innovation* `g - q_prev` (fresh local gradient minus
+the last quantized gradient the server holds for this worker) on a uniform
+b-bit grid of radius
+
+    R = || g - q_prev ||_inf                                    (paper: R_m^k)
+
+with granularity tau = 1 / (2^b - 1).  Each coordinate becomes an integer
+code in [0, 2^b - 1]:
+
+    code_i = floor( (g_i - qprev_i + R) / (2 tau R) + 1/2 )      (paper eq. (5))
+
+and the dequantized (server-side reconstructed) gradient is
+
+    q_new_i = qprev_i + 2 tau R code_i - R                       (paper eq. (6))
+
+so one upload costs 32 + b*p bits (32 for R, b per coordinate).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): this is a VPU elementwise
+pass; the only cross-coordinate dependency is the max-abs radius, which we
+compute as a per-block reduction (one VMEM-resident block per grid step)
+followed by a tiny host-side max over the per-block partials.  Both kernels
+run `interpret=True` on this image — real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block size for the 1-D elementwise/reduction grids.  1024 f32 = 4 KiB per
+# input block -> three blocks (g, qprev, out) stay far under the ~16 MiB
+# VMEM budget; large enough that grid overhead is negligible.
+BLOCK: int = 1024
+
+
+def _radius_kernel(g_ref, q_ref, out_ref):
+    """Per-block max-abs of the innovation: out[j] = max_i |g_i - q_i|."""
+    out_ref[0] = jnp.max(jnp.abs(g_ref[...] - q_ref[...]))
+
+
+def _project_kernel(g_ref, q_ref, r_ref, code_ref, deq_ref, *, num_levels: int):
+    """Project one block of the innovation onto the uniform grid.
+
+    num_levels = 2^b - 1 (so tau = 1/num_levels).  Codes are emitted as f32
+    integers (PJRT interchange stays all-f32; the rust codec packs them to
+    b-bit fields).  R == 0 is made safe by clamping the divisor; the
+    dequantized value is exact (q_prev) in that case because the code is 0
+    and 2*tau*R*code - R == 0.
+    """
+    g = g_ref[...]
+    q = q_ref[...]
+    r = r_ref[0]
+    two_tau_r = 2.0 * r / num_levels
+    safe = jnp.maximum(two_tau_r, jnp.float32(1e-30))
+    code = jnp.floor((g - q + r) / safe + 0.5)
+    code = jnp.clip(code, 0.0, jnp.float32(num_levels))
+    code_ref[...] = code
+    deq_ref[...] = q + two_tau_r * code - r
+
+
+def _pad_to_block(x: jax.Array) -> jax.Array:
+    p = x.shape[0]
+    rem = (-p) % BLOCK
+    if rem:
+        x = jnp.pad(x, (0, rem))
+    return x
+
+
+def innovation_radius(g: jax.Array, q_prev: jax.Array) -> jax.Array:
+    """R = ||g - q_prev||_inf via a blockwise Pallas reduction."""
+    gp = _pad_to_block(g)
+    qp = _pad_to_block(q_prev)
+    nblk = gp.shape[0] // BLOCK
+    partial = pl.pallas_call(
+        _radius_kernel,
+        out_shape=jax.ShapeDtypeStruct((nblk,), jnp.float32),
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        interpret=True,
+    )(gp, qp)
+    return jnp.max(partial)
+
+
+def quantize_innovation(g: jax.Array, q_prev: jax.Array, bits: int):
+    """Full innovation quantizer.
+
+    Returns `(R, codes, q_new)` where `codes` is f32 integers in
+    [0, 2^bits - 1] and `q_new` is the dequantized quantized gradient the
+    server reconstructs (paper's Q_m(theta^k)).
+    """
+    assert g.shape == q_prev.shape and g.ndim == 1
+    p = g.shape[0]
+    num_levels = (1 << bits) - 1
+    r = innovation_radius(g, q_prev)
+
+    gp = _pad_to_block(g.astype(jnp.float32))
+    qp = _pad_to_block(q_prev.astype(jnp.float32))
+    nblk = gp.shape[0] // BLOCK
+    kern = functools.partial(_project_kernel, num_levels=num_levels)
+    codes, deq = pl.pallas_call(
+        kern,
+        out_shape=(
+            jax.ShapeDtypeStruct((nblk * BLOCK,), jnp.float32),
+            jax.ShapeDtypeStruct((nblk * BLOCK,), jnp.float32),
+        ),
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ),
+        interpret=True,
+    )(gp, qp, r.reshape(1))
+    return r, codes[:p], deq[:p]

@@ -1,0 +1,172 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1) and L2 models.
+
+Everything here is deliberately written in the most direct jnp style — no
+pallas, no tiling, no accumulation tricks — so it can serve as the ground
+truth that pytest compares the kernels against, and as the reference the
+rust native backend is cross-checked with (see rust/tests/runtime_artifacts).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Innovation quantizer (paper eqs. (5)-(6))
+# ---------------------------------------------------------------------------
+
+def quantize_innovation_ref(g: jax.Array, q_prev: jax.Array, bits: int):
+    """Reference innovation quantizer.  Returns (R, codes, q_new)."""
+    g = g.astype(jnp.float32)
+    q_prev = q_prev.astype(jnp.float32)
+    num_levels = (1 << bits) - 1
+    r = jnp.max(jnp.abs(g - q_prev))
+    two_tau_r = 2.0 * r / num_levels
+    safe = jnp.maximum(two_tau_r, jnp.float32(1e-30))
+    code = jnp.floor((g - q_prev + r) / safe + 0.5)
+    code = jnp.clip(code, 0.0, jnp.float32(num_levels))
+    q_new = q_prev + two_tau_r * code - r
+    return r, code, q_new
+
+
+# ---------------------------------------------------------------------------
+# Multinomial logistic regression (paper §G)
+# ---------------------------------------------------------------------------
+
+def logreg_loss_ref(theta_flat, x, y_onehot, *, n_classes, n_features,
+                    n_global, l2, n_workers):
+    """Per-worker loss under the DESIGN.md normalization (sum over workers
+    = paper's global f)."""
+    theta = theta_flat.reshape(n_classes, n_features)
+    logits = x @ theta.T
+    logp = jax.nn.log_softmax(logits, axis=1)
+    ce = -jnp.sum(y_onehot * logp)
+    reg = l2 / n_workers
+    return ce / n_global + 0.5 * reg * jnp.sum(theta * theta)
+
+
+def logreg_loss_grad_ref(theta_flat, x, y_onehot, **kw):
+    loss, grad = jax.value_and_grad(logreg_loss_ref)(theta_flat, x, y_onehot, **kw)
+    return loss, grad
+
+
+# ---------------------------------------------------------------------------
+# One-hidden-layer ReLU MLP 784-H-10 (paper §G: H = 200)
+# ---------------------------------------------------------------------------
+
+def mlp_param_count(n_features: int, hidden: int, n_classes: int) -> int:
+    return n_features * hidden + hidden + hidden * n_classes + n_classes
+
+
+def mlp_unflatten(flat, n_features, hidden, n_classes):
+    o = 0
+    w1 = flat[o:o + n_features * hidden].reshape(n_features, hidden)
+    o += n_features * hidden
+    b1 = flat[o:o + hidden]
+    o += hidden
+    w2 = flat[o:o + hidden * n_classes].reshape(hidden, n_classes)
+    o += hidden * n_classes
+    b2 = flat[o:o + n_classes]
+    return w1, b1, w2, b2
+
+
+def mlp_loss_ref(flat, x, y_onehot, *, n_features, hidden, n_classes,
+                 n_global, l2, n_workers):
+    w1, b1, w2, b2 = mlp_unflatten(flat, n_features, hidden, n_classes)
+    h = jax.nn.relu(x @ w1 + b1)
+    logits = h @ w2 + b2
+    logp = jax.nn.log_softmax(logits, axis=1)
+    ce = -jnp.sum(y_onehot * logp)
+    reg = l2 / n_workers
+    return ce / n_global + 0.5 * reg * jnp.sum(flat * flat)
+
+
+def mlp_loss_grad_ref(flat, x, y_onehot, **kw):
+    return jax.value_and_grad(mlp_loss_ref)(flat, x, y_onehot, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Tiny decoder-only transformer LM (e2e example workload)
+# ---------------------------------------------------------------------------
+
+def tfm_config(vocab=256, d_model=128, n_heads=4, d_ff=512, n_layers=2,
+               seq_len=64):
+    return dict(vocab=vocab, d_model=d_model, n_heads=n_heads, d_ff=d_ff,
+                n_layers=n_layers, seq_len=seq_len)
+
+
+def tfm_param_count(cfg) -> int:
+    v, d, f, l, t = (cfg["vocab"], cfg["d_model"], cfg["d_ff"],
+                     cfg["n_layers"], cfg["seq_len"])
+    per_layer = 4 * d * d + 2 * d * f + 4 * d  # qkvo + ff(2) + 2 layernorms
+    return v * d + t * d + l * per_layer + 2 * d + d * v
+
+
+def tfm_unflatten(flat, cfg):
+    v, d, f, l, t = (cfg["vocab"], cfg["d_model"], cfg["d_ff"],
+                     cfg["n_layers"], cfg["seq_len"])
+    o = 0
+
+    def take(shape):
+        nonlocal o
+        n = 1
+        for s in shape:
+            n *= s
+        out = flat[o:o + n].reshape(shape)
+        o += n
+        return out
+
+    params = {"emb": take((v, d)), "pos": take((t, d)), "layers": []}
+    for _ in range(l):
+        params["layers"].append(dict(
+            wq=take((d, d)), wk=take((d, d)), wv=take((d, d)), wo=take((d, d)),
+            w1=take((d, f)), w2=take((f, d)),
+            ln1_g=take((d,)), ln1_b=take((d,)),
+            ln2_g=take((d,)), ln2_b=take((d,)),
+        ))
+    params["lnf_g"] = take((d,))
+    params["lnf_b"] = take((d,))
+    params["head"] = take((d, v))
+    return params
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def tfm_loss_ref(flat, tokens, cfg, *, n_global_tokens, l2, n_workers):
+    """Next-token CE of a pre-LN decoder-only transformer on `tokens`
+    (B, T) int32, normalized like the other models so worker losses sum to
+    the global loss."""
+    p = tfm_unflatten(flat, cfg)
+    d, h = cfg["d_model"], cfg["n_heads"]
+    b_, t = tokens.shape
+    x = p["emb"][tokens] + p["pos"][None, :t, :]
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    for lyr in p["layers"]:
+        xn = _layernorm(x, lyr["ln1_g"], lyr["ln1_b"])
+        q = (xn @ lyr["wq"]).reshape(b_, t, h, d // h).transpose(0, 2, 1, 3)
+        k = (xn @ lyr["wk"]).reshape(b_, t, h, d // h).transpose(0, 2, 1, 3)
+        v = (xn @ lyr["wv"]).reshape(b_, t, h, d // h).transpose(0, 2, 1, 3)
+        att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(d / h)
+        att = jnp.where(mask[None, None], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        y = (att @ v).transpose(0, 2, 1, 3).reshape(b_, t, d)
+        x = x + y @ lyr["wo"]
+        xn = _layernorm(x, lyr["ln2_g"], lyr["ln2_b"])
+        x = x + jax.nn.relu(xn @ lyr["w1"]) @ lyr["w2"]
+    x = _layernorm(x, p["lnf_g"], p["lnf_b"])
+    logits = x @ p["head"]
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    ce = -jnp.sum(jnp.take_along_axis(logp, tgt[..., None], axis=-1))
+    reg = l2 / n_workers
+    return ce / n_global_tokens + 0.5 * reg * jnp.sum(flat * flat)
+
+
+def tfm_loss_grad_ref(flat, tokens, cfg, **kw):
+    return jax.value_and_grad(
+        lambda f: tfm_loss_ref(f, tokens, cfg, **kw))(flat)

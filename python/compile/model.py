@@ -1,0 +1,138 @@
+"""L2: the jax compute graphs that get AOT-lowered to HLO text artifacts.
+
+Each public `make_*` function returns `(fn, example_args, meta)` where `fn`
+is the jax-jittable computation (calling the L1 Pallas kernels where the
+hot spot lives), `example_args` are ShapeDtypeStructs used for lowering and
+`meta` is recorded in artifacts/manifest.json so the rust runtime knows the
+I/O signature and the baked-in constants (N_global, lambda, M, ...).
+
+Conventions (shared with the rust coordinator — see DESIGN.md §2):
+  * parameters travel as flat f32 vectors;
+  * labels travel as int32 class ids and are one-hot encoded here;
+  * per-worker losses/gradients are normalized so their SUM over the M
+    workers equals the paper's global f / grad f.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import logreg_grad as k_logreg
+from compile.kernels import quantize as k_quant
+from compile.kernels import ref
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Logistic regression (Pallas hot path)
+# ---------------------------------------------------------------------------
+
+def make_logreg_grad(n_shard: int, n_features: int, n_classes: int,
+                     n_global: int, l2: float, n_workers: int):
+    """Per-worker fused loss+grad over one shard: (theta, X, y) -> (loss, grad)."""
+
+    def fn(theta_flat, x, y):
+        y1h = jax.nn.one_hot(y, n_classes, dtype=jnp.float32)
+        loss, grad = k_logreg.logreg_loss_grad(
+            theta_flat, x, y1h,
+            n_classes=n_classes, n_features=n_features,
+            n_global=n_global, l2=l2, n_workers=n_workers)
+        return loss, grad
+
+    args = (_f32(n_classes * n_features), _f32(n_shard, n_features), _i32(n_shard))
+    meta = dict(kind="logreg_grad", n_shard=n_shard, n_features=n_features,
+                n_classes=n_classes, n_global=n_global, l2=l2,
+                n_workers=n_workers, param_dim=n_classes * n_features)
+    return fn, args, meta
+
+
+def make_logreg_predict(n_rows: int, n_features: int, n_classes: int):
+    """Batch prediction for test accuracy: (theta, X) -> argmax class ids."""
+
+    def fn(theta_flat, x):
+        theta = theta_flat.reshape(n_classes, n_features)
+        return jnp.argmax(x @ theta.T, axis=1).astype(jnp.int32)
+
+    args = (_f32(n_classes * n_features), _f32(n_rows, n_features))
+    meta = dict(kind="logreg_predict", n_rows=n_rows, n_features=n_features,
+                n_classes=n_classes, param_dim=n_classes * n_features)
+    return fn, args, meta
+
+
+# ---------------------------------------------------------------------------
+# MLP 784-H-10 (paper's nonconvex model)
+# ---------------------------------------------------------------------------
+
+def make_mlp_grad(n_shard: int, n_features: int, hidden: int, n_classes: int,
+                  n_global: int, l2: float, n_workers: int):
+    p = ref.mlp_param_count(n_features, hidden, n_classes)
+
+    def fn(flat, x, y):
+        y1h = jax.nn.one_hot(y, n_classes, dtype=jnp.float32)
+        return ref.mlp_loss_grad_ref(
+            flat, x, y1h, n_features=n_features, hidden=hidden,
+            n_classes=n_classes, n_global=n_global, l2=l2,
+            n_workers=n_workers)
+
+    args = (_f32(p), _f32(n_shard, n_features), _i32(n_shard))
+    meta = dict(kind="mlp_grad", n_shard=n_shard, n_features=n_features,
+                hidden=hidden, n_classes=n_classes, n_global=n_global,
+                l2=l2, n_workers=n_workers, param_dim=p)
+    return fn, args, meta
+
+
+def make_mlp_predict(n_rows: int, n_features: int, hidden: int, n_classes: int):
+    p = ref.mlp_param_count(n_features, hidden, n_classes)
+
+    def fn(flat, x):
+        w1, b1, w2, b2 = ref.mlp_unflatten(flat, n_features, hidden, n_classes)
+        h = jax.nn.relu(x @ w1 + b1)
+        return jnp.argmax(h @ w2 + b2, axis=1).astype(jnp.int32)
+
+    args = (_f32(p), _f32(n_rows, n_features))
+    meta = dict(kind="mlp_predict", n_rows=n_rows, n_features=n_features,
+                hidden=hidden, n_classes=n_classes, param_dim=p)
+    return fn, args, meta
+
+
+# ---------------------------------------------------------------------------
+# Innovation quantizer as an artifact (L1 on the PJRT path; the rust codec
+# is cross-checked bit-for-bit against this)
+# ---------------------------------------------------------------------------
+
+def make_quantize(p_dim: int, bits: int):
+    def fn(g, q_prev):
+        r, codes, q_new = k_quant.quantize_innovation(g, q_prev, bits)
+        return r, codes, q_new
+
+    args = (_f32(p_dim), _f32(p_dim))
+    meta = dict(kind="quantize", p_dim=p_dim, bits=bits)
+    return fn, args, meta
+
+
+# ---------------------------------------------------------------------------
+# Tiny transformer LM (e2e example)
+# ---------------------------------------------------------------------------
+
+def make_tfm_grad(batch: int, cfg=None, *, n_global_tokens: int,
+                  l2: float, n_workers: int):
+    cfg = cfg or ref.tfm_config()
+    p = ref.tfm_param_count(cfg)
+
+    def fn(flat, tokens):
+        return ref.tfm_loss_grad_ref(
+            flat, tokens, cfg, n_global_tokens=n_global_tokens, l2=l2,
+            n_workers=n_workers)
+
+    args = (_f32(p), _i32(batch, cfg["seq_len"]))
+    meta = dict(kind="tfm_grad", batch=batch, n_global_tokens=n_global_tokens,
+                l2=l2, n_workers=n_workers, param_dim=p, **cfg)
+    return fn, args, meta

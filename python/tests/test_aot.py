@@ -1,0 +1,44 @@
+"""AOT path: HLO text is produced, parseable, and the manifest is coherent."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+
+
+def test_to_hlo_text_tiny():
+    fn, args, _ = model.make_logreg_grad(16, 8, 3, 64, 0.01, 4)
+    lowered = jax.jit(fn).lower(*args)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+
+
+def test_entries_have_unique_names_and_valid_meta():
+    ents = aot._entries()
+    assert len(ents) >= 8
+    for name, (_, args, meta) in ents.items():
+        assert meta["name"] == name
+        assert "param_dim" in meta or meta["kind"] in ("quantize",)
+        for a in args:
+            assert str(a.dtype) in ("float32", "int32")
+
+
+def test_manifest_matches_artifacts_on_disk():
+    adir = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    man_path = os.path.join(adir, "manifest.json")
+    if not os.path.exists(man_path):
+        import pytest
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    man = json.load(open(man_path))
+    assert len(man["artifacts"]) >= 8
+    for art in man["artifacts"]:
+        path = os.path.join(adir, art["file"])
+        assert os.path.exists(path), art["file"]
+        head = open(path).read(64)
+        assert head.startswith("HloModule")
+        for sig in art["inputs"] + art["outputs"]:
+            assert sig["dtype"] in ("f32", "i32")

@@ -1,0 +1,96 @@
+"""Cross-cutting L1 kernel properties that mirror the rust-side proptests,
+keeping the two implementations honest against the same invariants."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quantize as kq
+from compile.kernels import ref
+
+COMMON = dict(deadline=None, max_examples=20)
+
+
+@settings(**COMMON)
+@given(p=st.integers(1, 1500), bits=st.integers(1, 8),
+       seed=st.integers(0, 2**31))
+def test_reconstruction_is_within_grid(p, bits, seed):
+    """Every reconstructed value lies on the 2^b-point grid centered at
+    q_prev with radius R (paper Fig. 1)."""
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=p).astype(np.float32))
+    qp = jnp.asarray(rng.normal(size=p).astype(np.float32))
+    r, codes, d = kq.quantize_innovation(g, qp, bits)
+    r = float(r)
+    if r == 0.0:
+        return
+    tau = 1.0 / (2**bits - 1)
+    # d = qp + 2*tau*r*code - r exactly (same fp expression)
+    expect = np.asarray(qp) + 2 * tau * r * np.asarray(codes) - r
+    np.testing.assert_allclose(np.asarray(d), expect, rtol=0, atol=4e-6)
+
+
+@settings(**COMMON)
+@given(p=st.integers(2, 800), bits=st.integers(2, 8),
+       seed=st.integers(0, 2**31))
+def test_quantization_commutes_with_sign_flip(p, bits, seed):
+    """Q(-g; -q_prev) == -Q(g; q_prev) up to grid symmetry: the radius is
+    sign-invariant and reconstruction magnitudes match."""
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=p).astype(np.float32))
+    qp = jnp.asarray(rng.normal(size=p).astype(np.float32))
+    r1, _, d1 = kq.quantize_innovation(g, qp, bits)
+    r2, _, d2 = kq.quantize_innovation(-g, -qp, bits)
+    np.testing.assert_allclose(float(r1), float(r2), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(d1), -np.asarray(d2),
+                               rtol=0, atol=max(1e-5, 2e-6 * float(r1)))
+
+
+@settings(**COMMON)
+@given(p=st.integers(1, 800), bits=st.integers(1, 8),
+       scale=st.floats(1e-3, 1e3), seed=st.integers(0, 2**31))
+def test_radius_scale_equivariance(p, bits, scale, seed):
+    """R(c·g, c·q) = c·R(g, q): the quantizer is scale-equivariant, which
+    is why the error contracts with the innovation (Thm 1 mechanism)."""
+    rng = np.random.default_rng(seed)
+    g = rng.normal(size=p).astype(np.float32)
+    qp = rng.normal(size=p).astype(np.float32)
+    r1 = float(kq.innovation_radius(jnp.asarray(g), jnp.asarray(qp)))
+    r2 = float(kq.innovation_radius(jnp.asarray(g * scale),
+                                    jnp.asarray(qp * scale)))
+    np.testing.assert_allclose(r2, r1 * scale, rtol=1e-4)
+
+
+@settings(**COMMON)
+@given(n=st.integers(1, 200), f=st.integers(1, 48), c=st.integers(2, 8),
+       seed=st.integers(0, 2**31))
+def test_logreg_grad_sums_to_zero_over_classes_without_reg(n, f, c, seed):
+    """Σ_c grad[c, :] = 0 for softmax CE without regularization — a
+    structural identity the fused kernel must preserve."""
+    import jax
+    from compile.kernels import logreg_grad as kl
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, f)).astype(np.float32))
+    y1h = jax.nn.one_hot(jnp.asarray(rng.integers(0, c, n)), c,
+                         dtype=jnp.float32)
+    th = jnp.asarray((rng.normal(size=c * f) * 0.3).astype(np.float32))
+    _, grad = kl.logreg_loss_grad(
+        th, x, y1h, n_classes=c, n_features=f, n_global=n, l2=0.0,
+        n_workers=1)
+    g = np.asarray(grad).reshape(c, f)
+    np.testing.assert_allclose(g.sum(axis=0), np.zeros(f), atol=2e-5)
+
+
+def test_ref_and_kernel_agree_on_worst_case_logits():
+    """Extreme logits (±1e4 scale features) must not produce NaN."""
+    import jax
+    from compile.kernels import logreg_grad as kl
+    x = jnp.asarray(np.array([[1e4, -1e4], [-1e4, 1e4]], np.float32))
+    y1h = jax.nn.one_hot(jnp.asarray([0, 1]), 2, dtype=jnp.float32)
+    th = jnp.asarray(np.array([1.0, 0.0, 0.0, 1.0], np.float32))
+    kw = dict(n_classes=2, n_features=2, n_global=2, l2=0.0, n_workers=1)
+    l1, g1 = kl.logreg_loss_grad(th, x, y1h, **kw)
+    l2_, g2 = ref.logreg_loss_grad_ref(th, x, y1h, **kw)
+    assert np.isfinite(float(l1)) and np.isfinite(float(l2_))
+    assert np.isfinite(np.asarray(g1)).all()
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-5)

@@ -1,0 +1,196 @@
+//! Trainer builders: wire config + data + backend into a [`Trainer`].
+
+use std::rc::Rc;
+
+use super::{lazy_codec_for, Evaluator, Trainer};
+use crate::comm::LatencyModel;
+use crate::config::{Backend, ModelKind, RunCfg};
+use crate::coordinator::worker::{LazyCodec, WorkerNode};
+use crate::data::{self, shard, Dataset};
+use crate::model::logreg::{LogRegModel, LogRegWorker};
+use crate::model::mlp::{MlpModel, MlpWorker};
+use crate::model::{LossCfg, ModelOps, WorkerGrad};
+use crate::runtime::{PjrtGradWorker, Runtime};
+use crate::{Error, Result};
+
+/// Split the training set into per-worker shards per the config.
+fn make_shards(cfg: &RunCfg, train: &Dataset) -> Vec<Dataset> {
+    match cfg.data.hetero_alpha {
+        Some(a) => shard::dirichlet(train, cfg.workers, a, cfg.data.seed),
+        None => shard::uniform(train, cfg.workers, cfg.data.seed),
+    }
+}
+
+fn loss_cfg(cfg: &RunCfg, shards: &[Dataset]) -> LossCfg {
+    LossCfg {
+        n_global: shards.iter().map(|s| s.n).sum(),
+        l2: cfg.l2,
+        n_workers: cfg.workers,
+    }
+}
+
+fn codec(cfg: &RunCfg) -> LazyCodec {
+    lazy_codec_for(cfg.algo).unwrap_or(LazyCodec::Quantized)
+}
+
+/// Build with the native rust gradient backend.
+pub fn build_native(cfg: &RunCfg) -> Result<Trainer> {
+    let tt = data::load(&cfg.data.name, cfg.data.n_train, cfg.data.n_test, cfg.data.seed)?;
+    let shards = make_shards(cfg, &tt.train);
+    let lc = loss_cfg(cfg, &shards);
+    let (features, classes) = (tt.train.features, tt.train.classes);
+
+    let (nodes, theta0, evaluator): (Vec<WorkerNode<dyn WorkerGrad>>, Vec<f32>, Evaluator) =
+        match cfg.model {
+            ModelKind::LogReg => {
+                let model = LogRegModel::new(features, classes);
+                let theta0 = model.init_params(cfg.seed);
+                let test = tt.test.clone();
+                let ev: Evaluator = Box::new(move |th| model.accuracy(th, &test));
+                let nodes = shards
+                    .into_iter()
+                    .map(|s| {
+                        let w: Box<dyn WorkerGrad> = Box::new(LogRegWorker::new(s, lc));
+                        WorkerNode::new(w, cfg.bits, codec(cfg))
+                    })
+                    .collect();
+                (nodes, theta0, ev)
+            }
+            ModelKind::Mlp => {
+                let model = MlpModel::new(features, cfg.hidden, classes);
+                let theta0 = model.init_params(cfg.seed);
+                let test = tt.test.clone();
+                let ev: Evaluator = Box::new(move |th| model.accuracy(th, &test));
+                let nodes = shards
+                    .into_iter()
+                    .map(|s| {
+                        let w: Box<dyn WorkerGrad> =
+                            Box::new(MlpWorker::new(s, cfg.hidden, lc));
+                        WorkerNode::new(w, cfg.bits, codec(cfg))
+                    })
+                    .collect();
+                (nodes, theta0, ev)
+            }
+            ModelKind::Transformer => {
+                return Err(Error::Config(
+                    "transformer runs on the PJRT backend (see examples/transformer_e2e)"
+                        .into(),
+                ))
+            }
+        };
+    Trainer::assemble(cfg.clone(), nodes, theta0, Some(evaluator), LatencyModel::default())
+}
+
+/// Build with the PJRT backend over `artifacts/` (the production path).
+///
+/// Shard shapes must match the AOT artifacts; the defaults in
+/// `python/compile/aot.py` (N=10 000 train / 2 000 test, M=10, batch 500)
+/// line up with `RunCfg::paper_*`.
+pub fn build_pjrt(cfg: &RunCfg, rt: Rc<Runtime>) -> Result<Trainer> {
+    if cfg.data.name != "mnist" {
+        return Err(Error::Config(
+            "PJRT artifacts are compiled for the mnist-like shapes; use the \
+             native backend for other datasets"
+                .into(),
+        ));
+    }
+    let tt = data::load(&cfg.data.name, cfg.data.n_train, cfg.data.n_test, cfg.data.seed)?;
+    let shards = make_shards(cfg, &tt.train);
+    let (features, classes) = (tt.train.features, tt.train.classes);
+
+    let (art_full, art_batch): (&str, Option<&str>) = match cfg.model {
+        ModelKind::LogReg => ("logreg_grad", Some("logreg_grad_batch")),
+        ModelKind::Mlp => ("mlp_grad", Some("mlp_grad_batch")),
+        ModelKind::Transformer => {
+            return Err(Error::Config(
+                "use runtime::worker::PjrtTfmWorker directly for the transformer".into(),
+            ))
+        }
+    };
+
+    // init + accuracy still come from the (tested-equal) native model ops
+    let (theta0, evaluator): (Vec<f32>, Evaluator) = match cfg.model {
+        ModelKind::LogReg => {
+            let model = LogRegModel::new(features, classes);
+            let t0 = model.init_params(cfg.seed);
+            let test = tt.test.clone();
+            (t0, Box::new(move |th: &[f32]| model.accuracy(th, &test)))
+        }
+        ModelKind::Mlp => {
+            let model = MlpModel::new(features, cfg.hidden, classes);
+            let t0 = model.init_params(cfg.seed);
+            let test = tt.test.clone();
+            (t0, Box::new(move |th: &[f32]| model.accuracy(th, &test)))
+        }
+        ModelKind::Transformer => unreachable!(),
+    };
+
+    let nodes: Vec<WorkerNode<dyn WorkerGrad>> = shards
+        .into_iter()
+        .map(|s| -> Result<WorkerNode<dyn WorkerGrad>> {
+            let w: Box<dyn WorkerGrad> = Box::new(PjrtGradWorker::new(
+                Rc::clone(&rt),
+                art_full,
+                art_batch,
+                s,
+            )?);
+            Ok(WorkerNode::new(w, cfg.bits, codec(cfg)))
+        })
+        .collect::<Result<_>>()?;
+    Trainer::assemble(cfg.clone(), nodes, theta0, Some(evaluator), LatencyModel::default())
+}
+
+/// Build per `cfg.backend`, opening `artifacts/` when needed.
+pub fn build(cfg: &RunCfg, artifacts_dir: &str) -> Result<Trainer> {
+    match cfg.backend {
+        Backend::Native => build_native(cfg),
+        Backend::Pjrt => {
+            let rt = Runtime::open(artifacts_dir)?;
+            build_pjrt(cfg, rt)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Algo;
+
+    fn tiny_cfg(algo: Algo) -> RunCfg {
+        let mut c = RunCfg::paper_logreg(algo);
+        c.data.name = "ijcnn1".into();
+        c.data.n_train = 200;
+        c.data.n_test = 50;
+        c.workers = 4;
+        c.iters = 5;
+        c.batch = 40;
+        c
+    }
+
+    #[test]
+    fn native_builder_smoke_all_algos() {
+        for algo in Algo::all() {
+            let cfg = tiny_cfg(algo);
+            let mut t = build_native(&cfg).unwrap();
+            assert_eq!(t.n_workers(), 4);
+            assert_eq!(t.dim(), 44);
+            let s = t.step().unwrap();
+            assert!(s.loss.is_finite());
+        }
+    }
+
+    #[test]
+    fn transformer_native_is_rejected() {
+        let mut cfg = tiny_cfg(Algo::Laq);
+        cfg.model = ModelKind::Transformer;
+        assert!(build_native(&cfg).is_err());
+    }
+
+    #[test]
+    fn hetero_sharding_builds() {
+        let mut cfg = tiny_cfg(Algo::Laq);
+        cfg.data.hetero_alpha = Some(0.2);
+        let t = build_native(&cfg).unwrap();
+        assert_eq!(t.n_workers(), 4);
+    }
+}

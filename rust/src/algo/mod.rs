@@ -1,0 +1,406 @@
+//! The algorithm zoo: one [`Trainer`] drives all nine methods (the
+//! paper's eight plus the EF-signSGD comparison class) through the shared
+//! coordinator + network machinery.
+//!
+//! | algo | gradients | codec | aggregation | criterion |
+//! |------|-----------|-------|-------------|-----------|
+//! | GD   | full      | exact dense    | lazy (degenerate) | forced upload |
+//! | QGD  | full      | b-bit innovation | lazy            | forced upload |
+//! | LAG  | full      | exact dense    | lazy              | (7a) w/o slack |
+//! | LAQ  | full      | b-bit innovation | lazy            | (7a)+(7b) |
+//! | SGD  | minibatch | dense          | fresh sum         | — |
+//! | QSGD | minibatch | QSGD           | fresh sum         | — |
+//! | SSGD | minibatch | unbiased sparse | fresh sum        | — |
+//! | SLAQ | minibatch | b-bit innovation | lazy            | (7a)+(7b) |
+//! | EF-SGD | minibatch | 1-bit sign + error memory | fresh sum | — |
+//!
+//! "lazy (degenerate)": GD/QGD run through the same lazy-aggregate server
+//! path with uploads forced every round — `∇^k` then equals the plain sum
+//! of (quantized) fresh gradients, recovering eqs. (2)/(3) exactly.
+
+pub mod build;
+
+pub use build::{build, build_native, build_pjrt};
+
+use crate::comm::{LatencyModel, Network};
+use crate::config::{Algo, RunCfg};
+use crate::coordinator::worker::{LazyCodec, WorkerNode};
+use crate::coordinator::ServerState;
+use crate::data::shard::Batcher;
+use crate::metrics::{RunResult, TracePoint};
+use crate::model::WorkerGrad;
+use crate::quant::qsgd::QsgdQuantizer;
+use crate::quant::signef::SignEfCompressor;
+use crate::quant::sparsify::Sparsifier;
+use crate::util::rng::Rng;
+use crate::util::tensor;
+use crate::{Error, Result};
+
+/// Per-iteration statistics.
+#[derive(Clone, Debug)]
+pub struct StepStats {
+    pub iter: usize,
+    /// Σ_m f_m(θ^k) over the evaluated rows (full or minibatch)
+    pub loss: f64,
+    /// ||Σ_m g_m||²
+    pub grad_norm_sq: f64,
+    pub uploads: usize,
+    pub bits: u64,
+    pub max_eps_sq: f64,
+}
+
+/// Test-accuracy oracle (model + held-out set), injected by the builder.
+pub type Evaluator = Box<dyn Fn(&[f32]) -> f64>;
+
+/// The distributed training loop.
+pub struct Trainer {
+    pub cfg: RunCfg,
+    nodes: Vec<WorkerNode<dyn WorkerGrad>>,
+    pub server: ServerState,
+    pub net: Network,
+    batchers: Vec<Batcher>,
+    rng: Rng,
+    qsgd: QsgdQuantizer,
+    sparsifier: Sparsifier,
+    /// per-worker error memories for EF-SGD (lazily sized)
+    ef: Vec<SignEfCompressor>,
+    evaluator: Option<Evaluator>,
+    /// early-stop threshold on the (full) loss, set by the experiment
+    /// harness once f* is known (paper Table 2: residual 1e-6)
+    pub stop_at_loss: Option<f64>,
+    k: usize,
+}
+
+impl Trainer {
+    /// Assemble a trainer from already-built worker nodes.  Most callers
+    /// should use [`build::build_native`] / [`build::build_pjrt`].
+    pub fn assemble(
+        cfg: RunCfg,
+        nodes: Vec<WorkerNode<dyn WorkerGrad>>,
+        theta0: Vec<f32>,
+        evaluator: Option<Evaluator>,
+        latency: LatencyModel,
+    ) -> Result<Self> {
+        cfg.validate()?;
+        if nodes.is_empty() {
+            return Err(Error::Config("no workers".into()));
+        }
+        let dim = nodes[0].dim();
+        if nodes.iter().any(|n| n.dim() != dim) {
+            return Err(Error::Config("worker dims differ".into()));
+        }
+        let server = ServerState::new(
+            dim,
+            nodes.len(),
+            cfg.bits,
+            cfg.criterion.d,
+            theta0,
+        );
+        let net = Network::new(nodes.len(), latency);
+        let batchers = if cfg.algo.is_stochastic() {
+            let per = cfg.batch / nodes.len();
+            if per == 0 {
+                return Err(Error::Config("batch smaller than worker count".into()));
+            }
+            nodes
+                .iter()
+                .enumerate()
+                .map(|(m, n)| Batcher::new(n.oracle.shard_len(), per, cfg.seed, m as u64))
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let rng = Rng::new(cfg.seed ^ 0xC0DEC);
+        let qsgd = QsgdQuantizer::new(cfg.bits);
+        Ok(Self {
+            cfg,
+            nodes,
+            server,
+            net,
+            batchers,
+            rng,
+            qsgd,
+            sparsifier: Sparsifier::new(0.25),
+            ef: Vec::new(),
+            evaluator,
+            stop_at_loss: None,
+            k: 0,
+        })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.server.dim()
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn theta(&self) -> &[f32] {
+        &self.server.theta
+    }
+
+    /// Choose the server-side update rule (default SGD = paper eq. (4)).
+    pub fn set_server_opt(&mut self, opt: crate::coordinator::server::ServerOpt) {
+        self.server.set_opt(opt);
+    }
+
+    /// One full iteration of the selected algorithm.
+    pub fn step(&mut self) -> Result<StepStats> {
+        let k = self.k;
+        let algo = self.cfg.algo;
+        let dim = self.dim();
+        let m_all = self.nodes.len();
+
+        // 1. downlink broadcast of θ^k (32 bits/coordinate, one message)
+        self.net.broadcast(32 * dim);
+
+        // 2. per-worker gradient evaluation
+        let theta = self.server.theta.clone();
+        let mut grads: Vec<Vec<f32>> = Vec::with_capacity(m_all);
+        let mut losses: Vec<f64> = Vec::with_capacity(m_all);
+        for m in 0..m_all {
+            let (l, g) = if algo.is_stochastic() {
+                let rows = self.batchers[m].next_batch();
+                self.nodes[m].oracle.batch(&theta, &rows)?
+            } else {
+                self.nodes[m].oracle.full(&theta)?
+            };
+            losses.push(l);
+            grads.push(g);
+        }
+
+        // 3. uploads + server aggregation
+        let rounds_before = self.net.uplink_rounds();
+        let bits_before = self.net.uplink_bits();
+        let mut max_eps_sq = 0.0f64;
+        match algo {
+            Algo::Gd | Algo::Qgd | Algo::Lag | Algo::Laq | Algo::Slaq => {
+                let force = matches!(algo, Algo::Gd | Algo::Qgd);
+                let rhs_common = match self.cfg.criterion.mode {
+                    crate::config::CritMode::Movement => self.server.criterion_rhs_common(
+                        self.cfg.alpha,
+                        m_all,
+                        &self.cfg.criterion.xi,
+                    ),
+                    crate::config::CritMode::GradNorm => {
+                        // motivating rule (13): ||∇^{k-1}||² / (2M²)
+                        tensor::norm2_sq(&self.server.agg)
+                            / (2.0 * (m_all * m_all) as f64)
+                    }
+                };
+                for m in 0..m_all {
+                    let out = self.nodes[m].lazy_step(
+                        &grads[m],
+                        losses[m],
+                        rhs_common,
+                        self.cfg.criterion.t_max,
+                        force,
+                    )?;
+                    max_eps_sq = max_eps_sq.max(out.eps_sq);
+                    if let Some(payload) = out.upload {
+                        let received = self.net.upload(m, payload)?;
+                        self.server.absorb_lazy(m, &received)?;
+                    }
+                }
+            }
+            Algo::Sgd | Algo::Qsgd | Algo::Ssgd | Algo::EfSgd => {
+                if algo == Algo::EfSgd && self.ef.is_empty() {
+                    self.ef = (0..m_all).map(|_| SignEfCompressor::new(dim)).collect();
+                }
+                self.server.reset_agg();
+                for m in 0..m_all {
+                    let payload = match algo {
+                        Algo::Sgd => crate::comm::Payload::Dense(grads[m].clone()),
+                        Algo::Qsgd => {
+                            crate::comm::Payload::Qsgd(self.qsgd.quantize(&grads[m], &mut self.rng))
+                        }
+                        Algo::Ssgd => crate::comm::Payload::Sparse(
+                            self.sparsifier.sparsify(&grads[m], &mut self.rng),
+                        ),
+                        Algo::EfSgd => {
+                            crate::comm::Payload::Sign(self.ef[m].compress(&grads[m]))
+                        }
+                        _ => unreachable!(),
+                    };
+                    let received = self.net.upload(m, payload)?;
+                    self.server.absorb_fresh(&received)?;
+                }
+            }
+        }
+
+        // 4. parameter update
+        self.server.apply_update(self.cfg.alpha);
+        self.k += 1;
+
+        // metrics
+        let loss: f64 = losses.iter().sum();
+        let mut gsum = vec![0.0f32; dim];
+        for g in &grads {
+            tensor::axpy(1.0, g, &mut gsum);
+        }
+        Ok(StepStats {
+            iter: k,
+            loss,
+            grad_norm_sq: tensor::norm2_sq(&gsum),
+            uploads: (self.net.uplink_rounds() - rounds_before) as usize,
+            bits: self.net.uplink_bits() - bits_before,
+            max_eps_sq,
+        })
+    }
+
+    /// Full (non-stochastic) loss and gradient norm at the current θ —
+    /// instrumentation only, no communication accounted.
+    pub fn eval_full(&mut self) -> Result<(f64, f64)> {
+        let theta = self.server.theta.clone();
+        let mut loss = 0.0;
+        let mut gsum = vec![0.0f32; self.dim()];
+        for n in self.nodes.iter_mut() {
+            let (l, g) = n.oracle.full(&theta)?;
+            loss += l;
+            tensor::axpy(1.0, &g, &mut gsum);
+        }
+        Ok((loss, tensor::norm2_sq(&gsum)))
+    }
+
+    pub fn accuracy(&self) -> Option<f64> {
+        self.evaluator.as_ref().map(|e| e(&self.server.theta))
+    }
+
+    /// Run up to `cfg.iters` iterations, recording a trace.
+    pub fn run(&mut self) -> Result<RunResult> {
+        let iters = self.cfg.iters;
+        let every = self.cfg.record_every.max(1);
+        let acc_every = every * 10;
+        let mut trace = Vec::with_capacity(iters / every + 2);
+        let mut iters_run = 0;
+        for _ in 0..iters {
+            let stats = self.step()?;
+            iters_run = stats.iter + 1;
+            let record = stats.iter % every == 0;
+            if record {
+                // stochastic traces report the exact full loss at the
+                // recorded points (instrumentation, not communication)
+                let (loss, gns) = if self.cfg.algo.is_stochastic() {
+                    self.eval_full()?
+                } else {
+                    (stats.loss, stats.grad_norm_sq)
+                };
+                let accuracy = if stats.iter % acc_every == 0 {
+                    self.accuracy()
+                } else {
+                    None
+                };
+                trace.push(TracePoint {
+                    iter: stats.iter,
+                    loss,
+                    grad_norm_sq: gns,
+                    rounds: self.net.uplink_rounds(),
+                    bits: self.net.uplink_bits(),
+                    sim_time: self.net.sim_time(),
+                    accuracy,
+                    max_eps_sq: stats.max_eps_sq,
+                });
+                if let Some(stop) = self.stop_at_loss {
+                    if loss <= stop {
+                        break;
+                    }
+                }
+            }
+        }
+        let final_accuracy = self.accuracy();
+        if let Some(last) = trace.last_mut() {
+            last.accuracy = final_accuracy;
+        }
+        Ok(RunResult {
+            algo: self.cfg.algo.name().into(),
+            model: self.cfg.model.name().into(),
+            trace,
+            final_theta: self.server.theta.clone(),
+            iters_run,
+            total_rounds: self.net.uplink_rounds(),
+            total_bits: self.net.uplink_bits(),
+            sim_time: self.net.sim_time(),
+            per_worker_rounds: self.net.per_worker_rounds().to_vec(),
+            final_accuracy,
+        })
+    }
+
+    /// Snapshot the full coordination state (see
+    /// [`crate::coordinator::Checkpoint`]); resume with
+    /// [`Self::load_checkpoint`] on a trainer built from the same config.
+    pub fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
+        let ck = crate::coordinator::Checkpoint {
+            iter: self.k as u64,
+            theta: self.server.theta.clone(),
+            agg: self.server.agg.clone(),
+            mirrors: self.server.q_mirror.clone(),
+            clocks: self.nodes.iter().map(|n| n.clock as u64).collect(),
+            eps_hat_sq: self.nodes.iter().map(|n| n.eps_hat_sq).collect(),
+            history: self.server.history.entries_oldest_first(),
+        };
+        ck.write_to(path)
+    }
+
+    /// Restore a snapshot.  The trainer must have been built from the
+    /// same config (dims and worker count are validated).  Network
+    /// counters restart at zero — checkpoints capture algorithm state,
+    /// not accounting.
+    pub fn load_checkpoint(&mut self, path: &std::path::Path) -> Result<()> {
+        let ck = crate::coordinator::Checkpoint::read_from(path)?;
+        if ck.theta.len() != self.dim() {
+            return Err(Error::Config(format!(
+                "checkpoint dim {} != trainer dim {}",
+                ck.theta.len(),
+                self.dim()
+            )));
+        }
+        if ck.mirrors.len() != self.n_workers() {
+            return Err(Error::Config("checkpoint worker count mismatch".into()));
+        }
+        self.server.theta = ck.theta;
+        self.server.agg = ck.agg;
+        self.server.q_mirror = ck.mirrors.clone();
+        let d = self.cfg.criterion.d;
+        self.server.history = crate::coordinator::DeltaHistory::new(d);
+        for &h in ck.history.iter().rev().take(d).collect::<Vec<_>>().iter().rev() {
+            self.server.history.push(*h);
+        }
+        for (m, node) in self.nodes.iter_mut().enumerate() {
+            node.q_prev.copy_from_slice(&ck.mirrors[m]);
+            node.clock = ck.clocks[m] as usize;
+            node.eps_hat_sq = ck.eps_hat_sq[m];
+        }
+        self.k = ck.iter as usize;
+        Ok(())
+    }
+
+    /// Debug/test hook: worst |∇ − Σ mirrors| coordinate error.
+    pub fn aggregate_drift(&self) -> f64 {
+        self.server.check_aggregate_invariant()
+    }
+
+    /// Test hook: per-worker silence clocks.
+    pub fn clocks(&self) -> Vec<usize> {
+        self.nodes.iter().map(|n| n.clock).collect()
+    }
+
+    /// Test hook: worker-side q_prev mirrors.
+    pub fn worker_mirror(&self, m: usize) -> &[f32] {
+        &self.nodes[m].q_prev
+    }
+
+    /// Test hook: server-side mirrors.
+    pub fn server_mirror(&self, m: usize) -> &[f32] {
+        &self.server.q_mirror[m]
+    }
+}
+
+/// Map an [`Algo`] to the lazy codec it uses (where applicable).
+pub fn lazy_codec_for(algo: Algo) -> Option<LazyCodec> {
+    match algo {
+        Algo::Gd | Algo::Lag => Some(LazyCodec::Exact),
+        Algo::Qgd | Algo::Laq | Algo::Slaq => Some(LazyCodec::Quantized),
+        _ => None,
+    }
+}

@@ -1,0 +1,234 @@
+//! Simulated worker↔server network with exact bit accounting.
+//!
+//! The paper's evaluation counts two quantities per run: communication
+//! *rounds* (one round = one worker upload, §1.2) and transmitted *bits*.
+//! Every upload in this crate passes through [`Network::upload`], which
+//! (1) physically serializes the payload through the codecs' wire formats,
+//! (2) counts its exact bit size, (3) decodes it again so the server only
+//! ever sees what actually crossed the wire, and (4) advances a simulated
+//! clock under a latency model `T(msg) = t_fixed + bits * t_per_bit`,
+//! with sequential uplinks (workers can't talk over each other — the
+//! paper's §1.2 motivation for cutting rounds) and broadcast downlink.
+
+use crate::quant::innovation::QuantizedInnovation;
+use crate::quant::qsgd::QsgdMessage;
+use crate::quant::signef::SignMessage;
+use crate::quant::sparsify::SparseMessage;
+use crate::Result;
+
+/// What a worker can put on the uplink.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// full-precision dense vector (GD/LAG/SGD): 32·p bits
+    Dense(Vec<f32>),
+    /// LAQ/QGD innovation message: 32 + b·p bits
+    Innovation(QuantizedInnovation),
+    /// QSGD message: 32 + (b+1)·p bits
+    Qsgd(QsgdMessage),
+    /// sparsified message: 32 + 64·nnz bits
+    Sparse(SparseMessage),
+    /// EF-signSGD message: 32 + p bits
+    Sign(SignMessage),
+}
+
+impl Payload {
+    /// Exact wire size in bits.
+    pub fn wire_bits(&self) -> usize {
+        match self {
+            Payload::Dense(v) => 32 * v.len(),
+            Payload::Innovation(qi) => qi.wire_bits(),
+            Payload::Qsgd(m) => m.wire_bits(),
+            Payload::Sparse(m) => m.wire_bits(),
+            Payload::Sign(m) => m.wire_bits(),
+        }
+    }
+
+    /// Serialize + deserialize through the physical wire format, returning
+    /// what the server receives.  Dense payloads are IEEE bits already and
+    /// pass through unchanged.
+    fn through_wire(self) -> Result<Payload> {
+        Ok(match self {
+            Payload::Dense(v) => Payload::Dense(v),
+            Payload::Innovation(qi) => {
+                let (bits, p) = (qi.bits, qi.codes.len());
+                let bytes = qi.encode();
+                Payload::Innovation(QuantizedInnovation::decode(&bytes, bits, p)?)
+            }
+            Payload::Qsgd(m) => {
+                let (bits, p) = (m.bits, m.levels.len());
+                let bytes = m.encode();
+                Payload::Qsgd(QsgdMessage::decode(&bytes, bits, p)?)
+            }
+            Payload::Sparse(m) => {
+                let dim = m.dim;
+                let bytes = m.encode();
+                Payload::Sparse(SparseMessage::decode(&bytes, dim)?)
+            }
+            Payload::Sign(m) => {
+                let p = m.signs.len();
+                let bytes = m.encode();
+                Payload::Sign(SignMessage::decode(&bytes, p)?)
+            }
+        })
+    }
+}
+
+/// Latency model: fixed per-message setup cost plus serialization time.
+/// Defaults roughly model a 1 Gb/s LAN with 1 ms round setup (link init +
+/// queueing + propagation, Peterson–Davie ch. 1), the regime the paper
+/// argues makes *rounds* matter as much as bits.
+#[derive(Clone, Copy, Debug)]
+pub struct LatencyModel {
+    pub t_fixed: f64,
+    pub t_per_bit: f64,
+}
+
+impl Default for LatencyModel {
+    fn default() -> Self {
+        Self { t_fixed: 1e-3, t_per_bit: 1e-9 }
+    }
+}
+
+impl LatencyModel {
+    pub fn message_time(&self, bits: usize) -> f64 {
+        self.t_fixed + bits as f64 * self.t_per_bit
+    }
+}
+
+/// Cumulative communication counters + simulated clock.
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub latency: LatencyModel,
+    n_workers: usize,
+    uplink_rounds: u64,
+    uplink_bits: u64,
+    downlink_msgs: u64,
+    downlink_bits: u64,
+    per_worker_rounds: Vec<u64>,
+    per_worker_bits: Vec<u64>,
+    sim_time: f64,
+}
+
+impl Network {
+    pub fn new(n_workers: usize, latency: LatencyModel) -> Self {
+        Self {
+            latency,
+            n_workers,
+            uplink_rounds: 0,
+            uplink_bits: 0,
+            downlink_msgs: 0,
+            downlink_bits: 0,
+            per_worker_rounds: vec![0; n_workers],
+            per_worker_bits: vec![0; n_workers],
+            sim_time: 0.0,
+        }
+    }
+
+    /// Worker `m` uploads `payload`.  Returns the server-side view after
+    /// the physical encode/decode round trip.
+    pub fn upload(&mut self, m: usize, payload: Payload) -> Result<Payload> {
+        assert!(m < self.n_workers);
+        let bits = payload.wire_bits();
+        self.uplink_rounds += 1;
+        self.uplink_bits += bits as u64;
+        self.per_worker_rounds[m] += 1;
+        self.per_worker_bits[m] += bits as u64;
+        // uplinks are sequential: each pays its full message time
+        self.sim_time += self.latency.message_time(bits);
+        payload.through_wire()
+    }
+
+    /// Server broadcasts `bits` to all workers (simultaneous downlink: one
+    /// message time, not M of them — §1.2).
+    pub fn broadcast(&mut self, bits: usize) {
+        self.downlink_msgs += 1;
+        self.downlink_bits += bits as u64;
+        self.sim_time += self.latency.message_time(bits);
+    }
+
+    pub fn uplink_rounds(&self) -> u64 {
+        self.uplink_rounds
+    }
+
+    pub fn uplink_bits(&self) -> u64 {
+        self.uplink_bits
+    }
+
+    pub fn downlink_bits(&self) -> u64 {
+        self.downlink_bits
+    }
+
+    pub fn per_worker_rounds(&self) -> &[u64] {
+        &self.per_worker_rounds
+    }
+
+    pub fn per_worker_bits(&self) -> &[u64] {
+        &self.per_worker_bits
+    }
+
+    pub fn sim_time(&self) -> f64 {
+        self.sim_time
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::InnovationQuantizer;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dense_upload_counts_32p() {
+        let mut net = Network::new(3, LatencyModel::default());
+        net.upload(1, Payload::Dense(vec![0.0; 100])).unwrap();
+        assert_eq!(net.uplink_bits(), 3200);
+        assert_eq!(net.uplink_rounds(), 1);
+        assert_eq!(net.per_worker_rounds(), &[0, 1, 0]);
+        assert_eq!(net.per_worker_bits()[1], 3200);
+    }
+
+    #[test]
+    fn innovation_upload_counts_paper_formula() {
+        let mut rng = Rng::new(1);
+        let g: Vec<f32> = (0..500).map(|_| rng.normal() as f32).collect();
+        let q = InnovationQuantizer::new(3);
+        let (qi, _) = q.quantize(&g, &vec![0.0; 500]);
+        let mut net = Network::new(1, LatencyModel::default());
+        net.upload(0, Payload::Innovation(qi)).unwrap();
+        assert_eq!(net.uplink_bits() as usize, 32 + 3 * 500);
+    }
+
+    #[test]
+    fn wire_roundtrip_preserves_innovation() {
+        let mut rng = Rng::new(2);
+        let g: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+        let q = InnovationQuantizer::new(4);
+        let (qi, _) = q.quantize(&g, &vec![0.0; 64]);
+        let mut net = Network::new(1, LatencyModel::default());
+        match net.upload(0, Payload::Innovation(qi.clone())).unwrap() {
+            Payload::Innovation(got) => assert_eq!(got, qi),
+            _ => panic!("wrong payload kind"),
+        }
+    }
+
+    #[test]
+    fn sim_time_advances_per_model() {
+        let lat = LatencyModel { t_fixed: 1.0, t_per_bit: 0.001 };
+        let mut net = Network::new(2, lat);
+        net.upload(0, Payload::Dense(vec![0.0; 10])).unwrap(); // 320 bits
+        assert!((net.sim_time() - (1.0 + 0.32)).abs() < 1e-12);
+        net.broadcast(100);
+        assert!((net.sim_time() - (1.0 + 0.32 + 1.0 + 0.1)).abs() < 1e-12);
+        assert_eq!(net.downlink_bits(), 100);
+    }
+
+    #[test]
+    fn rounds_dominate_time_for_small_messages() {
+        // the paper's motivation: with realistic t_fixed, many small
+        // messages cost more than few large ones of equal total bits
+        let lat = LatencyModel::default();
+        let many_small: f64 = (0..100).map(|_| lat.message_time(1000)).sum();
+        let one_big = lat.message_time(100 * 1000);
+        assert!(many_small > 10.0 * one_big);
+    }
+}

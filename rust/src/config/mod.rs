@@ -1,0 +1,491 @@
+//! Typed experiment configuration.
+//!
+//! Configs load from TOML (subset, see [`toml`]) or JSON files into the
+//! shared [`Json`] value model, then into the typed structs here, with the
+//! paper's §4 settings as defaults (M=10, D=10, ξ_d=0.8/D, t̄=100, α=0.02,
+//! b=3 for logistic regression / 8 for the neural network).  CLI flags
+//! override file values; every run records its resolved config next to its
+//! metrics so results are reproducible.
+
+pub mod toml;
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Which optimization algorithm drives the run (paper §4 comparisons).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Algo {
+    /// full-precision full-gradient descent (eq. 2)
+    Gd,
+    /// quantized GD: every worker uploads every round (eq. 3)
+    Qgd,
+    /// lazily aggregated (full-precision) gradients — Chen et al. 2018
+    Lag,
+    /// the paper's contribution (eq. 4 + criterion (7))
+    Laq,
+    /// minibatch SGD
+    Sgd,
+    /// QSGD (Alistarh et al. 2017) — stochastic quantization
+    Qsgd,
+    /// unbiased sparsified SGD (Wangni et al. 2018)
+    Ssgd,
+    /// stochastic LAQ
+    Slaq,
+    /// error-feedback signSGD (Seide et al. 2014; Karimireddy et al. 2019)
+    /// — the §2.3 error-feedback comparison class: compresses every
+    /// upload to 1 bit/coord, never skips a round
+    EfSgd,
+}
+
+impl Algo {
+    pub fn parse(s: &str) -> Result<Algo> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "gd" => Algo::Gd,
+            "qgd" => Algo::Qgd,
+            "lag" => Algo::Lag,
+            "laq" => Algo::Laq,
+            "sgd" => Algo::Sgd,
+            "qsgd" => Algo::Qsgd,
+            "ssgd" => Algo::Ssgd,
+            "slaq" => Algo::Slaq,
+            "efsgd" | "ef-sgd" => Algo::EfSgd,
+            other => return Err(Error::Config(format!("unknown algo '{other}'"))),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::Gd => "GD",
+            Algo::Qgd => "QGD",
+            Algo::Lag => "LAG",
+            Algo::Laq => "LAQ",
+            Algo::Sgd => "SGD",
+            Algo::Qsgd => "QSGD",
+            Algo::Ssgd => "SSGD",
+            Algo::Slaq => "SLAQ",
+            Algo::EfSgd => "EF-SGD",
+        }
+    }
+
+    /// Does this algorithm draw minibatches (Table 3 family)?
+    pub fn is_stochastic(&self) -> bool {
+        matches!(
+            self,
+            Algo::Sgd | Algo::Qsgd | Algo::Ssgd | Algo::Slaq | Algo::EfSgd
+        )
+    }
+
+    pub fn all() -> [Algo; 9] {
+        [Algo::Gd, Algo::Qgd, Algo::Lag, Algo::Laq,
+         Algo::Sgd, Algo::Qsgd, Algo::Ssgd, Algo::Slaq, Algo::EfSgd]
+    }
+}
+
+/// Which model the workers differentiate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    LogReg,
+    Mlp,
+    Transformer,
+}
+
+impl ModelKind {
+    pub fn parse(s: &str) -> Result<ModelKind> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "logreg" | "logistic" => ModelKind::LogReg,
+            "mlp" | "nn" | "neural" => ModelKind::Mlp,
+            "transformer" | "tfm" => ModelKind::Transformer,
+            other => return Err(Error::Config(format!("unknown model '{other}'"))),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::LogReg => "logreg",
+            ModelKind::Mlp => "mlp",
+            ModelKind::Transformer => "transformer",
+        }
+    }
+}
+
+/// Gradient evaluation backend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// pure-rust mirrors (fast; bit-equivalence with artifacts is tested)
+    Native,
+    /// AOT HLO artifacts executed through PJRT (the production path)
+    Pjrt,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Backend> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "native" => Backend::Native,
+            "pjrt" | "xla" => Backend::Pjrt,
+            other => return Err(Error::Config(format!("unknown backend '{other}'"))),
+        })
+    }
+}
+
+/// Which right-hand side the selection rule (7a) compares against.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CritMode {
+    /// the paper's rule: weighted recent parameter movement,
+    /// `(1/(α²M²)) Σ_d ξ_d ||θ^{k+1-d} − θ^{k-d}||²` — assumes the
+    /// θ-update is plain GD (Δθ = α∇)
+    Movement,
+    /// the motivating inequality (13) evaluated with the server's lazy
+    /// aggregate: `||∇^{k-1}||² / (2M²)` — optimizer-agnostic (works
+    /// under server-side Adam, where Δθ ≉ α∇)
+    GradNorm,
+}
+
+/// LAQ/LAG selection-criterion parameters (paper eq. (7)).
+#[derive(Clone, Debug)]
+pub struct CriterionCfg {
+    /// memory depth D
+    pub d: usize,
+    /// weights ξ_1..ξ_D
+    pub xi: Vec<f64>,
+    /// forced-refresh bound t̄ (7b)
+    pub t_max: usize,
+    /// rhs variant (paper default: Movement)
+    pub mode: CritMode,
+}
+
+impl CriterionCfg {
+    /// Paper §4 defaults: D = 10, ξ_d = 0.8 / D, t̄ = 100.
+    pub fn paper_default() -> Self {
+        let d = 10;
+        Self { d, xi: vec![0.8 / d as f64; d], t_max: 100, mode: CritMode::Movement }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.xi.len() != self.d {
+            return Err(Error::Config(format!(
+                "xi has {} entries, expected D = {}",
+                self.xi.len(),
+                self.d
+            )));
+        }
+        if self.d > self.t_max {
+            return Err(Error::Config(format!(
+                "D = {} must be <= t_max = {} (paper requires D <= t̄)",
+                self.d, self.t_max
+            )));
+        }
+        if self.xi.iter().any(|&x| x < 0.0) {
+            return Err(Error::Config("xi must be nonnegative".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Synthetic dataset selection (DESIGN.md §3 substitution table).
+#[derive(Clone, Debug)]
+pub struct DataCfg {
+    /// "mnist" | "ijcnn1" | "covtype"
+    pub name: String,
+    pub n_train: usize,
+    pub n_test: usize,
+    /// Dirichlet concentration for heterogeneous sharding (None = uniform)
+    pub hetero_alpha: Option<f64>,
+    pub seed: u64,
+}
+
+impl DataCfg {
+    pub fn mnist_like() -> Self {
+        Self { name: "mnist".into(), n_train: 10_000, n_test: 2_000, hetero_alpha: None, seed: 17 }
+    }
+}
+
+/// A full training run.
+#[derive(Clone, Debug)]
+pub struct RunCfg {
+    pub algo: Algo,
+    pub model: ModelKind,
+    pub backend: Backend,
+    pub data: DataCfg,
+    pub workers: usize,
+    pub iters: usize,
+    /// stepsize α
+    pub alpha: f64,
+    /// quantization bits b (ignored by GD/LAG/SGD)
+    pub bits: u32,
+    /// total minibatch size across workers (stochastic algos only)
+    pub batch: usize,
+    pub criterion: CriterionCfg,
+    /// ridge coefficient λ
+    pub l2: f64,
+    /// MLP hidden width (paper §G: 200)
+    pub hidden: usize,
+    /// stop when loss − f* < residual (None = fixed iters)
+    pub target_residual: Option<f64>,
+    pub seed: u64,
+    /// record a metrics point every `record_every` iterations
+    pub record_every: usize,
+}
+
+impl RunCfg {
+    /// Paper §4 gradient-based defaults (logistic regression).
+    pub fn paper_logreg(algo: Algo) -> Self {
+        Self {
+            algo,
+            model: ModelKind::LogReg,
+            backend: Backend::Native,
+            data: DataCfg::mnist_like(),
+            workers: 10,
+            iters: 800,
+            alpha: 0.02,
+            bits: 3,
+            batch: 500,
+            criterion: CriterionCfg::paper_default(),
+            l2: 0.01,
+            hidden: 200,
+            target_residual: None,
+            seed: 1,
+            record_every: 1,
+        }
+    }
+
+    /// Paper §4 neural-network defaults.
+    pub fn paper_mlp(algo: Algo) -> Self {
+        let mut c = Self::paper_logreg(algo);
+        c.model = ModelKind::Mlp;
+        c.bits = 8;
+        c.iters = 400;
+        c
+    }
+
+    /// Paper §4 stochastic defaults.
+    pub fn paper_stochastic(algo: Algo, model: ModelKind) -> Self {
+        let mut c = Self::paper_logreg(algo);
+        c.model = model;
+        c.alpha = 0.008;
+        c.bits = if model == ModelKind::Mlp { 8 } else { 3 };
+        c.iters = 500;
+        c
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 {
+            return Err(Error::Config("workers must be > 0".into()));
+        }
+        if !(1..=16).contains(&self.bits) {
+            return Err(Error::Config(format!("bits = {} out of range 1..=16", self.bits)));
+        }
+        if self.alpha <= 0.0 {
+            return Err(Error::Config("alpha must be positive".into()));
+        }
+        if self.algo.is_stochastic() && self.batch == 0 {
+            return Err(Error::Config("stochastic algorithms need batch > 0".into()));
+        }
+        self.criterion.validate()
+    }
+
+    /// Apply a parsed TOML/JSON document over this config.
+    pub fn apply_json(&mut self, j: &Json) -> Result<()> {
+        let run = if j.get("run").is_null() { j } else { j.get("run") };
+        if let Some(s) = run.get("algo").as_str() {
+            self.algo = Algo::parse(s)?;
+        }
+        if let Some(s) = run.get("model").as_str() {
+            self.model = ModelKind::parse(s)?;
+        }
+        if let Some(s) = run.get("backend").as_str() {
+            self.backend = Backend::parse(s)?;
+        }
+        if let Some(v) = run.get("workers").as_usize() {
+            self.workers = v;
+        }
+        if let Some(v) = run.get("iters").as_usize() {
+            self.iters = v;
+        }
+        if let Some(v) = run.get("alpha").as_f64() {
+            self.alpha = v;
+        }
+        if let Some(v) = run.get("bits").as_usize() {
+            self.bits = v as u32;
+        }
+        if let Some(v) = run.get("batch").as_usize() {
+            self.batch = v;
+        }
+        if let Some(v) = run.get("l2").as_f64() {
+            self.l2 = v;
+        }
+        if let Some(v) = run.get("hidden").as_usize() {
+            self.hidden = v;
+        }
+        if let Some(v) = run.get("seed").as_f64() {
+            self.seed = v as u64;
+        }
+        if let Some(v) = run.get("target_residual").as_f64() {
+            self.target_residual = Some(v);
+        }
+        let crit = j.get("criterion");
+        if !crit.is_null() {
+            if let Some(d) = crit.get("d").as_usize() {
+                self.criterion.d = d;
+                self.criterion.xi = vec![0.8 / d as f64; d];
+            }
+            if let Some(x) = crit.get("xi").as_f64() {
+                self.criterion.xi = vec![x; self.criterion.d];
+            }
+            if let Some(arr) = crit.get("xi").as_arr() {
+                self.criterion.xi =
+                    arr.iter().filter_map(|v| v.as_f64()).collect();
+            }
+            if let Some(t) = crit.get("t_max").as_usize() {
+                self.criterion.t_max = t;
+            }
+            if let Some(m) = crit.get("mode").as_str() {
+                self.criterion.mode = match m {
+                    "movement" => CritMode::Movement,
+                    "gradnorm" => CritMode::GradNorm,
+                    other => {
+                        return Err(Error::Config(format!(
+                            "unknown criterion mode '{other}'"
+                        )))
+                    }
+                };
+            }
+        }
+        let data = j.get("data");
+        if !data.is_null() {
+            if let Some(s) = data.get("name").as_str() {
+                self.data.name = s.to_string();
+            }
+            if let Some(v) = data.get("n_train").as_usize() {
+                self.data.n_train = v;
+            }
+            if let Some(v) = data.get("n_test").as_usize() {
+                self.data.n_test = v;
+            }
+            if let Some(v) = data.get("hetero_alpha").as_f64() {
+                self.data.hetero_alpha = Some(v);
+            }
+            if let Some(v) = data.get("seed").as_f64() {
+                self.data.seed = v as u64;
+            }
+        }
+        self.validate()
+    }
+
+    /// Load a `.toml` or `.json` config file over the defaults.
+    pub fn load_file(&mut self, path: &str) -> Result<()> {
+        let text = std::fs::read_to_string(path)?;
+        let doc = if path.ends_with(".json") {
+            Json::parse(&text)?
+        } else {
+            toml::parse(&text).map_err(|e| Error::Config(e.to_string()))?
+        };
+        self.apply_json(&doc)
+    }
+
+    /// Serialize the resolved config (recorded beside run outputs).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("run", Json::obj(vec![
+                ("algo", Json::Str(self.algo.name().into())),
+                ("model", Json::Str(self.model.name().into())),
+                ("backend", Json::Str(match self.backend {
+                    Backend::Native => "native".into(),
+                    Backend::Pjrt => "pjrt".into(),
+                })),
+                ("workers", Json::Num(self.workers as f64)),
+                ("iters", Json::Num(self.iters as f64)),
+                ("alpha", Json::Num(self.alpha)),
+                ("bits", Json::Num(self.bits as f64)),
+                ("batch", Json::Num(self.batch as f64)),
+                ("l2", Json::Num(self.l2)),
+                ("seed", Json::Num(self.seed as f64)),
+            ])),
+            ("criterion", Json::obj(vec![
+                ("d", Json::Num(self.criterion.d as f64)),
+                ("xi", Json::arr_f64(&self.criterion.xi)),
+                ("t_max", Json::Num(self.criterion.t_max as f64)),
+            ])),
+            ("data", Json::obj(vec![
+                ("name", Json::Str(self.data.name.clone())),
+                ("n_train", Json::Num(self.data.n_train as f64)),
+                ("n_test", Json::Num(self.data.n_test as f64)),
+                ("seed", Json::Num(self.data.seed as f64)),
+            ])),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_defaults_match_section4() {
+        let c = RunCfg::paper_logreg(Algo::Laq);
+        assert_eq!(c.workers, 10);
+        assert_eq!(c.bits, 3);
+        assert_eq!(c.alpha, 0.02);
+        assert_eq!(c.criterion.d, 10);
+        assert_eq!(c.criterion.t_max, 100);
+        assert!((c.criterion.xi[0] - 0.08).abs() < 1e-12);
+        assert_eq!(c.l2, 0.01);
+        c.validate().unwrap();
+
+        let s = RunCfg::paper_stochastic(Algo::Slaq, ModelKind::Mlp);
+        assert_eq!(s.alpha, 0.008);
+        assert_eq!(s.bits, 8);
+        assert_eq!(s.batch, 500);
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let doc = "\n[run]\nalgo = \"qgd\"\nbits = 4\nworkers = 5\n[criterion]\nd = 4\nt_max = 50\n[data]\nname = \"covtype\"\n";
+        let mut c = RunCfg::paper_logreg(Algo::Laq);
+        c.apply_json(&toml::parse(doc).unwrap()).unwrap();
+        assert_eq!(c.algo, Algo::Qgd);
+        assert_eq!(c.bits, 4);
+        assert_eq!(c.workers, 5);
+        assert_eq!(c.criterion.d, 4);
+        assert_eq!(c.criterion.xi.len(), 4);
+        assert_eq!(c.data.name, "covtype");
+    }
+
+    #[test]
+    fn validation_rejects_bad_configs() {
+        let mut c = RunCfg::paper_logreg(Algo::Laq);
+        c.workers = 0;
+        assert!(c.validate().is_err());
+        let mut c = RunCfg::paper_logreg(Algo::Laq);
+        c.bits = 0;
+        assert!(c.validate().is_err());
+        let mut c = RunCfg::paper_logreg(Algo::Laq);
+        c.criterion.d = 200; // > t_max
+        c.criterion.xi = vec![0.0; 200];
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn algo_roundtrip() {
+        for a in Algo::all() {
+            assert_eq!(Algo::parse(a.name()).unwrap(), a);
+        }
+        assert!(Algo::parse("nope").is_err());
+    }
+
+    #[test]
+    fn config_json_roundtrips_through_apply() {
+        let c = RunCfg::paper_mlp(Algo::Laq);
+        let j = c.to_json();
+        let mut c2 = RunCfg::paper_logreg(Algo::Gd);
+        c2.apply_json(&j).unwrap();
+        assert_eq!(c2.algo, Algo::Laq);
+        assert_eq!(c2.model, ModelKind::Mlp);
+        assert_eq!(c2.bits, 8);
+    }
+
+    #[test]
+    fn stochastic_flag() {
+        assert!(Algo::Slaq.is_stochastic());
+        assert!(!Algo::Laq.is_stochastic());
+    }
+}

@@ -1,0 +1,228 @@
+//! TOML-subset parser — the config-file substrate.
+//!
+//! Supports the subset real experiment configs need: `[section]` and
+//! `[section.sub]` headers, `key = value` with string / integer / float /
+//! boolean / homogeneous-array values, `#` comments, and bare or quoted
+//! keys.  Parsed into the same [`Json`] value model the rest of the crate
+//! uses (sections become nested objects), so config lookup code is shared
+//! between TOML and JSON inputs.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+#[error("toml parse error at line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+pub fn parse(text: &str) -> Result<Json, TomlError> {
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+    let mut section: Vec<String> = Vec::new();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: &str| TomlError { line: lineno + 1, msg: msg.to_string() };
+
+        if let Some(hdr) = line.strip_prefix('[') {
+            let hdr = hdr.strip_suffix(']').ok_or_else(|| err("unterminated section header"))?;
+            if hdr.is_empty() {
+                return Err(err("empty section name"));
+            }
+            section = hdr.split('.').map(|s| s.trim().to_string()).collect();
+            if section.iter().any(|s| s.is_empty()) {
+                return Err(err("empty section path component"));
+            }
+            // materialize the section object
+            ensure_path(&mut root, &section).map_err(|m| err(&m))?;
+        } else {
+            let (k, v) = line.split_once('=').ok_or_else(|| err("expected key = value"))?;
+            let key = parse_key(k.trim()).ok_or_else(|| err("bad key"))?;
+            let val = parse_value(v.trim()).map_err(|m| err(&m))?;
+            let obj = ensure_path(&mut root, &section).map_err(|m| err(&m))?;
+            if obj.contains_key(&key) {
+                return Err(err(&format!("duplicate key '{key}'")));
+            }
+            obj.insert(key, val);
+        }
+    }
+    Ok(Json::Obj(root))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_key(k: &str) -> Option<String> {
+    if let Some(q) = k.strip_prefix('"') {
+        return q.strip_suffix('"').map(|s| s.to_string());
+    }
+    if !k.is_empty()
+        && k.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+    {
+        Some(k.to_string())
+    } else {
+        None
+    }
+}
+
+fn ensure_path<'a>(
+    root: &'a mut BTreeMap<String, Json>,
+    path: &[String],
+) -> Result<&'a mut BTreeMap<String, Json>, String> {
+    let mut cur = root;
+    for p in path {
+        let entry = cur
+            .entry(p.clone())
+            .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        match entry {
+            Json::Obj(o) => cur = o,
+            _ => return Err(format!("'{p}' is both a value and a section")),
+        }
+    }
+    Ok(cur)
+}
+
+fn parse_value(v: &str) -> Result<Json, String> {
+    if v.is_empty() {
+        return Err("empty value".into());
+    }
+    if v == "true" {
+        return Ok(Json::Bool(true));
+    }
+    if v == "false" {
+        return Ok(Json::Bool(false));
+    }
+    if let Some(s) = v.strip_prefix('"') {
+        let s = s.strip_suffix('"').ok_or("unterminated string")?;
+        // minimal escapes
+        let mut out = String::new();
+        let mut it = s.chars();
+        while let Some(c) = it.next() {
+            if c == '\\' {
+                match it.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    other => return Err(format!("bad escape {other:?}")),
+                }
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(Json::Str(out));
+    }
+    if let Some(inner) = v.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Json::Arr(vec![]));
+        }
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            items.push(parse_value(part.trim())?);
+        }
+        return Ok(Json::Arr(items));
+    }
+    // number (TOML allows underscores)
+    let clean: String = v.chars().filter(|&c| c != '_').collect();
+    clean
+        .parse::<f64>()
+        .map(Json::Num)
+        .map_err(|_| format!("invalid value '{v}'"))
+}
+
+/// Split an array body on commas that are not nested in strings/brackets.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let (mut depth, mut in_str, mut start) = (0usize, false, 0usize);
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flat_keys() {
+        let j = parse("a = 1\nb = 2.5\nc = \"hi\"\nd = true\n").unwrap();
+        assert_eq!(j.get("a").as_f64(), Some(1.0));
+        assert_eq!(j.get("b").as_f64(), Some(2.5));
+        assert_eq!(j.get("c").as_str(), Some("hi"));
+        assert_eq!(j.get("d").as_bool(), Some(true));
+    }
+
+    #[test]
+    fn sections_nest() {
+        let doc = "\n[laq]\nbits = 3\n[laq.criterion]\nd = 10\nxi = 0.08\n[data]\nname = \"mnist\"\n";
+        let j = parse(doc).unwrap();
+        assert_eq!(j.get("laq").get("bits").as_usize(), Some(3));
+        assert_eq!(j.get("laq").get("criterion").get("d").as_usize(), Some(10));
+        assert_eq!(j.get("data").get("name").as_str(), Some("mnist"));
+    }
+
+    #[test]
+    fn arrays_and_comments() {
+        let j = parse("xs = [1, 2, 3]  # weights\nys = [\"a\", \"b\"]\nempty = []\n").unwrap();
+        assert_eq!(j.get("xs").as_arr().unwrap().len(), 3);
+        assert_eq!(j.get("ys").as_arr().unwrap()[1].as_str(), Some("b"));
+        assert_eq!(j.get("empty").as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let j = parse("s = \"a#b\"\n").unwrap();
+        assert_eq!(j.get("s").as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn numeric_underscores() {
+        let j = parse("n = 60_000\n").unwrap();
+        assert_eq!(j.get("n").as_usize(), Some(60000));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("ok = 1\nbad line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e2 = parse("[unterminated\n").unwrap_err();
+        assert_eq!(e2.line, 1);
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(parse("a = 1\na = 2\n").is_err());
+    }
+
+    #[test]
+    fn section_vs_value_conflict_rejected() {
+        assert!(parse("a = 1\n[a]\nb = 2\n").is_err());
+    }
+}

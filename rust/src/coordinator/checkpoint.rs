@@ -1,0 +1,210 @@
+//! Checkpointing: serialize the full distributed-training state (server
+//! iterate + lazy aggregate + per-worker mirrors/clocks/error norms +
+//! Δθ history) so a run can stop and resume **bit-identically** — the
+//! mirrors are the algorithm's correctness-critical state, so resume must
+//! restore them exactly, not approximately.
+//!
+//! Format: little-endian binary, magic `LAQCKPT1`, no external deps.
+
+use crate::{Error, Result};
+use std::io::{Read, Write};
+
+const MAGIC: &[u8; 8] = b"LAQCKPT1";
+
+/// Everything needed to resume a run (independent of dataset/backend,
+/// which are reconstructed from the config).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub iter: u64,
+    pub theta: Vec<f32>,
+    pub agg: Vec<f32>,
+    /// per-worker server/worker mirror Q_m(θ̂_m)
+    pub mirrors: Vec<Vec<f32>>,
+    /// per-worker silence clocks t_m
+    pub clocks: Vec<u64>,
+    /// per-worker ‖ε̂_m‖²
+    pub eps_hat_sq: Vec<f64>,
+    /// Δθ-history entries, most recent last
+    pub history: Vec<f64>,
+}
+
+fn w_u64(w: &mut impl Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn w_f64(w: &mut impl Write, v: f64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn w_f32s(w: &mut impl Write, v: &[f32]) -> Result<()> {
+    w_u64(w, v.len() as u64)?;
+    for x in v {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn r_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn r_f64(r: &mut impl Read) -> Result<f64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(f64::from_le_bytes(b))
+}
+
+fn r_f32s(r: &mut impl Read) -> Result<Vec<f32>> {
+    let n = r_u64(r)? as usize;
+    if n > (1 << 31) {
+        return Err(Error::Msg("checkpoint array too large".into()));
+    }
+    let mut out = Vec::with_capacity(n);
+    let mut b = [0u8; 4];
+    for _ in 0..n {
+        r.read_exact(&mut b)?;
+        out.push(f32::from_le_bytes(b));
+    }
+    Ok(out)
+}
+
+impl Checkpoint {
+    pub fn write_to(&self, path: &std::path::Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(MAGIC)?;
+        w_u64(&mut w, self.iter)?;
+        w_f32s(&mut w, &self.theta)?;
+        w_f32s(&mut w, &self.agg)?;
+        w_u64(&mut w, self.mirrors.len() as u64)?;
+        for m in &self.mirrors {
+            w_f32s(&mut w, m)?;
+        }
+        w_u64(&mut w, self.clocks.len() as u64)?;
+        for &c in &self.clocks {
+            w_u64(&mut w, c)?;
+        }
+        w_u64(&mut w, self.eps_hat_sq.len() as u64)?;
+        for &e in &self.eps_hat_sq {
+            w_f64(&mut w, e)?;
+        }
+        w_u64(&mut w, self.history.len() as u64)?;
+        for &h in &self.history {
+            w_f64(&mut w, h)?;
+        }
+        Ok(())
+    }
+
+    pub fn read_from(path: &std::path::Path) -> Result<Checkpoint> {
+        let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(Error::Msg(format!(
+                "{}: not a LAQ checkpoint (bad magic)",
+                path.display()
+            )));
+        }
+        let iter = r_u64(&mut r)?;
+        let theta = r_f32s(&mut r)?;
+        let agg = r_f32s(&mut r)?;
+        let nm = r_u64(&mut r)? as usize;
+        let mut mirrors = Vec::with_capacity(nm);
+        for _ in 0..nm {
+            mirrors.push(r_f32s(&mut r)?);
+        }
+        let nc = r_u64(&mut r)? as usize;
+        let mut clocks = Vec::with_capacity(nc);
+        for _ in 0..nc {
+            clocks.push(r_u64(&mut r)?);
+        }
+        let ne = r_u64(&mut r)? as usize;
+        let mut eps_hat_sq = Vec::with_capacity(ne);
+        for _ in 0..ne {
+            eps_hat_sq.push(r_f64(&mut r)?);
+        }
+        let nh = r_u64(&mut r)? as usize;
+        let mut history = Vec::with_capacity(nh);
+        for _ in 0..nh {
+            history.push(r_f64(&mut r)?);
+        }
+        let ck = Checkpoint { iter, theta, agg, mirrors, clocks, eps_hat_sq, history };
+        ck.validate()?;
+        Ok(ck)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let dim = self.theta.len();
+        if self.agg.len() != dim {
+            return Err(Error::Msg("checkpoint: agg dim mismatch".into()));
+        }
+        if self.mirrors.iter().any(|m| m.len() != dim) {
+            return Err(Error::Msg("checkpoint: mirror dim mismatch".into()));
+        }
+        let m = self.mirrors.len();
+        if self.clocks.len() != m || self.eps_hat_sq.len() != m {
+            return Err(Error::Msg("checkpoint: worker count mismatch".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            iter: 42,
+            theta: vec![1.0, -2.5, 3.25],
+            agg: vec![0.5, 0.0, -0.125],
+            mirrors: vec![vec![1.0, 2.0, 3.0], vec![-1.0, 0.0, 1.0]],
+            clocks: vec![3, 0],
+            eps_hat_sq: vec![1e-4, 2e-5],
+            history: vec![0.1, 0.01, 0.001],
+        }
+    }
+
+    #[test]
+    fn roundtrip_bit_exact() {
+        let dir = std::env::temp_dir().join("laq_ckpt_test");
+        let path = dir.join("a.ckpt");
+        let ck = sample();
+        ck.write_to(&path).unwrap();
+        let back = Checkpoint::read_from(&path).unwrap();
+        assert_eq!(ck, back);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        let dir = std::env::temp_dir().join("laq_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"NOTACKPTxxxx").unwrap();
+        assert!(Checkpoint::read_from(&path).is_err());
+        // truncated real checkpoint
+        let good = dir.join("good.ckpt");
+        sample().write_to(&good).unwrap();
+        let bytes = std::fs::read(&good).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(Checkpoint::read_from(&path).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn validate_catches_inconsistency() {
+        let mut ck = sample();
+        ck.mirrors[0].pop();
+        assert!(ck.validate().is_err());
+        let mut ck2 = sample();
+        ck2.clocks.pop();
+        assert!(ck2.validate().is_err());
+    }
+}

@@ -1,0 +1,135 @@
+//! Ring buffer of recent parameter movement — the `Σ_d ξ_d ||θ^{k+1-d} −
+//! θ^{k-d}||²` memory that criterion (7a) and the Lyapunov function (16)
+//! are built from.
+//!
+//! Push is O(1); the weighted sum is O(D) with D ≤ 10 in the paper, so the
+//! criterion evaluation cost is negligible next to a gradient — this is
+//! what keeps the coordinator off the critical path (§Perf).
+
+/// Fixed-capacity ring of the last D values of ||θ^{j+1} − θ^j||².
+#[derive(Clone, Debug)]
+pub struct DeltaHistory {
+    buf: Vec<f64>,
+    /// index of the MOST RECENT entry (d = 1)
+    head: usize,
+    len: usize,
+}
+
+impl DeltaHistory {
+    pub fn new(d: usize) -> Self {
+        assert!(d > 0);
+        Self { buf: vec![0.0; d], head: 0, len: 0 }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Record ||θ^{k+1} − θ^k||² after a parameter update.
+    pub fn push(&mut self, delta_sq: f64) {
+        self.head = (self.head + 1) % self.buf.len();
+        self.buf[self.head] = delta_sq;
+        self.len = (self.len + 1).min(self.buf.len());
+    }
+
+    /// The d-th most recent entry (d = 1 is the latest); 0.0 if absent —
+    /// matching the convention that θ^{j} = θ^0 for j < 0 (no movement
+    /// before the run starts).
+    pub fn get(&self, d: usize) -> f64 {
+        debug_assert!(d >= 1 && d <= self.buf.len());
+        if d > self.len {
+            return 0.0;
+        }
+        let idx = (self.head + self.buf.len() - (d - 1)) % self.buf.len();
+        self.buf[idx]
+    }
+
+    /// Entries oldest→newest (for checkpointing); length = len().
+    pub fn entries_oldest_first(&self) -> Vec<f64> {
+        (0..self.len).rev().map(|d| self.get(d + 1)).collect()
+    }
+
+    /// `Σ_{d=1..D} xi[d-1] · ||θ^{k+1-d} − θ^{k-d}||²`.
+    pub fn weighted_sum(&self, xi: &[f64]) -> f64 {
+        debug_assert_eq!(xi.len(), self.buf.len());
+        let mut acc = 0.0;
+        for (d, &w) in xi.iter().enumerate() {
+            acc += w * self.get(d + 1);
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_history_sums_to_zero() {
+        let h = DeltaHistory::new(5);
+        assert_eq!(h.weighted_sum(&[1.0; 5]), 0.0);
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn most_recent_is_d1() {
+        let mut h = DeltaHistory::new(3);
+        h.push(10.0);
+        h.push(20.0);
+        assert_eq!(h.get(1), 20.0);
+        assert_eq!(h.get(2), 10.0);
+        assert_eq!(h.get(3), 0.0); // not yet filled
+        assert_eq!(h.len(), 2);
+    }
+
+    #[test]
+    fn wraps_and_evicts_oldest() {
+        let mut h = DeltaHistory::new(3);
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            h.push(v);
+        }
+        assert_eq!(h.get(1), 4.0);
+        assert_eq!(h.get(2), 3.0);
+        assert_eq!(h.get(3), 2.0); // 1.0 evicted
+        assert_eq!(h.len(), 3);
+    }
+
+    #[test]
+    fn weighted_sum_matches_manual() {
+        let mut h = DeltaHistory::new(4);
+        for v in [1.0, 2.0, 3.0] {
+            h.push(v);
+        }
+        let xi = [0.5, 0.25, 0.125, 0.0625];
+        // d=1 -> 3.0, d=2 -> 2.0, d=3 -> 1.0, d=4 -> 0
+        let expect = 0.5 * 3.0 + 0.25 * 2.0 + 0.125 * 1.0;
+        assert!((h.weighted_sum(&xi) - expect).abs() < 1e-15);
+    }
+
+    #[test]
+    fn long_sequence_consistency() {
+        let mut h = DeltaHistory::new(7);
+        let mut shadow = Vec::new();
+        for k in 0..50 {
+            let v = (k * k) as f64;
+            h.push(v);
+            shadow.push(v);
+            for d in 1..=7usize {
+                let expect = if d <= shadow.len() {
+                    shadow[shadow.len() - d]
+                } else {
+                    0.0
+                };
+                assert_eq!(h.get(d), expect, "k={k} d={d}");
+            }
+        }
+    }
+}

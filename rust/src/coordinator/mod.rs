@@ -1,0 +1,23 @@
+//! The L3 coordination layer: server state, worker nodes, and the paper's
+//! selection criterion — the pieces [`crate::algo::Trainer`] wires into
+//! the full distributed loop.
+//!
+//! State invariants the tests enforce (`rust/tests/prop_coordinator.rs`):
+//! * **mirror consistency** — for every worker m the server's copy of
+//!   `Q_m(θ̂_m)` equals the worker's, after any pattern of skips/uploads
+//!   (violating this silently corrupts the lazy aggregate `∇^k`);
+//! * **aggregate identity** — `∇^k = Σ_m Q_m(θ̂_m)` at all times;
+//! * **clock bound** — no worker goes more than `t̄` iterations without
+//!   uploading (criterion (7b));
+//! * **exact accounting** — `Σ uploads · (32 + b·p)` equals the network's
+//!   bit counter.
+
+pub mod checkpoint;
+pub mod history;
+pub mod server;
+pub mod worker;
+
+pub use checkpoint::Checkpoint;
+pub use history::DeltaHistory;
+pub use server::ServerState;
+pub use worker::{CriterionParams, WorkerNode};

@@ -1,0 +1,278 @@
+//! Server-side state: parameters, the lazy aggregate `∇^k`, and the
+//! per-worker mirrors of the last uploaded (quantized) gradients.
+
+use crate::comm::Payload;
+use crate::coordinator::DeltaHistory;
+use crate::quant::InnovationQuantizer;
+use crate::util::tensor;
+use crate::{Error, Result};
+
+/// Server-side parameter-update rule applied to the (lazily aggregated)
+/// gradient ∇^k.  The paper analyses plain GD; Adam is provided as a
+/// first-class extension for workloads (e.g. transformers) where raw GD
+/// is impractical — the communication machinery is identical, only the
+/// θ-update changes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ServerOpt {
+    Sgd,
+    Adam { beta1: f64, beta2: f64, eps: f64 },
+}
+
+impl ServerOpt {
+    pub fn adam() -> Self {
+        ServerOpt::Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+    }
+}
+
+#[derive(Clone, Debug)]
+struct AdamState {
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u64,
+}
+
+/// Parameter-server state (paper eq. (4)).
+#[derive(Clone, Debug)]
+pub struct ServerState {
+    /// current iterate θ^k
+    pub theta: Vec<f32>,
+    /// lazy aggregate ∇^k = Σ_m Q_m(θ̂_m)
+    pub agg: Vec<f32>,
+    /// server-side mirror of Q_m(θ̂_m^{k-1}) per worker (lazy modes)
+    pub q_mirror: Vec<Vec<f32>>,
+    /// ring of ||θ^{j+1} − θ^j||² for the criterion broadcast
+    pub history: DeltaHistory,
+    quantizer: InnovationQuantizer,
+    opt: ServerOpt,
+    adam: Option<AdamState>,
+}
+
+impl ServerState {
+    pub fn new(dim: usize, n_workers: usize, bits: u32, d: usize, theta0: Vec<f32>) -> Self {
+        assert_eq!(theta0.len(), dim);
+        Self {
+            theta: theta0,
+            agg: vec![0.0; dim],
+            q_mirror: vec![vec![0.0; dim]; n_workers],
+            history: DeltaHistory::new(d),
+            quantizer: InnovationQuantizer::new(bits),
+            opt: ServerOpt::Sgd,
+            adam: None,
+        }
+    }
+
+    /// Select the server optimizer (default: plain GD, the paper's rule).
+    pub fn set_opt(&mut self, opt: ServerOpt) {
+        self.opt = opt;
+        self.adam = None;
+    }
+
+    pub fn dim(&self) -> usize {
+        self.theta.len()
+    }
+
+    /// Absorb worker `m`'s upload into the lazy aggregate:
+    /// `∇ += Q_m^new − Q_m^old`, mirror updated.  The payload is whatever
+    /// crossed the wire (already decoded by [`crate::comm::Network`]).
+    pub fn absorb_lazy(&mut self, m: usize, payload: &Payload) -> Result<()> {
+        match payload {
+            Payload::Dense(g) => {
+                // LAG-style full-precision refresh: Q_m == g
+                if g.len() != self.dim() {
+                    return Err(Error::Msg("dense upload dim mismatch".into()));
+                }
+                for i in 0..g.len() {
+                    self.agg[i] += g[i] - self.q_mirror[m][i];
+                }
+                self.q_mirror[m].copy_from_slice(g);
+            }
+            Payload::Innovation(qi) => {
+                if qi.codes.len() != self.dim() {
+                    return Err(Error::Msg("innovation dim mismatch".into()));
+                }
+                // reconstruct Q_m^new from the mirror — the exact same f32
+                // expression as the worker used, so mirrors never drift
+                let mut q_new = vec![0.0f32; self.dim()];
+                self.quantizer.dequantize_into(qi, &self.q_mirror[m], &mut q_new);
+                for i in 0..q_new.len() {
+                    self.agg[i] += q_new[i] - self.q_mirror[m][i];
+                }
+                self.q_mirror[m] = q_new;
+            }
+            _ => {
+                return Err(Error::Msg(
+                    "lazy aggregation only accepts Dense/Innovation uploads".into(),
+                ))
+            }
+        }
+        Ok(())
+    }
+
+    /// Fresh-sum mode (SGD/QSGD/SSGD): start the iteration's aggregate
+    /// from zero and add every decoded upload.
+    pub fn reset_agg(&mut self) {
+        self.agg.iter_mut().for_each(|v| *v = 0.0);
+    }
+
+    pub fn absorb_fresh(&mut self, payload: &Payload) -> Result<()> {
+        let add: Vec<f32> = match payload {
+            Payload::Dense(g) => g.clone(),
+            Payload::Qsgd(m) => m.dequantize(),
+            Payload::Sparse(m) => m.densify(),
+            Payload::Sign(m) => m.dequantize(),
+            Payload::Innovation(_) => {
+                return Err(Error::Msg(
+                    "innovation uploads need lazy aggregation".into(),
+                ))
+            }
+        };
+        if add.len() != self.dim() {
+            return Err(Error::Msg("fresh upload dim mismatch".into()));
+        }
+        tensor::axpy(1.0, &add, &mut self.agg);
+        Ok(())
+    }
+
+    /// θ^{k+1} = θ^k − α · step(∇^k); records ||Δθ||² into the history
+    /// and returns it.  `step` is the identity for SGD (paper eq. (4)) or
+    /// the bias-corrected Adam direction.
+    pub fn apply_update(&mut self, alpha: f64) -> f64 {
+        let a = alpha as f32;
+        let mut delta_sq = 0.0f64;
+        match self.opt {
+            ServerOpt::Sgd => {
+                for i in 0..self.theta.len() {
+                    let step = a * self.agg[i];
+                    delta_sq += (step as f64) * (step as f64);
+                    self.theta[i] -= step;
+                }
+            }
+            ServerOpt::Adam { beta1, beta2, eps } => {
+                let dim = self.theta.len();
+                let st = self.adam.get_or_insert_with(|| AdamState {
+                    m: vec![0.0; dim],
+                    v: vec![0.0; dim],
+                    t: 0,
+                });
+                st.t += 1;
+                let (b1, b2) = (beta1 as f32, beta2 as f32);
+                let bc1 = 1.0 - (beta1.powi(st.t as i32)) as f32;
+                let bc2 = 1.0 - (beta2.powi(st.t as i32)) as f32;
+                for i in 0..dim {
+                    let g = self.agg[i];
+                    st.m[i] = b1 * st.m[i] + (1.0 - b1) * g;
+                    st.v[i] = b2 * st.v[i] + (1.0 - b2) * g * g;
+                    let mhat = st.m[i] / bc1;
+                    let vhat = st.v[i] / bc2;
+                    let step = a * mhat / (vhat.sqrt() + eps as f32);
+                    delta_sq += (step as f64) * (step as f64);
+                    self.theta[i] -= step;
+                }
+            }
+        }
+        self.history.push(delta_sq);
+        delta_sq
+    }
+
+    /// Criterion broadcast term: `(1/(α²M²)) Σ_d ξ_d ||θ^{k+1-d} − θ^{k-d}||²`.
+    pub fn criterion_rhs_common(&self, alpha: f64, n_workers: usize, xi: &[f64]) -> f64 {
+        self.history.weighted_sum(xi) / (alpha * alpha * (n_workers * n_workers) as f64)
+    }
+
+    /// Invariant check (debug/test): ∇ == Σ_m mirror_m within fp tolerance.
+    pub fn check_aggregate_invariant(&self) -> f64 {
+        let mut sum = vec![0.0f32; self.dim()];
+        for q in &self.q_mirror {
+            tensor::axpy(1.0, q, &mut sum);
+        }
+        let mut worst = 0.0f64;
+        for i in 0..sum.len() {
+            worst = worst.max((sum[i] as f64 - self.agg[i] as f64).abs());
+        }
+        worst
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn grad(seed: u64, p: usize) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..p).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn lazy_dense_absorb_keeps_invariant() {
+        let mut s = ServerState::new(32, 3, 3, 10, vec![0.0; 32]);
+        for round in 0..5u64 {
+            for m in 0..3 {
+                s.absorb_lazy(m, &Payload::Dense(grad(round * 3 + m as u64, 32))).unwrap();
+            }
+            assert!(s.check_aggregate_invariant() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn lazy_innovation_absorb_matches_worker_reconstruction() {
+        let q = InnovationQuantizer::new(3);
+        let mut s = ServerState::new(64, 1, 3, 10, vec![0.0; 64]);
+        let mut q_prev = vec![0.0f32; 64];
+        for round in 0..4 {
+            let g = grad(100 + round, 64);
+            let (qi, q_new) = q.quantize(&g, &q_prev);
+            s.absorb_lazy(0, &Payload::Innovation(qi)).unwrap();
+            assert_eq!(s.q_mirror[0], q_new, "round {round}");
+            q_prev = q_new;
+        }
+        assert!(s.check_aggregate_invariant() < 1e-5);
+    }
+
+    #[test]
+    fn fresh_mode_sums_uploads() {
+        let mut s = ServerState::new(8, 2, 3, 10, vec![0.0; 8]);
+        s.reset_agg();
+        s.absorb_fresh(&Payload::Dense(vec![1.0; 8])).unwrap();
+        s.absorb_fresh(&Payload::Dense(vec![2.0; 8])).unwrap();
+        assert!(s.agg.iter().all(|&v| (v - 3.0).abs() < 1e-6));
+        s.reset_agg();
+        assert!(s.agg.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn apply_update_moves_theta_and_records_history() {
+        let mut s = ServerState::new(4, 1, 3, 10, vec![1.0; 4]);
+        s.agg = vec![0.5; 4];
+        let d = s.apply_update(0.1);
+        assert!(s.theta.iter().all(|&v| (v - 0.95).abs() < 1e-6));
+        let expect = 4.0 * (0.05f64).powi(2);
+        // steps are f32: tolerate f32 rounding of 0.05
+        assert!((d - expect).abs() < 1e-8, "{d} vs {expect}");
+        assert_eq!(s.history.len(), 1);
+        assert!((s.history.get(1) - expect).abs() < 1e-8);
+    }
+
+    #[test]
+    fn rhs_common_scales_with_alpha_and_m() {
+        let mut s = ServerState::new(4, 1, 3, 2, vec![0.0; 4]);
+        s.history.push(1.0);
+        s.history.push(4.0);
+        let xi = [0.5, 0.5];
+        // Σ ξ δ = 0.5·4 + 0.5·1 = 2.5
+        let r = s.criterion_rhs_common(0.1, 10, &xi);
+        assert!((r - 2.5 / (0.01 * 100.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mismatched_payload_kinds_rejected() {
+        let mut s = ServerState::new(4, 1, 3, 2, vec![0.0; 4]);
+        let qsgd = crate::quant::qsgd::QsgdQuantizer::new(3)
+            .quantize(&[1.0; 4], &mut Rng::new(1));
+        assert!(s.absorb_lazy(0, &Payload::Qsgd(qsgd)).is_err());
+        let q = InnovationQuantizer::new(3);
+        let (qi, _) = q.quantize(&[1.0; 4], &[0.0; 4]);
+        assert!(s.absorb_fresh(&Payload::Innovation(qi)).is_err());
+        assert!(s.absorb_lazy(0, &Payload::Dense(vec![0.0; 3])).is_err());
+    }
+}

@@ -1,0 +1,259 @@
+//! Worker-side state and the paper's selection criterion (7).
+//!
+//! A [`WorkerNode`] owns the worker's gradient oracle, its copy of the
+//! last-uploaded quantized gradient `Q_m(θ̂_m^{k-1})`, the cached error
+//! norms the criterion needs, and the silence clock `t_m`.  Its
+//! [`WorkerNode::lazy_step`] implements one iteration of Algorithm 2's
+//! inner loop for both the quantized (LAQ/SLAQ) and exact (LAG) codecs.
+
+use crate::comm::Payload;
+use crate::model::WorkerGrad;
+use crate::quant::InnovationQuantizer;
+use crate::util::tensor;
+use crate::Result;
+
+/// Per-run criterion constants shared by all workers.
+#[derive(Clone, Debug)]
+pub struct CriterionParams {
+    pub xi: Vec<f64>,
+    pub t_max: usize,
+    pub alpha: f64,
+    pub n_workers: usize,
+}
+
+/// What one worker did this iteration.
+#[derive(Debug)]
+pub struct LazyStepOutcome {
+    /// Some(payload) if the worker uploads, None if it skips
+    pub upload: Option<Payload>,
+    /// local loss at θ^k over the evaluated rows (full shard or batch)
+    pub loss: f64,
+    /// local fresh gradient (borrowed by the caller for metrics)
+    pub grad: Vec<f32>,
+    /// criterion pieces, for tracing/ablation
+    pub lhs: f64,
+    pub rhs: f64,
+    /// ||ε_m^k||² — current quantization error (0 for the exact codec)
+    pub eps_sq: f64,
+}
+
+/// Codec selection for the lazy path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LazyCodec {
+    /// LAQ / SLAQ: b-bit innovation quantization, criterion includes the
+    /// 3(||ε||² + ||ε̂||²) slack
+    Quantized,
+    /// LAG: exact gradients (ε ≡ 0), dense 32p-bit uploads
+    Exact,
+}
+
+pub struct WorkerNode<W: WorkerGrad + ?Sized> {
+    pub oracle: Box<W>,
+    /// Q_m(θ̂_m^{k-1}) — must mirror the server's copy at all times
+    pub q_prev: Vec<f32>,
+    /// ||ε̂_m^{k-1}||² — quantization error at the last upload
+    pub eps_hat_sq: f64,
+    /// silence clock t_m
+    pub clock: usize,
+    quantizer: InnovationQuantizer,
+    codec: LazyCodec,
+    /// scratch for q_new (avoids per-iteration allocation)
+    q_scratch: Vec<f32>,
+}
+
+impl<W: WorkerGrad + ?Sized> WorkerNode<W> {
+    pub fn new(oracle: Box<W>, bits: u32, codec: LazyCodec) -> Self {
+        let dim = oracle.dim();
+        Self {
+            oracle,
+            q_prev: vec![0.0; dim],
+            eps_hat_sq: 0.0,
+            clock: 0,
+            quantizer: InnovationQuantizer::new(bits),
+            codec,
+            q_scratch: vec![0.0; dim],
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.q_prev.len()
+    }
+
+    /// One Algorithm-2 worker iteration on an already-computed local
+    /// gradient `grad` (full or minibatch — the Trainer chooses).
+    ///
+    /// `rhs_common` is `(1/(α²M²)) Σ_d ξ_d ||Δθ||²` from the server's
+    /// history (derivable worker-side from received parameters at no
+    /// communication cost).  `force_upload` disables the skip (GD/QGD
+    /// behaviour).
+    pub fn lazy_step(
+        &mut self,
+        grad: &[f32],
+        loss: f64,
+        rhs_common: f64,
+        t_max: usize,
+        force_upload: bool,
+    ) -> Result<LazyStepOutcome> {
+        debug_assert_eq!(grad.len(), self.dim());
+        let (lhs, rhs, eps_sq, upload_payload): (f64, f64, f64, Payload) = match self.codec {
+            LazyCodec::Quantized => {
+                // quantize the innovation regardless of skipping — the
+                // criterion is defined on the quantized values
+                let qi = self
+                    .quantizer
+                    .quantize_into(grad, &self.q_prev, &mut self.q_scratch);
+                let lhs = tensor::norm2_sq_diff(&self.q_prev, &self.q_scratch);
+                let eps_sq = tensor::norm2_sq_diff(grad, &self.q_scratch);
+                let rhs = rhs_common + 3.0 * (eps_sq + self.eps_hat_sq);
+                (lhs, rhs, eps_sq, Payload::Innovation(qi))
+            }
+            LazyCodec::Exact => {
+                let lhs = tensor::norm2_sq_diff(&self.q_prev, grad);
+                self.q_scratch.copy_from_slice(grad);
+                // ε ≡ 0 for exact gradients: rhs has no slack term
+                (lhs, rhs_common, 0.0, Payload::Dense(grad.to_vec()))
+            }
+        };
+
+        let skip = !force_upload && lhs <= rhs && self.clock < t_max;
+        if skip {
+            self.clock += 1;
+            Ok(LazyStepOutcome { upload: None, loss, grad: grad.to_vec(), lhs, rhs, eps_sq })
+        } else {
+            self.q_prev.copy_from_slice(&self.q_scratch);
+            self.eps_hat_sq = eps_sq;
+            self.clock = 0;
+            Ok(LazyStepOutcome {
+                upload: Some(upload_payload),
+                loss,
+                grad: grad.to_vec(),
+                lhs,
+                rhs,
+                eps_sq,
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::logreg::LogRegWorker;
+    use crate::model::{LossCfg, WorkerGrad};
+    use crate::util::rng::Rng;
+
+    struct FixedGrad {
+        dim: usize,
+    }
+
+    impl WorkerGrad for FixedGrad {
+        fn dim(&self) -> usize {
+            self.dim
+        }
+        fn full(&mut self, _theta: &[f32]) -> Result<(f64, Vec<f32>)> {
+            Ok((0.0, vec![0.0; self.dim]))
+        }
+        fn batch(&mut self, _theta: &[f32], _rows: &[usize]) -> Result<(f64, Vec<f32>)> {
+            self.full(_theta)
+        }
+        fn shard_len(&self) -> usize {
+            1
+        }
+    }
+
+    fn node(bits: u32, codec: LazyCodec) -> WorkerNode<FixedGrad> {
+        WorkerNode::new(Box::new(FixedGrad { dim: 32 }), bits, codec)
+    }
+
+    fn rand_grad(seed: u64, p: usize) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..p).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn first_iteration_uploads() {
+        let mut n = node(3, LazyCodec::Quantized);
+        let g = rand_grad(1, 32);
+        let out = n.lazy_step(&g, 0.0, 0.0, 100, false).unwrap();
+        assert!(out.upload.is_some(), "lhs={} rhs={}", out.lhs, out.rhs);
+        assert_eq!(n.clock, 0);
+    }
+
+    #[test]
+    fn identical_gradient_eventually_skips() {
+        // after uploading, re-presenting the same gradient makes the
+        // innovation tiny; criterion (with slack 3||ε||²) must skip
+        let mut n = node(3, LazyCodec::Quantized);
+        let g = rand_grad(2, 32);
+        let _ = n.lazy_step(&g, 0.0, 0.0, 100, false).unwrap();
+        let out2 = n.lazy_step(&g, 0.0, 0.0, 100, false).unwrap();
+        assert!(out2.upload.is_none(), "lhs={} rhs={}", out2.lhs, out2.rhs);
+        assert_eq!(n.clock, 1);
+    }
+
+    #[test]
+    fn forced_upload_after_t_max() {
+        let mut n = node(8, LazyCodec::Quantized);
+        let g = rand_grad(3, 32);
+        let _ = n.lazy_step(&g, 0.0, 0.0, 3, false).unwrap();
+        let mut uploads = 0;
+        for _ in 0..6 {
+            if n.lazy_step(&g, 0.0, 1e9, 3, false).unwrap().upload.is_some() {
+                uploads += 1;
+                // clock must reset after forced refresh
+                assert_eq!(n.clock, 0);
+            }
+        }
+        // rhs huge -> only clock can force uploads: exactly floor(6/4)
+        assert!(uploads >= 1, "t_max must force a refresh");
+    }
+
+    #[test]
+    fn force_upload_flag_disables_skipping() {
+        let mut n = node(3, LazyCodec::Quantized);
+        let g = rand_grad(4, 32);
+        for _ in 0..5 {
+            let out = n.lazy_step(&g, 0.0, f64::INFINITY, 100, true).unwrap();
+            assert!(out.upload.is_some());
+        }
+    }
+
+    #[test]
+    fn exact_codec_uploads_dense_and_tracks_mirror() {
+        let mut n = node(3, LazyCodec::Exact);
+        let g = rand_grad(5, 32);
+        let out = n.lazy_step(&g, 0.0, 0.0, 100, false).unwrap();
+        match out.upload.unwrap() {
+            Payload::Dense(v) => assert_eq!(v, g),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(n.q_prev, g);
+        assert_eq!(n.eps_hat_sq, 0.0);
+    }
+
+    #[test]
+    fn skip_preserves_q_prev() {
+        let mut n = node(3, LazyCodec::Quantized);
+        let g = rand_grad(6, 32);
+        n.lazy_step(&g, 0.0, 0.0, 100, false).unwrap();
+        let q_before = n.q_prev.clone();
+        // big rhs -> skip
+        let out = n.lazy_step(&g, 0.0, 1e9, 100, false).unwrap();
+        assert!(out.upload.is_none());
+        assert_eq!(n.q_prev, q_before);
+    }
+
+    #[test]
+    fn real_oracle_smoke() {
+        let shard = crate::model::testutil::tiny_shard(7, 20, 6, 3);
+        let cfg = LossCfg { n_global: 20, l2: 0.01, n_workers: 1 };
+        let w = LogRegWorker::new(shard, cfg);
+        let mut n: WorkerNode<dyn WorkerGrad> =
+            WorkerNode::new(Box::new(w), 3, LazyCodec::Quantized);
+        let theta = vec![0.0f32; 18];
+        let (loss, grad) = n.oracle.full(&theta).unwrap();
+        let out = n.lazy_step(&grad, loss, 0.0, 100, false).unwrap();
+        assert!(out.upload.is_some());
+        assert!(out.loss > 0.0);
+    }
+}

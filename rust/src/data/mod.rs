@@ -1,0 +1,122 @@
+//! Dataset substrate.
+//!
+//! The paper evaluates on MNIST, ijcnn1 and covtype.  This image has no
+//! network access, so [`synth`] generates deterministic Gaussian-mixture
+//! classification problems with the same dimensionality (DESIGN.md §3
+//! explains why this preserves the paper-relevant behaviour: LAQ's claims
+//! concern communication vs optimization progress on smooth losses, which
+//! any well-conditioned multi-class problem exercises identically).
+//! [`shard`] splits a dataset across M workers either uniformly (the
+//! paper's main setting) or with Dirichlet class skew (the heterogeneity
+//! study / Proposition 1).
+
+pub mod shard;
+pub mod synth;
+
+use crate::{Error, Result};
+
+/// Dense in-memory classification dataset (row-major features).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub n: usize,
+    pub features: usize,
+    pub classes: usize,
+    /// n × features, row-major
+    pub x: Vec<f32>,
+    /// class ids in [0, classes)
+    pub y: Vec<u32>,
+}
+
+impl Dataset {
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.features..(i + 1) * self.features]
+    }
+
+    /// Select rows by index into a new dataset.
+    pub fn select(&self, idx: &[usize]) -> Dataset {
+        let mut x = Vec::with_capacity(idx.len() * self.features);
+        let mut y = Vec::with_capacity(idx.len());
+        for &i in idx {
+            x.extend_from_slice(self.row(i));
+            y.push(self.y[i]);
+        }
+        Dataset { n: idx.len(), features: self.features, classes: self.classes, x, y }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.x.len() != self.n * self.features {
+            return Err(Error::Data(format!(
+                "x has {} values, expected {}",
+                self.x.len(),
+                self.n * self.features
+            )));
+        }
+        if self.y.len() != self.n {
+            return Err(Error::Data("y length mismatch".into()));
+        }
+        if let Some(&bad) = self.y.iter().find(|&&c| c as usize >= self.classes) {
+            return Err(Error::Data(format!("label {bad} >= classes {}", self.classes)));
+        }
+        Ok(())
+    }
+
+    /// Per-class counts (used by the heterogeneity experiments).
+    pub fn class_histogram(&self) -> Vec<usize> {
+        let mut h = vec![0usize; self.classes];
+        for &c in &self.y {
+            h[c as usize] += 1;
+        }
+        h
+    }
+}
+
+/// Train/test pair.
+#[derive(Clone, Debug)]
+pub struct TrainTest {
+    pub train: Dataset,
+    pub test: Dataset,
+}
+
+/// Build the named dataset at the requested size (see [`synth`]).
+pub fn load(name: &str, n_train: usize, n_test: usize, seed: u64) -> Result<TrainTest> {
+    match name {
+        "mnist" => Ok(synth::mnist_like(n_train, n_test, seed)),
+        "ijcnn1" => Ok(synth::ijcnn1_like(n_train, n_test, seed)),
+        "covtype" => Ok(synth::covtype_like(n_train, n_test, seed)),
+        other => Err(Error::Data(format!("unknown dataset '{other}'"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_all_named_datasets() {
+        for (name, f, c) in [("mnist", 784, 10), ("ijcnn1", 22, 2), ("covtype", 54, 7)] {
+            let tt = load(name, 600, 120, 3).unwrap();
+            assert_eq!(tt.train.n, 600);
+            assert_eq!(tt.test.n, 120);
+            assert_eq!(tt.train.features, f);
+            assert_eq!(tt.train.classes, c);
+            tt.train.validate().unwrap();
+            tt.test.validate().unwrap();
+        }
+        assert!(load("nope", 10, 10, 0).is_err());
+    }
+
+    #[test]
+    fn select_rows() {
+        let tt = load("ijcnn1", 50, 10, 1).unwrap();
+        let sub = tt.train.select(&[0, 2, 4]);
+        assert_eq!(sub.n, 3);
+        assert_eq!(sub.row(1), tt.train.row(2));
+        assert_eq!(sub.y[2], tt.train.y[4]);
+    }
+
+    #[test]
+    fn histogram_sums_to_n() {
+        let tt = load("covtype", 200, 10, 2).unwrap();
+        assert_eq!(tt.train.class_histogram().iter().sum::<usize>(), 200);
+    }
+}

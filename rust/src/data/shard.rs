@@ -1,0 +1,182 @@
+//! Sharding a dataset across M workers.
+//!
+//! * [`uniform`] — the paper's main setting: i.i.d. random equal split.
+//! * [`dirichlet`] — heterogeneous class skew per worker (concentration
+//!   `alpha`; smaller = more skewed).  Workers then have different local
+//!   smoothness constants `L_m`, which is what Proposition 1's
+//!   communication-frequency ordering is about.
+//! * [`Batcher`] — deterministic minibatch sampler for the stochastic
+//!   algorithms (each worker draws `batch/M` of its shard per step).
+
+use super::Dataset;
+use crate::util::rng::Rng;
+
+/// Equal-sized i.i.d. shards (drops the <M remainder rows).
+pub fn uniform(d: &Dataset, m: usize, seed: u64) -> Vec<Dataset> {
+    assert!(m > 0 && d.n >= m);
+    let mut rng = Rng::new(seed ^ 0x7368617264);
+    let perm = rng.permutation(d.n);
+    let per = d.n / m;
+    (0..m)
+        .map(|w| d.select(&perm[w * per..(w + 1) * per]))
+        .collect()
+}
+
+/// Dirichlet-skewed shards: worker w's class distribution ~ Dir(alpha).
+/// Shard sizes stay equal; only the class mix varies.
+pub fn dirichlet(d: &Dataset, m: usize, alpha: f64, seed: u64) -> Vec<Dataset> {
+    assert!(m > 0 && d.n >= m);
+    let mut rng = Rng::new(seed ^ 0x646972696368);
+    // bucket indices per class, shuffled
+    let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); d.classes];
+    for i in 0..d.n {
+        buckets[d.y[i] as usize].push(i);
+    }
+    for b in buckets.iter_mut() {
+        rng.shuffle(b);
+    }
+    let mut cursors = vec![0usize; d.classes];
+    let per = d.n / m;
+    let mut shards = Vec::with_capacity(m);
+    for _ in 0..m {
+        let weights = rng.dirichlet(alpha, d.classes);
+        let mut idx = Vec::with_capacity(per);
+        while idx.len() < per {
+            // sample a class by weight, fall back to any class with rows left
+            let mut u = rng.uniform();
+            let mut c = 0;
+            for (k, &w) in weights.iter().enumerate() {
+                if u < w {
+                    c = k;
+                    break;
+                }
+                u -= w;
+                c = k;
+            }
+            let mut placed = false;
+            for off in 0..d.classes {
+                let cc = (c + off) % d.classes;
+                if cursors[cc] < buckets[cc].len() {
+                    idx.push(buckets[cc][cursors[cc]]);
+                    cursors[cc] += 1;
+                    placed = true;
+                    break;
+                }
+            }
+            if !placed {
+                break; // all buckets exhausted
+            }
+        }
+        shards.push(d.select(&idx));
+    }
+    shards
+}
+
+/// Deterministic per-worker minibatch index stream.
+#[derive(Clone, Debug)]
+pub struct Batcher {
+    rng: Rng,
+    shard_n: usize,
+    batch: usize,
+}
+
+impl Batcher {
+    pub fn new(shard_n: usize, batch: usize, seed: u64, worker: u64) -> Self {
+        assert!(batch > 0 && batch <= shard_n);
+        Self { rng: Rng::new(seed ^ (worker.wrapping_mul(0x9E3779B97F4A7C15))), shard_n, batch }
+    }
+
+    /// Draw the next minibatch (without replacement within the batch).
+    pub fn next_batch(&mut self) -> Vec<usize> {
+        self.rng.sample_indices(self.shard_n, self.batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    fn data() -> Dataset {
+        synth::covtype_like(700, 10, 5).train
+    }
+
+    #[test]
+    fn uniform_partitions_disjointly() {
+        let d = data();
+        let shards = uniform(&d, 7, 1);
+        assert_eq!(shards.len(), 7);
+        assert!(shards.iter().all(|s| s.n == 100));
+        // disjoint: total class histogram matches the subset of the parent
+        let total: usize = shards.iter().map(|s| s.n).sum();
+        assert_eq!(total, 700);
+    }
+
+    #[test]
+    fn uniform_shards_are_iid_ish() {
+        let d = data();
+        let shards = uniform(&d, 7, 2);
+        let global = d.class_histogram();
+        for s in &shards {
+            let h = s.class_histogram();
+            for c in 0..d.classes {
+                let expect = global[c] as f64 / 7.0;
+                assert!(
+                    (h[c] as f64 - expect).abs() < 5.0 * expect.sqrt().max(2.0),
+                    "class {c}: {h:?} vs {expect}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dirichlet_skews_class_mix() {
+        let d = data();
+        let shards = dirichlet(&d, 7, 0.1, 3);
+        assert!(shards.iter().all(|s| s.n == 100));
+        // with alpha = 0.1 at least one worker should be heavily
+        // concentrated: top class holding > 50% of its shard
+        let max_frac = shards
+            .iter()
+            .map(|s| {
+                let h = s.class_histogram();
+                *h.iter().max().unwrap() as f64 / s.n as f64
+            })
+            .fold(0.0, f64::max);
+        assert!(max_frac > 0.5, "max_frac={max_frac}");
+    }
+
+    #[test]
+    fn dirichlet_high_alpha_is_near_uniform() {
+        let d = data();
+        let shards = dirichlet(&d, 7, 100.0, 4);
+        for s in &shards {
+            let h = s.class_histogram();
+            let max = *h.iter().max().unwrap() as f64 / s.n as f64;
+            assert!(max < 0.4, "{h:?}");
+        }
+    }
+
+    #[test]
+    fn batcher_is_deterministic_and_in_range() {
+        let mut b1 = Batcher::new(100, 10, 42, 3);
+        let mut b2 = Batcher::new(100, 10, 42, 3);
+        for _ in 0..5 {
+            let x = b1.next_batch();
+            assert_eq!(x, b2.next_batch());
+            assert_eq!(x.len(), 10);
+            assert!(x.iter().all(|&i| i < 100));
+            let mut dedup = x.clone();
+            dedup.sort_unstable();
+            dedup.dedup();
+            assert_eq!(dedup.len(), 10, "indices must be distinct");
+        }
+    }
+
+    #[test]
+    fn batcher_differs_across_workers() {
+        let mut b1 = Batcher::new(100, 10, 42, 0);
+        let mut b2 = Batcher::new(100, 10, 42, 1);
+        assert_ne!(b1.next_batch(), b2.next_batch());
+    }
+}

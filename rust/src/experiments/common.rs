@@ -1,0 +1,173 @@
+//! Shared experiment plumbing: configured runs, multi-algorithm sweeps,
+//! CSV output, and the scaled-down problem sizes (DESIGN.md §3).
+
+use super::ExpOpts;
+use crate::algo::{build::build, Trainer};
+use crate::config::{Algo, ModelKind, RunCfg};
+use crate::metrics::RunResult;
+use crate::Result;
+use std::path::Path;
+
+/// Logistic-regression run config at experiment scale.
+///
+/// Quick mode shrinks the dataset and iteration budget so the full
+/// harness completes in minutes; full mode is the EXPERIMENTS.md setting.
+pub fn logreg_cfg(algo: Algo, opts: &ExpOpts) -> RunCfg {
+    let mut c = RunCfg::paper_logreg(algo);
+    c.backend = opts.backend;
+    c.seed = opts.seed;
+    if opts.quick {
+        c.data.n_train = 4_000;
+        c.data.n_test = 1_000;
+        c.iters = 400;
+        c.record_every = 2;
+    } else {
+        c.data.n_train = 10_000;
+        c.data.n_test = 2_000;
+        c.iters = 1_500;
+        c.record_every = 2;
+    }
+    c
+}
+
+/// MLP run config.  The paper's 784-200-10 on 60k samples is out of budget
+/// for a CPU simulator sweep; we keep the architecture family (1 hidden
+/// ReLU layer) at reduced width/size — the communication behaviour under
+/// study is unchanged (EXPERIMENTS.md notes the scaling).
+pub fn mlp_cfg(algo: Algo, opts: &ExpOpts) -> RunCfg {
+    let mut c = RunCfg::paper_mlp(algo);
+    c.backend = opts.backend;
+    c.seed = opts.seed;
+    if opts.quick {
+        c.data.n_train = 1_500;
+        c.data.n_test = 500;
+        c.hidden = 32;
+        c.iters = 120;
+        c.record_every = 2;
+    } else {
+        c.data.n_train = 4_000;
+        c.data.n_test = 1_000;
+        c.hidden = 64;
+        c.iters = 400;
+        c.record_every = 2;
+    }
+    // PJRT artifacts are compiled for hidden=200 / n=10 000 only
+    if c.backend == crate::config::Backend::Pjrt {
+        c.hidden = 200;
+        c.data.n_train = 10_000;
+        c.data.n_test = 2_000;
+        c.iters = if opts.quick { 30 } else { 200 };
+    }
+    c
+}
+
+/// Stochastic variants of the above.
+pub fn stochastic_cfg(algo: Algo, model: ModelKind, opts: &ExpOpts) -> RunCfg {
+    let base = match model {
+        ModelKind::Mlp => mlp_cfg(algo, opts),
+        _ => logreg_cfg(algo, opts),
+    };
+    let mut c = base;
+    c.alpha = 0.008;
+    c.batch = 500.min(c.data.n_train / 2);
+    c.bits = if model == ModelKind::Mlp { 8 } else { 3 };
+    c.iters = if opts.quick { 300 } else { 1_000 };
+    c.record_every = 5;
+    if model == ModelKind::Mlp {
+        c.iters = if opts.quick { 120 } else { 400 };
+    }
+    c
+}
+
+/// Build + run one config.
+pub fn run_one(cfg: &RunCfg, stop_at_loss: Option<f64>) -> Result<RunResult> {
+    let mut t: Trainer = build(cfg, "artifacts")?;
+    t.stop_at_loss = stop_at_loss;
+    t.run()
+}
+
+/// Run the same problem under several algorithms, writing each trace and
+/// rendering the paper's three figure panels (metric vs iterations /
+/// rounds / bits) as SVG beside the CSVs.
+pub fn sweep(
+    cfgs: &[RunCfg],
+    out_dir: &str,
+    exp_id: &str,
+    stop_at_loss: Option<f64>,
+) -> Result<Vec<RunResult>> {
+    let dir = Path::new(out_dir).join(exp_id);
+    let mut results = Vec::with_capacity(cfgs.len());
+    for cfg in cfgs {
+        log::info!("[{exp_id}] running {} ({})", cfg.algo.name(), cfg.model.name());
+        let res = run_one(cfg, stop_at_loss)?;
+        res.write_to(&dir, &cfg.algo.name().to_lowercase())
+            .map_err(crate::Error::Io)?;
+        results.push(res);
+    }
+    if results.len() > 1 {
+        crate::metrics::svgplot::figure_panels(
+            &results,
+            |t| t.loss,
+            "loss",
+            exp_id,
+            &dir,
+        )
+        .map_err(crate::Error::Io)?;
+    }
+    Ok(results)
+}
+
+/// Estimate f* by running GD with a generous budget (used by the
+/// loss-residual stopping rule of Table 2).
+pub fn estimate_fstar(base: &RunCfg, factor: usize) -> Result<f64> {
+    let mut cfg = base.clone();
+    cfg.algo = Algo::Gd;
+    cfg.iters *= factor;
+    cfg.record_every = cfg.iters.max(1); // only need the final point
+    let mut t = build(&cfg, "artifacts")?;
+    let r = t.run()?;
+    let (final_loss, _) = t.eval_full()?;
+    let _ = r;
+    Ok(final_loss)
+}
+
+/// Shared report block: per-algorithm totals.
+pub fn totals_block(results: &[RunResult]) -> String {
+    use crate::metrics::{sci, TablePrinter};
+    let mut t = TablePrinter::new(&[
+        "Algorithm", "Iteration #", "Communication #", "Bit #", "Final loss", "Accuracy",
+    ]);
+    for r in results {
+        t.row(&[
+            r.algo.clone(),
+            r.iters_run.to_string(),
+            r.total_rounds.to_string(),
+            sci(r.total_bits as f64),
+            format!("{:.6e}", r.final_loss()),
+            r.final_accuracy.map(|a| format!("{a:.4}")).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_configs_validate() {
+        let opts = ExpOpts::default();
+        for algo in Algo::all() {
+            logreg_cfg(algo, &opts).validate().unwrap();
+            mlp_cfg(algo, &opts).validate().unwrap();
+            stochastic_cfg(algo, ModelKind::LogReg, &opts).validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn full_configs_validate() {
+        let opts = ExpOpts { quick: false, ..Default::default() };
+        logreg_cfg(Algo::Laq, &opts).validate().unwrap();
+        mlp_cfg(Algo::Laq, &opts).validate().unwrap();
+    }
+}

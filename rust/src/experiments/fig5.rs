@@ -1,0 +1,46 @@
+//! Figure 5: neural-network gradient-norm convergence vs iterations /
+//! rounds / bits (nonconvex counterpart of Figure 4; b = 8 bits).
+
+use super::{common, ExpOpts};
+use crate::config::Algo;
+use crate::Result;
+
+pub fn run(opts: &ExpOpts) -> Result<String> {
+    let algos = [Algo::Gd, Algo::Qgd, Algo::Lag, Algo::Laq];
+    let cfgs: Vec<_> = algos.iter().map(|&a| common::mlp_cfg(a, opts)).collect();
+    let results = common::sweep(&cfgs, &opts.out_dir, "fig5", None)?;
+
+    let mut out = String::from(
+        "Figure 5 — MLP gradient norm vs iterations / rounds / bits\n",
+    );
+    out.push_str(&common::totals_block(&results));
+
+    let by = |a: &str| results.iter().find(|r| r.algo == a).unwrap();
+    let (gd, laq) = (by("GD"), by("LAQ"));
+    let gd_final = gd.trace.last().map(|t| t.grad_norm_sq).unwrap_or(f64::NAN);
+    let laq_final = laq.trace.last().map(|t| t.grad_norm_sq).unwrap_or(f64::NAN);
+    let mut checks = vec![
+        (
+            format!("LAQ final ||grad||² ({laq_final:.3e}) within 10× of GD ({gd_final:.3e})"),
+            laq_final <= 10.0 * gd_final,
+        ),
+        (
+            format!("LAQ bits ({:.2e}) < GD bits ({:.2e})", laq.total_bits as f64, gd.total_bits as f64),
+            laq.total_bits < gd.total_bits,
+        ),
+        (
+            format!("LAQ rounds ({}) < GD rounds ({})", laq.total_rounds, gd.total_rounds),
+            laq.total_rounds < gd.total_rounds,
+        ),
+    ];
+    let qgd = by("QGD");
+    checks.push((
+        format!("LAQ bits ({:.2e}) < QGD bits ({:.2e})", laq.total_bits as f64, qgd.total_bits as f64),
+        laq.total_bits < qgd.total_bits,
+    ));
+    for (msg, ok) in &checks {
+        out.push_str(&format!("  [{}] {msg}\n", if *ok { "ok" } else { "FAIL" }));
+    }
+    out.push_str(&format!("  traces: {}/fig5/*.csv\n", opts.out_dir));
+    Ok(out)
+}

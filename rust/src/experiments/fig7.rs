@@ -1,0 +1,55 @@
+//! Figure 7: stochastic (minibatch 500, α = 0.008) logistic regression —
+//! SGD / QSGD / SSGD / SLAQ loss vs iterations / rounds / bits.
+//! Paper claim: SLAQ needs the fewest rounds AND bits.
+
+use super::{common, ExpOpts};
+use crate::config::{Algo, ModelKind};
+use crate::Result;
+
+pub fn run(opts: &ExpOpts) -> Result<String> {
+    let algos = [Algo::Sgd, Algo::Qsgd, Algo::Ssgd, Algo::Slaq];
+    let cfgs: Vec<_> = algos
+        .iter()
+        .map(|&a| common::stochastic_cfg(a, ModelKind::LogReg, opts))
+        .collect();
+    let results = common::sweep(&cfgs, &opts.out_dir, "fig7", None)?;
+
+    let mut out = String::from(
+        "Figure 7 — stochastic logreg loss vs iterations / rounds / bits\n",
+    );
+    out.push_str(&common::totals_block(&results));
+
+    let by = |a: &str| results.iter().find(|r| r.algo == a).unwrap();
+    let (sgd, qsgd, ssgd, slaq) = (by("SGD"), by("QSGD"), by("SSGD"), by("SLAQ"));
+    let checks = vec![
+        (
+            format!("SLAQ rounds ({}) < SGD rounds ({})", slaq.total_rounds, sgd.total_rounds),
+            slaq.total_rounds < sgd.total_rounds,
+        ),
+        (
+            format!("SLAQ bits ({:.2e}) lowest of all", slaq.total_bits as f64),
+            slaq.total_bits < sgd.total_bits
+                && slaq.total_bits < qsgd.total_bits
+                && slaq.total_bits < ssgd.total_bits,
+        ),
+        (
+            format!(
+                "QSGD bits ({:.2e}) < SGD bits ({:.2e})",
+                qsgd.total_bits as f64, sgd.total_bits as f64
+            ),
+            qsgd.total_bits < sgd.total_bits,
+        ),
+        (
+            format!(
+                "SLAQ final loss ({:.4}) within 5% of SGD ({:.4})",
+                slaq.final_loss(), sgd.final_loss()
+            ),
+            slaq.final_loss() <= 1.05 * sgd.final_loss(),
+        ),
+    ];
+    for (msg, ok) in &checks {
+        out.push_str(&format!("  [{}] {msg}\n", if *ok { "ok" } else { "FAIL" }));
+    }
+    out.push_str(&format!("  traces: {}/fig7/*.csv\n", opts.out_dir));
+    Ok(out)
+}

@@ -1,0 +1,44 @@
+//! Figure 8: stochastic neural-network loss (b = 8) — SGD / QSGD / SSGD /
+//! SLAQ, the nonconvex counterpart of Figure 7.
+
+use super::{common, ExpOpts};
+use crate::config::{Algo, ModelKind};
+use crate::Result;
+
+pub fn run(opts: &ExpOpts) -> Result<String> {
+    let algos = [Algo::Sgd, Algo::Qsgd, Algo::Ssgd, Algo::Slaq];
+    let cfgs: Vec<_> = algos
+        .iter()
+        .map(|&a| common::stochastic_cfg(a, ModelKind::Mlp, opts))
+        .collect();
+    let results = common::sweep(&cfgs, &opts.out_dir, "fig8", None)?;
+
+    let mut out =
+        String::from("Figure 8 — stochastic MLP loss vs iterations / rounds / bits\n");
+    out.push_str(&common::totals_block(&results));
+
+    let by = |a: &str| results.iter().find(|r| r.algo == a).unwrap();
+    let (sgd, slaq) = (by("SGD"), by("SLAQ"));
+    let checks = vec![
+        (
+            format!("SLAQ bits ({:.2e}) < SGD bits ({:.2e})", slaq.total_bits as f64, sgd.total_bits as f64),
+            slaq.total_bits < sgd.total_bits,
+        ),
+        (
+            format!("SLAQ rounds ({}) <= SGD rounds ({})", slaq.total_rounds, sgd.total_rounds),
+            slaq.total_rounds <= sgd.total_rounds,
+        ),
+        (
+            format!(
+                "SLAQ final loss ({:.4}) within 10% of SGD ({:.4})",
+                slaq.final_loss(), sgd.final_loss()
+            ),
+            slaq.final_loss() <= 1.10 * sgd.final_loss(),
+        ),
+    ];
+    for (msg, ok) in &checks {
+        out.push_str(&format!("  [{}] {msg}\n", if *ok { "ok" } else { "FAIL" }));
+    }
+    out.push_str(&format!("  traces: {}/fig8/*.csv\n", opts.out_dir));
+    Ok(out)
+}

@@ -1,0 +1,99 @@
+//! Experiment harness: one module per table/figure of the paper's
+//! evaluation (§4), each regenerating the same rows/series from this
+//! reproduction's substrate.  See DESIGN.md §5 for the experiment index
+//! and EXPERIMENTS.md for recorded paper-vs-measured results.
+//!
+//! Run via the CLI: `laq exp --id fig4 [--quick] [--out results]`.
+
+pub mod ablations;
+pub mod common;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod prop1;
+pub mod table2;
+pub mod table3;
+
+use crate::{Error, Result};
+
+/// Options shared by all experiments.
+#[derive(Clone, Debug)]
+pub struct ExpOpts {
+    /// reduced sizes/iterations for CI-speed runs
+    pub quick: bool,
+    /// output directory for CSV traces + summaries
+    pub out_dir: String,
+    /// "native" or "pjrt"
+    pub backend: crate::config::Backend,
+    /// override RNG seed
+    pub seed: u64,
+}
+
+impl Default for ExpOpts {
+    fn default() -> Self {
+        Self {
+            quick: true,
+            out_dir: "results".into(),
+            backend: crate::config::Backend::Native,
+            seed: 1,
+        }
+    }
+}
+
+/// Every experiment returns its rendered report (also printed to stdout
+/// by the CLI) after writing traces to `opts.out_dir`.
+pub type ExpFn = fn(&ExpOpts) -> Result<String>;
+
+/// Registry of (id, description, fn).
+pub fn registry() -> Vec<(&'static str, &'static str, ExpFn)> {
+    vec![
+        ("fig3", "quantization-error and gradient-norm linear decay (LAQ)", fig3::run as ExpFn),
+        ("fig4", "logreg loss vs iterations / rounds / bits (GD, QGD, LAG, LAQ)", fig4::run),
+        ("fig5", "NN gradient norm vs iterations / rounds / bits", fig5::run),
+        ("fig6", "test accuracy vs bits on mnist / ijcnn1 / covtype", fig6::run),
+        ("fig7", "stochastic logreg loss (SGD, QSGD, SSGD, SLAQ)", fig7::run),
+        ("fig8", "stochastic NN loss (SGD, QSGD, SSGD, SLAQ)", fig8::run),
+        ("table2", "gradient-based comparison: iterations / rounds / bits / accuracy", table2::run),
+        ("table3", "stochastic comparison: iterations / rounds / bits / accuracy", table3::run),
+        ("prop1", "per-worker upload counts vs local smoothness (heterogeneity)", prop1::run),
+        ("abl_bits", "supplementary: LAQ under b = 1..8 bits", ablations::abl_bits),
+        ("abl_hetero", "supplementary: LAQ under Dirichlet class skew", ablations::abl_hetero),
+        ("abl_xi", "ablation: criterion aggressiveness sum(xi)", ablations::abl_xi),
+        ("abl_ef", "ablation: lazy aggregation vs error feedback (EF-signSGD)", ablations::abl_ef),
+        ("timing", "latency-model study: rounds vs bits in wall-clock", ablations::timing),
+    ]
+}
+
+/// Run one experiment by id.
+pub fn run(id: &str, opts: &ExpOpts) -> Result<String> {
+    for (name, _, f) in registry() {
+        if name == id {
+            return f(opts);
+        }
+    }
+    Err(Error::Experiment(format!(
+        "unknown experiment '{id}' (known: {})",
+        registry().iter().map(|r| r.0).collect::<Vec<_>>().join(", ")
+    )))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_every_table_and_figure() {
+        let ids: Vec<&str> = registry().iter().map(|r| r.0).collect();
+        for want in ["fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "table2", "table3", "prop1"] {
+            assert!(ids.contains(&want), "missing {want}");
+        }
+    }
+
+    #[test]
+    fn unknown_id_is_an_error() {
+        assert!(run("nope", &ExpOpts::default()).is_err());
+    }
+}

@@ -1,0 +1,94 @@
+//! Table 2: gradient-based comparison — iterations, communication rounds,
+//! bits, accuracy.  Logistic regression terminates at a loss residual
+//! (paper: 1e-6; quick mode: 1e-4); the NN runs a fixed iteration budget.
+
+use super::{common, ExpOpts};
+use crate::config::Algo;
+use crate::metrics::{sci, TablePrinter};
+use crate::Result;
+
+pub fn run(opts: &ExpOpts) -> Result<String> {
+    let algos = [Algo::Laq, Algo::Gd, Algo::Qgd, Algo::Lag];
+    let residual = if opts.quick { 1e-4 } else { 1e-6 };
+
+    // --- logistic regression with residual stopping ---
+    let base = common::logreg_cfg(Algo::Gd, opts);
+    let fstar = common::estimate_fstar(&base, 4)?;
+    let stop = Some(fstar + residual);
+    let mut cfgs: Vec<_> = algos.iter().map(|&a| common::logreg_cfg(a, opts)).collect();
+    for c in cfgs.iter_mut() {
+        c.iters *= 2; // allow the stopping rule to trigger
+        c.record_every = 1; // residual check every iteration
+    }
+    let log_results = common::sweep(&cfgs, &opts.out_dir, "table2_logreg", stop)?;
+
+    // --- neural network, fixed iterations ---
+    let mlp_cfgs: Vec<_> = algos.iter().map(|&a| common::mlp_cfg(a, opts)).collect();
+    let mlp_results = common::sweep(&mlp_cfgs, &opts.out_dir, "table2_mlp", None)?;
+
+    let mut t = TablePrinter::new(&[
+        "Algorithm", "Model", "Iteration #", "Communication #", "Bit #", "Accuracy",
+    ]);
+    for (res, model) in log_results
+        .iter()
+        .map(|r| (r, "logistic"))
+        .chain(mlp_results.iter().map(|r| (r, "neural network")))
+    {
+        t.row(&[
+            res.algo.clone(),
+            model.into(),
+            res.iters_run.to_string(),
+            res.total_rounds.to_string(),
+            sci(res.total_bits as f64),
+            res.final_accuracy.map(|a| format!("{a:.4}")).unwrap_or_default(),
+        ]);
+    }
+
+    let mut out = format!(
+        "Table 2 — gradient-based comparison (logistic: stop at f* + {residual:.0e}, f* = {fstar:.6})\n"
+    );
+    out.push_str(&t.render());
+
+    // shape checks against the paper's Table 2 orderings
+    let by = |rs: &[crate::metrics::RunResult], a: &str| {
+        rs.iter().find(|r| r.algo == a).cloned().unwrap()
+    };
+    let (laq, gd, qgd, lag) = (
+        by(&log_results, "LAQ"),
+        by(&log_results, "GD"),
+        by(&log_results, "QGD"),
+        by(&log_results, "LAG"),
+    );
+    let checks = vec![
+        (
+            "logistic: all four reach the residual (same accuracy)".to_string(),
+            [&laq, &gd, &qgd, &lag].iter().all(|r| r.iters_run < r.trace.last().map(|t| t.iter + 2).unwrap_or(usize::MAX) + 1),
+        ),
+        (
+            format!("bits: LAQ ({}) < QGD ({}) < GD ({})", sci(laq.total_bits as f64), sci(qgd.total_bits as f64), sci(gd.total_bits as f64)),
+            laq.total_bits < qgd.total_bits && qgd.total_bits < gd.total_bits,
+        ),
+        (
+            format!("bits: LAQ ({}) < LAG ({})", sci(laq.total_bits as f64), sci(lag.total_bits as f64)),
+            laq.total_bits < lag.total_bits,
+        ),
+        (
+            format!("rounds: LAG ({}) ~ LAQ ({}) << GD ({})", lag.total_rounds, laq.total_rounds, gd.total_rounds),
+            laq.total_rounds <= 2 * lag.total_rounds
+                && lag.total_rounds <= 2 * laq.total_rounds
+                && laq.total_rounds * 2 < gd.total_rounds,
+        ),
+        (
+            format!(
+                "accuracy parity: LAQ {:.4} vs GD {:.4}",
+                laq.final_accuracy.unwrap_or(0.0),
+                gd.final_accuracy.unwrap_or(0.0)
+            ),
+            (laq.final_accuracy.unwrap_or(0.0) - gd.final_accuracy.unwrap_or(0.0)).abs() < 0.01,
+        ),
+    ];
+    for (msg, ok) in &checks {
+        out.push_str(&format!("  [{}] {msg}\n", if *ok { "ok" } else { "FAIL" }));
+    }
+    Ok(out)
+}

@@ -1,0 +1,87 @@
+//! Table 3: minibatch stochastic comparison — SLAQ / SGD / QSGD / SSGD at
+//! fixed iteration budgets (paper: 1000 logistic / 1500 NN).
+
+use super::{common, ExpOpts};
+use crate::config::{Algo, ModelKind};
+use crate::metrics::{sci, TablePrinter};
+use crate::Result;
+
+pub fn run(opts: &ExpOpts) -> Result<String> {
+    let algos = [Algo::Slaq, Algo::Sgd, Algo::Qsgd, Algo::Ssgd];
+
+    let log_cfgs: Vec<_> = algos
+        .iter()
+        .map(|&a| common::stochastic_cfg(a, ModelKind::LogReg, opts))
+        .collect();
+    let log_results = common::sweep(&log_cfgs, &opts.out_dir, "table3_logreg", None)?;
+
+    let mlp_cfgs: Vec<_> = algos
+        .iter()
+        .map(|&a| common::stochastic_cfg(a, ModelKind::Mlp, opts))
+        .collect();
+    let mlp_results = common::sweep(&mlp_cfgs, &opts.out_dir, "table3_mlp", None)?;
+
+    let mut t = TablePrinter::new(&[
+        "Algorithm", "Model", "Iteration #", "Communication #", "Bit #", "Accuracy",
+    ]);
+    for (res, model) in log_results
+        .iter()
+        .map(|r| (r, "logistic"))
+        .chain(mlp_results.iter().map(|r| (r, "neural network")))
+    {
+        t.row(&[
+            res.algo.clone(),
+            model.into(),
+            res.iters_run.to_string(),
+            res.total_rounds.to_string(),
+            sci(res.total_bits as f64),
+            res.final_accuracy.map(|a| format!("{a:.4}")).unwrap_or_default(),
+        ]);
+    }
+    let mut out = String::from("Table 3 — minibatch stochastic comparison\n");
+    out.push_str(&t.render());
+
+    let by = |rs: &[crate::metrics::RunResult], a: &str| {
+        rs.iter().find(|r| r.algo == a).cloned().unwrap()
+    };
+    for (label, rs) in [("logistic", &log_results), ("neural network", &mlp_results)] {
+        let (slaq, sgd, qsgd, ssgd) =
+            (by(rs, "SLAQ"), by(rs, "SGD"), by(rs, "QSGD"), by(rs, "SSGD"));
+        let checks = vec![
+            (
+                format!(
+                    "{label}: SLAQ rounds ({}) lowest (SGD {}, QSGD {}, SSGD {})",
+                    slaq.total_rounds, sgd.total_rounds, qsgd.total_rounds, ssgd.total_rounds
+                ),
+                slaq.total_rounds <= sgd.total_rounds
+                    && slaq.total_rounds <= qsgd.total_rounds
+                    && slaq.total_rounds <= ssgd.total_rounds,
+            ),
+            (
+                format!(
+                    "{label}: SLAQ bits ({}) lowest (SGD {}, QSGD {}, SSGD {})",
+                    sci(slaq.total_bits as f64),
+                    sci(sgd.total_bits as f64),
+                    sci(qsgd.total_bits as f64),
+                    sci(ssgd.total_bits as f64)
+                ),
+                slaq.total_bits <= sgd.total_bits
+                    && slaq.total_bits <= qsgd.total_bits
+                    && slaq.total_bits <= ssgd.total_bits,
+            ),
+            (
+                format!(
+                    "{label}: accuracy parity SLAQ {:.4} vs SGD {:.4}",
+                    slaq.final_accuracy.unwrap_or(0.0),
+                    sgd.final_accuracy.unwrap_or(0.0)
+                ),
+                (slaq.final_accuracy.unwrap_or(0.0) - sgd.final_accuracy.unwrap_or(0.0)).abs()
+                    < 0.02,
+            ),
+        ];
+        for (msg, ok) in &checks {
+            out.push_str(&format!("  [{}] {msg}\n", if *ok { "ok" } else { "FAIL" }));
+        }
+    }
+    Ok(out)
+}

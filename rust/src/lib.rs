@@ -1,0 +1,35 @@
+//! # LAQ — Lazily Aggregated Quantized Gradients
+//!
+//! Reproduction of Sun, Chen, Giannakis, Yang, *"Communication-Efficient
+//! Distributed Learning via Lazily Aggregated Quantized Gradients"*
+//! (NeurIPS 2019) as a three-layer rust + JAX + Pallas system.
+//!
+//! Layer 3 (this crate) is the distributed-training coordinator: a
+//! parameter-server topology in which the server maintains the lazily
+//! aggregated gradient `∇^k` and each worker decides — via the paper's
+//! selection criterion (7) — whether to upload its quantized gradient
+//! innovation.  Layers 2/1 (JAX model + Pallas quantization kernel) are
+//! AOT-compiled to HLO text at build time and executed through PJRT; see
+//! `runtime`.
+//!
+//! The crate is self-contained: data generators, the quantization codecs
+//! (LAQ innovation codec, QSGD, sparsification), native reference models,
+//! a simulated network with byte/latency accounting, metrics, the
+//! experiment harness regenerating every table/figure of the paper, and
+//! small infrastructure substrates (RNG, JSON, config, CLI, thread pool)
+//! that would normally come from crates.io but are implemented here so the
+//! project builds fully offline.
+
+pub mod util;
+pub mod quant;
+pub mod data;
+pub mod model;
+pub mod comm;
+pub mod coordinator;
+pub mod algo;
+pub mod runtime;
+pub mod metrics;
+pub mod experiments;
+pub mod config;
+
+pub use util::error::{Error, Result};

@@ -1,0 +1,212 @@
+//! `laq` — CLI for the LAQ reproduction.
+//!
+//! Subcommands:
+//!   exp    — regenerate a paper table/figure (`laq exp --id fig4`)
+//!   train  — run one training configuration
+//!   list   — list experiments and (if built) AOT artifacts
+//!
+//! See README.md for the full walkthrough.
+
+use laq::config::{Algo, Backend, ModelKind, RunCfg};
+use laq::experiments::{self, ExpOpts};
+use laq::util::cli::{usage, ArgSpec, Args};
+
+fn main() {
+    laq::util::logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match argv.first().map(|s| s.as_str()) {
+        Some("exp") => cmd_exp(&argv[1..]),
+        Some("train") => cmd_train(&argv[1..]),
+        Some("list") => cmd_list(&argv[1..]),
+        Some("--help") | Some("-h") | None => {
+            print_help();
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'\n");
+            print_help();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "laq — Lazily Aggregated Quantized Gradients (NeurIPS 2019) reproduction\n\n\
+         USAGE: laq <exp|train|list> [OPTIONS]\n\n\
+         laq exp   --id <fig3|fig4|fig5|fig6|fig7|fig8|table2|table3|prop1> [--full] [--backend native|pjrt] [--out DIR] [--seed N]\n\
+         laq train --algo <gd|qgd|lag|laq|sgd|qsgd|ssgd|slaq> [--model logreg|mlp] [--config FILE] [--iters N] [--alpha A] [--bits B] [--backend native|pjrt]\n\
+         laq list\n"
+    );
+}
+
+fn exp_spec() -> Vec<ArgSpec> {
+    vec![
+        ArgSpec { name: "id", help: "experiment id", default: None, is_switch: false },
+        ArgSpec { name: "out", help: "output dir", default: Some("results"), is_switch: false },
+        ArgSpec { name: "backend", help: "native|pjrt", default: Some("native"), is_switch: false },
+        ArgSpec { name: "seed", help: "rng seed", default: Some("1"), is_switch: false },
+        ArgSpec { name: "full", help: "paper-scale sizes (slow)", default: None, is_switch: true },
+        ArgSpec { name: "all", help: "run every experiment", default: None, is_switch: true },
+    ]
+}
+
+fn cmd_exp(argv: &[String]) -> i32 {
+    let spec = exp_spec();
+    let args = match Args::parse(argv, &spec) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}\n\n{}", usage("exp", "Regenerate a paper table/figure", &spec));
+            return 2;
+        }
+    };
+    let opts = ExpOpts {
+        quick: !args.switch("full"),
+        out_dir: args.get("out").unwrap_or("results").to_string(),
+        backend: match Backend::parse(args.get("backend").unwrap_or("native")) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        },
+        seed: args.get_u64("seed").unwrap_or(Some(1)).unwrap_or(1),
+    };
+    let ids: Vec<String> = if args.switch("all") {
+        experiments::registry().iter().map(|r| r.0.to_string()).collect()
+    } else {
+        match args.require("id") {
+            Ok(id) => vec![id.to_string()],
+            Err(e) => {
+                eprintln!("{e}\n\n{}", usage("exp", "Regenerate a paper table/figure", &spec));
+                return 2;
+            }
+        }
+    };
+    for id in &ids {
+        println!("=== {id} ===");
+        match experiments::run(id, &opts) {
+            Ok(report) => println!("{report}"),
+            Err(e) => {
+                eprintln!("experiment {id} failed: {e}");
+                return 1;
+            }
+        }
+    }
+    0
+}
+
+fn train_spec() -> Vec<ArgSpec> {
+    vec![
+        ArgSpec { name: "algo", help: "gd|qgd|lag|laq|sgd|qsgd|ssgd|slaq", default: Some("laq"), is_switch: false },
+        ArgSpec { name: "model", help: "logreg|mlp", default: Some("logreg"), is_switch: false },
+        ArgSpec { name: "config", help: "TOML/JSON config file", default: None, is_switch: false },
+        ArgSpec { name: "iters", help: "iterations", default: None, is_switch: false },
+        ArgSpec { name: "alpha", help: "stepsize", default: None, is_switch: false },
+        ArgSpec { name: "bits", help: "quantization bits", default: None, is_switch: false },
+        ArgSpec { name: "workers", help: "worker count", default: None, is_switch: false },
+        ArgSpec { name: "backend", help: "native|pjrt", default: Some("native"), is_switch: false },
+        ArgSpec { name: "dataset", help: "mnist|ijcnn1|covtype", default: None, is_switch: false },
+        ArgSpec { name: "out", help: "trace output dir", default: Some("results/train"), is_switch: false },
+        ArgSpec { name: "seed", help: "rng seed", default: None, is_switch: false },
+    ]
+}
+
+fn cmd_train(argv: &[String]) -> i32 {
+    let spec = train_spec();
+    let args = match Args::parse(argv, &spec) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}\n\n{}", usage("train", "Run one training configuration", &spec));
+            return 2;
+        }
+    };
+    let run = || -> laq::Result<()> {
+        let algo = Algo::parse(args.get("algo").unwrap_or("laq"))?;
+        let model = ModelKind::parse(args.get("model").unwrap_or("logreg"))?;
+        let mut cfg = match model {
+            ModelKind::Mlp => RunCfg::paper_mlp(algo),
+            _ => RunCfg::paper_logreg(algo),
+        };
+        // experiment-scale defaults (full paper scale via --config)
+        cfg.data.n_train = 4_000;
+        cfg.data.n_test = 1_000;
+        cfg.iters = 300;
+        if model == ModelKind::Mlp {
+            cfg.hidden = 64;
+            cfg.iters = 150;
+        }
+        if let Some(path) = args.get("config") {
+            cfg.load_file(path)?;
+        }
+        if let Some(v) = args.get_usize("iters").map_err(|e| laq::Error::Config(e.to_string()))? {
+            cfg.iters = v;
+        }
+        if let Some(v) = args.get_f64("alpha").map_err(|e| laq::Error::Config(e.to_string()))? {
+            cfg.alpha = v;
+        }
+        if let Some(v) = args.get_usize("bits").map_err(|e| laq::Error::Config(e.to_string()))? {
+            cfg.bits = v as u32;
+        }
+        if let Some(v) = args.get_usize("workers").map_err(|e| laq::Error::Config(e.to_string()))? {
+            cfg.workers = v;
+        }
+        if let Some(v) = args.get("dataset") {
+            cfg.data.name = v.to_string();
+        }
+        if let Some(v) = args.get_u64("seed").map_err(|e| laq::Error::Config(e.to_string()))? {
+            cfg.seed = v;
+        }
+        cfg.backend = Backend::parse(args.get("backend").unwrap_or("native"))?;
+        cfg.validate()?;
+
+        let mut trainer = laq::algo::build(&cfg, "artifacts")?;
+        let res = trainer.run()?;
+        let out_dir = args.get("out").unwrap_or("results/train").to_string();
+        let name = format!("{}_{}", cfg.algo.name().to_lowercase(), cfg.model.name());
+        res.write_to(std::path::Path::new(&out_dir), &name)?;
+        // resolved config beside the trace for reproducibility
+        std::fs::write(
+            std::path::Path::new(&out_dir).join(format!("{name}.config.json")),
+            cfg.to_json().to_string_pretty(),
+        )?;
+
+        println!(
+            "{} on {} | iters {} | rounds {} | bits {:.3e} | final loss {:.6e} | acc {}",
+            res.algo,
+            res.model,
+            res.iters_run,
+            res.total_rounds,
+            res.total_bits as f64,
+            res.final_loss(),
+            res.final_accuracy.map(|a| format!("{a:.4}")).unwrap_or_else(|| "-".into()),
+        );
+        println!("trace: {out_dir}/{name}.csv");
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("train failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_list(_argv: &[String]) -> i32 {
+    println!("experiments:");
+    for (id, desc, _) in experiments::registry() {
+        println!("  {id:<8} {desc}");
+    }
+    match laq::runtime::Runtime::open("artifacts") {
+        Ok(rt) => {
+            println!("\nartifacts (compiled lazily on first use):");
+            for n in rt.artifact_names() {
+                println!("  {n}");
+            }
+        }
+        Err(_) => println!("\nartifacts: not built (run `make artifacts`)"),
+    }
+    0
+}

@@ -1,0 +1,242 @@
+//! Run metrics: convergence traces, counters, and CSV/JSON sinks.
+//!
+//! Every experiment in [`crate::experiments`] produces a [`RunResult`];
+//! the harness prints the paper-table rows from it and optionally writes
+//! the full trace for plotting (the figure series are exactly these
+//! columns: loss / gradient-norm vs iteration / rounds / bits).
+
+pub mod svgplot;
+
+use crate::util::json::Json;
+use std::io::Write;
+
+/// One recorded point of a training run.
+#[derive(Clone, Debug)]
+pub struct TracePoint {
+    pub iter: usize,
+    /// global loss f(θ^k) (full for deterministic runs; minibatch estimate
+    /// between full evals for stochastic runs)
+    pub loss: f64,
+    /// ||∇f(θ^k)||² (same caveat)
+    pub grad_norm_sq: f64,
+    /// cumulative uplink rounds so far
+    pub rounds: u64,
+    /// cumulative uplink bits so far
+    pub bits: u64,
+    /// simulated wall-clock (latency model)
+    pub sim_time: f64,
+    /// test accuracy, when evaluated at this point
+    pub accuracy: Option<f64>,
+    /// max over workers of the quantization-error norm ||ε_m^k||²
+    pub max_eps_sq: f64,
+}
+
+/// Complete result of one training run.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub algo: String,
+    pub model: String,
+    pub trace: Vec<TracePoint>,
+    pub final_theta: Vec<f32>,
+    pub iters_run: usize,
+    pub total_rounds: u64,
+    pub total_bits: u64,
+    pub sim_time: f64,
+    pub per_worker_rounds: Vec<u64>,
+    pub final_accuracy: Option<f64>,
+}
+
+impl RunResult {
+    pub fn final_loss(&self) -> f64 {
+        self.trace.last().map(|t| t.loss).unwrap_or(f64::NAN)
+    }
+
+    /// Loss series (for rate checks / plotting).
+    pub fn losses(&self) -> Vec<f64> {
+        self.trace.iter().map(|t| t.loss).collect()
+    }
+
+    /// CSV with one row per trace point.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(
+            "iter,loss,grad_norm_sq,rounds,bits,sim_time,accuracy,max_eps_sq\n",
+        );
+        for t in &self.trace {
+            s.push_str(&format!(
+                "{},{:.10e},{:.10e},{},{},{:.6e},{},{:.6e}\n",
+                t.iter,
+                t.loss,
+                t.grad_norm_sq,
+                t.rounds,
+                t.bits,
+                t.sim_time,
+                t.accuracy.map(|a| format!("{a:.4}")).unwrap_or_default(),
+                t.max_eps_sq,
+            ));
+        }
+        s
+    }
+
+    /// Summary object (recorded beside the CSV).
+    pub fn summary_json(&self) -> Json {
+        Json::obj(vec![
+            ("algo", Json::Str(self.algo.clone())),
+            ("model", Json::Str(self.model.clone())),
+            ("iters", Json::Num(self.iters_run as f64)),
+            ("rounds", Json::Num(self.total_rounds as f64)),
+            ("bits", Json::Num(self.total_bits as f64)),
+            ("sim_time", Json::Num(self.sim_time)),
+            ("final_loss", Json::Num(self.final_loss())),
+            (
+                "final_accuracy",
+                self.final_accuracy.map(Json::Num).unwrap_or(Json::Null),
+            ),
+            (
+                "per_worker_rounds",
+                Json::Arr(self.per_worker_rounds.iter().map(|&r| Json::Num(r as f64)).collect()),
+            ),
+        ])
+    }
+
+    /// Write `<dir>/<name>.csv` and `<dir>/<name>.json`.
+    pub fn write_to(&self, dir: &std::path::Path, name: &str) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let mut f = std::fs::File::create(dir.join(format!("{name}.csv")))?;
+        f.write_all(self.to_csv().as_bytes())?;
+        let mut g = std::fs::File::create(dir.join(format!("{name}.json")))?;
+        g.write_all(self.summary_json().to_string_pretty().as_bytes())?;
+        Ok(())
+    }
+}
+
+/// Fixed-width table printer for the paper-table reproductions.
+pub struct TablePrinter {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TablePrinter {
+    pub fn new(headers: &[&str]) -> Self {
+        Self { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(&widths) {
+                s.push_str(&format!(" {c:<w$} |"));
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = line(&self.headers);
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for r in &self.rows {
+            out.push_str(&line(r));
+        }
+        out
+    }
+}
+
+/// Human formatting of bit counts in the paper's scientific style.
+pub fn sci(x: f64) -> String {
+    if x == 0.0 {
+        return "0".into();
+    }
+    let exp = x.abs().log10().floor() as i32;
+    let mant = x / 10f64.powi(exp);
+    format!("{mant:.2}e{exp}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point(i: usize) -> TracePoint {
+        TracePoint {
+            iter: i,
+            loss: 1.0 / (i + 1) as f64,
+            grad_norm_sq: 0.1,
+            rounds: i as u64,
+            bits: (i * 100) as u64,
+            sim_time: i as f64,
+            accuracy: if i == 2 { Some(0.9) } else { None },
+            max_eps_sq: 0.0,
+        }
+    }
+
+    fn result() -> RunResult {
+        RunResult {
+            algo: "LAQ".into(),
+            model: "logreg".into(),
+            trace: (0..3).map(point).collect(),
+            final_theta: vec![0.0; 4],
+            iters_run: 3,
+            total_rounds: 2,
+            total_bits: 200,
+            sim_time: 2.0,
+            per_worker_rounds: vec![1, 1],
+            final_accuracy: Some(0.9),
+        }
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let csv = result().to_csv();
+        let lines: Vec<&str> = csv.trim().lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("iter,loss"));
+        assert!(lines[3].contains("0.9"));
+    }
+
+    #[test]
+    fn summary_json_is_valid() {
+        let j = result().summary_json();
+        let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("algo").as_str(), Some("LAQ"));
+        assert_eq!(parsed.get("rounds").as_usize(), Some(2));
+    }
+
+    #[test]
+    fn write_files(){
+        let dir = std::env::temp_dir().join("laq_metrics_test");
+        result().write_to(&dir, "t").unwrap();
+        assert!(dir.join("t.csv").exists());
+        assert!(dir.join("t.json").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = TablePrinter::new(&["Algorithm", "Bit #"]);
+        t.row(&["LAQ".into(), sci(1.95e7)]);
+        t.row(&["GD".into(), sci(7.08e9)]);
+        let out = t.render();
+        assert!(out.contains("| LAQ"));
+        assert!(out.contains("1.95e7"));
+        assert!(out.lines().count() == 4);
+    }
+
+    #[test]
+    fn sci_format() {
+        assert_eq!(sci(1.95e7), "1.95e7");
+        assert_eq!(sci(0.0), "0");
+        assert_eq!(sci(1.0), "1.00e0");
+    }
+}

@@ -1,0 +1,332 @@
+//! SVG line-chart renderer — turns the experiment traces into actual
+//! figure files (`results/<exp>/<figure>.svg`), no plotting deps needed.
+//!
+//! Supports the two axis styles the paper's figures use: linear x with
+//! log-10 y (loss/gradient-norm convergence) and log-log (bits on x).
+
+use std::fmt::Write as _;
+
+/// One plotted series.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub label: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    Linear,
+    Log10,
+}
+
+#[derive(Clone, Debug)]
+pub struct Plot {
+    pub title: String,
+    pub x_label: String,
+    pub y_label: String,
+    pub x_scale: Scale,
+    pub y_scale: Scale,
+    pub series: Vec<Series>,
+}
+
+const W: f64 = 640.0;
+const H: f64 = 420.0;
+const ML: f64 = 70.0; // margins
+const MR: f64 = 20.0;
+const MT: f64 = 36.0;
+const MB: f64 = 52.0;
+const COLORS: [&str; 6] = ["#d62728", "#1f77b4", "#2ca02c", "#ff7f0e", "#9467bd", "#8c564b"];
+
+fn tx(v: f64, lo: f64, hi: f64) -> f64 {
+    ML + (v - lo) / (hi - lo).max(1e-300) * (W - ML - MR)
+}
+
+fn ty(v: f64, lo: f64, hi: f64) -> f64 {
+    H - MB - (v - lo) / (hi - lo).max(1e-300) * (H - MT - MB)
+}
+
+fn apply(scale: Scale, v: f64) -> Option<f64> {
+    match scale {
+        Scale::Linear => Some(v),
+        Scale::Log10 => {
+            if v > 0.0 && v.is_finite() {
+                Some(v.log10())
+            } else {
+                None
+            }
+        }
+    }
+}
+
+fn fmt_tick(scale: Scale, t: f64) -> String {
+    match scale {
+        Scale::Linear => {
+            if t.abs() >= 1e4 || (t != 0.0 && t.abs() < 1e-2) {
+                format!("{t:.0e}")
+            } else {
+                format!("{t}")
+            }
+        }
+        Scale::Log10 => format!("1e{}", t.round() as i64),
+    }
+}
+
+impl Plot {
+    /// Render to an SVG document string.
+    pub fn render(&self) -> String {
+        // transform all points into plotting space
+        let mut pts: Vec<Vec<(f64, f64)>> = Vec::new();
+        let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+        let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+        for s in &self.series {
+            let mut out = Vec::new();
+            for &(x, y) in &s.points {
+                if let (Some(px), Some(py)) = (apply(self.x_scale, x), apply(self.y_scale, y)) {
+                    xmin = xmin.min(px);
+                    xmax = xmax.max(px);
+                    ymin = ymin.min(py);
+                    ymax = ymax.max(py);
+                    out.push((px, py));
+                }
+            }
+            pts.push(out);
+        }
+        if !xmin.is_finite() {
+            xmin = 0.0;
+            xmax = 1.0;
+            ymin = 0.0;
+            ymax = 1.0;
+        }
+        if (xmax - xmin).abs() < 1e-12 {
+            xmax = xmin + 1.0;
+        }
+        if (ymax - ymin).abs() < 1e-12 {
+            ymax = ymin + 1.0;
+        }
+
+        let mut svg = String::new();
+        let _ = write!(
+            svg,
+            r##"<svg xmlns="http://www.w3.org/2000/svg" width="{W}" height="{H}" viewBox="0 0 {W} {H}" font-family="sans-serif" font-size="12">"##
+        );
+        let _ = write!(svg, r##"<rect width="{W}" height="{H}" fill="white"/>"##);
+        // title + axis labels
+        let _ = write!(
+            svg,
+            r##"<text x="{}" y="20" text-anchor="middle" font-size="14">{}</text>"##,
+            W / 2.0,
+            esc(&self.title)
+        );
+        let _ = write!(
+            svg,
+            r##"<text x="{}" y="{}" text-anchor="middle">{}</text>"##,
+            W / 2.0,
+            H - 12.0,
+            esc(&self.x_label)
+        );
+        let _ = write!(
+            svg,
+            r##"<text x="16" y="{}" text-anchor="middle" transform="rotate(-90 16 {})">{}</text>"##,
+            H / 2.0,
+            H / 2.0,
+            esc(&self.y_label)
+        );
+        // frame
+        let _ = write!(
+            svg,
+            r##"<rect x="{ML}" y="{MT}" width="{}" height="{}" fill="none" stroke="#444"/>"##,
+            W - ML - MR,
+            H - MT - MB
+        );
+        // ticks: 5 per axis (integer positions for log scales)
+        for i in 0..=4 {
+            let fx = xmin + (xmax - xmin) * i as f64 / 4.0;
+            let px = tx(fx, xmin, xmax);
+            let _ = write!(
+                svg,
+                r##"<line x1="{px}" y1="{}" x2="{px}" y2="{}" stroke="#ccc"/>"##,
+                MT,
+                H - MB
+            );
+            let _ = write!(
+                svg,
+                r##"<text x="{px}" y="{}" text-anchor="middle">{}</text>"##,
+                H - MB + 16.0,
+                fmt_tick(self.x_scale, fx)
+            );
+            let fy = ymin + (ymax - ymin) * i as f64 / 4.0;
+            let py = ty(fy, ymin, ymax);
+            let _ = write!(
+                svg,
+                r##"<line x1="{ML}" y1="{py}" x2="{}" y2="{py}" stroke="#ccc"/>"##,
+                W - MR
+            );
+            let _ = write!(
+                svg,
+                r##"<text x="{}" y="{}" text-anchor="end">{}</text>"##,
+                ML - 6.0,
+                py + 4.0,
+                fmt_tick(self.y_scale, fy)
+            );
+        }
+        // series
+        for (si, (s, p)) in self.series.iter().zip(&pts).enumerate() {
+            let color = COLORS[si % COLORS.len()];
+            if p.len() >= 2 {
+                let mut d = String::new();
+                for (i, &(x, y)) in p.iter().enumerate() {
+                    let _ = write!(
+                        d,
+                        "{}{:.2},{:.2} ",
+                        if i == 0 { "M" } else { "L" },
+                        tx(x, xmin, xmax),
+                        ty(y, ymin, ymax)
+                    );
+                }
+                let _ = write!(
+                    svg,
+                    r##"<path d="{d}" fill="none" stroke="{color}" stroke-width="1.8"/>"##
+                );
+            }
+            // legend
+            let ly = MT + 16.0 + 16.0 * si as f64;
+            let _ = write!(
+                svg,
+                r##"<line x1="{}" y1="{ly}" x2="{}" y2="{ly}" stroke="{color}" stroke-width="3"/>"##,
+                W - MR - 130.0,
+                W - MR - 105.0
+            );
+            let _ = write!(
+                svg,
+                r##"<text x="{}" y="{}">{}</text>"##,
+                W - MR - 100.0,
+                ly + 4.0,
+                esc(&s.label)
+            );
+        }
+        svg.push_str("</svg>");
+        svg
+    }
+
+    pub fn write_to(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.render())
+    }
+}
+
+fn esc(s: &str) -> String {
+    s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;")
+}
+
+/// Build the paper's three convergence panels (vs iterations / rounds /
+/// bits) from a set of run results and write them beside the CSVs.
+pub fn figure_panels(
+    results: &[crate::metrics::RunResult],
+    metric: impl Fn(&crate::metrics::TracePoint) -> f64,
+    y_label: &str,
+    title: &str,
+    dir: &std::path::Path,
+) -> std::io::Result<()> {
+    let panels: [(&str, Scale, fn(&crate::metrics::TracePoint) -> f64); 3] = [
+        ("iterations", Scale::Linear, |t| t.iter as f64),
+        ("rounds", Scale::Linear, |t| t.rounds as f64),
+        ("bits", Scale::Log10, |t| t.bits.max(1) as f64),
+    ];
+    for (xname, xscale, xf) in panels {
+        let plot = Plot {
+            title: format!("{title} vs {xname}"),
+            x_label: xname.into(),
+            y_label: y_label.into(),
+            x_scale: xscale,
+            y_scale: Scale::Log10,
+            series: results
+                .iter()
+                .map(|r| Series {
+                    label: r.algo.clone(),
+                    points: r.trace.iter().map(|t| (xf(t), metric(t))).collect(),
+                })
+                .collect(),
+        };
+        plot.write_to(&dir.join(format!("panel_{xname}.svg")))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plot() -> Plot {
+        Plot {
+            title: "loss vs iterations".into(),
+            x_label: "iterations".into(),
+            y_label: "loss".into(),
+            x_scale: Scale::Linear,
+            y_scale: Scale::Log10,
+            series: vec![
+                Series {
+                    label: "GD".into(),
+                    points: (0..50).map(|k| (k as f64, 2.0 * 0.95f64.powi(k))).collect(),
+                },
+                Series {
+                    label: "LAQ".into(),
+                    points: (0..50).map(|k| (k as f64, 2.1 * 0.95f64.powi(k))).collect(),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn renders_valid_svg_with_series_and_legend() {
+        let svg = plot().render();
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.ends_with("</svg>"));
+        assert_eq!(svg.matches("<path").count(), 2);
+        assert!(svg.contains(">GD<"));
+        assert!(svg.contains(">LAQ<"));
+        assert!(svg.contains("1e0")); // log ticks
+    }
+
+    #[test]
+    fn log_scale_drops_nonpositive_points() {
+        let mut p = plot();
+        p.series[0].points.push((51.0, 0.0));
+        p.series[0].points.push((52.0, -1.0));
+        let svg = p.render();
+        assert!(svg.contains("<path")); // still renders
+    }
+
+    #[test]
+    fn empty_series_renders_frame_only() {
+        let p = Plot {
+            title: "t".into(),
+            x_label: "x".into(),
+            y_label: "y".into(),
+            x_scale: Scale::Linear,
+            y_scale: Scale::Linear,
+            series: vec![],
+        };
+        let svg = p.render();
+        assert!(svg.contains("<rect"));
+        assert!(!svg.contains("<path"));
+    }
+
+    #[test]
+    fn title_is_escaped() {
+        let mut p = plot();
+        p.title = "a < b & c".into();
+        let svg = p.render();
+        assert!(svg.contains("a &lt; b &amp; c"));
+    }
+
+    #[test]
+    fn write_to_creates_file() {
+        let dir = std::env::temp_dir().join("laq_svg_test");
+        let path = dir.join("p.svg");
+        plot().write_to(&path).unwrap();
+        assert!(path.exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,293 @@
+//! Native multinomial logistic regression — mirror of the L1/L2 path
+//! (`python/compile/kernels/logreg_grad.py` + `ref.py`).
+//!
+//!   f_m(θ) = (1/N) Σ_{n∈shard} CE(softmax(θ x_n), y_n) + (λ/2M) ||θ||²
+//!
+//! θ is the (C·F,) flat parameter interpreted as a row-major (C, F) matrix,
+//! exactly like the artifacts, so parameters are interchangeable between
+//! backends mid-run.
+
+use super::{LossCfg, ModelOps, WorkerGrad};
+use crate::data::Dataset;
+use crate::util::tensor;
+use crate::Result;
+
+/// Model-level ops (init, accuracy).
+#[derive(Clone, Debug)]
+pub struct LogRegModel {
+    pub features: usize,
+    pub classes: usize,
+}
+
+impl LogRegModel {
+    pub fn new(features: usize, classes: usize) -> Self {
+        Self { features, classes }
+    }
+
+    /// argmax_c θ_c · x for each row.
+    pub fn predict(&self, theta: &[f32], data: &Dataset) -> Vec<u32> {
+        assert_eq!(theta.len(), self.features * self.classes);
+        let mut out = Vec::with_capacity(data.n);
+        for i in 0..data.n {
+            let x = data.row(i);
+            let mut best = (f32::NEG_INFINITY, 0u32);
+            for c in 0..self.classes {
+                let s = tensor::dot_f32(&theta[c * self.features..(c + 1) * self.features], x);
+                if s > best.0 {
+                    best = (s, c as u32);
+                }
+            }
+            out.push(best.1);
+        }
+        out
+    }
+}
+
+impl ModelOps for LogRegModel {
+    fn dim(&self) -> usize {
+        self.features * self.classes
+    }
+
+    fn init_params(&self, _seed: u64) -> Vec<f32> {
+        // the paper's convex experiments start from zero
+        vec![0.0; self.dim()]
+    }
+
+    fn accuracy(&self, theta: &[f32], test: &Dataset) -> f64 {
+        let pred = self.predict(theta, test);
+        let correct = pred.iter().zip(&test.y).filter(|(a, b)| a == b).count();
+        correct as f64 / test.n.max(1) as f64
+    }
+}
+
+/// Per-worker gradient oracle holding this worker's shard.
+pub struct LogRegWorker {
+    shard: Dataset,
+    cfg: LossCfg,
+    classes: usize,
+    features: usize,
+}
+
+impl LogRegWorker {
+    pub fn new(shard: Dataset, cfg: LossCfg) -> Self {
+        let classes = shard.classes;
+        let features = shard.features;
+        Self { shard, cfg, classes, features }
+    }
+
+    /// Shared core over an arbitrary row set.  `inv_n` is the CE
+    /// normalizer: 1/N_global for full gradients, 1/(batch·M) for
+    /// minibatches (unbiased for the same global loss).
+    ///
+    /// Large row sets are evaluated chunk-parallel on the global pool
+    /// (§Perf): each chunk produces a partial (ce, grad) reduced in fixed
+    /// chunk order, so results stay deterministic for a given machine.
+    fn eval_rows(&mut self, theta: &[f32], rows: RowIter, inv_n: f64) -> (f64, Vec<f32>) {
+        let (c, f) = (self.classes, self.features);
+        assert_eq!(theta.len(), c * f);
+        let idx: Vec<usize> = rows.collect();
+        let n = idx.len();
+        let reg = (self.cfg.l2 / self.cfg.n_workers as f64) as f32;
+
+        const PAR_THRESHOLD: usize = 256;
+        let pool = crate::util::threadpool::global();
+        let (mut ce, mut grad) = if n >= PAR_THRESHOLD && pool.size() > 1 {
+            let chunks = pool.size().min(n.div_ceil(64));
+            let per = n.div_ceil(chunks);
+            let shard = &self.shard;
+            let parts = pool.scatter(chunks, |ci| {
+                let lo = ci * per;
+                let hi = ((ci + 1) * per).min(n);
+                eval_chunk(shard, theta, &idx[lo..hi], c, f)
+            });
+            let mut ce = 0.0f64;
+            let mut grad = vec![0.0f32; c * f];
+            for (pce, pgrad) in parts {
+                ce += pce;
+                tensor::axpy(1.0, &pgrad, &mut grad);
+            }
+            (ce, grad)
+        } else {
+            eval_chunk(&self.shard, theta, &idx, c, f)
+        };
+
+        // normalize + ridge
+        ce *= inv_n;
+        tensor::scale(&mut grad, inv_n as f32);
+        tensor::axpy(reg, theta, &mut grad);
+        let loss = ce + 0.5 * reg as f64 * tensor::norm2_sq(theta);
+        (loss, grad)
+    }
+}
+
+/// One chunk of the fused loss+grad: returns UNNORMALIZED
+/// (Σ ce, Σ diffᵀ x) over `rows`.
+fn eval_chunk(
+    shard: &Dataset,
+    theta: &[f32],
+    rows: &[usize],
+    c: usize,
+    f: usize,
+) -> (f64, Vec<f32>) {
+    let mut logits = vec![0.0f32; c];
+    let mut ce = 0.0f64;
+    let mut grad = vec![0.0f32; c * f];
+    for &i in rows {
+        let x = shard.row(i);
+        for (cc, l) in logits.iter_mut().enumerate() {
+            *l = tensor::dot_f32(&theta[cc * f..(cc + 1) * f], x);
+        }
+        let lse = tensor::logsumexp_row(&logits);
+        let yc = shard.y[i] as usize;
+        ce += (lse - logits[yc]) as f64;
+        for cc in 0..c {
+            let mut d = (logits[cc] - lse).exp();
+            if cc == yc {
+                d -= 1.0;
+            }
+            if d != 0.0 {
+                tensor::axpy(d, x, &mut grad[cc * f..(cc + 1) * f]);
+            }
+        }
+    }
+    (ce, grad)
+}
+
+/// Iterator over either the full shard or an index list, cloneable for the
+/// multi-pass evaluation above.
+#[derive(Clone)]
+enum RowIter<'a> {
+    Full(std::ops::Range<usize>),
+    Batch(std::slice::Iter<'a, usize>),
+}
+
+impl<'a> Iterator for RowIter<'a> {
+    type Item = usize;
+    fn next(&mut self) -> Option<usize> {
+        match self {
+            RowIter::Full(r) => r.next(),
+            RowIter::Batch(it) => it.next().copied(),
+        }
+    }
+}
+
+impl<'a> RowIter<'a> {
+    fn len(&self) -> usize {
+        match self {
+            RowIter::Full(r) => r.len(),
+            RowIter::Batch(it) => it.len(),
+        }
+    }
+}
+
+impl WorkerGrad for LogRegWorker {
+    fn dim(&self) -> usize {
+        self.classes * self.features
+    }
+
+    fn full(&mut self, theta: &[f32]) -> Result<(f64, Vec<f32>)> {
+        let inv_n = 1.0 / self.cfg.n_global as f64;
+        Ok(self.eval_rows(theta, RowIter::Full(0..self.shard.n), inv_n))
+    }
+
+    fn batch(&mut self, theta: &[f32], rows: &[usize]) -> Result<(f64, Vec<f32>)> {
+        // unbiased estimator of the full-gradient normalization:
+        // E[(1/(b·M)) Σ_batch ∇ce] = (1/N) Σ_shard ∇ce for uniform batches
+        let inv_n = 1.0 / (rows.len() * self.cfg.n_workers) as f64;
+        Ok(self.eval_rows(theta, RowIter::Batch(rows.iter()), inv_n))
+    }
+
+    fn shard_len(&self) -> usize {
+        self.shard.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testutil::{check_grad, tiny_shard};
+
+    fn setup() -> (LogRegWorker, Vec<f32>) {
+        let shard = tiny_shard(1, 60, 12, 4);
+        let cfg = LossCfg { n_global: 240, l2: 0.01, n_workers: 4 };
+        let w = LogRegWorker::new(shard, cfg);
+        let mut rng = crate::util::rng::Rng::new(2);
+        let theta: Vec<f32> = (0..48).map(|_| rng.normal() as f32 * 0.3).collect();
+        (w, theta)
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let (mut w, theta) = setup();
+        check_grad(|t| w.full(t).unwrap(), &theta, 2e-3, 3);
+    }
+
+    #[test]
+    fn batch_gradient_matches_finite_difference() {
+        let (mut w, theta) = setup();
+        let rows = vec![0, 5, 17, 33, 59];
+        check_grad(|t| w.batch(t, &rows).unwrap(), &theta, 2e-3, 4);
+    }
+
+    #[test]
+    fn full_batch_equals_full_when_all_rows() {
+        // with rows = 0..n and matching normalizer the two paths agree
+        let (mut w, theta) = setup();
+        let all: Vec<usize> = (0..60).collect();
+        let (lf, gf) = w.full(&theta).unwrap();
+        let (lb, gb) = w.batch(&theta, &all).unwrap();
+        // full uses 1/N_global = 1/240; batch uses 1/(60·4) = 1/240: equal
+        assert!((lf - lb).abs() < 1e-9);
+        for (a, b) in gf.iter().zip(&gb) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn zero_theta_loss_is_log_c() {
+        let shard = tiny_shard(5, 40, 8, 4);
+        let cfg = LossCfg { n_global: 40, l2: 0.0, n_workers: 1 };
+        let mut w = LogRegWorker::new(shard, cfg);
+        let (l, _) = w.full(&vec![0.0; 32]).unwrap();
+        assert!((l - (4.0f64).ln()).abs() < 1e-6, "loss={l}");
+    }
+
+    #[test]
+    fn training_reduces_loss_and_fits() {
+        let shard = crate::data::synth::ijcnn1_like(300, 50, 9);
+        let cfg = LossCfg { n_global: 300, l2: 0.001, n_workers: 1 };
+        let model = LogRegModel::new(22, 2);
+        let mut w = LogRegWorker::new(shard.train.clone(), cfg);
+        let mut theta = model.init_params(0);
+        let (l0, _) = w.full(&theta).unwrap();
+        for _ in 0..200 {
+            let (_, g) = w.full(&theta).unwrap();
+            tensor::axpy(-1.0, &g, &mut theta);
+        }
+        let (l1, _) = w.full(&theta).unwrap();
+        assert!(l1 < 0.5 * l0, "l0={l0} l1={l1}");
+        let acc = model.accuracy(&theta, &shard.test);
+        assert!(acc > 0.85, "acc={acc}");
+    }
+
+    #[test]
+    fn accuracy_of_perfect_predictor() {
+        // single feature = class indicator blocks
+        let model = LogRegModel::new(4, 4);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for c in 0..4u32 {
+            let mut row = vec![0.0f32; 4];
+            row[c as usize] = 1.0;
+            x.extend(row);
+            y.push(c);
+        }
+        let test = Dataset { n: 4, features: 4, classes: 4, x, y };
+        // identity weights classify perfectly
+        let mut theta = vec![0.0f32; 16];
+        for c in 0..4 {
+            theta[c * 4 + c] = 1.0;
+        }
+        assert_eq!(model.accuracy(&theta, &test), 1.0);
+    }
+}

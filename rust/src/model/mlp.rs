@@ -1,0 +1,341 @@
+//! Native one-hidden-layer ReLU MLP (the paper's nonconvex model,
+//! 784-200-10 in §G) with hand-written backprop, mirroring
+//! `ref.mlp_loss_ref` so parameters interchange with the `mlp_grad`
+//! artifact.
+//!
+//! Flat layout (same as `ref.mlp_unflatten`):
+//!   [W1 (F×H) | b1 (H) | W2 (H×C) | b2 (C)]
+
+use super::{LossCfg, ModelOps, WorkerGrad};
+use crate::data::Dataset;
+use crate::util::rng::Rng;
+use crate::util::tensor;
+use crate::Result;
+
+#[derive(Clone, Debug)]
+pub struct MlpModel {
+    pub features: usize,
+    pub hidden: usize,
+    pub classes: usize,
+}
+
+impl MlpModel {
+    pub fn new(features: usize, hidden: usize, classes: usize) -> Self {
+        Self { features, hidden, classes }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.features * self.hidden
+            + self.hidden
+            + self.hidden * self.classes
+            + self.classes
+    }
+
+    fn offsets(&self) -> (usize, usize, usize) {
+        let o1 = self.features * self.hidden;
+        let o2 = o1 + self.hidden;
+        let o3 = o2 + self.hidden * self.classes;
+        (o1, o2, o3)
+    }
+
+    /// Forward pass to logits for a dataset (used by accuracy).
+    pub fn logits(&self, theta: &[f32], data: &Dataset) -> Vec<f32> {
+        let (o1, o2, o3) = self.offsets();
+        let (w1, b1) = (&theta[..o1], &theta[o1..o2]);
+        let (w2, b2) = (&theta[o2..o3], &theta[o3..]);
+        let (f, h, c) = (self.features, self.hidden, self.classes);
+        // hidden = relu(X W1 + b1) : n × h
+        let mut hid = tensor::gemm(data.n, f, h, &data.x, w1);
+        for r in 0..data.n {
+            let row = &mut hid[r * h..(r + 1) * h];
+            for (v, b) in row.iter_mut().zip(b1) {
+                *v += b;
+            }
+        }
+        tensor::relu(&mut hid);
+        let mut out = tensor::gemm(data.n, h, c, &hid, w2);
+        for r in 0..data.n {
+            let row = &mut out[r * c..(r + 1) * c];
+            for (v, b) in row.iter_mut().zip(b2) {
+                *v += b;
+            }
+        }
+        out
+    }
+}
+
+impl ModelOps for MlpModel {
+    fn dim(&self) -> usize {
+        self.param_count()
+    }
+
+    fn init_params(&self, seed: u64) -> Vec<f32> {
+        // He-style init for W1/W2, zero biases, matching the experiment
+        // scripts' initialization scale
+        let mut rng = Rng::new(seed ^ 0x6d6c70);
+        let mut theta = vec![0.0f32; self.param_count()];
+        let (o1, o2, o3) = self.offsets();
+        let s1 = (2.0 / self.features as f64).sqrt() as f32;
+        let s2 = (2.0 / self.hidden as f64).sqrt() as f32;
+        rng.fill_normal_f32(&mut theta[..o1], s1);
+        rng.fill_normal_f32(&mut theta[o2..o3], s2);
+        theta
+    }
+
+    fn accuracy(&self, theta: &[f32], test: &Dataset) -> f64 {
+        let logits = self.logits(theta, test);
+        let c = self.classes;
+        let mut correct = 0usize;
+        for i in 0..test.n {
+            let row = &logits[i * c..(i + 1) * c];
+            let mut best = (f32::NEG_INFINITY, 0u32);
+            for (j, &v) in row.iter().enumerate() {
+                if v > best.0 {
+                    best = (v, j as u32);
+                }
+            }
+            if best.1 == test.y[i] {
+                correct += 1;
+            }
+        }
+        correct as f64 / test.n.max(1) as f64
+    }
+}
+
+pub struct MlpWorker {
+    shard: Dataset,
+    cfg: LossCfg,
+    model: MlpModel,
+}
+
+impl MlpWorker {
+    pub fn new(shard: Dataset, hidden: usize, cfg: LossCfg) -> Self {
+        let model = MlpModel::new(shard.features, hidden, shard.classes);
+        Self { shard, cfg, model }
+    }
+
+    /// Chunk-parallel fused loss+grad over `rows` (see logreg.rs §Perf
+    /// note: partials reduced in fixed chunk order).
+    fn eval_rows(&mut self, theta: &[f32], rows: &[usize], inv_n: f64) -> (f64, Vec<f32>) {
+        assert_eq!(theta.len(), self.model.param_count());
+        let n = rows.len();
+        let reg = (self.cfg.l2 / self.cfg.n_workers as f64) as f32;
+
+        const PAR_THRESHOLD: usize = 128;
+        let pool = crate::util::threadpool::global();
+        let (mut ce, mut grad) = if n >= PAR_THRESHOLD && pool.size() > 1 {
+            let chunks = pool.size().min(n.div_ceil(32));
+            let per = n.div_ceil(chunks);
+            let shard = &self.shard;
+            let model = &self.model;
+            let parts = pool.scatter(chunks, |ci| {
+                let lo = ci * per;
+                let hi = ((ci + 1) * per).min(n);
+                mlp_eval_chunk(shard, model, theta, &rows[lo..hi])
+            });
+            let mut ce = 0.0f64;
+            let mut grad = vec![0.0f32; theta.len()];
+            for (pce, pgrad) in parts {
+                ce += pce;
+                tensor::axpy(1.0, &pgrad, &mut grad);
+            }
+            (ce, grad)
+        } else {
+            mlp_eval_chunk(&self.shard, &self.model, theta, rows)
+        };
+
+        ce *= inv_n;
+        tensor::scale(&mut grad, inv_n as f32);
+        tensor::axpy(reg, theta, &mut grad);
+        let loss = ce + 0.5 * reg as f64 * tensor::norm2_sq(theta);
+        (loss, grad)
+    }
+}
+
+/// One row-chunk of the MLP forward+backward: UNNORMALIZED (Σ ce, grad).
+fn mlp_eval_chunk(
+    shard: &Dataset,
+    model: &MlpModel,
+    theta: &[f32],
+    rows: &[usize],
+) -> (f64, Vec<f32>) {
+    let (f, h, c) = (model.features, model.hidden, model.classes);
+    let (o1, o2, o3) = model.offsets();
+    let (w1, b1) = (&theta[..o1], &theta[o1..o2]);
+    let (w2, b2) = (&theta[o2..o3], &theta[o3..]);
+    let n = rows.len();
+
+    // gather X_batch (n×f)
+    let mut xb = Vec::with_capacity(n * f);
+    for &i in rows {
+        xb.extend_from_slice(shard.row(i));
+    }
+    // forward
+    let mut hpre = tensor::gemm(n, f, h, &xb, w1); // n×h
+    for r in 0..n {
+        let row = &mut hpre[r * h..(r + 1) * h];
+        for (v, b) in row.iter_mut().zip(b1) {
+            *v += b;
+        }
+    }
+    let mut hact = hpre.clone();
+    tensor::relu(&mut hact);
+    let mut logits = tensor::gemm(n, h, c, &hact, w2); // n×c
+    for r in 0..n {
+        let row = &mut logits[r * c..(r + 1) * c];
+        for (v, b) in row.iter_mut().zip(b2) {
+            *v += b;
+        }
+    }
+    // loss + dlogits (softmax − onehot), UNNORMALIZED
+    let mut ce = 0.0f64;
+    for (bi, &i) in rows.iter().enumerate() {
+        let row = &mut logits[bi * c..(bi + 1) * c];
+        let lse = tensor::logsumexp_row(row);
+        let yc = shard.y[i] as usize;
+        ce += (lse - row[yc]) as f64;
+        for v in row.iter_mut() {
+            *v = (*v - lse).exp();
+        }
+        row[yc] -= 1.0;
+    }
+    let dlogits = logits;
+
+    // backward
+    let mut grad = vec![0.0f32; theta.len()];
+    {
+        let (gw1, rest) = grad.split_at_mut(o1);
+        let (gb1, rest2) = rest.split_at_mut(h);
+        let (gw2, gb2) = rest2.split_at_mut(h * c);
+        tensor::gemm_at_b_acc(n, h, c, &hact, &dlogits, gw2);
+        for r in 0..n {
+            for j in 0..c {
+                gb2[j] += dlogits[r * c + j];
+            }
+        }
+        // dh = dlogits W2ᵀ (n×h); w2 is (h×c)
+        let mut dh = tensor::gemm_a_bt(n, c, h, &dlogits, w2);
+        for r in 0..n {
+            for j in 0..h {
+                if hpre[r * h + j] <= 0.0 {
+                    dh[r * h + j] = 0.0;
+                }
+            }
+        }
+        tensor::gemm_at_b_acc(n, f, h, &xb, &dh, gw1);
+        for r in 0..n {
+            for j in 0..h {
+                gb1[j] += dh[r * h + j];
+            }
+        }
+    }
+    (ce, grad)
+}
+
+/// Transpose a row-major (r×c) into (c×r).
+#[cfg(test)]
+fn transpose(a: &[f32], r: usize, c: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; r * c];
+    for i in 0..r {
+        for j in 0..c {
+            out[j * r + i] = a[i * c + j];
+        }
+    }
+    out
+}
+
+impl WorkerGrad for MlpWorker {
+    fn dim(&self) -> usize {
+        self.model.param_count()
+    }
+
+    fn full(&mut self, theta: &[f32]) -> Result<(f64, Vec<f32>)> {
+        let rows: Vec<usize> = (0..self.shard.n).collect();
+        let inv_n = 1.0 / self.cfg.n_global as f64;
+        Ok(self.eval_rows(theta, &rows, inv_n))
+    }
+
+    fn batch(&mut self, theta: &[f32], rows: &[usize]) -> Result<(f64, Vec<f32>)> {
+        let inv_n = 1.0 / (rows.len() * self.cfg.n_workers) as f64;
+        Ok(self.eval_rows(theta, rows, inv_n))
+    }
+
+    fn shard_len(&self) -> usize {
+        self.shard.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testutil::{check_grad, tiny_shard};
+
+    fn setup() -> (MlpWorker, Vec<f32>) {
+        let shard = tiny_shard(21, 50, 10, 3);
+        let cfg = LossCfg { n_global: 200, l2: 0.01, n_workers: 4 };
+        let w = MlpWorker::new(shard, 8, cfg);
+        let theta = w.model.init_params(7);
+        (w, theta)
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let (mut w, theta) = setup();
+        check_grad(|t| w.full(t).unwrap(), &theta, 5e-3, 11);
+    }
+
+    #[test]
+    fn batch_gradient_matches_finite_difference() {
+        let (mut w, theta) = setup();
+        let rows = vec![1, 2, 30, 44];
+        check_grad(|t| w.batch(t, &rows).unwrap(), &theta, 5e-3, 12);
+    }
+
+    #[test]
+    fn param_count_matches_paper_shape() {
+        let m = MlpModel::new(784, 200, 10);
+        assert_eq!(m.param_count(), 784 * 200 + 200 + 200 * 10 + 10);
+    }
+
+    #[test]
+    fn training_reduces_loss() {
+        let tt = crate::data::synth::ijcnn1_like(300, 60, 13);
+        let cfg = LossCfg { n_global: 300, l2: 0.001, n_workers: 1 };
+        let mut w = MlpWorker::new(tt.train.clone(), 16, cfg);
+        let model = MlpModel::new(22, 16, 2);
+        let mut theta = model.init_params(1);
+        let (l0, _) = w.full(&theta).unwrap();
+        for _ in 0..150 {
+            let (_, g) = w.full(&theta).unwrap();
+            tensor::axpy(-0.5, &g, &mut theta);
+        }
+        let (l1, _) = w.full(&theta).unwrap();
+        assert!(l1 < 0.7 * l0, "l0={l0} l1={l1}");
+        assert!(model.accuracy(&theta, &tt.test) > 0.8);
+    }
+
+    #[test]
+    fn init_is_deterministic_and_scaled() {
+        let m = MlpModel::new(100, 20, 5);
+        let a = m.init_params(3);
+        let b = m.init_params(3);
+        assert_eq!(a, b);
+        // biases zero
+        let o1 = 100 * 20;
+        assert!(a[o1..o1 + 20].iter().all(|&v| v == 0.0));
+        // weight scale near He std
+        let std: f64 = (a[..o1].iter().map(|&v| (v as f64).powi(2)).sum::<f64>()
+            / o1 as f64)
+            .sqrt();
+        assert!((std - (2.0f64 / 100.0).sqrt()).abs() < 0.02, "std={std}");
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let t = transpose(&a, 3, 4);
+        let tt = transpose(&t, 4, 3);
+        assert_eq!(a, tt);
+        assert_eq!(t[0 * 3 + 1], a[1 * 4 + 0]);
+    }
+}

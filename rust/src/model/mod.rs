@@ -1,0 +1,107 @@
+//! Models and gradient backends.
+//!
+//! The coordinator sees every model through [`WorkerGrad`]: a per-worker
+//! object owning that worker's data shard and evaluating `(loss_m, grad_m)`
+//! at a given flat parameter vector, over the full shard or a minibatch.
+//! Loss normalization follows DESIGN.md §2: summing the per-worker values
+//! over the M workers yields the paper's global `f(theta)` / `grad f`.
+//!
+//! Two implementations:
+//! * native rust mirrors ([`logreg`], [`mlp`]) — fast, used by the large
+//!   experiment sweeps and as the test oracle;
+//! * the PJRT path ([`crate::runtime::PjrtWorkerGrad`]) executing the AOT
+//!   HLO artifacts — the production configuration, numerically
+//!   cross-checked against the native mirrors in `rust/tests/`.
+
+pub mod logreg;
+pub mod mlp;
+
+use crate::data::Dataset;
+use crate::Result;
+
+/// Per-worker gradient oracle over a flat parameter vector.
+///
+/// Not `Send`-bound: PJRT-backed workers hold `Rc<Runtime>` (raw C++
+/// handles).  The coordinator's parallel scatter path takes an extra
+/// `+ Send` bound and is only available to the native backends.
+pub trait WorkerGrad {
+    /// Flat parameter dimension p.
+    fn dim(&self) -> usize;
+
+    /// Full-shard loss and gradient (deterministic algorithms).
+    fn full(&mut self, theta: &[f32]) -> Result<(f64, Vec<f32>)>;
+
+    /// Minibatch loss and gradient over `rows` (indices into the shard).
+    fn batch(&mut self, theta: &[f32], rows: &[usize]) -> Result<(f64, Vec<f32>)>;
+
+    /// Number of rows in this worker's shard.
+    fn shard_len(&self) -> usize;
+}
+
+/// Model-level operations that are not per-worker: initialization and
+/// test-set evaluation.
+pub trait ModelOps {
+    fn dim(&self) -> usize;
+
+    /// Deterministic initial parameter vector.
+    fn init_params(&self, seed: u64) -> Vec<f32>;
+
+    /// Mean test accuracy of `theta` on `test`.
+    fn accuracy(&self, theta: &[f32], test: &Dataset) -> f64;
+}
+
+/// Shared hyperparameters every backend needs to agree on.
+#[derive(Clone, Copy, Debug)]
+pub struct LossCfg {
+    /// total train sample count N across all workers
+    pub n_global: usize,
+    /// ridge coefficient λ
+    pub l2: f64,
+    /// worker count M (regularizer is split λ/M per worker)
+    pub n_workers: usize,
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use crate::data::Dataset;
+    use crate::util::rng::Rng;
+
+    /// Small random classification shard for backend tests.
+    pub fn tiny_shard(seed: u64, n: usize, f: usize, c: usize) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let x = (0..n * f).map(|_| rng.normal() as f32).collect();
+        let y = (0..n).map(|_| rng.below(c as u64) as u32).collect();
+        Dataset { n, features: f, classes: c, x, y }
+    }
+
+    /// Directional finite-difference check of a (loss, grad) oracle.
+    pub fn check_grad<F>(mut eval: F, theta: &[f32], tol: f64, seed: u64)
+    where
+        F: FnMut(&[f32]) -> (f64, Vec<f32>),
+    {
+        let (_, grad) = eval(theta);
+        let mut rng = Rng::new(seed);
+        let dir: Vec<f64> = (0..theta.len()).map(|_| rng.normal()).collect();
+        let nrm = dir.iter().map(|d| d * d).sum::<f64>().sqrt();
+        let eps = 1e-3;
+        let mut tp = theta.to_vec();
+        let mut tm = theta.to_vec();
+        for i in 0..theta.len() {
+            let d = (dir[i] / nrm) as f32;
+            tp[i] += eps as f32 * d;
+            tm[i] -= eps as f32 * d;
+        }
+        let (lp, _) = eval(&tp);
+        let (lm, _) = eval(&tm);
+        let fd = (lp - lm) / (2.0 * eps);
+        let an: f64 = grad
+            .iter()
+            .zip(&dir)
+            .map(|(&g, &d)| g as f64 * d / nrm)
+            .sum();
+        assert!(
+            (fd - an).abs() <= tol * an.abs().max(1e-3),
+            "finite-diff {fd} vs analytic {an}"
+        );
+    }
+}

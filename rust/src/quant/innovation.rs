@@ -1,0 +1,250 @@
+//! The paper's gradient-innovation quantizer (eqs. (5)-(6)).
+//!
+//! Worker side: quantize `g - q_prev` on a uniform `b`-bit grid of radius
+//! `R = ||g - q_prev||_inf` centered at the previous quantized gradient.
+//! Server side: reconstruct `q_new = q_prev + 2 tau R c - R` from the wire
+//! message `(R, codes)`.
+//!
+//! The arithmetic mirrors the Pallas kernel operation-for-operation in f32
+//! so worker (rust), server (rust) and the AOT artifact (XLA) agree on the
+//! exact same reconstruction — the state-consistency the algorithm's
+//! correctness rests on (server's `q_prev` must equal worker's `q_prev`
+//! forever, with no drift).
+
+use crate::util::bitio::{pack_codes, unpack_codes, BitReader, BitWriter};
+use crate::{Error, Result};
+
+/// Worker-side quantization output plus the wire form.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantizedInnovation {
+    /// grid radius R_m^k (l-infinity norm of the innovation)
+    pub radius: f32,
+    /// per-coordinate integer codes in [0, 2^b - 1]
+    pub codes: Vec<u32>,
+    /// quantization bit-width b
+    pub bits: u32,
+}
+
+impl QuantizedInnovation {
+    /// Exact wire cost (paper: 32 + b·p).
+    pub fn wire_bits(&self) -> usize {
+        32 + self.bits as usize * self.codes.len()
+    }
+
+    /// Serialize to the physical wire format: `[f32 R][b-bit codes × p]`.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = BitWriter::with_capacity_bits(self.wire_bits());
+        w.write_f32(self.radius);
+        pack_codes(&self.codes, self.bits, &mut w);
+        debug_assert_eq!(w.len_bits(), self.wire_bits());
+        w.into_bytes()
+    }
+
+    /// Deserialize from the wire (needs `bits` and `p` from the session).
+    pub fn decode(buf: &[u8], bits: u32, p: usize) -> Result<Self> {
+        let mut r = BitReader::new(buf);
+        let radius = r
+            .read_f32()
+            .ok_or_else(|| Error::Codec("truncated innovation header".into()))?;
+        let codes = unpack_codes(&mut r, bits, p)
+            .ok_or_else(|| Error::Codec("truncated innovation codes".into()))?;
+        Ok(Self { radius, codes, bits })
+    }
+}
+
+/// Stateless quantizer for a fixed bit-width.
+#[derive(Clone, Copy, Debug)]
+pub struct InnovationQuantizer {
+    pub bits: u32,
+}
+
+impl InnovationQuantizer {
+    pub fn new(bits: u32) -> Self {
+        assert!((1..=16).contains(&bits), "bits out of range");
+        Self { bits }
+    }
+
+    #[inline]
+    pub fn num_levels(&self) -> u32 {
+        (1u32 << self.bits) - 1
+    }
+
+    /// tau = 1 / (2^b - 1), the paper's granularity constant.
+    #[inline]
+    pub fn tau(&self) -> f64 {
+        1.0 / self.num_levels() as f64
+    }
+
+    /// Quantize the innovation `g - q_prev`.
+    ///
+    /// Returns the wire message and writes the reconstructed quantized
+    /// gradient `q_new` (what the server will hold) into `q_new_out`.
+    /// `q_new_out` may alias a scratch buffer; length must equal `g.len()`.
+    pub fn quantize_into(
+        &self,
+        g: &[f32],
+        q_prev: &[f32],
+        q_new_out: &mut [f32],
+    ) -> QuantizedInnovation {
+        assert_eq!(g.len(), q_prev.len());
+        assert_eq!(g.len(), q_new_out.len());
+        let num_levels = self.num_levels() as f32;
+        let radius = crate::util::tensor::norm_inf_diff(g, q_prev);
+        // mirror the Pallas kernel exactly (f32 throughout):
+        let two_tau_r = 2.0f32 * radius / num_levels;
+        let safe = two_tau_r.max(1e-30f32);
+        let inv_safe = 1.0f32 / safe;
+        // §Perf: branch-free indexed loop (no push, no .floor() call) so
+        // the compiler vectorizes the projection; `as i32` truncation
+        // equals floor here because the clamped operand is nonnegative
+        let n = g.len();
+        let mut codes = vec![0u32; n];
+        for i in 0..n {
+            let t = (g[i] - q_prev[i] + radius) * inv_safe + 0.5;
+            let t = t.clamp(0.0, num_levels);
+            let c = t as i32 as f32; // trunc == floor for t >= 0
+            codes[i] = c as u32;
+            q_new_out[i] = q_prev[i] + two_tau_r * c - radius;
+        }
+        QuantizedInnovation { radius, codes, bits: self.bits }
+    }
+
+    /// Allocating convenience form of [`Self::quantize_into`].
+    pub fn quantize(&self, g: &[f32], q_prev: &[f32]) -> (QuantizedInnovation, Vec<f32>) {
+        let mut q_new = vec![0.0f32; g.len()];
+        let qi = self.quantize_into(g, q_prev, &mut q_new);
+        (qi, q_new)
+    }
+
+    /// Server-side reconstruction: `q_new = q_prev + 2 tau R c - R`.
+    /// Must be the exact same f32 expression as the worker side.
+    pub fn dequantize_into(
+        &self,
+        qi: &QuantizedInnovation,
+        q_prev: &[f32],
+        q_new_out: &mut [f32],
+    ) {
+        assert_eq!(qi.codes.len(), q_prev.len());
+        assert_eq!(qi.bits, self.bits);
+        let two_tau_r = 2.0f32 * qi.radius / self.num_levels() as f32;
+        for i in 0..q_prev.len() {
+            q_new_out[i] = q_prev[i] + two_tau_r * qi.codes[i] as f32 - qi.radius;
+        }
+    }
+
+    pub fn dequantize(&self, qi: &QuantizedInnovation, q_prev: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; q_prev.len()];
+        self.dequantize_into(qi, q_prev, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::tensor::norm_inf_diff;
+
+    fn pair(seed: u64, p: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let g = (0..p).map(|_| rng.normal() as f32).collect();
+        let q = (0..p).map(|_| rng.normal() as f32).collect();
+        (g, q)
+    }
+
+    #[test]
+    fn worker_and_server_reconstructions_identical() {
+        for bits in [1, 3, 8] {
+            let q = InnovationQuantizer::new(bits);
+            let (g, qp) = pair(bits as u64, 503);
+            let (qi, q_new_worker) = q.quantize(&g, &qp);
+            let q_new_server = q.dequantize(&qi, &qp);
+            assert_eq!(q_new_worker, q_new_server, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn error_bound_half_bin() {
+        for bits in [1u32, 2, 3, 4, 8] {
+            let q = InnovationQuantizer::new(bits);
+            let (g, qp) = pair(100 + bits as u64, 997);
+            let (qi, q_new) = q.quantize(&g, &qp);
+            let tau = q.tau() as f32;
+            let err = norm_inf_diff(&g, &q_new);
+            assert!(
+                err <= tau * qi.radius * (1.0 + 1e-5),
+                "bits={bits} err={err} bound={}",
+                tau * qi.radius
+            );
+        }
+    }
+
+    #[test]
+    fn wire_roundtrip_exact() {
+        let q = InnovationQuantizer::new(3);
+        let (g, qp) = pair(7, 777);
+        let (qi, _) = q.quantize(&g, &qp);
+        let bytes = qi.encode();
+        assert_eq!(bytes.len(), qi.wire_bits().div_ceil(8));
+        let qi2 = QuantizedInnovation::decode(&bytes, 3, 777).unwrap();
+        assert_eq!(qi, qi2);
+    }
+
+    #[test]
+    fn wire_bits_match_paper_formula() {
+        let q = InnovationQuantizer::new(3);
+        let (g, qp) = pair(9, 7840);
+        let (qi, _) = q.quantize(&g, &qp);
+        assert_eq!(qi.wire_bits(), 32 + 3 * 7840);
+    }
+
+    #[test]
+    fn zero_innovation_exact() {
+        let q = InnovationQuantizer::new(4);
+        let (g, _) = pair(3, 100);
+        let (qi, q_new) = q.quantize(&g, &g);
+        assert_eq!(qi.radius, 0.0);
+        assert!(qi.codes.iter().all(|&c| c == 0));
+        assert_eq!(q_new, g);
+    }
+
+    #[test]
+    fn extremes_map_to_grid_ends() {
+        let q = InnovationQuantizer::new(3);
+        let qp = vec![0.0f32; 4];
+        let g = vec![2.0f32, -2.0, 0.5, 0.0];
+        let (qi, q_new) = q.quantize(&g, &qp);
+        assert_eq!(qi.radius, 2.0);
+        assert_eq!(qi.codes[0], 7);
+        assert_eq!(qi.codes[1], 0);
+        assert!((q_new[0] - 2.0).abs() < 1e-6);
+        assert!((q_new[1] + 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn truncated_wire_rejected() {
+        let q = InnovationQuantizer::new(3);
+        let (g, qp) = pair(5, 64);
+        let (qi, _) = q.quantize(&g, &qp);
+        let bytes = qi.encode();
+        assert!(QuantizedInnovation::decode(&bytes[..2], 3, 64).is_err());
+        assert!(QuantizedInnovation::decode(&bytes, 3, 65).is_err());
+    }
+
+    #[test]
+    fn progressive_refinement_contracts() {
+        let q = InnovationQuantizer::new(3);
+        let (g, mut qp) = pair(12, 400);
+        let tau = q.tau() as f32;
+        let mut prev_err = f32::INFINITY;
+        for _ in 0..4 {
+            let (_, q_new) = q.quantize(&g, &qp);
+            let err = norm_inf_diff(&g, &q_new);
+            if prev_err.is_finite() && prev_err > 1e-5 {
+                assert!(err <= prev_err * tau * 1.001 + 1e-6);
+            }
+            prev_err = err;
+            qp = q_new;
+        }
+    }
+}

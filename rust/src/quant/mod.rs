@@ -1,0 +1,19 @@
+//! Gradient-compression codecs.
+//!
+//! * [`innovation`] — the paper's b-bit innovation quantizer (eqs. (5)-(6)),
+//!   bit-exact with the L1 Pallas kernel (`python/compile/kernels/quantize.py`,
+//!   cross-checked in `rust/tests/runtime_artifacts.rs`).
+//! * [`qsgd`] — QSGD stochastic quantization (Alistarh et al. 2017), the
+//!   Table 3 baseline.
+//! * [`sparsify`] — unbiased magnitude-proportional sparsification
+//!   (Wangni et al. 2018), the SSGD baseline.
+//!
+//! All codecs produce *physical* wire buffers through [`crate::util::bitio`]
+//! so the communication accounting in [`crate::comm`] counts real bits.
+
+pub mod innovation;
+pub mod qsgd;
+pub mod signef;
+pub mod sparsify;
+
+pub use innovation::{InnovationQuantizer, QuantizedInnovation};

@@ -1,0 +1,144 @@
+//! 1-bit sign compression with error feedback (EF-signSGD, Seide et al.
+//! 2014 / Karimireddy et al. 2019) — the error-feedback baseline the
+//! paper's §2.3 comparison discusses: EF schemes compress every upload
+//! but never skip one; LAQ skips uploads but sends all coordinates.
+//!
+//! Worker state: error memory `e_m`.  Each round it compresses
+//! `c = g + e` to `sign(c) · ||c||_1 / p` and keeps the residual:
+//! `e ← c − decompress(compressed)`.  Wire: 32 + p bits.
+
+use crate::util::bitio::{BitReader, BitWriter};
+use crate::{Error, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct SignMessage {
+    /// mean absolute value ||c||_1 / p — the reconstruction magnitude
+    pub scale: f32,
+    /// per-coordinate sign bits (true = negative)
+    pub signs: Vec<bool>,
+}
+
+impl SignMessage {
+    pub fn wire_bits(&self) -> usize {
+        32 + self.signs.len()
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = BitWriter::with_capacity_bits(self.wire_bits());
+        w.write_f32(self.scale);
+        for &s in &self.signs {
+            w.write(s as u64, 1);
+        }
+        w.into_bytes()
+    }
+
+    pub fn decode(buf: &[u8], p: usize) -> Result<Self> {
+        let mut r = BitReader::new(buf);
+        let scale = r
+            .read_f32()
+            .ok_or_else(|| Error::Codec("truncated sign header".into()))?;
+        let mut signs = Vec::with_capacity(p);
+        for _ in 0..p {
+            signs.push(r.read(1).ok_or_else(|| Error::Codec("truncated signs".into()))? != 0);
+        }
+        Ok(Self { scale, signs })
+    }
+
+    pub fn dequantize(&self) -> Vec<f32> {
+        self.signs
+            .iter()
+            .map(|&s| if s { -self.scale } else { self.scale })
+            .collect()
+    }
+}
+
+/// Stateful worker-side compressor holding the error memory.
+#[derive(Clone, Debug)]
+pub struct SignEfCompressor {
+    pub error: Vec<f32>,
+}
+
+impl SignEfCompressor {
+    pub fn new(dim: usize) -> Self {
+        Self { error: vec![0.0; dim] }
+    }
+
+    /// Compress `g + e`, update the error memory, return the message.
+    pub fn compress(&mut self, g: &[f32]) -> SignMessage {
+        assert_eq!(g.len(), self.error.len());
+        let p = g.len();
+        let mut l1 = 0.0f64;
+        for i in 0..p {
+            self.error[i] += g[i]; // error now holds c = g + e
+            l1 += self.error[i].abs() as f64;
+        }
+        let scale = (l1 / p as f64) as f32;
+        let mut signs = Vec::with_capacity(p);
+        for e in self.error.iter_mut() {
+            let neg = *e < 0.0;
+            signs.push(neg);
+            // residual: c − scale·sign(c)
+            *e -= if neg { -scale } else { scale };
+        }
+        SignMessage { scale, signs }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn grad(seed: u64, p: usize) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..p).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn wire_roundtrip() {
+        let mut c = SignEfCompressor::new(333);
+        let m = c.compress(&grad(1, 333));
+        let m2 = SignMessage::decode(&m.encode(), 333).unwrap();
+        assert_eq!(m, m2);
+        assert_eq!(m.wire_bits(), 32 + 333);
+    }
+
+    #[test]
+    fn error_feedback_preserves_mass() {
+        // invariant: after compress, error = c − decompressed, so
+        // decompressed + error == g + old_error exactly (fp tolerance)
+        let mut c = SignEfCompressor::new(64);
+        let g = grad(2, 64);
+        let m = c.compress(&g);
+        let d = m.dequantize();
+        for i in 0..64 {
+            assert!((d[i] + c.error[i] - g[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn accumulated_error_eventually_transmitted() {
+        // a coordinate too small to survive sign·scale rounding still
+        // influences later messages through the error memory
+        let mut c = SignEfCompressor::new(4);
+        let g = vec![0.01f32, -2.0, 2.0, 2.0];
+        // after enough rounds, the mean reconstruction of coord 0 must be
+        // positive (its tiny positive mass accumulates)
+        let mut sum0 = 0.0f64;
+        for _ in 0..200 {
+            let d = c.compress(&g).dequantize();
+            sum0 += d[0] as f64;
+        }
+        assert!(sum0 > 0.0, "error feedback lost coordinate mass: {sum0}");
+    }
+
+    #[test]
+    fn zero_gradient_zero_scale_after_drain() {
+        let mut c = SignEfCompressor::new(8);
+        for _ in 0..50 {
+            c.compress(&[0.0; 8]);
+        }
+        let m = c.compress(&[0.0; 8]);
+        assert!(m.scale.abs() < 1e-6);
+    }
+}

@@ -1,0 +1,179 @@
+//! Unbiased gradient sparsification (Wangni et al., NeurIPS 2018) — the
+//! SSGD baseline of Table 3 / Figures 7-8.
+//!
+//! Coordinate i is kept with probability `p_i = min(1, kappa * p * |g_i| /
+//! sum_j |g_j|)` (kappa = target keep-fraction) and transmitted as
+//! `g_i / p_i`, so the sparsified gradient is unbiased.  Wire format:
+//! `[u32 nnz][(u32 index, f32 value) × nnz]` = 32 + 64·nnz bits.
+
+use crate::util::bitio::{BitReader, BitWriter};
+use crate::util::rng::Rng;
+use crate::{Error, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseMessage {
+    /// original dense dimension
+    pub dim: usize,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl SparseMessage {
+    pub fn wire_bits(&self) -> usize {
+        32 + 64 * self.indices.len()
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = BitWriter::with_capacity_bits(self.wire_bits());
+        w.write_u32(self.indices.len() as u32);
+        for (&i, &v) in self.indices.iter().zip(&self.values) {
+            w.write_u32(i);
+            w.write_f32(v);
+        }
+        w.into_bytes()
+    }
+
+    pub fn decode(buf: &[u8], dim: usize) -> Result<Self> {
+        let mut r = BitReader::new(buf);
+        let nnz = r
+            .read_u32()
+            .ok_or_else(|| Error::Codec("truncated sparse header".into()))? as usize;
+        let mut indices = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
+        for _ in 0..nnz {
+            let i = r
+                .read_u32()
+                .ok_or_else(|| Error::Codec("truncated sparse index".into()))?;
+            if i as usize >= dim {
+                return Err(Error::Codec(format!("sparse index {i} >= dim {dim}")));
+            }
+            indices.push(i);
+            values.push(
+                r.read_f32()
+                    .ok_or_else(|| Error::Codec("truncated sparse value".into()))?,
+            );
+        }
+        Ok(Self { dim, indices, values })
+    }
+
+    pub fn densify(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.dim];
+        for (&i, &v) in self.indices.iter().zip(&self.values) {
+            out[i as usize] = v;
+        }
+        out
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Sparsifier {
+    /// target expected keep fraction kappa in (0, 1]
+    pub keep_frac: f64,
+}
+
+impl Sparsifier {
+    pub fn new(keep_frac: f64) -> Self {
+        assert!(keep_frac > 0.0 && keep_frac <= 1.0);
+        Self { keep_frac }
+    }
+
+    pub fn sparsify(&self, g: &[f32], rng: &mut Rng) -> SparseMessage {
+        let p = g.len();
+        let l1: f64 = g.iter().map(|&x| x.abs() as f64).sum();
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        if l1 > 0.0 {
+            let budget = self.keep_frac * p as f64;
+            for (i, &x) in g.iter().enumerate() {
+                let pi = (budget * x.abs() as f64 / l1).min(1.0);
+                if pi > 0.0 && rng.uniform() < pi {
+                    indices.push(i as u32);
+                    values.push((x as f64 / pi) as f32);
+                }
+            }
+        }
+        SparseMessage { dim: p, indices, values }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grad(seed: u64, p: usize) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..p).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn wire_roundtrip() {
+        let s = Sparsifier::new(0.25);
+        let g = grad(1, 400);
+        let mut rng = Rng::new(2);
+        let m = s.sparsify(&g, &mut rng);
+        let bytes = m.encode();
+        let m2 = SparseMessage::decode(&bytes, 400).unwrap();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn unbiased_in_expectation() {
+        let s = Sparsifier::new(0.3);
+        let g = grad(3, 24);
+        let mut rng = Rng::new(4);
+        let trials = 4000;
+        let mut mean = vec![0.0f64; g.len()];
+        for _ in 0..trials {
+            let d = s.sparsify(&g, &mut rng).densify();
+            for (m, v) in mean.iter_mut().zip(&d) {
+                *m += *v as f64;
+            }
+        }
+        for (m, &gi) in mean.iter().zip(&g) {
+            let est = m / trials as f64;
+            assert!((est - gi as f64).abs() < 0.25, "est={est} gi={gi}");
+        }
+    }
+
+    #[test]
+    fn keep_fraction_roughly_respected() {
+        let s = Sparsifier::new(0.25);
+        let g = grad(5, 4000);
+        let mut rng = Rng::new(6);
+        let m = s.sparsify(&g, &mut rng);
+        let frac = m.indices.len() as f64 / 4000.0;
+        assert!(frac > 0.1 && frac < 0.45, "frac={frac}");
+    }
+
+    #[test]
+    fn zero_gradient_sends_nothing() {
+        let s = Sparsifier::new(0.5);
+        let mut rng = Rng::new(7);
+        let m = s.sparsify(&[0.0; 64], &mut rng);
+        assert!(m.indices.is_empty());
+        assert_eq!(m.wire_bits(), 32);
+    }
+
+    #[test]
+    fn decode_rejects_out_of_range_index() {
+        let m = SparseMessage { dim: 4, indices: vec![9], values: vec![1.0] };
+        let bytes = m.encode();
+        assert!(SparseMessage::decode(&bytes, 4).is_err());
+    }
+
+    #[test]
+    fn large_coordinates_always_kept() {
+        // a coordinate holding most of the l1 mass has p_i = 1
+        let mut g = vec![0.001f32; 100];
+        g[42] = 100.0;
+        let s = Sparsifier::new(0.1);
+        for seed in 0..20 {
+            let mut rng = Rng::new(seed);
+            let m = s.sparsify(&g, &mut rng);
+            assert!(m.indices.contains(&42), "seed={seed}");
+            // and it is transmitted unscaled (p_i clamped at 1)
+            let d = m.densify();
+            assert!((d[42] - 100.0).abs() < 1e-3);
+        }
+    }
+}

@@ -1,0 +1,366 @@
+//! PJRT runtime: load + execute the AOT HLO artifacts.
+//!
+//! `make artifacts` (python, build-time only) lowers the L2 jax graphs —
+//! which call the L1 Pallas kernels — to HLO **text** and writes
+//! `artifacts/manifest.json` describing every artifact's I/O signature.
+//! This module is the request-path half: parse the manifest, compile each
+//! HLO module once on the PJRT CPU client (`xla` crate 0.1.6), and execute
+//! with zero python anywhere in the process.
+//!
+//! Interchange is HLO text, not serialized protos: jax ≥ 0.5 emits 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md §2).
+
+pub mod worker;
+
+pub use worker::PjrtGradWorker;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Element type crossing the PJRT boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => Err(Error::Runtime(format!("unsupported dtype '{other}'"))),
+        }
+    }
+}
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSig {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSig {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSig> {
+        let shape = j
+            .get("shape")
+            .as_arr()
+            .ok_or_else(|| Error::Runtime("signature missing shape".into()))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| Error::Runtime("bad dim".into())))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = DType::parse(
+            j.get("dtype")
+                .as_str()
+                .ok_or_else(|| Error::Runtime("signature missing dtype".into()))?,
+        )?;
+        Ok(TensorSig { shape, dtype })
+    }
+}
+
+/// One manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactSig {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+    pub meta: Json,
+}
+
+/// Host-side tensor argument / result.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Value {
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Value::F32(v) => Ok(v),
+            _ => Err(Error::Runtime("expected f32 value".into())),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Value::I32(v) => Ok(v),
+            _ => Err(Error::Runtime("expected i32 value".into())),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        if v.len() != 1 {
+            return Err(Error::Runtime(format!("expected scalar, got {} elems", v.len())));
+        }
+        Ok(v[0])
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            Value::F32(v) => v.len(),
+            Value::I32(v) => v.len(),
+        }
+    }
+
+    fn dtype(&self) -> DType {
+        match self {
+            Value::F32(_) => DType::F32,
+            Value::I32(_) => DType::I32,
+        }
+    }
+
+    fn to_literal(&self, sig: &TensorSig) -> Result<xla::Literal> {
+        let dims: Vec<i64> = sig.shape.iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Value::F32(v) => xla::Literal::vec1(v),
+            Value::I32(v) => xla::Literal::vec1(v),
+        };
+        if sig.shape.len() == 1 && sig.shape[0] == self.len() {
+            return Ok(lit);
+        }
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+/// The PJRT session: client + manifest + compile-on-demand executable cache.
+///
+/// Not `Send`: PJRT handles are raw pointers.  Workers using the runtime
+/// share it through `Rc<Runtime>` on one thread (the coordinator loop is
+/// sequential per iteration by design — determinism first; see DESIGN.md).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    artifacts: HashMap<String, ArtifactSig>,
+    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open `artifacts/` (reads `manifest.json`, creates the CPU client).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Rc<Runtime>> {
+        let dir = dir.as_ref().to_path_buf();
+        let man_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&man_path).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                man_path.display()
+            ))
+        })?;
+        let doc = Json::parse(&text)?;
+        let mut artifacts = HashMap::new();
+        for a in doc
+            .get("artifacts")
+            .as_arr()
+            .ok_or_else(|| Error::Runtime("manifest missing 'artifacts'".into()))?
+        {
+            let name = a
+                .get("name")
+                .as_str()
+                .ok_or_else(|| Error::Runtime("artifact missing name".into()))?
+                .to_string();
+            let sig = ArtifactSig {
+                name: name.clone(),
+                file: a
+                    .get("file")
+                    .as_str()
+                    .ok_or_else(|| Error::Runtime("artifact missing file".into()))?
+                    .to_string(),
+                inputs: a
+                    .get("inputs")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(TensorSig::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+                outputs: a
+                    .get("outputs")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(TensorSig::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+                meta: a.get("meta").clone(),
+            };
+            artifacts.insert(name, sig);
+        }
+        let client = xla::PjRtClient::cpu()?;
+        log::info!(
+            "runtime: PJRT platform={} devices={} artifacts={}",
+            client.platform_name(),
+            client.device_count(),
+            artifacts.len()
+        );
+        Ok(Rc::new(Runtime {
+            client,
+            dir,
+            artifacts,
+            exes: RefCell::new(HashMap::new()),
+        }))
+    }
+
+    pub fn signature(&self, name: &str) -> Result<&ArtifactSig> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("unknown artifact '{name}'")))
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.artifacts.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Compile (or fetch cached) executable for `name`.
+    fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(name) {
+            return Ok(Rc::clone(e));
+        }
+        let sig = self.signature(name)?;
+        let path = self.dir.join(&sig.file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Runtime("non-utf8 artifact path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        log::info!("runtime: compiled '{name}' in {:.1?}", t0.elapsed());
+        self.exes.borrow_mut().insert(name.to_string(), Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Pre-compile a set of artifacts (startup cost off the hot path).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute artifact `name` with `args`, returning one [`Value`] per
+    /// manifest output.  Shapes and dtypes are validated against the
+    /// manifest before touching PJRT.
+    pub fn call(&self, name: &str, args: &[Value]) -> Result<Vec<Value>> {
+        let sig = self.signature(name)?.clone();
+        if args.len() != sig.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "'{name}' expects {} inputs, got {}",
+                sig.inputs.len(),
+                args.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (i, (a, s)) in args.iter().zip(&sig.inputs).enumerate() {
+            if a.len() != s.elements() || a.dtype() != s.dtype {
+                return Err(Error::Runtime(format!(
+                    "'{name}' input {i}: expected {:?}{:?} ({} elems), got {:?} ({} elems)",
+                    s.dtype,
+                    s.shape,
+                    s.elements(),
+                    a.dtype(),
+                    a.len()
+                )));
+            }
+            literals.push(a.to_literal(s)?);
+        }
+        let exe = self.executable(name)?;
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let out = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple literal
+        let parts = out.to_tuple()?;
+        if parts.len() != sig.outputs.len() {
+            return Err(Error::Runtime(format!(
+                "'{name}' returned {} outputs, manifest says {}",
+                parts.len(),
+                sig.outputs.len()
+            )));
+        }
+        parts
+            .into_iter()
+            .zip(&sig.outputs)
+            .map(|(lit, s)| {
+                let v = match s.dtype {
+                    DType::F32 => Value::F32(lit.to_vec::<f32>()?),
+                    DType::I32 => Value::I32(lit.to_vec::<i32>()?),
+                };
+                if v.len() != s.elements() {
+                    return Err(Error::Runtime(format!(
+                        "'{name}' output length {} != manifest {}",
+                        v.len(),
+                        s.elements()
+                    )));
+                }
+                Ok(v)
+            })
+            .collect()
+    }
+
+    /// Convenience: innovation quantization through the `quantize_*`
+    /// artifact — used by tests to prove the rust codec and the L1 Pallas
+    /// kernel agree bit-for-bit on the artifact path.
+    pub fn quantize_via_artifact(
+        &self,
+        name: &str,
+        g: &[f32],
+        q_prev: &[f32],
+    ) -> Result<(f32, Vec<u32>, Vec<f32>)> {
+        let out = self.call(
+            name,
+            &[Value::F32(g.to_vec()), Value::F32(q_prev.to_vec())],
+        )?;
+        let r = out[0].scalar_f32()?;
+        let codes = out[1].as_f32()?.iter().map(|&c| c as u32).collect();
+        let deq = out[2].as_f32()?.to_vec();
+        Ok((r, codes, deq))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full runtime tests (needing built artifacts) live in
+    // rust/tests/runtime_artifacts.rs; here we test the manifest parsing
+    // and validation logic without touching PJRT.
+
+    #[test]
+    fn tensor_sig_from_json() {
+        let j = Json::parse(r#"{"shape": [3, 4], "dtype": "f32"}"#).unwrap();
+        let s = TensorSig::from_json(&j).unwrap();
+        assert_eq!(s.shape, vec![3, 4]);
+        assert_eq!(s.dtype, DType::F32);
+        assert_eq!(s.elements(), 12);
+        let bad = Json::parse(r#"{"shape": [3], "dtype": "f64"}"#).unwrap();
+        assert!(TensorSig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn value_accessors() {
+        let v = Value::F32(vec![1.5]);
+        assert_eq!(v.scalar_f32().unwrap(), 1.5);
+        assert!(v.as_i32().is_err());
+        let w = Value::I32(vec![1, 2]);
+        assert_eq!(w.as_i32().unwrap(), &[1, 2]);
+        assert!(w.scalar_f32().is_err());
+        assert_eq!(w.len(), 2);
+        assert_eq!(w.dtype(), DType::I32);
+    }
+
+    #[test]
+    fn scalar_requires_len_1() {
+        assert!(Value::F32(vec![1.0, 2.0]).scalar_f32().is_err());
+    }
+}

@@ -1,0 +1,204 @@
+//! [`WorkerGrad`] implementation over the PJRT runtime: each worker's
+//! gradient evaluation is one `call()` into the AOT-compiled `*_grad`
+//! artifact (L2 jax graph containing the L1 Pallas kernels).
+
+use std::rc::Rc;
+
+use super::{Runtime, Value};
+use crate::data::Dataset;
+use crate::model::WorkerGrad;
+use crate::{Error, Result};
+
+/// PJRT-backed per-worker gradient oracle for the supervised models
+/// (logreg / mlp): artifacts with signature
+/// `(theta f32[p], x f32[n,f], y i32[n]) -> (loss f32[], grad f32[p])`.
+pub struct PjrtGradWorker {
+    rt: Rc<Runtime>,
+    /// artifact evaluating the full shard (e.g. "logreg_grad")
+    art_full: String,
+    /// artifact evaluating one minibatch (e.g. "logreg_grad_batch")
+    art_batch: Option<String>,
+    shard: Dataset,
+    dim: usize,
+    batch_rows: usize,
+    /// cached flat shard tensors (built once; the shard never changes)
+    x_value: Value,
+    y_value: Value,
+}
+
+impl PjrtGradWorker {
+    pub fn new(
+        rt: Rc<Runtime>,
+        art_full: &str,
+        art_batch: Option<&str>,
+        shard: Dataset,
+    ) -> Result<Self> {
+        let sig = rt.signature(art_full)?;
+        if sig.inputs.len() != 3 || sig.outputs.len() != 2 {
+            return Err(Error::Runtime(format!(
+                "'{art_full}' is not a grad artifact (needs 3 inputs / 2 outputs)"
+            )));
+        }
+        let dim = sig.inputs[0].elements();
+        if sig.outputs[1].elements() != dim {
+            return Err(Error::Runtime("grad output dim != theta dim".into()));
+        }
+        let n_exp = sig.inputs[2].elements();
+        if shard.n != n_exp {
+            return Err(Error::Runtime(format!(
+                "'{art_full}' expects shard of {n_exp} rows, got {}",
+                shard.n
+            )));
+        }
+        let batch_rows = match art_batch {
+            Some(b) => rt.signature(b)?.inputs[2].elements(),
+            None => 0,
+        };
+        let x_value = Value::F32(shard.x.clone());
+        let y_value = Value::I32(shard.y.iter().map(|&v| v as i32).collect());
+        Ok(Self {
+            rt,
+            art_full: art_full.to_string(),
+            art_batch: art_batch.map(|s| s.to_string()),
+            shard,
+            dim,
+            batch_rows,
+            x_value,
+            y_value,
+        })
+    }
+
+    fn unpack(&self, out: Vec<Value>) -> Result<(f64, Vec<f32>)> {
+        let loss = out[0].scalar_f32()? as f64;
+        let grad = out[1].as_f32()?.to_vec();
+        Ok((loss, grad))
+    }
+}
+
+impl WorkerGrad for PjrtGradWorker {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn full(&mut self, theta: &[f32]) -> Result<(f64, Vec<f32>)> {
+        let out = self.rt.call(
+            &self.art_full,
+            &[
+                Value::F32(theta.to_vec()),
+                self.x_value.clone(),
+                self.y_value.clone(),
+            ],
+        )?;
+        self.unpack(out)
+    }
+
+    fn batch(&mut self, theta: &[f32], rows: &[usize]) -> Result<(f64, Vec<f32>)> {
+        let art = self.art_batch.as_ref().ok_or_else(|| {
+            Error::Runtime(format!("'{}' has no batch artifact", self.art_full))
+        })?;
+        if rows.len() != self.batch_rows {
+            return Err(Error::Runtime(format!(
+                "batch artifact expects {} rows, got {}",
+                self.batch_rows,
+                rows.len()
+            )));
+        }
+        let f = self.shard.features;
+        let mut xb = Vec::with_capacity(rows.len() * f);
+        let mut yb = Vec::with_capacity(rows.len());
+        for &i in rows {
+            xb.extend_from_slice(self.shard.row(i));
+            yb.push(self.shard.y[i] as i32);
+        }
+        let out = self.rt.call(
+            art,
+            &[Value::F32(theta.to_vec()), Value::F32(xb), Value::I32(yb)],
+        )?;
+        self.unpack(out)
+    }
+
+    fn shard_len(&self) -> usize {
+        self.shard.n
+    }
+}
+
+/// PJRT-backed worker for the transformer LM: artifact signature
+/// `(flat f32[p], tokens i32[b,t]) -> (loss, grad)`.  The "shard" is a
+/// pool of token sequences; `full` evaluates a fixed deterministic batch,
+/// `batch` selects sequences by index.
+pub struct PjrtTfmWorker {
+    rt: Rc<Runtime>,
+    art: String,
+    /// pool of sequences, each `seq_len` long
+    pool: Vec<Vec<i32>>,
+    dim: usize,
+    batch_seqs: usize,
+    seq_len: usize,
+}
+
+impl PjrtTfmWorker {
+    pub fn new(rt: Rc<Runtime>, art: &str, pool: Vec<Vec<i32>>) -> Result<Self> {
+        let sig = rt.signature(art)?;
+        if sig.inputs.len() != 2 || sig.outputs.len() != 2 {
+            return Err(Error::Runtime(format!("'{art}' is not a tfm grad artifact")));
+        }
+        let dim = sig.inputs[0].elements();
+        let (batch_seqs, seq_len) = match sig.inputs[1].shape.as_slice() {
+            [b, t] => (*b, *t),
+            _ => return Err(Error::Runtime("tokens input must be rank 2".into())),
+        };
+        if pool.len() < batch_seqs {
+            return Err(Error::Runtime(format!(
+                "pool of {} sequences < batch {batch_seqs}",
+                pool.len()
+            )));
+        }
+        if let Some(bad) = pool.iter().find(|s| s.len() != seq_len) {
+            return Err(Error::Runtime(format!(
+                "sequence of length {} != seq_len {seq_len}",
+                bad.len()
+            )));
+        }
+        Ok(Self { rt, art: art.to_string(), pool, dim, batch_seqs, seq_len })
+    }
+
+    pub fn batch_seqs(&self) -> usize {
+        self.batch_seqs
+    }
+
+    fn eval(&self, theta: &[f32], seq_idx: &[usize]) -> Result<(f64, Vec<f32>)> {
+        let mut toks = Vec::with_capacity(self.batch_seqs * self.seq_len);
+        for &i in seq_idx {
+            toks.extend_from_slice(&self.pool[i]);
+        }
+        let out = self
+            .rt
+            .call(&self.art, &[Value::F32(theta.to_vec()), Value::I32(toks)])?;
+        Ok((out[0].scalar_f32()? as f64, out[1].as_f32()?.to_vec()))
+    }
+}
+
+impl WorkerGrad for PjrtTfmWorker {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn full(&mut self, theta: &[f32]) -> Result<(f64, Vec<f32>)> {
+        let idx: Vec<usize> = (0..self.batch_seqs).collect();
+        self.eval(theta, &idx)
+    }
+
+    fn batch(&mut self, theta: &[f32], rows: &[usize]) -> Result<(f64, Vec<f32>)> {
+        if rows.len() != self.batch_seqs {
+            return Err(Error::Runtime(format!(
+                "tfm batch needs exactly {} sequences",
+                self.batch_seqs
+            )));
+        }
+        self.eval(theta, rows)
+    }
+
+    fn shard_len(&self) -> usize {
+        self.pool.len()
+    }
+}

@@ -1,0 +1,235 @@
+//! Bit-level I/O — the wire substrate for the quantized-gradient codecs.
+//!
+//! The paper counts communication in *bits* (32 + b·p per LAQ upload); this
+//! module makes those counts real: codes are physically packed into a byte
+//! buffer at `b` bits per field and unpacked on the server side, so the
+//! byte accounting in `comm` reflects actual message sizes rather than an
+//! abstract formula.
+
+/// Append-only bit writer (LSB-first within each byte).
+#[derive(Default, Debug, Clone)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// bits already used in the final byte (0..8)
+    used: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity_bits(bits: usize) -> Self {
+        Self { buf: Vec::with_capacity(bits.div_ceil(8)), used: 0 }
+    }
+
+    /// Write the low `n` bits of `v` (n in 1..=64).
+    pub fn write(&mut self, mut v: u64, mut n: u32) {
+        debug_assert!(n >= 1 && n <= 64);
+        if n < 64 {
+            v &= (1u64 << n) - 1;
+        }
+        while n > 0 {
+            if self.used == 0 {
+                self.buf.push(0);
+            }
+            let free = 8 - self.used;
+            let take = free.min(n);
+            let last = self.buf.last_mut().unwrap();
+            *last |= ((v & ((1u64 << take) - 1)) as u8) << self.used;
+            self.used = (self.used + take) % 8;
+            v >>= take;
+            n -= take;
+        }
+    }
+
+    pub fn write_f32(&mut self, x: f32) {
+        self.write(x.to_bits() as u64, 32);
+    }
+
+    pub fn write_u32(&mut self, x: u32) {
+        self.write(x as u64, 32);
+    }
+
+    /// Total bits written so far.
+    pub fn len_bits(&self) -> usize {
+        if self.used == 0 {
+            self.buf.len() * 8
+        } else {
+            (self.buf.len() - 1) * 8 + self.used as usize
+        }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.buf
+    }
+}
+
+/// Sequential bit reader matching `BitWriter`'s layout.
+#[derive(Debug)]
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    pos_bits: usize,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos_bits: 0 }
+    }
+
+    /// Read `n` bits (1..=64); returns None past end-of-buffer.
+    pub fn read(&mut self, n: u32) -> Option<u64> {
+        debug_assert!(n >= 1 && n <= 64);
+        if self.pos_bits + n as usize > self.buf.len() * 8 {
+            return None;
+        }
+        let mut out = 0u64;
+        let mut got = 0u32;
+        while got < n {
+            let byte = self.buf[self.pos_bits / 8];
+            let off = (self.pos_bits % 8) as u32;
+            let avail = 8 - off;
+            let take = avail.min(n - got);
+            let bits = ((byte >> off) as u64) & ((1u64 << take) - 1);
+            out |= bits << got;
+            got += take;
+            self.pos_bits += take as usize;
+        }
+        Some(out)
+    }
+
+    pub fn read_f32(&mut self) -> Option<f32> {
+        self.read(32).map(|v| f32::from_bits(v as u32))
+    }
+
+    pub fn read_u32(&mut self) -> Option<u32> {
+        self.read(32).map(|v| v as u32)
+    }
+
+    pub fn remaining_bits(&self) -> usize {
+        self.buf.len() * 8 - self.pos_bits
+    }
+}
+
+/// Pack a slice of small integer codes at `bits` bits each (hot path:
+/// specialized fast paths for the common widths used by the paper).
+pub fn pack_codes(codes: &[u32], bits: u32, w: &mut BitWriter) {
+    match bits {
+        8 => {
+            // byte-aligned if the writer is aligned: fall through generic
+            // path otherwise
+            if w.used == 0 {
+                w.buf.extend(codes.iter().map(|&c| c as u8));
+                return;
+            }
+            for &c in codes {
+                w.write(c as u64, 8);
+            }
+        }
+        _ => {
+            for &c in codes {
+                w.write(c as u64, bits);
+            }
+        }
+    }
+}
+
+/// Unpack `n` codes of width `bits`.
+pub fn unpack_codes(r: &mut BitReader, bits: u32, n: usize) -> Option<Vec<u32>> {
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(r.read(bits)? as u32);
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_various_widths() {
+        for bits in 1..=16u32 {
+            let vals: Vec<u64> =
+                (0..100).map(|i| (i * 2654435761u64) & ((1 << bits) - 1)).collect();
+            let mut w = BitWriter::new();
+            for &v in &vals {
+                w.write(v, bits);
+            }
+            assert_eq!(w.len_bits(), 100 * bits as usize);
+            let bytes = w.into_bytes();
+            let mut r = BitReader::new(&bytes);
+            for &v in &vals {
+                assert_eq!(r.read(bits), Some(v));
+            }
+        }
+    }
+
+    #[test]
+    fn f32_roundtrip_exact() {
+        let vals = [0.0f32, -1.5, f32::MAX, f32::MIN_POSITIVE, 3.14159, -0.0];
+        let mut w = BitWriter::new();
+        w.write(0b101, 3); // misalign first
+        for &v in &vals {
+            w.write_f32(v);
+        }
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read(3), Some(0b101));
+        for &v in &vals {
+            assert_eq!(r.read_f32().unwrap().to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn read_past_end_is_none() {
+        let mut w = BitWriter::new();
+        w.write(0x3, 2);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert!(r.read(2).is_some());
+        assert!(r.read(7).is_none()); // only 6 padding bits remain
+    }
+
+    #[test]
+    fn len_bits_accounting() {
+        let mut w = BitWriter::new();
+        assert_eq!(w.len_bits(), 0);
+        w.write(1, 1);
+        assert_eq!(w.len_bits(), 1);
+        w.write(0, 7);
+        assert_eq!(w.len_bits(), 8);
+        w.write(0b1010, 4);
+        assert_eq!(w.len_bits(), 12);
+    }
+
+    #[test]
+    fn pack_unpack_codes_all_paper_widths() {
+        for &bits in &[1u32, 2, 3, 4, 8] {
+            let max = (1u32 << bits) - 1;
+            let codes: Vec<u32> = (0..777).map(|i| (i as u32 * 7 + 3) % (max + 1)).collect();
+            let mut w = BitWriter::new();
+            w.write_f32(1.25); // radius header, like the real codec
+            pack_codes(&codes, bits, &mut w);
+            let bytes = w.into_bytes();
+            let mut r = BitReader::new(&bytes);
+            assert_eq!(r.read_f32(), Some(1.25));
+            let got = unpack_codes(&mut r, bits, 777).unwrap();
+            assert_eq!(got, codes);
+        }
+    }
+
+    #[test]
+    fn pack_codes_byte_aligned_fast_path() {
+        let codes: Vec<u32> = (0..256).map(|i| i as u32).collect();
+        let mut w = BitWriter::new();
+        pack_codes(&codes, 8, &mut w);
+        assert_eq!(w.len_bits(), 256 * 8);
+        let bytes = w.into_bytes();
+        assert_eq!(bytes, (0u8..=255).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,208 @@
+//! Command-line argument parsing substrate (clap unavailable offline).
+//!
+//! Supports the subcommand + `--flag value` / `--flag=value` / boolean
+//! switch style used by the `laq` binary, with typed accessors, defaults,
+//! required-argument errors, and an auto-generated usage string.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_switch: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    switches: Vec<String>,
+    positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum CliError {
+    #[error("unknown flag --{0}")]
+    UnknownFlag(String),
+    #[error("flag --{0} requires a value")]
+    MissingValue(String),
+    #[error("missing required flag --{0}")]
+    MissingRequired(String),
+    #[error("invalid value for --{0}: {1}")]
+    Invalid(String, String),
+}
+
+impl Args {
+    /// Parse `argv` (without the program name) against `spec`.
+    pub fn parse(argv: &[String], spec: &[ArgSpec]) -> Result<Args, CliError> {
+        let mut out = Args::default();
+        let find = |name: &str| spec.iter().find(|s| s.name == name);
+        let mut it = argv.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let s = find(&name).ok_or_else(|| CliError::UnknownFlag(name.clone()))?;
+                if s.is_switch {
+                    out.switches.push(name);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or_else(|| CliError::MissingValue(name.clone()))?,
+                    };
+                    out.values.insert(name, v);
+                }
+            } else {
+                out.positional.push(tok.clone());
+            }
+        }
+        // fill defaults
+        for s in spec {
+            if !s.is_switch && !out.values.contains_key(s.name) {
+                if let Some(d) = s.default {
+                    out.values.insert(s.name.to_string(), d.to_string());
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str, CliError> {
+        self.get(name)
+            .ok_or_else(|| CliError::MissingRequired(name.to_string()))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>, CliError> {
+        self.get(name)
+            .map(|v| {
+                v.parse::<usize>()
+                    .map_err(|e| CliError::Invalid(name.into(), e.to_string()))
+            })
+            .transpose()
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, CliError> {
+        self.get(name)
+            .map(|v| {
+                v.parse::<f64>()
+                    .map_err(|e| CliError::Invalid(name.into(), e.to_string()))
+            })
+            .transpose()
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>, CliError> {
+        self.get(name)
+            .map(|v| {
+                v.parse::<u64>()
+                    .map_err(|e| CliError::Invalid(name.into(), e.to_string()))
+            })
+            .transpose()
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Render a usage block for `spec`.
+pub fn usage(cmd: &str, about: &str, spec: &[ArgSpec]) -> String {
+    let mut s = format!("{about}\n\nUSAGE: laq {cmd} [OPTIONS]\n\nOPTIONS:\n");
+    for a in spec {
+        let head = if a.is_switch {
+            format!("  --{}", a.name)
+        } else {
+            format!("  --{} <v>", a.name)
+        };
+        let def = match a.default {
+            Some(d) if !a.is_switch => format!(" [default: {d}]"),
+            _ => String::new(),
+        };
+        s.push_str(&format!("{head:<26}{}{def}\n", a.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Vec<ArgSpec> {
+        vec![
+            ArgSpec { name: "iters", help: "iterations", default: Some("100"), is_switch: false },
+            ArgSpec { name: "alpha", help: "stepsize", default: None, is_switch: false },
+            ArgSpec { name: "verbose", help: "chatty", default: None, is_switch: true },
+        ]
+    }
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_space_and_equals_forms() {
+        let a = Args::parse(&sv(&["--iters", "5", "--alpha=0.02"]), &spec()).unwrap();
+        assert_eq!(a.get_usize("iters").unwrap(), Some(5));
+        assert_eq!(a.get_f64("alpha").unwrap(), Some(0.02));
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let a = Args::parse(&sv(&[]), &spec()).unwrap();
+        assert_eq!(a.get_usize("iters").unwrap(), Some(100));
+        assert_eq!(a.get("alpha"), None);
+    }
+
+    #[test]
+    fn switches_and_positional() {
+        let a = Args::parse(&sv(&["run", "--verbose", "x"]), &spec()).unwrap();
+        assert!(a.switch("verbose"));
+        assert_eq!(a.positional(), &["run".to_string(), "x".to_string()]);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert_eq!(
+            Args::parse(&sv(&["--nope"]), &spec()).unwrap_err(),
+            CliError::UnknownFlag("nope".into())
+        );
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert_eq!(
+            Args::parse(&sv(&["--alpha"]), &spec()).unwrap_err(),
+            CliError::MissingValue("alpha".into())
+        );
+    }
+
+    #[test]
+    fn invalid_number_reports_flag() {
+        let a = Args::parse(&sv(&["--iters", "abc"]), &spec()).unwrap();
+        match a.get_usize("iters").unwrap_err() {
+            CliError::Invalid(name, _) => assert_eq!(name, "iters"),
+            e => panic!("{e:?}"),
+        }
+    }
+
+    #[test]
+    fn usage_mentions_all_flags() {
+        let u = usage("train", "Train a model", &spec());
+        for f in ["--iters", "--alpha", "--verbose"] {
+            assert!(u.contains(f), "{u}");
+        }
+    }
+}

@@ -1,0 +1,53 @@
+//! Library-wide error type.
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[derive(thiserror::Error, Debug)]
+pub enum Error {
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("data error: {0}")]
+    Data(String),
+
+    #[error("codec error: {0}")]
+    Codec(String),
+
+    #[error("runtime (PJRT) error: {0}")]
+    Runtime(String),
+
+    #[error("experiment error: {0}")]
+    Experiment(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("json error: {0}")]
+    Json(#[from] crate::util::json::ParseError),
+
+    #[error("{0}")]
+    Msg(String),
+}
+
+impl Error {
+    pub fn msg(s: impl Into<String>) -> Self {
+        Error::Msg(s.into())
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(format!("{e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_variants() {
+        assert_eq!(Error::msg("x").to_string(), "x");
+        assert!(Error::Config("bad".into()).to_string().contains("config"));
+    }
+}

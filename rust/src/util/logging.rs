@@ -1,0 +1,53 @@
+//! Tiny `log`-facade backend: stderr logger with level filtering via the
+//! `LAQ_LOG` environment variable (error|warn|info|debug|trace).
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+struct StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if self.enabled(record.metadata()) {
+            let tag = match record.level() {
+                Level::Error => "ERROR",
+                Level::Warn => "WARN ",
+                Level::Info => "INFO ",
+                Level::Debug => "DEBUG",
+                Level::Trace => "TRACE",
+            };
+            eprintln!("[{tag}] {}: {}", record.target(), record.args());
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: StderrLogger = StderrLogger;
+
+/// Install the logger (idempotent).  Default level: info.
+pub fn init() {
+    let level = match std::env::var("LAQ_LOG").as_deref() {
+        Ok("error") => LevelFilter::Error,
+        Ok("warn") => LevelFilter::Warn,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("trace") => LevelFilter::Trace,
+        _ => LevelFilter::Info,
+    };
+    // set_logger errors if already set — fine for tests calling init twice
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(level);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging smoke test");
+    }
+}

@@ -1,0 +1,13 @@
+//! Infrastructure substrates implemented in-repo (the image is offline:
+//! only the `xla` crate tree + anyhow/thiserror/log are vendored).
+
+pub mod bitio;
+pub mod cli;
+pub mod error;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod tensor;
+pub mod threadpool;

@@ -1,0 +1,122 @@
+//! Property-testing mini-framework (proptest is unavailable offline).
+//!
+//! A property is a closure from a seeded [`Rng`] to `Result<(), String>`.
+//! The runner executes it over many derived seeds and, on failure, reports
+//! the exact case seed so the case replays deterministically:
+//!
+//! ```no_run
+//! use laq::util::prop::Prop;
+//! Prop::new().check("addition commutes", |rng| {
+//!     let (a, b) = (rng.uniform(), rng.uniform());
+//!     if a + b == b + a { Ok(()) } else { Err(format!("{a} {b}")) }
+//! });
+//! ```
+//!
+//! Environment knobs: `LAQ_PROP_CASES` (default 100), `LAQ_PROP_SEED`
+//! (replay a single failing case).
+
+use crate::util::rng::Rng;
+
+pub struct Prop {
+    pub cases: u64,
+    pub base_seed: u64,
+}
+
+impl Default for Prop {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Prop {
+    pub fn new() -> Self {
+        let cases = std::env::var("LAQ_PROP_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(100);
+        Self { cases, base_seed: 0x1A90 }
+    }
+
+    pub fn with_cases(cases: u64) -> Self {
+        Self { cases, base_seed: 0x1A90 }
+    }
+
+    /// Run `property` over `cases` derived seeds; panic with the failing
+    /// seed on the first counterexample.
+    pub fn check<F>(&self, name: &str, property: F)
+    where
+        F: Fn(&mut Rng) -> Result<(), String>,
+    {
+        if let Ok(seed) = std::env::var("LAQ_PROP_SEED") {
+            let seed: u64 = seed.parse().expect("LAQ_PROP_SEED must be u64");
+            let mut rng = Rng::new(seed);
+            if let Err(msg) = property(&mut rng) {
+                panic!("property '{name}' failed at replay seed {seed}: {msg}");
+            }
+            return;
+        }
+        for case in 0..self.cases {
+            let seed = self
+                .base_seed
+                .wrapping_mul(0x9E3779B97F4A7C15)
+                .wrapping_add(case);
+            let mut rng = Rng::new(seed);
+            if let Err(msg) = property(&mut rng) {
+                panic!(
+                    "property '{name}' failed on case {case} (replay with \
+                     LAQ_PROP_SEED={seed}): {msg}"
+                );
+            }
+        }
+    }
+}
+
+/// Assertion helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0u64;
+        // interior mutability via Cell to count invocations
+        let cell = std::cell::Cell::new(0u64);
+        Prop::with_cases(17).check("always ok", |_| {
+            cell.set(cell.get() + 1);
+            Ok(())
+        });
+        count += cell.get();
+        assert_eq!(count, 17);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay with LAQ_PROP_SEED")]
+    fn failing_property_reports_seed() {
+        Prop::with_cases(50).check("fails on big", |rng| {
+            let v = rng.uniform();
+            if v < 0.2 {
+                Ok(())
+            } else {
+                Err(format!("v = {v}"))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_assert_macro() {
+        Prop::with_cases(5).check("macro ok", |rng| {
+            let v = rng.uniform();
+            prop_assert!((0.0..1.0).contains(&v), "out of range: {v}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,169 @@
+//! Summary statistics for the bench harness and metrics sinks.
+
+/// Online mean/variance (Welford) plus min/max.
+#[derive(Clone, Debug, Default)]
+pub struct Running {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Percentile over a sample set (nearest-rank on a sorted copy).
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    assert!(!samples.is_empty());
+    assert!((0.0..=100.0).contains(&p));
+    let mut v: Vec<f64> = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+/// Summary of a bench sample set.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn from_samples(samples: &[f64]) -> Self {
+        let mut r = Running::new();
+        for &s in samples {
+            r.push(s);
+        }
+        Self {
+            n: samples.len(),
+            mean: r.mean(),
+            std: r.std(),
+            min: r.min(),
+            p50: percentile(samples, 50.0),
+            p90: percentile(samples, 90.0),
+            p99: percentile(samples, 99.0),
+            max: r.max(),
+        }
+    }
+}
+
+/// Least-squares slope of log10(y) vs x — used to verify *linear rate*
+/// claims: a convergence trace y_k = C σ^k has log-slope log10(σ) < 0.
+pub fn log_slope(y: &[f64]) -> f64 {
+    let pts: Vec<(f64, f64)> = y
+        .iter()
+        .enumerate()
+        .filter(|(_, &v)| v > 0.0 && v.is_finite())
+        .map(|(i, &v)| (i as f64, v.log10()))
+        .collect();
+    if pts.len() < 2 {
+        return 0.0;
+    }
+    let n = pts.len() as f64;
+    let sx: f64 = pts.iter().map(|p| p.0).sum();
+    let sy: f64 = pts.iter().map(|p| p.1).sum();
+    let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+    (n * sxy - sx * sy) / (n * sxx - sx * sx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn running_mean_var() {
+        let mut r = Running::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            r.push(x);
+        }
+        assert!((r.mean() - 5.0).abs() < 1e-12);
+        assert!((r.var() - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(r.min(), 2.0);
+        assert_eq!(r.max(), 9.0);
+        assert_eq!(r.count(), 8);
+    }
+
+    #[test]
+    fn percentiles() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 100.0), 100.0);
+        let p50 = percentile(&v, 50.0);
+        assert!((p50 - 50.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn summary_sane() {
+        let s = Summary::from_samples(&[1.0, 2.0, 3.0]);
+        assert_eq!(s.n, 3);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+    }
+
+    #[test]
+    fn log_slope_detects_linear_rate() {
+        // y_k = 10 * 0.9^k  => slope = log10(0.9) ≈ -0.0458
+        let y: Vec<f64> = (0..50).map(|k| 10.0 * 0.9f64.powi(k)).collect();
+        let s = log_slope(&y);
+        assert!((s - 0.9f64.log10()).abs() < 1e-9);
+        // sublinear (1/k) has slope tending to 0: flatter than geometric
+        let y2: Vec<f64> = (1..=50).map(|k| 1.0 / k as f64).collect();
+        assert!(log_slope(&y2) > s);
+    }
+
+    #[test]
+    fn log_slope_ignores_nonpositive() {
+        let y = [1.0, 0.0, 0.1, -3.0, 0.01];
+        assert!(log_slope(&y).is_finite());
+    }
+}

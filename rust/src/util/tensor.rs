@@ -1,0 +1,394 @@
+//! Dense linear-algebra substrate (BLAS-lite).
+//!
+//! The coordinator's hot path works on flat `f32` parameter/gradient
+//! vectors; the native model backend needs small GEMMs, softmax and
+//! reductions.  No external BLAS is available offline, so this module
+//! implements the handful of kernels we need, with cache-blocked matmul
+//! and (on x86_64) an 8-wide manually unrolled inner loop the compiler
+//! auto-vectorizes.
+
+/// Row-major dense matrix view helpers live on plain `Vec<f32>`/slices —
+/// a deliberate choice: everything that crosses the PJRT boundary or the
+/// simulated network is a flat buffer anyway.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(rows * cols, data.len());
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Vector ops
+// ---------------------------------------------------------------------------
+
+/// y += a * x
+#[inline]
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// Elementwise y = x (copy preserving capacity).
+#[inline]
+pub fn assign(y: &mut [f32], x: &[f32]) {
+    y.copy_from_slice(x);
+}
+
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    // f64 accumulation: the convergence traces subtract nearly-equal
+    // numbers (loss residuals down to 1e-8), f32 accumulation is too noisy.
+    let mut acc = 0.0f64;
+    for (a, b) in x.iter().zip(y) {
+        acc += (*a as f64) * (*b as f64);
+    }
+    acc
+}
+
+#[inline]
+pub fn norm2_sq(x: &[f32]) -> f64 {
+    dot(x, x)
+}
+
+#[inline]
+pub fn norm2(x: &[f32]) -> f64 {
+    norm2_sq(x).sqrt()
+}
+
+#[inline]
+pub fn norm_inf(x: &[f32]) -> f32 {
+    let mut m = 0.0f32;
+    for &v in x {
+        let a = v.abs();
+        if a > m {
+            m = a;
+        }
+    }
+    m
+}
+
+/// max_i |x_i - y_i| — the quantizer radius without materializing x - y.
+#[inline]
+pub fn norm_inf_diff(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut m = 0.0f32;
+    for (a, b) in x.iter().zip(y) {
+        let d = (a - b).abs();
+        if d > m {
+            m = d;
+        }
+    }
+    m
+}
+
+/// sum_i (x_i - y_i)^2 in f64 — criterion (7a) left-hand side.
+#[inline]
+pub fn norm2_sq_diff(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = 0.0f64;
+    for (a, b) in x.iter().zip(y) {
+        let d = (*a - *b) as f64;
+        acc += d * d;
+    }
+    acc
+}
+
+#[inline]
+pub fn scale(x: &mut [f32], a: f32) {
+    for v in x.iter_mut() {
+        *v *= a;
+    }
+}
+
+/// out = x - y (allocating).
+pub fn sub(x: &[f32], y: &[f32]) -> Vec<f32> {
+    x.iter().zip(y).map(|(a, b)| a - b).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Matmul (cache-blocked, k-panel)
+// ---------------------------------------------------------------------------
+
+const MC: usize = 64;
+const KC: usize = 256;
+
+/// C (m×n) += A (m×k, row-major) * B (k×n, row-major).
+pub fn gemm_acc(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for i0 in (0..m).step_by(MC) {
+        let i1 = (i0 + MC).min(m);
+        for p0 in (0..k).step_by(KC) {
+            let p1 = (p0 + KC).min(k);
+            for i in i0..i1 {
+                let arow = &a[i * k..(i + 1) * k];
+                let crow = &mut c[i * n..(i + 1) * n];
+                for p in p0..p1 {
+                    let aip = arow[p];
+                    if aip == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[p * n..(p + 1) * n];
+                    axpy(aip, brow, crow);
+                }
+            }
+        }
+    }
+}
+
+/// C = A * B (allocating convenience).
+pub fn gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+    let mut c = vec![0.0; m * n];
+    gemm_acc(m, k, n, a, b, &mut c);
+    c
+}
+
+/// C (m×n) += A^T where A is (k×m), times B (k×n):  C += Aᵀ B.
+pub fn gemm_at_b_acc(k: usize, m: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    // iterate over k rows; rank-1 update per row keeps B row-contiguous
+    for p in 0..k {
+        let arow = &a[p * m..(p + 1) * m];
+        let brow = &b[p * n..(p + 1) * n];
+        for i in 0..m {
+            let aip = arow[i];
+            if aip == 0.0 {
+                continue;
+            }
+            axpy(aip, brow, &mut c[i * n..(i + 1) * n]);
+        }
+    }
+}
+
+/// C (m×n) = A (m×k) * B^T where B is (n×k):  C = A Bᵀ.
+pub fn gemm_a_bt(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (j, cj) in crow.iter_mut().enumerate() {
+            let brow = &b[j * k..(j + 1) * k];
+            *cj = dot_f32(arow, brow);
+        }
+    }
+    c
+}
+
+/// f32-accumulated dot for inner GEMM loops (speed over the f64 `dot`).
+/// 16-lane accumulator: fills one AVX-512 zmm (or two AVX2 ymm) FMA
+/// chains — §Perf iteration 5.
+#[inline]
+pub fn dot_f32(x: &[f32], y: &[f32]) -> f32 {
+    let n = x.len().min(y.len());
+    let (xc, yc) = (&x[..n], &y[..n]);
+    let mut acc = [0.0f32; 16];
+    let chunks = n / 16;
+    for c in 0..chunks {
+        let o = c * 16;
+        for l in 0..16 {
+            acc[l] += xc[o + l] * yc[o + l];
+        }
+    }
+    let mut s = acc.iter().sum::<f32>();
+    for i in chunks * 16..n {
+        s += xc[i] * yc[i];
+    }
+    s
+}
+
+// ---------------------------------------------------------------------------
+// NN nonlinearities
+// ---------------------------------------------------------------------------
+
+/// Row-wise in-place softmax with max-subtraction stability.
+pub fn softmax_rows(x: &mut [f32], rows: usize, cols: usize) {
+    debug_assert_eq!(x.len(), rows * cols);
+    for r in 0..rows {
+        let row = &mut x[r * cols..(r + 1) * cols];
+        let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Row-wise log-sum-exp (for cross-entropy without materializing softmax).
+pub fn logsumexp_row(row: &[f32]) -> f32 {
+    let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let s: f32 = row.iter().map(|&v| (v - mx).exp()).sum();
+    mx + s.ln()
+}
+
+#[inline]
+pub fn relu(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                for j in 0..n {
+                    c[i * n + j] += a[i * k + p] * b[p * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn gemm_matches_naive() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        for &(m, k, n) in &[(1, 1, 1), (3, 4, 5), (17, 33, 9), (64, 128, 10)] {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+            let c1 = gemm(m, k, n, &a, &b);
+            let c2 = naive_gemm(m, k, n, &a, &b);
+            for (x, y) in c1.iter().zip(&c2) {
+                assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()), "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_at_b_matches_naive_transpose() {
+        let mut rng = crate::util::rng::Rng::new(2);
+        let (k, m, n) = (13, 7, 5);
+        let a: Vec<f32> = (0..k * m).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let mut c = vec![0.0f32; m * n];
+        gemm_at_b_acc(k, m, n, &a, &b, &mut c);
+        // naive: at[i][j] = sum_p a[p][i] * b[p][j]
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0f32;
+                for p in 0..k {
+                    s += a[p * m + i] * b[p * n + j];
+                }
+                assert!((c[i * n + j] - s).abs() < 1e-4, "{} vs {s}", c[i * n + j]);
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_a_bt_matches() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        let (m, k, n) = (6, 11, 4);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
+        let c = gemm_a_bt(m, k, n, &a, &b);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0f32;
+                for p in 0..k {
+                    s += a[i * k + p] * b[j * k + p];
+                }
+                assert!((c[i * n + j] - s).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_rows_are_distributions() {
+        let mut x = vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0];
+        softmax_rows(&mut x, 2, 3);
+        for r in 0..2 {
+            let s: f32 = x[r * 3..(r + 1) * 3].iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+        assert!(x[2] > x[1] && x[1] > x[0]);
+    }
+
+    #[test]
+    fn softmax_stable_at_large_logits() {
+        let mut x = vec![1000.0, 1001.0];
+        softmax_rows(&mut x, 1, 2);
+        assert!(x.iter().all(|v| v.is_finite()));
+        assert!((x[0] + x[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn logsumexp_matches_direct_small() {
+        let row = [0.1f32, -0.4, 0.7];
+        let direct = row.iter().map(|v| v.exp()).sum::<f32>().ln();
+        assert!((logsumexp_row(&row) - direct).abs() < 1e-6);
+    }
+
+    #[test]
+    fn norms_and_axpy() {
+        let x = vec![3.0f32, -4.0];
+        assert!((norm2(&x) - 5.0).abs() < 1e-9);
+        assert_eq!(norm_inf(&x), 4.0);
+        let y = vec![1.0f32, 1.0];
+        assert_eq!(norm_inf_diff(&x, &y), 5.0);
+        assert!((norm2_sq_diff(&x, &y) - (4.0 + 25.0)).abs() < 1e-9);
+        let mut z = vec![1.0f32, 2.0];
+        axpy(2.0, &x, &mut z);
+        assert_eq!(z, vec![7.0, -6.0]);
+    }
+
+    #[test]
+    fn dot_f32_matches_dot() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        let x: Vec<f32> = (0..1031).map(|_| rng.normal() as f32).collect();
+        let y: Vec<f32> = (0..1031).map(|_| rng.normal() as f32).collect();
+        let d1 = dot_f32(&x, &y) as f64;
+        let d2 = dot(&x, &y);
+        assert!((d1 - d2).abs() < 1e-2 * (1.0 + d2.abs()));
+    }
+
+    #[test]
+    fn mat_row_access() {
+        let m = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.row(1), &[4., 5., 6.]);
+        assert_eq!(m.at(0, 2), 3.0);
+    }
+}

@@ -1,0 +1,184 @@
+//! Minimal work-pool substrate (tokio/rayon unavailable offline).
+//!
+//! The coordinator fans one closure out per worker each iteration and
+//! joins the results — a scoped scatter/gather.  `Pool` keeps N OS threads
+//! alive across iterations (spawning threads per step would dominate the
+//! hot loop) and runs `'static`-free borrows safely via `std::thread::scope`
+//! under the hood of [`Pool::scatter`].
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Long-lived pool of worker threads executing boxed jobs.
+pub struct Pool {
+    tx: Option<mpsc::Sender<Job>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    size: usize,
+}
+
+impl Pool {
+    pub fn new(size: usize) -> Self {
+        assert!(size > 0);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("laq-pool-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break,
+                        }
+                    })
+                    .expect("spawn pool thread")
+            })
+            .collect();
+        Self { tx: Some(tx), handles, size }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Run `f(i)` for each i in 0..n on the pool, collecting results in
+    /// index order.  Blocks until all complete.  `f` only needs to be
+    /// `Send + Sync` for the duration of the call (we transmute lifetimes
+    /// behind a scope-join, like crossbeam's scoped threads).
+    pub fn scatter<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(usize) -> T + Sync,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
+        let (done_tx, done_rx) = mpsc::channel::<(usize, T)>();
+        // SAFETY: we join all `n` jobs via `done_rx` below before
+        // returning, so the borrow of `f` cannot outlive this frame.
+        let f_ptr: &(dyn Fn(usize) -> T + Sync) = &f;
+        let f_static: &'static (dyn Fn(usize) -> T + Sync) =
+            unsafe { std::mem::transmute(f_ptr) };
+        for i in 0..n {
+            let done = done_tx.clone();
+            let job: Job = Box::new(move || {
+                let out = f_static(i);
+                let _ = done.send((i, out));
+            });
+            self.tx.as_ref().unwrap().send(job).expect("pool alive");
+        }
+        drop(done_tx);
+        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, v) = done_rx.recv().expect("job completed");
+            slots[i] = Some(v);
+        }
+        slots.into_iter().map(|s| s.unwrap()).collect()
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Process-wide shared pool for data-parallel kernels (gradient chunk
+/// evaluation).  Sized to the machine once, reused by every worker — the
+/// per-iteration cost is just job dispatch, no thread spawning.
+pub fn global() -> &'static Pool {
+    static POOL: std::sync::OnceLock<Pool> = std::sync::OnceLock::new();
+    POOL.get_or_init(|| {
+        let n = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .min(16);
+        Pool::new(n)
+    })
+}
+
+/// One-shot scoped parallel map (no persistent pool) for cold paths.
+pub fn par_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|s| {
+        for (i, slot) in out.iter_mut().enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                *slot = Some(f(i));
+            });
+        }
+    });
+    out.into_iter().map(|s| s.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn scatter_returns_in_index_order() {
+        let pool = Pool::new(4);
+        let out = pool.scatter(16, |i| i * i);
+        assert_eq!(out, (0..16).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scatter_borrows_environment() {
+        let pool = Pool::new(3);
+        let data: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let sums = pool.scatter(10, |i| {
+            data[i * 10..(i + 1) * 10].iter().sum::<f64>()
+        });
+        let total: f64 = sums.iter().sum();
+        assert_eq!(total, 4950.0);
+    }
+
+    #[test]
+    fn scatter_runs_everything_exactly_once() {
+        let pool = Pool::new(2);
+        let counter = AtomicUsize::new(0);
+        let out = pool.scatter(50, |_| {
+            counter.fetch_add(1, Ordering::SeqCst);
+            1usize
+        });
+        assert_eq!(out.len(), 50);
+        assert_eq!(counter.load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    fn reuse_across_calls() {
+        let pool = Pool::new(2);
+        for round in 0..5 {
+            let v = pool.scatter(4, move |i| i + round);
+            assert_eq!(v, (0..4).map(|i| i + round).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn zero_jobs_is_fine() {
+        let pool = Pool::new(1);
+        let v: Vec<usize> = pool.scatter(0, |i| i);
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    fn par_map_matches_serial() {
+        let v = par_map(8, |i| i * 3);
+        assert_eq!(v, (0..8).map(|i| i * 3).collect::<Vec<_>>());
+    }
+}

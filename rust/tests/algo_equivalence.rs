@@ -1,0 +1,92 @@
+//! Backend-equivalence tests: the PJRT trainer (AOT artifacts) and the
+//! native trainer must produce matching optimization trajectories —
+//! parameters are interchangeable between backends by construction
+//! (identical flat layouts and loss normalization).
+//!
+//! Skipped with a notice when artifacts are missing or the shapes don't
+//! match the artifact set.
+
+use laq::algo::{build_native, build_pjrt};
+use laq::config::{Algo, RunCfg};
+use laq::runtime::Runtime;
+use std::rc::Rc;
+
+fn runtime() -> Option<Rc<Runtime>> {
+    match Runtime::open("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP backend-equivalence tests: {e}");
+            None
+        }
+    }
+}
+
+fn artifact_cfg(algo: Algo) -> RunCfg {
+    let mut cfg = RunCfg::paper_logreg(algo);
+    // must match python/compile/aot.py constants
+    cfg.data.n_train = 10_000;
+    cfg.data.n_test = 2_000;
+    cfg.workers = 10;
+    cfg.iters = 3;
+    cfg
+}
+
+#[test]
+fn laq_trajectory_matches_across_backends() {
+    let Some(rt) = runtime() else { return };
+    let cfg = artifact_cfg(Algo::Laq);
+    let mut nat = build_native(&cfg).unwrap();
+    let mut pj = build_pjrt(&cfg, rt).unwrap();
+    for k in 0..cfg.iters {
+        let sn = nat.step().unwrap();
+        let sp = pj.step().unwrap();
+        assert!(
+            (sn.loss - sp.loss).abs() < 1e-4 * sn.loss.abs().max(1.0),
+            "iter {k}: loss {} vs {}",
+            sn.loss,
+            sp.loss
+        );
+        // identical communication decisions — the criterion must agree
+        assert_eq!(sn.uploads, sp.uploads, "iter {k} upload counts");
+        assert_eq!(sn.bits, sp.bits, "iter {k} bits");
+    }
+    // parameters stay close after 3 steps
+    let (tn, tp) = (nat.theta(), pj.theta());
+    let mut worst = 0.0f32;
+    for (a, b) in tn.iter().zip(tp) {
+        worst = worst.max((a - b).abs());
+    }
+    assert!(worst < 1e-4, "theta divergence {worst}");
+}
+
+#[test]
+fn gd_loss_matches_across_backends() {
+    let Some(rt) = runtime() else { return };
+    let cfg = artifact_cfg(Algo::Gd);
+    let mut nat = build_native(&cfg).unwrap();
+    let mut pj = build_pjrt(&cfg, rt).unwrap();
+    for _ in 0..2 {
+        let sn = nat.step().unwrap();
+        let sp = pj.step().unwrap();
+        assert!((sn.loss - sp.loss).abs() < 1e-4 * sn.loss.abs().max(1.0));
+    }
+}
+
+#[test]
+fn stochastic_batch_path_matches_across_backends() {
+    let Some(rt) = runtime() else { return };
+    let cfg = artifact_cfg(Algo::Slaq);
+    let mut nat = build_native(&cfg).unwrap();
+    let mut pj = build_pjrt(&cfg, rt).unwrap();
+    // identical seeds -> identical batch index draws -> comparable losses
+    for k in 0..2 {
+        let sn = nat.step().unwrap();
+        let sp = pj.step().unwrap();
+        assert!(
+            (sn.loss - sp.loss).abs() < 1e-3 * sn.loss.abs().max(1.0),
+            "iter {k}: {} vs {}",
+            sn.loss,
+            sp.loss
+        );
+    }
+}

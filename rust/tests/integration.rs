@@ -1,0 +1,265 @@
+//! Integration tests: full training runs exercising coordinator + comm +
+//! codecs + models together on small problems.
+
+use laq::config::{Algo, ModelKind, RunCfg};
+use laq::util::stats::log_slope;
+
+fn small_cfg(algo: Algo) -> RunCfg {
+    let mut c = RunCfg::paper_logreg(algo);
+    c.data.name = "ijcnn1".into();
+    c.data.n_train = 400;
+    c.data.n_test = 100;
+    c.workers = 5;
+    c.iters = 150;
+    c.batch = 50;
+    c.record_every = 1;
+    c
+}
+
+fn run(cfg: &RunCfg) -> laq::metrics::RunResult {
+    let mut t = laq::algo::build_native(cfg).unwrap();
+    t.run().unwrap()
+}
+
+#[test]
+fn all_eight_algorithms_converge() {
+    for algo in Algo::all() {
+        let mut cfg = small_cfg(algo);
+        if algo.is_stochastic() {
+            cfg.alpha = 0.01;
+        }
+        let res = run(&cfg);
+        let first = res.trace.first().unwrap().loss;
+        let last = res.final_loss();
+        assert!(
+            last < 0.8 * first,
+            "{}: {first} -> {last}",
+            algo.name()
+        );
+        assert!(res.final_accuracy.unwrap() > 0.75, "{}", algo.name());
+    }
+}
+
+#[test]
+fn laq_converges_linearly_on_strongly_convex_loss() {
+    // Theorem 1: linear rate — the log-residual slope must be clearly
+    // negative and roughly constant (geometric decay)
+    let mut cfg = small_cfg(Algo::Laq);
+    cfg.iters = 400;
+    let res = run(&cfg);
+    // estimate f* from the tail
+    let fstar = res.losses().iter().cloned().fold(f64::INFINITY, f64::min);
+    let resid: Vec<f64> = res
+        .losses()
+        .iter()
+        .map(|l| l - fstar + 1e-12)
+        .take(200) // early phase, before fp noise floor
+        .collect();
+    let slope = log_slope(&resid);
+    assert!(slope < -1e-3, "log-slope {slope} not clearly negative");
+}
+
+#[test]
+fn laq_saves_rounds_and_bits_vs_gd() {
+    let gd = run(&small_cfg(Algo::Gd));
+    let laq = run(&small_cfg(Algo::Laq));
+    assert!(laq.total_rounds * 3 < gd.total_rounds);
+    assert!(laq.total_bits * 10 < gd.total_bits);
+    // same iteration budget: final losses comparable (within 20%)
+    assert!(laq.final_loss() < 1.2 * gd.final_loss());
+}
+
+#[test]
+fn qgd_matches_gd_trajectory_at_high_bits() {
+    // with b = 16 the quantization error is ~1e-5 relative: QGD's loss
+    // curve must track GD's closely
+    let gd = run(&small_cfg(Algo::Gd));
+    let mut qcfg = small_cfg(Algo::Qgd);
+    qcfg.bits = 16;
+    let qgd = run(&qcfg);
+    for (a, b) in gd.losses().iter().zip(qgd.losses()).step_by(10) {
+        assert!((a - b).abs() < 5e-3 * a.max(1e-3), "{a} vs {b}");
+    }
+}
+
+#[test]
+fn laq_with_zero_xi_and_high_bits_tracks_gd() {
+    // ξ = 0 disables the movement slack; with high b the 3(||ε||²+||ε̂||²)
+    // slack is tiny, so LAQ rarely skips and behaves like GD (paper §2.3:
+    // "LAQ reduces to GD")
+    let gd = run(&small_cfg(Algo::Gd));
+    let mut cfg = small_cfg(Algo::Laq);
+    cfg.bits = 16;
+    cfg.criterion.xi = vec![0.0; cfg.criterion.d];
+    let laq = run(&cfg);
+    let g_last = gd.final_loss();
+    let l_last = laq.final_loss();
+    assert!(
+        (g_last - l_last).abs() < 0.02 * g_last.max(1e-6),
+        "{g_last} vs {l_last}"
+    );
+}
+
+#[test]
+fn stochastic_laq_beats_sgd_on_communication() {
+    let mut s = small_cfg(Algo::Sgd);
+    s.alpha = 0.01;
+    let mut q = small_cfg(Algo::Slaq);
+    q.alpha = 0.01;
+    let sgd = run(&s);
+    let slaq = run(&q);
+    assert!(slaq.total_bits < sgd.total_bits);
+    assert!(slaq.total_rounds <= sgd.total_rounds);
+}
+
+#[test]
+fn trace_counters_are_monotone() {
+    let res = run(&small_cfg(Algo::Laq));
+    let mut prev = (0u64, 0u64, 0.0f64);
+    for t in &res.trace {
+        assert!(t.rounds >= prev.0);
+        assert!(t.bits >= prev.1);
+        assert!(t.sim_time >= prev.2);
+        prev = (t.rounds, t.bits, t.sim_time);
+    }
+}
+
+#[test]
+fn sim_time_favors_lazy_methods() {
+    // the latency model's point: fewer rounds -> less wall-clock
+    let gd = run(&small_cfg(Algo::Gd));
+    let laq = run(&small_cfg(Algo::Laq));
+    assert!(laq.sim_time < gd.sim_time);
+}
+
+#[test]
+fn mlp_runs_under_laq() {
+    let mut cfg = small_cfg(Algo::Laq);
+    cfg.model = ModelKind::Mlp;
+    cfg.hidden = 8;
+    cfg.bits = 8;
+    cfg.iters = 60;
+    let res = run(&cfg);
+    let first = res.trace.first().unwrap().loss;
+    assert!(res.final_loss() < first);
+    assert!(res.total_rounds < (60 * 5) as u64);
+}
+
+#[test]
+fn heterogeneous_sharding_trains() {
+    let mut cfg = small_cfg(Algo::Laq);
+    cfg.data.hetero_alpha = Some(0.2);
+    let res = run(&cfg);
+    let first = res.trace.first().unwrap().loss;
+    assert!(res.final_loss() < first);
+}
+
+#[test]
+fn config_file_roundtrip_drives_training() {
+    let dir = std::env::temp_dir().join("laq_int_cfg");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("run.toml");
+    std::fs::write(
+        &path,
+        "[run]\nalgo = \"laq\"\nworkers = 3\niters = 10\nbits = 4\n[data]\nname = \"ijcnn1\"\nn_train = 150\nn_test = 50\n",
+    )
+    .unwrap();
+    let mut cfg = RunCfg::paper_logreg(Algo::Gd);
+    cfg.load_file(path.to_str().unwrap()).unwrap();
+    assert_eq!(cfg.algo, Algo::Laq);
+    assert_eq!(cfg.workers, 3);
+    let res = run(&cfg);
+    assert_eq!(res.iters_run, 10);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn checkpoint_resume_is_bit_identical() {
+    // run 30 iters straight vs 15 + checkpoint + resume 15: identical θ,
+    // identical upload decisions — the mirror state survives exactly
+    let cfg = small_cfg(Algo::Laq);
+    let dir = std::env::temp_dir().join("laq_ckpt_int");
+    let path = dir.join("mid.ckpt");
+
+    let mut straight = laq::algo::build_native(&cfg).unwrap();
+    for _ in 0..30 {
+        straight.step().unwrap();
+    }
+
+    let mut first = laq::algo::build_native(&cfg).unwrap();
+    for _ in 0..15 {
+        first.step().unwrap();
+    }
+    first.save_checkpoint(&path).unwrap();
+    let rounds_at_15 = first.net.uplink_rounds();
+
+    let mut resumed = laq::algo::build_native(&cfg).unwrap();
+    resumed.load_checkpoint(&path).unwrap();
+    for _ in 0..15 {
+        resumed.step().unwrap();
+    }
+
+    assert_eq!(straight.theta(), resumed.theta());
+    // counters restart at zero on resume; decisions must still line up
+    assert_eq!(
+        straight.net.uplink_rounds(),
+        rounds_at_15 + resumed.net.uplink_rounds()
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn checkpoint_rejects_wrong_shape() {
+    let cfg = small_cfg(Algo::Laq);
+    let dir = std::env::temp_dir().join("laq_ckpt_int2");
+    let path = dir.join("mid.ckpt");
+    let mut t = laq::algo::build_native(&cfg).unwrap();
+    t.step().unwrap();
+    t.save_checkpoint(&path).unwrap();
+
+    let mut other_cfg = small_cfg(Algo::Laq);
+    other_cfg.data.name = "covtype".into(); // different dim (54×7)
+    let mut other = laq::algo::build_native(&other_cfg).unwrap();
+    assert!(other.load_checkpoint(&path).is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn efsgd_converges_and_counts_one_bit_per_coord() {
+    let mut cfg = small_cfg(Algo::EfSgd);
+    cfg.alpha = 0.01;
+    let res = run(&cfg);
+    let first = res.trace.first().unwrap().loss;
+    assert!(res.final_loss() < first, "{first} -> {}", res.final_loss());
+    // 44-dim problem: every upload is exactly 32 + 44 bits
+    let expect = (32 + 44) as u64 * res.total_rounds;
+    assert_eq!(res.total_bits, expect);
+}
+
+#[test]
+fn gradnorm_criterion_mode_trains_and_skips() {
+    // the optimizer-agnostic rhs (13): ||∇^{k-1}||²/(2M²) — used by the
+    // transformer example under server-side Adam
+    let mut cfg = small_cfg(Algo::Laq);
+    cfg.criterion.mode = laq::config::CritMode::GradNorm;
+    let res = run(&cfg);
+    let first = res.trace.first().unwrap().loss;
+    assert!(res.final_loss() < first);
+    // it must actually skip some uploads
+    assert!(res.total_rounds < (cfg.iters * cfg.workers) as u64);
+}
+
+#[test]
+fn adam_server_opt_trains_logreg() {
+    let mut cfg = small_cfg(Algo::Laq);
+    cfg.criterion.mode = laq::config::CritMode::GradNorm;
+    cfg.alpha = 0.003; // Adam moves ~alpha per coordinate per step
+    let mut t = laq::algo::build_native(&cfg).unwrap();
+    t.set_server_opt(laq::coordinator::server::ServerOpt::adam());
+    let first = t.step().unwrap().loss;
+    let mut last = first;
+    for _ in 1..100 {
+        last = t.step().unwrap().loss;
+    }
+    assert!(last < first, "{first} -> {last}");
+}

@@ -1,0 +1,153 @@
+//! Property tests for the quantization codecs (paper §2.1 guarantees).
+
+use laq::prop_assert;
+use laq::quant::innovation::{InnovationQuantizer, QuantizedInnovation};
+use laq::quant::qsgd::{QsgdMessage, QsgdQuantizer};
+use laq::quant::sparsify::{SparseMessage, Sparsifier};
+use laq::util::prop::Prop;
+use laq::util::rng::Rng;
+use laq::util::tensor::norm_inf_diff;
+
+fn rand_vec(rng: &mut Rng, p: usize, scale: f64) -> Vec<f32> {
+    (0..p).map(|_| (rng.normal() * scale) as f32).collect()
+}
+
+#[test]
+fn innovation_roundtrip_is_bit_exact() {
+    Prop::new().check("innovation wire roundtrip", |rng| {
+        let p = 1 + rng.below(3000) as usize;
+        let bits = 1 + rng.below(8) as u32;
+        let scale = 10f64.powf(rng.uniform_range(-4.0, 4.0));
+        let g = rand_vec(rng, p, scale);
+        let qp = rand_vec(rng, p, scale);
+        let q = InnovationQuantizer::new(bits);
+        let (qi, _) = q.quantize(&g, &qp);
+        let decoded = QuantizedInnovation::decode(&qi.encode(), bits, p)
+            .map_err(|e| e.to_string())?;
+        prop_assert!(decoded == qi, "roundtrip mismatch p={p} bits={bits}");
+        prop_assert!(
+            qi.wire_bits() == 32 + bits as usize * p,
+            "wire bits formula"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn innovation_error_bounded_by_tau_r() {
+    Prop::new().check("||eps||_inf <= tau R", |rng| {
+        let p = 1 + rng.below(2000) as usize;
+        let bits = 1 + rng.below(8) as u32;
+        let g = rand_vec(rng, p, 1.0);
+        let qp = rand_vec(rng, p, 1.0);
+        let q = InnovationQuantizer::new(bits);
+        let (qi, q_new) = q.quantize(&g, &qp);
+        let tau = q.tau() as f32;
+        let err = norm_inf_diff(&g, &q_new);
+        prop_assert!(
+            err <= tau * qi.radius * (1.0 + 1e-5) + 1e-30,
+            "err {err} > tau*R {}",
+            tau * qi.radius
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn innovation_codes_fit_bit_width() {
+    Prop::new().check("codes in [0, 2^b)", |rng| {
+        let p = 1 + rng.below(500) as usize;
+        let bits = 1 + rng.below(8) as u32;
+        let g = rand_vec(rng, p, 3.0);
+        let qp = rand_vec(rng, p, 3.0);
+        let (qi, _) = InnovationQuantizer::new(bits).quantize(&g, &qp);
+        let max = (1u32 << bits) - 1;
+        prop_assert!(
+            qi.codes.iter().all(|&c| c <= max),
+            "code exceeds width"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn server_reconstruction_equals_worker() {
+    // the mirror-consistency property the whole algorithm rests on,
+    // through the PHYSICAL wire format
+    Prop::new().check("dequantize(encode(quantize)) == worker view", |rng| {
+        let p = 1 + rng.below(1000) as usize;
+        let bits = 1 + rng.below(8) as u32;
+        let q = InnovationQuantizer::new(bits);
+        let mut q_prev = rand_vec(rng, p, 1.0);
+        // several rounds of drift
+        for _ in 0..4 {
+            let g = rand_vec(rng, p, 1.0);
+            let (qi, q_new_worker) = q.quantize(&g, &q_prev);
+            let wire = QuantizedInnovation::decode(&qi.encode(), bits, p)
+                .map_err(|e| e.to_string())?;
+            let q_new_server = q.dequantize(&wire, &q_prev);
+            prop_assert!(
+                q_new_worker == q_new_server,
+                "mirror drift at p={p} bits={bits}"
+            );
+            q_prev = q_new_worker;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn qsgd_roundtrip_and_norm_bound() {
+    Prop::new().check("qsgd wire + bound", |rng| {
+        let p = 1 + rng.below(1000) as usize;
+        let bits = 1 + rng.below(8) as u32;
+        let g = rand_vec(rng, p, 2.0);
+        let q = QsgdQuantizer::new(bits);
+        let m = q.quantize(&g, rng);
+        let decoded =
+            QsgdMessage::decode(&m.encode(), bits, p).map_err(|e| e.to_string())?;
+        prop_assert!(decoded == m, "qsgd roundtrip");
+        let norm = laq::util::tensor::norm2(&g) as f32;
+        prop_assert!(
+            m.dequantize().iter().all(|v| v.abs() <= norm * 1.0001),
+            "qsgd magnitude exceeds ||g||"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn sparse_roundtrip_and_support() {
+    Prop::new().check("sparse wire + support", |rng| {
+        let p = 1 + rng.below(2000) as usize;
+        let keep = rng.uniform_range(0.05, 1.0);
+        let g = rand_vec(rng, p, 1.0);
+        let s = Sparsifier::new(keep);
+        let m = s.sparsify(&g, rng);
+        let decoded = SparseMessage::decode(&m.encode(), p).map_err(|e| e.to_string())?;
+        prop_assert!(decoded == m, "sparse roundtrip");
+        // support is a subset of nonzero coordinates of g
+        let d = m.densify();
+        for (i, &v) in d.iter().enumerate() {
+            if v != 0.0 {
+                prop_assert!(g[i] != 0.0, "phantom coordinate {i}");
+                prop_assert!(v.signum() == g[i].signum(), "sign flip at {i}");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn quantize_is_deterministic() {
+    Prop::new().check("same input -> same message", |rng| {
+        let p = 1 + rng.below(300) as usize;
+        let g = rand_vec(rng, p, 1.0);
+        let qp = rand_vec(rng, p, 1.0);
+        let q = InnovationQuantizer::new(3);
+        let (a, _) = q.quantize(&g, &qp);
+        let (b, _) = q.quantize(&g, &qp);
+        prop_assert!(a == b, "nondeterministic quantization");
+        Ok(())
+    });
+}

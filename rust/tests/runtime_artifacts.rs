@@ -1,0 +1,138 @@
+//! PJRT runtime tests over the real AOT artifacts (skipped with a notice
+//! if `make artifacts` has not run).  These are the cross-layer
+//! correctness proofs:
+//!   * rust native gradients == artifact gradients (L2/L3 agreement);
+//!   * rust innovation codec == Pallas quantization kernel (L1/L3
+//!     agreement, bit-exact on the integer codes).
+
+use laq::data::Dataset;
+use laq::model::logreg::LogRegWorker;
+use laq::model::{LossCfg, WorkerGrad};
+use laq::quant::InnovationQuantizer;
+use laq::runtime::{PjrtGradWorker, Runtime, Value};
+use laq::util::rng::Rng;
+use std::rc::Rc;
+
+fn runtime() -> Option<Rc<Runtime>> {
+    match Runtime::open("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP runtime tests: {e}");
+            None
+        }
+    }
+}
+
+fn tiny_shard(seed: u64, n: usize, f: usize, c: usize) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let x = (0..n * f).map(|_| rng.normal() as f32).collect();
+    let y = (0..n).map(|_| rng.below(c as u64) as u32).collect();
+    Dataset { n, features: f, classes: c, x, y }
+}
+
+#[test]
+fn manifest_lists_expected_artifacts() {
+    let Some(rt) = runtime() else { return };
+    let names = rt.artifact_names();
+    for want in [
+        "logreg_grad",
+        "logreg_grad_batch",
+        "logreg_grad_tiny",
+        "logreg_predict",
+        "mlp_grad",
+        "mlp_predict",
+        "quantize_b3",
+        "quantize_tiny",
+        "tfm_grad",
+    ] {
+        assert!(names.contains(&want), "missing artifact {want}");
+    }
+}
+
+#[test]
+fn pjrt_logreg_grad_matches_native() {
+    let Some(rt) = runtime() else { return };
+    // logreg_grad_tiny: shard 64 × 32, 4 classes, N_global 256, M 4
+    let shard = tiny_shard(3, 64, 32, 4);
+    let cfg = LossCfg { n_global: 256, l2: 0.01, n_workers: 4 };
+    let mut native = LogRegWorker::new(shard.clone(), cfg);
+    let mut pjrt = PjrtGradWorker::new(Rc::clone(&rt), "logreg_grad_tiny", None, shard).unwrap();
+
+    let mut rng = Rng::new(9);
+    for trial in 0..3 {
+        let theta: Vec<f32> = (0..128).map(|_| (rng.normal() * 0.3) as f32).collect();
+        let (l_n, g_n) = native.full(&theta).unwrap();
+        let (l_p, g_p) = pjrt.full(&theta).unwrap();
+        assert!(
+            (l_n - l_p).abs() < 1e-5 * l_n.abs().max(1.0),
+            "trial {trial}: loss {l_n} vs {l_p}"
+        );
+        for (i, (a, b)) in g_n.iter().zip(&g_p).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-4 * (1.0 + a.abs()),
+                "trial {trial} grad[{i}]: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn rust_codec_matches_pallas_kernel_bit_exactly() {
+    let Some(rt) = runtime() else { return };
+    // quantize_tiny: p = 128, b = 3
+    let q = InnovationQuantizer::new(3);
+    let mut rng = Rng::new(11);
+    for trial in 0..5 {
+        let g: Vec<f32> = (0..128).map(|_| rng.normal() as f32).collect();
+        let qp: Vec<f32> = (0..128).map(|_| rng.normal() as f32).collect();
+        let (r_pal, codes_pal, deq_pal) =
+            rt.quantize_via_artifact("quantize_tiny", &g, &qp).unwrap();
+        let (qi, q_new) = q.quantize(&g, &qp);
+        assert_eq!(qi.radius, r_pal, "trial {trial}: radius");
+        assert_eq!(qi.codes, codes_pal, "trial {trial}: integer codes");
+        for (i, (a, b)) in q_new.iter().zip(&deq_pal).enumerate() {
+            assert!(
+                (a - b).abs() <= 4e-6,
+                "trial {trial} deq[{i}]: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn call_rejects_bad_shapes_and_dtypes() {
+    let Some(rt) = runtime() else { return };
+    // wrong arity
+    assert!(rt.call("quantize_tiny", &[Value::F32(vec![0.0; 128])]).is_err());
+    // wrong length
+    assert!(rt
+        .call(
+            "quantize_tiny",
+            &[Value::F32(vec![0.0; 127]), Value::F32(vec![0.0; 128])]
+        )
+        .is_err());
+    // wrong dtype
+    assert!(rt
+        .call(
+            "quantize_tiny",
+            &[Value::I32(vec![0; 128]), Value::F32(vec![0.0; 128])]
+        )
+        .is_err());
+    // unknown artifact
+    assert!(rt.call("nope", &[]).is_err());
+}
+
+#[test]
+fn quantize_b3_full_dim_matches_rust_codec() {
+    let Some(rt) = runtime() else { return };
+    // the full 7 840-dim artifact used by the logreg LAQ path
+    let p = rt.signature("quantize_b3").unwrap().inputs[0].elements();
+    let q = InnovationQuantizer::new(3);
+    let mut rng = Rng::new(13);
+    let g: Vec<f32> = (0..p).map(|_| rng.normal() as f32).collect();
+    let qp = vec![0.0f32; p];
+    let (r_pal, codes_pal, _) = rt.quantize_via_artifact("quantize_b3", &g, &qp).unwrap();
+    let (qi, _) = q.quantize(&g, &qp);
+    assert_eq!(qi.radius, r_pal);
+    assert_eq!(qi.codes, codes_pal);
+}
