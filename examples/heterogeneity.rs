@@ -9,7 +9,7 @@
 
 use laq::experiments::{prop1, ExpOpts};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> laq::Result<()> {
     laq::util::logging::init();
     let iters: Option<usize> = std::env::args().nth(1).and_then(|s| s.parse().ok());
     let opts = ExpOpts {
@@ -17,7 +17,7 @@ fn main() -> anyhow::Result<()> {
         out_dir: "results".into(),
         ..Default::default()
     };
-    let report = prop1::run(&opts).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let report = prop1::run(&opts)?;
     println!("{report}");
     Ok(())
 }

@@ -12,7 +12,7 @@ use laq::algo::{build_native, build_pjrt};
 use laq::config::{Algo, Backend, RunCfg};
 use laq::runtime::Runtime;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> laq::Result<()> {
     laq::util::logging::init();
     let args: Vec<String> = std::env::args().skip(1).collect();
     let backend = match args.first().map(|s| s.as_str()) {
@@ -25,8 +25,8 @@ fn main() -> anyhow::Result<()> {
         .unwrap_or(if backend == Backend::Pjrt { 60 } else { 400 });
 
     let rt = if backend == Backend::Pjrt {
-        let rt = Runtime::open("artifacts").map_err(|e| anyhow::anyhow!("{e}"))?;
-        rt.warmup(&["logreg_grad"]).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let rt = Runtime::open("artifacts")?;
+        rt.warmup(&["logreg_grad"])?;
         Some(rt)
     } else {
         None
@@ -43,11 +43,10 @@ fn main() -> anyhow::Result<()> {
             cfg.data.n_test = 1_000;
         }
         let mut trainer = match &rt {
-            Some(rt) => build_pjrt(&cfg, std::rc::Rc::clone(rt)),
+            Some(rt) => build_pjrt(&cfg, std::sync::Arc::clone(rt)),
             None => build_native(&cfg),
-        }
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
-        let res = trainer.run().map_err(|e| anyhow::anyhow!("{e}"))?;
+        }?;
+        let res = trainer.run()?;
         println!(
             "{:<4} | loss {:.5} | acc {:.4} | rounds {:>6} | bits {:>13} | sim {:.2}s",
             res.algo,

@@ -9,7 +9,7 @@
 use laq::algo::build_native;
 use laq::config::{Algo, RunCfg};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> laq::Result<()> {
     laq::util::logging::init();
     let args: Vec<String> = std::env::args().skip(1).collect();
     let hidden: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(64);
@@ -24,8 +24,8 @@ fn main() -> anyhow::Result<()> {
         cfg.data.n_train = 2_000;
         cfg.data.n_test = 500;
         cfg.record_every = 5;
-        let mut trainer = build_native(&cfg).map_err(|e| anyhow::anyhow!("{e}"))?;
-        let res = trainer.run().map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut trainer = build_native(&cfg)?;
+        let res = trainer.run()?;
         let g0 = res.trace.first().map(|t| t.grad_norm_sq).unwrap_or(f64::NAN);
         let g1 = res.trace.last().map(|t| t.grad_norm_sq).unwrap_or(f64::NAN);
         println!(

@@ -9,7 +9,7 @@
 use laq::algo::build_native;
 use laq::config::{Algo, RunCfg};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> laq::Result<()> {
     laq::util::logging::init();
 
     // a small mnist-like problem: 2 000 samples × 784 features, 10 classes,
@@ -26,8 +26,8 @@ fn main() -> anyhow::Result<()> {
     let mut rows = Vec::new();
     for algo in [Algo::Gd, Algo::Laq] {
         let cfg = make(algo);
-        let mut trainer = build_native(&cfg).map_err(|e| anyhow::anyhow!("{e}"))?;
-        let res = trainer.run().map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut trainer = build_native(&cfg)?;
+        let res = trainer.run()?;
         println!(
             "{:<4} | final loss {:.4} | accuracy {:.3} | uploads {:>5} | bits {:>12} | sim time {:.3}s",
             res.algo,

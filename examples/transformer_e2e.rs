@@ -52,18 +52,18 @@ fn make_corpus(vocab: usize, seq_len: usize, n_seqs: usize, seed: u64) -> Vec<Ve
         .collect()
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> laq::Result<()> {
     laq::util::logging::init();
     let args: Vec<String> = std::env::args().skip(1).collect();
     let iters: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(200);
     let algo = match args.get(1).map(|s| s.as_str()) {
-        Some(a) => Algo::parse(a).map_err(|e| anyhow::anyhow!("{e}"))?,
+        Some(a) => Algo::parse(a)?,
         None => Algo::Laq,
     };
     let alpha: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(0.01);
 
-    let rt = Runtime::open("artifacts").map_err(|e| anyhow::anyhow!("{e}"))?;
-    let sig = rt.signature("tfm_grad").map_err(|e| anyhow::anyhow!("{e}"))?.clone();
+    let rt = Runtime::open("artifacts")?;
+    let sig = rt.signature("tfm_grad")?.clone();
     let dim = sig.inputs[0].elements();
     let (batch, seq_len) = (sig.inputs[1].shape[0], sig.inputs[1].shape[1]);
     let vocab = sig.meta.get("vocab").as_usize().unwrap_or(256);
@@ -72,14 +72,14 @@ fn main() -> anyhow::Result<()> {
         "transformer: {dim} params, {n_workers} workers × {batch} seqs × {seq_len} tokens, algo {}",
         algo.name()
     );
-    rt.warmup(&["tfm_grad"]).map_err(|e| anyhow::anyhow!("{e}"))?;
+    rt.warmup(&["tfm_grad"])?;
 
     // per-worker fixed sequence sets from the shared Markov source
     let nodes: Vec<WorkerNode<dyn WorkerGrad>> = (0..n_workers)
         .map(|m| {
             let pool = make_corpus(vocab, seq_len, batch, 42 + m as u64);
             let w: Box<dyn WorkerGrad> = Box::new(
-                PjrtTfmWorker::new(std::rc::Rc::clone(&rt), "tfm_grad", pool)
+                PjrtTfmWorker::new(std::sync::Arc::clone(&rt), "tfm_grad", pool)
                     .expect("tfm worker"),
             );
             WorkerNode::new(
@@ -111,12 +111,12 @@ fn main() -> anyhow::Result<()> {
     let mut theta0 = vec![0.0f32; dim];
     Rng::new(7).fill_normal_f32(&mut theta0, 0.02);
 
-    let mut trainer = Trainer::assemble(cfg, nodes, theta0, None, LatencyModel::default())
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut trainer =
+        Trainer::assemble(cfg, nodes, theta0, None, LatencyModel::default())?;
     trainer.set_server_opt(laq::coordinator::server::ServerOpt::adam());
 
     let t0 = std::time::Instant::now();
-    let res = trainer.run().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let res = trainer.run()?;
     let wall = t0.elapsed();
 
     let first = res.trace.first().unwrap().loss;
@@ -141,7 +141,11 @@ fn main() -> anyhow::Result<()> {
     res.write_to(std::path::Path::new("results/transformer_e2e"), &res.algo.to_lowercase())?;
     println!("trace: results/transformer_e2e/{}.csv", res.algo.to_lowercase());
 
-    anyhow::ensure!(last < first * 0.7, "loss did not drop enough: {first} -> {last}");
+    if last >= first * 0.7 {
+        return Err(laq::Error::msg(format!(
+            "loss did not drop enough: {first} -> {last}"
+        )));
+    }
     println!("\ne2e OK: all three layers composed (Pallas/jax AOT -> PJRT -> rust LAQ coordinator)");
     Ok(())
 }

@@ -147,6 +147,34 @@ fn bench_criterion() {
     report("criterion lhs ||Q_prev - Q_new||² (p=7840)", &s, Some(p * 8));
 }
 
+/// Tentpole bench: sequential vs parallel worker fan-out at growing M —
+/// the regime where lazy skipping pays off most is exactly where the
+/// sequential per-worker loop used to scale linearly in wall-clock.
+fn bench_parallel_fanout() {
+    println!("\n== worker fan-out: sequential (threads=1) vs parallel (threads=4) ==");
+    println!("   (mnist-like logreg, p = 7840, 50 rows/worker, LAQ b=3)");
+    for m in [5usize, 20, 100] {
+        let mut p50 = [0.0f64; 2];
+        for (ti, threads) in [1usize, 4].into_iter().enumerate() {
+            let mut cfg = RunCfg::paper_logreg(Algo::Laq);
+            cfg.data.n_train = 50 * m;
+            cfg.data.n_test = 100;
+            cfg.workers = m;
+            cfg.threads = threads;
+            let mut t = build_native(&cfg).unwrap();
+            let (warmup, samples, iters_per) = if m >= 100 { (2, 10, 2) } else { (3, 15, 3) };
+            let s = sample(|| { black_box(t.step().unwrap()); }, warmup, samples, iters_per);
+            p50[ti] = Summary::from_samples(&s).p50;
+            report(&format!("trainer step [LAQ] M={m:<3} threads={threads}"), &s, None);
+        }
+        println!(
+            "{:<44} {:.2}× step-throughput speedup",
+            format!("  -> M={m} parallel vs sequential"),
+            p50[0] / p50[1]
+        );
+    }
+}
+
 fn bench_trainer_steps() {
     println!("\n== end-to-end iteration latency per algorithm (ijcnn1 1k × 5 workers) ==");
     for algo in Algo::all() {
@@ -214,6 +242,7 @@ fn main() {
     bench_criterion();
     bench_gradient_backends();
     bench_trainer_steps();
+    bench_parallel_fanout();
     bench_experiments();
     println!("\ntotal bench wall time: {:.1?}", t0.elapsed());
 }

@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# CI for the rust layer: format check, release build, and the full test
+# suite run over BOTH trainer code paths — sequential (LAQ_THREADS=1) and
+# parallel fan-out (LAQ_THREADS=4).  The parallel_equivalence tests pin
+# the two paths to bit-identical traces; running the whole suite under
+# each default keeps every other test exercising both schedules too.
+#
+# Usage: rust/ci.sh   (from the repo root or from rust/)
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== fmt check =="
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --all -- --check
+else
+    # rustfmt component not installed on this toolchain — advisory only
+    echo "WARN: rustfmt unavailable; skipping format check"
+fi
+
+echo "== release build =="
+cargo build --release
+
+echo "== tests, sequential trainer (LAQ_THREADS=1) =="
+LAQ_THREADS=1 cargo test -q
+
+echo "== tests, parallel trainer (LAQ_THREADS=4) =="
+LAQ_THREADS=4 cargo test -q
+
+echo "== ci OK =="

@@ -1,6 +1,6 @@
 //! Trainer builders: wire config + data + backend into a [`Trainer`].
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use super::{lazy_codec_for, Evaluator, Trainer};
 use crate::comm::LatencyModel;
@@ -86,7 +86,7 @@ pub fn build_native(cfg: &RunCfg) -> Result<Trainer> {
 /// Shard shapes must match the AOT artifacts; the defaults in
 /// `python/compile/aot.py` (N=10 000 train / 2 000 test, M=10, batch 500)
 /// line up with `RunCfg::paper_*`.
-pub fn build_pjrt(cfg: &RunCfg, rt: Rc<Runtime>) -> Result<Trainer> {
+pub fn build_pjrt(cfg: &RunCfg, rt: Arc<Runtime>) -> Result<Trainer> {
     if cfg.data.name != "mnist" {
         return Err(Error::Config(
             "PJRT artifacts are compiled for the mnist-like shapes; use the \
@@ -129,7 +129,7 @@ pub fn build_pjrt(cfg: &RunCfg, rt: Rc<Runtime>) -> Result<Trainer> {
         .into_iter()
         .map(|s| -> Result<WorkerNode<dyn WorkerGrad>> {
             let w: Box<dyn WorkerGrad> = Box::new(PjrtGradWorker::new(
-                Rc::clone(&rt),
+                Arc::clone(&rt),
                 art_full,
                 art_batch,
                 s,

@@ -17,14 +17,45 @@
 //! "lazy (degenerate)": GD/QGD run through the same lazy-aggregate server
 //! path with uploads forced every round — `∇^k` then equals the plain sum
 //! of (quantized) fresh gradients, recovering eqs. (2)/(3) exactly.
+//!
+//! # Threading model
+//!
+//! Each [`Trainer::step`] is two phases:
+//!
+//! 1. **Parallel local phase** — everything a physical worker would do on
+//!    its own machine: minibatch gradient evaluation, the lazy criterion
+//!    check ([`WorkerNode::lazy_decide`]), and payload encoding
+//!    (innovation / QSGD / sparsification / sign-EF).  With
+//!    `cfg.threads != 1` this fans out over a dedicated [`Pool`], one job
+//!    per worker, each thread holding exclusive `&mut` access to its
+//!    worker's node (disjoint-index access via
+//!    [`crate::util::threadpool::SendPtr`]).  All randomness in this
+//!    phase comes from counter-based streams `Rng::stream(seed, m, k)` —
+//!    a pure function of (run seed, worker, iteration) — so draws are
+//!    identical under any schedule.
+//! 2. **Sequential wire phase** — everything that touches shared state:
+//!    uploads pass through [`Network::upload`] *in worker index order*,
+//!    the server absorbs each decoded payload, and the worker commits its
+//!    mirror/clock transition ([`WorkerNode::commit`]) immediately after.
+//!    Bit/round counters and the latency clock therefore advance in the
+//!    exact order the sequential implementation used, and the f64
+//!    reductions (loss sum, gradient-norm accumulation) run on the main
+//!    thread in index order.
+//!
+//! Consequence: a `threads = N` run is **bit-for-bit identical** to a
+//! `threads = 1` run — loss trace, uplink bits, rounds, simulated time
+//! and final θ (pinned by `rust/tests/parallel_equivalence.rs`).  The
+//! model layer's row-chunk parallelism (see `model/logreg.rs` §Perf)
+//! nests inside the local phase on the separate global pool, which keeps
+//! the two levels deadlock-free.
 
 pub mod build;
 
 pub use build::{build, build_native, build_pjrt};
 
-use crate::comm::{LatencyModel, Network};
+use crate::comm::{LatencyModel, Network, Payload};
 use crate::config::{Algo, RunCfg};
-use crate::coordinator::worker::{LazyCodec, WorkerNode};
+use crate::coordinator::worker::{LazyCodec, LazyDecision, WorkerNode};
 use crate::coordinator::ServerState;
 use crate::data::shard::Batcher;
 use crate::metrics::{RunResult, TracePoint};
@@ -34,6 +65,7 @@ use crate::quant::signef::SignEfCompressor;
 use crate::quant::sparsify::Sparsifier;
 use crate::util::rng::Rng;
 use crate::util::tensor;
+use crate::util::threadpool::{Pool, SendPtr};
 use crate::{Error, Result};
 
 /// Per-iteration statistics.
@@ -59,11 +91,12 @@ pub struct Trainer {
     pub server: ServerState,
     pub net: Network,
     batchers: Vec<Batcher>,
-    rng: Rng,
     qsgd: QsgdQuantizer,
     sparsifier: Sparsifier,
     /// per-worker error memories for EF-SGD (lazily sized)
     ef: Vec<SignEfCompressor>,
+    /// worker fan-out pool for the local phase (None = sequential)
+    pool: Option<Pool>,
     evaluator: Option<Evaluator>,
     /// early-stop threshold on the (full) loss, set by the experiment
     /// harness once f* is known (paper Table 2: residual 1e-6)
@@ -110,18 +143,29 @@ impl Trainer {
         } else {
             Vec::new()
         };
-        let rng = Rng::new(cfg.seed ^ 0xC0DEC);
         let qsgd = QsgdQuantizer::new(cfg.bits);
+        // 0 = auto-size to the machine; 1 = sequential; N = fixed pool.
+        // Never more threads than workers — extra ones would only idle.
+        let resolved = if cfg.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            cfg.threads
+        };
+        let pool = if resolved > 1 && nodes.len() > 1 {
+            Some(Pool::new(resolved.min(nodes.len())))
+        } else {
+            None
+        };
         Ok(Self {
             cfg,
             nodes,
             server,
             net,
             batchers,
-            rng,
             qsgd,
             sparsifier: Sparsifier::new(0.25),
             ef: Vec::new(),
+            pool,
             evaluator,
             stop_at_loss: None,
             k: 0,
@@ -145,87 +189,124 @@ impl Trainer {
         self.server.set_opt(opt);
     }
 
-    /// One full iteration of the selected algorithm.
+    /// One full iteration of the selected algorithm: a parallel local
+    /// phase (per-worker gradients + criterion + encoding) followed by a
+    /// sequential wire phase (uploads, aggregation, mirror commits) — see
+    /// the module-level threading-model notes.
     pub fn step(&mut self) -> Result<StepStats> {
         let k = self.k;
         let algo = self.cfg.algo;
         let dim = self.dim();
         let m_all = self.nodes.len();
+        let lazy = algo.is_lazy();
 
         // 1. downlink broadcast of θ^k (32 bits/coordinate, one message)
         self.net.broadcast(32 * dim);
-
-        // 2. per-worker gradient evaluation
         let theta = self.server.theta.clone();
-        let mut grads: Vec<Vec<f32>> = Vec::with_capacity(m_all);
-        let mut losses: Vec<f64> = Vec::with_capacity(m_all);
-        for m in 0..m_all {
-            let (l, g) = if algo.is_stochastic() {
-                let rows = self.batchers[m].next_batch();
-                self.nodes[m].oracle.batch(&theta, &rows)?
-            } else {
-                self.nodes[m].oracle.full(&theta)?
-            };
-            losses.push(l);
-            grads.push(g);
+
+        // EF error memories must exist before the fan-out
+        if algo == Algo::EfSgd && self.ef.is_empty() {
+            self.ef = (0..m_all).map(|_| SignEfCompressor::new(dim)).collect();
         }
 
-        // 3. uploads + server aggregation
+        // minibatch draws, one per worker from its own deterministic
+        // stream (drawn up front so the fan-out borrows them immutably)
+        let rows: Vec<Option<Vec<usize>>> = if algo.is_stochastic() {
+            self.batchers.iter_mut().map(|b| Some(b.next_batch())).collect()
+        } else {
+            (0..m_all).map(|_| None).collect()
+        };
+
+        // criterion broadcast term — a function of server state *before*
+        // this iteration's uploads, identical for every worker
+        let rhs_common = if lazy {
+            match self.cfg.criterion.mode {
+                crate::config::CritMode::Movement => self.server.criterion_rhs_common(
+                    self.cfg.alpha,
+                    m_all,
+                    &self.cfg.criterion.xi,
+                ),
+                crate::config::CritMode::GradNorm => {
+                    // motivating rule (13): ||∇^{k-1}||² / (2M²)
+                    tensor::norm2_sq(&self.server.agg)
+                        / (2.0 * (m_all * m_all) as f64)
+                }
+            }
+        } else {
+            0.0
+        };
+
+        let ctx = LocalCtx {
+            theta: &theta,
+            rows: &rows,
+            algo,
+            force_upload: matches!(algo, Algo::Gd | Algo::Qgd),
+            rhs_common,
+            t_max: self.cfg.criterion.t_max,
+            qsgd: self.qsgd,
+            sparsifier: self.sparsifier,
+            seed: self.cfg.seed,
+            iter: k,
+        };
+
+        // 2. parallel local phase: gradient + decision + encoding per
+        // worker.  Results come back in index order either way.
+        let locals: Vec<Result<LocalOut>> = match &self.pool {
+            Some(pool) => {
+                let nodes = SendPtr::new(&mut self.nodes[..]);
+                let ef = SendPtr::new(&mut self.ef[..]);
+                pool.scatter(m_all, move |m| {
+                    // SAFETY: scatter runs each index exactly once, so
+                    // these &muts are disjoint per worker; both vectors
+                    // outlive the scatter's join and have no other
+                    // borrows while it runs.
+                    let node = unsafe { nodes.get_mut(m) };
+                    let ef_m = if ctx.algo == Algo::EfSgd {
+                        Some(unsafe { ef.get_mut(m) })
+                    } else {
+                        None
+                    };
+                    local_phase(&ctx, m, node, ef_m)
+                })
+            }
+            None => (0..m_all)
+                .map(|m| {
+                    let ef_m = if algo == Algo::EfSgd {
+                        Some(&mut self.ef[m])
+                    } else {
+                        None
+                    };
+                    local_phase(&ctx, m, &mut self.nodes[m], ef_m)
+                })
+                .collect(),
+        };
+
+        // 3. sequential wire phase: uploads in worker index order so the
+        // bit/round counters and the latency clock advance exactly as a
+        // sequential run's would; mirror commits ride along post-wire.
         let rounds_before = self.net.uplink_rounds();
         let bits_before = self.net.uplink_bits();
         let mut max_eps_sq = 0.0f64;
-        match algo {
-            Algo::Gd | Algo::Qgd | Algo::Lag | Algo::Laq | Algo::Slaq => {
-                let force = matches!(algo, Algo::Gd | Algo::Qgd);
-                let rhs_common = match self.cfg.criterion.mode {
-                    crate::config::CritMode::Movement => self.server.criterion_rhs_common(
-                        self.cfg.alpha,
-                        m_all,
-                        &self.cfg.criterion.xi,
-                    ),
-                    crate::config::CritMode::GradNorm => {
-                        // motivating rule (13): ||∇^{k-1}||² / (2M²)
-                        tensor::norm2_sq(&self.server.agg)
-                            / (2.0 * (m_all * m_all) as f64)
-                    }
-                };
-                for m in 0..m_all {
-                    let out = self.nodes[m].lazy_step(
-                        &grads[m],
-                        losses[m],
-                        rhs_common,
-                        self.cfg.criterion.t_max,
-                        force,
-                    )?;
-                    max_eps_sq = max_eps_sq.max(out.eps_sq);
-                    if let Some(payload) = out.upload {
-                        let received = self.net.upload(m, payload)?;
-                        self.server.absorb_lazy(m, &received)?;
-                    }
-                }
-            }
-            Algo::Sgd | Algo::Qsgd | Algo::Ssgd | Algo::EfSgd => {
-                if algo == Algo::EfSgd && self.ef.is_empty() {
-                    self.ef = (0..m_all).map(|_| SignEfCompressor::new(dim)).collect();
-                }
-                self.server.reset_agg();
-                for m in 0..m_all {
-                    let payload = match algo {
-                        Algo::Sgd => crate::comm::Payload::Dense(grads[m].clone()),
-                        Algo::Qsgd => {
-                            crate::comm::Payload::Qsgd(self.qsgd.quantize(&grads[m], &mut self.rng))
-                        }
-                        Algo::Ssgd => crate::comm::Payload::Sparse(
-                            self.sparsifier.sparsify(&grads[m], &mut self.rng),
-                        ),
-                        Algo::EfSgd => {
-                            crate::comm::Payload::Sign(self.ef[m].compress(&grads[m]))
-                        }
-                        _ => unreachable!(),
-                    };
-                    let received = self.net.upload(m, payload)?;
+        let mut loss_total = 0.0f64;
+        let mut gsum = vec![0.0f32; dim];
+        if !lazy {
+            self.server.reset_agg();
+        }
+        for (m, res) in locals.into_iter().enumerate() {
+            let out = res?;
+            loss_total += out.loss;
+            tensor::axpy(1.0, &out.grad, &mut gsum);
+            if let Some(payload) = out.payload {
+                let received = self.net.upload(m, payload)?;
+                if lazy {
+                    self.server.absorb_lazy(m, &received)?;
+                } else {
                     self.server.absorb_fresh(&received)?;
                 }
+            }
+            if let Some(decision) = out.decision {
+                max_eps_sq = max_eps_sq.max(decision.eps_sq);
+                self.nodes[m].commit(&decision);
             }
         }
 
@@ -233,15 +314,9 @@ impl Trainer {
         self.server.apply_update(self.cfg.alpha);
         self.k += 1;
 
-        // metrics
-        let loss: f64 = losses.iter().sum();
-        let mut gsum = vec![0.0f32; dim];
-        for g in &grads {
-            tensor::axpy(1.0, g, &mut gsum);
-        }
         Ok(StepStats {
             iter: k,
-            loss,
+            loss: loss_total,
             grad_norm_sq: tensor::norm2_sq(&gsum),
             uploads: (self.net.uplink_rounds() - rounds_before) as usize,
             bits: self.net.uplink_bits() - bits_before,
@@ -394,6 +469,75 @@ impl Trainer {
     pub fn server_mirror(&self, m: usize) -> &[f32] {
         &self.server.q_mirror[m]
     }
+}
+
+/// Inputs shared by every worker's local phase — copies and immutable
+/// borrows only, so the fan-out's per-worker `&mut` node access is the
+/// sole mutable state in flight.
+struct LocalCtx<'a> {
+    theta: &'a [f32],
+    rows: &'a [Option<Vec<usize>>],
+    algo: Algo,
+    force_upload: bool,
+    rhs_common: f64,
+    t_max: usize,
+    qsgd: QsgdQuantizer,
+    sparsifier: Sparsifier,
+    seed: u64,
+    iter: usize,
+}
+
+/// What one worker's local phase hands the sequential wire phase.
+struct LocalOut {
+    loss: f64,
+    grad: Vec<f32>,
+    /// Some = goes on the uplink (always for fresh-sum algorithms; iff
+    /// the criterion fired for the lazy ones)
+    payload: Option<Payload>,
+    /// lazy path only: the state transition to commit post-wire
+    decision: Option<LazyDecision>,
+}
+
+/// The embarrassingly parallel half of one iteration for worker `m`:
+/// local gradient, upload decision, payload encoding.  Mutates only this
+/// worker's node (scratch buffer) and, for EF-SGD, this worker's error
+/// memory; all randomness comes from the counter-based stream
+/// `Rng::stream(seed ^ 0xC0DEC, m, k)`, making the result independent of
+/// which thread runs it and when.
+fn local_phase(
+    ctx: &LocalCtx<'_>,
+    m: usize,
+    node: &mut WorkerNode<dyn WorkerGrad>,
+    ef: Option<&mut SignEfCompressor>,
+) -> Result<LocalOut> {
+    let (loss, grad) = match &ctx.rows[m] {
+        Some(rows) => node.oracle.batch(ctx.theta, rows)?,
+        None => node.oracle.full(ctx.theta)?,
+    };
+    let (payload, decision) = match ctx.algo {
+        Algo::Gd | Algo::Qgd | Algo::Lag | Algo::Laq | Algo::Slaq => {
+            let mut d =
+                node.lazy_decide(&grad, ctx.rhs_common, ctx.t_max, ctx.force_upload);
+            (d.payload.take(), Some(d))
+        }
+        Algo::Sgd => (Some(Payload::Dense(grad.clone())), None),
+        Algo::Qsgd => {
+            let mut rng = Rng::stream(ctx.seed ^ 0xC0DEC, m as u64, ctx.iter as u64);
+            (Some(Payload::Qsgd(ctx.qsgd.quantize(&grad, &mut rng))), None)
+        }
+        Algo::Ssgd => {
+            let mut rng = Rng::stream(ctx.seed ^ 0xC0DEC, m as u64, ctx.iter as u64);
+            (
+                Some(Payload::Sparse(ctx.sparsifier.sparsify(&grad, &mut rng))),
+                None,
+            )
+        }
+        Algo::EfSgd => {
+            let ef = ef.expect("EF memories are sized before the fan-out");
+            (Some(Payload::Sign(ef.compress(&grad))), None)
+        }
+    };
+    Ok(LocalOut { loss, grad, payload, decision })
 }
 
 /// Map an [`Algo`] to the lazy codec it uses (where applicable).

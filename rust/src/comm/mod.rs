@@ -9,6 +9,29 @@
 //! clock under a latency model `T(msg) = t_fixed + bits * t_per_bit`,
 //! with sequential uplinks (workers can't talk over each other — the
 //! paper's §1.2 motivation for cutting rounds) and broadcast downlink.
+//!
+//! # Threading model: why accounting stays exact under the parallel step
+//!
+//! [`Network`] is deliberately **not** shared across threads.  The
+//! trainer's local phase (gradients, criterion, encoding) fans out over a
+//! pool, but every [`Network::upload`] happens afterwards on the
+//! coordinator thread, *in worker index order* — the wire phase.  Three
+//! invariants follow:
+//!
+//! * **bits** — [`Payload::wire_bits`] is a pure function of the payload,
+//!   and `rust/tests/prop_quant.rs` pins it to the physically serialized
+//!   size, so the counter equals Σ(serialized bits) regardless of which
+//!   thread built each payload;
+//! * **rounds** — one `upload` call per transmitting worker, issued
+//!   sequentially, so round counts and per-worker counters are schedule
+//!   independent;
+//! * **latency clock** — `sim_time` models a shared uplink (messages
+//!   serialize on the wire even when worker *compute* overlaps), so
+//!   summing message times in worker order is not an approximation; it is
+//!   the model.
+//!
+//! Hence a parallel run's trace is bit-identical to a sequential run's
+//! (`rust/tests/parallel_equivalence.rs`).
 
 use crate::quant::innovation::QuantizedInnovation;
 use crate::quant::qsgd::QsgdMessage;
@@ -17,7 +40,7 @@ use crate::quant::sparsify::SparseMessage;
 use crate::Result;
 
 /// What a worker can put on the uplink.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum Payload {
     /// full-precision dense vector (GD/LAG/SGD): 32·p bits
     Dense(Vec<f32>),
@@ -45,8 +68,9 @@ impl Payload {
 
     /// Serialize + deserialize through the physical wire format, returning
     /// what the server receives.  Dense payloads are IEEE bits already and
-    /// pass through unchanged.
-    fn through_wire(self) -> Result<Payload> {
+    /// pass through unchanged.  Public so the property tests can pin the
+    /// roundtrip-exactness invariant the wire phase relies on.
+    pub fn through_wire(self) -> Result<Payload> {
         Ok(match self {
             Payload::Dense(v) => Payload::Dense(v),
             Payload::Innovation(qi) => {

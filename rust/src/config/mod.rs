@@ -75,6 +75,16 @@ impl Algo {
         )
     }
 
+    /// Does this algorithm run the lazy-aggregation server path (mirror
+    /// state + selection criterion)?  GD/QGD are the degenerate
+    /// forced-upload members of that family.
+    pub fn is_lazy(&self) -> bool {
+        matches!(
+            self,
+            Algo::Gd | Algo::Qgd | Algo::Lag | Algo::Laq | Algo::Slaq
+        )
+    }
+
     pub fn all() -> [Algo; 9] {
         [Algo::Gd, Algo::Qgd, Algo::Lag, Algo::Laq,
          Algo::Sgd, Algo::Qsgd, Algo::Ssgd, Algo::Slaq, Algo::EfSgd]
@@ -199,6 +209,16 @@ impl DataCfg {
     }
 }
 
+/// Default worker fan-out: the `LAQ_THREADS` environment variable when
+/// set (this is how `rust/ci.sh` runs the whole suite over both the
+/// sequential and the parallel code path), else 1 (sequential).
+fn default_threads() -> usize {
+    std::env::var("LAQ_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1)
+}
+
 /// A full training run.
 #[derive(Clone, Debug)]
 pub struct RunCfg {
@@ -224,6 +244,13 @@ pub struct RunCfg {
     pub seed: u64,
     /// record a metrics point every `record_every` iterations
     pub record_every: usize,
+    /// worker fan-out for the trainer's local phase: 1 = sequential,
+    /// 0 = auto-size to the machine, N > 1 = fixed pool of N threads
+    /// (capped at the worker count).  Parallel and sequential schedules
+    /// produce bit-identical traces (`rust/tests/parallel_equivalence.rs`),
+    /// so this is purely a wall-clock knob.  Default: `LAQ_THREADS` env
+    /// var if set, else 1.
+    pub threads: usize,
 }
 
 impl RunCfg {
@@ -245,6 +272,7 @@ impl RunCfg {
             target_residual: None,
             seed: 1,
             record_every: 1,
+            threads: default_threads(),
         }
     }
 
@@ -321,6 +349,9 @@ impl RunCfg {
         }
         if let Some(v) = run.get("target_residual").as_f64() {
             self.target_residual = Some(v);
+        }
+        if let Some(v) = run.get("threads").as_usize() {
+            self.threads = v;
         }
         let crit = j.get("criterion");
         if !crit.is_null() {
@@ -399,6 +430,7 @@ impl RunCfg {
                 ("batch", Json::Num(self.batch as f64)),
                 ("l2", Json::Num(self.l2)),
                 ("seed", Json::Num(self.seed as f64)),
+                ("threads", Json::Num(self.threads as f64)),
             ])),
             ("criterion", Json::obj(vec![
                 ("d", Json::Num(self.criterion.d as f64)),
@@ -487,5 +519,28 @@ mod tests {
     fn stochastic_flag() {
         assert!(Algo::Slaq.is_stochastic());
         assert!(!Algo::Laq.is_stochastic());
+    }
+
+    #[test]
+    fn lazy_flag_partitions_the_zoo() {
+        for a in Algo::all() {
+            let lazy = a.is_lazy();
+            let fresh = matches!(a, Algo::Sgd | Algo::Qsgd | Algo::Ssgd | Algo::EfSgd);
+            assert!(lazy != fresh, "{:?} must be exactly one of lazy/fresh", a);
+        }
+    }
+
+    #[test]
+    fn threads_knob_parses_and_roundtrips() {
+        let doc = "\n[run]\nthreads = 4\n";
+        let mut c = RunCfg::paper_logreg(Algo::Laq);
+        c.apply_json(&toml::parse(doc).unwrap()).unwrap();
+        assert_eq!(c.threads, 4);
+        let j = c.to_json();
+        let mut c2 = RunCfg::paper_logreg(Algo::Gd);
+        c2.threads = 1;
+        c2.apply_json(&j).unwrap();
+        assert_eq!(c2.threads, 4);
+        c2.validate().unwrap();
     }
 }

@@ -10,12 +10,19 @@
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 
-#[derive(Debug, thiserror::Error, PartialEq)]
-#[error("toml parse error at line {line}: {msg}")]
+#[derive(Debug, PartialEq)]
 pub struct TomlError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
 
 pub fn parse(text: &str) -> Result<Json, TomlError> {
     let mut root: BTreeMap<String, Json> = BTreeMap::new();

@@ -10,7 +10,11 @@
 //! * **clock bound** — no worker goes more than `t̄` iterations without
 //!   uploading (criterion (7b));
 //! * **exact accounting** — `Σ uploads · (32 + b·p)` equals the network's
-//!   bit counter.
+//!   bit counter;
+//! * **schedule independence** — every invariant above holds identically
+//!   under the parallel local phase (`cfg.threads > 1`), because worker
+//!   state transitions commit in the sequential wire phase
+//!   (`rust/tests/parallel_equivalence.rs`).
 
 pub mod checkpoint;
 pub mod history;

@@ -2,15 +2,28 @@
 //!
 //! A [`WorkerNode`] owns the worker's gradient oracle, its copy of the
 //! last-uploaded quantized gradient `Q_m(θ̂_m^{k-1})`, the cached error
-//! norms the criterion needs, and the silence clock `t_m`.  Its
-//! [`WorkerNode::lazy_step`] implements one iteration of Algorithm 2's
-//! inner loop for both the quantized (LAQ/SLAQ) and exact (LAG) codecs.
+//! norms the criterion needs, and the silence clock `t_m`.
+//!
+//! One Algorithm-2 worker iteration is split in two to match the
+//! trainer's two-phase step:
+//!
+//! * [`WorkerNode::lazy_decide`] — the *local* half: quantize the
+//!   innovation, evaluate criterion (7), build the would-be payload.  It
+//!   reads but never writes the mirror/clock state, so the trainer may
+//!   run it concurrently for all workers (each thread owning its node
+//!   exclusively).  The tentative reconstruction `Q_m(θ^k)` is parked in
+//!   the node's scratch buffer.
+//! * [`WorkerNode::commit`] — the *post-wire* half: on upload, promote
+//!   the scratch reconstruction to `q_prev`, refresh `ε̂²`, zero the
+//!   clock; on skip, tick the clock.  The trainer calls it in worker
+//!   order during the sequential wire phase, right after the server
+//!   absorbed the (wire-decoded) payload, so worker and server mirrors
+//!   move in lock-step.
 
 use crate::comm::Payload;
 use crate::model::WorkerGrad;
 use crate::quant::InnovationQuantizer;
 use crate::util::tensor;
-use crate::Result;
 
 /// Per-run criterion constants shared by all workers.
 #[derive(Clone, Debug)]
@@ -21,15 +34,15 @@ pub struct CriterionParams {
     pub n_workers: usize,
 }
 
-/// What one worker did this iteration.
+/// A worker's upload decision for one iteration, produced by the local
+/// phase ([`WorkerNode::lazy_decide`]) and applied to worker state by the
+/// wire phase ([`WorkerNode::commit`]).
 #[derive(Debug)]
-pub struct LazyStepOutcome {
-    /// Some(payload) if the worker uploads, None if it skips
-    pub upload: Option<Payload>,
-    /// local loss at θ^k over the evaluated rows (full shard or batch)
-    pub loss: f64,
-    /// local fresh gradient (borrowed by the caller for metrics)
-    pub grad: Vec<f32>,
+pub struct LazyDecision {
+    /// criterion verdict: true = put the payload on the uplink
+    pub upload: bool,
+    /// Some iff `upload`; the trainer takes it for [`crate::comm::Network::upload`]
+    pub payload: Option<Payload>,
     /// criterion pieces, for tracing/ablation
     pub lhs: f64,
     pub rhs: f64,
@@ -79,21 +92,26 @@ impl<W: WorkerGrad + ?Sized> WorkerNode<W> {
         self.q_prev.len()
     }
 
-    /// One Algorithm-2 worker iteration on an already-computed local
-    /// gradient `grad` (full or minibatch — the Trainer chooses).
+    /// Local phase of one Algorithm-2 worker iteration on an
+    /// already-computed local gradient `grad` (full or minibatch — the
+    /// Trainer chooses).
     ///
     /// `rhs_common` is `(1/(α²M²)) Σ_d ξ_d ||Δθ||²` from the server's
     /// history (derivable worker-side from received parameters at no
     /// communication cost).  `force_upload` disables the skip (GD/QGD
     /// behaviour).
-    pub fn lazy_step(
+    ///
+    /// Pure w.r.t. the node's criterion state: `q_prev`, `eps_hat_sq` and
+    /// `clock` are only read; the tentative reconstruction is written to
+    /// the scratch buffer for [`Self::commit`] to promote.  Safe to run
+    /// concurrently across workers (one thread per node).
+    pub fn lazy_decide(
         &mut self,
         grad: &[f32],
-        loss: f64,
         rhs_common: f64,
         t_max: usize,
         force_upload: bool,
-    ) -> Result<LazyStepOutcome> {
+    ) -> LazyDecision {
         debug_assert_eq!(grad.len(), self.dim());
         let (lhs, rhs, eps_sq, upload_payload): (f64, f64, f64, Payload) = match self.codec {
             LazyCodec::Quantized => {
@@ -115,22 +133,27 @@ impl<W: WorkerGrad + ?Sized> WorkerNode<W> {
             }
         };
 
-        let skip = !force_upload && lhs <= rhs && self.clock < t_max;
-        if skip {
-            self.clock += 1;
-            Ok(LazyStepOutcome { upload: None, loss, grad: grad.to_vec(), lhs, rhs, eps_sq })
-        } else {
+        let upload = force_upload || lhs > rhs || self.clock >= t_max;
+        LazyDecision {
+            upload,
+            payload: if upload { Some(upload_payload) } else { None },
+            lhs,
+            rhs,
+            eps_sq,
+        }
+    }
+
+    /// Wire-phase half: apply the state transition `lazy_decide` chose.
+    /// On upload the scratch reconstruction becomes the new mirror
+    /// `Q_m(θ̂_m^k)` (the server commits the identical vector from the
+    /// wire-decoded message); on skip only the silence clock moves.
+    pub fn commit(&mut self, decision: &LazyDecision) {
+        if decision.upload {
             self.q_prev.copy_from_slice(&self.q_scratch);
-            self.eps_hat_sq = eps_sq;
+            self.eps_hat_sq = decision.eps_sq;
             self.clock = 0;
-            Ok(LazyStepOutcome {
-                upload: Some(upload_payload),
-                loss,
-                grad: grad.to_vec(),
-                lhs,
-                rhs,
-                eps_sq,
-            })
+        } else {
+            self.clock += 1;
         }
     }
 }
@@ -141,6 +164,21 @@ mod tests {
     use crate::model::logreg::LogRegWorker;
     use crate::model::{LossCfg, WorkerGrad};
     use crate::util::rng::Rng;
+    use crate::Result;
+
+    /// decide + commit in one call — the fused shape the trainer's
+    /// two-phase step unrolls.
+    fn step<W: WorkerGrad + ?Sized>(
+        n: &mut WorkerNode<W>,
+        grad: &[f32],
+        rhs_common: f64,
+        t_max: usize,
+        force_upload: bool,
+    ) -> LazyDecision {
+        let d = n.lazy_decide(grad, rhs_common, t_max, force_upload);
+        n.commit(&d);
+        d
+    }
 
     struct FixedGrad {
         dim: usize,
@@ -174,8 +212,8 @@ mod tests {
     fn first_iteration_uploads() {
         let mut n = node(3, LazyCodec::Quantized);
         let g = rand_grad(1, 32);
-        let out = n.lazy_step(&g, 0.0, 0.0, 100, false).unwrap();
-        assert!(out.upload.is_some(), "lhs={} rhs={}", out.lhs, out.rhs);
+        let out = step(&mut n, &g, 0.0, 100, false);
+        assert!(out.payload.is_some(), "lhs={} rhs={}", out.lhs, out.rhs);
         assert_eq!(n.clock, 0);
     }
 
@@ -185,9 +223,9 @@ mod tests {
         // innovation tiny; criterion (with slack 3||ε||²) must skip
         let mut n = node(3, LazyCodec::Quantized);
         let g = rand_grad(2, 32);
-        let _ = n.lazy_step(&g, 0.0, 0.0, 100, false).unwrap();
-        let out2 = n.lazy_step(&g, 0.0, 0.0, 100, false).unwrap();
-        assert!(out2.upload.is_none(), "lhs={} rhs={}", out2.lhs, out2.rhs);
+        let _ = step(&mut n, &g, 0.0, 100, false);
+        let out2 = step(&mut n, &g, 0.0, 100, false);
+        assert!(out2.payload.is_none(), "lhs={} rhs={}", out2.lhs, out2.rhs);
         assert_eq!(n.clock, 1);
     }
 
@@ -195,10 +233,10 @@ mod tests {
     fn forced_upload_after_t_max() {
         let mut n = node(8, LazyCodec::Quantized);
         let g = rand_grad(3, 32);
-        let _ = n.lazy_step(&g, 0.0, 0.0, 3, false).unwrap();
+        let _ = step(&mut n, &g, 0.0, 3, false);
         let mut uploads = 0;
         for _ in 0..6 {
-            if n.lazy_step(&g, 0.0, 1e9, 3, false).unwrap().upload.is_some() {
+            if step(&mut n, &g, 1e9, 3, false).payload.is_some() {
                 uploads += 1;
                 // clock must reset after forced refresh
                 assert_eq!(n.clock, 0);
@@ -213,8 +251,8 @@ mod tests {
         let mut n = node(3, LazyCodec::Quantized);
         let g = rand_grad(4, 32);
         for _ in 0..5 {
-            let out = n.lazy_step(&g, 0.0, f64::INFINITY, 100, true).unwrap();
-            assert!(out.upload.is_some());
+            let out = step(&mut n, &g, f64::INFINITY, 100, true);
+            assert!(out.payload.is_some());
         }
     }
 
@@ -222,8 +260,8 @@ mod tests {
     fn exact_codec_uploads_dense_and_tracks_mirror() {
         let mut n = node(3, LazyCodec::Exact);
         let g = rand_grad(5, 32);
-        let out = n.lazy_step(&g, 0.0, 0.0, 100, false).unwrap();
-        match out.upload.unwrap() {
+        let out = step(&mut n, &g, 0.0, 100, false);
+        match out.payload.unwrap() {
             Payload::Dense(v) => assert_eq!(v, g),
             other => panic!("{other:?}"),
         }
@@ -235,12 +273,34 @@ mod tests {
     fn skip_preserves_q_prev() {
         let mut n = node(3, LazyCodec::Quantized);
         let g = rand_grad(6, 32);
-        n.lazy_step(&g, 0.0, 0.0, 100, false).unwrap();
+        step(&mut n, &g, 0.0, 100, false);
         let q_before = n.q_prev.clone();
         // big rhs -> skip
-        let out = n.lazy_step(&g, 0.0, 1e9, 100, false).unwrap();
-        assert!(out.upload.is_none());
+        let out = step(&mut n, &g, 1e9, 100, false);
+        assert!(out.payload.is_none());
         assert_eq!(n.q_prev, q_before);
+    }
+
+    #[test]
+    fn decide_is_pure_until_commit() {
+        let mut n = node(3, LazyCodec::Quantized);
+        let g = rand_grad(8, 32);
+        let before = (n.q_prev.clone(), n.clock, n.eps_hat_sq);
+        let d = n.lazy_decide(&g, 0.0, 100, false);
+        assert!(d.upload && d.payload.is_some());
+        // the local phase left all criterion state untouched
+        assert_eq!((n.q_prev.clone(), n.clock, n.eps_hat_sq), before);
+        n.commit(&d);
+        assert_ne!(n.q_prev, before.0);
+        assert_eq!(n.clock, 0);
+        assert_eq!(n.eps_hat_sq, d.eps_sq);
+        // skip decision: commit only ticks the clock
+        let d2 = n.lazy_decide(&g, 1e12, 100, false);
+        assert!(!d2.upload && d2.payload.is_none());
+        let q_after = n.q_prev.clone();
+        n.commit(&d2);
+        assert_eq!(n.q_prev, q_after);
+        assert_eq!(n.clock, 1);
     }
 
     #[test]
@@ -252,8 +312,8 @@ mod tests {
             WorkerNode::new(Box::new(w), 3, LazyCodec::Quantized);
         let theta = vec![0.0f32; 18];
         let (loss, grad) = n.oracle.full(&theta).unwrap();
-        let out = n.lazy_step(&grad, loss, 0.0, 100, false).unwrap();
-        assert!(out.upload.is_some());
-        assert!(out.loss > 0.0);
+        let out = step(&mut n, &grad, 0.0, 100, false);
+        assert!(out.payload.is_some());
+        assert!(loss > 0.0);
     }
 }

@@ -98,7 +98,7 @@ pub fn sweep(
     let dir = Path::new(out_dir).join(exp_id);
     let mut results = Vec::with_capacity(cfgs.len());
     for cfg in cfgs {
-        log::info!("[{exp_id}] running {} ({})", cfg.algo.name(), cfg.model.name());
+        crate::log_info!("[{exp_id}] running {} ({})", cfg.algo.name(), cfg.model.name());
         let res = run_one(cfg, stop_at_loss)?;
         res.write_to(&dir, &cfg.algo.name().to_lowercase())
             .map_err(crate::Error::Io)?;

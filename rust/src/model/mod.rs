@@ -9,7 +9,7 @@
 //! Two implementations:
 //! * native rust mirrors ([`logreg`], [`mlp`]) — fast, used by the large
 //!   experiment sweeps and as the test oracle;
-//! * the PJRT path ([`crate::runtime::PjrtWorkerGrad`]) executing the AOT
+//! * the PJRT path ([`crate::runtime::PjrtGradWorker`]) executing the AOT
 //!   HLO artifacts — the production configuration, numerically
 //!   cross-checked against the native mirrors in `rust/tests/`.
 
@@ -21,10 +21,13 @@ use crate::Result;
 
 /// Per-worker gradient oracle over a flat parameter vector.
 ///
-/// Not `Send`-bound: PJRT-backed workers hold `Rc<Runtime>` (raw C++
-/// handles).  The coordinator's parallel scatter path takes an extra
-/// `+ Send` bound and is only available to the native backends.
-pub trait WorkerGrad {
+/// `Send` is a supertrait: the trainer's parallel local phase fans one
+/// oracle evaluation per worker out over a thread pool, handing each
+/// thread exclusive `&mut` access to its worker's node.  Native oracles
+/// are plain data; PJRT-backed oracles share the runtime via
+/// `Arc<Runtime>` with a mutex-guarded executable cache (see
+/// [`crate::runtime::Runtime`]).
+pub trait WorkerGrad: Send {
     /// Flat parameter dimension p.
     fn dim(&self) -> usize;
 

@@ -10,15 +10,22 @@
 //! Interchange is HLO text, not serialized protos: jax ≥ 0.5 emits 64-bit
 //! instruction ids that xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids (see /opt/xla-example/README.md and DESIGN.md §2).
+//!
+//! Offline builds use the in-tree [`xla`] stub module instead of the
+//! vendored crate; [`Runtime::open`] then fails cleanly and every caller
+//! (examples, the `pjrt` backend, the artifact tests) already treats that
+//! as "artifacts not available" and skips.  Re-linking the real crate
+//! additionally needs a `Send` strategy for the raw PJRT handles — see
+//! the note at the top of [`xla`].
 
 pub mod worker;
+pub mod xla;
 
 pub use worker::PjrtGradWorker;
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use crate::util::json::Json;
 use crate::{Error, Result};
@@ -138,19 +145,23 @@ impl Value {
 
 /// The PJRT session: client + manifest + compile-on-demand executable cache.
 ///
-/// Not `Send`: PJRT handles are raw pointers.  Workers using the runtime
-/// share it through `Rc<Runtime>` on one thread (the coordinator loop is
-/// sequential per iteration by design — determinism first; see DESIGN.md).
+/// Shared as `Arc<Runtime>` so PJRT-backed workers can ride the trainer's
+/// parallel local phase; the executable cache is mutex-guarded and
+/// `call()` takes `&self`, so concurrent gradient evaluations serialize
+/// only on cache misses (compilation), never on execution dispatch.  The
+/// real PJRT handles are raw pointers owned by one process-wide client;
+/// the in-tree [`xla`] stub's types are plain host data, and a build
+/// against the vendored bindings must keep this mutex discipline.
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
     artifacts: HashMap<String, ArtifactSig>,
-    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    exes: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
 }
 
 impl Runtime {
     /// Open `artifacts/` (reads `manifest.json`, creates the CPU client).
-    pub fn open(dir: impl AsRef<Path>) -> Result<Rc<Runtime>> {
+    pub fn open(dir: impl AsRef<Path>) -> Result<Arc<Runtime>> {
         let dir = dir.as_ref().to_path_buf();
         let man_path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&man_path).map_err(|e| {
@@ -197,17 +208,17 @@ impl Runtime {
             artifacts.insert(name, sig);
         }
         let client = xla::PjRtClient::cpu()?;
-        log::info!(
+        crate::log_info!(
             "runtime: PJRT platform={} devices={} artifacts={}",
             client.platform_name(),
             client.device_count(),
             artifacts.len()
         );
-        Ok(Rc::new(Runtime {
+        Ok(Arc::new(Runtime {
             client,
             dir,
             artifacts,
-            exes: RefCell::new(HashMap::new()),
+            exes: Mutex::new(HashMap::new()),
         }))
     }
 
@@ -224,9 +235,9 @@ impl Runtime {
     }
 
     /// Compile (or fetch cached) executable for `name`.
-    fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.exes.borrow().get(name) {
-            return Ok(Rc::clone(e));
+    fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.lock().unwrap().get(name) {
+            return Ok(Arc::clone(e));
         }
         let sig = self.signature(name)?;
         let path = self.dir.join(&sig.file);
@@ -236,9 +247,12 @@ impl Runtime {
                 .ok_or_else(|| Error::Runtime("non-utf8 artifact path".into()))?,
         )?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Rc::new(self.client.compile(&comp)?);
-        log::info!("runtime: compiled '{name}' in {:.1?}", t0.elapsed());
-        self.exes.borrow_mut().insert(name.to_string(), Rc::clone(&exe));
+        let exe = Arc::new(self.client.compile(&comp)?);
+        crate::log_info!("runtime: compiled '{name}' in {:.1?}", t0.elapsed());
+        self.exes
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), Arc::clone(&exe));
         Ok(exe)
     }
 

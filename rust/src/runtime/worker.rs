@@ -2,7 +2,7 @@
 //! gradient evaluation is one `call()` into the AOT-compiled `*_grad`
 //! artifact (L2 jax graph containing the L1 Pallas kernels).
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use super::{Runtime, Value};
 use crate::data::Dataset;
@@ -13,7 +13,7 @@ use crate::{Error, Result};
 /// (logreg / mlp): artifacts with signature
 /// `(theta f32[p], x f32[n,f], y i32[n]) -> (loss f32[], grad f32[p])`.
 pub struct PjrtGradWorker {
-    rt: Rc<Runtime>,
+    rt: Arc<Runtime>,
     /// artifact evaluating the full shard (e.g. "logreg_grad")
     art_full: String,
     /// artifact evaluating one minibatch (e.g. "logreg_grad_batch")
@@ -28,7 +28,7 @@ pub struct PjrtGradWorker {
 
 impl PjrtGradWorker {
     pub fn new(
-        rt: Rc<Runtime>,
+        rt: Arc<Runtime>,
         art_full: &str,
         art_batch: Option<&str>,
         shard: Dataset,
@@ -127,7 +127,7 @@ impl WorkerGrad for PjrtGradWorker {
 /// pool of token sequences; `full` evaluates a fixed deterministic batch,
 /// `batch` selects sequences by index.
 pub struct PjrtTfmWorker {
-    rt: Rc<Runtime>,
+    rt: Arc<Runtime>,
     art: String,
     /// pool of sequences, each `seq_len` long
     pool: Vec<Vec<i32>>,
@@ -137,7 +137,7 @@ pub struct PjrtTfmWorker {
 }
 
 impl PjrtTfmWorker {
-    pub fn new(rt: Rc<Runtime>, art: &str, pool: Vec<Vec<i32>>) -> Result<Self> {
+    pub fn new(rt: Arc<Runtime>, art: &str, pool: Vec<Vec<i32>>) -> Result<Self> {
         let sig = rt.signature(art)?;
         if sig.inputs.len() != 2 || sig.outputs.len() != 2 {
             return Err(Error::Runtime(format!("'{art}' is not a tfm grad artifact")));

@@ -1,0 +1,201 @@
+//! Offline stand-in for the vendored `xla` crate (PJRT bindings).
+//!
+//! The CI container for this repo has no crates.io access and no vendored
+//! `xla` source tree, so the real bindings cannot be linked.  This module
+//! mirrors the exact API surface `runtime/mod.rs` consumes — literals,
+//! client, HLO-text loading, compile, execute — with host-side types that
+//! compile everywhere.  [`PjRtClient::cpu`] fails with a clear message, so
+//! every PJRT-dependent path degrades the same way a missing `artifacts/`
+//! directory does: `Runtime::open` returns an error and the runtime tests
+//! print a SKIP notice.  Swapping the real crate back in means deleting
+//! `pub mod xla;` in `runtime/mod.rs` and adding the vendored path
+//! dependency — call sites are API-compatible, **but** see the Send note
+//! below: the swap is not free.
+//!
+//! The stub types are plain owned data (no raw PJRT handles), so they are
+//! `Send + Sync` and the `Arc<Runtime>` sharing used by the parallel
+//! worker fan-out is sound.  The real bindings hold raw C++ pointers and
+//! are **not** `Send`, while `WorkerGrad` (and therefore
+//! `PjrtGradWorker`) now requires `Send` for the trainer's fan-out.  A
+//! build against the vendored crate must additionally pick a strategy:
+//! either `unsafe impl Send + Sync for Runtime` justified by the `Mutex`
+//! around the executable cache plus PJRT's own thread-safe execution
+//! contract, or keep PJRT-backed trainers on `threads = 1` (the
+//! sequential path never moves a node across threads).
+
+/// Error type matching `xla::Error`'s role (converted into
+/// [`crate::Error::Runtime`] at the boundary).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type XlaResult<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> XlaResult<T> {
+    Err(Error(
+        "PJRT runtime unavailable: this build uses the offline xla stub \
+         (src/runtime/xla.rs); link the vendored xla crate to execute AOT \
+         artifacts"
+            .into(),
+    ))
+}
+
+/// Element types a rank-1 literal can hold (f32 / i32 are the only dtypes
+/// crossing the PJRT boundary in this project).
+pub trait LiteralElement: Copy {
+    fn wrap(v: &[Self]) -> Literal;
+    fn unwrap(lit: &Literal) -> XlaResult<Vec<Self>>;
+}
+
+impl LiteralElement for f32 {
+    fn wrap(v: &[Self]) -> Literal {
+        Literal::F32(v.to_vec())
+    }
+    fn unwrap(lit: &Literal) -> XlaResult<Vec<Self>> {
+        match lit {
+            Literal::F32(v) => Ok(v.clone()),
+            _ => Err(Error("literal is not f32".into())),
+        }
+    }
+}
+
+impl LiteralElement for i32 {
+    fn wrap(v: &[Self]) -> Literal {
+        Literal::I32(v.to_vec())
+    }
+    fn unwrap(lit: &Literal) -> XlaResult<Vec<Self>> {
+        match lit {
+            Literal::I32(v) => Ok(v.clone()),
+            _ => Err(Error("literal is not i32".into())),
+        }
+    }
+}
+
+/// Host-side literal (flat storage; shape is carried by the manifest).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Literal {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    /// Rank-1 literal over a host slice.
+    pub fn vec1<T: LiteralElement>(v: &[T]) -> Literal {
+        T::wrap(v)
+    }
+
+    /// Reshape is a no-op on the stub's flat storage (the manifest is the
+    /// source of shape truth; `Runtime::call` validates element counts).
+    pub fn reshape(self, _dims: &[i64]) -> XlaResult<Literal> {
+        Ok(self)
+    }
+
+    pub fn to_vec<T: LiteralElement>(&self) -> XlaResult<Vec<T>> {
+        T::unwrap(self)
+    }
+
+    pub fn to_tuple(self) -> XlaResult<Vec<Literal>> {
+        match self {
+            Literal::Tuple(v) => Ok(v),
+            other => Ok(vec![other]),
+        }
+    }
+}
+
+/// Parsed HLO module (the stub never parses; loading fails first).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> XlaResult<Self> {
+        unavailable()
+    }
+}
+
+/// Compilable computation.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device buffer handle returned by an execution.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> XlaResult<Literal> {
+        unavailable()
+    }
+}
+
+/// Compiled executable.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Mirrors `xla::PjRtLoadedExecutable::execute` (replica-major result).
+    pub fn execute<T>(&self, _args: &[Literal]) -> XlaResult<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// PJRT client handle.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> XlaResult<Self> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".into()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> XlaResult<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub client must fail");
+        assert!(err.to_string().contains("stub"));
+    }
+
+    #[test]
+    fn literal_roundtrips_host_data() {
+        let l = Literal::vec1(&[1.0f32, 2.0]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0]);
+        assert!(l.to_vec::<i32>().is_err());
+        let l = Literal::vec1(&[3i32]).reshape(&[1, 1]).unwrap();
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![3]);
+        let t = Literal::Tuple(vec![Literal::F32(vec![1.0])]);
+        assert_eq!(t.to_tuple().unwrap().len(), 1);
+    }
+}

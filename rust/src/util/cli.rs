@@ -21,17 +21,26 @@ pub struct Args {
     positional: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum CliError {
-    #[error("unknown flag --{0}")]
     UnknownFlag(String),
-    #[error("flag --{0} requires a value")]
     MissingValue(String),
-    #[error("missing required flag --{0}")]
     MissingRequired(String),
-    #[error("invalid value for --{0}: {1}")]
     Invalid(String, String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::UnknownFlag(n) => write!(f, "unknown flag --{n}"),
+            CliError::MissingValue(n) => write!(f, "flag --{n} requires a value"),
+            CliError::MissingRequired(n) => write!(f, "missing required flag --{n}"),
+            CliError::Invalid(n, v) => write!(f, "invalid value for --{n}: {v}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse `argv` (without the program name) against `spec`.

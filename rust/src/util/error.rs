@@ -1,32 +1,43 @@
-//! Library-wide error type.
+//! Library-wide error type (hand-rolled Display/Error impls — thiserror
+//! is not vendored offline).
 
 pub type Result<T> = std::result::Result<T, Error>;
 
-#[derive(thiserror::Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("config error: {0}")]
     Config(String),
-
-    #[error("data error: {0}")]
     Data(String),
-
-    #[error("codec error: {0}")]
     Codec(String),
-
-    #[error("runtime (PJRT) error: {0}")]
     Runtime(String),
-
-    #[error("experiment error: {0}")]
     Experiment(String),
-
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-
-    #[error("json error: {0}")]
-    Json(#[from] crate::util::json::ParseError),
-
-    #[error("{0}")]
+    Io(std::io::Error),
+    Json(crate::util::json::ParseError),
     Msg(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Config(s) => write!(f, "config error: {s}"),
+            Error::Data(s) => write!(f, "data error: {s}"),
+            Error::Codec(s) => write!(f, "codec error: {s}"),
+            Error::Runtime(s) => write!(f, "runtime (PJRT) error: {s}"),
+            Error::Experiment(s) => write!(f, "experiment error: {s}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Json(e) => write!(f, "json error: {e}"),
+            Error::Msg(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            Error::Json(e) => Some(e),
+            _ => None,
+        }
+    }
 }
 
 impl Error {
@@ -35,8 +46,20 @@ impl Error {
     }
 }
 
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<crate::util::json::ParseError> for Error {
+    fn from(e: crate::util::json::ParseError) -> Self {
+        Error::Json(e)
+    }
+}
+
+impl From<crate::runtime::xla::Error> for Error {
+    fn from(e: crate::runtime::xla::Error) -> Self {
         Error::Runtime(format!("{e:?}"))
     }
 }
@@ -49,5 +72,14 @@ mod tests {
     fn display_variants() {
         assert_eq!(Error::msg("x").to_string(), "x");
         assert!(Error::Config("bad".into()).to_string().contains("config"));
+    }
+
+    #[test]
+    fn io_and_xla_conversions() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(e.to_string().contains("io error"));
+        let e: Error = crate::runtime::xla::Error("no pjrt".into()).into();
+        assert!(e.to_string().contains("runtime"));
     }
 }

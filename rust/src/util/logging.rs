@@ -1,53 +1,141 @@
-//! Tiny `log`-facade backend: stderr logger with level filtering via the
-//! `LAQ_LOG` environment variable (error|warn|info|debug|trace).
+//! Tiny stderr logger (the `log` crate facade is not vendored offline):
+//! level filtering via the `LAQ_LOG` environment variable
+//! (error|warn|info|debug|trace), macros [`crate::log_info!`] /
+//! [`crate::log_warn!`] / [`crate::log_error!`] / [`crate::log_debug!`] /
+//! [`crate::log_trace!`].
+//!
+//! The level is an atomic, so worker threads spawned by the parallel
+//! fan-out can log without synchronization beyond stderr's own line
+//! buffering.
 
-use log::{Level, LevelFilter, Metadata, Record};
+use std::sync::atomic::{AtomicU8, Ordering};
 
-struct StderrLogger;
-
-impl log::Log for StderrLogger {
-    fn enabled(&self, metadata: &Metadata) -> bool {
-        metadata.level() <= log::max_level()
-    }
-
-    fn log(&self, record: &Record) {
-        if self.enabled(record.metadata()) {
-            let tag = match record.level() {
-                Level::Error => "ERROR",
-                Level::Warn => "WARN ",
-                Level::Info => "INFO ",
-                Level::Debug => "DEBUG",
-                Level::Trace => "TRACE",
-            };
-            eprintln!("[{tag}] {}: {}", record.target(), record.args());
-        }
-    }
-
-    fn flush(&self) {}
+/// Log severity, ordered from most to least severe.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
 }
 
-static LOGGER: StderrLogger = StderrLogger;
+impl Level {
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
 
-/// Install the logger (idempotent).  Default level: info.
+/// Default level: info.
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Install the level from `LAQ_LOG` (idempotent; default: info).
 pub fn init() {
     let level = match std::env::var("LAQ_LOG").as_deref() {
-        Ok("error") => LevelFilter::Error,
-        Ok("warn") => LevelFilter::Warn,
-        Ok("debug") => LevelFilter::Debug,
-        Ok("trace") => LevelFilter::Trace,
-        _ => LevelFilter::Info,
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Info,
     };
-    // set_logger errors if already set — fine for tests calling init twice
-    let _ = log::set_logger(&LOGGER);
-    log::set_max_level(level);
+    set_max_level(level);
+}
+
+pub fn set_max_level(level: Level) {
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+#[inline]
+pub fn enabled(level: Level) -> bool {
+    level as u8 <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit one record to stderr (used through the `log_*!` macros).
+pub fn log(level: Level, target: &str, args: std::fmt::Arguments<'_>) {
+    if enabled(level) {
+        eprintln!("[{}] {}: {}", level.tag(), target, args);
+    }
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Error,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Warn,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Info,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Debug,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[macro_export]
+macro_rules! log_trace {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Trace,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
+    // one test, not two: MAX_LEVEL is process-global and cargo runs
+    // tests on parallel threads, so separate tests would race on it
     #[test]
-    fn init_is_idempotent() {
+    fn init_and_level_filtering() {
         super::init();
         super::init();
-        log::info!("logging smoke test");
+        crate::log_info!("logging smoke test");
+
+        set_max_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_max_level(Level::Info);
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
     }
 }

@@ -1,5 +1,7 @@
-//! Infrastructure substrates implemented in-repo (the image is offline:
-//! only the `xla` crate tree + anyhow/thiserror/log are vendored).
+//! Infrastructure substrates implemented in-repo (the build is fully
+//! offline and dependency-free: rng, json/toml, cli, logging, property
+//! testing, stats, tensors, bit I/O and the thread pool all live here;
+//! the PJRT `xla` bindings are stubbed in `crate::runtime::xla`).
 
 pub mod bitio;
 pub mod cli;

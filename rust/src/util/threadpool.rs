@@ -52,6 +52,12 @@ impl Pool {
     /// index order.  Blocks until all complete.  `f` only needs to be
     /// `Send + Sync` for the duration of the call (we transmute lifetimes
     /// behind a scope-join, like crossbeam's scoped threads).
+    ///
+    /// A panic inside a job is caught on the pool thread (which survives
+    /// to serve later scatters), held until **all** `n` jobs have
+    /// finished — the join is what makes the lifetime transmute sound, so
+    /// it must complete even on the failure path — and then re-raised
+    /// here with the original payload.
     pub fn scatter<T, F>(&self, n: usize, f: F) -> Vec<T>
     where
         T: Send + 'static,
@@ -60,25 +66,44 @@ impl Pool {
         if n == 0 {
             return Vec::new();
         }
-        let (done_tx, done_rx) = mpsc::channel::<(usize, T)>();
+        type JobResult<T> = std::thread::Result<T>;
+        let (done_tx, done_rx) = mpsc::channel::<(usize, JobResult<T>)>();
         // SAFETY: we join all `n` jobs via `done_rx` below before
-        // returning, so the borrow of `f` cannot outlive this frame.
+        // returning (or unwinding), so the borrow of `f` cannot outlive
+        // this frame.
         let f_ptr: &(dyn Fn(usize) -> T + Sync) = &f;
         let f_static: &'static (dyn Fn(usize) -> T + Sync) =
             unsafe { std::mem::transmute(f_ptr) };
         for i in 0..n {
             let done = done_tx.clone();
             let job: Job = Box::new(move || {
-                let out = f_static(i);
+                // AssertUnwindSafe: on Err we re-raise in the caller
+                // after the join, same observability as an uncaught panic
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    f_static(i)
+                }));
                 let _ = done.send((i, out));
             });
             self.tx.as_ref().unwrap().send(job).expect("pool alive");
         }
         drop(done_tx);
         let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        let mut first_panic = None;
         for _ in 0..n {
+            // every job sends exactly once (panics are caught above), so
+            // recv cannot fail before all n results arrive
             let (i, v) = done_rx.recv().expect("job completed");
-            slots[i] = Some(v);
+            match v {
+                Ok(v) => slots[i] = Some(v),
+                Err(p) => {
+                    if first_panic.is_none() {
+                        first_panic = Some(p);
+                    }
+                }
+            }
+        }
+        if let Some(p) = first_panic {
+            std::panic::resume_unwind(p);
         }
         slots.into_iter().map(|s| s.unwrap()).collect()
     }
@@ -90,6 +115,43 @@ impl Drop for Pool {
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
+    }
+}
+
+/// Raw base pointer into a slice, sendable across the pool's threads so a
+/// scatter can hand each job *disjoint* `&mut` access to one element
+/// (`&mut [T]` itself cannot be captured by a `Fn` closure).
+///
+/// SAFETY contract for [`SendPtr::get_mut`]: the caller must guarantee
+/// that (1) every index is dereferenced by at most one thread at a time —
+/// [`Pool::scatter`] provides this, since it runs each index exactly once
+/// — (2) indices stay within the originating slice, and (3) the slice
+/// outlives the scatter (the scatter's join provides this) with no other
+/// live borrows of it for the duration.
+pub struct SendPtr<T>(*mut T);
+
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+
+impl<T> Copy for SendPtr<T> {}
+
+impl<T: Send> SendPtr<T> {
+    pub fn new(slice: &mut [T]) -> Self {
+        Self(slice.as_mut_ptr())
+    }
+
+    /// # Safety
+    /// See the type-level contract: disjoint indices, in bounds, source
+    /// slice alive and otherwise unborrowed.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn get_mut(&self, i: usize) -> &mut T {
+        &mut *self.0.add(i)
     }
 }
 
@@ -177,8 +239,60 @@ mod tests {
     }
 
     #[test]
+    fn scatter_propagates_job_panics_and_pool_survives() {
+        let pool = Pool::new(2);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.scatter(4, |i| {
+                if i == 2 {
+                    panic!("boom");
+                }
+                i
+            })
+        }));
+        assert!(result.is_err(), "job panic must reach the caller");
+        // the pool threads survived and keep serving jobs
+        let v = pool.scatter(3, |i| i + 1);
+        assert_eq!(v, vec![1, 2, 3]);
+    }
+
+    #[test]
     fn par_map_matches_serial() {
         let v = par_map(8, |i| i * 3);
         assert_eq!(v, (0..8).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn send_ptr_gives_disjoint_mutable_access() {
+        let pool = Pool::new(4);
+        let mut data: Vec<Vec<u64>> = (0..32).map(|i| vec![i as u64]).collect();
+        let ptr = SendPtr::new(&mut data[..]);
+        let lens = pool.scatter(32, move |i| {
+            // SAFETY: scatter runs each index exactly once; `data` is
+            // alive and unborrowed until the scatter joins below.
+            let v = unsafe { ptr.get_mut(i) };
+            v.push(i as u64 * 2);
+            v.len()
+        });
+        assert!(lens.iter().all(|&l| l == 2));
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(v, &vec![i as u64, i as u64 * 2]);
+        }
+    }
+
+    #[test]
+    fn nested_scatter_on_distinct_pools_completes() {
+        // the trainer's worker fan-out runs on its own pool while the
+        // model layer scatters row chunks onto the global pool from
+        // inside those jobs — distinct pools, so no job-waits-on-job
+        // deadlock is possible
+        let outer = Pool::new(3);
+        let out = outer.scatter(6, |i| {
+            let inner: Vec<usize> = global().scatter(4, move |j| i * 10 + j);
+            inner.into_iter().sum::<usize>()
+        });
+        assert_eq!(out.len(), 6);
+        for (i, s) in out.iter().enumerate() {
+            assert_eq!(*s, i * 40 + 6);
+        }
     }
 }

@@ -9,9 +9,9 @@
 use laq::algo::{build_native, build_pjrt};
 use laq::config::{Algo, RunCfg};
 use laq::runtime::Runtime;
-use std::rc::Rc;
+use std::sync::Arc;
 
-fn runtime() -> Option<Rc<Runtime>> {
+fn runtime() -> Option<Arc<Runtime>> {
     match Runtime::open("artifacts") {
         Ok(rt) => Some(rt),
         Err(e) => {

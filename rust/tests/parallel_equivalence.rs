@@ -1,0 +1,147 @@
+//! Cross-algorithm determinism: the trainer's parallel local phase
+//! (`threads = 4`) must be **bit-for-bit** indistinguishable from the
+//! sequential schedule (`threads = 1`) — same losses, same uplink bits
+//! and rounds, same simulated time, same final θ.  This is the contract
+//! the two-phase step refactor makes true by construction:
+//!
+//! * all per-worker randomness is counter-based (`Rng::stream(seed, m, k)`),
+//!   a pure function of run seed, worker index and iteration — no shared
+//!   generator whose draw order depends on scheduling;
+//! * every upload passes through `Network::upload` in worker index order
+//!   during the sequential wire phase, so accounting and the latency
+//!   clock cannot observe thread interleaving;
+//! * floating-point reductions (loss sum, gradient-norm accumulation,
+//!   server absorbs) all run on the coordinator thread in index order.
+
+use laq::config::{Algo, RunCfg};
+
+fn cfg_for(algo: Algo, threads: usize) -> RunCfg {
+    let mut c = RunCfg::paper_logreg(algo);
+    c.data.name = "ijcnn1".into();
+    c.data.n_train = 240;
+    c.data.n_test = 60;
+    c.workers = 4;
+    c.iters = 40;
+    c.batch = 40;
+    c.record_every = 1;
+    c.threads = threads;
+    if algo.is_stochastic() {
+        c.alpha = 0.01;
+    }
+    c
+}
+
+/// Everything observable about a run, collected per iteration.
+#[derive(Debug, PartialEq)]
+struct Trace {
+    // (loss, grad_norm_sq, bits, uploads, max_eps_sq) per step — f64
+    // compared exactly: the contract is bit-for-bit, not approximate
+    steps: Vec<(f64, f64, u64, usize, f64)>,
+    rounds: u64,
+    bits: u64,
+    sim_time: f64,
+    per_worker_rounds: Vec<u64>,
+    clocks: Vec<usize>,
+    theta: Vec<f32>,
+}
+
+fn run_trace(cfg: &RunCfg) -> Trace {
+    let mut t = laq::algo::build_native(cfg).unwrap();
+    let mut steps = Vec::with_capacity(cfg.iters);
+    for _ in 0..cfg.iters {
+        let s = t.step().unwrap();
+        steps.push((s.loss, s.grad_norm_sq, s.bits, s.uploads, s.max_eps_sq));
+    }
+    Trace {
+        steps,
+        rounds: t.net.uplink_rounds(),
+        bits: t.net.uplink_bits(),
+        sim_time: t.net.sim_time(),
+        per_worker_rounds: t.net.per_worker_rounds().to_vec(),
+        clocks: t.clocks(),
+        theta: t.theta().to_vec(),
+    }
+}
+
+#[test]
+fn all_nine_algorithms_are_schedule_independent() {
+    for algo in Algo::all() {
+        let seq = run_trace(&cfg_for(algo, 1));
+        let par = run_trace(&cfg_for(algo, 4));
+        assert_eq!(
+            seq, par,
+            "{}: threads=4 trace diverged from threads=1",
+            algo.name()
+        );
+    }
+}
+
+#[test]
+fn auto_thread_count_matches_sequential() {
+    // threads = 0 resolves to available_parallelism — whatever that is on
+    // the host, the trace must not change
+    let seq = run_trace(&cfg_for(Algo::Laq, 1));
+    let auto = run_trace(&cfg_for(Algo::Laq, 0));
+    assert_eq!(seq, auto);
+}
+
+#[test]
+fn oversized_pool_matches_sequential() {
+    // more threads than workers: the pool is capped at the worker count
+    // and idle capacity must not perturb anything
+    let seq = run_trace(&cfg_for(Algo::Slaq, 1));
+    let par = run_trace(&cfg_for(Algo::Slaq, 16));
+    assert_eq!(seq, par);
+}
+
+#[test]
+fn parallel_run_is_itself_deterministic() {
+    // two parallel runs with racing schedules still agree exactly
+    let a = run_trace(&cfg_for(Algo::Qsgd, 4));
+    let b = run_trace(&cfg_for(Algo::Qsgd, 4));
+    assert_eq!(a, b);
+}
+
+#[test]
+fn mlp_model_is_schedule_independent_too() {
+    // the nonconvex path adds the model layer's own chunk-parallel
+    // gradient evaluation nested inside the worker fan-out
+    let mut c1 = cfg_for(Algo::Laq, 1);
+    let mut c4 = cfg_for(Algo::Laq, 4);
+    for c in [&mut c1, &mut c4] {
+        c.model = laq::config::ModelKind::Mlp;
+        c.hidden = 8;
+        c.bits = 8;
+        c.iters = 15;
+    }
+    assert_eq!(run_trace(&c1), run_trace(&c4));
+}
+
+#[test]
+fn checkpoint_resume_crosses_thread_counts() {
+    // a checkpoint written by a sequential run resumes bit-identically
+    // under the parallel schedule — mirrors/clocks carry over exactly
+    let dir = std::env::temp_dir().join("laq_par_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("mid.ckpt");
+
+    let mut straight = laq::algo::build_native(&cfg_for(Algo::Laq, 1)).unwrap();
+    for _ in 0..30 {
+        straight.step().unwrap();
+    }
+
+    let mut first = laq::algo::build_native(&cfg_for(Algo::Laq, 1)).unwrap();
+    for _ in 0..15 {
+        first.step().unwrap();
+    }
+    first.save_checkpoint(&path).unwrap();
+
+    let mut resumed = laq::algo::build_native(&cfg_for(Algo::Laq, 4)).unwrap();
+    resumed.load_checkpoint(&path).unwrap();
+    for _ in 0..15 {
+        resumed.step().unwrap();
+    }
+
+    assert_eq!(straight.theta(), resumed.theta());
+    let _ = std::fs::remove_dir_all(&dir);
+}

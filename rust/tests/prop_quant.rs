@@ -1,8 +1,13 @@
-//! Property tests for the quantization codecs (paper §2.1 guarantees).
+//! Property tests for the quantization codecs (paper §2.1 guarantees) and
+//! the [`Payload`] wire invariants the trainer's sequential wire phase
+//! relies on: every payload survives the physical encode/decode roundtrip
+//! exactly, and `wire_bits()` equals the physically serialized size.
 
+use laq::comm::Payload;
 use laq::prop_assert;
 use laq::quant::innovation::{InnovationQuantizer, QuantizedInnovation};
 use laq::quant::qsgd::{QsgdMessage, QsgdQuantizer};
+use laq::quant::signef::SignEfCompressor;
 use laq::quant::sparsify::{SparseMessage, Sparsifier};
 use laq::util::prop::Prop;
 use laq::util::rng::Rng;
@@ -132,6 +137,77 @@ fn sparse_roundtrip_and_support() {
             if v != 0.0 {
                 prop_assert!(g[i] != 0.0, "phantom coordinate {i}");
                 prop_assert!(v.signum() == g[i].signum(), "sign flip at {i}");
+            }
+        }
+        Ok(())
+    });
+}
+
+/// One random payload of each variant from the same gradient scale.
+fn random_payloads(rng: &mut Rng, p: usize) -> Vec<Payload> {
+    let scale = 10f64.powf(rng.uniform_range(-2.0, 2.0));
+    let g = rand_vec(rng, p, scale);
+    let qp = rand_vec(rng, p, scale);
+    let bits = 1 + rng.below(8) as u32;
+    let (qi, _) = InnovationQuantizer::new(bits).quantize(&g, &qp);
+    let qsgd = QsgdQuantizer::new(bits).quantize(&g, rng);
+    let sparse = Sparsifier::new(rng.uniform_range(0.05, 1.0)).sparsify(&g, rng);
+    let sign = SignEfCompressor::new(p).compress(&g);
+    vec![
+        Payload::Dense(g),
+        Payload::Innovation(qi),
+        Payload::Qsgd(qsgd),
+        Payload::Sparse(sparse),
+        Payload::Sign(sign),
+    ]
+}
+
+#[test]
+fn every_payload_variant_survives_the_wire_exactly() {
+    // the invariant the lazy mirror consistency (and therefore the whole
+    // aggregate identity) rests on: what the worker built is exactly what
+    // the server decodes
+    Prop::new().check("payload through_wire == identity", |rng| {
+        let p = 1 + rng.below(1500) as usize;
+        for payload in random_payloads(rng, p) {
+            let received = payload
+                .clone()
+                .through_wire()
+                .map_err(|e| e.to_string())?;
+            prop_assert!(
+                received == payload,
+                "wire roundtrip changed a {payload:?}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn wire_bits_equals_physically_serialized_size() {
+    // the bit counters the sequential wire phase charges must equal the
+    // size of the bytes that would actually cross the wire (padded to
+    // whole bytes for the codec formats; dense payloads are raw IEEE754)
+    Prop::new().check("wire_bits == serialized size", |rng| {
+        let p = 1 + rng.below(1500) as usize;
+        for payload in random_payloads(rng, p) {
+            let declared = payload.wire_bits();
+            let serialized_bytes: Option<usize> = match &payload {
+                Payload::Dense(v) => {
+                    // IEEE bits pass through unencoded: exactly 32 per coord
+                    prop_assert!(declared == 32 * v.len(), "dense bits");
+                    None
+                }
+                Payload::Innovation(m) => Some(m.encode().len()),
+                Payload::Qsgd(m) => Some(m.encode().len()),
+                Payload::Sparse(m) => Some(m.encode().len()),
+                Payload::Sign(m) => Some(m.encode().len()),
+            };
+            if let Some(bytes) = serialized_bytes {
+                prop_assert!(
+                    bytes == declared.div_ceil(8),
+                    "declared {declared} bits but serialized {bytes} bytes"
+                );
             }
         }
         Ok(())

@@ -11,9 +11,9 @@ use laq::model::{LossCfg, WorkerGrad};
 use laq::quant::InnovationQuantizer;
 use laq::runtime::{PjrtGradWorker, Runtime, Value};
 use laq::util::rng::Rng;
-use std::rc::Rc;
+use std::sync::Arc;
 
-fn runtime() -> Option<Rc<Runtime>> {
+fn runtime() -> Option<Arc<Runtime>> {
     match Runtime::open("artifacts") {
         Ok(rt) => Some(rt),
         Err(e) => {
@@ -56,7 +56,7 @@ fn pjrt_logreg_grad_matches_native() {
     let shard = tiny_shard(3, 64, 32, 4);
     let cfg = LossCfg { n_global: 256, l2: 0.01, n_workers: 4 };
     let mut native = LogRegWorker::new(shard.clone(), cfg);
-    let mut pjrt = PjrtGradWorker::new(Rc::clone(&rt), "logreg_grad_tiny", None, shard).unwrap();
+    let mut pjrt = PjrtGradWorker::new(Arc::clone(&rt), "logreg_grad_tiny", None, shard).unwrap();
 
     let mut rng = Rng::new(9);
     for trial in 0..3 {
