@@ -1,22 +1,30 @@
 //! `cargo bench` entry — self-contained harness (criterion is not
-//! vendored offline).  Two parts:
+//! vendored offline).  Three parts:
 //!
 //! 1. **Hot-path micro-benchmarks** (codec pack/unpack, criterion
-//!    evaluation, server absorb, full trainer step per algorithm) with
-//!    warmup + sampled timing (mean/p50/p99) — the §Perf numbers in
-//!    EXPERIMENTS.md come from here.
+//!    evaluation, sharded server absorb/apply, full trainer step per
+//!    algorithm) with warmup + sampled timing (mean/p50/p99) — the §Perf
+//!    numbers in EXPERIMENTS.md come from here.
 //! 2. **One end-to-end bench per paper table/figure** at reduced scale —
 //!    regenerates each comparison's rows (who wins, by what factor) and
 //!    reports the wall time of the sweep.
+//! 3. **Machine-readable output** — every sampled group also lands in
+//!    `BENCH_server.json` (p50/p99/mean per bench, shard and thread
+//!    sweeps, host core count) so CI can track the perf trajectory.
 //!
 //! Output is plain text; `cargo bench 2>&1 | tee bench_output.txt`.
+//! Set `LAQ_BENCH_QUICK=1` for the CI smoke mode: only the sharded-server
+//! group runs (reduced sampling) and the JSON is still emitted.
 
 use laq::algo::build_native;
+use laq::comm::Payload;
 use laq::config::{Algo, ModelKind, RunCfg};
+use laq::coordinator::ServerState;
 use laq::experiments::{self, ExpOpts};
 use laq::quant::qsgd::QsgdQuantizer;
 use laq::quant::sparsify::Sparsifier;
 use laq::quant::{InnovationQuantizer, QuantizedInnovation};
+use laq::util::json::Json;
 use laq::util::rng::Rng;
 use laq::util::stats::Summary;
 use std::hint::black_box;
@@ -50,7 +58,7 @@ fn fmt_time(s: f64) -> String {
     }
 }
 
-fn report(name: &str, samples: &[f64], bytes_per_op: Option<usize>) {
+fn report(name: &str, samples: &[f64], bytes_per_op: Option<usize>) -> Summary {
     let s = Summary::from_samples(samples);
     let tput = bytes_per_op
         .map(|b| format!("  {:.2} GB/s", b as f64 / s.p50 / 1e9))
@@ -61,6 +69,28 @@ fn report(name: &str, samples: &[f64], bytes_per_op: Option<usize>) {
         fmt_time(s.mean),
         fmt_time(s.p99)
     );
+    s
+}
+
+/// One machine-readable bench record for BENCH_server.json.
+fn json_entry(
+    group: &str,
+    bench: &str,
+    p: usize,
+    shards: usize,
+    threads: usize,
+    s: &Summary,
+) -> Json {
+    Json::obj(vec![
+        ("group", Json::Str(group.into())),
+        ("bench", Json::Str(bench.into())),
+        ("p", Json::Num(p as f64)),
+        ("shards", Json::Num(shards as f64)),
+        ("threads", Json::Num(threads as f64)),
+        ("p50_s", Json::Num(s.p50)),
+        ("p99_s", Json::Num(s.p99)),
+        ("mean_s", Json::Num(s.mean)),
+    ])
 }
 
 fn bench_codecs() {
@@ -70,12 +100,18 @@ fn bench_codecs() {
     let g: Vec<f32> = (0..p).map(|_| rng.normal() as f32).collect();
     let qp: Vec<f32> = (0..p).map(|_| rng.normal() as f32).collect();
     let mut q_new = vec![0.0f32; p];
+    let mut codes = Vec::with_capacity(p);
 
     for bits in [3u32, 8] {
         let q = InnovationQuantizer::new(bits);
         let s = sample(
             || {
-                black_box(q.quantize_into(black_box(&g), black_box(&qp), &mut q_new));
+                black_box(q.quantize_into(
+                    black_box(&g),
+                    black_box(&qp),
+                    &mut codes,
+                    &mut q_new,
+                ));
             },
             20,
             30,
@@ -84,13 +120,16 @@ fn bench_codecs() {
         report(&format!("innovation quantize (b={bits})"), &s, Some(p * 4));
 
         let (qi, _) = q.quantize(&g, &qp);
-        let s = sample(|| { black_box(qi.encode()); }, 20, 30, 20);
+        let mut w = laq::util::bitio::BitWriter::with_capacity_bits(qi.wire_bits());
+        let s = sample(|| { qi.encode_into(&mut w); black_box(w.as_bytes()); }, 20, 30, 20);
         report(&format!("innovation pack to wire (b={bits})"), &s, Some(p * 4));
 
         let bytes = qi.encode();
+        let mut rx = QuantizedInnovation { radius: 0.0, codes: Vec::with_capacity(p), bits };
         let s = sample(
             || {
-                black_box(QuantizedInnovation::decode(&bytes, bits, p).unwrap());
+                QuantizedInnovation::decode_into(&bytes, bits, p, &mut rx).unwrap();
+                black_box(&rx);
             },
             20,
             30,
@@ -147,31 +186,67 @@ fn bench_criterion() {
     report("criterion lhs ||Q_prev - Q_new||² (p=7840)", &s, Some(p * 8));
 }
 
-/// Tentpole bench: sequential vs parallel worker fan-out at growing M —
-/// the regime where lazy skipping pays off most is exactly where the
-/// sequential per-worker loop used to scale linearly in wall-clock.
-fn bench_parallel_fanout() {
-    println!("\n== worker fan-out: sequential (threads=1) vs parallel (threads=4) ==");
-    println!("   (mnist-like logreg, p = 7840, 50 rows/worker, LAQ b=3)");
-    for m in [5usize, 20, 100] {
-        let mut p50 = [0.0f64; 2];
-        for (ti, threads) in [1usize, 4].into_iter().enumerate() {
-            let mut cfg = RunCfg::paper_logreg(Algo::Laq);
-            cfg.data.n_train = 50 * m;
-            cfg.data.n_test = 100;
-            cfg.workers = m;
-            cfg.threads = threads;
-            let mut t = build_native(&cfg).unwrap();
-            let (warmup, samples, iters_per) = if m >= 100 { (2, 10, 2) } else { (3, 15, 3) };
-            let s = sample(|| { black_box(t.step().unwrap()); }, warmup, samples, iters_per);
-            p50[ti] = Summary::from_samples(&s).p50;
-            report(&format!("trainer step [LAQ] M={m:<3} threads={threads}"), &s, None);
+/// Tentpole bench: the sharded server's wire phase — per-upload
+/// `absorb_lazy` (fused dequantize + aggregate + mirror commit) followed
+/// by `apply_update`, swept over shard counts and parameter dimensions.
+/// The p ≈ 512k case is the transformer regime the sharding targets; the
+/// shards=1 baseline runs the identical fused code on one thread.
+fn bench_server_sharded(quick: bool, entries: &mut Vec<Json>) {
+    println!("\n== sharded server: absorb_lazy × M + apply_update, per round ==");
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("   (host cores: {cores}; caller participates in every shard fan-out)");
+    let m_workers = 5;
+    let bits = 3;
+    for &p in &[7840usize, 512 * 1024] {
+        // one realistic innovation payload per worker (radii differ)
+        let q = InnovationQuantizer::new(bits);
+        let mut rng = Rng::new(7);
+        let zeros = vec![0.0f32; p];
+        let payloads: Vec<Payload> = (0..m_workers)
+            .map(|_| {
+                let g: Vec<f32> = (0..p).map(|_| rng.normal() as f32).collect();
+                let (qi, _) = q.quantize(&g, &zeros);
+                Payload::Innovation(qi)
+            })
+            .collect();
+        let mut p50_shard1 = f64::NAN;
+        for &shards in &[1usize, 2, 4, 8] {
+            let mut srv = ServerState::new(p, m_workers, bits, 10, vec![0.0; p]);
+            srv.set_shards(shards);
+            let runners = srv.shard_runners();
+            let (w, smp, it) = if quick {
+                (1, 5, 1)
+            } else if p >= 100_000 {
+                (2, 12, 2)
+            } else {
+                (5, 20, 5)
+            };
+            let s = sample(
+                || {
+                    for m in 0..m_workers {
+                        srv.absorb_lazy(m, &payloads[m]).unwrap();
+                    }
+                    black_box(srv.apply_update(0.02));
+                },
+                w,
+                smp,
+                it,
+            );
+            // bytes touched per round: M × (codes r + mirror rw + agg rw) + θ rw
+            let bytes = m_workers * p * (4 + 8 + 8) + p * 8;
+            let name = format!("absorb+apply p={p:<7} shards={shards} ({runners} runners)");
+            let summ = report(&name, &s, Some(bytes));
+            entries.push(json_entry("server_absorb_apply", "absorb+apply", p, shards, runners, &summ));
+            if shards == 1 {
+                p50_shard1 = summ.p50;
+            } else {
+                println!(
+                    "{:<44} {:.2}× p50 speedup vs shards=1",
+                    format!("  -> p={p} shards={shards}"),
+                    p50_shard1 / summ.p50
+                );
+            }
         }
-        println!(
-            "{:<44} {:.2}× step-throughput speedup",
-            format!("  -> M={m} parallel vs sequential"),
-            p50[0] / p50[1]
-        );
     }
 }
 
@@ -188,6 +263,38 @@ fn bench_trainer_steps() {
         let mut t = build_native(&cfg).unwrap();
         let s = sample(|| { black_box(t.step().unwrap()); }, 5, 20, 5);
         report(&format!("trainer step [{}]", algo.name()), &s, None);
+    }
+}
+
+/// Sequential vs parallel worker fan-out at growing M — the regime where
+/// lazy skipping pays off most is exactly where the sequential per-worker
+/// loop used to scale linearly in wall-clock.
+fn bench_parallel_fanout(entries: &mut Vec<Json>) {
+    println!("\n== worker fan-out: sequential (threads=1) vs parallel (threads=4) ==");
+    println!("   (mnist-like logreg, p = 7840, 50 rows/worker, LAQ b=3)");
+    for m in [5usize, 20, 100] {
+        let mut p50 = [0.0f64; 2];
+        for (ti, threads) in [1usize, 4].into_iter().enumerate() {
+            let mut cfg = RunCfg::paper_logreg(Algo::Laq);
+            cfg.data.n_train = 50 * m;
+            cfg.data.n_test = 100;
+            cfg.workers = m;
+            cfg.threads = threads;
+            // pin the server to one shard so the threads sweep isn't
+            // confounded by a LAQ_SHARDS env default
+            cfg.server_shards = 1;
+            let mut t = build_native(&cfg).unwrap();
+            let (warmup, samples, iters_per) = if m >= 100 { (2, 10, 2) } else { (3, 15, 3) };
+            let s = sample(|| { black_box(t.step().unwrap()); }, warmup, samples, iters_per);
+            let summ = report(&format!("trainer step [LAQ] M={m:<3} threads={threads}"), &s, None);
+            entries.push(json_entry("worker_fanout", &format!("step_laq_m{m}"), 7840, 1, threads, &summ));
+            p50[ti] = summ.p50;
+        }
+        println!(
+            "{:<44} {:.2}× step-throughput speedup",
+            format!("  -> M={m} parallel vs sequential"),
+            p50[0] / p50[1]
+        );
     }
 }
 
@@ -233,16 +340,38 @@ fn bench_experiments() {
     let _ = ModelKind::LogReg; // keep import meaningful if ids change
 }
 
+fn write_bench_json(entries: Vec<Json>) {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let doc = Json::obj(vec![
+        ("host", Json::obj(vec![("cores", Json::Num(cores as f64))])),
+        ("entries", Json::Arr(entries)),
+    ]);
+    let path = "BENCH_server.json";
+    match std::fs::write(path, doc.to_string_pretty()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => println!("\nWARN: could not write {path}: {e}"),
+    }
+}
+
 fn main() {
     // `cargo bench` passes --bench; ignore args
     laq::util::logging::init();
-    println!("LAQ bench harness (offline substitute for criterion)");
+    let quick = std::env::var("LAQ_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let mut entries: Vec<Json> = Vec::new();
     let t0 = Instant::now();
-    bench_codecs();
-    bench_criterion();
-    bench_gradient_backends();
-    bench_trainer_steps();
-    bench_parallel_fanout();
-    bench_experiments();
+    if quick {
+        println!("LAQ bench harness — QUICK smoke (sharded server group only)");
+        bench_server_sharded(true, &mut entries);
+    } else {
+        println!("LAQ bench harness (offline substitute for criterion)");
+        bench_codecs();
+        bench_criterion();
+        bench_gradient_backends();
+        bench_trainer_steps();
+        bench_parallel_fanout(&mut entries);
+        bench_server_sharded(false, &mut entries);
+        bench_experiments();
+    }
+    write_bench_json(entries);
     println!("\ntotal bench wall time: {:.1?}", t0.elapsed());
 }

@@ -1,9 +1,15 @@
 #!/usr/bin/env bash
 # CI for the rust layer: format check, release build, and the full test
-# suite run over BOTH trainer code paths — sequential (LAQ_THREADS=1) and
-# parallel fan-out (LAQ_THREADS=4).  The parallel_equivalence tests pin
-# the two paths to bit-identical traces; running the whole suite under
-# each default keeps every other test exercising both schedules too.
+# suite run over the trainer/server execution-shape matrix:
+#   (1) fully sequential          — LAQ_THREADS=1 LAQ_SHARDS=1
+#   (2) parallel + sharded server — LAQ_THREADS=4 LAQ_SHARDS=4
+# The parallel_equivalence and sharded_equivalence tests pin both knobs to
+# bit-identical traces; running the whole suite under each default keeps
+# every other test exercising both schedules too.
+#
+# A quick-mode bench smoke run then emits BENCH_server.json (sharded
+# absorb/apply p50/p99 over shard × dim sweeps) so the perf trajectory is
+# tracked from every CI run.
 #
 # Usage: rust/ci.sh   (from the repo root or from rust/)
 set -euo pipefail
@@ -20,10 +26,14 @@ fi
 echo "== release build =="
 cargo build --release
 
-echo "== tests, sequential trainer (LAQ_THREADS=1) =="
-LAQ_THREADS=1 cargo test -q
+echo "== tests, fully sequential (LAQ_THREADS=1 LAQ_SHARDS=1) =="
+LAQ_THREADS=1 LAQ_SHARDS=1 cargo test -q
 
-echo "== tests, parallel trainer (LAQ_THREADS=4) =="
-LAQ_THREADS=4 cargo test -q
+echo "== tests, parallel trainer + sharded server (LAQ_THREADS=4 LAQ_SHARDS=4) =="
+LAQ_THREADS=4 LAQ_SHARDS=4 cargo test -q
+
+echo "== bench smoke (quick mode -> BENCH_server.json) =="
+LAQ_BENCH_QUICK=1 cargo bench
+test -f BENCH_server.json && echo "BENCH_server.json present"
 
 echo "== ci OK =="

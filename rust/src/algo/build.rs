@@ -180,6 +180,20 @@ mod tests {
     }
 
     #[test]
+    fn sharded_server_config_builds_and_steps() {
+        // server_shards flows from config into the server; tiny dims cap
+        // to a single effective shard, auto (0) resolves to the machine
+        for shards in [0usize, 1, 4] {
+            let mut cfg = tiny_cfg(Algo::Laq);
+            cfg.server_shards = shards;
+            let mut t = build_native(&cfg).unwrap();
+            assert!(t.server.shards() >= 1);
+            let s = t.step().unwrap();
+            assert!(s.loss.is_finite());
+        }
+    }
+
+    #[test]
     fn transformer_native_is_rejected() {
         let mut cfg = tiny_cfg(Algo::Laq);
         cfg.model = ModelKind::Transformer;

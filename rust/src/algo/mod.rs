@@ -33,21 +33,62 @@
 //!    phase comes from counter-based streams `Rng::stream(seed, m, k)` —
 //!    a pure function of (run seed, worker, iteration) — so draws are
 //!    identical under any schedule.
-//! 2. **Sequential wire phase** — everything that touches shared state:
-//!    uploads pass through [`Network::upload`] *in worker index order*,
-//!    the server absorbs each decoded payload, and the worker commits its
-//!    mirror/clock transition ([`WorkerNode::commit`]) immediately after.
-//!    Bit/round counters and the latency clock therefore advance in the
-//!    exact order the sequential implementation used, and the f64
-//!    reductions (loss sum, gradient-norm accumulation) run on the main
-//!    thread in index order.
+//! 2. **Sequential wire phase** — everything that serializes on shared
+//!    state: uploads pass through [`Network::upload`] *in worker index
+//!    order*, the server absorbs each decoded payload, and the worker
+//!    commits its mirror/clock transition ([`WorkerNode::commit`])
+//!    immediately after.  Bit/round counters and the latency clock
+//!    therefore advance in the exact order the sequential implementation
+//!    used, and the f64 reductions (loss sum, gradient-norm accumulation)
+//!    run on the main thread in index order.  *Within* each absorb and
+//!    the θ-update, the server fans out over coordinate shards — see below.
 //!
-//! Consequence: a `threads = N` run is **bit-for-bit identical** to a
-//! `threads = 1` run — loss trace, uplink bits, rounds, simulated time
-//! and final θ (pinned by `rust/tests/parallel_equivalence.rs`).  The
-//! model layer's row-chunk parallelism (see `model/logreg.rs` §Perf)
-//! nests inside the local phase on the separate global pool, which keeps
-//! the two levels deadlock-free.
+//! # Shard topology
+//!
+//! With `cfg.server_shards = S` (0 = auto), the server partitions θ, the
+//! lazy aggregate, the Adam state and every per-worker mirror into S
+//! contiguous, block-aligned coordinate shards
+//! (`coordinator::server::DELTA_BLOCK`).  The two fan-outs nest like this:
+//!
+//! ```text
+//!                    Trainer::step (coordinator thread)
+//!   ───────────────────────────────┬──────────────────────────────────
+//!   local phase (worker pool)      │  wire phase (sequential in m)
+//!                                  │
+//!   worker 0 ─ grad ─ decide ─ enc │  upload(m) ──► absorb_lazy(m)
+//!   worker 1 ─ grad ─ decide ─ enc │                 ├─ shard 0 ┐
+//!   worker … ─ grad ─ decide ─ enc │                 ├─ shard 1 │ server
+//!        (each may nest row-chunk  │                 └─ shard … │ pool
+//!         jobs on the global pool) │                            ┘
+//!                                  │  …then apply_update
+//!                                  │                 ├─ shard 0..S−1
+//!                                  │                 └─ ‖Δθ‖² block sum
+//! ```
+//!
+//! Worker jobs split *rows* (disjoint nodes), shard jobs split
+//! *coordinates* (disjoint `&mut` ranges via `SendPtr::slice_mut`); the
+//! three pools (trainer, per-server shard pool, global model pool) are
+//! distinct objects, so nested fan-outs cannot deadlock.  The innovation
+//! codec is coordinate-local and the single cross-coordinate reduction
+//! (`‖Δθ‖²`) uses a shard-count-independent block tree, so:
+//!
+//! Consequence: a `threads = N, server_shards = S` run is **bit-for-bit
+//! identical** to a `threads = 1, server_shards = 1` run — loss trace,
+//! uplink bits, rounds, skip decisions, simulated time and final θ
+//! (pinned by `rust/tests/parallel_equivalence.rs` and
+//! `rust/tests/sharded_equivalence.rs`).  Both knobs are purely
+//! wall-clock: threads scale with the worker count M, shards with the
+//! parameter dimension p.
+//!
+//! # Steady-state allocation
+//!
+//! For the lazy full-gradient algorithms (LAQ above all) the whole step —
+//! broadcast, gradient, criterion, encode, wire, decode, absorb, update —
+//! runs on retained buffers: the trainer keeps its broadcast/locals/gsum
+//! scratch, each node owns its gradient + staged payload, the network
+//! owns the wire buffers, and the server owns the block-partial
+//! reduction.  After warmup, `Trainer::step` performs **zero heap
+//! allocations** (pinned by `rust/tests/alloc_steady_state.rs`).
 
 pub mod build;
 
@@ -102,6 +143,15 @@ pub struct Trainer {
     /// harness once f* is known (paper Table 2: residual 1e-6)
     pub stop_at_loss: Option<f64>,
     k: usize,
+    // -- retained per-step scratch (zero steady-state allocation) --------
+    /// broadcast copy of θ^k the local phase reads
+    theta_bc: Vec<f32>,
+    /// Σ_m g_m accumulator for the grad-norm trace
+    gsum: Vec<f32>,
+    /// per-worker local-phase results, refilled in place each step
+    locals: Vec<LocalSlot>,
+    /// per-worker minibatch draws (all None for deterministic algorithms)
+    rows: Vec<Option<Vec<usize>>>,
 }
 
 impl Trainer {
@@ -122,13 +172,14 @@ impl Trainer {
         if nodes.iter().any(|n| n.dim() != dim) {
             return Err(Error::Config("worker dims differ".into()));
         }
-        let server = ServerState::new(
+        let mut server = ServerState::new(
             dim,
             nodes.len(),
             cfg.bits,
             cfg.criterion.d,
             theta0,
         );
+        server.set_shards(cfg.server_shards);
         let net = Network::new(nodes.len(), latency);
         let batchers = if cfg.algo.is_stochastic() {
             let per = cfg.batch / nodes.len();
@@ -156,6 +207,7 @@ impl Trainer {
         } else {
             None
         };
+        let n_workers = nodes.len();
         Ok(Self {
             cfg,
             nodes,
@@ -169,6 +221,10 @@ impl Trainer {
             evaluator,
             stop_at_loss: None,
             k: 0,
+            theta_bc: vec![0.0; dim],
+            gsum: vec![0.0; dim],
+            locals: (0..n_workers).map(|_| LocalSlot::default()).collect(),
+            rows: vec![None; n_workers],
         })
     }
 
@@ -200,9 +256,10 @@ impl Trainer {
         let m_all = self.nodes.len();
         let lazy = algo.is_lazy();
 
-        // 1. downlink broadcast of θ^k (32 bits/coordinate, one message)
+        // 1. downlink broadcast of θ^k (32 bits/coordinate, one message);
+        // the broadcast copy lands in the retained scratch
         self.net.broadcast(32 * dim);
-        let theta = self.server.theta.clone();
+        self.theta_bc.clone_from(&self.server.theta);
 
         // EF error memories must exist before the fan-out
         if algo == Algo::EfSgd && self.ef.is_empty() {
@@ -210,12 +267,13 @@ impl Trainer {
         }
 
         // minibatch draws, one per worker from its own deterministic
-        // stream (drawn up front so the fan-out borrows them immutably)
-        let rows: Vec<Option<Vec<usize>>> = if algo.is_stochastic() {
-            self.batchers.iter_mut().map(|b| Some(b.next_batch())).collect()
-        } else {
-            (0..m_all).map(|_| None).collect()
-        };
+        // stream (drawn up front so the fan-out borrows them immutably;
+        // deterministic algorithms leave the retained slots at None)
+        if algo.is_stochastic() {
+            for (m, b) in self.batchers.iter_mut().enumerate() {
+                self.rows[m] = Some(b.next_batch());
+            }
+        }
 
         // criterion broadcast term — a function of server state *before*
         // this iteration's uploads, identical for every worker
@@ -237,8 +295,8 @@ impl Trainer {
         };
 
         let ctx = LocalCtx {
-            theta: &theta,
-            rows: &rows,
+            theta: &self.theta_bc,
+            rows: &self.rows,
             algo,
             force_upload: matches!(algo, Algo::Gd | Algo::Qgd),
             rhs_common,
@@ -250,74 +308,87 @@ impl Trainer {
         };
 
         // 2. parallel local phase: gradient + decision + encoding per
-        // worker.  Results come back in index order either way.
-        let locals: Vec<Result<LocalOut>> = match &self.pool {
+        // worker, written into the retained per-worker slots (no result
+        // vector — the fan-out is allocation-free in steady state).
+        match &self.pool {
             Some(pool) => {
                 let nodes = SendPtr::new(&mut self.nodes[..]);
                 let ef = SendPtr::new(&mut self.ef[..]);
-                pool.scatter(m_all, move |m| {
-                    // SAFETY: scatter runs each index exactly once, so
-                    // these &muts are disjoint per worker; both vectors
-                    // outlive the scatter's join and have no other
-                    // borrows while it runs.
+                let slots = SendPtr::new(&mut self.locals[..]);
+                let ctx = &ctx;
+                pool.run_indexed(m_all, &move |m| {
+                    // SAFETY: run_indexed hands out each index exactly
+                    // once, so these &muts are disjoint per worker; the
+                    // vectors outlive the fan-out's join and have no
+                    // other borrows while it runs.
                     let node = unsafe { nodes.get_mut(m) };
+                    let slot = unsafe { slots.get_mut(m) };
                     let ef_m = if ctx.algo == Algo::EfSgd {
                         Some(unsafe { ef.get_mut(m) })
                     } else {
                         None
                     };
-                    local_phase(&ctx, m, node, ef_m)
-                })
+                    local_phase(ctx, m, node, ef_m, slot);
+                });
             }
-            None => (0..m_all)
-                .map(|m| {
+            None => {
+                for m in 0..m_all {
+                    let node = &mut self.nodes[m];
+                    let slot = &mut self.locals[m];
                     let ef_m = if algo == Algo::EfSgd {
                         Some(&mut self.ef[m])
                     } else {
                         None
                     };
-                    local_phase(&ctx, m, &mut self.nodes[m], ef_m)
-                })
-                .collect(),
-        };
+                    local_phase(&ctx, m, node, ef_m, slot);
+                }
+            }
+        }
 
         // 3. sequential wire phase: uploads in worker index order so the
         // bit/round counters and the latency clock advance exactly as a
         // sequential run's would; mirror commits ride along post-wire.
+        // (Each absorb/apply fans out over θ-shards inside the server.)
         let rounds_before = self.net.uplink_rounds();
         let bits_before = self.net.uplink_bits();
         let mut max_eps_sq = 0.0f64;
         let mut loss_total = 0.0f64;
-        let mut gsum = vec![0.0f32; dim];
+        self.gsum.fill(0.0);
         if !lazy {
             self.server.reset_agg();
         }
-        for (m, res) in locals.into_iter().enumerate() {
-            let out = res?;
-            loss_total += out.loss;
-            tensor::axpy(1.0, &out.grad, &mut gsum);
-            if let Some(payload) = out.payload {
-                let received = self.net.upload(m, payload)?;
-                if lazy {
-                    self.server.absorb_lazy(m, &received)?;
-                } else {
-                    self.server.absorb_fresh(&received)?;
-                }
+        for m in 0..m_all {
+            if let Some(e) = self.locals[m].err.take() {
+                return Err(e);
             }
-            if let Some(decision) = out.decision {
+            loss_total += self.locals[m].loss;
+            tensor::axpy(1.0, &self.nodes[m].grad, &mut self.gsum);
+            if lazy {
+                let decision = self.locals[m]
+                    .decision
+                    .expect("lazy algorithms always produce a decision");
+                if decision.upload {
+                    // staged payload borrowed from the node; the wire
+                    // round trip reuses the network's retained buffers
+                    let received = self.net.upload(m, &self.nodes[m].staged)?;
+                    self.server.absorb_lazy(m, received)?;
+                }
                 max_eps_sq = max_eps_sq.max(decision.eps_sq);
                 self.nodes[m].commit(&decision);
+            } else if let Some(payload) = self.locals[m].payload.take() {
+                let received = self.net.upload(m, &payload)?;
+                self.server.absorb_fresh(received)?;
             }
         }
 
-        // 4. parameter update
+        // 4. parameter update (sharded; block-exact ||Δθ||² reduction)
         self.server.apply_update(self.cfg.alpha);
         self.k += 1;
 
         Ok(StepStats {
             iter: k,
             loss: loss_total,
-            grad_norm_sq: tensor::norm2_sq(&gsum),
+            grad_norm_sq: tensor::norm2_sq(&self.gsum),
             uploads: (self.net.uplink_rounds() - rounds_before) as usize,
             bits: self.net.uplink_bits() - bits_before,
             max_eps_sq,
@@ -487,21 +558,27 @@ struct LocalCtx<'a> {
     iter: usize,
 }
 
-/// What one worker's local phase hands the sequential wire phase.
-struct LocalOut {
+/// What one worker's local phase hands the sequential wire phase —
+/// retained per worker and refilled in place each iteration.  The lazy
+/// family's payload lives in the node ([`WorkerNode::staged`]); only the
+/// fresh-sum family parks an owned payload here.
+#[derive(Default)]
+struct LocalSlot {
     loss: f64,
-    grad: Vec<f32>,
-    /// Some = goes on the uplink (always for fresh-sum algorithms; iff
-    /// the criterion fired for the lazy ones)
-    payload: Option<Payload>,
     /// lazy path only: the state transition to commit post-wire
     decision: Option<LazyDecision>,
+    /// fresh-sum path only: the encoded upload
+    payload: Option<Payload>,
+    /// a failed local phase parks its error here; the wire phase
+    /// propagates the first one in worker order
+    err: Option<Error>,
 }
 
 /// The embarrassingly parallel half of one iteration for worker `m`:
-/// local gradient, upload decision, payload encoding.  Mutates only this
-/// worker's node (scratch buffer) and, for EF-SGD, this worker's error
-/// memory; all randomness comes from the counter-based stream
+/// local gradient (into the node's retained buffer), upload decision,
+/// payload encoding (into the node's staged message for the lazy family).
+/// Mutates only this worker's node, slot and, for EF-SGD, this worker's
+/// error memory; all randomness comes from the counter-based stream
 /// `Rng::stream(seed ^ 0xC0DEC, m, k)`, making the result independent of
 /// which thread runs it and when.
 fn local_phase(
@@ -509,35 +586,49 @@ fn local_phase(
     m: usize,
     node: &mut WorkerNode<dyn WorkerGrad>,
     ef: Option<&mut SignEfCompressor>,
-) -> Result<LocalOut> {
-    let (loss, grad) = match &ctx.rows[m] {
-        Some(rows) => node.oracle.batch(ctx.theta, rows)?,
-        None => node.oracle.full(ctx.theta)?,
+    slot: &mut LocalSlot,
+) {
+    slot.loss = 0.0;
+    slot.decision = None;
+    slot.payload = None;
+    slot.err = None;
+    // evaluate into the node-retained gradient buffer (taken out for the
+    // call so the oracle and the buffer don't fight the borrow checker;
+    // mem::take swaps in an empty vec — no allocation)
+    let mut grad = std::mem::take(&mut node.grad);
+    let loss = match &ctx.rows[m] {
+        Some(rows) => node.oracle.batch_into(ctx.theta, rows, &mut grad),
+        None => node.oracle.full_into(ctx.theta, &mut grad),
     };
-    let (payload, decision) = match ctx.algo {
-        Algo::Gd | Algo::Qgd | Algo::Lag | Algo::Laq | Algo::Slaq => {
-            let mut d =
-                node.lazy_decide(&grad, ctx.rhs_common, ctx.t_max, ctx.force_upload);
-            (d.payload.take(), Some(d))
+    let loss = match loss {
+        Ok(l) => l,
+        Err(e) => {
+            node.grad = grad;
+            slot.err = Some(e);
+            return;
         }
-        Algo::Sgd => (Some(Payload::Dense(grad.clone())), None),
+    };
+    slot.loss = loss;
+    match ctx.algo {
+        Algo::Gd | Algo::Qgd | Algo::Lag | Algo::Laq | Algo::Slaq => {
+            slot.decision =
+                Some(node.lazy_decide(&grad, ctx.rhs_common, ctx.t_max, ctx.force_upload));
+        }
+        Algo::Sgd => slot.payload = Some(Payload::Dense(grad.clone())),
         Algo::Qsgd => {
             let mut rng = Rng::stream(ctx.seed ^ 0xC0DEC, m as u64, ctx.iter as u64);
-            (Some(Payload::Qsgd(ctx.qsgd.quantize(&grad, &mut rng))), None)
+            slot.payload = Some(Payload::Qsgd(ctx.qsgd.quantize(&grad, &mut rng)));
         }
         Algo::Ssgd => {
             let mut rng = Rng::stream(ctx.seed ^ 0xC0DEC, m as u64, ctx.iter as u64);
-            (
-                Some(Payload::Sparse(ctx.sparsifier.sparsify(&grad, &mut rng))),
-                None,
-            )
+            slot.payload = Some(Payload::Sparse(ctx.sparsifier.sparsify(&grad, &mut rng)));
         }
         Algo::EfSgd => {
             let ef = ef.expect("EF memories are sized before the fan-out");
-            (Some(Payload::Sign(ef.compress(&grad))), None)
+            slot.payload = Some(Payload::Sign(ef.compress(&grad)));
         }
-    };
-    Ok(LocalOut { loss, grad, payload, decision })
+    }
+    node.grad = grad;
 }
 
 /// Map an [`Algo`] to the lazy codec it uses (where applicable).

@@ -15,8 +15,11 @@
 //! [`Network`] is deliberately **not** shared across threads.  The
 //! trainer's local phase (gradients, criterion, encoding) fans out over a
 //! pool, but every [`Network::upload`] happens afterwards on the
-//! coordinator thread, *in worker index order* — the wire phase.  Three
-//! invariants follow:
+//! coordinator thread, *in worker index order* — the wire phase.  (The
+//! *server* then fans each decoded upload out over θ-shards — see the
+//! shard topology in [`crate::algo`] — but that parallelism is inside
+//! `absorb`, after the message has left the network.)  Three invariants
+//! follow:
 //!
 //! * **bits** — [`Payload::wire_bits`] is a pure function of the payload,
 //!   and `rust/tests/prop_quant.rs` pins it to the physically serialized
@@ -32,11 +35,28 @@
 //!
 //! Hence a parallel run's trace is bit-identical to a sequential run's
 //! (`rust/tests/parallel_equivalence.rs`).
+//!
+//! # Retained wire buffers
+//!
+//! [`Network::upload`] borrows the outgoing payload and returns a
+//! *borrowed* view of what the server receives.  Dense payloads are IEEE
+//! bits already and pass through unchanged; innovation payloads (the
+//! lazy hot path) are physically packed into a network-retained
+//! [`BitWriter`] and decoded back into a network-retained receive slot,
+//! so their steady-state wire round trip performs zero heap allocation
+//! (pinned by `rust/tests/alloc_steady_state.rs`).  The cold fresh-sum
+//! kinds (QSGD/sparse/sign) go through the shared
+//! [`Payload::through_wire_ref`] round trip, which allocates the decoded
+//! message as before.  The received view is valid until the next
+//! `upload` — the trainer's sequential wire phase absorbs each message
+//! before the next worker transmits, which is also the physical model
+//! (one shared uplink).
 
 use crate::quant::innovation::QuantizedInnovation;
 use crate::quant::qsgd::QsgdMessage;
 use crate::quant::signef::SignMessage;
 use crate::quant::sparsify::SparseMessage;
+use crate::util::bitio::BitWriter;
 use crate::Result;
 
 /// What a worker can put on the uplink.
@@ -66,13 +86,15 @@ impl Payload {
         }
     }
 
-    /// Serialize + deserialize through the physical wire format, returning
-    /// what the server receives.  Dense payloads are IEEE bits already and
-    /// pass through unchanged.  Public so the property tests can pin the
-    /// roundtrip-exactness invariant the wire phase relies on.
-    pub fn through_wire(self) -> Result<Payload> {
+    /// Serialize + deserialize through the physical wire format from a
+    /// borrowed payload, returning what the server receives.  Dense
+    /// payloads are IEEE bits already and come back as a plain copy.
+    /// This is the single implementation of the round trip — the
+    /// property tests in `rust/tests/prop_quant.rs` pin it, and
+    /// [`Network::upload`]'s cold path reuses it.
+    pub fn through_wire_ref(&self) -> Result<Payload> {
         Ok(match self {
-            Payload::Dense(v) => Payload::Dense(v),
+            Payload::Dense(v) => Payload::Dense(v.clone()),
             Payload::Innovation(qi) => {
                 let (bits, p) = (qi.bits, qi.codes.len());
                 let bytes = qi.encode();
@@ -94,6 +116,15 @@ impl Payload {
                 Payload::Sign(SignMessage::decode(&bytes, p)?)
             }
         })
+    }
+
+    /// By-value form of [`Self::through_wire_ref`]; Dense passes through
+    /// without any copy.
+    pub fn through_wire(self) -> Result<Payload> {
+        match self {
+            Payload::Dense(v) => Ok(Payload::Dense(v)),
+            other => other.through_wire_ref(),
+        }
     }
 }
 
@@ -119,7 +150,8 @@ impl LatencyModel {
     }
 }
 
-/// Cumulative communication counters + simulated clock.
+/// Cumulative communication counters + simulated clock + retained wire
+/// scratch (see the module notes on retained buffers).
 #[derive(Clone, Debug)]
 pub struct Network {
     pub latency: LatencyModel,
@@ -131,6 +163,10 @@ pub struct Network {
     per_worker_rounds: Vec<u64>,
     per_worker_bits: Vec<u64>,
     sim_time: f64,
+    /// retained encode scratch — every quantized upload packs into this
+    enc: BitWriter,
+    /// retained receive slot — what the server sees, decoded in place
+    rx: Payload,
 }
 
 impl Network {
@@ -145,12 +181,18 @@ impl Network {
             per_worker_rounds: vec![0; n_workers],
             per_worker_bits: vec![0; n_workers],
             sim_time: 0.0,
+            enc: BitWriter::new(),
+            rx: Payload::Dense(Vec::new()),
         }
     }
 
     /// Worker `m` uploads `payload`.  Returns the server-side view after
-    /// the physical encode/decode round trip.
-    pub fn upload(&mut self, m: usize, payload: Payload) -> Result<Payload> {
+    /// the physical encode/decode round trip, borrowed until the next
+    /// upload (absorb it before the next worker transmits — the trainer's
+    /// sequential wire phase does).  Dense payloads pass through
+    /// unchanged; quantized payloads round-trip through the retained
+    /// encode/decode buffers without allocating in steady state.
+    pub fn upload<'a>(&'a mut self, m: usize, payload: &'a Payload) -> Result<&'a Payload> {
         assert!(m < self.n_workers);
         let bits = payload.wire_bits();
         self.uplink_rounds += 1;
@@ -159,7 +201,35 @@ impl Network {
         self.per_worker_bits[m] += bits as u64;
         // uplinks are sequential: each pays its full message time
         self.sim_time += self.latency.message_time(bits);
-        payload.through_wire()
+        match payload {
+            // IEEE bits already — the wire cannot perturb them
+            Payload::Dense(_) => Ok(payload),
+            Payload::Innovation(qi) => {
+                qi.encode_into(&mut self.enc);
+                if !matches!(self.rx, Payload::Innovation(_)) {
+                    self.rx = Payload::Innovation(QuantizedInnovation {
+                        radius: 0.0,
+                        codes: Vec::new(),
+                        bits: qi.bits,
+                    });
+                }
+                let Payload::Innovation(rx) = &mut self.rx else { unreachable!() };
+                QuantizedInnovation::decode_into(
+                    self.enc.as_bytes(),
+                    qi.bits,
+                    qi.codes.len(),
+                    rx,
+                )?;
+                Ok(&self.rx)
+            }
+            // cold (fresh-sum) kinds: reuse the property-tested round
+            // trip rather than duplicating it (no source clone — encode
+            // works from the borrow)
+            _ => {
+                self.rx = payload.through_wire_ref()?;
+                Ok(&self.rx)
+            }
+        }
     }
 
     /// Server broadcasts `bits` to all workers (simultaneous downlink: one
@@ -204,7 +274,7 @@ mod tests {
     #[test]
     fn dense_upload_counts_32p() {
         let mut net = Network::new(3, LatencyModel::default());
-        net.upload(1, Payload::Dense(vec![0.0; 100])).unwrap();
+        net.upload(1, &Payload::Dense(vec![0.0; 100])).unwrap();
         assert_eq!(net.uplink_bits(), 3200);
         assert_eq!(net.uplink_rounds(), 1);
         assert_eq!(net.per_worker_rounds(), &[0, 1, 0]);
@@ -218,7 +288,7 @@ mod tests {
         let q = InnovationQuantizer::new(3);
         let (qi, _) = q.quantize(&g, &vec![0.0; 500]);
         let mut net = Network::new(1, LatencyModel::default());
-        net.upload(0, Payload::Innovation(qi)).unwrap();
+        net.upload(0, &Payload::Innovation(qi)).unwrap();
         assert_eq!(net.uplink_bits() as usize, 32 + 3 * 500);
     }
 
@@ -229,17 +299,39 @@ mod tests {
         let q = InnovationQuantizer::new(4);
         let (qi, _) = q.quantize(&g, &vec![0.0; 64]);
         let mut net = Network::new(1, LatencyModel::default());
-        match net.upload(0, Payload::Innovation(qi.clone())).unwrap() {
-            Payload::Innovation(got) => assert_eq!(got, qi),
+        let sent = Payload::Innovation(qi.clone());
+        match net.upload(0, &sent).unwrap() {
+            Payload::Innovation(got) => assert_eq!(got, &qi),
             _ => panic!("wrong payload kind"),
         }
+    }
+
+    #[test]
+    fn retained_rx_slot_survives_repeated_uploads() {
+        // the receive slot is reused message after message; each decode
+        // must still be exact, including across changing radii
+        let q = InnovationQuantizer::new(3);
+        let mut net = Network::new(1, LatencyModel::default());
+        let mut rng = Rng::new(9);
+        let mut qp = vec![0.0f32; 96];
+        for round in 0..5 {
+            let g: Vec<f32> = (0..96).map(|_| rng.normal() as f32).collect();
+            let (qi, q_new) = q.quantize(&g, &qp);
+            let sent = Payload::Innovation(qi.clone());
+            match net.upload(0, &sent).unwrap() {
+                Payload::Innovation(got) => assert_eq!(got, &qi, "round {round}"),
+                _ => panic!("wrong payload kind"),
+            }
+            qp = q_new;
+        }
+        assert_eq!(net.uplink_rounds(), 5);
     }
 
     #[test]
     fn sim_time_advances_per_model() {
         let lat = LatencyModel { t_fixed: 1.0, t_per_bit: 0.001 };
         let mut net = Network::new(2, lat);
-        net.upload(0, Payload::Dense(vec![0.0; 10])).unwrap(); // 320 bits
+        net.upload(0, &Payload::Dense(vec![0.0; 10])).unwrap(); // 320 bits
         assert!((net.sim_time() - (1.0 + 0.32)).abs() < 1e-12);
         net.broadcast(100);
         assert!((net.sim_time() - (1.0 + 0.32 + 1.0 + 0.1)).abs() < 1e-12);

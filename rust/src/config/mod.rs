@@ -219,6 +219,16 @@ fn default_threads() -> usize {
         .unwrap_or(1)
 }
 
+/// Default server shard count: the `LAQ_SHARDS` environment variable when
+/// set (`rust/ci.sh` runs the suite over the sharded server path this
+/// way), else 1 (single-shard, the plain parameter server).
+fn default_shards() -> usize {
+    std::env::var("LAQ_SHARDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1)
+}
+
 /// A full training run.
 #[derive(Clone, Debug)]
 pub struct RunCfg {
@@ -251,6 +261,16 @@ pub struct RunCfg {
     /// so this is purely a wall-clock knob.  Default: `LAQ_THREADS` env
     /// var if set, else 1.
     pub threads: usize,
+    /// server-side θ-shard count for `absorb`/`apply_update`:
+    /// 1 = single shard (the plain parameter server), 0 = one shard per
+    /// available core, S > 1 = fixed partition into S contiguous
+    /// coordinate shards (block-aligned, capped at ⌈p/1024⌉ so tiny
+    /// models degenerate gracefully).  Every value produces bit-identical
+    /// traces (`rust/tests/sharded_equivalence.rs`) — purely a wall-clock
+    /// knob that scales the wire phase with the parameter dimension p
+    /// (use it for transformer-dim runs).  Default: `LAQ_SHARDS` env var
+    /// if set, else 1.
+    pub server_shards: usize,
 }
 
 impl RunCfg {
@@ -273,6 +293,7 @@ impl RunCfg {
             seed: 1,
             record_every: 1,
             threads: default_threads(),
+            server_shards: default_shards(),
         }
     }
 
@@ -353,6 +374,9 @@ impl RunCfg {
         if let Some(v) = run.get("threads").as_usize() {
             self.threads = v;
         }
+        if let Some(v) = run.get("server_shards").as_usize() {
+            self.server_shards = v;
+        }
         let crit = j.get("criterion");
         if !crit.is_null() {
             if let Some(d) = crit.get("d").as_usize() {
@@ -431,6 +455,7 @@ impl RunCfg {
                 ("l2", Json::Num(self.l2)),
                 ("seed", Json::Num(self.seed as f64)),
                 ("threads", Json::Num(self.threads as f64)),
+                ("server_shards", Json::Num(self.server_shards as f64)),
             ])),
             ("criterion", Json::obj(vec![
                 ("d", Json::Num(self.criterion.d as f64)),
@@ -541,6 +566,22 @@ mod tests {
         c2.threads = 1;
         c2.apply_json(&j).unwrap();
         assert_eq!(c2.threads, 4);
+        c2.validate().unwrap();
+    }
+
+    #[test]
+    fn server_shards_knob_parses_and_roundtrips() {
+        let doc = "\n[run]\nserver_shards = 8\n";
+        let mut c = RunCfg::paper_logreg(Algo::Laq);
+        c.apply_json(&toml::parse(doc).unwrap()).unwrap();
+        assert_eq!(c.server_shards, 8);
+        let j = c.to_json();
+        let mut c2 = RunCfg::paper_logreg(Algo::Gd);
+        c2.server_shards = 1;
+        c2.apply_json(&j).unwrap();
+        assert_eq!(c2.server_shards, 8);
+        // 0 = auto is a valid setting
+        c2.server_shards = 0;
         c2.validate().unwrap();
     }
 }

@@ -4,6 +4,15 @@
 //! mirrors are the algorithm's correctness-critical state, so resume must
 //! restore them exactly, not approximately.
 //!
+//! The checkpoint is deliberately **execution-shape agnostic**: it
+//! records only the flat algorithm state, never the runtime topology
+//! (worker thread count, server shard plan, pools).  Those are rebuilt
+//! from config at load time, and because both knobs are trace-exact
+//! (`rust/tests/parallel_equivalence.rs`,
+//! `rust/tests/sharded_equivalence.rs`), a checkpoint written under any
+//! `(threads, server_shards)` resumes bit-identically under any other —
+//! e.g. grow the shard count when moving a run to a bigger box.
+//!
 //! Format: little-endian binary, magic `LAQCKPT1`, no external deps.
 
 use crate::{Error, Result};

@@ -23,5 +23,5 @@ pub mod worker;
 
 pub use checkpoint::Checkpoint;
 pub use history::DeltaHistory;
-pub use server::ServerState;
+pub use server::{ServerState, ShardedServer, DELTA_BLOCK};
 pub use worker::{CriterionParams, WorkerNode};

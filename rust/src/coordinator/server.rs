@@ -1,11 +1,45 @@
 //! Server-side state: parameters, the lazy aggregate `∇^k`, and the
-//! per-worker mirrors of the last uploaded (quantized) gradients.
+//! per-worker mirrors of the last uploaded (quantized) gradients —
+//! organised as a **sharded server**: θ, `∇^k`, the optimizer state and
+//! every mirror are partitioned into S contiguous coordinate shards that
+//! absorb and update independently.
+//!
+//! # Why sharding is exact
+//!
+//! The paper's innovation quantizer (eqs. (5)–(6)) is coordinate-local:
+//! reconstruction, aggregate-delta and mirror commit touch each
+//! coordinate independently, so any contiguous partition of `0..p`
+//! produces bit-identical state.  The only cross-coordinate reduction on
+//! the hot path is `||Δθ||²` (feeding [`DeltaHistory`] and the criterion
+//! broadcast), which is made partition-independent by a **fixed block
+//! reduction tree**: squares are accumulated sequentially within
+//! [`DELTA_BLOCK`]-sized coordinate blocks, block partials are summed in
+//! block order on the coordinator thread, and shard boundaries always
+//! align to block boundaries.  Hence `shards = S` is bit-identical to
+//! `shards = 1` for every S (pinned by `rust/tests/sharded_equivalence.rs`).
+//!
+//! # Steady-state allocation
+//!
+//! `absorb_lazy` fuses dequantize + aggregate-delta + mirror-commit into
+//! one in-place sweep (the old path allocated a p-length `q_new` and
+//! swept the data three times per upload); `apply_update` writes into the
+//! retained block-partial buffer.  After warmup the server performs zero
+//! heap allocation per iteration (`rust/tests/alloc_steady_state.rs`).
+
+use std::sync::Arc;
 
 use crate::comm::Payload;
 use crate::coordinator::DeltaHistory;
 use crate::quant::InnovationQuantizer;
-use crate::util::tensor;
+use crate::util::threadpool::{Pool, SendPtr};
 use crate::{Error, Result};
+
+/// Coordinate-block size of the `||Δθ||²` reduction tree.  Shard bounds
+/// align to this, so the f64 sum order is independent of the shard count;
+/// for p ≤ DELTA_BLOCK the reduction degenerates to the plain sequential
+/// sum.  4 KiB of f32s — small enough to stay cache-resident per shard
+/// job, large enough that the per-block bookkeeping is noise.
+pub const DELTA_BLOCK: usize = 1024;
 
 /// Server-side parameter-update rule applied to the (lazily aggregated)
 /// gradient ∇^k.  The paper analyses plain GD; Adam is provided as a
@@ -31,9 +65,48 @@ struct AdamState {
     t: u64,
 }
 
-/// Parameter-server state (paper eq. (4)).
+/// Contiguous, [`DELTA_BLOCK`]-aligned partition of `0..dim` into S
+/// coordinate shards.  Empty shards are elided (S is capped at the block
+/// count), so tiny models quietly degenerate to a single shard.
 #[derive(Clone, Debug)]
-pub struct ServerState {
+struct ShardPlan {
+    /// shard bounds in coordinates; length = shards + 1, bounds[0] = 0,
+    /// bounds[last] = dim, interior bounds multiples of DELTA_BLOCK
+    bounds: Vec<usize>,
+}
+
+impl ShardPlan {
+    fn new(dim: usize, shards: usize) -> Self {
+        let nb = dim.div_ceil(DELTA_BLOCK).max(1);
+        let s = shards.clamp(1, nb);
+        let mut bounds = Vec::with_capacity(s + 1);
+        bounds.push(0);
+        for k in 1..=s {
+            // balanced in whole blocks; the last shard takes the ragged tail
+            let hi = ((k * nb) / s) * DELTA_BLOCK;
+            bounds.push(hi.min(dim));
+        }
+        *bounds.last_mut().expect("nonempty bounds") = dim;
+        Self { bounds }
+    }
+
+    fn n_shards(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    fn range(&self, s: usize) -> (usize, usize) {
+        (self.bounds[s], self.bounds[s + 1])
+    }
+}
+
+/// Parameter-server state (paper eq. (4)), sharded over θ.
+///
+/// Checkpoints capture only the flat algorithm state (θ, ∇, mirrors,
+/// history) — the shard plan and its pool are runtime artifacts rebuilt
+/// from config, so a checkpoint written under any shard count resumes
+/// bit-identically under any other.
+#[derive(Clone, Debug)]
+pub struct ShardedServer {
     /// current iterate θ^k
     pub theta: Vec<f32>,
     /// lazy aggregate ∇^k = Σ_m Q_m(θ̂_m)
@@ -45,11 +118,25 @@ pub struct ServerState {
     quantizer: InnovationQuantizer,
     opt: ServerOpt,
     adam: Option<AdamState>,
+    plan: ShardPlan,
+    /// shard fan-out pool (None = run shards on the caller thread); the
+    /// caller participates in every fan-out, so this holds S_runners − 1
+    /// threads
+    pool: Option<Arc<Pool>>,
+    /// retained `||Δθ||²` block partials (see [`DELTA_BLOCK`])
+    block_partials: Vec<f64>,
 }
 
-impl ServerState {
+/// Historical name — the sharded server with `shards = 1` *is* the plain
+/// parameter server, so the types are one and the same.
+pub type ServerState = ShardedServer;
+
+impl ShardedServer {
+    /// Single-shard server (the paper's plain parameter server).  Call
+    /// [`Self::set_shards`] to partition θ.
     pub fn new(dim: usize, n_workers: usize, bits: u32, d: usize, theta0: Vec<f32>) -> Self {
         assert_eq!(theta0.len(), dim);
+        let nb = dim.div_ceil(DELTA_BLOCK).max(1);
         Self {
             theta: theta0,
             agg: vec![0.0; dim],
@@ -58,7 +145,38 @@ impl ServerState {
             quantizer: InnovationQuantizer::new(bits),
             opt: ServerOpt::Sgd,
             adam: None,
+            plan: ShardPlan::new(dim, 1),
+            pool: None,
+            block_partials: vec![0.0; nb],
         }
+    }
+
+    /// Partition θ into `shards` contiguous coordinate shards (0 = one
+    /// shard per available core).  Purely a wall-clock knob: any value
+    /// produces bit-identical traces (see the module notes).  The shard
+    /// pool holds `min(shards, cores) − 1` threads because the calling
+    /// thread participates in every fan-out.
+    pub fn set_shards(&mut self, shards: usize) {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let want = if shards == 0 { cores } else { shards };
+        self.plan = ShardPlan::new(self.dim(), want);
+        let s = self.plan.n_shards();
+        let spawn = s.min(cores).saturating_sub(1);
+        self.pool = if s > 1 && spawn > 0 {
+            Some(Arc::new(Pool::new(spawn)))
+        } else {
+            None
+        };
+    }
+
+    /// Effective shard count after block alignment and core capping.
+    pub fn shards(&self) -> usize {
+        self.plan.n_shards()
+    }
+
+    /// Runners participating in a shard fan-out (spawned + caller).
+    pub fn shard_runners(&self) -> usize {
+        self.pool.as_ref().map(|p| p.size()).unwrap_or(0) + 1
     }
 
     /// Select the server optimizer (default: plain GD, the paper's rule).
@@ -71,33 +189,85 @@ impl ServerState {
         self.theta.len()
     }
 
+    /// Run `f(shard)` for every shard — on the pool when one exists, on
+    /// the caller otherwise.  Jobs receive disjoint coordinate ranges via
+    /// `plan.range`, so `SendPtr::slice_mut` access is sound.
+    fn shard_run(pool: &Option<Arc<Pool>>, plan: &ShardPlan, f: &(dyn Fn(usize) + Sync)) {
+        let s = plan.n_shards();
+        match pool {
+            Some(p) if s > 1 => p.run_indexed(s, f),
+            _ => {
+                for i in 0..s {
+                    f(i);
+                }
+            }
+        }
+    }
+
     /// Absorb worker `m`'s upload into the lazy aggregate:
-    /// `∇ += Q_m^new − Q_m^old`, mirror updated.  The payload is whatever
-    /// crossed the wire (already decoded by [`crate::comm::Network`]).
+    /// `∇ += Q_m^new − Q_m^old`, mirror updated — one fused in-place sweep
+    /// per shard (dequantize, aggregate-delta and mirror-commit touch each
+    /// coordinate exactly once).  The payload is whatever crossed the wire
+    /// (already decoded by [`crate::comm::Network`]).
     pub fn absorb_lazy(&mut self, m: usize, payload: &Payload) -> Result<()> {
+        let dim = self.dim();
         match payload {
             Payload::Dense(g) => {
                 // LAG-style full-precision refresh: Q_m == g
-                if g.len() != self.dim() {
+                if g.len() != dim {
                     return Err(Error::Msg("dense upload dim mismatch".into()));
                 }
-                for i in 0..g.len() {
-                    self.agg[i] += g[i] - self.q_mirror[m][i];
-                }
-                self.q_mirror[m].copy_from_slice(g);
+                let agg = SendPtr::new(&mut self.agg[..]);
+                let mir = SendPtr::new(&mut self.q_mirror[m][..]);
+                let plan = &self.plan;
+                Self::shard_run(&self.pool, plan, &|s| {
+                    let (lo, hi) = plan.range(s);
+                    // SAFETY: shard ranges are disjoint and in bounds;
+                    // agg/mirror outlive the fan-out with no other borrows
+                    let agg = unsafe { agg.slice_mut(lo, hi - lo) };
+                    let mir = unsafe { mir.slice_mut(lo, hi - lo) };
+                    let g = &g[lo..hi];
+                    for i in 0..g.len() {
+                        agg[i] += g[i] - mir[i];
+                        mir[i] = g[i];
+                    }
+                });
             }
             Payload::Innovation(qi) => {
-                if qi.codes.len() != self.dim() {
+                if qi.codes.len() != dim {
                     return Err(Error::Msg("innovation dim mismatch".into()));
                 }
-                // reconstruct Q_m^new from the mirror — the exact same f32
-                // expression as the worker used, so mirrors never drift
-                let mut q_new = vec![0.0f32; self.dim()];
-                self.quantizer.dequantize_into(qi, &self.q_mirror[m], &mut q_new);
-                for i in 0..q_new.len() {
-                    self.agg[i] += q_new[i] - self.q_mirror[m][i];
+                if qi.bits != self.quantizer.bits {
+                    // the old dequantize path asserted this; keep it a
+                    // release-mode guard — a wrong-width payload would
+                    // silently corrupt every mirror otherwise
+                    return Err(Error::Msg(format!(
+                        "innovation bit-width mismatch: payload b={} vs session b={}",
+                        qi.bits, self.quantizer.bits
+                    )));
                 }
-                self.q_mirror[m] = q_new;
+                // reconstruct Q_m^new from the mirror with the exact same
+                // f32 expression as the worker used, so mirrors never drift
+                let two_tau_r = 2.0f32 * qi.radius / self.quantizer.num_levels() as f32;
+                let radius = qi.radius;
+                let codes = &qi.codes[..];
+                let agg = SendPtr::new(&mut self.agg[..]);
+                let mir = SendPtr::new(&mut self.q_mirror[m][..]);
+                let plan = &self.plan;
+                Self::shard_run(&self.pool, plan, &|s| {
+                    let (lo, hi) = plan.range(s);
+                    // SAFETY: as above — disjoint shard ranges
+                    let agg = unsafe { agg.slice_mut(lo, hi - lo) };
+                    let mir = unsafe { mir.slice_mut(lo, hi - lo) };
+                    let codes = &codes[lo..hi];
+                    for i in 0..codes.len() {
+                        let q_new = crate::quant::innovation::reconstruct_coord(
+                            mir[i], two_tau_r, codes[i], radius,
+                        );
+                        agg[i] += q_new - mir[i];
+                        mir[i] = q_new;
+                    }
+                });
             }
             _ => {
                 return Err(Error::Msg(
@@ -115,11 +285,23 @@ impl ServerState {
     }
 
     pub fn absorb_fresh(&mut self, payload: &Payload) -> Result<()> {
-        let add: Vec<f32> = match payload {
-            Payload::Dense(g) => g.clone(),
-            Payload::Qsgd(m) => m.dequantize(),
-            Payload::Sparse(m) => m.densify(),
-            Payload::Sign(m) => m.dequantize(),
+        // densify compressed kinds (allocating — the fresh-sum family is
+        // not on the zero-alloc lazy path), then a sharded axpy
+        let tmp: Vec<f32>;
+        let add: &[f32] = match payload {
+            Payload::Dense(g) => g,
+            Payload::Qsgd(msg) => {
+                tmp = msg.dequantize();
+                &tmp
+            }
+            Payload::Sparse(msg) => {
+                tmp = msg.densify();
+                &tmp
+            }
+            Payload::Sign(msg) => {
+                tmp = msg.dequantize();
+                &tmp
+            }
             Payload::Innovation(_) => {
                 return Err(Error::Msg(
                     "innovation uploads need lazy aggregation".into(),
@@ -129,23 +311,57 @@ impl ServerState {
         if add.len() != self.dim() {
             return Err(Error::Msg("fresh upload dim mismatch".into()));
         }
-        tensor::axpy(1.0, &add, &mut self.agg);
+        let agg = SendPtr::new(&mut self.agg[..]);
+        let plan = &self.plan;
+        Self::shard_run(&self.pool, plan, &|s| {
+            let (lo, hi) = plan.range(s);
+            // SAFETY: disjoint shard ranges, agg outlives the fan-out
+            let agg = unsafe { agg.slice_mut(lo, hi - lo) };
+            let add = &add[lo..hi];
+            for i in 0..add.len() {
+                agg[i] += add[i];
+            }
+        });
         Ok(())
     }
 
     /// θ^{k+1} = θ^k − α · step(∇^k); records ||Δθ||² into the history
     /// and returns it.  `step` is the identity for SGD (paper eq. (4)) or
-    /// the bias-corrected Adam direction.
+    /// the bias-corrected Adam direction.  Each shard updates its
+    /// coordinates and writes per-block ||Δθ||² partials; the partials are
+    /// summed in block order on the caller, so the recorded value is
+    /// bit-identical for every shard count.
     pub fn apply_update(&mut self, alpha: f64) -> f64 {
         let a = alpha as f32;
-        let mut delta_sq = 0.0f64;
+        let plan = &self.plan;
         match self.opt {
             ServerOpt::Sgd => {
-                for i in 0..self.theta.len() {
-                    let step = a * self.agg[i];
-                    delta_sq += (step as f64) * (step as f64);
-                    self.theta[i] -= step;
-                }
+                let theta = SendPtr::new(&mut self.theta[..]);
+                let parts = SendPtr::new(&mut self.block_partials[..]);
+                let agg = &self.agg[..];
+                Self::shard_run(&self.pool, plan, &|s| {
+                    let (lo, hi) = plan.range(s);
+                    let mut block = lo / DELTA_BLOCK;
+                    let mut start = lo;
+                    while start < hi {
+                        let end = (start + DELTA_BLOCK).min(hi);
+                        // SAFETY: shard bounds are block-aligned, so both
+                        // the coordinate range and the block index are
+                        // exclusive to this job
+                        let th = unsafe { theta.slice_mut(start, end - start) };
+                        let mut acc = 0.0f64;
+                        for (i, t) in th.iter_mut().enumerate() {
+                            let step = a * agg[start + i];
+                            acc += (step as f64) * (step as f64);
+                            *t -= step;
+                        }
+                        unsafe {
+                            *parts.get_mut(block) = acc;
+                        }
+                        block += 1;
+                        start = end;
+                    }
+                });
             }
             ServerOpt::Adam { beta1, beta2, eps } => {
                 let dim = self.theta.len();
@@ -158,18 +374,44 @@ impl ServerState {
                 let (b1, b2) = (beta1 as f32, beta2 as f32);
                 let bc1 = 1.0 - (beta1.powi(st.t as i32)) as f32;
                 let bc2 = 1.0 - (beta2.powi(st.t as i32)) as f32;
-                for i in 0..dim {
-                    let g = self.agg[i];
-                    st.m[i] = b1 * st.m[i] + (1.0 - b1) * g;
-                    st.v[i] = b2 * st.v[i] + (1.0 - b2) * g * g;
-                    let mhat = st.m[i] / bc1;
-                    let vhat = st.v[i] / bc2;
-                    let step = a * mhat / (vhat.sqrt() + eps as f32);
-                    delta_sq += (step as f64) * (step as f64);
-                    self.theta[i] -= step;
-                }
+                let epsf = eps as f32;
+                let theta = SendPtr::new(&mut self.theta[..]);
+                let mom = SendPtr::new(&mut st.m[..]);
+                let vel = SendPtr::new(&mut st.v[..]);
+                let parts = SendPtr::new(&mut self.block_partials[..]);
+                let agg = &self.agg[..];
+                Self::shard_run(&self.pool, plan, &|s| {
+                    let (lo, hi) = plan.range(s);
+                    let mut block = lo / DELTA_BLOCK;
+                    let mut start = lo;
+                    while start < hi {
+                        let end = (start + DELTA_BLOCK).min(hi);
+                        // SAFETY: block-aligned disjoint ranges (as above)
+                        let th = unsafe { theta.slice_mut(start, end - start) };
+                        let mm = unsafe { mom.slice_mut(start, end - start) };
+                        let vv = unsafe { vel.slice_mut(start, end - start) };
+                        let mut acc = 0.0f64;
+                        for i in 0..th.len() {
+                            let g = agg[start + i];
+                            mm[i] = b1 * mm[i] + (1.0 - b1) * g;
+                            vv[i] = b2 * vv[i] + (1.0 - b2) * g * g;
+                            let mhat = mm[i] / bc1;
+                            let vhat = vv[i] / bc2;
+                            let step = a * mhat / (vhat.sqrt() + epsf);
+                            acc += (step as f64) * (step as f64);
+                            th[i] -= step;
+                        }
+                        unsafe {
+                            *parts.get_mut(block) = acc;
+                        }
+                        block += 1;
+                        start = end;
+                    }
+                });
             }
         }
+        // fixed reduction tree: block partials in block order, on one thread
+        let delta_sq: f64 = self.block_partials.iter().sum();
         self.history.push(delta_sq);
         delta_sq
     }
@@ -180,14 +422,29 @@ impl ServerState {
     }
 
     /// Invariant check (debug/test): ∇ == Σ_m mirror_m within fp tolerance.
+    /// Streams over fixed-size coordinate chunks with a stack buffer —
+    /// O(1) memory instead of an O(p) sum vector, so debug sweeps at
+    /// transformer dim don't thrash the allocator or the cache.
     pub fn check_aggregate_invariant(&self) -> f64 {
-        let mut sum = vec![0.0f32; self.dim()];
-        for q in &self.q_mirror {
-            tensor::axpy(1.0, q, &mut sum);
-        }
+        const CHUNK: usize = 512;
+        let mut buf = [0.0f32; CHUNK];
         let mut worst = 0.0f64;
-        for i in 0..sum.len() {
-            worst = worst.max((sum[i] as f64 - self.agg[i] as f64).abs());
+        let dim = self.dim();
+        let mut lo = 0;
+        while lo < dim {
+            let hi = (lo + CHUNK).min(dim);
+            let n = hi - lo;
+            buf[..n].fill(0.0);
+            for q in &self.q_mirror {
+                let q = &q[lo..hi];
+                for i in 0..n {
+                    buf[i] += q[i];
+                }
+            }
+            for i in 0..n {
+                worst = worst.max((buf[i] as f64 - self.agg[lo + i] as f64).abs());
+            }
+            lo = hi;
         }
         worst
     }
@@ -274,5 +531,92 @@ mod tests {
         let (qi, _) = q.quantize(&[1.0; 4], &[0.0; 4]);
         assert!(s.absorb_fresh(&Payload::Innovation(qi)).is_err());
         assert!(s.absorb_lazy(0, &Payload::Dense(vec![0.0; 3])).is_err());
+        // wrong bit-width payload must be rejected, not silently absorbed
+        let q8 = InnovationQuantizer::new(8);
+        let (qi8, _) = q8.quantize(&[1.0; 4], &[0.0; 4]);
+        assert!(s.absorb_lazy(0, &Payload::Innovation(qi8)).is_err());
+    }
+
+    #[test]
+    fn shard_plan_is_block_aligned_and_covers() {
+        for &(dim, shards) in &[
+            (1usize, 1usize),
+            (44, 7),
+            (1024, 2),
+            (4096, 4),
+            (5000, 3),
+            (7840, 16),
+            (512 * 1024, 8),
+        ] {
+            let plan = ShardPlan::new(dim, shards);
+            assert_eq!(plan.bounds[0], 0);
+            assert_eq!(*plan.bounds.last().unwrap(), dim);
+            for w in plan.bounds.windows(2) {
+                assert!(w[0] < w[1], "empty shard in {plan:?} (dim {dim} S {shards})");
+                if w[1] != dim {
+                    assert_eq!(w[1] % DELTA_BLOCK, 0, "unaligned bound {w:?}");
+                }
+            }
+            assert!(plan.n_shards() <= shards.max(1));
+        }
+    }
+
+    /// Sharded absorb + apply must be bit-identical to the single-shard
+    /// sweep — the micro version of `rust/tests/sharded_equivalence.rs`.
+    #[test]
+    fn sharded_state_is_bit_identical_to_single_shard() {
+        let p = 5000; // > 4 blocks, ragged tail
+        let n_workers = 3;
+        for opt in [ServerOpt::Sgd, ServerOpt::adam()] {
+            let mut base = ServerState::new(p, n_workers, 3, 10, vec![0.0; p]);
+            base.set_opt(opt);
+            let mut sharded: Vec<ServerState> = [2usize, 3, 16]
+                .iter()
+                .map(|&sh| {
+                    let mut s = ServerState::new(p, n_workers, 3, 10, vec![0.0; p]);
+                    s.set_opt(opt);
+                    s.set_shards(sh);
+                    s
+                })
+                .collect();
+            let q = InnovationQuantizer::new(3);
+            let mut q_prev: Vec<Vec<f32>> = vec![vec![0.0; p]; n_workers];
+            for round in 0..4u64 {
+                for m in 0..n_workers {
+                    let g = grad(round * 17 + m as u64, p);
+                    let (qi, q_new) = q.quantize(&g, &q_prev[m]);
+                    let payload = Payload::Innovation(qi);
+                    base.absorb_lazy(m, &payload).unwrap();
+                    for s in sharded.iter_mut() {
+                        s.absorb_lazy(m, &payload).unwrap();
+                    }
+                    q_prev[m] = q_new;
+                }
+                let d0 = base.apply_update(0.02);
+                for s in sharded.iter_mut() {
+                    let d = s.apply_update(0.02);
+                    assert_eq!(d0.to_bits(), d.to_bits(), "delta_sq diverged");
+                }
+            }
+            for s in &sharded {
+                assert_eq!(base.theta, s.theta, "theta diverged at {} shards", s.shards());
+                assert_eq!(base.agg, s.agg);
+                assert_eq!(base.q_mirror, s.q_mirror);
+            }
+        }
+    }
+
+    #[test]
+    fn set_shards_auto_and_caps() {
+        let mut s = ServerState::new(100, 1, 3, 10, vec![0.0; 100]);
+        s.set_shards(0); // auto: capped at the (single) block
+        assert_eq!(s.shards(), 1);
+        let mut s = ServerState::new(8 * DELTA_BLOCK, 1, 3, 10, vec![0.0; 8 * DELTA_BLOCK]);
+        s.set_shards(4);
+        assert_eq!(s.shards(), 4);
+        assert!(s.shard_runners() >= 1);
+        // dense absorb still exact under sharding
+        s.absorb_lazy(0, &Payload::Dense(vec![1.0; 8 * DELTA_BLOCK])).unwrap();
+        assert!(s.check_aggregate_invariant() < 1e-6);
     }
 }

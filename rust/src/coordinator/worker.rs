@@ -8,21 +8,30 @@
 //! trainer's two-phase step:
 //!
 //! * [`WorkerNode::lazy_decide`] — the *local* half: quantize the
-//!   innovation, evaluate criterion (7), build the would-be payload.  It
+//!   innovation, evaluate criterion (7), stage the would-be payload.  It
 //!   reads but never writes the mirror/clock state, so the trainer may
 //!   run it concurrently for all workers (each thread owning its node
 //!   exclusively).  The tentative reconstruction `Q_m(θ^k)` is parked in
-//!   the node's scratch buffer.
+//!   the node's scratch buffer and the wire message in [`WorkerNode::staged`].
 //! * [`WorkerNode::commit`] — the *post-wire* half: on upload, promote
 //!   the scratch reconstruction to `q_prev`, refresh `ε̂²`, zero the
 //!   clock; on skip, tick the clock.  The trainer calls it in worker
 //!   order during the sequential wire phase, right after the server
 //!   absorbed the (wire-decoded) payload, so worker and server mirrors
 //!   move in lock-step.
+//!
+//! # Steady-state allocation
+//!
+//! Every per-iteration buffer is node-retained: the gradient lands in
+//! [`WorkerNode::grad`], the quantizer writes codes straight into the
+//! staged payload, and the reconstruction goes to the scratch vector —
+//! `lazy_decide` + `commit` allocate nothing after construction.  (The
+//! old path built a fresh codes vector per iteration and, for the exact
+//! codec, cloned the full gradient into the payload on every refresh.)
 
 use crate::comm::Payload;
 use crate::model::WorkerGrad;
-use crate::quant::InnovationQuantizer;
+use crate::quant::{InnovationQuantizer, QuantizedInnovation};
 use crate::util::tensor;
 
 /// Per-run criterion constants shared by all workers.
@@ -36,13 +45,12 @@ pub struct CriterionParams {
 
 /// A worker's upload decision for one iteration, produced by the local
 /// phase ([`WorkerNode::lazy_decide`]) and applied to worker state by the
-/// wire phase ([`WorkerNode::commit`]).
-#[derive(Debug)]
+/// wire phase ([`WorkerNode::commit`]).  Plain data — the payload itself
+/// stays parked in [`WorkerNode::staged`] so nothing is moved or cloned.
+#[derive(Clone, Copy, Debug)]
 pub struct LazyDecision {
-    /// criterion verdict: true = put the payload on the uplink
+    /// criterion verdict: true = put the staged payload on the uplink
     pub upload: bool,
-    /// Some iff `upload`; the trainer takes it for [`crate::comm::Network::upload`]
-    pub payload: Option<Payload>,
     /// criterion pieces, for tracing/ablation
     pub lhs: f64,
     pub rhs: f64,
@@ -68,6 +76,13 @@ pub struct WorkerNode<W: WorkerGrad + ?Sized> {
     pub eps_hat_sq: f64,
     /// silence clock t_m
     pub clock: usize,
+    /// retained gradient buffer — the trainer's local phase evaluates the
+    /// oracle into this every iteration
+    pub grad: Vec<f32>,
+    /// the would-be wire message, rebuilt in place by [`Self::lazy_decide`]
+    /// every iteration and borrowed by the wire phase iff the criterion
+    /// fired — Innovation for the quantized codec, Dense for the exact one
+    pub staged: Payload,
     quantizer: InnovationQuantizer,
     codec: LazyCodec,
     /// scratch for q_new (avoids per-iteration allocation)
@@ -77,11 +92,21 @@ pub struct WorkerNode<W: WorkerGrad + ?Sized> {
 impl<W: WorkerGrad + ?Sized> WorkerNode<W> {
     pub fn new(oracle: Box<W>, bits: u32, codec: LazyCodec) -> Self {
         let dim = oracle.dim();
+        let staged = match codec {
+            LazyCodec::Quantized => Payload::Innovation(QuantizedInnovation {
+                radius: 0.0,
+                codes: vec![0; dim],
+                bits,
+            }),
+            LazyCodec::Exact => Payload::Dense(vec![0.0; dim]),
+        };
         Self {
             oracle,
             q_prev: vec![0.0; dim],
             eps_hat_sq: 0.0,
             clock: 0,
+            grad: vec![0.0; dim],
+            staged,
             quantizer: InnovationQuantizer::new(bits),
             codec,
             q_scratch: vec![0.0; dim],
@@ -94,7 +119,8 @@ impl<W: WorkerGrad + ?Sized> WorkerNode<W> {
 
     /// Local phase of one Algorithm-2 worker iteration on an
     /// already-computed local gradient `grad` (full or minibatch — the
-    /// Trainer chooses).
+    /// Trainer chooses; usually the node's own [`Self::grad`] buffer,
+    /// passed back in to keep the borrow checker out of the hot loop).
     ///
     /// `rhs_common` is `(1/(α²M²)) Σ_d ξ_d ||Δθ||²` from the server's
     /// history (derivable worker-side from received parameters at no
@@ -103,7 +129,8 @@ impl<W: WorkerGrad + ?Sized> WorkerNode<W> {
     ///
     /// Pure w.r.t. the node's criterion state: `q_prev`, `eps_hat_sq` and
     /// `clock` are only read; the tentative reconstruction is written to
-    /// the scratch buffer for [`Self::commit`] to promote.  Safe to run
+    /// the scratch buffer and the wire message to [`Self::staged`], for
+    /// [`Self::commit`] / the wire phase to consume.  Safe to run
     /// concurrently across workers (one thread per node).
     pub fn lazy_decide(
         &mut self,
@@ -113,43 +140,58 @@ impl<W: WorkerGrad + ?Sized> WorkerNode<W> {
         force_upload: bool,
     ) -> LazyDecision {
         debug_assert_eq!(grad.len(), self.dim());
-        let (lhs, rhs, eps_sq, upload_payload): (f64, f64, f64, Payload) = match self.codec {
+        let (lhs, rhs, eps_sq): (f64, f64, f64) = match self.codec {
             LazyCodec::Quantized => {
                 // quantize the innovation regardless of skipping — the
-                // criterion is defined on the quantized values
-                let qi = self
-                    .quantizer
-                    .quantize_into(grad, &self.q_prev, &mut self.q_scratch);
+                // criterion is defined on the quantized values; codes land
+                // directly in the staged wire message
+                let qi = match &mut self.staged {
+                    Payload::Innovation(qi) => qi,
+                    _ => unreachable!("quantized codec stages Innovation"),
+                };
+                qi.radius = self.quantizer.quantize_into(
+                    grad,
+                    &self.q_prev,
+                    &mut qi.codes,
+                    &mut self.q_scratch,
+                );
                 let lhs = tensor::norm2_sq_diff(&self.q_prev, &self.q_scratch);
                 let eps_sq = tensor::norm2_sq_diff(grad, &self.q_scratch);
                 let rhs = rhs_common + 3.0 * (eps_sq + self.eps_hat_sq);
-                (lhs, rhs, eps_sq, Payload::Innovation(qi))
+                (lhs, rhs, eps_sq)
             }
             LazyCodec::Exact => {
                 let lhs = tensor::norm2_sq_diff(&self.q_prev, grad);
-                self.q_scratch.copy_from_slice(grad);
+                // one copy into the staged dense payload — commit promotes
+                // it to q_prev, so no second scratch copy and no per-upload
+                // allocation
+                match &mut self.staged {
+                    Payload::Dense(v) => v.copy_from_slice(grad),
+                    _ => unreachable!("exact codec stages Dense"),
+                }
                 // ε ≡ 0 for exact gradients: rhs has no slack term
-                (lhs, rhs_common, 0.0, Payload::Dense(grad.to_vec()))
+                (lhs, rhs_common, 0.0)
             }
         };
 
         let upload = force_upload || lhs > rhs || self.clock >= t_max;
-        LazyDecision {
-            upload,
-            payload: if upload { Some(upload_payload) } else { None },
-            lhs,
-            rhs,
-            eps_sq,
-        }
+        LazyDecision { upload, lhs, rhs, eps_sq }
     }
 
     /// Wire-phase half: apply the state transition `lazy_decide` chose.
-    /// On upload the scratch reconstruction becomes the new mirror
+    /// On upload the tentative reconstruction becomes the new mirror
     /// `Q_m(θ̂_m^k)` (the server commits the identical vector from the
     /// wire-decoded message); on skip only the silence clock moves.
     pub fn commit(&mut self, decision: &LazyDecision) {
         if decision.upload {
-            self.q_prev.copy_from_slice(&self.q_scratch);
+            match self.codec {
+                LazyCodec::Quantized => self.q_prev.copy_from_slice(&self.q_scratch),
+                // exact codec: the staged dense payload IS the gradient
+                LazyCodec::Exact => match &self.staged {
+                    Payload::Dense(v) => self.q_prev.copy_from_slice(v),
+                    _ => unreachable!("exact codec stages Dense"),
+                },
+            }
             self.eps_hat_sq = decision.eps_sq;
             self.clock = 0;
         } else {
@@ -213,7 +255,7 @@ mod tests {
         let mut n = node(3, LazyCodec::Quantized);
         let g = rand_grad(1, 32);
         let out = step(&mut n, &g, 0.0, 100, false);
-        assert!(out.payload.is_some(), "lhs={} rhs={}", out.lhs, out.rhs);
+        assert!(out.upload, "lhs={} rhs={}", out.lhs, out.rhs);
         assert_eq!(n.clock, 0);
     }
 
@@ -225,7 +267,7 @@ mod tests {
         let g = rand_grad(2, 32);
         let _ = step(&mut n, &g, 0.0, 100, false);
         let out2 = step(&mut n, &g, 0.0, 100, false);
-        assert!(out2.payload.is_none(), "lhs={} rhs={}", out2.lhs, out2.rhs);
+        assert!(!out2.upload, "lhs={} rhs={}", out2.lhs, out2.rhs);
         assert_eq!(n.clock, 1);
     }
 
@@ -236,7 +278,7 @@ mod tests {
         let _ = step(&mut n, &g, 0.0, 3, false);
         let mut uploads = 0;
         for _ in 0..6 {
-            if step(&mut n, &g, 1e9, 3, false).payload.is_some() {
+            if step(&mut n, &g, 1e9, 3, false).upload {
                 uploads += 1;
                 // clock must reset after forced refresh
                 assert_eq!(n.clock, 0);
@@ -252,21 +294,41 @@ mod tests {
         let g = rand_grad(4, 32);
         for _ in 0..5 {
             let out = step(&mut n, &g, f64::INFINITY, 100, true);
-            assert!(out.payload.is_some());
+            assert!(out.upload);
         }
     }
 
     #[test]
-    fn exact_codec_uploads_dense_and_tracks_mirror() {
+    fn exact_codec_stages_dense_and_tracks_mirror() {
         let mut n = node(3, LazyCodec::Exact);
         let g = rand_grad(5, 32);
         let out = step(&mut n, &g, 0.0, 100, false);
-        match out.payload.unwrap() {
-            Payload::Dense(v) => assert_eq!(v, g),
+        assert!(out.upload);
+        match &n.staged {
+            Payload::Dense(v) => assert_eq!(v, &g),
             other => panic!("{other:?}"),
         }
         assert_eq!(n.q_prev, g);
         assert_eq!(n.eps_hat_sq, 0.0);
+    }
+
+    #[test]
+    fn quantized_codec_stages_wire_exact_innovation() {
+        // the staged message must reconstruct to exactly the scratch
+        // reconstruction the commit promotes — server/worker lock-step
+        let mut n = node(3, LazyCodec::Quantized);
+        let g = rand_grad(9, 32);
+        let q_prev_before = n.q_prev.clone();
+        let out = step(&mut n, &g, 0.0, 100, false);
+        assert!(out.upload);
+        let q = InnovationQuantizer::new(3);
+        match &n.staged {
+            Payload::Innovation(qi) => {
+                let rec = q.dequantize(qi, &q_prev_before);
+                assert_eq!(rec, n.q_prev);
+            }
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]
@@ -277,7 +339,7 @@ mod tests {
         let q_before = n.q_prev.clone();
         // big rhs -> skip
         let out = step(&mut n, &g, 1e9, 100, false);
-        assert!(out.payload.is_none());
+        assert!(!out.upload);
         assert_eq!(n.q_prev, q_before);
     }
 
@@ -287,7 +349,7 @@ mod tests {
         let g = rand_grad(8, 32);
         let before = (n.q_prev.clone(), n.clock, n.eps_hat_sq);
         let d = n.lazy_decide(&g, 0.0, 100, false);
-        assert!(d.upload && d.payload.is_some());
+        assert!(d.upload);
         // the local phase left all criterion state untouched
         assert_eq!((n.q_prev.clone(), n.clock, n.eps_hat_sq), before);
         n.commit(&d);
@@ -296,7 +358,7 @@ mod tests {
         assert_eq!(n.eps_hat_sq, d.eps_sq);
         // skip decision: commit only ticks the clock
         let d2 = n.lazy_decide(&g, 1e12, 100, false);
-        assert!(!d2.upload && d2.payload.is_none());
+        assert!(!d2.upload);
         let q_after = n.q_prev.clone();
         n.commit(&d2);
         assert_eq!(n.q_prev, q_after);
@@ -313,7 +375,7 @@ mod tests {
         let theta = vec![0.0f32; 18];
         let (loss, grad) = n.oracle.full(&theta).unwrap();
         let out = step(&mut n, &grad, 0.0, 100, false);
-        assert!(out.payload.is_some());
+        assert!(out.upload);
         assert!(loss > 0.0);
     }
 }

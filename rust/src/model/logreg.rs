@@ -66,78 +66,92 @@ pub struct LogRegWorker {
     cfg: LossCfg,
     classes: usize,
     features: usize,
+    /// retained per-row logits scratch (C floats) — keeps the sequential
+    /// evaluation path allocation-free
+    logits: Vec<f32>,
 }
 
 impl LogRegWorker {
     pub fn new(shard: Dataset, cfg: LossCfg) -> Self {
         let classes = shard.classes;
         let features = shard.features;
-        Self { shard, cfg, classes, features }
+        Self { shard, cfg, classes, features, logits: vec![0.0; classes] }
     }
 
-    /// Shared core over an arbitrary row set.  `inv_n` is the CE
-    /// normalizer: 1/N_global for full gradients, 1/(batch·M) for
-    /// minibatches (unbiased for the same global loss).
+    /// Shared core over an arbitrary row set, writing the normalized
+    /// gradient into `out` (len = C·F) and returning the loss.  `inv_n`
+    /// is the CE normalizer: 1/N_global for full gradients, 1/(batch·M)
+    /// for minibatches (unbiased for the same global loss).
     ///
     /// Large row sets are evaluated chunk-parallel on the global pool
     /// (§Perf): each chunk produces a partial (ce, grad) reduced in fixed
     /// chunk order, so results stay deterministic for a given machine.
-    fn eval_rows(&mut self, theta: &[f32], rows: RowIter, inv_n: f64) -> (f64, Vec<f32>) {
+    /// Below the threshold the evaluation runs on retained buffers only —
+    /// zero steady-state heap allocation (the LAQ hot path).
+    fn eval_rows_into(&mut self, theta: &[f32], rows: Rows<'_>, inv_n: f64, out: &mut [f32]) -> f64 {
         let (c, f) = (self.classes, self.features);
         assert_eq!(theta.len(), c * f);
-        let idx: Vec<usize> = rows.collect();
-        let n = idx.len();
+        assert_eq!(out.len(), c * f);
+        let n = rows.len();
         let reg = (self.cfg.l2 / self.cfg.n_workers as f64) as f32;
 
         const PAR_THRESHOLD: usize = 256;
         let pool = crate::util::threadpool::global();
-        let (mut ce, mut grad) = if n >= PAR_THRESHOLD && pool.size() > 1 {
+        let mut ce;
+        if n >= PAR_THRESHOLD && pool.size() > 1 {
             let chunks = pool.size().min(n.div_ceil(64));
             let per = n.div_ceil(chunks);
             let shard = &self.shard;
+            let rows = &rows;
             let parts = pool.scatter(chunks, |ci| {
-                let lo = ci * per;
+                // clamp both ends: ceil-division can make the last
+                // chunk's start overshoot n on very wide pools
+                let lo = (ci * per).min(n);
                 let hi = ((ci + 1) * per).min(n);
-                eval_chunk(shard, theta, &idx[lo..hi], c, f)
+                let mut logits = vec![0.0f32; c];
+                let mut grad = vec![0.0f32; c * f];
+                let ce = eval_chunk(shard, theta, rows.sub(lo, hi), c, f, &mut logits, &mut grad);
+                (ce, grad)
             });
-            let mut ce = 0.0f64;
-            let mut grad = vec![0.0f32; c * f];
+            ce = 0.0;
+            out.fill(0.0);
             for (pce, pgrad) in parts {
                 ce += pce;
-                tensor::axpy(1.0, &pgrad, &mut grad);
+                tensor::axpy(1.0, &pgrad, out);
             }
-            (ce, grad)
         } else {
-            eval_chunk(&self.shard, theta, &idx, c, f)
-        };
+            out.fill(0.0);
+            ce = eval_chunk(&self.shard, theta, rows, c, f, &mut self.logits, out);
+        }
 
         // normalize + ridge
         ce *= inv_n;
-        tensor::scale(&mut grad, inv_n as f32);
-        tensor::axpy(reg, theta, &mut grad);
-        let loss = ce + 0.5 * reg as f64 * tensor::norm2_sq(theta);
-        (loss, grad)
+        tensor::scale(out, inv_n as f32);
+        tensor::axpy(reg, theta, out);
+        ce + 0.5 * reg as f64 * tensor::norm2_sq(theta)
     }
 }
 
-/// One chunk of the fused loss+grad: returns UNNORMALIZED
-/// (Σ ce, Σ diffᵀ x) over `rows`.
+/// One chunk of the fused loss+grad: accumulates UNNORMALIZED
+/// (Σ ce, Σ diffᵀ x) over `rows` into `grad` (pre-zeroed by the caller)
+/// using the caller's logits scratch; returns Σ ce.
 fn eval_chunk(
     shard: &Dataset,
     theta: &[f32],
-    rows: &[usize],
+    rows: Rows<'_>,
     c: usize,
     f: usize,
-) -> (f64, Vec<f32>) {
-    let mut logits = vec![0.0f32; c];
+    logits: &mut [f32],
+    grad: &mut [f32],
+) -> f64 {
+    debug_assert_eq!(logits.len(), c);
     let mut ce = 0.0f64;
-    let mut grad = vec![0.0f32; c * f];
-    for &i in rows {
+    rows.for_each(|i| {
         let x = shard.row(i);
         for (cc, l) in logits.iter_mut().enumerate() {
             *l = tensor::dot_f32(&theta[cc * f..(cc + 1) * f], x);
         }
-        let lse = tensor::logsumexp_row(&logits);
+        let lse = tensor::logsumexp_row(logits);
         let yc = shard.y[i] as usize;
         ce += (lse - logits[yc]) as f64;
         for cc in 0..c {
@@ -149,33 +163,48 @@ fn eval_chunk(
                 tensor::axpy(d, x, &mut grad[cc * f..(cc + 1) * f]);
             }
         }
-    }
-    (ce, grad)
+    });
+    ce
 }
 
-/// Iterator over either the full shard or an index list, cloneable for the
-/// multi-pass evaluation above.
-#[derive(Clone)]
-enum RowIter<'a> {
-    Full(std::ops::Range<usize>),
-    Batch(std::slice::Iter<'a, usize>),
+/// A row set — either a contiguous range of shard rows (the full-shard
+/// case, no index vector materialized) or a minibatch index slice —
+/// sliceable for chunk-parallel evaluation with row order preserved.
+#[derive(Clone, Copy)]
+enum Rows<'a> {
+    /// shard rows `[lo, hi)`
+    Range(usize, usize),
+    Batch(&'a [usize]),
 }
 
-impl<'a> Iterator for RowIter<'a> {
-    type Item = usize;
-    fn next(&mut self) -> Option<usize> {
-        match self {
-            RowIter::Full(r) => r.next(),
-            RowIter::Batch(it) => it.next().copied(),
-        }
-    }
-}
-
-impl<'a> RowIter<'a> {
+impl<'a> Rows<'a> {
     fn len(&self) -> usize {
         match self {
-            RowIter::Full(r) => r.len(),
-            RowIter::Batch(it) => it.len(),
+            Rows::Range(lo, hi) => hi - lo,
+            Rows::Batch(s) => s.len(),
+        }
+    }
+
+    /// The `[lo, hi)` sub-chunk (positions within this row set).
+    fn sub(&self, lo: usize, hi: usize) -> Rows<'a> {
+        match self {
+            Rows::Range(base, _) => Rows::Range(base + lo, base + hi),
+            Rows::Batch(s) => Rows::Batch(&s[lo..hi]),
+        }
+    }
+
+    fn for_each(&self, mut f: impl FnMut(usize)) {
+        match self {
+            Rows::Range(lo, hi) => {
+                for i in *lo..*hi {
+                    f(i);
+                }
+            }
+            Rows::Batch(s) => {
+                for &i in *s {
+                    f(i);
+                }
+            }
         }
     }
 }
@@ -186,15 +215,27 @@ impl WorkerGrad for LogRegWorker {
     }
 
     fn full(&mut self, theta: &[f32]) -> Result<(f64, Vec<f32>)> {
-        let inv_n = 1.0 / self.cfg.n_global as f64;
-        Ok(self.eval_rows(theta, RowIter::Full(0..self.shard.n), inv_n))
+        let mut grad = vec![0.0f32; self.dim()];
+        let loss = self.full_into(theta, &mut grad)?;
+        Ok((loss, grad))
     }
 
     fn batch(&mut self, theta: &[f32], rows: &[usize]) -> Result<(f64, Vec<f32>)> {
+        let mut grad = vec![0.0f32; self.dim()];
+        let loss = self.batch_into(theta, rows, &mut grad)?;
+        Ok((loss, grad))
+    }
+
+    fn full_into(&mut self, theta: &[f32], grad_out: &mut [f32]) -> Result<f64> {
+        let inv_n = 1.0 / self.cfg.n_global as f64;
+        Ok(self.eval_rows_into(theta, Rows::Range(0, self.shard.n), inv_n, grad_out))
+    }
+
+    fn batch_into(&mut self, theta: &[f32], rows: &[usize], grad_out: &mut [f32]) -> Result<f64> {
         // unbiased estimator of the full-gradient normalization:
         // E[(1/(b·M)) Σ_batch ∇ce] = (1/N) Σ_shard ∇ce for uniform batches
         let inv_n = 1.0 / (rows.len() * self.cfg.n_workers) as f64;
-        Ok(self.eval_rows(theta, RowIter::Batch(rows.iter()), inv_n))
+        Ok(self.eval_rows_into(theta, Rows::Batch(rows), inv_n, grad_out))
     }
 
     fn shard_len(&self) -> usize {

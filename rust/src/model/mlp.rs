@@ -129,7 +129,9 @@ impl MlpWorker {
             let shard = &self.shard;
             let model = &self.model;
             let parts = pool.scatter(chunks, |ci| {
-                let lo = ci * per;
+                // clamp both ends: ceil-division can make the last
+                // chunk's start overshoot n on very wide pools
+                let lo = (ci * per).min(n);
                 let hi = ((ci + 1) * per).min(n);
                 mlp_eval_chunk(shard, model, theta, &rows[lo..hi])
             });

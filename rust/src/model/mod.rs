@@ -37,6 +37,28 @@ pub trait WorkerGrad: Send {
     /// Minibatch loss and gradient over `rows` (indices into the shard).
     fn batch(&mut self, theta: &[f32], rows: &[usize]) -> Result<(f64, Vec<f32>)>;
 
+    /// Full-shard loss with the gradient written into a caller-retained
+    /// buffer (`grad_out.len() == dim()`).  The trainer's hot loop calls
+    /// this form so the steady state stays allocation-free; backends
+    /// without an in-place path inherit this allocating shim.
+    fn full_into(&mut self, theta: &[f32], grad_out: &mut [f32]) -> Result<f64> {
+        let (loss, g) = self.full(theta)?;
+        grad_out.copy_from_slice(&g);
+        Ok(loss)
+    }
+
+    /// Minibatch form of [`Self::full_into`].
+    fn batch_into(
+        &mut self,
+        theta: &[f32],
+        rows: &[usize],
+        grad_out: &mut [f32],
+    ) -> Result<f64> {
+        let (loss, g) = self.batch(theta, rows)?;
+        grad_out.copy_from_slice(&g);
+        Ok(loss)
+    }
+
     /// Number of rows in this worker's shard.
     fn shard_len(&self) -> usize;
 }

@@ -11,7 +11,7 @@
 //! correctness rests on (server's `q_prev` must equal worker's `q_prev`
 //! forever, with no drift).
 
-use crate::util::bitio::{pack_codes, unpack_codes, BitReader, BitWriter};
+use crate::util::bitio::{pack_codes, unpack_codes_into, BitReader, BitWriter};
 use crate::{Error, Result};
 
 /// Worker-side quantization output plus the wire form.
@@ -31,25 +31,54 @@ impl QuantizedInnovation {
         32 + self.bits as usize * self.codes.len()
     }
 
+    /// Serialize into a caller-retained writer (cleared first) — the hot
+    /// wire path reuses one [`BitWriter`] per network, so the steady-state
+    /// encode performs no heap allocation.
+    pub fn encode_into(&self, w: &mut BitWriter) {
+        w.clear();
+        w.write_f32(self.radius);
+        pack_codes(&self.codes, self.bits, w);
+        debug_assert_eq!(w.len_bits(), self.wire_bits());
+    }
+
     /// Serialize to the physical wire format: `[f32 R][b-bit codes × p]`.
     pub fn encode(&self) -> Vec<u8> {
         let mut w = BitWriter::with_capacity_bits(self.wire_bits());
-        w.write_f32(self.radius);
-        pack_codes(&self.codes, self.bits, &mut w);
-        debug_assert_eq!(w.len_bits(), self.wire_bits());
+        self.encode_into(&mut w);
         w.into_bytes()
     }
 
-    /// Deserialize from the wire (needs `bits` and `p` from the session).
-    pub fn decode(buf: &[u8], bits: u32, p: usize) -> Result<Self> {
+    /// Deserialize from the wire into a caller-retained message, reusing
+    /// its `codes` buffer (no allocation once the capacity has warmed up).
+    pub fn decode_into(buf: &[u8], bits: u32, p: usize, out: &mut Self) -> Result<()> {
         let mut r = BitReader::new(buf);
         let radius = r
             .read_f32()
             .ok_or_else(|| Error::Codec("truncated innovation header".into()))?;
-        let codes = unpack_codes(&mut r, bits, p)
+        unpack_codes_into(&mut r, bits, p, &mut out.codes)
             .ok_or_else(|| Error::Codec("truncated innovation codes".into()))?;
-        Ok(Self { radius, codes, bits })
+        out.radius = radius;
+        out.bits = bits;
+        Ok(())
     }
+
+    /// Deserialize from the wire (needs `bits` and `p` from the session).
+    pub fn decode(buf: &[u8], bits: u32, p: usize) -> Result<Self> {
+        let mut out = Self { radius: 0.0, codes: Vec::with_capacity(p), bits };
+        Self::decode_into(buf, bits, p, &mut out)?;
+        Ok(out)
+    }
+}
+
+/// The one reconstruction expression: `q_new = q_prev + 2τR·c − R`.
+///
+/// Worker quantize, server dequantize and the sharded server's fused
+/// absorb all MUST evaluate this exact f32 expression (same ops, same
+/// order) — any divergence silently desynchronizes worker and server
+/// mirrors.  It lives here, once, so an edit cannot miss a site.
+#[inline(always)]
+pub fn reconstruct_coord(q_prev: f32, two_tau_r: f32, code: u32, radius: f32) -> f32 {
+    q_prev + two_tau_r * code as f32 - radius
 }
 
 /// Stateless quantizer for a fixed bit-width.
@@ -75,17 +104,23 @@ impl InnovationQuantizer {
         1.0 / self.num_levels() as f64
     }
 
-    /// Quantize the innovation `g - q_prev`.
+    /// Quantize the innovation `g - q_prev` into caller-retained buffers.
     ///
-    /// Returns the wire message and writes the reconstructed quantized
-    /// gradient `q_new` (what the server will hold) into `q_new_out`.
+    /// Writes the per-coordinate integer codes into `codes_out` (cleared
+    /// and refilled; no allocation once its capacity covers `g.len()`)
+    /// and the reconstructed quantized gradient `q_new` (what the server
+    /// will hold) into `q_new_out`; returns the grid radius `R`.  The
+    /// caller assembles the wire message from `(R, codes_out, bits)` —
+    /// the worker node keeps both buffers alive across iterations so the
+    /// steady-state criterion evaluation performs zero heap allocation.
     /// `q_new_out` may alias a scratch buffer; length must equal `g.len()`.
     pub fn quantize_into(
         &self,
         g: &[f32],
         q_prev: &[f32],
+        codes_out: &mut Vec<u32>,
         q_new_out: &mut [f32],
-    ) -> QuantizedInnovation {
+    ) -> f32 {
         assert_eq!(g.len(), q_prev.len());
         assert_eq!(g.len(), q_new_out.len());
         let num_levels = self.num_levels() as f32;
@@ -94,26 +129,28 @@ impl InnovationQuantizer {
         let two_tau_r = 2.0f32 * radius / num_levels;
         let safe = two_tau_r.max(1e-30f32);
         let inv_safe = 1.0f32 / safe;
-        // §Perf: branch-free indexed loop (no push, no .floor() call) so
-        // the compiler vectorizes the projection; `as i32` truncation
-        // equals floor here because the clamped operand is nonnegative
+        // §Perf: branch-free indexed loop (no .floor() call) so the
+        // compiler vectorizes the projection; `as i32` truncation equals
+        // floor here because the clamped operand is nonnegative
         let n = g.len();
-        let mut codes = vec![0u32; n];
+        codes_out.clear();
+        codes_out.resize(n, 0);
         for i in 0..n {
             let t = (g[i] - q_prev[i] + radius) * inv_safe + 0.5;
             let t = t.clamp(0.0, num_levels);
-            let c = t as i32 as f32; // trunc == floor for t >= 0
-            codes[i] = c as u32;
-            q_new_out[i] = q_prev[i] + two_tau_r * c - radius;
+            let c = (t as i32 as f32) as u32; // trunc == floor for t >= 0
+            codes_out[i] = c;
+            q_new_out[i] = reconstruct_coord(q_prev[i], two_tau_r, c, radius);
         }
-        QuantizedInnovation { radius, codes, bits: self.bits }
+        radius
     }
 
     /// Allocating convenience form of [`Self::quantize_into`].
     pub fn quantize(&self, g: &[f32], q_prev: &[f32]) -> (QuantizedInnovation, Vec<f32>) {
         let mut q_new = vec![0.0f32; g.len()];
-        let qi = self.quantize_into(g, q_prev, &mut q_new);
-        (qi, q_new)
+        let mut codes = Vec::with_capacity(g.len());
+        let radius = self.quantize_into(g, q_prev, &mut codes, &mut q_new);
+        (QuantizedInnovation { radius, codes, bits: self.bits }, q_new)
     }
 
     /// Server-side reconstruction: `q_new = q_prev + 2 tau R c - R`.
@@ -128,7 +165,7 @@ impl InnovationQuantizer {
         assert_eq!(qi.bits, self.bits);
         let two_tau_r = 2.0f32 * qi.radius / self.num_levels() as f32;
         for i in 0..q_prev.len() {
-            q_new_out[i] = q_prev[i] + two_tau_r * qi.codes[i] as f32 - qi.radius;
+            q_new_out[i] = reconstruct_coord(q_prev[i], two_tau_r, qi.codes[i], qi.radius);
         }
     }
 
@@ -188,6 +225,32 @@ mod tests {
         assert_eq!(bytes.len(), qi.wire_bits().div_ceil(8));
         let qi2 = QuantizedInnovation::decode(&bytes, 3, 777).unwrap();
         assert_eq!(qi, qi2);
+    }
+
+    #[test]
+    fn retained_buffer_roundtrip_matches_allocating_path() {
+        // encode_into / decode_into with reused buffers must agree with
+        // the allocating encode/decode, message after message
+        let q = InnovationQuantizer::new(3);
+        let mut w = crate::util::bitio::BitWriter::new();
+        let mut rx = QuantizedInnovation { radius: 0.0, codes: Vec::new(), bits: 3 };
+        let mut codes_scratch: Vec<u32> = Vec::new();
+        let mut q_new = vec![0.0f32; 333];
+        let mut qp = vec![0.0f32; 333];
+        for round in 0..4u64 {
+            let (g, _) = pair(40 + round, 333);
+            let radius = q.quantize_into(&g, &qp, &mut codes_scratch, &mut q_new);
+            let qi = QuantizedInnovation {
+                radius,
+                codes: codes_scratch.clone(),
+                bits: 3,
+            };
+            qi.encode_into(&mut w);
+            assert_eq!(w.as_bytes(), qi.encode().as_slice(), "round {round}");
+            QuantizedInnovation::decode_into(w.as_bytes(), 3, 333, &mut rx).unwrap();
+            assert_eq!(rx, qi, "round {round}");
+            qp.copy_from_slice(&q_new);
+        }
     }
 
     #[test]

@@ -10,6 +10,15 @@
 //!
 //! All codecs produce *physical* wire buffers through [`crate::util::bitio`]
 //! so the communication accounting in [`crate::comm`] counts real bits.
+//!
+//! The innovation codec is the per-iteration hot path, so its whole
+//! pipeline runs on caller-retained buffers: `quantize_into` fills a
+//! caller-provided codes scratch (no `vec![0u32; p]` per upload),
+//! `encode_into` packs into a long-lived [`crate::util::bitio::BitWriter`],
+//! and `decode_into` refills a retained message in place — after warmup
+//! the quantize → wire → dequantize round trip allocates nothing.  The
+//! other codecs (QSGD / sparsify / sign-EF) keep the simpler allocating
+//! forms; they are not on the lazy steady-state path.
 
 pub mod innovation;
 pub mod qsgd;

@@ -23,6 +23,14 @@ impl BitWriter {
         Self { buf: Vec::with_capacity(bits.div_ceil(8)), used: 0 }
     }
 
+    /// Reset to empty, retaining the byte buffer's capacity — the hot
+    /// wire path packs every upload into one long-lived writer instead of
+    /// allocating a fresh buffer per message.
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.used = 0;
+    }
+
     /// Write the low `n` bits of `v` (n in 1..=64).
     pub fn write(&mut self, mut v: u64, mut n: u32) {
         debug_assert!(n >= 1 && n <= 64);
@@ -138,12 +146,26 @@ pub fn pack_codes(codes: &[u32], bits: u32, w: &mut BitWriter) {
     }
 }
 
-/// Unpack `n` codes of width `bits`.
-pub fn unpack_codes(r: &mut BitReader, bits: u32, n: usize) -> Option<Vec<u32>> {
-    let mut out = Vec::with_capacity(n);
+/// Unpack `n` codes of width `bits` into a caller-retained vector
+/// (cleared first; no allocation once its capacity has warmed up).
+pub fn unpack_codes_into(
+    r: &mut BitReader,
+    bits: u32,
+    n: usize,
+    out: &mut Vec<u32>,
+) -> Option<()> {
+    out.clear();
+    out.reserve(n);
     for _ in 0..n {
         out.push(r.read(bits)? as u32);
     }
+    Some(())
+}
+
+/// Unpack `n` codes of width `bits` (allocating convenience form).
+pub fn unpack_codes(r: &mut BitReader, bits: u32, n: usize) -> Option<Vec<u32>> {
+    let mut out = Vec::with_capacity(n);
+    unpack_codes_into(r, bits, n, &mut out)?;
     Some(out)
 }
 
@@ -220,6 +242,23 @@ mod tests {
             assert_eq!(r.read_f32(), Some(1.25));
             let got = unpack_codes(&mut r, bits, 777).unwrap();
             assert_eq!(got, codes);
+        }
+    }
+
+    #[test]
+    fn clear_retains_capacity_and_roundtrips() {
+        let mut w = BitWriter::with_capacity_bits(32 + 3 * 100);
+        let mut codes_out: Vec<u32> = Vec::new();
+        for round in 0..3u32 {
+            w.clear();
+            w.write_f32(round as f32);
+            let codes: Vec<u32> = (0..100).map(|i| (i + round) % 8).collect();
+            pack_codes(&codes, 3, &mut w);
+            assert_eq!(w.len_bits(), 32 + 300);
+            let mut r = BitReader::new(w.as_bytes());
+            assert_eq!(r.read_f32(), Some(round as f32));
+            unpack_codes_into(&mut r, 3, 100, &mut codes_out).unwrap();
+            assert_eq!(codes_out, codes);
         }
     }
 

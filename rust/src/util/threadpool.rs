@@ -1,117 +1,257 @@
 //! Minimal work-pool substrate (tokio/rayon unavailable offline).
 //!
-//! The coordinator fans one closure out per worker each iteration and
-//! joins the results — a scoped scatter/gather.  `Pool` keeps N OS threads
-//! alive across iterations (spawning threads per step would dominate the
-//! hot loop) and runs `'static`-free borrows safely via `std::thread::scope`
-//! under the hood of [`Pool::scatter`].
+//! Two fan-out layers use this pool every iteration: the trainer scatters
+//! one job per *worker* (local phase) and the sharded server scatters one
+//! job per *θ-shard* (absorb/apply).  Both run in the hot loop, so the
+//! dispatch path is engineered around two properties:
+//!
+//! * **Zero steady-state allocation** — [`Pool::run_indexed`] publishes a
+//!   stack-held batch descriptor into a retained `VecDeque` and hands out
+//!   indices under a mutex; no per-job boxing, no channel nodes.  After
+//!   the queue's capacity warms up, a scatter performs no heap traffic at
+//!   all (this is what the counting-allocator test in
+//!   `rust/tests/alloc_steady_state.rs` pins).
+//! * **Caller participation** — the thread that posts a batch claims and
+//!   runs jobs itself instead of sleeping, so a pool of `T` spawned
+//!   threads gives `T + 1` runners.  On small machines this is the
+//!   difference between 2× and 1.5× on a two-way split.
+//!
+//! `'static`-free borrows are safe via the join-before-return discipline
+//! (like crossbeam's scoped threads): a batch cannot leave the queue until
+//! every claimed job has finished, and `run_indexed` does not return until
+//! the batch has left the queue.
+//!
+//! One batch nests inside another only across *distinct* pools (the
+//! trainer pool, each server's shard pool, and the global model pool are
+//! separate objects).  Posting a batch to a pool from inside one of that
+//! same pool's jobs would deadlock — none of the in-tree layers do this.
 
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::cell::UnsafeCell;
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
 
-type Job = Box<dyn FnOnce() + Send + 'static>;
+/// A published fan-out: `f` is run once per index in `0..n`.
+struct Batch {
+    /// lifetime-erased job (SAFETY: outlives the batch via join-before-return)
+    f: *const (dyn Fn(usize) + Sync),
+    n: usize,
+    /// next index to claim (guarded by the pool mutex)
+    next: usize,
+    /// claimed-or-unclaimed jobs not yet finished
+    remaining: usize,
+    /// first panic payload, re-raised by the posting thread after the join
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
 
-/// Long-lived pool of worker threads executing boxed jobs.
+/// Raw pointer to a stack-held [`Batch`], movable across pool threads.
+/// All dereferences happen with the pool mutex held, and the batch is
+/// removed from the queue before the posting frame returns.
+#[derive(Clone, Copy)]
+struct BatchPtr(*mut Batch);
+
+unsafe impl Send for BatchPtr {}
+
+struct Shared {
+    queue: VecDeque<BatchPtr>,
+    shutdown: bool,
+}
+
+struct Inner {
+    state: Mutex<Shared>,
+    /// workers wait here for new batches
+    work_cv: Condvar,
+    /// posting threads wait here for their batch to drain
+    done_cv: Condvar,
+}
+
+/// Long-lived pool of worker threads executing indexed fan-outs.
 pub struct Pool {
-    tx: Option<mpsc::Sender<Job>>,
+    inner: Arc<Inner>,
     handles: Vec<std::thread::JoinHandle<()>>,
     size: usize,
+}
+
+/// Book-keep one completed job: record the first panic payload, decrement
+/// the batch's remaining count and — on the last job — retire the batch
+/// from the queue and wake any posting threads.  Shared by the pool
+/// workers and the posting thread's participation loop so the two runners
+/// can never drift apart.
+fn finish_job(inner: &Inner, bp: BatchPtr, out: std::thread::Result<()>) {
+    let mut guard = inner.state.lock().unwrap();
+    // SAFETY: batch pointers are only dereferenced under the pool mutex
+    // and stay valid until their last job completes (which is at the
+    // earliest this very call)
+    let b = unsafe { &mut *bp.0 };
+    if let Err(p) = out {
+        if b.panic.is_none() {
+            b.panic = Some(p);
+        }
+    }
+    b.remaining -= 1;
+    if b.remaining == 0 {
+        guard.queue.retain(|q| !std::ptr::eq(q.0, bp.0));
+        inner.done_cv.notify_all();
+    }
+}
+
+fn worker_loop(inner: &Inner) {
+    let mut guard = inner.state.lock().unwrap();
+    loop {
+        if guard.shutdown {
+            return;
+        }
+        // claim the first unclaimed index in FIFO batch order
+        let mut claimed: Option<(BatchPtr, usize)> = None;
+        for &bp in guard.queue.iter() {
+            // SAFETY: dereferenced under the pool mutex (see finish_job)
+            let b = unsafe { &mut *bp.0 };
+            if b.next < b.n {
+                let i = b.next;
+                b.next += 1;
+                claimed = Some((bp, i));
+                break;
+            }
+        }
+        match claimed {
+            Some((bp, i)) => {
+                let f = unsafe { (*bp.0).f };
+                drop(guard);
+                // AssertUnwindSafe: on Err the payload is re-raised in the
+                // posting thread after the join, same observability as an
+                // uncaught panic
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    (unsafe { &*f })(i)
+                }));
+                finish_job(inner, bp, out);
+                guard = inner.state.lock().unwrap();
+            }
+            None => {
+                guard = inner.work_cv.wait(guard).unwrap();
+            }
+        }
+    }
 }
 
 impl Pool {
     pub fn new(size: usize) -> Self {
         assert!(size > 0);
-        let (tx, rx) = mpsc::channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
+        let inner = Arc::new(Inner {
+            state: Mutex::new(Shared { queue: VecDeque::new(), shutdown: false }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
         let handles = (0..size)
             .map(|i| {
-                let rx = Arc::clone(&rx);
+                let inner = Arc::clone(&inner);
                 std::thread::Builder::new()
                     .name(format!("laq-pool-{i}"))
-                    .spawn(move || loop {
-                        let job = {
-                            let guard = rx.lock().unwrap();
-                            guard.recv()
-                        };
-                        match job {
-                            Ok(job) => job(),
-                            Err(_) => break,
-                        }
-                    })
+                    .spawn(move || worker_loop(&inner))
                     .expect("spawn pool thread")
             })
             .collect();
-        Self { tx: Some(tx), handles, size }
+        Self { inner, handles, size }
     }
 
+    /// Spawned worker-thread count (the posting thread adds one more
+    /// runner during [`Self::run_indexed`]).
     pub fn size(&self) -> usize {
         self.size
     }
 
-    /// Run `f(i)` for each i in 0..n on the pool, collecting results in
-    /// index order.  Blocks until all complete.  `f` only needs to be
-    /// `Send + Sync` for the duration of the call (we transmute lifetimes
-    /// behind a scope-join, like crossbeam's scoped threads).
+    /// Run `f(i)` for every `i in 0..n` across the pool *and* the calling
+    /// thread, blocking until all complete.  `f` only needs to be
+    /// `Sync` for the duration of the call (lifetime-transmuted behind a
+    /// join, like crossbeam's scoped threads).  Performs no steady-state
+    /// heap allocation: the batch descriptor lives on this stack frame and
+    /// the shared queue retains its capacity across calls.
     ///
-    /// A panic inside a job is caught on the pool thread (which survives
-    /// to serve later scatters), held until **all** `n` jobs have
-    /// finished — the join is what makes the lifetime transmute sound, so
-    /// it must complete even on the failure path — and then re-raised
-    /// here with the original payload.
+    /// A panic inside a job is caught on whichever thread ran it, held
+    /// until **all** `n` jobs have finished — the join is what makes the
+    /// lifetime transmute sound, so it must complete even on the failure
+    /// path — and then re-raised here with the original payload.
+    pub fn run_indexed(&self, n: usize, f: &(dyn Fn(usize) + Sync)) {
+        if n == 0 {
+            return;
+        }
+        // SAFETY: we join the whole batch below before returning (or
+        // unwinding), so the borrow of `f` cannot outlive this frame.
+        let f_static: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f) };
+        let batch = UnsafeCell::new(Batch {
+            f: f_static as *const (dyn Fn(usize) + Sync),
+            n,
+            next: 0,
+            remaining: n,
+            panic: None,
+        });
+        let bp = BatchPtr(batch.get());
+        let inner = &*self.inner;
+        {
+            let mut guard = inner.state.lock().unwrap();
+            guard.queue.push_back(bp);
+        }
+        if n > 1 {
+            inner.work_cv.notify_all();
+        }
+        // caller participates: claim from our own batch until it drains
+        loop {
+            let mut guard = inner.state.lock().unwrap();
+            let b = unsafe { &mut *bp.0 };
+            if b.next >= b.n {
+                // nothing left to claim; wait for in-flight jobs
+                while unsafe { &*bp.0 }.remaining > 0 {
+                    guard = inner.done_cv.wait(guard).unwrap();
+                }
+                // remaining == 0 implies the batch already left the queue
+                let p = unsafe { &mut *bp.0 }.panic.take();
+                drop(guard);
+                if let Some(p) = p {
+                    std::panic::resume_unwind(p);
+                }
+                return;
+            }
+            let i = b.next;
+            b.next += 1;
+            drop(guard);
+            let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i)));
+            finish_job(inner, bp, out);
+        }
+    }
+
+    /// Run `f(i)` for each i in 0..n, collecting results in index order.
+    /// Blocks until all complete.  Allocates the result vector (use
+    /// [`Self::run_indexed`] with retained slots on allocation-free paths).
     pub fn scatter<T, F>(&self, n: usize, f: F) -> Vec<T>
     where
-        T: Send + 'static,
+        T: Send,
         F: Fn(usize) -> T + Sync,
     {
-        if n == 0 {
-            return Vec::new();
-        }
-        type JobResult<T> = std::thread::Result<T>;
-        let (done_tx, done_rx) = mpsc::channel::<(usize, JobResult<T>)>();
-        // SAFETY: we join all `n` jobs via `done_rx` below before
-        // returning (or unwinding), so the borrow of `f` cannot outlive
-        // this frame.
-        let f_ptr: &(dyn Fn(usize) -> T + Sync) = &f;
-        let f_static: &'static (dyn Fn(usize) -> T + Sync) =
-            unsafe { std::mem::transmute(f_ptr) };
-        for i in 0..n {
-            let done = done_tx.clone();
-            let job: Job = Box::new(move || {
-                // AssertUnwindSafe: on Err we re-raise in the caller
-                // after the join, same observability as an uncaught panic
-                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    f_static(i)
-                }));
-                let _ = done.send((i, out));
-            });
-            self.tx.as_ref().unwrap().send(job).expect("pool alive");
-        }
-        drop(done_tx);
         let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
-        let mut first_panic = None;
-        for _ in 0..n {
-            // every job sends exactly once (panics are caught above), so
-            // recv cannot fail before all n results arrive
-            let (i, v) = done_rx.recv().expect("job completed");
-            match v {
-                Ok(v) => slots[i] = Some(v),
-                Err(p) => {
-                    if first_panic.is_none() {
-                        first_panic = Some(p);
-                    }
-                }
-            }
+        {
+            let ptr = SendPtr::new(&mut slots[..]);
+            self.run_indexed(n, &|i| {
+                // SAFETY: run_indexed hands out each index exactly once,
+                // and `slots` outlives the join
+                let slot = unsafe { ptr.get_mut(i) };
+                *slot = Some(f(i));
+            });
         }
-        if let Some(p) = first_panic {
-            std::panic::resume_unwind(p);
-        }
-        slots.into_iter().map(|s| s.unwrap()).collect()
+        slots.into_iter().map(|s| s.expect("job completed")).collect()
+    }
+}
+
+impl std::fmt::Debug for Pool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Pool").field("size", &self.size).finish()
     }
 }
 
 impl Drop for Pool {
     fn drop(&mut self) {
-        drop(self.tx.take());
+        {
+            let mut guard = self.inner.state.lock().unwrap();
+            guard.shutdown = true;
+        }
+        self.inner.work_cv.notify_all();
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -119,15 +259,17 @@ impl Drop for Pool {
 }
 
 /// Raw base pointer into a slice, sendable across the pool's threads so a
-/// scatter can hand each job *disjoint* `&mut` access to one element
-/// (`&mut [T]` itself cannot be captured by a `Fn` closure).
+/// fan-out can hand each job *disjoint* `&mut` access to one element or
+/// one contiguous range (`&mut [T]` itself cannot be captured by a `Fn`
+/// closure).
 ///
-/// SAFETY contract for [`SendPtr::get_mut`]: the caller must guarantee
-/// that (1) every index is dereferenced by at most one thread at a time —
-/// [`Pool::scatter`] provides this, since it runs each index exactly once
-/// — (2) indices stay within the originating slice, and (3) the slice
-/// outlives the scatter (the scatter's join provides this) with no other
-/// live borrows of it for the duration.
+/// SAFETY contract for [`SendPtr::get_mut`] / [`SendPtr::slice_mut`]: the
+/// caller must guarantee that (1) every index is dereferenced by at most
+/// one thread at a time — [`Pool::run_indexed`] provides this, since it
+/// hands out each index exactly once — (2) indices/ranges stay within the
+/// originating slice and ranges handed to different jobs are disjoint, and
+/// (3) the slice outlives the fan-out (the join provides this) with no
+/// other live borrows of it for the duration.
 pub struct SendPtr<T>(*mut T);
 
 unsafe impl<T: Send> Send for SendPtr<T> {}
@@ -152,6 +294,18 @@ impl<T: Send> SendPtr<T> {
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn get_mut(&self, i: usize) -> &mut T {
         &mut *self.0.add(i)
+    }
+
+    /// Disjoint mutable sub-slice `[start, start + len)` — the shard
+    /// access primitive.
+    ///
+    /// # Safety
+    /// See the type-level contract: ranges handed to concurrent jobs must
+    /// not overlap, stay in bounds, and the source slice must outlive the
+    /// fan-out with no other live borrows.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut(&self, start: usize, len: usize) -> &mut [T] {
+        std::slice::from_raw_parts_mut(self.0.add(start), len)
     }
 }
 
@@ -223,6 +377,40 @@ mod tests {
     }
 
     #[test]
+    fn run_indexed_covers_every_index_once() {
+        let pool = Pool::new(3);
+        let hits: Vec<AtomicUsize> = (0..64).map(|_| AtomicUsize::new(0)).collect();
+        pool.run_indexed(64, &|i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn run_indexed_disjoint_ranges_via_slice_mut() {
+        let pool = Pool::new(2);
+        let mut data = vec![0u64; 1000];
+        let bounds = [0usize, 300, 650, 1000];
+        {
+            let ptr = SendPtr::new(&mut data[..]);
+            pool.run_indexed(3, &|s| {
+                let (lo, hi) = (bounds[s], bounds[s + 1]);
+                // SAFETY: ranges from `bounds` are disjoint; `data`
+                // outlives the join
+                let chunk = unsafe { ptr.slice_mut(lo, hi - lo) };
+                for (k, v) in chunk.iter_mut().enumerate() {
+                    *v = (lo + k) as u64;
+                }
+            });
+        }
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i as u64);
+        }
+    }
+
+    #[test]
     fn reuse_across_calls() {
         let pool = Pool::new(2);
         for round in 0..5 {
@@ -236,6 +424,15 @@ mod tests {
         let pool = Pool::new(1);
         let v: Vec<usize> = pool.scatter(0, |i| i);
         assert!(v.is_empty());
+        pool.run_indexed(0, &|_| unreachable!());
+    }
+
+    #[test]
+    fn more_jobs_than_threads_and_vice_versa() {
+        let pool = Pool::new(8);
+        assert_eq!(pool.scatter(2, |i| i).len(), 2);
+        let pool = Pool::new(1);
+        assert_eq!(pool.scatter(32, |i| i).len(), 32);
     }
 
     #[test]
@@ -256,6 +453,25 @@ mod tests {
     }
 
     #[test]
+    fn concurrent_batches_from_different_threads() {
+        // two threads posting to the same pool: batches queue FIFO and
+        // both complete (callers run their own jobs, workers help)
+        let pool = std::sync::Arc::new(Pool::new(2));
+        let mut joins = Vec::new();
+        for t in 0..2u64 {
+            let pool = std::sync::Arc::clone(&pool);
+            joins.push(std::thread::spawn(move || {
+                let out = pool.scatter(20, move |i| i as u64 + t * 1000);
+                assert_eq!(out.len(), 20);
+                assert_eq!(out[3], 3 + t * 1000);
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+
+    #[test]
     fn par_map_matches_serial() {
         let v = par_map(8, |i| i * 3);
         assert_eq!(v, (0..8).map(|i| i * 3).collect::<Vec<_>>());
@@ -267,8 +483,8 @@ mod tests {
         let mut data: Vec<Vec<u64>> = (0..32).map(|i| vec![i as u64]).collect();
         let ptr = SendPtr::new(&mut data[..]);
         let lens = pool.scatter(32, move |i| {
-            // SAFETY: scatter runs each index exactly once; `data` is
-            // alive and unborrowed until the scatter joins below.
+            // SAFETY: each index is handed out exactly once; `data` is
+            // alive and unborrowed until the fan-out joins below.
             let v = unsafe { ptr.get_mut(i) };
             v.push(i as u64 * 2);
             v.len()
@@ -284,7 +500,8 @@ mod tests {
         // the trainer's worker fan-out runs on its own pool while the
         // model layer scatters row chunks onto the global pool from
         // inside those jobs — distinct pools, so no job-waits-on-job
-        // deadlock is possible
+        // deadlock is possible (the inner post even helps drain the
+        // global pool's batch while it waits)
         let outer = Pool::new(3);
         let out = outer.scatter(6, |i| {
             let inner: Vec<usize> = global().scatter(4, move |j| i * 10 + j);

@@ -1,0 +1,182 @@
+//! Sharded-server determinism: a trainer with `server_shards = S` must be
+//! **bit-for-bit** indistinguishable from `server_shards = 1` — same
+//! losses, same uplink bits and rounds, same skip decisions, same
+//! simulated time, same final θ.  This is the contract the sharded server
+//! makes true by construction:
+//!
+//! * the innovation codec is coordinate-local, so absorb (dequantize +
+//!   aggregate-delta + mirror-commit) is exact under any contiguous
+//!   partition of `0..p`;
+//! * the single cross-coordinate reduction on the hot path, `||Δθ||²`,
+//!   uses a fixed DELTA_BLOCK-aligned reduction tree whose f64 sum order
+//!   is independent of the shard count (see `coordinator/server.rs`);
+//! * shard jobs mutate disjoint coordinate ranges, and the per-shard
+//!   fan-out happens strictly inside each absorb/apply call, so the wire
+//!   phase ordering (and therefore all accounting) is untouched.
+//!
+//! The suite mirrors `parallel_equivalence.rs` but sweeps the *server*
+//! axis, uses mnist-like dims (p = 7840 ⇒ 8 coordinate blocks, so shard
+//! plans 2/7/16 are genuinely distinct), and crosses shards × threads.
+
+use laq::config::{Algo, RunCfg};
+
+fn cfg_for(algo: Algo, shards: usize, threads: usize) -> RunCfg {
+    let mut c = RunCfg::paper_logreg(algo);
+    // mnist-like keeps p = 7840 (784 features × 10 classes): 8 blocks,
+    // so non-trivial shard plans; tiny row counts keep the suite fast
+    c.data.n_train = 240;
+    c.data.n_test = 60;
+    c.workers = 4;
+    c.iters = 30;
+    c.batch = 40;
+    c.record_every = 1;
+    c.threads = threads;
+    c.server_shards = shards;
+    if algo.is_stochastic() {
+        c.alpha = 0.01;
+    }
+    c
+}
+
+/// Everything observable about a run, collected per iteration.
+#[derive(Debug, PartialEq)]
+struct Trace {
+    // (loss, grad_norm_sq, bits, uploads, max_eps_sq) per step — f64
+    // compared exactly: the contract is bit-for-bit, not approximate
+    steps: Vec<(f64, f64, u64, usize, f64)>,
+    rounds: u64,
+    bits: u64,
+    sim_time: f64,
+    per_worker_rounds: Vec<u64>,
+    clocks: Vec<usize>,
+    theta: Vec<f32>,
+}
+
+fn run_trace(cfg: &RunCfg) -> Trace {
+    let mut t = laq::algo::build_native(cfg).unwrap();
+    let mut steps = Vec::with_capacity(cfg.iters);
+    for _ in 0..cfg.iters {
+        let s = t.step().unwrap();
+        steps.push((s.loss, s.grad_norm_sq, s.bits, s.uploads, s.max_eps_sq));
+    }
+    Trace {
+        steps,
+        rounds: t.net.uplink_rounds(),
+        bits: t.net.uplink_bits(),
+        sim_time: t.net.sim_time(),
+        per_worker_rounds: t.net.per_worker_rounds().to_vec(),
+        clocks: t.clocks(),
+        theta: t.theta().to_vec(),
+    }
+}
+
+#[test]
+fn all_nine_algorithms_are_shard_count_independent() {
+    for algo in Algo::all() {
+        let base = run_trace(&cfg_for(algo, 1, 1));
+        for shards in [2usize, 7, 16] {
+            let sharded = run_trace(&cfg_for(algo, shards, 1));
+            assert_eq!(
+                base,
+                sharded,
+                "{}: server_shards={shards} trace diverged from shards=1",
+                algo.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn auto_shard_count_matches_single_shard() {
+    // shards = 0 resolves to available_parallelism — whatever that is on
+    // the host, the trace must not change
+    let base = run_trace(&cfg_for(Algo::Laq, 1, 1));
+    let auto = run_trace(&cfg_for(Algo::Laq, 0, 1));
+    assert_eq!(base, auto);
+}
+
+#[test]
+fn shards_cross_threads_match_fully_sequential() {
+    // both fan-outs at once: worker pool (threads=4) and shard pool
+    // (shards=7) against the fully sequential run
+    for algo in [Algo::Laq, Algo::Lag, Algo::Slaq] {
+        let seq = run_trace(&cfg_for(algo, 1, 1));
+        let par = run_trace(&cfg_for(algo, 7, 4));
+        assert_eq!(
+            seq,
+            par,
+            "{}: shards=7 × threads=4 diverged from 1 × 1",
+            algo.name()
+        );
+    }
+}
+
+#[test]
+fn sharded_run_is_itself_deterministic() {
+    // two sharded runs with racing shard schedules still agree exactly
+    let a = run_trace(&cfg_for(Algo::Laq, 7, 4));
+    let b = run_trace(&cfg_for(Algo::Laq, 7, 4));
+    assert_eq!(a, b);
+}
+
+#[test]
+fn adam_server_is_shard_count_independent() {
+    // the Adam θ-update shards over m/v state too; its ||Δθ||² uses the
+    // same block reduction
+    let run = |shards: usize| {
+        let cfg = cfg_for(Algo::Laq, shards, 1);
+        let mut t = laq::algo::build_native(&cfg).unwrap();
+        t.set_server_opt(laq::coordinator::server::ServerOpt::adam());
+        let mut steps = Vec::new();
+        for _ in 0..cfg.iters {
+            let s = t.step().unwrap();
+            steps.push((s.loss, s.bits, s.uploads));
+        }
+        (steps, t.theta().to_vec())
+    };
+    let base = run(1);
+    for shards in [2usize, 16] {
+        assert_eq!(base, run(shards), "adam diverged at {shards} shards");
+    }
+}
+
+#[test]
+fn aggregate_invariant_holds_under_sharding() {
+    // the streaming invariant check agrees with the sharded absorb path
+    let cfg = cfg_for(Algo::Laq, 7, 1);
+    let mut t = laq::algo::build_native(&cfg).unwrap();
+    for _ in 0..10 {
+        t.step().unwrap();
+        assert!(t.aggregate_drift() < 1e-4, "drift {}", t.aggregate_drift());
+    }
+}
+
+#[test]
+fn checkpoint_resume_crosses_shard_counts() {
+    // a checkpoint written by a single-shard run resumes bit-identically
+    // under a sharded server (and vice versa) — checkpoints capture flat
+    // algorithm state only, never the runtime topology
+    let dir = std::env::temp_dir().join("laq_shard_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("mid.ckpt");
+
+    let mut straight = laq::algo::build_native(&cfg_for(Algo::Laq, 1, 1)).unwrap();
+    for _ in 0..20 {
+        straight.step().unwrap();
+    }
+
+    let mut first = laq::algo::build_native(&cfg_for(Algo::Laq, 1, 1)).unwrap();
+    for _ in 0..10 {
+        first.step().unwrap();
+    }
+    first.save_checkpoint(&path).unwrap();
+
+    let mut resumed = laq::algo::build_native(&cfg_for(Algo::Laq, 7, 4)).unwrap();
+    resumed.load_checkpoint(&path).unwrap();
+    for _ in 0..10 {
+        resumed.step().unwrap();
+    }
+
+    assert_eq!(straight.theta(), resumed.theta());
+    let _ = std::fs::remove_dir_all(&dir);
+}
