@@ -9,18 +9,23 @@
 //!    regenerates each comparison's rows (who wins, by what factor) and
 //!    reports the wall time of the sweep.
 //! 3. **Machine-readable output** — every sampled group also lands in
-//!    `BENCH_server.json` (p50/p99/mean per bench, shard and thread
-//!    sweeps, host core count) so CI can track the perf trajectory.
+//!    `BENCH_server.json` (server-side groups) and `BENCH_trainer.json`
+//!    (end-to-end step throughput, sync vs async wire phase over
+//!    M × p sweeps) with p50/p99/mean per bench and the host core count,
+//!    so CI can track the perf trajectory.
 //!
 //! Output is plain text; `cargo bench 2>&1 | tee bench_output.txt`.
 //! Set `LAQ_BENCH_QUICK=1` for the CI smoke mode: only the sharded-server
-//! group runs (reduced sampling) and the JSON is still emitted.
+//! and trainer-wire groups run (reduced sampling) and both JSONs are
+//! still emitted.
 
-use laq::algo::build_native;
-use laq::comm::Payload;
-use laq::config::{Algo, ModelKind, RunCfg};
+use laq::algo::{build_native, Trainer};
+use laq::comm::{LatencyModel, Payload};
+use laq::config::{Algo, ModelKind, RunCfg, WireMode};
+use laq::coordinator::worker::{LazyCodec, WorkerNode};
 use laq::coordinator::ServerState;
 use laq::experiments::{self, ExpOpts};
+use laq::model::WorkerGrad;
 use laq::quant::qsgd::QsgdQuantizer;
 use laq::quant::sparsify::Sparsifier;
 use laq::quant::{InnovationQuantizer, QuantizedInnovation};
@@ -298,6 +303,158 @@ fn bench_parallel_fanout(entries: &mut Vec<Json>) {
     }
 }
 
+/// Cheap deterministic O(p) gradient oracle for the transformer-dim wire
+/// benches: the gradient varies every step (so the lazy criterion keeps
+/// producing fresh innovations) but costs one linear sweep — putting the
+/// wire phase, not the model, on the critical path.
+struct SynthGrad {
+    dim: usize,
+    seed: u64,
+    k: u64,
+}
+
+impl WorkerGrad for SynthGrad {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn full(&mut self, theta: &[f32]) -> laq::Result<(f64, Vec<f32>)> {
+        let mut g = vec![0.0f32; self.dim];
+        let l = self.full_into(theta, &mut g)?;
+        Ok((l, g))
+    }
+
+    fn batch(&mut self, theta: &[f32], _rows: &[usize]) -> laq::Result<(f64, Vec<f32>)> {
+        self.full(theta)
+    }
+
+    fn full_into(&mut self, theta: &[f32], grad_out: &mut [f32]) -> laq::Result<f64> {
+        self.k += 1;
+        let a = ((self.seed % 13) as f32 + 1.0) * 0.01;
+        let phase = (self.k % 7) as f32 * 0.1;
+        for (i, o) in grad_out.iter_mut().enumerate() {
+            *o = theta[i] * 1e-3 + a * (((i % 97) as f32) * 0.01 + phase);
+        }
+        Ok(1.0)
+    }
+
+    fn batch_into(&mut self, theta: &[f32], _rows: &[usize], grad_out: &mut [f32]) -> laq::Result<f64> {
+        self.full_into(theta, grad_out)
+    }
+
+    fn shard_len(&self) -> usize {
+        4
+    }
+}
+
+fn wire_cfg(m: usize, wire: WireMode) -> RunCfg {
+    let mut cfg = RunCfg::paper_logreg(Algo::Laq);
+    cfg.workers = m;
+    cfg.threads = 2;
+    cfg.server_shards = 2;
+    cfg.wire_mode = wire;
+    cfg.staleness_bound = 4;
+    cfg
+}
+
+/// Trainer over the real mnist-like logreg workers (p = 7840).
+fn logreg_wire_trainer(m: usize, wire: WireMode) -> Trainer {
+    let mut cfg = wire_cfg(m, wire);
+    cfg.data.n_train = 16 * m; // 16 rows/worker: wire phase on the critical path
+    cfg.data.n_test = 40;
+    build_native(&cfg).unwrap()
+}
+
+/// Trainer over synthetic oracles at an arbitrary dimension (p = 512k).
+fn synth_wire_trainer(m: usize, p: usize, wire: WireMode) -> Trainer {
+    let cfg = wire_cfg(m, wire);
+    let nodes: Vec<WorkerNode<dyn WorkerGrad>> = (0..m)
+        .map(|i| {
+            let w: Box<dyn WorkerGrad> =
+                Box::new(SynthGrad { dim: p, seed: i as u64, k: 0 });
+            WorkerNode::new(w, cfg.bits, LazyCodec::Quantized)
+        })
+        .collect();
+    Trainer::assemble(cfg, nodes, vec![0.0; p], None, LatencyModel::default()).unwrap()
+}
+
+/// Tentpole bench: end-to-end step throughput, sync vs async wire phase,
+/// swept over worker count M and parameter dimension p — the async
+/// pipeline overlaps compute/wire/absorb, so its win grows with M (the
+/// sync wire phase serializes Σ_m absorb on the coordinator).  Emits the
+/// `trainer_wire` group into BENCH_trainer.json.
+fn bench_trainer_wire(quick: bool, entries: &mut Vec<Json>) {
+    println!("\n== trainer step throughput: sync vs async wire phase ==");
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("   (host cores: {cores}; threads=2, shards=2, LAQ b=3, staleness=4)");
+    let combos: &[(usize, usize)] = if quick {
+        &[(5, 7840), (100, 7840), (5, 512 * 1024)]
+    } else {
+        &[
+            (5, 7840),
+            (20, 7840),
+            (100, 7840),
+            (5, 512 * 1024),
+            (20, 512 * 1024),
+            (100, 512 * 1024),
+        ]
+    };
+    for &(m, p) in combos {
+        let mut p50_sync = f64::NAN;
+        for wire in [WireMode::Sync, WireMode::Async] {
+            let mut t = if p == 7840 {
+                logreg_wire_trainer(m, wire)
+            } else {
+                synth_wire_trainer(m, p, wire)
+            };
+            let (w, smp, it) = if quick {
+                (1, 4, 1)
+            } else if p >= 100_000 || m >= 100 {
+                (1, 8, 1)
+            } else {
+                (3, 15, 3)
+            };
+            let s = sample(|| { black_box(t.step().unwrap()); }, w, smp, it);
+            let name = format!("trainer step [LAQ] M={m:<3} p={p:<6} wire={}", wire.name());
+            let summ = report(&name, &s, None);
+            entries.push(Json::obj(vec![
+                ("group", Json::Str("trainer_wire".into())),
+                ("bench", Json::Str(format!("step_m{m}_p{p}_{}", wire.name()))),
+                ("m", Json::Num(m as f64)),
+                ("p", Json::Num(p as f64)),
+                ("shards", Json::Num(2.0)),
+                ("threads", Json::Num(2.0)),
+                ("wire", Json::Str(wire.name().into())),
+                ("p50_s", Json::Num(summ.p50)),
+                ("p99_s", Json::Num(summ.p99)),
+                ("mean_s", Json::Num(summ.mean)),
+            ]));
+            if wire == WireMode::Sync {
+                p50_sync = summ.p50;
+            } else {
+                println!(
+                    "{:<44} {:.2}× p50 step speedup async vs sync",
+                    format!("  -> M={m} p={p}"),
+                    p50_sync / summ.p50
+                );
+            }
+        }
+    }
+}
+
+fn write_trainer_json(entries: Vec<Json>) {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let doc = Json::obj(vec![
+        ("host", Json::obj(vec![("cores", Json::Num(cores as f64))])),
+        ("entries", Json::Arr(entries)),
+    ]);
+    let path = "BENCH_trainer.json";
+    match std::fs::write(path, doc.to_string_pretty()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => println!("\nWARN: could not write {path}: {e}"),
+    }
+}
+
 fn bench_gradient_backends() {
     println!("\n== gradient evaluation (the dominant per-iteration cost) ==");
     use laq::model::logreg::LogRegWorker;
@@ -358,10 +515,12 @@ fn main() {
     laq::util::logging::init();
     let quick = std::env::var("LAQ_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
     let mut entries: Vec<Json> = Vec::new();
+    let mut trainer_entries: Vec<Json> = Vec::new();
     let t0 = Instant::now();
     if quick {
-        println!("LAQ bench harness — QUICK smoke (sharded server group only)");
+        println!("LAQ bench harness — QUICK smoke (sharded server + trainer wire groups)");
         bench_server_sharded(true, &mut entries);
+        bench_trainer_wire(true, &mut trainer_entries);
     } else {
         println!("LAQ bench harness (offline substitute for criterion)");
         bench_codecs();
@@ -370,8 +529,10 @@ fn main() {
         bench_trainer_steps();
         bench_parallel_fanout(&mut entries);
         bench_server_sharded(false, &mut entries);
+        bench_trainer_wire(false, &mut trainer_entries);
         bench_experiments();
     }
     write_bench_json(entries);
+    write_trainer_json(trainer_entries);
     println!("\ntotal bench wall time: {:.1?}", t0.elapsed());
 }

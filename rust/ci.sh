@@ -3,13 +3,17 @@
 # suite run over the trainer/server execution-shape matrix:
 #   (1) fully sequential          — LAQ_THREADS=1 LAQ_SHARDS=1
 #   (2) parallel + sharded server — LAQ_THREADS=4 LAQ_SHARDS=4
-# The parallel_equivalence and sharded_equivalence tests pin both knobs to
-# bit-identical traces; running the whole suite under each default keeps
-# every other test exercising both schedules too.
+#   (3) async wire phase          — LAQ_THREADS=4 LAQ_SHARDS=4 LAQ_WIRE_MODE=async
+# The parallel/sharded/wire equivalence tests pin all three knobs to
+# bit-identical traces (async at the default staleness_bound=0 keeps the
+# sync absorb order, so the whole suite doubles as an async regression
+# run); running the whole suite under each default keeps every other test
+# exercising every schedule too.
 #
 # A quick-mode bench smoke run then emits BENCH_server.json (sharded
-# absorb/apply p50/p99 over shard × dim sweeps) so the perf trajectory is
-# tracked from every CI run.
+# absorb/apply p50/p99 over shard × dim sweeps) and BENCH_trainer.json
+# (end-to-end step throughput, sync vs async wire phase over M × p) so
+# the perf trajectory is machine-readable from every CI run.
 #
 # Usage: rust/ci.sh   (from the repo root or from rust/)
 set -euo pipefail
@@ -32,8 +36,12 @@ LAQ_THREADS=1 LAQ_SHARDS=1 cargo test -q
 echo "== tests, parallel trainer + sharded server (LAQ_THREADS=4 LAQ_SHARDS=4) =="
 LAQ_THREADS=4 LAQ_SHARDS=4 cargo test -q
 
-echo "== bench smoke (quick mode -> BENCH_server.json) =="
+echo "== tests, async wire phase (LAQ_THREADS=4 LAQ_SHARDS=4 LAQ_WIRE_MODE=async) =="
+LAQ_THREADS=4 LAQ_SHARDS=4 LAQ_WIRE_MODE=async cargo test -q
+
+echo "== bench smoke (quick mode -> BENCH_server.json + BENCH_trainer.json) =="
 LAQ_BENCH_QUICK=1 cargo bench
 test -f BENCH_server.json && echo "BENCH_server.json present"
+test -f BENCH_trainer.json && echo "BENCH_trainer.json present"
 
 echo "== ci OK =="

@@ -18,67 +18,93 @@
 //! path with uploads forced every round — `∇^k` then equals the plain sum
 //! of (quantized) fresh gradients, recovering eqs. (2)/(3) exactly.
 //!
-//! # Threading model
+//! # Threading model: three lanes, two schedules
 //!
-//! Each [`Trainer::step`] is two phases:
+//! One iteration's work divides into three lanes:
 //!
-//! 1. **Parallel local phase** — everything a physical worker would do on
-//!    its own machine: minibatch gradient evaluation, the lazy criterion
-//!    check ([`WorkerNode::lazy_decide`]), and payload encoding
-//!    (innovation / QSGD / sparsification / sign-EF).  With
-//!    `cfg.threads != 1` this fans out over a dedicated [`Pool`], one job
-//!    per worker, each thread holding exclusive `&mut` access to its
-//!    worker's node (disjoint-index access via
-//!    [`crate::util::threadpool::SendPtr`]).  All randomness in this
-//!    phase comes from counter-based streams `Rng::stream(seed, m, k)` —
-//!    a pure function of (run seed, worker, iteration) — so draws are
-//!    identical under any schedule.
-//! 2. **Sequential wire phase** — everything that serializes on shared
-//!    state: uploads pass through [`Network::upload`] *in worker index
-//!    order*, the server absorbs each decoded payload, and the worker
-//!    commits its mirror/clock transition ([`WorkerNode::commit`])
-//!    immediately after.  Bit/round counters and the latency clock
-//!    therefore advance in the exact order the sequential implementation
-//!    used, and the f64 reductions (loss sum, gradient-norm accumulation)
-//!    run on the main thread in index order.  *Within* each absorb and
-//!    the θ-update, the server fans out over coordinate shards — see below.
+//! * **local** — everything a physical worker would do on its own
+//!   machine: minibatch gradient evaluation, the lazy criterion check
+//!   ([`WorkerNode::lazy_decide`]), payload encoding (innovation / QSGD /
+//!   sparsification / sign-EF).  With `cfg.threads != 1` this fans out
+//!   over a dedicated [`Pool`], one job per worker, each thread holding
+//!   exclusive `&mut` access to its worker's node (disjoint-index access
+//!   via [`crate::util::threadpool::SendPtr`]).  All randomness here
+//!   comes from counter-based streams `Rng::stream(seed, m, k)` — a pure
+//!   function of (run seed, worker, iteration) — so draws are identical
+//!   under any schedule.
+//! * **wire** — the physical encode→decode round trip of each upload
+//!   through that worker's retained [`WireSlot`], plus the bit/round/
+//!   latency accounting.
+//! * **absorb** — the sharded server folds each decoded payload into the
+//!   lazy aggregate (`∇ += Q_new − mirror`), coordinate shard by shard.
+//!
+//! `cfg.wire_mode` picks how the lanes are scheduled:
+//!
+//! **Sync** (default): the local fan-out joins first, then wire + absorb
+//! run fused on the coordinator *in worker index order* — upload(m),
+//! absorb(m), commit(m), next worker.  Counters, the latency clock and
+//! every f64 reduction (loss sum, gradient-norm accumulation) advance in
+//! the exact order the sequential implementation used, so a
+//! `threads = N, server_shards = S` run is **bit-for-bit identical** to a
+//! `1 × 1` run (pinned by `rust/tests/parallel_equivalence.rs` and
+//! `rust/tests/sharded_equivalence.rs`).
+//!
+//! **Async**: the three lanes overlap.  Each worker's pool job runs its
+//! local phase, round-trips its own payload through its wire slot, and
+//! publishes a readiness flag; the **pipelined absorber**
+//! ([`ServerState::absorb_pipelined`]) consumes decoded payloads per
+//! θ-shard while later workers are still computing, the coordinator and
+//! the shard pool acting as absorber runners.  Step latency then tracks
+//! `max(local, wire+absorb)` instead of their sum — the win grows with M
+//! (see the `trainer_wire` bench group).
+//!
+//! ```text
+//!        sync:  [---- local ×M ----]|[w0 a0][w1 a1][w2 a2]…   (barrier)
+//!        async: [w0 grad|enc|wire][w1 …][w2 …]                (workers)
+//!                        ╲ shard 0: a0 a1 a2 …                (absorber
+//!                         ╲ shard 1:   a0 a1 a2 …              runners)
+//! ```
+//!
+//! Out-of-order absorption reassociates the f32 aggregate sums, so async
+//! trades the sync schedule's *schedule-exactness* for a **per-seed
+//! reproducibility guarantee**: absorption follows a deterministic
+//! *landing schedule* — per-worker landing keys drawn from the seeded
+//! latency model ([`LatencyModel::landing_key`]), reordered from index
+//! order by at most `cfg.staleness_bound` positions — and every shard
+//! absorbs strictly in that order, whatever the thread timing.  An async
+//! trace is therefore a pure function of (seed, config): identical across
+//! runs, `threads`, and `server_shards` (pinned by
+//! `rust/tests/wire_equivalence.rs`).  Three further invariants hold:
+//!
+//! * **accounting is exactly sync's** — bits/rounds are integer
+//!   per-message facts and the latency clock is folded on the coordinator
+//!   in index order, identical f64 ops in identical order (uplinks
+//!   serialize on the shared wire in the model no matter when compute
+//!   finished, so this is the *correct* clock, not an approximation);
+//! * **`staleness_bound = 0` degenerates to the sync absorb order**, and
+//!   since each (worker, shard) absorb cell runs the same f32 expressions
+//!   as the sync path, those runs are bit-identical to sync;
+//! * staleness is bounded *within* the round: `apply_update` still
+//!   barriers on every upload of iteration k, so the paper's convergence
+//!   semantics are untouched up to floating-point reassociation.
 //!
 //! # Shard topology
 //!
 //! With `cfg.server_shards = S` (0 = auto), the server partitions θ, the
 //! lazy aggregate, the Adam state and every per-worker mirror into S
 //! contiguous, block-aligned coordinate shards
-//! (`coordinator::server::DELTA_BLOCK`).  The two fan-outs nest like this:
-//!
-//! ```text
-//!                    Trainer::step (coordinator thread)
-//!   ───────────────────────────────┬──────────────────────────────────
-//!   local phase (worker pool)      │  wire phase (sequential in m)
-//!                                  │
-//!   worker 0 ─ grad ─ decide ─ enc │  upload(m) ──► absorb_lazy(m)
-//!   worker 1 ─ grad ─ decide ─ enc │                 ├─ shard 0 ┐
-//!   worker … ─ grad ─ decide ─ enc │                 ├─ shard 1 │ server
-//!        (each may nest row-chunk  │                 └─ shard … │ pool
-//!         jobs on the global pool) │                            ┘
-//!                                  │  …then apply_update
-//!                                  │                 ├─ shard 0..S−1
-//!                                  │                 └─ ‖Δθ‖² block sum
-//! ```
-//!
-//! Worker jobs split *rows* (disjoint nodes), shard jobs split
-//! *coordinates* (disjoint `&mut` ranges via `SendPtr::slice_mut`); the
-//! three pools (trainer, per-server shard pool, global model pool) are
-//! distinct objects, so nested fan-outs cannot deadlock.  The innovation
-//! codec is coordinate-local and the single cross-coordinate reduction
-//! (`‖Δθ‖²`) uses a shard-count-independent block tree, so:
-//!
-//! Consequence: a `threads = N, server_shards = S` run is **bit-for-bit
-//! identical** to a `threads = 1, server_shards = 1` run — loss trace,
-//! uplink bits, rounds, skip decisions, simulated time and final θ
-//! (pinned by `rust/tests/parallel_equivalence.rs` and
-//! `rust/tests/sharded_equivalence.rs`).  Both knobs are purely
-//! wall-clock: threads scale with the worker count M, shards with the
-//! parameter dimension p.
+//! (`coordinator::server::DELTA_BLOCK`).  Worker jobs split *rows*
+//! (disjoint nodes), shard jobs split *coordinates* (disjoint `&mut`
+//! ranges via `SendPtr::slice_mut`); the three pools (trainer, per-server
+//! shard pool, global model pool) are distinct objects, so nested
+//! fan-outs cannot deadlock — the async absorber additionally never
+//! blocks on the trainer pool, only on readiness flags its jobs publish.
+//! The innovation codec is coordinate-local and the single
+//! cross-coordinate reduction (`‖Δθ‖²`) uses a shard-count-independent
+//! block tree, which is what makes both bit-exactness claims above hold
+//! for every S.  Both `threads` and `server_shards` remain purely
+//! wall-clock knobs: threads scale with the worker count M, shards with
+//! the parameter dimension p.
 //!
 //! # Steady-state allocation
 //!
@@ -94,8 +120,11 @@ pub mod build;
 
 pub use build::{build, build_native, build_pjrt};
 
-use crate::comm::{LatencyModel, Network, Payload};
-use crate::config::{Algo, RunCfg};
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use crate::comm::{LatencyModel, Network, Payload, WireSlot};
+use crate::config::{Algo, RunCfg, WireMode};
+use crate::coordinator::server::{WireSync, WIRE_PENDING, WIRE_SKIP, WIRE_UPLOAD};
 use crate::coordinator::worker::{LazyCodec, LazyDecision, WorkerNode};
 use crate::coordinator::ServerState;
 use crate::data::shard::Batcher;
@@ -150,8 +179,80 @@ pub struct Trainer {
     gsum: Vec<f32>,
     /// per-worker local-phase results, refilled in place each step
     locals: Vec<LocalSlot>,
-    /// per-worker minibatch draws (all None for deterministic algorithms)
+    /// per-worker minibatch draws (all None for deterministic algorithms;
+    /// the inner vectors are retained and refilled in place each step)
     rows: Vec<Option<Vec<usize>>>,
+    /// async wire phase: landing schedule + readiness board (retained;
+    /// only touched when `cfg.wire_mode == WireMode::Async`)
+    wire: AsyncWireState,
+}
+
+/// Retained state of the async wire phase: the per-step deterministic
+/// landing schedule and the readiness board the local-phase jobs publish
+/// into.  All buffers warm up once and are refilled in place.
+struct AsyncWireState {
+    /// per-worker landing keys drawn from the latency model's seeded
+    /// jitter stream ([`LatencyModel::landing_key`])
+    keys: Vec<u64>,
+    /// effective absorb order: bounded reorder of worker index order
+    order: Vec<usize>,
+    /// candidate-window scratch for the bounded reorder
+    window: Vec<usize>,
+    /// per-worker readiness flags (see `coordinator::server::WIRE_*`)
+    states: Vec<AtomicU8>,
+    /// absorber rendezvous (cursor board + condvar)
+    sync: WireSync,
+}
+
+impl AsyncWireState {
+    fn new(n_workers: usize) -> Self {
+        Self {
+            keys: Vec::with_capacity(n_workers),
+            order: Vec::with_capacity(n_workers),
+            window: Vec::with_capacity(n_workers),
+            states: (0..n_workers).map(|_| AtomicU8::new(WIRE_PENDING)).collect(),
+            sync: WireSync::new(),
+        }
+    }
+}
+
+/// Bounded-staleness reorder of `0..keys.len()`: repeatedly emit, from
+/// the `bound + 1` lowest-indexed workers not yet emitted, the one whose
+/// landing key is smallest (ties to the lower index) — except that a
+/// worker already delayed by `bound` positions is force-emitted first.
+/// The resulting permutation π satisfies `|π(m) − m| ≤ bound` on both
+/// sides: a payload neither jumps ahead of its turn by more than `bound`
+/// (it must be inside the candidate window) nor goes stale by more than
+/// `bound` (the force rule).  `bound = 0` degenerates to worker index
+/// order, i.e. the sync schedule.
+fn landing_order(keys: &[u64], bound: usize, window: &mut Vec<usize>, out: &mut Vec<usize>) {
+    let n = keys.len();
+    out.clear();
+    window.clear();
+    let mut next = 0usize;
+    while out.len() < n {
+        // window holds the lowest remaining indices, in increasing order
+        // (pushed in order, removals preserve sortedness)
+        while window.len() <= bound && next < n {
+            window.push(next);
+            next += 1;
+        }
+        let pos = out.len();
+        let wi = if pos >= window[0] + bound {
+            // emitting anyone else would delay window[0] past the bound
+            0
+        } else {
+            let mut wi = 0;
+            for i in 1..window.len() {
+                let (a, b) = (window[i], window[wi]);
+                if (keys[a], a) < (keys[b], b) {
+                    wi = i;
+                }
+            }
+            wi
+        };
+        out.push(window.remove(wi));
+    }
 }
 
 impl Trainer {
@@ -180,7 +281,12 @@ impl Trainer {
             theta0,
         );
         server.set_shards(cfg.server_shards);
-        let net = Network::new(nodes.len(), latency);
+        let mut net = Network::new(nodes.len(), latency);
+        if lazy_codec_for(cfg.algo) == Some(LazyCodec::Quantized) {
+            // every slot's first innovation round trip is allocation-free,
+            // even for workers that stay silent through the warmup
+            net.warm_slots_innovation(dim, cfg.bits);
+        }
         let batchers = if cfg.algo.is_stochastic() {
             let per = cfg.batch / nodes.len();
             if per == 0 {
@@ -225,6 +331,7 @@ impl Trainer {
             gsum: vec![0.0; dim],
             locals: (0..n_workers).map(|_| LocalSlot::default()).collect(),
             rows: vec![None; n_workers],
+            wire: AsyncWireState::new(n_workers),
         })
     }
 
@@ -246,9 +353,11 @@ impl Trainer {
     }
 
     /// One full iteration of the selected algorithm: a parallel local
-    /// phase (per-worker gradients + criterion + encoding) followed by a
-    /// sequential wire phase (uploads, aggregation, mirror commits) — see
-    /// the module-level threading-model notes.
+    /// phase (per-worker gradients + criterion + encoding) plus the wire
+    /// phase (uploads, aggregation, mirror commits) — run back-to-back
+    /// under `wire_mode = sync`, overlapped as a three-lane pipeline
+    /// under `wire_mode = async`.  See the module-level threading-model
+    /// notes.
     pub fn step(&mut self) -> Result<StepStats> {
         let k = self.k;
         let algo = self.cfg.algo;
@@ -268,10 +377,12 @@ impl Trainer {
 
         // minibatch draws, one per worker from its own deterministic
         // stream (drawn up front so the fan-out borrows them immutably;
-        // deterministic algorithms leave the retained slots at None)
+        // deterministic algorithms leave the retained slots at None).
+        // The index vectors are retained and refilled in place, so the
+        // stochastic steady state allocates nothing here either.
         if algo.is_stochastic() {
             for (m, b) in self.batchers.iter_mut().enumerate() {
-                self.rows[m] = Some(b.next_batch());
+                b.next_batch_into(self.rows[m].get_or_insert_with(Vec::new));
             }
         }
 
@@ -307,48 +418,8 @@ impl Trainer {
             iter: k,
         };
 
-        // 2. parallel local phase: gradient + decision + encoding per
-        // worker, written into the retained per-worker slots (no result
-        // vector — the fan-out is allocation-free in steady state).
-        match &self.pool {
-            Some(pool) => {
-                let nodes = SendPtr::new(&mut self.nodes[..]);
-                let ef = SendPtr::new(&mut self.ef[..]);
-                let slots = SendPtr::new(&mut self.locals[..]);
-                let ctx = &ctx;
-                pool.run_indexed(m_all, &move |m| {
-                    // SAFETY: run_indexed hands out each index exactly
-                    // once, so these &muts are disjoint per worker; the
-                    // vectors outlive the fan-out's join and have no
-                    // other borrows while it runs.
-                    let node = unsafe { nodes.get_mut(m) };
-                    let slot = unsafe { slots.get_mut(m) };
-                    let ef_m = if ctx.algo == Algo::EfSgd {
-                        Some(unsafe { ef.get_mut(m) })
-                    } else {
-                        None
-                    };
-                    local_phase(ctx, m, node, ef_m, slot);
-                });
-            }
-            None => {
-                for m in 0..m_all {
-                    let node = &mut self.nodes[m];
-                    let slot = &mut self.locals[m];
-                    let ef_m = if algo == Algo::EfSgd {
-                        Some(&mut self.ef[m])
-                    } else {
-                        None
-                    };
-                    local_phase(&ctx, m, node, ef_m, slot);
-                }
-            }
-        }
-
-        // 3. sequential wire phase: uploads in worker index order so the
-        // bit/round counters and the latency clock advance exactly as a
-        // sequential run's would; mirror commits ride along post-wire.
-        // (Each absorb/apply fans out over θ-shards inside the server.)
+        // 2+3. local + wire phases, scheduled per `cfg.wire_mode` (the
+        // module-level step-anatomy notes walk through both schedules).
         let rounds_before = self.net.uplink_rounds();
         let bits_before = self.net.uplink_bits();
         let mut max_eps_sq = 0.0f64;
@@ -357,27 +428,208 @@ impl Trainer {
         if !lazy {
             self.server.reset_agg();
         }
-        for m in 0..m_all {
-            if let Some(e) = self.locals[m].err.take() {
-                return Err(e);
-            }
-            loss_total += self.locals[m].loss;
-            tensor::axpy(1.0, &self.nodes[m].grad, &mut self.gsum);
-            if lazy {
-                let decision = self.locals[m]
-                    .decision
-                    .expect("lazy algorithms always produce a decision");
-                if decision.upload {
-                    // staged payload borrowed from the node; the wire
-                    // round trip reuses the network's retained buffers
-                    let received = self.net.upload(m, &self.nodes[m].staged)?;
-                    self.server.absorb_lazy(m, received)?;
+        match self.cfg.wire_mode {
+            WireMode::Sync => {
+                // 2. parallel local phase: gradient + decision + encoding
+                // per worker, written into the retained per-worker slots
+                // (no result vector — the fan-out is allocation-free in
+                // steady state).
+                match &self.pool {
+                    Some(pool) => {
+                        let nodes = SendPtr::new(&mut self.nodes[..]);
+                        let ef = SendPtr::new(&mut self.ef[..]);
+                        let slots = SendPtr::new(&mut self.locals[..]);
+                        let ctx = &ctx;
+                        pool.run_indexed(m_all, &move |m| {
+                            // SAFETY: run_indexed hands out each index
+                            // exactly once, so these &muts are disjoint
+                            // per worker; the vectors outlive the
+                            // fan-out's join and have no other borrows
+                            // while it runs.
+                            let node = unsafe { nodes.get_mut(m) };
+                            let slot = unsafe { slots.get_mut(m) };
+                            let ef_m = if ctx.algo == Algo::EfSgd {
+                                Some(unsafe { ef.get_mut(m) })
+                            } else {
+                                None
+                            };
+                            local_phase(ctx, m, node, ef_m, slot);
+                        });
+                    }
+                    None => {
+                        for m in 0..m_all {
+                            let node = &mut self.nodes[m];
+                            let slot = &mut self.locals[m];
+                            let ef_m = if algo == Algo::EfSgd {
+                                Some(&mut self.ef[m])
+                            } else {
+                                None
+                            };
+                            local_phase(&ctx, m, node, ef_m, slot);
+                        }
+                    }
                 }
-                max_eps_sq = max_eps_sq.max(decision.eps_sq);
-                self.nodes[m].commit(&decision);
-            } else if let Some(payload) = self.locals[m].payload.take() {
-                let received = self.net.upload(m, &payload)?;
-                self.server.absorb_fresh(received)?;
+
+                // 3. sequential wire phase: uploads in worker index order
+                // so the bit/round counters and the latency clock advance
+                // exactly as a sequential run's would; mirror commits
+                // ride along post-wire.  (Each absorb/apply fans out over
+                // θ-shards inside the server.)
+                for m in 0..m_all {
+                    if let Some(e) = self.locals[m].err.take() {
+                        return Err(e);
+                    }
+                    loss_total += self.locals[m].loss;
+                    tensor::axpy(1.0, &self.nodes[m].grad, &mut self.gsum);
+                    if lazy {
+                        let decision = self.locals[m]
+                            .decision
+                            .expect("lazy algorithms always produce a decision");
+                        if decision.upload {
+                            // staged payload borrowed from the node; the
+                            // wire round trip reuses the worker's
+                            // retained slot buffers
+                            let received = self.net.upload(m, &self.nodes[m].staged)?;
+                            self.server.absorb_lazy(m, received)?;
+                        }
+                        max_eps_sq = max_eps_sq.max(decision.eps_sq);
+                        self.nodes[m].commit(&decision);
+                    } else if let Some(payload) = self.locals[m].payload.take() {
+                        let received = self.net.upload(m, &payload)?;
+                        self.server.absorb_fresh(received)?;
+                    }
+                }
+            }
+            WireMode::Async => {
+                // 2. deterministic landing schedule for iteration k: a
+                // pure function of (seed, config), never of thread timing
+                let bound = self.cfg.staleness_bound.min(m_all.saturating_sub(1));
+                self.wire.keys.clear();
+                for m in 0..m_all {
+                    self.wire.keys.push(self.net.latency.landing_key(
+                        self.cfg.seed,
+                        m as u64,
+                        k as u64,
+                    ));
+                }
+                {
+                    let w = &mut self.wire;
+                    landing_order(&w.keys, bound, &mut w.window, &mut w.order);
+                }
+                for st in self.wire.states.iter() {
+                    st.store(WIRE_PENDING, Ordering::Release);
+                }
+
+                // 3. three overlapped lanes: worker jobs run local phase
+                // + wire round trip + commit (claimed in landing order so
+                // results surface in the order the absorber wants them),
+                // while the pipelined absorber drains the readiness board
+                // per θ-shard on the coordinator + shard pool.
+                match &self.pool {
+                    Some(pool) => {
+                        let nodes = SendPtr::new(&mut self.nodes[..]);
+                        let ef = SendPtr::new(&mut self.ef[..]);
+                        let slots = SendPtr::new(&mut self.locals[..]);
+                        let wire_slots = SendPtr::new(self.net.slots_mut());
+                        let states = &self.wire.states[..];
+                        let wsync = &self.wire.sync;
+                        let ctx_ref = &ctx;
+                        let job = move |m: usize| {
+                            // SAFETY: the stream fan-out hands out each
+                            // index exactly once, so these &muts are
+                            // disjoint per worker; everything outlives
+                            // the guard's join below.  The absorber only
+                            // reads a wire slot after this job's Release
+                            // store of the readiness state.
+                            let node = unsafe { nodes.get_mut(m) };
+                            let slot = unsafe { slots.get_mut(m) };
+                            let wslot = unsafe { wire_slots.get_mut(m) };
+                            let ef_m = if ctx_ref.algo == Algo::EfSgd {
+                                Some(unsafe { ef.get_mut(m) })
+                            } else {
+                                None
+                            };
+                            // publishes + notifies on drop, so even a
+                            // panicking job cannot leave the absorber
+                            // waiting on a PENDING state forever
+                            let _publish = PublishReadiness { state: &states[m], sync: wsync };
+                            local_and_wire_phase(ctx_ref, m, node, ef_m, slot, wslot, &states[m]);
+                        };
+                        let guard =
+                            pool.stream_indexed(m_all, Some(&self.wire.order[..]), &job);
+                        let res = self.server.absorb_pipelined(
+                            lazy,
+                            &self.wire.order,
+                            states,
+                            wire_slots,
+                            wsync,
+                        );
+                        guard.join();
+                        res?;
+                    }
+                    None => {
+                        // no worker pool: the SAME per-worker job as the
+                        // threaded path (local phase + wire round trip +
+                        // commit + readiness publication), run inline in
+                        // landing order with a whole-payload absorb after
+                        // each.  Per-coordinate operation order — and the
+                        // error/commit semantics — are identical to the
+                        // pipelined drain by construction, which is the
+                        // reproducibility contract across thread counts.
+                        for j in 0..m_all {
+                            let m = self.wire.order[j];
+                            {
+                                let ef_m = if algo == Algo::EfSgd {
+                                    Some(&mut self.ef[m])
+                                } else {
+                                    None
+                                };
+                                local_and_wire_phase(
+                                    &ctx,
+                                    m,
+                                    &mut self.nodes[m],
+                                    ef_m,
+                                    &mut self.locals[m],
+                                    self.net.slot_mut(m),
+                                    &self.wire.states[m],
+                                );
+                            }
+                            if self.wire.states[m].load(Ordering::Acquire) == WIRE_UPLOAD {
+                                if lazy {
+                                    self.server
+                                        .absorb_lazy(m, self.net.slot_ref(m).received())?;
+                                } else {
+                                    self.server
+                                        .absorb_fresh_dense(self.net.slot_ref(m).recv_dense())?;
+                                }
+                            }
+                        }
+                    }
+                }
+
+                // 4. accounting + reductions on the coordinator in worker
+                // *index* order — the identical f64 fold order the sync
+                // schedule uses, so bits/rounds/clock/loss are bit-equal
+                // to sync no matter how absorption was reordered.
+                for m in 0..m_all {
+                    if let Some(e) = self.locals[m].err.take() {
+                        return Err(e);
+                    }
+                    loss_total += self.locals[m].loss;
+                    tensor::axpy(1.0, &self.nodes[m].grad, &mut self.gsum);
+                    if lazy {
+                        let decision = self.locals[m]
+                            .decision
+                            .expect("lazy algorithms always produce a decision");
+                        if decision.upload {
+                            let bits = self.nodes[m].staged.wire_bits();
+                            self.net.account_upload(m, bits);
+                        }
+                        max_eps_sq = max_eps_sq.max(decision.eps_sq);
+                    } else if let Some(payload) = self.locals[m].payload.take() {
+                        self.net.account_upload(m, payload.wire_bits());
+                    }
+                }
             }
         }
 
@@ -478,6 +730,7 @@ impl Trainer {
     pub fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
         let ck = crate::coordinator::Checkpoint {
             iter: self.k as u64,
+            wire: Some((self.cfg.wire_mode, self.cfg.staleness_bound as u64)),
             theta: self.server.theta.clone(),
             agg: self.server.agg.clone(),
             mirrors: self.server.q_mirror.clone(),
@@ -518,6 +771,24 @@ impl Trainer {
             node.eps_hat_sq = ck.eps_hat_sq[m];
         }
         self.k = ck.iter as usize;
+        // adopt the recorded wire schedule: the async landing order is a
+        // function of (seed, wire_mode, staleness_bound, k), so resuming
+        // under the checkpoint's wire settings reproduces the original
+        // run's remaining trace bit-for-bit (v1 checkpoints predate the
+        // knob and leave the trainer's own setting in place)
+        if let Some((wm, s)) = ck.wire {
+            if wm != self.cfg.wire_mode || s as usize != self.cfg.staleness_bound {
+                crate::log_info!(
+                    "checkpoint wire schedule ({} / staleness {}) overrides configured ({} / {})",
+                    wm.name(),
+                    s,
+                    self.cfg.wire_mode.name(),
+                    self.cfg.staleness_bound
+                );
+            }
+            self.cfg.wire_mode = wm;
+            self.cfg.staleness_bound = s as usize;
+        }
         Ok(())
     }
 
@@ -631,11 +902,113 @@ fn local_phase(
     node.grad = grad;
 }
 
+/// Drop guard around an async worker job: guarantees the worker's
+/// readiness state is published (as a skip, if the job unwound before
+/// storing a real verdict) and the absorber notified exactly once — a
+/// PENDING state left behind by a panicking job would wedge the pipeline.
+struct PublishReadiness<'a> {
+    state: &'a AtomicU8,
+    sync: &'a WireSync,
+}
+
+impl Drop for PublishReadiness<'_> {
+    fn drop(&mut self) {
+        if self.state.load(Ordering::Acquire) == WIRE_PENDING {
+            self.state.store(WIRE_SKIP, Ordering::Release);
+        }
+        self.sync.notify_ready();
+    }
+}
+
+/// Async wire mode: one worker's full job — the local phase, then the
+/// physical wire round trip of the staged payload into the worker's
+/// retained [`WireSlot`], then the mirror/clock commit — ending with the
+/// Release publication of the readiness state the pipelined absorber is
+/// waiting on.  The commit rides here (instead of post-wire as in sync
+/// mode) because it touches only this worker's node state, which nothing
+/// reads again until the next iteration's local phase — the absorber
+/// works off the wire slot, not the node.  Accounting deliberately does
+/// NOT ride here: it stays on the coordinator in index order (see the
+/// step's phase 4).
+fn local_and_wire_phase(
+    ctx: &LocalCtx<'_>,
+    m: usize,
+    node: &mut WorkerNode<dyn WorkerGrad>,
+    ef: Option<&mut SignEfCompressor>,
+    slot: &mut LocalSlot,
+    wire: &mut WireSlot,
+    state: &AtomicU8,
+) {
+    local_phase(ctx, m, node, ef, slot);
+    let mut publish = WIRE_SKIP;
+    if slot.err.is_none() {
+        if let Some(d) = slot.decision {
+            if d.upload {
+                match wire.round_trip_store(&node.staged) {
+                    Ok(()) => publish = WIRE_UPLOAD,
+                    Err(e) => slot.err = Some(e),
+                }
+            }
+            node.commit(&d);
+        } else if let Some(p) = &slot.payload {
+            // fresh-sum kinds densify once here, on the worker's thread,
+            // so the absorber's shard jobs are plain disjoint-range adds
+            let res = wire.round_trip_store(p).and_then(|_| wire.densify_received());
+            match res {
+                Ok(()) => publish = WIRE_UPLOAD,
+                Err(e) => slot.err = Some(e),
+            }
+        }
+    }
+    state.store(publish, Ordering::Release);
+}
+
 /// Map an [`Algo`] to the lazy codec it uses (where applicable).
 pub fn lazy_codec_for(algo: Algo) -> Option<LazyCodec> {
     match algo {
         Algo::Gd | Algo::Lag => Some(LazyCodec::Exact),
         Algo::Qgd | Algo::Laq | Algo::Slaq => Some(LazyCodec::Quantized),
         _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn landing_order_bound_zero_is_index_order() {
+        let keys = [5u64, 4, 3, 2, 1, 0];
+        let (mut win, mut out) = (Vec::new(), Vec::new());
+        landing_order(&keys, 0, &mut win, &mut out);
+        assert_eq!(out, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn landing_order_is_a_permutation_with_bounded_displacement() {
+        let mut rng = Rng::new(99);
+        for bound in [0usize, 1, 2, 5, 63] {
+            let keys: Vec<u64> = (0..64).map(|_| rng.next_u64()).collect();
+            let (mut win, mut out) = (Vec::new(), Vec::new());
+            landing_order(&keys, bound, &mut win, &mut out);
+            let mut sorted = out.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..64).collect::<Vec<_>>(), "bound {bound}");
+            for (pos, &m) in out.iter().enumerate() {
+                let d = pos.abs_diff(m);
+                assert!(d <= bound, "bound {bound}: worker {m} displaced {d} (pos {pos})");
+            }
+        }
+    }
+
+    #[test]
+    fn landing_order_adversarial_key_cannot_go_staler_than_bound() {
+        // worker 0 has the largest key: without the force rule it would
+        // be overtaken by the whole round
+        let keys = [u64::MAX, 1, 2, 3, 4, 5, 6, 7];
+        let (mut win, mut out) = (Vec::new(), Vec::new());
+        landing_order(&keys, 2, &mut win, &mut out);
+        let pos0 = out.iter().position(|&m| m == 0).unwrap();
+        assert_eq!(pos0, 2, "worker 0 must be force-emitted at its bound");
     }
 }

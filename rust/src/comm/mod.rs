@@ -10,53 +10,73 @@
 //! with sequential uplinks (workers can't talk over each other — the
 //! paper's §1.2 motivation for cutting rounds) and broadcast downlink.
 //!
-//! # Threading model: why accounting stays exact under the parallel step
+//! # Threading model: the three-lane pipeline, and why accounting stays exact
 //!
-//! [`Network`] is deliberately **not** shared across threads.  The
-//! trainer's local phase (gradients, criterion, encoding) fans out over a
-//! pool, but every [`Network::upload`] happens afterwards on the
-//! coordinator thread, *in worker index order* — the wire phase.  (The
-//! *server* then fans each decoded upload out over θ-shards — see the
-//! shard topology in [`crate::algo`] — but that parallelism is inside
-//! `absorb`, after the message has left the network.)  Three invariants
-//! follow:
+//! A trainer step runs in up to three overlapping lanes (see the step
+//! anatomy in [`crate::algo`]):
+//!
+//! 1. **local** — per-worker gradient + criterion + payload encoding, one
+//!    pool job per worker;
+//! 2. **wire** — the physical encode→decode round trip of each upload
+//!    through that worker's retained [`WireSlot`];
+//! 3. **absorb** — the sharded server folds each decoded payload into the
+//!    lazy aggregate, shard by shard.
+//!
+//! Under `wire_mode = sync` the lanes are sequential: the local fan-out
+//! joins, then [`Network::upload`] runs on the coordinator thread *in
+//! worker index order* (round trip + accounting fused), each absorb
+//! completing before the next worker transmits.  Under `wire_mode =
+//! async` the lanes overlap: each worker's job performs its own wire
+//! round trip into its slot the moment its local phase finishes, and the
+//! pipelined absorber (see [`crate::coordinator::server`]) consumes the
+//! decoded payloads per θ-shard while later workers are still computing.
+//!
+//! Accounting is **identical in both modes** because it is pure
+//! per-message arithmetic that never rides in the overlapped lanes:
 //!
 //! * **bits** — [`Payload::wire_bits`] is a pure function of the payload,
 //!   and `rust/tests/prop_quant.rs` pins it to the physically serialized
 //!   size, so the counter equals Σ(serialized bits) regardless of which
-//!   thread built each payload;
-//! * **rounds** — one `upload` call per transmitting worker, issued
-//!   sequentially, so round counts and per-worker counters are schedule
-//!   independent;
+//!   thread built (or round-tripped) each payload;
+//! * **rounds** — exactly one accounting event per transmitting worker
+//!   ([`Network::upload`] in sync, [`Network::account_upload`] in async),
+//!   always issued by the coordinator in worker index order, so round
+//!   counts and per-worker counters are schedule independent;
 //! * **latency clock** — `sim_time` models a shared uplink (messages
 //!   serialize on the wire even when worker *compute* overlaps), so
-//!   summing message times in worker order is not an approximation; it is
-//!   the model.
+//!   summing message times in worker index order is not an approximation;
+//!   it is the model.  The async engine folds the identical f64 sum in
+//!   the identical order, so the clock is bit-equal to sync's.
 //!
-//! Hence a parallel run's trace is bit-identical to a sequential run's
-//! (`rust/tests/parallel_equivalence.rs`).
+//! Hence a parallel/sharded/async-pipelined run's accounting is
+//! bit-identical to the fully sequential run's
+//! (`rust/tests/parallel_equivalence.rs`, `rust/tests/wire_equivalence.rs`).
 //!
-//! # Retained wire buffers
+//! # Per-worker retained wire buffers
 //!
+//! Every worker owns a [`WireSlot`]: a retained [`BitWriter`] encode
+//! scratch plus a retained receive payload.  In sync mode
 //! [`Network::upload`] borrows the outgoing payload and returns a
-//! *borrowed* view of what the server receives.  Dense payloads are IEEE
-//! bits already and pass through unchanged; innovation payloads (the
-//! lazy hot path) are physically packed into a network-retained
-//! [`BitWriter`] and decoded back into a network-retained receive slot,
-//! so their steady-state wire round trip performs zero heap allocation
-//! (pinned by `rust/tests/alloc_steady_state.rs`).  The cold fresh-sum
-//! kinds (QSGD/sparse/sign) go through the shared
+//! *borrowed* view of what the server receives (Dense payloads are IEEE
+//! bits already and pass through unchanged); innovation payloads — the
+//! lazy hot path — round-trip through the slot's retained buffers with
+//! zero steady-state heap allocation (pinned by
+//! `rust/tests/alloc_steady_state.rs`).  In async mode the slots are what
+//! make pipelining possible at all: M decoded payloads can be alive at
+//! once (the old design held a single shared receive slot, forcing each
+//! absorb to finish before the next worker could transmit), and a slot is
+//! written only by its worker's job and read by the absorber only after
+//! that job publishes readiness, so slots need no locking.  The cold
+//! fresh-sum kinds (QSGD/sparse/sign) go through the shared
 //! [`Payload::through_wire_ref`] round trip, which allocates the decoded
-//! message as before.  The received view is valid until the next
-//! `upload` — the trainer's sequential wire phase absorbs each message
-//! before the next worker transmits, which is also the physical model
-//! (one shared uplink).
+//! message as before.
 
 use crate::quant::innovation::QuantizedInnovation;
 use crate::quant::qsgd::QsgdMessage;
 use crate::quant::signef::SignMessage;
 use crate::quant::sparsify::SparseMessage;
 use crate::util::bitio::BitWriter;
+use crate::util::rng::Rng;
 use crate::Result;
 
 /// What a worker can put on the uplink.
@@ -148,59 +168,50 @@ impl LatencyModel {
     pub fn message_time(&self, bits: usize) -> f64 {
         self.t_fixed + bits as f64 * self.t_per_bit
     }
+
+    /// Deterministic landing jitter for the async wire phase: a pure
+    /// function of `(seed, worker, iteration)` modelling per-message
+    /// queueing/compute skew on top of the fixed setup cost.  The async
+    /// absorber orders absorptions by this key (bounded by the trainer's
+    /// `staleness_bound`), which is what makes an async trace a pure
+    /// function of (seed, config) instead of the thread schedule.
+    pub fn landing_key(&self, seed: u64, worker: u64, iter: u64) -> u64 {
+        Rng::stream(seed ^ 0x11AD_17E5_CA1E, worker, iter).next_u64()
+    }
 }
 
-/// Cumulative communication counters + simulated clock + retained wire
-/// scratch (see the module notes on retained buffers).
-#[derive(Clone, Debug)]
-pub struct Network {
-    pub latency: LatencyModel,
-    n_workers: usize,
-    uplink_rounds: u64,
-    uplink_bits: u64,
-    downlink_msgs: u64,
-    downlink_bits: u64,
-    per_worker_rounds: Vec<u64>,
-    per_worker_bits: Vec<u64>,
-    sim_time: f64,
+/// One worker's retained wire buffers: an encode scratch plus the decoded
+/// receive payload — everything that worker's messages touch between
+/// "encoded on the worker" and "absorbed by the server".  One slot per
+/// worker is what lets the async wire phase keep M decoded payloads in
+/// flight at once; each slot is written only by its worker's job and read
+/// by the absorber strictly after that job publishes readiness, so slots
+/// are lock-free by construction.
+#[derive(Clone, Debug, Default)]
+pub struct WireSlot {
     /// retained encode scratch — every quantized upload packs into this
     enc: BitWriter,
-    /// retained receive slot — what the server sees, decoded in place
+    /// retained receive payload — what the server sees, decoded in place
     rx: Payload,
+    /// async fresh-sum mode: densified form of `rx` (the shard jobs add
+    /// disjoint coordinate ranges of this buffer)
+    dense: Vec<f32>,
 }
 
-impl Network {
-    pub fn new(n_workers: usize, latency: LatencyModel) -> Self {
-        Self {
-            latency,
-            n_workers,
-            uplink_rounds: 0,
-            uplink_bits: 0,
-            downlink_msgs: 0,
-            downlink_bits: 0,
-            per_worker_rounds: vec![0; n_workers],
-            per_worker_bits: vec![0; n_workers],
-            sim_time: 0.0,
-            enc: BitWriter::new(),
-            rx: Payload::Dense(Vec::new()),
-        }
+impl Default for Payload {
+    fn default() -> Self {
+        Payload::Dense(Vec::new())
     }
+}
 
-    /// Worker `m` uploads `payload`.  Returns the server-side view after
-    /// the physical encode/decode round trip, borrowed until the next
-    /// upload (absorb it before the next worker transmits — the trainer's
-    /// sequential wire phase does).  Dense payloads pass through
-    /// unchanged; quantized payloads round-trip through the retained
-    /// encode/decode buffers without allocating in steady state.
-    pub fn upload<'a>(&'a mut self, m: usize, payload: &'a Payload) -> Result<&'a Payload> {
-        assert!(m < self.n_workers);
-        let bits = payload.wire_bits();
-        self.uplink_rounds += 1;
-        self.uplink_bits += bits as u64;
-        self.per_worker_rounds[m] += 1;
-        self.per_worker_bits[m] += bits as u64;
-        // uplinks are sequential: each pays its full message time
-        self.sim_time += self.latency.message_time(bits);
+impl WireSlot {
+    /// Physical encode→decode round trip of `payload` through this slot,
+    /// returning the server-side view.  Dense payloads are IEEE bits
+    /// already and come back as a borrow of the input (no copy);
+    /// innovation payloads pack/unpack through the retained buffers with
+    /// zero steady-state allocation; the cold fresh-sum kinds reuse the
+    /// property-tested [`Payload::through_wire_ref`] round trip.
+    pub fn round_trip<'a>(&'a mut self, payload: &'a Payload) -> Result<&'a Payload> {
         match payload {
             // IEEE bits already — the wire cannot perturb them
             Payload::Dense(_) => Ok(payload),
@@ -222,14 +233,157 @@ impl Network {
                 )?;
                 Ok(&self.rx)
             }
-            // cold (fresh-sum) kinds: reuse the property-tested round
-            // trip rather than duplicating it (no source clone — encode
-            // works from the borrow)
             _ => {
                 self.rx = payload.through_wire_ref()?;
                 Ok(&self.rx)
             }
         }
+    }
+
+    /// Async variant of [`Self::round_trip`]: the received message is
+    /// *stored* in the slot, Dense included (the absorber reads the slot
+    /// after the worker's job has returned, so it cannot hold a borrow of
+    /// the job's input).  The dense copy reuses the retained buffer.
+    pub fn round_trip_store(&mut self, payload: &Payload) -> Result<()> {
+        match payload {
+            Payload::Dense(v) => {
+                match &mut self.rx {
+                    Payload::Dense(rx) => {
+                        rx.clear();
+                        rx.extend_from_slice(v);
+                    }
+                    other => *other = Payload::Dense(v.clone()),
+                }
+                Ok(())
+            }
+            _ => self.round_trip(payload).map(|_| ()),
+        }
+    }
+
+    /// The received payload parked by [`Self::round_trip_store`].
+    pub fn received(&self) -> &Payload {
+        &self.rx
+    }
+
+    /// Densify the received fresh-sum payload into the slot (async mode:
+    /// done once per upload on the worker's thread, so the per-shard
+    /// absorb jobs are plain disjoint-range adds).  Dense receives are
+    /// already flat and are served straight from `rx` by
+    /// [`Self::recv_dense`].
+    pub fn densify_received(&mut self) -> Result<()> {
+        match &self.rx {
+            Payload::Dense(_) => {}
+            Payload::Qsgd(m) => m.dequantize_into(&mut self.dense),
+            Payload::Sparse(m) => m.densify_into(&mut self.dense),
+            Payload::Sign(m) => m.dequantize_into(&mut self.dense),
+            Payload::Innovation(_) => {
+                return Err(crate::Error::Msg(
+                    "innovation uploads need lazy aggregation".into(),
+                ))
+            }
+        }
+        Ok(())
+    }
+
+    /// Dense coordinates of the received fresh-sum payload (valid after
+    /// [`Self::densify_received`]).
+    pub fn recv_dense(&self) -> &[f32] {
+        match &self.rx {
+            Payload::Dense(v) => v,
+            _ => &self.dense,
+        }
+    }
+}
+
+/// Cumulative communication counters + simulated clock + per-worker
+/// retained wire slots (see the module notes on retained buffers).
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub latency: LatencyModel,
+    n_workers: usize,
+    uplink_rounds: u64,
+    uplink_bits: u64,
+    downlink_msgs: u64,
+    downlink_bits: u64,
+    per_worker_rounds: Vec<u64>,
+    per_worker_bits: Vec<u64>,
+    sim_time: f64,
+    /// one retained wire-buffer slot per worker
+    slots: Vec<WireSlot>,
+}
+
+impl Network {
+    pub fn new(n_workers: usize, latency: LatencyModel) -> Self {
+        Self {
+            latency,
+            n_workers,
+            uplink_rounds: 0,
+            uplink_bits: 0,
+            downlink_msgs: 0,
+            downlink_bits: 0,
+            per_worker_rounds: vec![0; n_workers],
+            per_worker_bits: vec![0; n_workers],
+            sim_time: 0.0,
+            slots: (0..n_workers).map(|_| WireSlot::default()).collect(),
+        }
+    }
+
+    /// Fold one upload's accounting: rounds, bits (exact serialized size)
+    /// and the latency clock.  Pure per-message arithmetic — the async
+    /// wire phase calls this from the coordinator in worker index order
+    /// after the pipeline joins, making its counters and clock bit-equal
+    /// to the sync schedule's.
+    pub fn account_upload(&mut self, m: usize, bits: usize) {
+        assert!(m < self.n_workers);
+        self.uplink_rounds += 1;
+        self.uplink_bits += bits as u64;
+        self.per_worker_rounds[m] += 1;
+        self.per_worker_bits[m] += bits as u64;
+        // uplinks are sequential: each pays its full message time
+        self.sim_time += self.latency.message_time(bits);
+    }
+
+    /// Worker `m` uploads `payload` (sync wire phase: accounting + round
+    /// trip fused).  Returns the server-side view after the physical
+    /// encode/decode round trip, borrowed from worker `m`'s retained slot
+    /// (or the input itself for Dense payloads) until that slot's next
+    /// round trip.
+    pub fn upload<'a>(&'a mut self, m: usize, payload: &'a Payload) -> Result<&'a Payload> {
+        self.account_upload(m, payload.wire_bits());
+        self.slots[m].round_trip(payload)
+    }
+
+    /// Pre-size every slot's retained buffers for innovation messages of
+    /// dimension `dim` at `bits` bits/coordinate, so that no worker's
+    /// *first* upload allocates — the steady-state allocation pin starts
+    /// counting after a warmup that does not necessarily include an
+    /// upload from every worker (lazy workers can stay silent for long
+    /// stretches; that is the whole point of the algorithm).
+    pub fn warm_slots_innovation(&mut self, dim: usize, bits: u32) {
+        for s in self.slots.iter_mut() {
+            s.enc = BitWriter::with_capacity_bits(32 + bits as usize * dim);
+            s.rx = Payload::Innovation(QuantizedInnovation {
+                radius: 0.0,
+                codes: Vec::with_capacity(dim),
+                bits,
+            });
+        }
+    }
+
+    /// Worker `m`'s retained wire slot (async wire phase: the worker's
+    /// job round-trips into it, the absorber reads from it).
+    pub fn slot_mut(&mut self, m: usize) -> &mut WireSlot {
+        &mut self.slots[m]
+    }
+
+    /// Shared view of worker `m`'s slot (sequential async path).
+    pub fn slot_ref(&self, m: usize) -> &WireSlot {
+        &self.slots[m]
+    }
+
+    /// All wire slots, for the async fan-out's disjoint per-worker access.
+    pub fn slots_mut(&mut self) -> &mut [WireSlot] {
+        &mut self.slots
     }
 
     /// Server broadcasts `bits` to all workers (simultaneous downlink: one
@@ -325,6 +479,60 @@ mod tests {
             qp = q_new;
         }
         assert_eq!(net.uplink_rounds(), 5);
+    }
+
+    #[test]
+    fn account_upload_matches_fused_upload_counters() {
+        // the async wire phase accounts via account_upload in index order;
+        // its counters and clock must be bit-equal to the sync upload path
+        let lat = LatencyModel::default();
+        let mut a = Network::new(2, lat);
+        let mut b = Network::new(2, lat);
+        let p0 = Payload::Dense(vec![0.5; 64]);
+        let q = InnovationQuantizer::new(3);
+        let (qi, _) = q.quantize(&vec![1.0f32; 32], &vec![0.0; 32]);
+        let p1 = Payload::Innovation(qi);
+        a.upload(0, &p0).unwrap();
+        a.upload(1, &p1).unwrap();
+        b.account_upload(0, p0.wire_bits());
+        b.account_upload(1, p1.wire_bits());
+        assert_eq!(a.uplink_rounds(), b.uplink_rounds());
+        assert_eq!(a.uplink_bits(), b.uplink_bits());
+        assert_eq!(a.per_worker_rounds(), b.per_worker_rounds());
+        assert_eq!(a.per_worker_bits(), b.per_worker_bits());
+        assert_eq!(a.sim_time().to_bits(), b.sim_time().to_bits());
+    }
+
+    #[test]
+    fn wire_slot_store_round_trip_is_exact() {
+        // round_trip_store must hand the absorber exactly what the
+        // borrowing round trip hands the sync wire phase
+        let q = InnovationQuantizer::new(4);
+        let mut rng = Rng::new(11);
+        let g: Vec<f32> = (0..96).map(|_| rng.normal() as f32).collect();
+        let (qi, _) = q.quantize(&g, &vec![0.0; 96]);
+        let mut slot = WireSlot::default();
+        slot.round_trip_store(&Payload::Innovation(qi.clone())).unwrap();
+        match slot.received() {
+            Payload::Innovation(got) => assert_eq!(got, &qi),
+            other => panic!("{other:?}"),
+        }
+        // dense stores copy into the retained receive buffer
+        let d = Payload::Dense(g.clone());
+        slot.round_trip_store(&d).unwrap();
+        assert_eq!(slot.received(), &d);
+        // fresh-sum densify: dense receives are served straight from rx
+        slot.densify_received().unwrap();
+        assert_eq!(slot.recv_dense(), &g[..]);
+    }
+
+    #[test]
+    fn landing_key_is_a_pure_function_of_seed_worker_iter() {
+        let lat = LatencyModel::default();
+        assert_eq!(lat.landing_key(7, 2, 9), lat.landing_key(7, 2, 9));
+        assert_ne!(lat.landing_key(7, 2, 9), lat.landing_key(7, 3, 9));
+        assert_ne!(lat.landing_key(7, 2, 9), lat.landing_key(7, 2, 10));
+        assert_ne!(lat.landing_key(8, 2, 9), lat.landing_key(7, 2, 9));
     }
 
     #[test]

@@ -137,6 +137,42 @@ impl Backend {
     }
 }
 
+/// How the trainer executes the wire phase (uploads + server absorbs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireMode {
+    /// Barrier after the local phase, then every upload absorbed
+    /// one-at-a-time in worker index order on the coordinator — the
+    /// reference schedule; traces are bit-identical across `threads` and
+    /// `server_shards`.
+    Sync,
+    /// Pipelined: each worker's encoded payload streams into the sharded
+    /// absorber as soon as its local phase finishes, overlapping compute,
+    /// wire and absorb.  Absorption follows a deterministic *landing
+    /// schedule* drawn from the seeded latency model, reordered from
+    /// worker index order by at most `staleness_bound` positions, so the
+    /// trace is a pure function of (seed, config) — reproducible across
+    /// runs, thread counts and shard counts.  `staleness_bound = 0`
+    /// degenerates to the sync absorb order (bit-identical to [`Self::Sync`]).
+    Async,
+}
+
+impl WireMode {
+    pub fn parse(s: &str) -> Result<WireMode> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "sync" => WireMode::Sync,
+            "async" => WireMode::Async,
+            other => return Err(Error::Config(format!("unknown wire mode '{other}'"))),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            WireMode::Sync => "sync",
+            WireMode::Async => "async",
+        }
+    }
+}
+
 /// Which right-hand side the selection rule (7a) compares against.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CritMode {
@@ -229,6 +265,25 @@ fn default_shards() -> usize {
         .unwrap_or(1)
 }
 
+/// Default wire mode: the `LAQ_WIRE_MODE` environment variable when set
+/// (`rust/ci.sh` runs the suite over the async wire phase this way), else
+/// [`WireMode::Sync`].
+fn default_wire_mode() -> WireMode {
+    std::env::var("LAQ_WIRE_MODE")
+        .ok()
+        .and_then(|v| WireMode::parse(&v).ok())
+        .unwrap_or(WireMode::Sync)
+}
+
+/// Default staleness bound: the `LAQ_STALENESS` environment variable when
+/// set, else 0 (async keeps the sync absorb order and only pipelines).
+fn default_staleness() -> usize {
+    std::env::var("LAQ_STALENESS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0)
+}
+
 /// A full training run.
 #[derive(Clone, Debug)]
 pub struct RunCfg {
@@ -271,6 +326,17 @@ pub struct RunCfg {
     /// (use it for transformer-dim runs).  Default: `LAQ_SHARDS` env var
     /// if set, else 1.
     pub server_shards: usize,
+    /// wire-phase execution: [`WireMode::Sync`] (reference schedule) or
+    /// [`WireMode::Async`] (pipelined absorber under the seeded landing
+    /// schedule).  Default: `LAQ_WIRE_MODE` env var if set, else sync.
+    pub wire_mode: WireMode,
+    /// async wire phase only: how far (in positions) the landing schedule
+    /// may reorder a worker's absorb relative to worker index order.
+    /// 0 = keep the sync order (async then only pipelines; traces stay
+    /// bit-identical to sync); larger values let simulated-late workers be
+    /// overtaken, reassociating the f32 aggregate sums deterministically.
+    /// Default: `LAQ_STALENESS` env var if set, else 0.
+    pub staleness_bound: usize,
 }
 
 impl RunCfg {
@@ -294,6 +360,8 @@ impl RunCfg {
             record_every: 1,
             threads: default_threads(),
             server_shards: default_shards(),
+            wire_mode: default_wire_mode(),
+            staleness_bound: default_staleness(),
         }
     }
 
@@ -377,6 +445,12 @@ impl RunCfg {
         if let Some(v) = run.get("server_shards").as_usize() {
             self.server_shards = v;
         }
+        if let Some(s) = run.get("wire_mode").as_str() {
+            self.wire_mode = WireMode::parse(s)?;
+        }
+        if let Some(v) = run.get("staleness_bound").as_usize() {
+            self.staleness_bound = v;
+        }
         let crit = j.get("criterion");
         if !crit.is_null() {
             if let Some(d) = crit.get("d").as_usize() {
@@ -456,6 +530,8 @@ impl RunCfg {
                 ("seed", Json::Num(self.seed as f64)),
                 ("threads", Json::Num(self.threads as f64)),
                 ("server_shards", Json::Num(self.server_shards as f64)),
+                ("wire_mode", Json::Str(self.wire_mode.name().into())),
+                ("staleness_bound", Json::Num(self.staleness_bound as f64)),
             ])),
             ("criterion", Json::obj(vec![
                 ("d", Json::Num(self.criterion.d as f64)),
@@ -567,6 +643,25 @@ mod tests {
         c2.apply_json(&j).unwrap();
         assert_eq!(c2.threads, 4);
         c2.validate().unwrap();
+    }
+
+    #[test]
+    fn wire_mode_knob_parses_and_roundtrips() {
+        let doc = "\n[run]\nwire_mode = \"async\"\nstaleness_bound = 3\n";
+        let mut c = RunCfg::paper_logreg(Algo::Laq);
+        c.wire_mode = WireMode::Sync;
+        c.apply_json(&toml::parse(doc).unwrap()).unwrap();
+        assert_eq!(c.wire_mode, WireMode::Async);
+        assert_eq!(c.staleness_bound, 3);
+        let j = c.to_json();
+        let mut c2 = RunCfg::paper_logreg(Algo::Gd);
+        c2.wire_mode = WireMode::Sync;
+        c2.staleness_bound = 0;
+        c2.apply_json(&j).unwrap();
+        assert_eq!(c2.wire_mode, WireMode::Async);
+        assert_eq!(c2.staleness_bound, 3);
+        assert_eq!(WireMode::parse("SYNC").unwrap(), WireMode::Sync);
+        assert!(WireMode::parse("pipelined").is_err());
     }
 
     #[test]

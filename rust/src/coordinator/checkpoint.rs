@@ -13,18 +13,32 @@
 //! `(threads, server_shards)` resumes bit-identically under any other —
 //! e.g. grow the shard count when moving a run to a bigger box.
 //!
-//! Format: little-endian binary, magic `LAQCKPT1`, no external deps.
+//! One exception to shape-agnosticism: the **wire schedule** (`wire_mode`
+//! + `staleness_bound`) is persisted.  Under `wire_mode = async` the
+//! landing order is part of the algorithm's arithmetic (it fixes the f32
+//! absorb reassociation), so resuming must replay the same schedule to
+//! reproduce the original run's remaining trace — the trainer adopts the
+//! recorded values on load.
+//!
+//! Format: little-endian binary, magic `LAQCKPT2`, no external deps.
+//! `LAQCKPT1` files (pre-wire-mode) still load, with no recorded wire
+//! schedule.
 
+use crate::config::WireMode;
 use crate::{Error, Result};
 use std::io::{Read, Write};
 
-const MAGIC: &[u8; 8] = b"LAQCKPT1";
+const MAGIC_V1: &[u8; 8] = b"LAQCKPT1";
+const MAGIC: &[u8; 8] = b"LAQCKPT2";
 
 /// Everything needed to resume a run (independent of dataset/backend,
 /// which are reconstructed from the config).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Checkpoint {
     pub iter: u64,
+    /// recorded wire schedule `(mode, staleness_bound)`; `None` when read
+    /// from a v1 file
+    pub wire: Option<(WireMode, u64)>,
     pub theta: Vec<f32>,
     pub agg: Vec<f32>,
     /// per-worker server/worker mirror Q_m(θ̂_m)
@@ -89,6 +103,13 @@ impl Checkpoint {
         let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
         w.write_all(MAGIC)?;
         w_u64(&mut w, self.iter)?;
+        let (mode, staleness) = match self.wire {
+            Some((WireMode::Async, s)) => (1u64, s),
+            Some((WireMode::Sync, s)) => (0u64, s),
+            None => (0u64, 0),
+        };
+        w_u64(&mut w, mode)?;
+        w_u64(&mut w, staleness)?;
         w_f32s(&mut w, &self.theta)?;
         w_f32s(&mut w, &self.agg)?;
         w_u64(&mut w, self.mirrors.len() as u64)?;
@@ -114,13 +135,28 @@ impl Checkpoint {
         let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
         let mut magic = [0u8; 8];
         r.read_exact(&mut magic)?;
-        if &magic != MAGIC {
+        let v1 = &magic == MAGIC_V1;
+        if !v1 && &magic != MAGIC {
             return Err(Error::Msg(format!(
                 "{}: not a LAQ checkpoint (bad magic)",
                 path.display()
             )));
         }
         let iter = r_u64(&mut r)?;
+        let wire = if v1 {
+            None
+        } else {
+            let mode = match r_u64(&mut r)? {
+                0 => WireMode::Sync,
+                1 => WireMode::Async,
+                other => {
+                    return Err(Error::Msg(format!(
+                        "checkpoint: unknown wire mode code {other}"
+                    )))
+                }
+            };
+            Some((mode, r_u64(&mut r)?))
+        };
         let theta = r_f32s(&mut r)?;
         let agg = r_f32s(&mut r)?;
         let nm = r_u64(&mut r)? as usize;
@@ -143,7 +179,7 @@ impl Checkpoint {
         for _ in 0..nh {
             history.push(r_f64(&mut r)?);
         }
-        let ck = Checkpoint { iter, theta, agg, mirrors, clocks, eps_hat_sq, history };
+        let ck = Checkpoint { iter, wire, theta, agg, mirrors, clocks, eps_hat_sq, history };
         ck.validate()?;
         Ok(ck)
     }
@@ -171,6 +207,7 @@ mod tests {
     fn sample() -> Checkpoint {
         Checkpoint {
             iter: 42,
+            wire: Some((WireMode::Async, 3)),
             theta: vec![1.0, -2.5, 3.25],
             agg: vec![0.5, 0.0, -0.125],
             mirrors: vec![vec![1.0, 2.0, 3.0], vec![-1.0, 0.0, 1.0]],
@@ -204,6 +241,45 @@ mod tests {
         let bytes = std::fs::read(&good).unwrap();
         std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
         assert!(Checkpoint::read_from(&path).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Serialize a checkpoint in the pre-wire-mode v1 layout (no wire
+    /// fields after `iter`) — the compat path must read it with
+    /// `wire: None`.
+    #[test]
+    fn reads_v1_checkpoints_without_wire_fields() {
+        let dir = std::env::temp_dir().join("laq_ckpt_test_v1");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v1.ckpt");
+        let ck = sample();
+        {
+            let mut w = std::io::BufWriter::new(std::fs::File::create(&path).unwrap());
+            w.write_all(MAGIC_V1).unwrap();
+            w_u64(&mut w, ck.iter).unwrap();
+            w_f32s(&mut w, &ck.theta).unwrap();
+            w_f32s(&mut w, &ck.agg).unwrap();
+            w_u64(&mut w, ck.mirrors.len() as u64).unwrap();
+            for m in &ck.mirrors {
+                w_f32s(&mut w, m).unwrap();
+            }
+            w_u64(&mut w, ck.clocks.len() as u64).unwrap();
+            for &c in &ck.clocks {
+                w_u64(&mut w, c).unwrap();
+            }
+            w_u64(&mut w, ck.eps_hat_sq.len() as u64).unwrap();
+            for &e in &ck.eps_hat_sq {
+                w_f64(&mut w, e).unwrap();
+            }
+            w_u64(&mut w, ck.history.len() as u64).unwrap();
+            for &h in &ck.history {
+                w_f64(&mut w, h).unwrap();
+            }
+        }
+        let back = Checkpoint::read_from(&path).unwrap();
+        assert_eq!(back.wire, None);
+        assert_eq!(back.theta, ck.theta);
+        assert_eq!(back.history, ck.history);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

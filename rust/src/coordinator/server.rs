@@ -26,9 +26,10 @@
 //! retained block-partial buffer.  After warmup the server performs zero
 //! heap allocation per iteration (`rust/tests/alloc_steady_state.rs`).
 
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
-use crate::comm::Payload;
+use crate::comm::{Payload, WireSlot};
 use crate::coordinator::DeltaHistory;
 use crate::quant::InnovationQuantizer;
 use crate::util::threadpool::{Pool, SendPtr};
@@ -40,6 +41,175 @@ use crate::{Error, Result};
 /// sum.  4 KiB of f32s — small enough to stay cache-resident per shard
 /// job, large enough that the per-block bookkeeping is noise.
 pub const DELTA_BLOCK: usize = 1024;
+
+// --- per-worker readiness states for the async wire phase ----------------
+// Written (Release) by each worker's local-phase job once its payload has
+// round-tripped the wire; read (Acquire) by the pipelined absorber.
+
+/// Local phase still running — the absorber must wait.
+pub const WIRE_PENDING: u8 = 0;
+/// Payload decoded into the worker's wire slot, ready to absorb.
+pub const WIRE_UPLOAD: u8 = 1;
+/// Nothing to absorb (criterion skipped, or the local phase errored —
+/// the trainer propagates the parked error after the join).
+pub const WIRE_SKIP: u8 = 2;
+
+/// Shared coordination state for the pipelined absorber: one mutex +
+/// condvar pair that both the local-phase jobs (to announce readiness)
+/// and the absorber runners (to claim per-shard work) rendezvous on.
+/// Owned by the trainer and retained across steps; reset per step by
+/// [`ShardedServer::absorb_pipelined`].
+pub struct WireSync {
+    state: Mutex<WireShared>,
+    cv: Condvar,
+}
+
+struct WireShared {
+    /// per-shard next position in the landing order
+    cursor: Vec<usize>,
+    /// shard currently being absorbed by some runner
+    busy: Vec<bool>,
+    /// first absorb error (propagated by `absorb_pipelined` after the drain)
+    err: Option<Error>,
+}
+
+impl Default for WireSync {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WireSync {
+    pub fn new() -> Self {
+        Self {
+            state: Mutex::new(WireShared {
+                cursor: Vec::new(),
+                busy: Vec::new(),
+                err: None,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Reset the per-step absorber state for a fan-out over `shards`
+    /// shards (retains the vectors' capacity).
+    fn reset(&self, shards: usize) {
+        let mut g = self.state.lock().unwrap();
+        g.cursor.clear();
+        g.cursor.resize(shards, 0);
+        g.busy.clear();
+        g.busy.resize(shards, false);
+        g.err = None;
+    }
+
+    /// Called by a local-phase job right after it stores its worker's
+    /// readiness state: wakes any absorber runner waiting for work.  The
+    /// empty lock/unlock is not decorative — a runner holds the mutex
+    /// continuously from its (failed) scan to its condvar wait, so taking
+    /// the lock here orders this notification after that wait begins,
+    /// ruling out the missed-wakeup race; the runner re-reads the atomic
+    /// readiness states after waking.
+    pub fn notify_ready(&self) {
+        drop(self.state.lock().unwrap());
+        self.cv.notify_all();
+    }
+}
+
+// --- shared absorb arithmetic ---------------------------------------------
+// One implementation per payload kind, expressed over explicit coordinate
+// ranges so the sync shard fan-out (whole upload at a time) and the async
+// pipelined absorber (one (worker, shard) cell at a time) run the exact
+// same per-coordinate f32 expressions — that identity is what makes
+// `staleness_bound = 0` async runs bit-identical to sync runs.
+
+/// LAG-style full-precision refresh on one range: `∇ += g − mirror`,
+/// `mirror = g`.  Slices are pre-cut to the same shard range.
+#[inline]
+fn absorb_dense_range(g: &[f32], agg: &mut [f32], mir: &mut [f32]) {
+    for i in 0..g.len() {
+        agg[i] += g[i] - mir[i];
+        mir[i] = g[i];
+    }
+}
+
+/// Innovation absorb on one range: reconstruct `Q_m^new` from the mirror
+/// with the exact same f32 expression as the worker used (so mirrors
+/// never drift), then `∇ += Q^new − mirror`, `mirror = Q^new`.
+#[inline]
+fn absorb_innovation_range(
+    codes: &[u32],
+    radius: f32,
+    two_tau_r: f32,
+    agg: &mut [f32],
+    mir: &mut [f32],
+) {
+    for i in 0..codes.len() {
+        let q_new =
+            crate::quant::innovation::reconstruct_coord(mir[i], two_tau_r, codes[i], radius);
+        agg[i] += q_new - mir[i];
+        mir[i] = q_new;
+    }
+}
+
+/// Fresh-sum absorb on one range: `∇ += g`.
+#[inline]
+fn absorb_fresh_range(add: &[f32], agg: &mut [f32]) {
+    for i in 0..add.len() {
+        agg[i] += add[i];
+    }
+}
+
+/// One `(worker, shard)` cell of the pipelined absorber: validate the
+/// worker's received payload and fold its `[lo, hi)` coordinates into the
+/// shard's agg/mirror ranges via the shared range helpers.
+#[allow(clippy::too_many_arguments)]
+fn absorb_cell(
+    lazy: bool,
+    slot: &WireSlot,
+    agg: &mut [f32],
+    mir: &mut [f32],
+    lo: usize,
+    hi: usize,
+    dim: usize,
+    levels: f32,
+    bits_expected: u32,
+) -> Result<()> {
+    if lazy {
+        match slot.received() {
+            Payload::Dense(g) => {
+                if g.len() != dim {
+                    return Err(Error::Msg("dense upload dim mismatch".into()));
+                }
+                absorb_dense_range(&g[lo..hi], agg, mir);
+            }
+            Payload::Innovation(qi) => {
+                if qi.codes.len() != dim {
+                    return Err(Error::Msg("innovation dim mismatch".into()));
+                }
+                if qi.bits != bits_expected {
+                    return Err(Error::Msg(format!(
+                        "innovation bit-width mismatch: payload b={} vs session b={}",
+                        qi.bits, bits_expected
+                    )));
+                }
+                let two_tau_r = 2.0f32 * qi.radius / levels;
+                absorb_innovation_range(&qi.codes[lo..hi], qi.radius, two_tau_r, agg, mir);
+            }
+            _ => {
+                return Err(Error::Msg(
+                    "lazy aggregation only accepts Dense/Innovation uploads".into(),
+                ))
+            }
+        }
+    } else {
+        let add = slot.recv_dense();
+        if add.len() != dim {
+            return Err(Error::Msg("fresh upload dim mismatch".into()));
+        }
+        absorb_fresh_range(&add[lo..hi], agg);
+    }
+    Ok(())
+}
 
 /// Server-side parameter-update rule applied to the (lazily aggregated)
 /// gradient ∇^k.  The paper analyses plain GD; Adam is provided as a
@@ -226,11 +396,7 @@ impl ShardedServer {
                     // agg/mirror outlive the fan-out with no other borrows
                     let agg = unsafe { agg.slice_mut(lo, hi - lo) };
                     let mir = unsafe { mir.slice_mut(lo, hi - lo) };
-                    let g = &g[lo..hi];
-                    for i in 0..g.len() {
-                        agg[i] += g[i] - mir[i];
-                        mir[i] = g[i];
-                    }
+                    absorb_dense_range(&g[lo..hi], agg, mir);
                 });
             }
             Payload::Innovation(qi) => {
@@ -259,14 +425,7 @@ impl ShardedServer {
                     // SAFETY: as above — disjoint shard ranges
                     let agg = unsafe { agg.slice_mut(lo, hi - lo) };
                     let mir = unsafe { mir.slice_mut(lo, hi - lo) };
-                    let codes = &codes[lo..hi];
-                    for i in 0..codes.len() {
-                        let q_new = crate::quant::innovation::reconstruct_coord(
-                            mir[i], two_tau_r, codes[i], radius,
-                        );
-                        agg[i] += q_new - mir[i];
-                        mir[i] = q_new;
-                    }
+                    absorb_innovation_range(&codes[lo..hi], radius, two_tau_r, agg, mir);
                 });
             }
             _ => {
@@ -308,6 +467,13 @@ impl ShardedServer {
                 ))
             }
         };
+        self.absorb_fresh_dense(add)
+    }
+
+    /// Fresh-sum absorb of an already-densified upload (the async wire
+    /// phase densifies once into the worker's slot; both async paths then
+    /// feed the same flat coordinates through here / the per-shard cells).
+    pub fn absorb_fresh_dense(&mut self, add: &[f32]) -> Result<()> {
         if add.len() != self.dim() {
             return Err(Error::Msg("fresh upload dim mismatch".into()));
         }
@@ -317,12 +483,151 @@ impl ShardedServer {
             let (lo, hi) = plan.range(s);
             // SAFETY: disjoint shard ranges, agg outlives the fan-out
             let agg = unsafe { agg.slice_mut(lo, hi - lo) };
-            let add = &add[lo..hi];
-            for i in 0..add.len() {
-                agg[i] += add[i];
-            }
+            absorb_fresh_range(&add[lo..hi], agg);
         });
         Ok(())
+    }
+
+    /// Drive the **pipelined absorber** to completion: absorb every
+    /// uploading worker of this round, shard-granularly, in the exact
+    /// sequence given by `order` (the trainer's deterministic landing
+    /// schedule), consuming payloads as the local-phase jobs publish them
+    /// via `states` — i.e. while later workers are still computing.
+    ///
+    /// Concurrency shape: `shard_runners()` runners (the caller plus the
+    /// shard pool's threads) claim `(shard, position)` cells off the
+    /// shared cursor board in `sync`.  A shard is a lock: only one runner
+    /// absorbs into a given shard at a time, and a shard absorbs workers
+    /// strictly in `order` — so the per-coordinate operation sequence is a
+    /// pure function of (order, payloads) no matter how runners race,
+    /// which is exactly the per-seed reproducibility contract
+    /// (`rust/tests/wire_equivalence.rs`).  Different shards may sit at
+    /// different positions, so a fast shard can be several uploads ahead
+    /// of a slow one — that skew is the pipelining.
+    ///
+    /// `slots` aliases the network's per-worker wire slots.  A slot is
+    /// read only after its worker's state is observed non-PENDING
+    /// (Acquire, paired with the job's Release store), at which point the
+    /// writing job has retired — so the shared reads are race-free.
+    ///
+    /// Absorb-side validation errors (dim/bit-width mismatch) are
+    /// recorded once and returned after the drain; the board still
+    /// advances past the bad upload so the pipeline cannot wedge.
+    pub fn absorb_pipelined(
+        &mut self,
+        lazy: bool,
+        order: &[usize],
+        states: &[AtomicU8],
+        slots: SendPtr<WireSlot>,
+        sync: &WireSync,
+    ) -> Result<()> {
+        let n = order.len();
+        let s_count = self.plan.n_shards();
+        sync.reset(s_count);
+        if n == 0 || s_count == 0 {
+            return Ok(());
+        }
+        let dim = self.dim();
+        let levels = self.quantizer.num_levels() as f32;
+        let bits_expected = self.quantizer.bits;
+        // raw disjoint-access pointers, captured before the fan-out: agg
+        // ranges are disjoint because a shard is absorbed by one runner at
+        // a time; mirror ranges additionally differ per worker
+        let agg = SendPtr::new(&mut self.agg[..]);
+        let mirror_bases: Vec<SendPtr<f32>> =
+            self.q_mirror.iter_mut().map(|v| SendPtr::new(&mut v[..])).collect();
+        let mirror_bases = &mirror_bases[..];
+        let plan = &self.plan;
+        let runner = move |_r: usize| {
+            let mut g = sync.state.lock().unwrap();
+            'outer: loop {
+                let mut all_done = true;
+                let mut progressed = false;
+                for s in 0..s_count {
+                    if g.busy[s] {
+                        all_done = false;
+                        continue;
+                    }
+                    while g.cursor[s] < n {
+                        let m = order[g.cursor[s]];
+                        match states[m].load(Ordering::Acquire) {
+                            WIRE_PENDING => break,
+                            WIRE_SKIP => {
+                                // nothing landed for this worker
+                                g.cursor[s] += 1;
+                                progressed = true;
+                            }
+                            _upload => {
+                                g.busy[s] = true;
+                                drop(g);
+                                let (lo, hi) = plan.range(s);
+                                // SAFETY: shard s is exclusively ours while
+                                // busy[s] (disjoint agg range); the mirror
+                                // range is ours by (worker, shard); the
+                                // slot's writer retired before publishing
+                                // its state (Release/Acquire pair above).
+                                // catch_unwind: a panicking cell must not
+                                // leave busy[s] set — that would wedge
+                                // every other runner on this board.
+                                let res = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(|| unsafe {
+                                        absorb_cell(
+                                            lazy,
+                                            slots.get_ref(m),
+                                            agg.slice_mut(lo, hi - lo),
+                                            mirror_bases[m].slice_mut(lo, hi - lo),
+                                            lo,
+                                            hi,
+                                            dim,
+                                            levels,
+                                            bits_expected,
+                                        )
+                                    }),
+                                )
+                                .unwrap_or_else(|_| {
+                                    Err(Error::Msg("absorber cell panicked".into()))
+                                });
+                                g = sync.state.lock().unwrap();
+                                g.busy[s] = false;
+                                g.cursor[s] += 1;
+                                if let Err(e) = res {
+                                    if g.err.is_none() {
+                                        g.err = Some(e);
+                                    }
+                                }
+                                drop(g);
+                                sync.cv.notify_all();
+                                g = sync.state.lock().unwrap();
+                                continue 'outer;
+                            }
+                        }
+                    }
+                    if g.cursor[s] < n {
+                        all_done = false;
+                    }
+                }
+                if all_done {
+                    // every shard drained and none in flight: wake any
+                    // runner still waiting and retire
+                    drop(g);
+                    sync.cv.notify_all();
+                    return;
+                }
+                if !progressed {
+                    g = sync.cv.wait(g).unwrap();
+                }
+            }
+        };
+        let runners = self.pool.as_ref().map(|p| p.size()).unwrap_or(0) + 1;
+        match &self.pool {
+            Some(p) if runners > 1 => p.run_indexed(runners, &runner),
+            _ => runner(0),
+        }
+        let mut g = sync.state.lock().unwrap();
+        match g.err.take() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 
     /// θ^{k+1} = θ^k − α · step(∇^k); records ||Δθ||² into the history
@@ -604,6 +909,119 @@ mod tests {
                 assert_eq!(base.q_mirror, s.q_mirror);
             }
         }
+    }
+
+    /// The pipelined absorber must land on the exact same state as
+    /// absorbing whole payloads sequentially in the same landing order —
+    /// per-shard cursors only reorder *which runner* does the work, never
+    /// the per-coordinate operation sequence.
+    #[test]
+    fn pipelined_absorb_is_bit_identical_to_sequential_landing_order() {
+        let p = 5000; // ragged tail, > 4 blocks
+        let n_workers = 4;
+        let q = InnovationQuantizer::new(3);
+        let mut base = ServerState::new(p, n_workers, 3, 10, vec![0.0; p]);
+        let mut piped = ServerState::new(p, n_workers, 3, 10, vec![0.0; p]);
+        piped.set_shards(3);
+        let order = [2usize, 0, 3, 1];
+        let mut slots: Vec<WireSlot> = (0..n_workers).map(|_| WireSlot::default()).collect();
+        let states: Vec<AtomicU8> =
+            (0..n_workers).map(|_| AtomicU8::new(WIRE_PENDING)).collect();
+        let sync = WireSync::new();
+        let mut q_prev: Vec<Vec<f32>> = vec![vec![0.0; p]; n_workers];
+        for round in 0..3u64 {
+            let mut payloads = Vec::new();
+            for m in 0..n_workers {
+                let g = grad(round * 11 + m as u64, p);
+                let (qi, q_new) = q.quantize(&g, &q_prev[m]);
+                let payload = Payload::Innovation(qi);
+                slots[m].round_trip_store(&payload).unwrap();
+                states[m].store(WIRE_UPLOAD, Ordering::Release);
+                payloads.push(payload);
+                q_prev[m] = q_new;
+            }
+            for &m in &order {
+                base.absorb_lazy(m, &payloads[m]).unwrap();
+            }
+            let slots_ptr = SendPtr::new(&mut slots[..]);
+            piped.absorb_pipelined(true, &order, &states, slots_ptr, &sync).unwrap();
+            for st in &states {
+                st.store(WIRE_PENDING, Ordering::Release);
+            }
+        }
+        assert_eq!(base.agg, piped.agg);
+        assert_eq!(base.q_mirror, piped.q_mirror);
+        assert!(piped.check_aggregate_invariant() < 1e-4);
+    }
+
+    /// The absorber must consume uploads as they are published — states
+    /// flip from PENDING on another thread while the absorber is already
+    /// draining (with skips interleaved), and the drain must terminate
+    /// with the same state as the all-ready case.
+    #[test]
+    fn pipelined_absorb_waits_for_late_workers_and_skips() {
+        let p = 4096;
+        let n_workers = 5;
+        let q = InnovationQuantizer::new(3);
+        let mut piped = ServerState::new(p, n_workers, 3, 10, vec![0.0; p]);
+        piped.set_shards(4);
+        let mut base = ServerState::new(p, n_workers, 3, 10, vec![0.0; p]);
+        let order = [0usize, 1, 2, 3, 4];
+        let skip_worker = 2usize;
+        let mut slots: Vec<WireSlot> = (0..n_workers).map(|_| WireSlot::default()).collect();
+        let mut payloads = Vec::new();
+        for m in 0..n_workers {
+            let g = grad(900 + m as u64, p);
+            let (qi, _) = q.quantize(&g, &vec![0.0; p]);
+            let payload = Payload::Innovation(qi);
+            slots[m].round_trip_store(&payload).unwrap();
+            payloads.push(payload);
+        }
+        for &m in &order {
+            if m != skip_worker {
+                base.absorb_lazy(m, &payloads[m]).unwrap();
+            }
+        }
+        let states: Vec<AtomicU8> =
+            (0..n_workers).map(|_| AtomicU8::new(WIRE_PENDING)).collect();
+        let sync = WireSync::new();
+        let slots_ptr = SendPtr::new(&mut slots[..]);
+        std::thread::scope(|s| {
+            let states = &states;
+            let sync_ref = &sync;
+            s.spawn(move || {
+                for m in 0..n_workers {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                    let st = if m == skip_worker { WIRE_SKIP } else { WIRE_UPLOAD };
+                    states[m].store(st, Ordering::Release);
+                    sync_ref.notify_ready();
+                }
+            });
+            piped.absorb_pipelined(true, &order, states, slots_ptr, sync_ref).unwrap();
+        });
+        assert_eq!(base.agg, piped.agg);
+        assert_eq!(base.q_mirror, piped.q_mirror);
+    }
+
+    #[test]
+    fn pipelined_absorb_reports_errors_without_wedging() {
+        // a wrong-width payload must surface as an error after the drain,
+        // not hang the board
+        let p = 2048;
+        let q8 = InnovationQuantizer::new(8);
+        let mut srv = ServerState::new(p, 2, 3, 10, vec![0.0; p]);
+        srv.set_shards(2);
+        let mut slots: Vec<WireSlot> = (0..2).map(|_| WireSlot::default()).collect();
+        let (qi_bad, _) = q8.quantize(&grad(1, p), &vec![0.0; p]);
+        slots[0].round_trip_store(&Payload::Innovation(qi_bad)).unwrap();
+        let q3 = InnovationQuantizer::new(3);
+        let (qi_ok, _) = q3.quantize(&grad(2, p), &vec![0.0; p]);
+        slots[1].round_trip_store(&Payload::Innovation(qi_ok)).unwrap();
+        let states: Vec<AtomicU8> = (0..2).map(|_| AtomicU8::new(WIRE_UPLOAD)).collect();
+        let sync = WireSync::new();
+        let slots_ptr = SendPtr::new(&mut slots[..]);
+        let order = [0usize, 1];
+        assert!(srv.absorb_pipelined(true, &order, &states, slots_ptr, &sync).is_err());
     }
 
     #[test]

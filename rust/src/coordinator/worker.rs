@@ -13,12 +13,15 @@
 //!   run it concurrently for all workers (each thread owning its node
 //!   exclusively).  The tentative reconstruction `Q_m(θ^k)` is parked in
 //!   the node's scratch buffer and the wire message in [`WorkerNode::staged`].
-//! * [`WorkerNode::commit`] — the *post-wire* half: on upload, promote
-//!   the scratch reconstruction to `q_prev`, refresh `ε̂²`, zero the
-//!   clock; on skip, tick the clock.  The trainer calls it in worker
-//!   order during the sequential wire phase, right after the server
-//!   absorbed the (wire-decoded) payload, so worker and server mirrors
-//!   move in lock-step.
+//! * [`WorkerNode::commit`] — the *post-decision* half: on upload,
+//!   promote the scratch reconstruction to `q_prev`, refresh `ε̂²`, zero
+//!   the clock; on skip, tick the clock.  Under the sync wire phase the
+//!   trainer calls it in worker order right after the server absorbed the
+//!   (wire-decoded) payload; under the async wire phase the worker's own
+//!   job calls it right after staging the payload into its wire slot —
+//!   both are sound because the server reconstructs the identical vector
+//!   from the wire message, so worker and server mirrors move in
+//!   lock-step regardless of when each side commits.
 //!
 //! # Steady-state allocation
 //!

@@ -78,17 +78,55 @@ pub struct Batcher {
     rng: Rng,
     shard_n: usize,
     batch: usize,
+    /// retained identity permutation `0..shard_n` for in-place partial
+    /// Fisher–Yates draws (restored after every draw)
+    pool: Vec<usize>,
+    /// swap journal for that restoration
+    swaps: Vec<usize>,
 }
 
 impl Batcher {
     pub fn new(shard_n: usize, batch: usize, seed: u64, worker: u64) -> Self {
         assert!(batch > 0 && batch <= shard_n);
-        Self { rng: Rng::new(seed ^ (worker.wrapping_mul(0x9E3779B97F4A7C15))), shard_n, batch }
+        Self {
+            rng: Rng::new(seed ^ (worker.wrapping_mul(0x9E3779B97F4A7C15))),
+            shard_n,
+            batch,
+            pool: (0..shard_n).collect(),
+            swaps: Vec::with_capacity(batch),
+        }
+    }
+
+    /// Draw the next minibatch into `out` (cleared first) — zero heap
+    /// allocation once `out`'s capacity has warmed up.  Each draw is a
+    /// partial Fisher–Yates over the retained identity pool, undone via
+    /// the swap journal afterwards, so the index sequence is
+    /// **bit-compatible** with the historical `Rng::sample_indices` path
+    /// (same RNG consumption, same start-from-identity semantics).
+    pub fn next_batch_into(&mut self, out: &mut Vec<usize>) {
+        let n = self.shard_n;
+        out.clear();
+        self.swaps.clear();
+        for i in 0..self.batch {
+            let j = i + self.rng.below((n - i) as u64) as usize;
+            self.pool.swap(i, j);
+            // positions < i+1 are never touched again this draw (j >= i),
+            // so pool[i] is final the moment it is swapped in
+            out.push(self.pool[i]);
+            self.swaps.push(j);
+        }
+        // undo the swaps in reverse to restore the identity permutation
+        for i in (0..self.batch).rev() {
+            self.pool.swap(i, self.swaps[i]);
+        }
     }
 
     /// Draw the next minibatch (without replacement within the batch).
+    /// Allocating convenience form of [`Self::next_batch_into`].
     pub fn next_batch(&mut self) -> Vec<usize> {
-        self.rng.sample_indices(self.shard_n, self.batch)
+        let mut out = Vec::with_capacity(self.batch);
+        self.next_batch_into(&mut out);
+        out
     }
 }
 
@@ -171,6 +209,21 @@ mod tests {
             dedup.dedup();
             assert_eq!(dedup.len(), 10, "indices must be distinct");
         }
+    }
+
+    #[test]
+    fn next_batch_into_matches_sample_indices_sequence() {
+        // the retained-pool draw must be bit-compatible with the
+        // historical allocate-per-draw path
+        let mut legacy = Rng::new(42 ^ (3u64.wrapping_mul(0x9E3779B97F4A7C15)));
+        let mut b = Batcher::new(100, 10, 42, 3);
+        let mut out = Vec::new();
+        for _ in 0..8 {
+            b.next_batch_into(&mut out);
+            assert_eq!(out, legacy.sample_indices(100, 10));
+        }
+        // and the retained pool is restored to the identity every draw
+        assert_eq!(b.pool, (0..100).collect::<Vec<_>>());
     }
 
     #[test]

@@ -24,15 +24,20 @@ impl LogRegModel {
         Self { features, classes }
     }
 
-    /// argmax_c θ_c · x for each row.
+    /// argmax_c θ_c · x for each row — one (n×F)·(C×F)ᵀ GEMM over the
+    /// whole evaluation set instead of n·C per-row dot loops (the
+    /// accuracy path is touched every metrics interval; the GEMM keeps θ
+    /// rows hot across evaluation rows).  `gemm_a_bt` accumulates each
+    /// score with the same `dot_f32` kernel the old loop used, so
+    /// predictions are bit-identical.
     pub fn predict(&self, theta: &[f32], data: &Dataset) -> Vec<u32> {
         assert_eq!(theta.len(), self.features * self.classes);
+        let scores = tensor::gemm_a_bt(data.n, self.features, self.classes, &data.x, theta);
         let mut out = Vec::with_capacity(data.n);
         for i in 0..data.n {
-            let x = data.row(i);
+            let row = &scores[i * self.classes..(i + 1) * self.classes];
             let mut best = (f32::NEG_INFINITY, 0u32);
-            for c in 0..self.classes {
-                let s = tensor::dot_f32(&theta[c * self.features..(c + 1) * self.features], x);
+            for (c, &s) in row.iter().enumerate() {
                 if s > best.0 {
                     best = (s, c as u32);
                 }
@@ -60,6 +65,14 @@ impl ModelOps for LogRegModel {
     }
 }
 
+/// One chunk's retained partial for the chunk-parallel evaluation path:
+/// its own logits scratch, unnormalized gradient accumulator and CE sum.
+struct ChunkScratch {
+    logits: Vec<f32>,
+    grad: Vec<f32>,
+    ce: f64,
+}
+
 /// Per-worker gradient oracle holding this worker's shard.
 pub struct LogRegWorker {
     shard: Dataset,
@@ -69,13 +82,17 @@ pub struct LogRegWorker {
     /// retained per-row logits scratch (C floats) — keeps the sequential
     /// evaluation path allocation-free
     logits: Vec<f32>,
+    /// retained chunk-parallel partials, grown on first use — the fan-out
+    /// used to allocate a fresh logits + C·F grad vector per chunk per
+    /// step (`rust/tests/alloc_steady_state.rs` pins the fix)
+    chunks: Vec<ChunkScratch>,
 }
 
 impl LogRegWorker {
     pub fn new(shard: Dataset, cfg: LossCfg) -> Self {
         let classes = shard.classes;
         let features = shard.features;
-        Self { shard, cfg, classes, features, logits: vec![0.0; classes] }
+        Self { shard, cfg, classes, features, logits: vec![0.0; classes], chunks: Vec::new() }
     }
 
     /// Shared core over an arbitrary row set, writing the normalized
@@ -101,23 +118,35 @@ impl LogRegWorker {
         if n >= PAR_THRESHOLD && pool.size() > 1 {
             let chunks = pool.size().min(n.div_ceil(64));
             let per = n.div_ceil(chunks);
+            // grow the retained partials once; every later step reuses them
+            while self.chunks.len() < chunks {
+                self.chunks.push(ChunkScratch {
+                    logits: vec![0.0; c],
+                    grad: vec![0.0; c * f],
+                    ce: 0.0,
+                });
+            }
             let shard = &self.shard;
-            let rows = &rows;
-            let parts = pool.scatter(chunks, |ci| {
+            let scratch =
+                crate::util::threadpool::SendPtr::new(&mut self.chunks[..]);
+            pool.run_indexed(chunks, &|ci| {
                 // clamp both ends: ceil-division can make the last
                 // chunk's start overshoot n on very wide pools
                 let lo = (ci * per).min(n);
                 let hi = ((ci + 1) * per).min(n);
-                let mut logits = vec![0.0f32; c];
-                let mut grad = vec![0.0f32; c * f];
-                let ce = eval_chunk(shard, theta, rows.sub(lo, hi), c, f, &mut logits, &mut grad);
-                (ce, grad)
+                // SAFETY: run_indexed hands out each chunk index exactly
+                // once, and the scratch vector outlives the join
+                let part = unsafe { scratch.get_mut(ci) };
+                part.grad.fill(0.0);
+                part.ce =
+                    eval_chunk(shard, theta, rows.sub(lo, hi), c, f, &mut part.logits, &mut part.grad);
             });
+            // reduce in fixed chunk order (determinism, as before)
             ce = 0.0;
             out.fill(0.0);
-            for (pce, pgrad) in parts {
-                ce += pce;
-                tensor::axpy(1.0, &pgrad, out);
+            for part in self.chunks.iter().take(chunks) {
+                ce += part.ce;
+                tensor::axpy(1.0, &part.grad, out);
             }
         } else {
             out.fill(0.0);

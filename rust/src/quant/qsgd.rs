@@ -57,20 +57,26 @@ impl QsgdMessage {
     }
 
     /// Reconstruct the quantized gradient.
-    pub fn dequantize(&self) -> Vec<f32> {
+    /// Dequantize into a caller-retained buffer (cleared first; no
+    /// allocation once its capacity has warmed up) — the async wire
+    /// phase's per-worker slots reuse one buffer per worker.
+    pub fn dequantize_into(&self, out: &mut Vec<f32>) {
         let s = ((1u32 << self.bits) - 1) as f32;
-        self.levels
-            .iter()
-            .zip(&self.signs)
-            .map(|(&l, &sg)| {
-                let mag = self.norm * l as f32 / s;
-                if sg {
-                    -mag
-                } else {
-                    mag
-                }
-            })
-            .collect()
+        out.clear();
+        out.extend(self.levels.iter().zip(&self.signs).map(|(&l, &sg)| {
+            let mag = self.norm * l as f32 / s;
+            if sg {
+                -mag
+            } else {
+                mag
+            }
+        }));
+    }
+
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.levels.len());
+        self.dequantize_into(&mut out);
+        out
     }
 }
 

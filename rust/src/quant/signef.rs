@@ -44,11 +44,17 @@ impl SignMessage {
         Ok(Self { scale, signs })
     }
 
+    /// Dequantize into a caller-retained buffer (cleared first; no
+    /// allocation once its capacity has warmed up).
+    pub fn dequantize_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.extend(self.signs.iter().map(|&s| if s { -self.scale } else { self.scale }));
+    }
+
     pub fn dequantize(&self) -> Vec<f32> {
-        self.signs
-            .iter()
-            .map(|&s| if s { -self.scale } else { self.scale })
-            .collect()
+        let mut out = Vec::with_capacity(self.signs.len());
+        self.dequantize_into(&mut out);
+        out
     }
 }
 

@@ -56,11 +56,19 @@ impl SparseMessage {
         Ok(Self { dim, indices, values })
     }
 
-    pub fn densify(&self) -> Vec<f32> {
-        let mut out = vec![0.0f32; self.dim];
+    /// Densify into a caller-retained buffer (cleared + zero-filled
+    /// first; no allocation once its capacity has warmed up).
+    pub fn densify_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.resize(self.dim, 0.0);
         for (&i, &v) in self.indices.iter().zip(&self.values) {
             out[i as usize] = v;
         }
+    }
+
+    pub fn densify(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.dim);
+        self.densify_into(&mut out);
         out
     }
 }

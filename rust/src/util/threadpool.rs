@@ -35,12 +35,36 @@ struct Batch {
     /// lifetime-erased job (SAFETY: outlives the batch via join-before-return)
     f: *const (dyn Fn(usize) + Sync),
     n: usize,
-    /// next index to claim (guarded by the pool mutex)
+    /// next claim position (guarded by the pool mutex)
     next: usize,
+    /// optional claim order: position `p` claims job `order[p]` (null =
+    /// identity).  Streaming callers use this to start jobs in the order a
+    /// downstream consumer will want their results (SAFETY: outlives the
+    /// batch via join-before-return, like `f`)
+    order: *const usize,
     /// claimed-or-unclaimed jobs not yet finished
     remaining: usize,
     /// first panic payload, re-raised by the posting thread after the join
     panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+impl Batch {
+    /// Claim the next job index, mapping through the claim order.  Must
+    /// be called with the pool mutex held.
+    fn claim(&mut self) -> Option<usize> {
+        if self.next >= self.n {
+            return None;
+        }
+        let pos = self.next;
+        self.next += 1;
+        Some(if self.order.is_null() {
+            pos
+        } else {
+            // SAFETY: order slices outlive their batch (join-before-return)
+            // and have length n
+            unsafe { *self.order.add(pos) }
+        })
+    }
 }
 
 /// Raw pointer to a stack-held [`Batch`], movable across pool threads.
@@ -105,9 +129,7 @@ fn worker_loop(inner: &Inner) {
         for &bp in guard.queue.iter() {
             // SAFETY: dereferenced under the pool mutex (see finish_job)
             let b = unsafe { &mut *bp.0 };
-            if b.next < b.n {
-                let i = b.next;
-                b.next += 1;
+            if let Some(i) = b.claim() {
                 claimed = Some((bp, i));
                 break;
             }
@@ -180,6 +202,7 @@ impl Pool {
             f: f_static as *const (dyn Fn(usize) + Sync),
             n,
             next: 0,
+            order: std::ptr::null(),
             remaining: n,
             panic: None,
         });
@@ -196,25 +219,78 @@ impl Pool {
         loop {
             let mut guard = inner.state.lock().unwrap();
             let b = unsafe { &mut *bp.0 };
-            if b.next >= b.n {
-                // nothing left to claim; wait for in-flight jobs
-                while unsafe { &*bp.0 }.remaining > 0 {
-                    guard = inner.done_cv.wait(guard).unwrap();
+            match b.claim() {
+                None => {
+                    // nothing left to claim; wait for in-flight jobs
+                    while unsafe { &*bp.0 }.remaining > 0 {
+                        guard = inner.done_cv.wait(guard).unwrap();
+                    }
+                    // remaining == 0 implies the batch already left the queue
+                    let p = unsafe { &mut *bp.0 }.panic.take();
+                    drop(guard);
+                    if let Some(p) = p {
+                        std::panic::resume_unwind(p);
+                    }
+                    return;
                 }
-                // remaining == 0 implies the batch already left the queue
-                let p = unsafe { &mut *bp.0 }.panic.take();
-                drop(guard);
-                if let Some(p) = p {
-                    std::panic::resume_unwind(p);
+                Some(i) => {
+                    drop(guard);
+                    let out =
+                        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i)));
+                    finish_job(inner, bp, out);
                 }
-                return;
             }
-            let i = b.next;
-            b.next += 1;
-            drop(guard);
-            let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i)));
-            finish_job(inner, bp, out);
         }
+    }
+
+    /// Streaming / completion-order variant of [`Self::run_indexed`]: post
+    /// `n` jobs and return immediately with a [`StreamGuard`]; the pool's
+    /// threads claim jobs in `order` (a permutation of `0..n`; `None` =
+    /// index order) and the **caller does not participate** — it is free
+    /// to consume results concurrently as the jobs publish them (the async
+    /// wire phase's coordinator absorbs uploads while later workers are
+    /// still computing).  Completion is observed out-of-band by the jobs
+    /// themselves (e.g. an atomic readiness flag per index); the guard
+    /// only provides the final join.
+    ///
+    /// The borrows of `f` and `order` are lifetime-erased exactly like
+    /// [`Self::run_indexed`]'s; soundness comes from the guard joining the
+    /// whole batch before it is dropped.  Leaking the guard
+    /// (`std::mem::forget`) would break that contract — don't.
+    pub fn stream_indexed<'a>(
+        &'a self,
+        n: usize,
+        order: Option<&'a [usize]>,
+        f: &'a (dyn Fn(usize) + Sync),
+    ) -> StreamGuard<'a> {
+        if let Some(o) = order {
+            assert_eq!(o.len(), n, "claim order must cover every job");
+        }
+        // SAFETY: StreamGuard joins the batch before 'a ends (join or Drop)
+        let f_static: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f) };
+        let batch = Box::new(UnsafeCell::new(Batch {
+            f: f_static as *const (dyn Fn(usize) + Sync),
+            n,
+            next: 0,
+            order: order.map_or(std::ptr::null(), |o| o.as_ptr()),
+            remaining: n,
+            panic: None,
+        }));
+        let guard = StreamGuard {
+            inner: &*self.inner,
+            batch,
+            joined: n == 0,
+            _marker: std::marker::PhantomData,
+        };
+        if n > 0 {
+            let bp = BatchPtr(guard.batch.get());
+            {
+                let mut st = self.inner.state.lock().unwrap();
+                st.queue.push_back(bp);
+            }
+            self.inner.work_cv.notify_all();
+        }
+        guard
     }
 
     /// Run `f(i)` for each i in 0..n, collecting results in index order.
@@ -236,6 +312,60 @@ impl Pool {
             });
         }
         slots.into_iter().map(|s| s.expect("job completed")).collect()
+    }
+}
+
+/// A posted-but-not-yet-joined fan-out from [`Pool::stream_indexed`].
+/// The batch descriptor is heap-held so the pool's queue pointer stays
+/// valid if the guard moves.  Joining (explicitly via [`Self::join`], or
+/// implicitly on drop) blocks until every job has finished and re-raises
+/// the first job panic; that join is what makes the lifetime-erased
+/// borrows of the job closure and claim order sound.
+pub struct StreamGuard<'a> {
+    inner: &'a Inner,
+    batch: Box<UnsafeCell<Batch>>,
+    joined: bool,
+    _marker: std::marker::PhantomData<&'a ()>,
+}
+
+impl StreamGuard<'_> {
+    fn join_inner(&mut self) -> Option<Box<dyn std::any::Any + Send>> {
+        if self.joined {
+            return None;
+        }
+        self.joined = true;
+        let bp = self.batch.get();
+        let mut guard = self.inner.state.lock().unwrap();
+        // SAFETY: batch pointers are only dereferenced under the pool
+        // mutex; the box outlives this guard
+        while unsafe { &*bp }.remaining > 0 {
+            guard = self.inner.done_cv.wait(guard).unwrap();
+        }
+        // remaining == 0 implies finish_job already retired the batch
+        // from the queue, so no worker can still hold our pointer
+        let p = unsafe { &mut *bp }.panic.take();
+        drop(guard);
+        p
+    }
+
+    /// Block until every job in the batch has finished; re-raises the
+    /// first job panic with its original payload.
+    pub fn join(mut self) {
+        if let Some(p) = self.join_inner() {
+            std::panic::resume_unwind(p);
+        }
+    }
+}
+
+impl Drop for StreamGuard<'_> {
+    fn drop(&mut self) {
+        let p = self.join_inner();
+        if let Some(p) = p {
+            // re-raise unless we are already unwinding (double panic aborts)
+            if !std::thread::panicking() {
+                std::panic::resume_unwind(p);
+            }
+        }
     }
 }
 
@@ -306,6 +436,19 @@ impl<T: Send> SendPtr<T> {
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn slice_mut(&self, start: usize, len: usize) -> &mut [T] {
         std::slice::from_raw_parts_mut(self.0.add(start), len)
+    }
+
+    /// Shared reference to element `i` — for readers that consume a slot
+    /// after its exclusive writer has published completion (e.g. the
+    /// async absorber reading a wire slot once the worker's readiness
+    /// flag is set with Release ordering).
+    ///
+    /// # Safety
+    /// Same contract as [`Self::get_mut`], relaxed to allow concurrent
+    /// *shared* reads of the same index provided no thread mutates it for
+    /// the duration, and the read is ordered after the writer's release.
+    pub unsafe fn get_ref(&self, i: usize) -> &T {
+        &*self.0.add(i)
     }
 }
 
@@ -469,6 +612,81 @@ mod tests {
         for j in joins {
             j.join().unwrap();
         }
+    }
+
+    #[test]
+    fn stream_indexed_runs_all_jobs_and_joins() {
+        let pool = Pool::new(3);
+        let hits: Vec<AtomicUsize> = (0..32).map(|_| AtomicUsize::new(0)).collect();
+        {
+            let f = |i: usize| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            };
+            let guard = pool.stream_indexed(32, None, &f);
+            guard.join();
+        }
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "index {i}");
+        }
+        // zero jobs: the guard joins trivially
+        pool.stream_indexed(0, None, &|_| unreachable!()).join();
+    }
+
+    #[test]
+    fn stream_indexed_claims_in_the_given_order() {
+        // one pool thread claiming sequentially must start jobs exactly in
+        // the permuted order
+        let pool = Pool::new(1);
+        let seen = std::sync::Mutex::new(Vec::new());
+        let order = [3usize, 0, 2, 1];
+        {
+            let f = |i: usize| {
+                seen.lock().unwrap().push(i);
+            };
+            pool.stream_indexed(4, Some(&order[..]), &f).join();
+        }
+        assert_eq!(*seen.lock().unwrap(), vec![3, 0, 2, 1]);
+    }
+
+    #[test]
+    fn stream_guard_drop_joins_and_caller_overlaps() {
+        // the posting thread consumes published results while the pool is
+        // still working — the async wire phase's shape
+        let pool = Pool::new(2);
+        let done: Vec<AtomicUsize> = (0..16).map(|_| AtomicUsize::new(0)).collect();
+        {
+            let f = |i: usize| {
+                done[i].store(1, Ordering::Release);
+            };
+            let _guard = pool.stream_indexed(16, None, &f);
+            // consume completions out-of-band (spin; jobs are trivial)
+            let mut consumed = 0;
+            while consumed < 16 {
+                consumed = done
+                    .iter()
+                    .filter(|d| d.load(Ordering::Acquire) == 1)
+                    .count();
+                std::thread::yield_now();
+            }
+            // guard dropped here: implicit join
+        }
+        assert!(done.iter().all(|d| d.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn stream_indexed_propagates_panics_on_join() {
+        let pool = Pool::new(2);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let f = |i: usize| {
+                if i == 3 {
+                    panic!("stream boom");
+                }
+            };
+            pool.stream_indexed(8, None, &f).join();
+        }));
+        assert!(result.is_err(), "job panic must reach the joining caller");
+        // pool survives
+        assert_eq!(pool.scatter(3, |i| i + 1), vec![1, 2, 3]);
     }
 
     #[test]

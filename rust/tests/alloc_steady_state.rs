@@ -65,6 +65,10 @@ fn laq_cfg(
     c.iters = 1000; // stepped manually
     c.threads = threads;
     c.server_shards = shards;
+    // the zero-alloc contract pins the *sync* hot path; the async engine
+    // allocates its per-step stream-batch descriptor by design, so pin
+    // the mode here rather than inherit a LAQ_WIRE_MODE env default
+    c.wire_mode = laq::config::WireMode::Sync;
     c
 }
 
@@ -105,4 +109,22 @@ fn laq_step_is_allocation_free_after_warmup() {
     lag.algo = laq::config::Algo::Lag;
     let n = count_steps(&lag, 30, 40);
     assert_eq!(n, 0, "sequential LAG step allocated {n} times after warmup");
+
+    // chunk-parallel gradient path: 300 rows/worker clears the model
+    // layer's PAR_THRESHOLD, so the full gradient fans out over the
+    // global pool — the chunk partials must land in the worker-retained
+    // scratch, not per-chunk fresh vectors (that was the last steady-state
+    // allocation the PR 2 pin missed)
+    let big = laq_cfg("mnist", 1200, 1, 1);
+    let n = count_steps(&big, 5, 10);
+    assert_eq!(n, 0, "chunk-parallel LAQ step allocated {n} times after warmup");
+
+    // SLAQ: the per-step minibatch draw now refills the trainer's
+    // retained rows buffers (Batcher::next_batch_into over its identity
+    // pool) instead of allocating a fresh index vector per worker
+    let mut slaq = laq_cfg("ijcnn1", 200, 1, 1);
+    slaq.algo = laq::config::Algo::Slaq;
+    slaq.batch = 80; // 20 rows/worker (shards hold 50)
+    let n = count_steps(&slaq, 30, 40);
+    assert_eq!(n, 0, "SLAQ step allocated {n} times after warmup");
 }

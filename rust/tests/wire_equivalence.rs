@@ -1,0 +1,244 @@
+//! Contracts of the async wire phase (`cfg.wire_mode`):
+//!
+//! * **sync regression** — `wire_mode = sync` is the pre-existing
+//!   schedule; its traces must never drift.  A self-seeding golden
+//!   fingerprint file pins all nine algorithms across future changes
+//!   (first run records, later runs assert), and the sync-vs-async(0)
+//!   test below ties the async engine to the same arithmetic.
+//! * **degeneration** — `wire_mode = async, staleness_bound = 0` absorbs
+//!   in worker index order through the pipelined machinery, so it must be
+//!   **bit-identical** to sync for all nine algorithms, at any
+//!   (threads, shards).
+//! * **per-seed reproducibility** — with `staleness_bound > 0` the
+//!   landing schedule reorders absorption, so async traces differ from
+//!   sync (f32 reassociation) but are a pure function of (seed, config):
+//!   identical across repeated runs and across every (threads, shards)
+//!   combination.
+//! * **accounting exactness** — bits, rounds, per-worker rounds and the
+//!   simulated latency clock are folded on the coordinator in index
+//!   order in both modes, so they match sync *exactly* even when the
+//!   absorb order does not.
+//! * **wire-schedule persistence** — checkpoints record
+//!   (wire_mode, staleness_bound) and resume adopts them, so an async
+//!   run's remaining trace replays bit-for-bit.
+
+use laq::config::{Algo, RunCfg, WireMode};
+
+fn cfg_for(
+    algo: Algo,
+    wire: WireMode,
+    staleness: usize,
+    threads: usize,
+    shards: usize,
+) -> RunCfg {
+    let mut c = RunCfg::paper_logreg(algo);
+    // mnist-like keeps p = 7840 (8 coordinate blocks ⇒ real shard plans);
+    // tiny row counts keep the suite fast
+    c.data.n_train = 240;
+    c.data.n_test = 60;
+    c.workers = 4;
+    c.iters = 30;
+    c.batch = 40;
+    c.record_every = 1;
+    c.threads = threads;
+    c.server_shards = shards;
+    c.wire_mode = wire;
+    c.staleness_bound = staleness;
+    if algo.is_stochastic() {
+        c.alpha = 0.01;
+    }
+    c
+}
+
+/// Everything observable about a run, collected per iteration.
+#[derive(Debug, PartialEq)]
+struct Trace {
+    // (loss, grad_norm_sq, bits, uploads, max_eps_sq) per step — f64
+    // compared exactly: the contracts here are bit-for-bit, not
+    // approximate (except where a test says otherwise)
+    steps: Vec<(f64, f64, u64, usize, f64)>,
+    rounds: u64,
+    bits: u64,
+    sim_time: f64,
+    per_worker_rounds: Vec<u64>,
+    clocks: Vec<usize>,
+    theta: Vec<f32>,
+}
+
+fn run_trace(cfg: &RunCfg) -> Trace {
+    let mut t = laq::algo::build_native(cfg).unwrap();
+    let mut steps = Vec::with_capacity(cfg.iters);
+    for _ in 0..cfg.iters {
+        let s = t.step().unwrap();
+        steps.push((s.loss, s.grad_norm_sq, s.bits, s.uploads, s.max_eps_sq));
+    }
+    Trace {
+        steps,
+        rounds: t.net.uplink_rounds(),
+        bits: t.net.uplink_bits(),
+        sim_time: t.net.sim_time(),
+        per_worker_rounds: t.net.per_worker_rounds().to_vec(),
+        clocks: t.clocks(),
+        theta: t.theta().to_vec(),
+    }
+}
+
+#[test]
+fn async_with_zero_staleness_is_bit_identical_to_sync() {
+    for algo in Algo::all() {
+        let sync = run_trace(&cfg_for(algo, WireMode::Sync, 0, 1, 1));
+        for (threads, shards) in [(1usize, 1usize), (4, 7)] {
+            let a = run_trace(&cfg_for(algo, WireMode::Async, 0, threads, shards));
+            assert_eq!(
+                sync,
+                a,
+                "{}: async s=0 threads={threads} shards={shards} diverged from sync",
+                algo.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn async_trace_is_reproducible_per_seed_across_threads_and_shards() {
+    for algo in [Algo::Laq, Algo::Lag, Algo::Slaq, Algo::EfSgd] {
+        let base = run_trace(&cfg_for(algo, WireMode::Async, 2, 1, 1));
+        for (threads, shards) in [(1usize, 7usize), (4, 1), (4, 7)] {
+            let t = run_trace(&cfg_for(algo, WireMode::Async, 2, threads, shards));
+            assert_eq!(
+                base,
+                t,
+                "{}: async s=2 threads={threads} shards={shards} not reproducible",
+                algo.name()
+            );
+        }
+        // racing schedules across two identical runs must still agree
+        let again = run_trace(&cfg_for(algo, WireMode::Async, 2, 4, 7));
+        assert_eq!(base, again, "{}: async rerun diverged", algo.name());
+    }
+}
+
+#[test]
+fn async_accounting_is_exactly_sync_accounting() {
+    // staleness > 0 reorders the f32 absorbs, so losses/θ may drift — but
+    // bits, rounds and the latency clock are pure per-message accounting
+    // folded in index order, and must match sync bit-for-bit.  QGD makes
+    // the comparison airtight: every worker uploads every round (forced),
+    // so the message sequence cannot depend on the perturbed trajectory.
+    let sync = run_trace(&cfg_for(Algo::Qgd, WireMode::Sync, 0, 1, 1));
+    let asy = run_trace(&cfg_for(Algo::Qgd, WireMode::Async, 3, 4, 7));
+    assert_eq!(sync.rounds, asy.rounds);
+    assert_eq!(sync.bits, asy.bits);
+    assert_eq!(sync.per_worker_rounds, asy.per_worker_rounds);
+    assert_eq!(sync.sim_time.to_bits(), asy.sim_time.to_bits());
+}
+
+#[test]
+fn async_reordering_stays_close_to_sync() {
+    // with a non-trivial staleness bound the aggregate sums reassociate;
+    // the optimization trajectory must stay within a loose tolerance
+    let sync = run_trace(&cfg_for(Algo::Laq, WireMode::Sync, 0, 1, 1));
+    let asy = run_trace(&cfg_for(Algo::Laq, WireMode::Async, 3, 4, 7));
+    let ls = sync.steps.last().unwrap().0;
+    let la = asy.steps.last().unwrap().0;
+    assert!(
+        (ls - la).abs() <= 1e-2 * ls.abs().max(1.0),
+        "final loss diverged: sync {ls} vs async {la}"
+    );
+}
+
+#[test]
+fn checkpoint_persists_and_replays_the_wire_schedule() {
+    let dir = std::env::temp_dir().join("laq_wire_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("mid.ckpt");
+
+    // uninterrupted async reference run
+    let mut straight =
+        laq::algo::build_native(&cfg_for(Algo::Laq, WireMode::Async, 2, 1, 1)).unwrap();
+    for _ in 0..20 {
+        straight.step().unwrap();
+    }
+
+    let mut first =
+        laq::algo::build_native(&cfg_for(Algo::Laq, WireMode::Async, 2, 1, 1)).unwrap();
+    for _ in 0..10 {
+        first.step().unwrap();
+    }
+    first.save_checkpoint(&path).unwrap();
+
+    // resume on a trainer configured sync — the checkpoint's recorded
+    // schedule must take over (and with it, the landing order)
+    let mut resumed =
+        laq::algo::build_native(&cfg_for(Algo::Laq, WireMode::Sync, 0, 4, 7)).unwrap();
+    resumed.load_checkpoint(&path).unwrap();
+    assert_eq!(resumed.cfg.wire_mode, WireMode::Async);
+    assert_eq!(resumed.cfg.staleness_bound, 2);
+    for _ in 0..10 {
+        resumed.step().unwrap();
+    }
+
+    assert_eq!(straight.theta(), resumed.theta());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// --- sync golden fingerprints --------------------------------------------
+
+fn fnv1a(h: u64, v: u64) -> u64 {
+    let mut h = h;
+    for b in v.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn fingerprint(t: &Trace) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for s in &t.steps {
+        h = fnv1a(h, s.0.to_bits());
+        h = fnv1a(h, s.1.to_bits());
+        h = fnv1a(h, s.2);
+        h = fnv1a(h, s.3 as u64);
+        h = fnv1a(h, s.4.to_bits());
+    }
+    h = fnv1a(h, t.rounds);
+    h = fnv1a(h, t.bits);
+    h = fnv1a(h, t.sim_time.to_bits());
+    for &r in &t.per_worker_rounds {
+        h = fnv1a(h, r);
+    }
+    for &c in &t.clocks {
+        h = fnv1a(h, c as u64);
+    }
+    for &x in &t.theta {
+        h = fnv1a(h, x.to_bits() as u64);
+    }
+    h
+}
+
+/// Cross-PR regression guard for the sync schedule: the first run in a
+/// fresh checkout records `tests/golden_sync_traces.txt`; every later run
+/// (including the CI matrix's other env legs) must reproduce it
+/// bit-for-bit.  If a PR changes these traces intentionally, delete the
+/// file and let the suite re-seed it — and say so in the PR.
+#[test]
+fn sync_trace_fingerprints_are_stable() {
+    let path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden_sync_traces.txt");
+    let mut lines = Vec::new();
+    for algo in Algo::all() {
+        let t = run_trace(&cfg_for(algo, WireMode::Sync, 0, 1, 1));
+        lines.push(format!("{} {:016x}", algo.name(), fingerprint(&t)));
+    }
+    let current = lines.join("\n") + "\n";
+    match std::fs::read_to_string(&path) {
+        Ok(golden) => assert_eq!(
+            golden,
+            current,
+            "sync traces diverged from the recorded goldens in {}",
+            path.display()
+        ),
+        Err(_) => std::fs::write(&path, &current).expect("seed the golden trace file"),
+    }
+}
