@@ -384,7 +384,7 @@ fn synth_wire_trainer(m: usize, p: usize, wire: WireMode) -> Trainer {
 /// sync wire phase serializes Σ_m absorb on the coordinator).  Emits the
 /// `trainer_wire` group into BENCH_trainer.json.
 fn bench_trainer_wire(quick: bool, entries: &mut Vec<Json>) {
-    println!("\n== trainer step throughput: sync vs async wire phase ==");
+    println!("\n== trainer step throughput: sync vs async vs async-cross wire phase ==");
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     println!("   (host cores: {cores}; threads=2, shards=2, LAQ b=3, staleness=4)");
     let combos: &[(usize, usize)] = if quick {
@@ -401,7 +401,7 @@ fn bench_trainer_wire(quick: bool, entries: &mut Vec<Json>) {
     };
     for &(m, p) in combos {
         let mut p50_sync = f64::NAN;
-        for wire in [WireMode::Sync, WireMode::Async] {
+        for wire in [WireMode::Sync, WireMode::Async, WireMode::AsyncCross] {
             let mut t = if p == 7840 {
                 logreg_wire_trainer(m, wire)
             } else {
@@ -433,9 +433,10 @@ fn bench_trainer_wire(quick: bool, entries: &mut Vec<Json>) {
                 p50_sync = summ.p50;
             } else {
                 println!(
-                    "{:<44} {:.2}× p50 step speedup async vs sync",
+                    "{:<44} {:.2}× p50 step speedup {} vs sync",
                     format!("  -> M={m} p={p}"),
-                    p50_sync / summ.p50
+                    p50_sync / summ.p50,
+                    wire.name()
                 );
             }
         }

@@ -4,11 +4,17 @@
 #   (1) fully sequential          — LAQ_THREADS=1 LAQ_SHARDS=1
 #   (2) parallel + sharded server — LAQ_THREADS=4 LAQ_SHARDS=4
 #   (3) async wire phase          — LAQ_THREADS=4 LAQ_SHARDS=4 LAQ_WIRE_MODE=async
+#   (4) cross-round staleness     — LAQ_THREADS=4 LAQ_SHARDS=4
+#                                   LAQ_WIRE_MODE=async-cross LAQ_STALENESS=2
 # The parallel/sharded/wire equivalence tests pin all three knobs to
 # bit-identical traces (async at the default staleness_bound=0 keeps the
 # sync absorb order, so the whole suite doubles as an async regression
 # run); running the whole suite under each default keeps every other test
-# exercising every schedule too.
+# exercising every schedule too.  Leg (4) genuinely changes algorithm
+# semantics (uploads land rounds late), so the suite's convergence and
+# invariant tests double as the staleness soak — the hard contracts live
+# in rust/tests/staleness_contract.rs, which runs in every leg with its
+# own pinned wire modes.
 #
 # A quick-mode bench smoke run then emits BENCH_server.json (sharded
 # absorb/apply p50/p99 over shard × dim sweeps) and BENCH_trainer.json
@@ -30,6 +36,9 @@ fi
 echo "== release build =="
 cargo build --release
 
+echo "== examples build (keeps examples/*.rs from bit-rotting) =="
+cargo build --examples
+
 echo "== tests, fully sequential (LAQ_THREADS=1 LAQ_SHARDS=1) =="
 LAQ_THREADS=1 LAQ_SHARDS=1 cargo test -q
 
@@ -38,6 +47,9 @@ LAQ_THREADS=4 LAQ_SHARDS=4 cargo test -q
 
 echo "== tests, async wire phase (LAQ_THREADS=4 LAQ_SHARDS=4 LAQ_WIRE_MODE=async) =="
 LAQ_THREADS=4 LAQ_SHARDS=4 LAQ_WIRE_MODE=async cargo test -q
+
+echo "== tests, cross-round staleness (LAQ_WIRE_MODE=async-cross LAQ_STALENESS=2) =="
+LAQ_THREADS=4 LAQ_SHARDS=4 LAQ_WIRE_MODE=async-cross LAQ_STALENESS=2 cargo test -q
 
 echo "== bench smoke (quick mode -> BENCH_server.json + BENCH_trainer.json) =="
 LAQ_BENCH_QUICK=1 cargo bench

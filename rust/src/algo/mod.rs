@@ -88,6 +88,26 @@
 //!   barriers on every upload of iteration k, so the paper's convergence
 //!   semantics are untouched up to floating-point reassociation.
 //!
+//! **Async-cross** lifts that last barrier: an upload produced in round k
+//! may land up to `staleness_bound` *rounds* later (per-upload lag drawn
+//! from the seeded latency model, FIFO per worker, deadline-clamped — see
+//! the cross-round staleness notes in [`crate::comm`]).  Each step first
+//! drains the **carried** uploads whose deadline expired — on the
+//! coordinator, overlapping the new round's local fan-out, which reads
+//! only its own θ-snapshot — then pipes the round's lag-0 uploads through
+//! the same absorber board as plain async, while lag ≥ 1 uploads park,
+//! already wire-decoded, in per-(worker, round) retained [`WireSlot`]
+//! rings until their landing round.  The absorb sequence of a round is
+//! therefore `(origin round, worker index)`-ordered and a pure function
+//! of (seed, config); accounting still folds at the *origin* round in
+//! index order, so bits/rounds/clock stay bit-equal to sync.  This mode
+//! **changes algorithm semantics** (the lazy recursion consumes genuinely
+//! outdated innovations); `rust/tests/staleness_contract.rs` pins the
+//! contracts that replace bit-identity: bounded observed staleness,
+//! (seed, config)-pure traces across threads × shards, sync-exact
+//! accounting, staleness-tolerant convergence on strongly convex logreg,
+//! and exact degeneration to sync at bound 0.
+//!
 //! # Shard topology
 //!
 //! With `cfg.server_shards = S` (0 = auto), the server partitions θ, the
@@ -135,7 +155,7 @@ use crate::quant::signef::SignEfCompressor;
 use crate::quant::sparsify::Sparsifier;
 use crate::util::rng::Rng;
 use crate::util::tensor;
-use crate::util::threadpool::{Pool, SendPtr};
+use crate::util::threadpool::{Pool, SendPtr, StreamBatch};
 use crate::{Error, Result};
 
 /// Per-iteration statistics.
@@ -182,9 +202,12 @@ pub struct Trainer {
     /// per-worker minibatch draws (all None for deterministic algorithms;
     /// the inner vectors are retained and refilled in place each step)
     rows: Vec<Option<Vec<usize>>>,
-    /// async wire phase: landing schedule + readiness board (retained;
-    /// only touched when `cfg.wire_mode == WireMode::Async`)
+    /// async wire phases: landing schedule + readiness board (retained;
+    /// only touched when `cfg.wire_mode != WireMode::Sync`)
     wire: AsyncWireState,
+    /// cross-round wire mode: in-flight rings + deadline clamps (retained;
+    /// inert unless `cfg.wire_mode == WireMode::AsyncCross`)
+    cross: CrossState,
 }
 
 /// Retained state of the async wire phase: the per-step deterministic
@@ -202,6 +225,10 @@ struct AsyncWireState {
     states: Vec<AtomicU8>,
     /// absorber rendezvous (cursor board + condvar)
     sync: WireSync,
+    /// retained stream-batch descriptor for the worker fan-out — one
+    /// allocation for the trainer's lifetime (it outlives every `step`),
+    /// so posting the async fan-out allocates nothing per iteration
+    batch: StreamBatch,
 }
 
 impl AsyncWireState {
@@ -212,6 +239,7 @@ impl AsyncWireState {
             window: Vec::with_capacity(n_workers),
             states: (0..n_workers).map(|_| AtomicU8::new(WIRE_PENDING)).collect(),
             sync: WireSync::new(),
+            batch: StreamBatch::new(),
         }
     }
 }
@@ -224,8 +252,9 @@ impl AsyncWireState {
 /// sides: a payload neither jumps ahead of its turn by more than `bound`
 /// (it must be inside the candidate window) nor goes stale by more than
 /// `bound` (the force rule).  `bound = 0` degenerates to worker index
-/// order, i.e. the sync schedule.
-fn landing_order(keys: &[u64], bound: usize, window: &mut Vec<usize>, out: &mut Vec<usize>) {
+/// order, i.e. the sync schedule.  (Public for the property tests in
+/// `rust/tests/prop_coordinator.rs`.)
+pub fn landing_order(keys: &[u64], bound: usize, window: &mut Vec<usize>, out: &mut Vec<usize>) {
     let n = keys.len();
     out.clear();
     window.clear();
@@ -252,6 +281,80 @@ fn landing_order(keys: &[u64], bound: usize, window: &mut Vec<usize>, out: &mut 
             wi
         };
         out.push(window.remove(wi));
+    }
+}
+
+/// Landing deadline of the upload `(worker, iter)` under the cross-round
+/// rule: at least `iter + lag` (the drawn delay), clamped monotone by the
+/// worker's previous deadline so messages model a FIFO channel — a
+/// worker's uploads can never overtake each other, which is what keeps
+/// the server-side mirror recursion in lock-step with the worker's.
+/// Because `lag ≤ bound` and the previous deadline was `≤ iter - 1 +
+/// bound`, the result is always within `iter ..= iter + bound` — the
+/// hard staleness guarantee.  Advanced every round for every worker
+/// (upload or skip), so future deadlines are a pure function of
+/// `(seed, worker, iter)`, independent of upload decisions.  (Public for
+/// the property tests in `rust/tests/prop_coordinator.rs`.)
+pub fn cross_deadline(prev_deadline: usize, iter: usize, lag: usize) -> usize {
+    (iter + lag).max(prev_deadline)
+}
+
+/// Retained state of the cross-round wire mode (`async-cross`): the
+/// per-worker FIFO deadline clamps, this round's drawn lags, the parked
+/// in-flight uploads, and the per-(worker, origin-round) wire-slot rings
+/// they live in.  Ring slot `m * depth + origin % depth` is free again by
+/// round `origin + depth` because every deadline is `≤ origin + bound =
+/// origin + depth - 1`.  All buffers warm up once; the steady state
+/// allocates nothing.
+struct CrossState {
+    /// ring depth = staleness_bound + 1 (1 when the mode is off, so the
+    /// `% depth` indexing stays well-defined)
+    depth: usize,
+    /// in-flight payload rings, `n_workers * depth` slots (empty unless
+    /// the mode is on)
+    slots: Vec<WireSlot>,
+    /// per-worker monotone landing-deadline clamp
+    next_deadline: Vec<usize>,
+    /// this round's effective lag per worker (deadline − round; all 0
+    /// under the other wire modes)
+    lags: Vec<usize>,
+    /// uploads awaiting their landing round, in (origin, worker) order
+    pending: Vec<PendingUpload>,
+    /// worst observed landing staleness (rounds), for the contract tests
+    max_lag_seen: usize,
+    /// total uploads that crossed a round boundary
+    deferred_total: u64,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct PendingUpload {
+    m: usize,
+    origin: usize,
+    deadline: usize,
+}
+
+impl CrossState {
+    fn new(cfg: &RunCfg, n_workers: usize, dim: usize, warm_quantized: bool) -> Self {
+        let on = cfg.wire_mode == WireMode::AsyncCross;
+        let depth = if on { cfg.staleness_bound + 1 } else { 1 };
+        let mut slots = Vec::new();
+        if on {
+            slots = (0..n_workers * depth).map(|_| WireSlot::default()).collect();
+            if warm_quantized {
+                for s in slots.iter_mut() {
+                    s.warm_innovation(dim, cfg.bits);
+                }
+            }
+        }
+        Self {
+            depth,
+            slots,
+            next_deadline: vec![0; n_workers],
+            lags: vec![0; n_workers],
+            pending: Vec::with_capacity(n_workers * (depth + 1)),
+            max_lag_seen: 0,
+            deferred_total: 0,
+        }
     }
 }
 
@@ -282,11 +385,13 @@ impl Trainer {
         );
         server.set_shards(cfg.server_shards);
         let mut net = Network::new(nodes.len(), latency);
-        if lazy_codec_for(cfg.algo) == Some(LazyCodec::Quantized) {
+        let warm_quantized = lazy_codec_for(cfg.algo) == Some(LazyCodec::Quantized);
+        if warm_quantized {
             // every slot's first innovation round trip is allocation-free,
             // even for workers that stay silent through the warmup
             net.warm_slots_innovation(dim, cfg.bits);
         }
+        let cross = CrossState::new(&cfg, nodes.len(), dim, warm_quantized);
         let batchers = if cfg.algo.is_stochastic() {
             let per = cfg.batch / nodes.len();
             if per == 0 {
@@ -332,6 +437,7 @@ impl Trainer {
             locals: (0..n_workers).map(|_| LocalSlot::default()).collect(),
             rows: vec![None; n_workers],
             wire: AsyncWireState::new(n_workers),
+            cross,
         })
     }
 
@@ -500,37 +606,77 @@ impl Trainer {
                     }
                 }
             }
-            WireMode::Async => {
+            WireMode::Async | WireMode::AsyncCross => {
+                let cross = self.cfg.wire_mode == WireMode::AsyncCross;
+
                 // 2. deterministic landing schedule for iteration k: a
-                // pure function of (seed, config), never of thread timing
-                let bound = self.cfg.staleness_bound.min(m_all.saturating_sub(1));
-                self.wire.keys.clear();
-                for m in 0..m_all {
-                    self.wire.keys.push(self.net.latency.landing_key(
-                        self.cfg.seed,
-                        m as u64,
-                        k as u64,
-                    ));
-                }
-                {
-                    let w = &mut self.wire;
-                    landing_order(&w.keys, bound, &mut w.window, &mut w.order);
+                // pure function of (seed, config), never of thread timing.
+                if cross {
+                    // cross-round: draw each worker's round lag, clamp
+                    // the deadline monotone per worker (FIFO channel —
+                    // see `cross_deadline`).  This round's absorb set is
+                    // the lag-0 workers in index order; deferred workers
+                    // ride at the tail of the claim order (their results
+                    // are not consumed until their landing round).
+                    let bound = self.cfg.staleness_bound;
+                    self.wire.order.clear();
+                    for m in 0..m_all {
+                        let lag = self.net.latency.round_lag(
+                            self.cfg.seed,
+                            m as u64,
+                            k as u64,
+                            bound,
+                        );
+                        let deadline = cross_deadline(self.cross.next_deadline[m], k, lag);
+                        self.cross.next_deadline[m] = deadline;
+                        self.cross.lags[m] = deadline - k;
+                        if deadline == k {
+                            self.wire.order.push(m);
+                        }
+                    }
+                    for m in 0..m_all {
+                        if self.cross.lags[m] > 0 {
+                            self.wire.order.push(m);
+                        }
+                    }
+                } else {
+                    let bound = self.cfg.staleness_bound.min(m_all.saturating_sub(1));
+                    self.cross.lags.fill(0);
+                    self.wire.keys.clear();
+                    for m in 0..m_all {
+                        self.wire.keys.push(self.net.latency.landing_key(
+                            self.cfg.seed,
+                            m as u64,
+                            k as u64,
+                        ));
+                    }
+                    {
+                        let w = &mut self.wire;
+                        landing_order(&w.keys, bound, &mut w.window, &mut w.order);
+                    }
                 }
                 for st in self.wire.states.iter() {
                     st.store(WIRE_PENDING, Ordering::Release);
                 }
 
-                // 3. three overlapped lanes: worker jobs run local phase
-                // + wire round trip + commit (claimed in landing order so
-                // results surface in the order the absorber wants them),
-                // while the pipelined absorber drains the readiness board
-                // per θ-shard on the coordinator + shard pool.
+                // 3. overlapped lanes: worker jobs run local phase + wire
+                // round trip + commit (claimed in landing order so results
+                // surface in the order the absorber wants them); lag ≥ 1
+                // uploads park in their cross-round ring slot instead of
+                // publishing.  Meanwhile the coordinator first absorbs the
+                // *carried* uploads whose deadline expired — overlapping
+                // the fresh local fan-out, which reads only its own
+                // θ-snapshot — then drives the pipelined absorber over
+                // this round's lag-0 readiness board per θ-shard.
                 match &self.pool {
                     Some(pool) => {
                         let nodes = SendPtr::new(&mut self.nodes[..]);
                         let ef = SendPtr::new(&mut self.ef[..]);
                         let slots = SendPtr::new(&mut self.locals[..]);
                         let wire_slots = SendPtr::new(self.net.slots_mut());
+                        let cross_slots = SendPtr::new(&mut self.cross.slots[..]);
+                        let depth = self.cross.depth;
+                        let lags = &self.cross.lags[..];
                         let states = &self.wire.states[..];
                         let wsync = &self.wire.sync;
                         let ctx_ref = &ctx;
@@ -540,10 +686,14 @@ impl Trainer {
                             // disjoint per worker; everything outlives
                             // the guard's join below.  The absorber only
                             // reads a wire slot after this job's Release
-                            // store of the readiness state.
+                            // store of the readiness state.  A deferred
+                            // job writes its own (worker, round) ring
+                            // slot, disjoint from every other job's and
+                            // from the carried slots the coordinator
+                            // reads (origins within the staleness window
+                            // never collide with round k modulo depth).
                             let node = unsafe { nodes.get_mut(m) };
                             let slot = unsafe { slots.get_mut(m) };
-                            let wslot = unsafe { wire_slots.get_mut(m) };
                             let ef_m = if ctx_ref.algo == Algo::EfSgd {
                                 Some(unsafe { ef.get_mut(m) })
                             } else {
@@ -553,10 +703,55 @@ impl Trainer {
                             // panicking job cannot leave the absorber
                             // waiting on a PENDING state forever
                             let _publish = PublishReadiness { state: &states[m], sync: wsync };
-                            local_and_wire_phase(ctx_ref, m, node, ef_m, slot, wslot, &states[m]);
+                            let defer = lags[m] > 0;
+                            let wslot = if defer {
+                                unsafe {
+                                    cross_slots.get_mut(m * depth + ctx_ref.iter % depth)
+                                }
+                            } else {
+                                unsafe { wire_slots.get_mut(m) }
+                            };
+                            local_and_wire_phase(
+                                ctx_ref, m, node, ef_m, slot, wslot, defer, &states[m],
+                            );
                         };
-                        let guard =
-                            pool.stream_indexed(m_all, Some(&self.wire.order[..]), &job);
+                        let guard = self.wire.batch.post(
+                            pool,
+                            m_all,
+                            Some(&self.wire.order[..]),
+                            &job,
+                        );
+                        let mut drain_err: Option<Error> = None;
+                        if cross {
+                            for i in 0..self.cross.pending.len() {
+                                let p = self.cross.pending[i];
+                                if p.deadline != k {
+                                    continue;
+                                }
+                                // SAFETY: ring slot (m, origin) was
+                                // written by worker m's job in round
+                                // `origin` < k, whose guard joined that
+                                // step; this round's jobs write only
+                                // round-k ring slots, so the shared read
+                                // is race-free (see the job's notes).
+                                let slot = unsafe {
+                                    cross_slots
+                                        .get_ref(p.m * depth + p.origin % depth)
+                                };
+                                let res = if lazy {
+                                    self.server.absorb_lazy(p.m, slot.received())
+                                } else {
+                                    self.server.absorb_fresh_dense(slot.recv_dense())
+                                };
+                                if let Err(e) = res {
+                                    if drain_err.is_none() {
+                                        drain_err = Some(e);
+                                    }
+                                }
+                                self.cross.max_lag_seen =
+                                    self.cross.max_lag_seen.max(k - p.origin);
+                            }
+                        }
                         let res = self.server.absorb_pipelined(
                             lazy,
                             &self.wire.order,
@@ -565,24 +760,52 @@ impl Trainer {
                             wsync,
                         );
                         guard.join();
+                        if let Some(e) = drain_err {
+                            return Err(e);
+                        }
                         res?;
                     }
                     None => {
-                        // no worker pool: the SAME per-worker job as the
-                        // threaded path (local phase + wire round trip +
-                        // commit + readiness publication), run inline in
-                        // landing order with a whole-payload absorb after
-                        // each.  Per-coordinate operation order — and the
+                        // no worker pool: the SAME absorb sequence as the
+                        // threaded path — carried uploads first, in
+                        // (origin round, worker) order, then the per-
+                        // worker jobs inline in claim order with a
+                        // whole-payload absorb after each lag-0 upload.
+                        // Per-coordinate operation order — and the
                         // error/commit semantics — are identical to the
                         // pipelined drain by construction, which is the
                         // reproducibility contract across thread counts.
+                        if cross {
+                            for i in 0..self.cross.pending.len() {
+                                let p = self.cross.pending[i];
+                                if p.deadline != k {
+                                    continue;
+                                }
+                                let slot = &self.cross.slots
+                                    [p.m * self.cross.depth + p.origin % self.cross.depth];
+                                if lazy {
+                                    self.server.absorb_lazy(p.m, slot.received())?;
+                                } else {
+                                    self.server.absorb_fresh_dense(slot.recv_dense())?;
+                                }
+                                self.cross.max_lag_seen =
+                                    self.cross.max_lag_seen.max(k - p.origin);
+                            }
+                        }
                         for j in 0..m_all {
                             let m = self.wire.order[j];
+                            let defer = self.cross.lags[m] > 0;
                             {
                                 let ef_m = if algo == Algo::EfSgd {
                                     Some(&mut self.ef[m])
                                 } else {
                                     None
+                                };
+                                let wslot = if defer {
+                                    let depth = self.cross.depth;
+                                    &mut self.cross.slots[m * depth + k % depth]
+                                } else {
+                                    self.net.slot_mut(m)
                                 };
                                 local_and_wire_phase(
                                     &ctx,
@@ -590,7 +813,8 @@ impl Trainer {
                                     &mut self.nodes[m],
                                     ef_m,
                                     &mut self.locals[m],
-                                    self.net.slot_mut(m),
+                                    wslot,
+                                    defer,
                                     &self.wire.states[m],
                                 );
                             }
@@ -607,16 +831,26 @@ impl Trainer {
                     }
                 }
 
+                // carried uploads have landed; retire them before this
+                // round's deferred uploads join the in-flight set
+                if cross {
+                    self.cross.pending.retain(|p| p.deadline != k);
+                }
+
                 // 4. accounting + reductions on the coordinator in worker
                 // *index* order — the identical f64 fold order the sync
                 // schedule uses, so bits/rounds/clock/loss are bit-equal
-                // to sync no matter how absorption was reordered.
+                // to sync no matter how (or in which round) absorption
+                // was reordered.  Bits/rounds are always accounted at the
+                // *origin* round: the message enters the (sequential,
+                // simulated) uplink now even if it lands rounds later.
                 for m in 0..m_all {
                     if let Some(e) = self.locals[m].err.take() {
                         return Err(e);
                     }
                     loss_total += self.locals[m].loss;
                     tensor::axpy(1.0, &self.nodes[m].grad, &mut self.gsum);
+                    let mut uploaded = false;
                     if lazy {
                         let decision = self.locals[m]
                             .decision
@@ -624,10 +858,20 @@ impl Trainer {
                         if decision.upload {
                             let bits = self.nodes[m].staged.wire_bits();
                             self.net.account_upload(m, bits);
+                            uploaded = true;
                         }
                         max_eps_sq = max_eps_sq.max(decision.eps_sq);
                     } else if let Some(payload) = self.locals[m].payload.take() {
                         self.net.account_upload(m, payload.wire_bits());
+                        uploaded = true;
+                    }
+                    if uploaded && cross && self.cross.lags[m] > 0 {
+                        self.cross.pending.push(PendingUpload {
+                            m,
+                            origin: k,
+                            deadline: k + self.cross.lags[m],
+                        });
+                        self.cross.deferred_total += 1;
                     }
                 }
             }
@@ -728,6 +972,28 @@ impl Trainer {
     /// [`crate::coordinator::Checkpoint`]); resume with
     /// [`Self::load_checkpoint`] on a trainer built from the same config.
     pub fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
+        // cross-round mode: the in-flight uploads and deadline clamps are
+        // algorithm state — persist them so a mid-flight resume replays
+        // the remaining trace bit-for-bit (checkpoint v3)
+        let cross = (self.cfg.wire_mode == WireMode::AsyncCross).then(|| {
+            crate::coordinator::checkpoint::CrossCheckpoint {
+                next_deadline: self.cross.next_deadline.iter().map(|&d| d as u64).collect(),
+                pending: self
+                    .cross
+                    .pending
+                    .iter()
+                    .map(|p| crate::coordinator::checkpoint::PendingCkpt {
+                        worker: p.m as u64,
+                        origin: p.origin as u64,
+                        deadline: p.deadline as u64,
+                        payload: self.cross.slots
+                            [p.m * self.cross.depth + p.origin % self.cross.depth]
+                            .received()
+                            .clone(),
+                    })
+                    .collect(),
+            }
+        });
         let ck = crate::coordinator::Checkpoint {
             iter: self.k as u64,
             wire: Some((self.cfg.wire_mode, self.cfg.staleness_bound as u64)),
@@ -737,6 +1003,7 @@ impl Trainer {
             clocks: self.nodes.iter().map(|n| n.clock as u64).collect(),
             eps_hat_sq: self.nodes.iter().map(|n| n.eps_hat_sq).collect(),
             history: self.server.history.entries_oldest_first(),
+            cross,
         };
         ck.write_to(path)
     }
@@ -787,7 +1054,50 @@ impl Trainer {
                 );
             }
             self.cfg.wire_mode = wm;
-            self.cfg.staleness_bound = s as usize;
+            self.cfg.staleness_bound = s.min(u32::MAX as u64) as usize;
+            // the adopted schedule must satisfy the same invariants a
+            // configured one would (notably the async-cross staleness
+            // cap, which bounds the ring memory CrossState::new is about
+            // to allocate) — a corrupt/foreign checkpoint surfaces here
+            // as Error::Config instead of an absurd allocation
+            self.cfg.validate()?;
+        }
+        // rebuild the cross-round rings for the (possibly adopted) wire
+        // schedule and re-park the recorded in-flight uploads; the
+        // payloads already crossed the wire once, so the re-store round
+        // trip is a fixed point and hands the absorber identical bits
+        let warm_quantized = lazy_codec_for(self.cfg.algo) == Some(LazyCodec::Quantized);
+        let cross_state =
+            CrossState::new(&self.cfg, self.nodes.len(), self.dim(), warm_quantized);
+        self.cross = cross_state;
+        if let Some(cs) = &ck.cross {
+            if self.cfg.wire_mode != WireMode::AsyncCross {
+                return Err(Error::Config(
+                    "checkpoint has in-flight cross-round state but wire mode is not async-cross"
+                        .into(),
+                ));
+            }
+            for (m, &d) in cs.next_deadline.iter().enumerate() {
+                self.cross.next_deadline[m] = d as usize;
+            }
+            for pc in &cs.pending {
+                let (m, origin, deadline) =
+                    (pc.worker as usize, pc.origin as usize, pc.deadline as usize);
+                if deadline.saturating_sub(origin) > self.cfg.staleness_bound
+                    || deadline < self.k
+                {
+                    return Err(Error::Config(
+                        "checkpoint in-flight upload violates the staleness bound".into(),
+                    ));
+                }
+                let slot = &mut self.cross.slots[m * self.cross.depth + origin % self.cross.depth];
+                slot.round_trip_store(&pc.payload)?;
+                if !matches!(pc.payload, Payload::Innovation(_)) {
+                    // fresh-sum kinds land as flat adds; Dense is a no-op
+                    slot.densify_received()?;
+                }
+                self.cross.pending.push(PendingUpload { m, origin, deadline });
+            }
         }
         Ok(())
     }
@@ -800,6 +1110,28 @@ impl Trainer {
     /// Test hook: per-worker silence clocks.
     pub fn clocks(&self) -> Vec<usize> {
         self.nodes.iter().map(|n| n.clock).collect()
+    }
+
+    /// Cross-round wire mode observability: `(max observed landing
+    /// staleness in rounds, total uploads that crossed a round boundary)`.
+    /// Both stay 0 under the other wire modes — the contract harness pins
+    /// the first to `staleness_bound` and uses the second to prove the
+    /// adversarial schedule actually deferred something.
+    pub fn staleness_stats(&self) -> (usize, u64) {
+        (self.cross.max_lag_seen, self.cross.deferred_total)
+    }
+
+    /// Number of uploads currently in flight (produced but not landed).
+    pub fn in_flight_uploads(&self) -> usize {
+        self.cross.pending.len()
+    }
+
+    /// Does worker `m` have an upload in flight?  While one is, the
+    /// server-side mirror legitimately lags the worker's (they
+    /// re-synchronize exactly at the landing round) — the mirror
+    /// consistency property tests skip those windows.
+    pub fn worker_in_flight(&self, m: usize) -> bool {
+        self.cross.pending.iter().any(|p| p.m == m)
     }
 
     /// Test hook: worker-side q_prev mirrors.
@@ -920,16 +1252,22 @@ impl Drop for PublishReadiness<'_> {
     }
 }
 
-/// Async wire mode: one worker's full job — the local phase, then the
-/// physical wire round trip of the staged payload into the worker's
-/// retained [`WireSlot`], then the mirror/clock commit — ending with the
+/// Async wire modes: one worker's full job — the local phase, then the
+/// physical wire round trip of the staged payload into `wire` (the
+/// worker's network [`WireSlot`], or its cross-round ring slot when the
+/// upload is deferred), then the mirror/clock commit — ending with the
 /// Release publication of the readiness state the pipelined absorber is
-/// waiting on.  The commit rides here (instead of post-wire as in sync
-/// mode) because it touches only this worker's node state, which nothing
-/// reads again until the next iteration's local phase — the absorber
-/// works off the wire slot, not the node.  Accounting deliberately does
-/// NOT ride here: it stays on the coordinator in index order (see the
-/// step's phase 4).
+/// waiting on.  A deferred upload publishes `WIRE_SKIP`: nothing of this
+/// worker's lands this round, the decoded payload parks in the ring until
+/// its landing round (the worker still commits now — the server replays
+/// the identical recursion later from the parked message, FIFO per
+/// worker, so the mirrors re-synchronize exactly at the landing round).
+/// The commit rides here (instead of post-wire as in sync mode) because
+/// it touches only this worker's node state, which nothing reads again
+/// until the next iteration's local phase — the absorber works off the
+/// wire slot, not the node.  Accounting deliberately does NOT ride here:
+/// it stays on the coordinator in index order (see the step's phase 4).
+#[allow(clippy::too_many_arguments)]
 fn local_and_wire_phase(
     ctx: &LocalCtx<'_>,
     m: usize,
@@ -937,6 +1275,7 @@ fn local_and_wire_phase(
     ef: Option<&mut SignEfCompressor>,
     slot: &mut LocalSlot,
     wire: &mut WireSlot,
+    defer: bool,
     state: &AtomicU8,
 ) {
     local_phase(ctx, m, node, ef, slot);
@@ -945,7 +1284,8 @@ fn local_and_wire_phase(
         if let Some(d) = slot.decision {
             if d.upload {
                 match wire.round_trip_store(&node.staged) {
-                    Ok(()) => publish = WIRE_UPLOAD,
+                    Ok(()) if !defer => publish = WIRE_UPLOAD,
+                    Ok(()) => {}
                     Err(e) => slot.err = Some(e),
                 }
             }
@@ -955,7 +1295,8 @@ fn local_and_wire_phase(
             // so the absorber's shard jobs are plain disjoint-range adds
             let res = wire.round_trip_store(p).and_then(|_| wire.densify_received());
             match res {
-                Ok(()) => publish = WIRE_UPLOAD,
+                Ok(()) if !defer => publish = WIRE_UPLOAD,
+                Ok(()) => {}
                 Err(e) => slot.err = Some(e),
             }
         }
@@ -1010,5 +1351,26 @@ mod tests {
         landing_order(&keys, 2, &mut win, &mut out);
         let pos0 = out.iter().position(|&m| m == 0).unwrap();
         assert_eq!(pos0, 2, "worker 0 must be force-emitted at its bound");
+    }
+
+    #[test]
+    fn cross_deadline_is_monotone_bounded_and_degenerate_at_zero() {
+        // FIFO clamp: deadlines never regress, never exceed k + lag_max
+        let mut prev = 0usize;
+        for k in 0..100usize {
+            let lag = [0usize, 3, 1, 0, 2][k % 5];
+            let d = cross_deadline(prev, k, lag);
+            assert!(d >= k, "deadline {d} before its own round {k}");
+            assert!(d >= prev, "deadline regressed: {d} < {prev}");
+            assert!(d <= k + 3, "deadline {d} beyond the bound at round {k}");
+            prev = d;
+        }
+        // all-zero lags: every deadline is its own round (the sync path)
+        let mut prev = 0usize;
+        for k in 0..20usize {
+            let d = cross_deadline(prev, k, 0);
+            assert_eq!(d, k);
+            prev = d;
+        }
     }
 }

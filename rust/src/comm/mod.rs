@@ -31,8 +31,44 @@
 //! pipelined absorber (see [`crate::coordinator::server`]) consumes the
 //! decoded payloads per θ-shard while later workers are still computing.
 //!
-//! Accounting is **identical in both modes** because it is pure
-//! per-message arithmetic that never rides in the overlapped lanes:
+//! # Cross-round staleness (`wire_mode = async-cross`)
+//!
+//! The third mode lets the wire lane cross the round boundary: an upload
+//! produced in round k may *land* (be absorbed into `∇`) up to
+//! `staleness_bound` **rounds** later, while the intervening rounds'
+//! local phases run on their own θ-snapshots.  The model is a per-worker
+//! FIFO channel with seeded delay:
+//!
+//! * every (worker m, round k) draws a **round lag** from the latency
+//!   model's jitter stream ([`LatencyModel::round_lag`]) — a pure
+//!   function of (seed, m, k), never of thread timing;
+//! * a worker's messages cannot overtake each other: the landing
+//!   *deadline* is clamped monotone per worker
+//!   ([`crate::algo::cross_deadline`]), so uploads absorb in origin-round
+//!   order and the server/worker mirror recursion stays in lock-step even
+//!   though the server's copy lags while a message is in flight;
+//! * the deadline never exceeds `origin + staleness_bound`: the
+//!   coordinator **force-drains** every upload whose deadline expires
+//!   before it applies that round's θ-update (an upload created from
+//!   θ^k therefore influences θ^{k+1+lag} instead of θ^{k+1});
+//! * in-flight messages park in per-(worker, origin-round) retained
+//!   [`WireSlot`] rings owned by the trainer, already wire-decoded, so a
+//!   landing is a plain absorb with no decode on the critical path.
+//!
+//! `staleness_bound = 0` makes every lag zero and the mode degenerates
+//! exactly to `async(0)`, i.e. bit-identical to sync.  Unlike the other
+//! two modes this one *changes the algorithm's semantics* (the lazy
+//! recursion eq. (4) is fed genuinely outdated innovations, in the spirit
+//! of A-LAQ/LASG); the convergence-contract harness
+//! `rust/tests/staleness_contract.rs` is the checkable argument: bounded
+//! observed staleness, (seed, config)-pure traces across threads ×
+//! shards, sync-exact accounting, and a staleness-dependent loss
+//! tolerance on strongly convex logistic regression.
+//!
+//! Accounting is **identical in all modes** because it is pure
+//! per-message arithmetic that never rides in the overlapped lanes —
+//! bits/rounds/clock are folded at the *origin* round on the coordinator
+//! in worker index order, even for uploads still in flight:
 //!
 //! * **bits** — [`Payload::wire_bits`] is a pure function of the payload,
 //!   and `rust/tests/prop_quant.rs` pins it to the physically serialized
@@ -178,6 +214,22 @@ impl LatencyModel {
     pub fn landing_key(&self, seed: u64, worker: u64, iter: u64) -> u64 {
         Rng::stream(seed ^ 0x11AD_17E5_CA1E, worker, iter).next_u64()
     }
+
+    /// Cross-round landing lag for `wire_mode = async-cross`: how many
+    /// rounds the upload produced by `(worker, iter)` stays in flight,
+    /// drawn uniformly from `0..=bound` on a dedicated jitter stream — a
+    /// pure function of `(seed, worker, iter)`, so the cross-round
+    /// schedule is reproducible across runs, threads and shards.
+    /// `bound = 0` always returns 0 (the sync landing schedule).  The
+    /// trainer additionally clamps deadlines monotone per worker
+    /// ([`crate::algo::cross_deadline`]) so messages model a FIFO channel.
+    pub fn round_lag(&self, seed: u64, worker: u64, iter: u64, bound: usize) -> usize {
+        if bound == 0 {
+            return 0;
+        }
+        (Rng::stream(seed ^ 0xC055_1A65_0DD5, worker, iter).next_u64()
+            % (bound as u64 + 1)) as usize
+    }
 }
 
 /// One worker's retained wire buffers: an encode scratch plus the decoded
@@ -293,6 +345,21 @@ impl WireSlot {
             _ => &self.dense,
         }
     }
+
+    /// Pre-size this slot's retained buffers for innovation messages of
+    /// dimension `dim` at `bits` bits/coordinate, so the slot's *first*
+    /// round trip is already allocation-free (lazy workers can stay
+    /// silent far past any warmup window — that is the whole point of
+    /// the algorithm).  Used for the network's per-worker slots and the
+    /// trainer's cross-round in-flight rings alike.
+    pub fn warm_innovation(&mut self, dim: usize, bits: u32) {
+        self.enc = BitWriter::with_capacity_bits(32 + bits as usize * dim);
+        self.rx = Payload::Innovation(QuantizedInnovation {
+            radius: 0.0,
+            codes: Vec::with_capacity(dim),
+            bits,
+        });
+    }
 }
 
 /// Cumulative communication counters + simulated clock + per-worker
@@ -361,12 +428,7 @@ impl Network {
     /// stretches; that is the whole point of the algorithm).
     pub fn warm_slots_innovation(&mut self, dim: usize, bits: u32) {
         for s in self.slots.iter_mut() {
-            s.enc = BitWriter::with_capacity_bits(32 + bits as usize * dim);
-            s.rx = Payload::Innovation(QuantizedInnovation {
-                radius: 0.0,
-                codes: Vec::with_capacity(dim),
-                bits,
-            });
+            s.warm_innovation(dim, bits);
         }
     }
 
@@ -533,6 +595,28 @@ mod tests {
         assert_ne!(lat.landing_key(7, 2, 9), lat.landing_key(7, 3, 9));
         assert_ne!(lat.landing_key(7, 2, 9), lat.landing_key(7, 2, 10));
         assert_ne!(lat.landing_key(8, 2, 9), lat.landing_key(7, 2, 9));
+    }
+
+    #[test]
+    fn round_lag_is_pure_bounded_and_degenerate_at_zero() {
+        let lat = LatencyModel::default();
+        for seed in [1u64, 7, 99] {
+            for m in 0..6u64 {
+                for k in 0..50u64 {
+                    assert_eq!(lat.round_lag(seed, m, k, 0), 0);
+                    for bound in [1usize, 2, 5] {
+                        let lag = lat.round_lag(seed, m, k, bound);
+                        assert!(lag <= bound, "lag {lag} > bound {bound}");
+                        assert_eq!(lag, lat.round_lag(seed, m, k, bound), "not pure");
+                    }
+                }
+            }
+        }
+        // the schedule actually defers sometimes (adversarial, not inert)
+        let deferred = (0..100u64)
+            .filter(|&k| lat.round_lag(3, 0, k, 2) > 0)
+            .count();
+        assert!(deferred > 10, "only {deferred}/100 rounds deferred");
     }
 
     #[test]

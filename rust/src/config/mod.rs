@@ -153,7 +153,25 @@ pub enum WireMode {
     /// trace is a pure function of (seed, config) — reproducible across
     /// runs, thread counts and shard counts.  `staleness_bound = 0`
     /// degenerates to the sync absorb order (bit-identical to [`Self::Sync`]).
+    /// Every upload is still absorbed within its own round (the update
+    /// barriers on the round's uploads), so the algorithm semantics are
+    /// sync's up to f32 reassociation.
     Async,
+    /// Cross-round pipelining: an upload may *land* up to
+    /// `staleness_bound` **rounds** after the round that produced it —
+    /// round-k uploads are absorbed while round k+1's local phase is
+    /// already running on its own θ-snapshot.  The per-upload round lag is
+    /// drawn from the seeded latency model (a pure function of
+    /// (seed, worker, round), FIFO per worker, never exceeding the
+    /// bound — the coordinator force-drains an upload in the round its
+    /// deadline expires), so traces remain a pure function of
+    /// (seed, config) across runs, thread counts and shard counts.
+    /// `staleness_bound = 0` degenerates exactly to [`Self::Async`] with
+    /// bound 0, i.e. bit-identical to [`Self::Sync`].  Unlike the other
+    /// modes this *changes algorithm semantics* (the server applies
+    /// genuinely outdated gradients); `rust/tests/staleness_contract.rs`
+    /// is the convergence argument.
+    AsyncCross,
 }
 
 impl WireMode {
@@ -161,7 +179,10 @@ impl WireMode {
         Ok(match s.to_ascii_lowercase().as_str() {
             "sync" => WireMode::Sync,
             "async" => WireMode::Async,
-            other => return Err(Error::Config(format!("unknown wire mode '{other}'"))),
+            "async-cross" | "async_cross" | "asynccross" => WireMode::AsyncCross,
+            other => return Err(Error::Config(format!(
+                "unknown wire mode '{other}' (expected sync | async | async-cross)"
+            ))),
         })
     }
 
@@ -169,6 +190,7 @@ impl WireMode {
         match self {
             WireMode::Sync => "sync",
             WireMode::Async => "async",
+            WireMode::AsyncCross => "async-cross",
         }
     }
 }
@@ -330,11 +352,14 @@ pub struct RunCfg {
     /// [`WireMode::Async`] (pipelined absorber under the seeded landing
     /// schedule).  Default: `LAQ_WIRE_MODE` env var if set, else sync.
     pub wire_mode: WireMode,
-    /// async wire phase only: how far (in positions) the landing schedule
-    /// may reorder a worker's absorb relative to worker index order.
-    /// 0 = keep the sync order (async then only pipelines; traces stay
-    /// bit-identical to sync); larger values let simulated-late workers be
-    /// overtaken, reassociating the f32 aggregate sums deterministically.
+    /// async wire phases only.  Under [`WireMode::Async`]: how far (in
+    /// *positions*) the landing schedule may reorder a worker's absorb
+    /// relative to worker index order within one round.  Under
+    /// [`WireMode::AsyncCross`]: how many *rounds* an upload may stay in
+    /// flight before it must be absorbed (the cross-round staleness
+    /// bound).  In both modes 0 keeps the sync absorb order (traces stay
+    /// bit-identical to sync); larger values let simulated-late uploads
+    /// be overtaken, deterministically per (seed, config).
     /// Default: `LAQ_STALENESS` env var if set, else 0.
     pub staleness_bound: usize,
 }
@@ -397,6 +422,14 @@ impl RunCfg {
         if self.algo.is_stochastic() && self.batch == 0 {
             return Err(Error::Config("stochastic algorithms need batch > 0".into()));
         }
+        if self.wire_mode == WireMode::AsyncCross && self.staleness_bound > 64 {
+            // each in-flight round retains a decoded payload per worker:
+            // memory is M·(bound+1)·O(p), so keep the knob in a sane range
+            return Err(Error::Config(format!(
+                "staleness_bound = {} too large for async-cross (max 64 rounds)",
+                self.staleness_bound
+            )));
+        }
         self.criterion.validate()
     }
 
@@ -445,10 +478,26 @@ impl RunCfg {
         if let Some(v) = run.get("server_shards").as_usize() {
             self.server_shards = v;
         }
-        if let Some(s) = run.get("wire_mode").as_str() {
+        let wm = run.get("wire_mode");
+        if !wm.is_null() {
+            // a present-but-wrong-typed value (e.g. `wire_mode = 1`) must
+            // error like the CLI does, not fall through silently
+            let s = wm.as_str().ok_or_else(|| {
+                Error::Config(
+                    "wire_mode must be a string: \"sync\" | \"async\" | \"async-cross\""
+                        .into(),
+                )
+            })?;
             self.wire_mode = WireMode::parse(s)?;
         }
-        if let Some(v) = run.get("staleness_bound").as_usize() {
+        let sb = run.get("staleness_bound");
+        if !sb.is_null() {
+            // same strictness as wire_mode: a present-but-wrong-typed
+            // value (e.g. quoted `"2"`) must not silently leave the bound
+            // at 0 and turn a staleness experiment into a sync run
+            let v = sb.as_usize().ok_or_else(|| {
+                Error::Config("staleness_bound must be a non-negative integer".into())
+            })?;
             self.staleness_bound = v;
         }
         let crit = j.get("criterion");
@@ -662,6 +711,29 @@ mod tests {
         assert_eq!(c2.staleness_bound, 3);
         assert_eq!(WireMode::parse("SYNC").unwrap(), WireMode::Sync);
         assert!(WireMode::parse("pipelined").is_err());
+    }
+
+    #[test]
+    fn async_cross_mode_parses_and_roundtrips() {
+        for spelling in ["async-cross", "async_cross", "ASYNC-CROSS"] {
+            assert_eq!(WireMode::parse(spelling).unwrap(), WireMode::AsyncCross);
+        }
+        assert_eq!(WireMode::AsyncCross.name(), "async-cross");
+        let doc = "\n[run]\nwire_mode = \"async-cross\"\nstaleness_bound = 2\n";
+        let mut c = RunCfg::paper_logreg(Algo::Laq);
+        c.apply_json(&toml::parse(doc).unwrap()).unwrap();
+        assert_eq!(c.wire_mode, WireMode::AsyncCross);
+        assert_eq!(c.staleness_bound, 2);
+        let j = c.to_json();
+        let mut c2 = RunCfg::paper_logreg(Algo::Gd);
+        c2.apply_json(&j).unwrap();
+        assert_eq!(c2.wire_mode, WireMode::AsyncCross);
+        assert_eq!(c2.staleness_bound, 2);
+        // the in-flight ring is M·(bound+1) payloads: absurd bounds rejected
+        c2.staleness_bound = 65;
+        assert!(c2.validate().is_err());
+        c2.staleness_bound = 64;
+        c2.validate().unwrap();
     }
 
     #[test]

@@ -232,4 +232,50 @@ mod tests {
     fn section_vs_value_conflict_rejected() {
         assert!(parse("a = 1\n[a]\nb = 2\n").is_err());
     }
+
+    /// Regression: an unknown `wire_mode` in a TOML config must surface as
+    /// `Error::Config` exactly like the CLI path does — it used to be
+    /// possible for a mistyped value to fall through silently when it
+    /// didn't parse as a string.
+    #[test]
+    fn unknown_wire_mode_in_toml_is_a_config_error() {
+        use crate::config::{Algo, RunCfg, WireMode};
+        use crate::Error;
+
+        // unknown string value: rejected with the mode named
+        let doc = parse("[run]\nwire_mode = \"warp\"\n").unwrap();
+        let mut c = RunCfg::paper_logreg(Algo::Laq);
+        match c.apply_json(&doc) {
+            Err(Error::Config(msg)) => assert!(msg.contains("warp"), "{msg}"),
+            other => panic!("expected Error::Config, got {other:?}"),
+        }
+
+        // wrong type (bare integer): rejected, not silently ignored
+        let doc = parse("[run]\nwire_mode = 1\n").unwrap();
+        let mut c = RunCfg::paper_logreg(Algo::Laq);
+        c.wire_mode = WireMode::Sync;
+        match c.apply_json(&doc) {
+            Err(Error::Config(msg)) => assert!(msg.contains("wire_mode"), "{msg}"),
+            other => panic!("expected Error::Config, got {other:?}"),
+        }
+        assert_eq!(c.wire_mode, WireMode::Sync, "failed apply must not mutate");
+
+        // the happy path still works through the same parser
+        let doc = parse("[run]\nwire_mode = \"async-cross\"\n").unwrap();
+        let mut c = RunCfg::paper_logreg(Algo::Laq);
+        c.apply_json(&doc).unwrap();
+        assert_eq!(c.wire_mode, WireMode::AsyncCross);
+
+        // staleness_bound gets the same strictness: a quoted number must
+        // error, not silently leave the bound at 0 (a staleness
+        // experiment that quietly runs sync)
+        let doc = parse("[run]\nstaleness_bound = \"2\"\n").unwrap();
+        let mut c = RunCfg::paper_logreg(Algo::Laq);
+        let before = c.staleness_bound; // env default (LAQ_STALENESS) may be nonzero
+        match c.apply_json(&doc) {
+            Err(Error::Config(msg)) => assert!(msg.contains("staleness_bound"), "{msg}"),
+            other => panic!("expected Error::Config, got {other:?}"),
+        }
+        assert_eq!(c.staleness_bound, before, "failed apply must not mutate");
+    }
 }

@@ -20,16 +20,30 @@
 //! reproduce the original run's remaining trace — the trainer adopts the
 //! recorded values on load.
 //!
-//! Format: little-endian binary, magic `LAQCKPT2`, no external deps.
-//! `LAQCKPT1` files (pre-wire-mode) still load, with no recorded wire
-//! schedule.
+//! Under `wire_mode = async-cross` the algorithm state additionally
+//! includes the **in-flight uploads**: payloads that crossed the wire but
+//! have not reached their landing round yet, plus each worker's monotone
+//! landing-deadline clamp.  v3 checkpoints persist both (the payloads in
+//! their physical wire encodings), so a resume mid-flight replays the
+//! remaining trace bit-for-bit.
+//!
+//! Format: little-endian binary, magic `LAQCKPT3`, no external deps.
+//! `LAQCKPT2` files (pre-cross-round) and `LAQCKPT1` files
+//! (pre-wire-mode) still load, with an empty in-flight set / no recorded
+//! wire schedule respectively.
 
+use crate::comm::Payload;
 use crate::config::WireMode;
+use crate::quant::innovation::QuantizedInnovation;
+use crate::quant::qsgd::QsgdMessage;
+use crate::quant::signef::SignMessage;
+use crate::quant::sparsify::SparseMessage;
 use crate::{Error, Result};
 use std::io::{Read, Write};
 
 const MAGIC_V1: &[u8; 8] = b"LAQCKPT1";
-const MAGIC: &[u8; 8] = b"LAQCKPT2";
+const MAGIC_V2: &[u8; 8] = b"LAQCKPT2";
+const MAGIC: &[u8; 8] = b"LAQCKPT3";
 
 /// Everything needed to resume a run (independent of dataset/backend,
 /// which are reconstructed from the config).
@@ -49,6 +63,30 @@ pub struct Checkpoint {
     pub eps_hat_sq: Vec<f64>,
     /// Δθ-history entries, most recent last
     pub history: Vec<f64>,
+    /// cross-round wire state (`wire_mode = async-cross` only); `None`
+    /// when read from a v1/v2 file or written by the other modes
+    pub cross: Option<CrossCheckpoint>,
+}
+
+/// The in-flight half of an `async-cross` run: everything the landing
+/// schedule needs to continue exactly where it stopped.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CrossCheckpoint {
+    /// per-worker monotone landing-deadline clamp (FIFO channel state)
+    pub next_deadline: Vec<u64>,
+    /// uploads that crossed the wire but have not landed yet, in
+    /// (origin round, worker) order
+    pub pending: Vec<PendingCkpt>,
+}
+
+/// One in-flight upload: its routing metadata plus the already-decoded
+/// payload (re-parked into the cross-round wire ring on load).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PendingCkpt {
+    pub worker: u64,
+    pub origin: u64,
+    pub deadline: u64,
+    pub payload: Payload,
 }
 
 fn w_u64(w: &mut impl Write, v: u64) -> Result<()> {
@@ -95,6 +133,97 @@ fn r_f32s(r: &mut impl Read) -> Result<Vec<f32>> {
     Ok(out)
 }
 
+fn w_bytes(w: &mut impl Write, v: &[u8]) -> Result<()> {
+    w_u64(w, v.len() as u64)?;
+    w.write_all(v)?;
+    Ok(())
+}
+
+fn r_bytes(r: &mut impl Read) -> Result<Vec<u8>> {
+    let n = r_u64(r)? as usize;
+    if n > (1 << 31) {
+        return Err(Error::Msg("checkpoint array too large".into()));
+    }
+    let mut out = vec![0u8; n];
+    r.read_exact(&mut out)?;
+    Ok(out)
+}
+
+// Payload kind tags for in-flight upload serialization.
+const PK_DENSE: u64 = 0;
+const PK_INNOVATION: u64 = 1;
+const PK_QSGD: u64 = 2;
+const PK_SPARSE: u64 = 3;
+const PK_SIGN: u64 = 4;
+
+/// Serialize one in-flight payload through its physical wire encoding
+/// (the same property-tested codecs the uplink uses), prefixed with the
+/// shape parameters each `decode` needs.
+fn w_payload(w: &mut impl Write, p: &Payload) -> Result<()> {
+    match p {
+        Payload::Dense(v) => {
+            w_u64(w, PK_DENSE)?;
+            w_f32s(w, v)?;
+        }
+        Payload::Innovation(qi) => {
+            w_u64(w, PK_INNOVATION)?;
+            w_u64(w, qi.bits as u64)?;
+            w_u64(w, qi.codes.len() as u64)?;
+            w_bytes(w, &qi.encode())?;
+        }
+        Payload::Qsgd(m) => {
+            w_u64(w, PK_QSGD)?;
+            w_u64(w, m.bits as u64)?;
+            w_u64(w, m.levels.len() as u64)?;
+            w_bytes(w, &m.encode())?;
+        }
+        Payload::Sparse(m) => {
+            w_u64(w, PK_SPARSE)?;
+            w_u64(w, m.dim as u64)?;
+            w_bytes(w, &m.encode())?;
+        }
+        Payload::Sign(m) => {
+            w_u64(w, PK_SIGN)?;
+            w_u64(w, m.signs.len() as u64)?;
+            w_bytes(w, &m.encode())?;
+        }
+    }
+    Ok(())
+}
+
+fn r_payload(r: &mut impl Read) -> Result<Payload> {
+    Ok(match r_u64(r)? {
+        PK_DENSE => Payload::Dense(r_f32s(r)?),
+        PK_INNOVATION => {
+            let bits = r_u64(r)? as u32;
+            let p = r_u64(r)? as usize;
+            let bytes = r_bytes(r)?;
+            Payload::Innovation(QuantizedInnovation::decode(&bytes, bits, p)?)
+        }
+        PK_QSGD => {
+            let bits = r_u64(r)? as u32;
+            let p = r_u64(r)? as usize;
+            let bytes = r_bytes(r)?;
+            Payload::Qsgd(QsgdMessage::decode(&bytes, bits, p)?)
+        }
+        PK_SPARSE => {
+            let dim = r_u64(r)? as usize;
+            let bytes = r_bytes(r)?;
+            Payload::Sparse(SparseMessage::decode(&bytes, dim)?)
+        }
+        PK_SIGN => {
+            let p = r_u64(r)? as usize;
+            let bytes = r_bytes(r)?;
+            Payload::Sign(SignMessage::decode(&bytes, p)?)
+        }
+        other => {
+            return Err(Error::Msg(format!(
+                "checkpoint: unknown payload kind {other}"
+            )))
+        }
+    })
+}
+
 impl Checkpoint {
     pub fn write_to(&self, path: &std::path::Path) -> Result<()> {
         if let Some(dir) = path.parent() {
@@ -104,8 +233,9 @@ impl Checkpoint {
         w.write_all(MAGIC)?;
         w_u64(&mut w, self.iter)?;
         let (mode, staleness) = match self.wire {
-            Some((WireMode::Async, s)) => (1u64, s),
             Some((WireMode::Sync, s)) => (0u64, s),
+            Some((WireMode::Async, s)) => (1u64, s),
+            Some((WireMode::AsyncCross, s)) => (2u64, s),
             None => (0u64, 0),
         };
         w_u64(&mut w, mode)?;
@@ -128,6 +258,25 @@ impl Checkpoint {
         for &h in &self.history {
             w_f64(&mut w, h)?;
         }
+        // v3: cross-round in-flight section (presence flag keeps the
+        // format self-describing for the sync/async modes)
+        match &self.cross {
+            None => w_u64(&mut w, 0)?,
+            Some(cs) => {
+                w_u64(&mut w, 1)?;
+                w_u64(&mut w, cs.next_deadline.len() as u64)?;
+                for &d in &cs.next_deadline {
+                    w_u64(&mut w, d)?;
+                }
+                w_u64(&mut w, cs.pending.len() as u64)?;
+                for p in &cs.pending {
+                    w_u64(&mut w, p.worker)?;
+                    w_u64(&mut w, p.origin)?;
+                    w_u64(&mut w, p.deadline)?;
+                    w_payload(&mut w, &p.payload)?;
+                }
+            }
+        }
         Ok(())
     }
 
@@ -136,7 +285,8 @@ impl Checkpoint {
         let mut magic = [0u8; 8];
         r.read_exact(&mut magic)?;
         let v1 = &magic == MAGIC_V1;
-        if !v1 && &magic != MAGIC {
+        let v2 = &magic == MAGIC_V2;
+        if !v1 && !v2 && &magic != MAGIC {
             return Err(Error::Msg(format!(
                 "{}: not a LAQ checkpoint (bad magic)",
                 path.display()
@@ -149,6 +299,7 @@ impl Checkpoint {
             let mode = match r_u64(&mut r)? {
                 0 => WireMode::Sync,
                 1 => WireMode::Async,
+                2 => WireMode::AsyncCross,
                 other => {
                     return Err(Error::Msg(format!(
                         "checkpoint: unknown wire mode code {other}"
@@ -179,7 +330,35 @@ impl Checkpoint {
         for _ in 0..nh {
             history.push(r_f64(&mut r)?);
         }
-        let ck = Checkpoint { iter, wire, theta, agg, mirrors, clocks, eps_hat_sq, history };
+        let cross = if v1 || v2 {
+            None
+        } else if r_u64(&mut r)? == 0 {
+            None
+        } else {
+            let nd = r_u64(&mut r)? as usize;
+            if nd > (1 << 24) {
+                return Err(Error::Msg("checkpoint: deadline array too large".into()));
+            }
+            let mut next_deadline = Vec::with_capacity(nd);
+            for _ in 0..nd {
+                next_deadline.push(r_u64(&mut r)?);
+            }
+            let np = r_u64(&mut r)? as usize;
+            if np > (1 << 24) {
+                return Err(Error::Msg("checkpoint: in-flight set too large".into()));
+            }
+            let mut pending = Vec::with_capacity(np);
+            for _ in 0..np {
+                let worker = r_u64(&mut r)?;
+                let origin = r_u64(&mut r)?;
+                let deadline = r_u64(&mut r)?;
+                let payload = r_payload(&mut r)?;
+                pending.push(PendingCkpt { worker, origin, deadline, payload });
+            }
+            Some(CrossCheckpoint { next_deadline, pending })
+        };
+        let ck =
+            Checkpoint { iter, wire, theta, agg, mirrors, clocks, eps_hat_sq, history, cross };
         ck.validate()?;
         Ok(ck)
     }
@@ -195,6 +374,25 @@ impl Checkpoint {
         let m = self.mirrors.len();
         if self.clocks.len() != m || self.eps_hat_sq.len() != m {
             return Err(Error::Msg("checkpoint: worker count mismatch".into()));
+        }
+        if let Some(cs) = &self.cross {
+            if cs.next_deadline.len() != m {
+                return Err(Error::Msg(
+                    "checkpoint: cross deadline worker count mismatch".into(),
+                ));
+            }
+            for p in &cs.pending {
+                if p.worker as usize >= m {
+                    return Err(Error::Msg(
+                        "checkpoint: in-flight worker out of range".into(),
+                    ));
+                }
+                if p.deadline < p.origin || p.origin > self.iter {
+                    return Err(Error::Msg(
+                        "checkpoint: in-flight round tags inconsistent".into(),
+                    ));
+                }
+            }
         }
         Ok(())
     }
@@ -214,7 +412,33 @@ mod tests {
             clocks: vec![3, 0],
             eps_hat_sq: vec![1e-4, 2e-5],
             history: vec![0.1, 0.01, 0.001],
+            cross: None,
         }
+    }
+
+    /// A cross-round checkpoint with one in-flight payload of every wire
+    /// kind — each must round-trip bit-exactly through its codec.
+    fn sample_cross() -> Checkpoint {
+        let mut rng = crate::util::rng::Rng::new(5);
+        let g: Vec<f32> = (0..24).map(|_| rng.normal() as f32).collect();
+        let (qi, _) = crate::quant::InnovationQuantizer::new(3).quantize(&g, &vec![0.0; 24]);
+        let qs = crate::quant::qsgd::QsgdQuantizer::new(3).quantize(&g, &mut rng);
+        let sp = crate::quant::sparsify::Sparsifier::new(0.25).sparsify(&g, &mut rng);
+        let mut ef = crate::quant::signef::SignEfCompressor::new(24);
+        let sg = ef.compress(&g);
+        let mut ck = sample();
+        ck.wire = Some((WireMode::AsyncCross, 2));
+        ck.cross = Some(CrossCheckpoint {
+            next_deadline: vec![44, 42],
+            pending: vec![
+                PendingCkpt { worker: 0, origin: 41, deadline: 43, payload: Payload::Innovation(qi) },
+                PendingCkpt { worker: 1, origin: 41, deadline: 42, payload: Payload::Dense(g.clone()) },
+                PendingCkpt { worker: 0, origin: 42, deadline: 44, payload: Payload::Qsgd(qs) },
+                PendingCkpt { worker: 1, origin: 42, deadline: 43, payload: Payload::Sparse(sp) },
+                PendingCkpt { worker: 0, origin: 42, deadline: 44, payload: Payload::Sign(sg) },
+            ],
+        });
+        ck
     }
 
     #[test]
@@ -281,6 +505,72 @@ mod tests {
         assert_eq!(back.theta, ck.theta);
         assert_eq!(back.history, ck.history);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cross_checkpoint_roundtrips_every_payload_kind() {
+        let dir = std::env::temp_dir().join("laq_ckpt_test_cross");
+        let path = dir.join("x.ckpt");
+        let ck = sample_cross();
+        ck.write_to(&path).unwrap();
+        let back = Checkpoint::read_from(&path).unwrap();
+        assert_eq!(ck, back);
+        assert_eq!(back.wire, Some((WireMode::AsyncCross, 2)));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Serialize a checkpoint in the v2 layout (wire fields, no cross
+    /// section) — the compat path must read it with `cross: None`.
+    #[test]
+    fn reads_v2_checkpoints_without_cross_section() {
+        let dir = std::env::temp_dir().join("laq_ckpt_test_v2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v2.ckpt");
+        let ck = sample();
+        {
+            let mut w = std::io::BufWriter::new(std::fs::File::create(&path).unwrap());
+            w.write_all(MAGIC_V2).unwrap();
+            w_u64(&mut w, ck.iter).unwrap();
+            w_u64(&mut w, 1).unwrap(); // async
+            w_u64(&mut w, 3).unwrap();
+            w_f32s(&mut w, &ck.theta).unwrap();
+            w_f32s(&mut w, &ck.agg).unwrap();
+            w_u64(&mut w, ck.mirrors.len() as u64).unwrap();
+            for m in &ck.mirrors {
+                w_f32s(&mut w, m).unwrap();
+            }
+            w_u64(&mut w, ck.clocks.len() as u64).unwrap();
+            for &c in &ck.clocks {
+                w_u64(&mut w, c).unwrap();
+            }
+            w_u64(&mut w, ck.eps_hat_sq.len() as u64).unwrap();
+            for &e in &ck.eps_hat_sq {
+                w_f64(&mut w, e).unwrap();
+            }
+            w_u64(&mut w, ck.history.len() as u64).unwrap();
+            for &h in &ck.history {
+                w_f64(&mut w, h).unwrap();
+            }
+        }
+        let back = Checkpoint::read_from(&path).unwrap();
+        assert_eq!(back.cross, None);
+        assert_eq!(back.wire, Some((WireMode::Async, 3)));
+        assert_eq!(back.theta, ck.theta);
+        assert_eq!(back.history, ck.history);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn validate_catches_cross_inconsistency() {
+        let mut ck = sample_cross();
+        ck.cross.as_mut().unwrap().next_deadline.pop();
+        assert!(ck.validate().is_err());
+        let mut ck2 = sample_cross();
+        ck2.cross.as_mut().unwrap().pending[0].worker = 9;
+        assert!(ck2.validate().is_err());
+        let mut ck3 = sample_cross();
+        ck3.cross.as_mut().unwrap().pending[0].deadline = 1; // < origin
+        assert!(ck3.validate().is_err());
     }
 
     #[test]

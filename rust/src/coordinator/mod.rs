@@ -5,7 +5,10 @@
 //! State invariants the tests enforce (`rust/tests/prop_coordinator.rs`):
 //! * **mirror consistency** — for every worker m the server's copy of
 //!   `Q_m(θ̂_m)` equals the worker's, after any pattern of skips/uploads
-//!   (violating this silently corrupts the lazy aggregate `∇^k`);
+//!   (violating this silently corrupts the lazy aggregate `∇^k`); under
+//!   `wire_mode = async-cross` the server's copy legitimately lags while
+//!   an upload is in flight and re-synchronizes bit-exactly at its
+//!   landing round (`rust/tests/staleness_contract.rs`);
 //! * **aggregate identity** — `∇^k = Σ_m Q_m(θ̂_m)` at all times;
 //! * **clock bound** — no worker goes more than `t̄` iterations without
 //!   uploading (criterion (7b));

@@ -295,6 +295,11 @@ pub struct ShardedServer {
     pool: Option<Arc<Pool>>,
     /// retained `||Δθ||²` block partials (see [`DELTA_BLOCK`])
     block_partials: Vec<f64>,
+    /// retained per-worker mirror base pointers for the pipelined
+    /// absorber (rebuilt from `q_mirror` on every call; kept as a field
+    /// only so the async wire phases stay allocation-free in steady
+    /// state — the values are meaningless between calls)
+    mirror_ptrs: Vec<SendPtr<f32>>,
 }
 
 /// Historical name — the sharded server with `shards = 1` *is* the plain
@@ -318,6 +323,7 @@ impl ShardedServer {
             plan: ShardPlan::new(dim, 1),
             pool: None,
             block_partials: vec![0.0; nb],
+            mirror_ptrs: Vec::with_capacity(n_workers),
         }
     }
 
@@ -532,11 +538,13 @@ impl ShardedServer {
         let bits_expected = self.quantizer.bits;
         // raw disjoint-access pointers, captured before the fan-out: agg
         // ranges are disjoint because a shard is absorbed by one runner at
-        // a time; mirror ranges additionally differ per worker
+        // a time; mirror ranges additionally differ per worker.  The base
+        // pointers refill the retained scratch so no step allocates.
         let agg = SendPtr::new(&mut self.agg[..]);
-        let mirror_bases: Vec<SendPtr<f32>> =
-            self.q_mirror.iter_mut().map(|v| SendPtr::new(&mut v[..])).collect();
-        let mirror_bases = &mirror_bases[..];
+        self.mirror_ptrs.clear();
+        self.mirror_ptrs
+            .extend(self.q_mirror.iter_mut().map(|v| SendPtr::new(&mut v[..])));
+        let mirror_bases = &self.mirror_ptrs[..];
         let plan = &self.plan;
         let runner = move |_r: usize| {
             let mut g = sync.state.lock().unwrap();

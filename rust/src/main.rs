@@ -36,7 +36,7 @@ fn print_help() {
         "laq — Lazily Aggregated Quantized Gradients (NeurIPS 2019) reproduction\n\n\
          USAGE: laq <exp|train|list> [OPTIONS]\n\n\
          laq exp   --id <fig3|fig4|fig5|fig6|fig7|fig8|table2|table3|prop1> [--full] [--backend native|pjrt] [--out DIR] [--seed N]\n\
-         laq train --algo <gd|qgd|lag|laq|sgd|qsgd|ssgd|slaq|efsgd> [--model logreg|mlp] [--config FILE] [--iters N] [--alpha A] [--bits B] [--threads T] [--server-shards S] [--wire-mode sync|async] [--staleness-bound K] [--backend native|pjrt]\n\
+         laq train --algo <gd|qgd|lag|laq|sgd|qsgd|ssgd|slaq|efsgd> [--model logreg|mlp] [--config FILE] [--iters N] [--alpha A] [--bits B] [--threads T] [--server-shards S] [--wire-mode sync|async|async-cross] [--staleness-bound K] [--backend native|pjrt]\n\
          laq list\n"
     );
 }
@@ -108,8 +108,8 @@ fn train_spec() -> Vec<ArgSpec> {
         ArgSpec { name: "workers", help: "worker count", default: None, is_switch: false },
         ArgSpec { name: "threads", help: "worker fan-out: 1=sequential, 0=auto, N=pool size", default: None, is_switch: false },
         ArgSpec { name: "server-shards", help: "server θ-shards: 1=single, 0=auto, S=fixed", default: None, is_switch: false },
-        ArgSpec { name: "wire-mode", help: "wire phase: sync (reference) | async (pipelined)", default: None, is_switch: false },
-        ArgSpec { name: "staleness-bound", help: "async absorb reorder window (0 = keep index order)", default: None, is_switch: false },
+        ArgSpec { name: "wire-mode", help: "wire phase: sync (reference) | async (pipelined) | async-cross (cross-round staleness)", default: None, is_switch: false },
+        ArgSpec { name: "staleness-bound", help: "async: absorb reorder window (positions); async-cross: max upload lag (rounds); 0 = sync order", default: None, is_switch: false },
         ArgSpec { name: "backend", help: "native|pjrt", default: Some("native"), is_switch: false },
         ArgSpec { name: "dataset", help: "mnist|ijcnn1|covtype", default: None, is_switch: false },
         ArgSpec { name: "out", help: "trace output dir", default: Some("results/train"), is_switch: false },

@@ -243,56 +243,6 @@ impl Pool {
         }
     }
 
-    /// Streaming / completion-order variant of [`Self::run_indexed`]: post
-    /// `n` jobs and return immediately with a [`StreamGuard`]; the pool's
-    /// threads claim jobs in `order` (a permutation of `0..n`; `None` =
-    /// index order) and the **caller does not participate** — it is free
-    /// to consume results concurrently as the jobs publish them (the async
-    /// wire phase's coordinator absorbs uploads while later workers are
-    /// still computing).  Completion is observed out-of-band by the jobs
-    /// themselves (e.g. an atomic readiness flag per index); the guard
-    /// only provides the final join.
-    ///
-    /// The borrows of `f` and `order` are lifetime-erased exactly like
-    /// [`Self::run_indexed`]'s; soundness comes from the guard joining the
-    /// whole batch before it is dropped.  Leaking the guard
-    /// (`std::mem::forget`) would break that contract — don't.
-    pub fn stream_indexed<'a>(
-        &'a self,
-        n: usize,
-        order: Option<&'a [usize]>,
-        f: &'a (dyn Fn(usize) + Sync),
-    ) -> StreamGuard<'a> {
-        if let Some(o) = order {
-            assert_eq!(o.len(), n, "claim order must cover every job");
-        }
-        // SAFETY: StreamGuard joins the batch before 'a ends (join or Drop)
-        let f_static: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f) };
-        let batch = Box::new(UnsafeCell::new(Batch {
-            f: f_static as *const (dyn Fn(usize) + Sync),
-            n,
-            next: 0,
-            order: order.map_or(std::ptr::null(), |o| o.as_ptr()),
-            remaining: n,
-            panic: None,
-        }));
-        let guard = StreamGuard {
-            inner: &*self.inner,
-            batch,
-            joined: n == 0,
-            _marker: std::marker::PhantomData,
-        };
-        if n > 0 {
-            let bp = BatchPtr(guard.batch.get());
-            {
-                let mut st = self.inner.state.lock().unwrap();
-                st.queue.push_back(bp);
-            }
-            self.inner.work_cv.notify_all();
-        }
-        guard
-    }
-
     /// Run `f(i)` for each i in 0..n, collecting results in index order.
     /// Blocks until all complete.  Allocates the result vector (use
     /// [`Self::run_indexed`] with retained slots on allocation-free paths).
@@ -315,20 +265,121 @@ impl Pool {
     }
 }
 
-/// A posted-but-not-yet-joined fan-out from [`Pool::stream_indexed`].
-/// The batch descriptor is heap-held so the pool's queue pointer stays
-/// valid if the guard moves.  Joining (explicitly via [`Self::join`], or
-/// implicitly on drop) blocks until every job has finished and re-raises
-/// the first job panic; that join is what makes the lifetime-erased
-/// borrows of the job closure and claim order sound.
-pub struct StreamGuard<'a> {
-    inner: &'a Inner,
+/// A **retained, reusable** stream-batch descriptor: a streaming /
+/// completion-order counterpart to [`Pool::run_indexed`] whose heap
+/// descriptor is allocated once, owned by the caller (the trainer keeps
+/// one across `step` calls; it outlives any single step), and refilled in
+/// place by every [`Self::post`] — so a hot loop posts a streaming
+/// fan-out every iteration with **zero steady-state allocation**.
+///
+/// `post` publishes `n` jobs which the pool's threads claim in a given
+/// order while the **caller does not participate** — it is free to
+/// consume results concurrently as the jobs publish them out-of-band
+/// (e.g. an atomic readiness flag per index; the async wire phase's
+/// coordinator absorbs uploads while later workers are still computing).
+/// The returned [`BatchGuard`]'s join (explicit or on drop) blocks until
+/// every job finished.  The guard mutably borrows the `StreamBatch`, so a
+/// second post before the previous join is a compile error, and the
+/// lifetime-erased borrows of `f`/`order` are sound by the same
+/// join-before-return discipline as the rest of this module.  Leaking the
+/// guard (`std::mem::forget`) breaks that contract — don't.
+pub struct StreamBatch {
+    /// heap-held so the queue's pointer stays valid wherever the owning
+    /// struct moves between posts
     batch: Box<UnsafeCell<Batch>>,
-    joined: bool,
-    _marker: std::marker::PhantomData<&'a ()>,
 }
 
-impl StreamGuard<'_> {
+/// SAFETY: the erased `f`/`order` pointers inside are only dereferenced
+/// by pool threads between a `post` and its guard's join — a window in
+/// which the borrowed closure's frame is pinned by the guard.  Between
+/// windows the batch is retired (`remaining == 0`, not in any queue) and
+/// the stale pointers are never read, so moving the descriptor across
+/// threads is sound.
+unsafe impl Send for StreamBatch {}
+
+fn noop_job(_: usize) {}
+
+impl Default for StreamBatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StreamBatch {
+    pub fn new() -> Self {
+        // inert placeholder: a retired batch (n == 0) is never claimed,
+        // so this pointer is replaced by the first post before any deref
+        let noop: &'static (dyn Fn(usize) + Sync) = &noop_job;
+        Self {
+            batch: Box::new(UnsafeCell::new(Batch {
+                f: noop as *const (dyn Fn(usize) + Sync),
+                n: 0,
+                next: 0,
+                order: std::ptr::null(),
+                remaining: 0,
+                panic: None,
+            })),
+        }
+    }
+
+    /// Post `n` jobs onto `pool` through this retained descriptor; the
+    /// pool's threads claim them in `order` (a permutation of `0..n`;
+    /// `None` = index order) while the caller is free to consume results
+    /// out-of-band.  No per-post heap allocation.
+    pub fn post<'a>(
+        &'a mut self,
+        pool: &'a Pool,
+        n: usize,
+        order: Option<&'a [usize]>,
+        f: &'a (dyn Fn(usize) + Sync),
+    ) -> BatchGuard<'a> {
+        if let Some(o) = order {
+            assert_eq!(o.len(), n, "claim order must cover every job");
+        }
+        {
+            // SAFETY: &mut self guarantees no guard is alive, and a
+            // retired batch (remaining == 0) is in no queue — we are the
+            // only referent.
+            let b = unsafe { &mut *self.batch.get() };
+            assert_eq!(b.remaining, 0, "previous post not joined");
+            // SAFETY: the returned guard joins the batch before 'a ends
+            // (join or Drop), so the borrow of `f` cannot outlive it.
+            let f_static: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f) };
+            *b = Batch {
+                f: f_static as *const (dyn Fn(usize) + Sync),
+                n,
+                next: 0,
+                order: order.map_or(std::ptr::null(), |o| o.as_ptr()),
+                remaining: n,
+                panic: None,
+            };
+        }
+        let guard = BatchGuard {
+            inner: &*pool.inner,
+            batch: &*self.batch,
+            joined: n == 0,
+        };
+        if n > 0 {
+            let bp = BatchPtr(guard.batch.get());
+            {
+                let mut st = pool.inner.state.lock().unwrap();
+                st.queue.push_back(bp);
+            }
+            pool.inner.work_cv.notify_all();
+        }
+        guard
+    }
+}
+
+/// The in-flight half of a [`StreamBatch::post`] — joins the batch on
+/// [`Self::join`] or on drop, re-raising the first job panic.
+pub struct BatchGuard<'a> {
+    inner: &'a Inner,
+    batch: &'a UnsafeCell<Batch>,
+    joined: bool,
+}
+
+impl BatchGuard<'_> {
     fn join_inner(&mut self) -> Option<Box<dyn std::any::Any + Send>> {
         if self.joined {
             return None;
@@ -337,7 +388,7 @@ impl StreamGuard<'_> {
         let bp = self.batch.get();
         let mut guard = self.inner.state.lock().unwrap();
         // SAFETY: batch pointers are only dereferenced under the pool
-        // mutex; the box outlives this guard
+        // mutex; the retained descriptor outlives this guard
         while unsafe { &*bp }.remaining > 0 {
             guard = self.inner.done_cv.wait(guard).unwrap();
         }
@@ -357,11 +408,10 @@ impl StreamGuard<'_> {
     }
 }
 
-impl Drop for StreamGuard<'_> {
+impl Drop for BatchGuard<'_> {
     fn drop(&mut self) {
         let p = self.join_inner();
         if let Some(p) = p {
-            // re-raise unless we are already unwinding (double panic aborts)
             if !std::thread::panicking() {
                 std::panic::resume_unwind(p);
             }
@@ -404,6 +454,12 @@ pub struct SendPtr<T>(*mut T);
 
 unsafe impl<T: Send> Send for SendPtr<T> {}
 unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+impl<T> std::fmt::Debug for SendPtr<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "SendPtr({:p})", self.0)
+    }
+}
 
 impl<T> Clone for SendPtr<T> {
     fn clone(&self) -> Self {
@@ -615,50 +671,17 @@ mod tests {
     }
 
     #[test]
-    fn stream_indexed_runs_all_jobs_and_joins() {
-        let pool = Pool::new(3);
-        let hits: Vec<AtomicUsize> = (0..32).map(|_| AtomicUsize::new(0)).collect();
-        {
-            let f = |i: usize| {
-                hits[i].fetch_add(1, Ordering::SeqCst);
-            };
-            let guard = pool.stream_indexed(32, None, &f);
-            guard.join();
-        }
-        for (i, h) in hits.iter().enumerate() {
-            assert_eq!(h.load(Ordering::SeqCst), 1, "index {i}");
-        }
-        // zero jobs: the guard joins trivially
-        pool.stream_indexed(0, None, &|_| unreachable!()).join();
-    }
-
-    #[test]
-    fn stream_indexed_claims_in_the_given_order() {
-        // one pool thread claiming sequentially must start jobs exactly in
-        // the permuted order
-        let pool = Pool::new(1);
-        let seen = std::sync::Mutex::new(Vec::new());
-        let order = [3usize, 0, 2, 1];
-        {
-            let f = |i: usize| {
-                seen.lock().unwrap().push(i);
-            };
-            pool.stream_indexed(4, Some(&order[..]), &f).join();
-        }
-        assert_eq!(*seen.lock().unwrap(), vec![3, 0, 2, 1]);
-    }
-
-    #[test]
-    fn stream_guard_drop_joins_and_caller_overlaps() {
+    fn stream_batch_caller_overlaps_while_pool_works() {
         // the posting thread consumes published results while the pool is
         // still working — the async wire phase's shape
         let pool = Pool::new(2);
+        let mut batch = StreamBatch::new();
         let done: Vec<AtomicUsize> = (0..16).map(|_| AtomicUsize::new(0)).collect();
         {
             let f = |i: usize| {
                 done[i].store(1, Ordering::Release);
             };
-            let _guard = pool.stream_indexed(16, None, &f);
+            let _guard = batch.post(&pool, 16, None, &f);
             // consume completions out-of-band (spin; jobs are trivial)
             let mut consumed = 0;
             while consumed < 16 {
@@ -671,22 +694,65 @@ mod tests {
             // guard dropped here: implicit join
         }
         assert!(done.iter().all(|d| d.load(Ordering::SeqCst) == 1));
+        // the pool itself survives and keeps serving
+        assert_eq!(pool.scatter(3, |i| i + 1), vec![1, 2, 3]);
     }
 
     #[test]
-    fn stream_indexed_propagates_panics_on_join() {
+    fn stream_batch_is_reusable_across_posts() {
+        // the retained descriptor is the zero-alloc engine behind the
+        // async wire phases: one allocation at construction, then any
+        // number of post/join cycles refill it in place
+        let pool = Pool::new(3);
+        let mut batch = StreamBatch::new();
+        for round in 0..5usize {
+            let hits: Vec<AtomicUsize> = (0..16).map(|_| AtomicUsize::new(0)).collect();
+            {
+                let f = |i: usize| {
+                    hits[i].fetch_add(round + 1, Ordering::SeqCst);
+                };
+                batch.post(&pool, 16, None, &f).join();
+            }
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), round + 1, "round {round} index {i}");
+            }
+        }
+        // zero jobs joins trivially and the batch stays reusable
+        batch.post(&pool, 0, None, &|_| unreachable!()).join();
+        let seen = std::sync::Mutex::new(Vec::new());
+        let order = [2usize, 0, 1];
+        {
+            let single = Pool::new(1);
+            let f = |i: usize| seen.lock().unwrap().push(i);
+            batch.post(&single, 3, Some(&order[..]), &f).join();
+        }
+        assert_eq!(*seen.lock().unwrap(), vec![2, 0, 1]);
+    }
+
+    #[test]
+    fn stream_batch_guard_drop_joins_and_propagates_panics() {
         let pool = Pool::new(2);
+        let mut batch = StreamBatch::new();
+        let done: Vec<AtomicUsize> = (0..8).map(|_| AtomicUsize::new(0)).collect();
+        {
+            let f = |i: usize| {
+                done[i].store(1, Ordering::Release);
+            };
+            let _guard = batch.post(&pool, 8, None, &f);
+            // guard dropped here: implicit join
+        }
+        assert!(done.iter().all(|d| d.load(Ordering::SeqCst) == 1));
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             let f = |i: usize| {
-                if i == 3 {
-                    panic!("stream boom");
+                if i == 1 {
+                    panic!("batch boom");
                 }
             };
-            pool.stream_indexed(8, None, &f).join();
+            batch.post(&pool, 4, None, &f).join();
         }));
         assert!(result.is_err(), "job panic must reach the joining caller");
-        // pool survives
-        assert_eq!(pool.scatter(3, |i| i + 1), vec![1, 2, 3]);
+        // the batch recovered and keeps serving
+        batch.post(&pool, 2, None, &|_| {}).join();
     }
 
     #[test]

@@ -65,10 +65,10 @@ fn laq_cfg(
     c.iters = 1000; // stepped manually
     c.threads = threads;
     c.server_shards = shards;
-    // the zero-alloc contract pins the *sync* hot path; the async engine
-    // allocates its per-step stream-batch descriptor by design, so pin
-    // the mode here rather than inherit a LAQ_WIRE_MODE env default
+    // pin the schedule regardless of the LAQ_WIRE_MODE env default; the
+    // async legs below re-set this explicitly
     c.wire_mode = laq::config::WireMode::Sync;
+    c.staleness_bound = 0;
     c
 }
 
@@ -127,4 +127,38 @@ fn laq_step_is_allocation_free_after_warmup() {
     slaq.batch = 80; // 20 rows/worker (shards hold 50)
     let n = count_steps(&slaq, 30, 40);
     assert_eq!(n, 0, "SLAQ step allocated {n} times after warmup");
+
+    // async wire path: the worker fan-out now posts through a retained
+    // StreamBatch (no per-step descriptor box) and the pipelined
+    // absorber's mirror base pointers refill a server-retained scratch —
+    // the whole three-lane pipeline is allocation-free, at staleness 0
+    // (bit-identical-to-sync schedule) and under genuine reordering
+    for staleness in [0usize, 2] {
+        let mut a = laq_cfg("mnist", 240, 2, 2);
+        a.wire_mode = laq::config::WireMode::Async;
+        a.staleness_bound = staleness;
+        let n = count_steps(&a, 30, 40);
+        assert_eq!(
+            n, 0,
+            "async(staleness={staleness}) LAQ step allocated {n} times after warmup"
+        );
+    }
+
+    // cross-round staleness: deferred uploads park in pre-warmed
+    // per-(worker, round) wire-slot rings and the in-flight bookkeeping
+    // (lags, deadlines, pending list) refills retained buffers — still
+    // zero allocations per step
+    let mut x = laq_cfg("mnist", 240, 2, 2);
+    x.wire_mode = laq::config::WireMode::AsyncCross;
+    x.staleness_bound = 2;
+    let n = count_steps(&x, 30, 40);
+    assert_eq!(n, 0, "async-cross LAQ step allocated {n} times after warmup");
+
+    // the sequential (threads=1) async-cross engine shares the same
+    // retained state
+    let mut xs = laq_cfg("ijcnn1", 200, 1, 1);
+    xs.wire_mode = laq::config::WireMode::AsyncCross;
+    xs.staleness_bound = 2;
+    let n = count_steps(&xs, 30, 40);
+    assert_eq!(n, 0, "sequential async-cross LAQ step allocated {n} times after warmup");
 }

@@ -36,11 +36,77 @@ fn mirror_consistency_under_all_algorithms() {
         for _ in 0..cfg.iters {
             t.step().map_err(|e| e.to_string())?;
             for m in 0..t.n_workers() {
+                // under async-cross an in-flight upload makes the server
+                // mirror legitimately lag the worker's until its landing
+                // round; the lock-step contract applies whenever nothing
+                // is in flight (always, under the other wire modes)
+                if t.worker_in_flight(m) {
+                    continue;
+                }
                 prop_assert!(
                     t.worker_mirror(m) == t.server_mirror(m),
                     "mirror drift on {} worker {m}",
                     cfg.algo.name()
                 );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn landing_schedule_is_a_bounded_reorder_permutation() {
+    // the async wire phase's intra-round landing order: for any
+    // (seed, M, bound), a valid permutation with |π(m) − m| ≤ bound
+    Prop::with_cases(150).check("landing order bounded permutation", |rng| {
+        let n = 1 + rng.below(40) as usize;
+        let bound = rng.below(n as u64 + 3) as usize;
+        let keys: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+        let (mut win, mut out) = (Vec::new(), Vec::new());
+        laq::algo::landing_order(&keys, bound, &mut win, &mut out);
+        let mut sorted = out.clone();
+        sorted.sort_unstable();
+        prop_assert!(
+            sorted == (0..n).collect::<Vec<_>>(),
+            "not a permutation of 0..{n} (bound {bound}): {out:?}"
+        );
+        for (pos, &m) in out.iter().enumerate() {
+            let d = pos.abs_diff(m);
+            prop_assert!(
+                d <= bound,
+                "worker {m} displaced {d} > bound {bound} (pos {pos})"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cross_round_lag_rule_is_bounded_fifo_and_pure() {
+    // the cross-round landing rule: per-(seed, worker, round) lags stay
+    // within the bound, deadlines are monotone per worker (FIFO channel)
+    // and never stray outside [round, round + bound], and the whole
+    // schedule is a pure function of its inputs
+    Prop::with_cases(150).check("cross-round lag rule", |rng| {
+        let lat = laq::comm::LatencyModel::default();
+        let seed = rng.next_u64();
+        let m_all = 1 + rng.below(8) as usize;
+        let bound = rng.below(6) as usize;
+        let rounds = 5 + rng.below(60) as usize;
+        let mut prev = vec![0usize; m_all];
+        for k in 0..rounds {
+            for (m, prev_m) in prev.iter_mut().enumerate() {
+                let lag = lat.round_lag(seed, m as u64, k as u64, bound);
+                prop_assert!(lag <= bound, "lag {lag} > bound {bound}");
+                prop_assert!(
+                    lag == lat.round_lag(seed, m as u64, k as u64, bound),
+                    "round_lag is not a pure function"
+                );
+                let d = laq::algo::cross_deadline(*prev_m, k, lag);
+                prop_assert!(d >= k, "deadline {d} before round {k}");
+                prop_assert!(d <= k + bound, "deadline {d} > {k} + {bound}");
+                prop_assert!(d >= *prev_m, "FIFO violated: {d} < {}", *prev_m);
+                *prev_m = d;
             }
         }
         Ok(())

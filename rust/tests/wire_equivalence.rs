@@ -3,8 +3,10 @@
 //! * **sync regression** — `wire_mode = sync` is the pre-existing
 //!   schedule; its traces must never drift.  A self-seeding golden
 //!   fingerprint file pins all nine algorithms across future changes
-//!   (first run records, later runs assert), and the sync-vs-async(0)
-//!   test below ties the async engine to the same arithmetic.
+//!   (first run records, later runs assert; it also fingerprints the
+//!   async(2) and async-cross(2) engines, whose traces are equally pure
+//!   functions of (seed, config)), and the sync-vs-async(0) test below
+//!   ties the async engine to the same arithmetic.
 //! * **degeneration** — `wire_mode = async, staleness_bound = 0` absorbs
 //!   in worker index order through the pipelined machinery, so it must be
 //!   **bit-identical** to sync for all nine algorithms, at any
@@ -217,28 +219,55 @@ fn fingerprint(t: &Trace) -> u64 {
     h
 }
 
-/// Cross-PR regression guard for the sync schedule: the first run in a
-/// fresh checkout records `tests/golden_sync_traces.txt`; every later run
-/// (including the CI matrix's other env legs) must reproduce it
-/// bit-for-bit.  If a PR changes these traces intentionally, delete the
-/// file and let the suite re-seed it — and say so in the PR.
+/// Cross-PR regression guard for the deterministic wire schedules: the
+/// first run in a fresh checkout records `tests/golden_sync_traces.txt`;
+/// every later run (including the CI matrix's other env legs) must
+/// reproduce it bit-for-bit.  Covers the sync schedule AND the async /
+/// async-cross engines at staleness 2 — the reordered/deferred traces
+/// are pure functions of (seed, config), so they fingerprint just as
+/// stably as sync's.  On mismatch the assert names the diverged lines
+/// and prints the regeneration recipe instead of dumping two blobs.
 #[test]
-fn sync_trace_fingerprints_are_stable() {
+fn wire_trace_fingerprints_are_stable() {
     let path =
         std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden_sync_traces.txt");
     let mut lines = Vec::new();
-    for algo in Algo::all() {
-        let t = run_trace(&cfg_for(algo, WireMode::Sync, 0, 1, 1));
-        lines.push(format!("{} {:016x}", algo.name(), fingerprint(&t)));
+    for (label, wire, staleness) in [
+        ("sync", WireMode::Sync, 0usize),
+        ("async2", WireMode::Async, 2),
+        ("async-cross2", WireMode::AsyncCross, 2),
+    ] {
+        for algo in Algo::all() {
+            let t = run_trace(&cfg_for(algo, wire, staleness, 1, 1));
+            lines.push(format!("{label} {} {:016x}", algo.name(), fingerprint(&t)));
+        }
     }
     let current = lines.join("\n") + "\n";
     match std::fs::read_to_string(&path) {
-        Ok(golden) => assert_eq!(
-            golden,
-            current,
-            "sync traces diverged from the recorded goldens in {}",
-            path.display()
-        ),
+        Ok(golden) => {
+            if golden != current {
+                let mut diverged = Vec::new();
+                let (old, new): (Vec<&str>, Vec<&str>) =
+                    (golden.lines().collect(), current.lines().collect());
+                for i in 0..old.len().max(new.len()) {
+                    let o = old.get(i).copied().unwrap_or("<missing>");
+                    let n = new.get(i).copied().unwrap_or("<missing>");
+                    if o != n {
+                        diverged.push(format!("  line {}: recorded `{o}` vs current `{n}`", i + 1));
+                    }
+                }
+                panic!(
+                    "wire traces diverged from the recorded goldens in {}:\n{}\n\
+                     If this change is intentional (an algorithm/schedule/codec\n\
+                     change that legitimately moves the traces), regenerate with:\n\
+                     \n    rm {}\n    cargo test -q wire_trace_fingerprints\n\
+                     \nand call the re-seed out in the PR description.",
+                    path.display(),
+                    diverged.join("\n"),
+                    path.display(),
+                );
+            }
+        }
         Err(_) => std::fs::write(&path, &current).expect("seed the golden trace file"),
     }
 }
