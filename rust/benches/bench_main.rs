@@ -21,7 +21,7 @@
 
 use laq::algo::{build_native, Trainer};
 use laq::comm::{LatencyModel, Payload};
-use laq::config::{Algo, ModelKind, RunCfg, WireMode};
+use laq::config::{Algo, BitScheduleKind, ModelKind, RunCfg, WireMode};
 use laq::coordinator::worker::{LazyCodec, WorkerNode};
 use laq::coordinator::ServerState;
 use laq::experiments::{self, ExpOpts};
@@ -443,6 +443,73 @@ fn bench_trainer_wire(quick: bool, entries: &mut Vec<Json>) {
     }
 }
 
+/// Tentpole bench: the dial-a-bit win — total uploaded bits and final
+/// loss at a matched round count, fixed b=3 vs the adaptive schedules
+/// over the strongly convex logreg benchmark.  The `innovation` policy
+/// must land near the fixed final loss on strictly fewer bits (the
+/// framed layout costs each message 8 header bits, so the saving comes
+/// from genuinely narrower uploads).  Emits the `trainer_bits` group
+/// into BENCH_trainer.json.
+fn bench_bit_schedules(quick: bool, entries: &mut Vec<Json>) {
+    println!("\n== dial-a-bit: uploaded bits at matched round count (LAQ logreg, sync) ==");
+    let iters = if quick { 150 } else { 400 };
+    println!("   (mnist-like p=7840, M=4, {iters} rounds, fixed b=3 vs adaptive [2,3])");
+    let mut fixed_bits_total = 0u64;
+    let mut fixed_loss = f64::NAN;
+    for (label, kind, bmin, bmax) in [
+        ("fixed-b3", BitScheduleKind::Fixed, 3u32, 3u32),
+        ("round-decay-2-3", BitScheduleKind::RoundDecay, 2, 3),
+        ("innovation-2-3", BitScheduleKind::Innovation, 2, 3),
+    ] {
+        let mut cfg = RunCfg::paper_logreg(Algo::Laq);
+        cfg.data.n_train = 240;
+        cfg.data.n_test = 60;
+        cfg.workers = 4;
+        cfg.threads = 1;
+        cfg.server_shards = 1;
+        cfg.wire_mode = WireMode::Sync;
+        cfg.staleness_bound = 0;
+        cfg.bits = 3;
+        cfg.bit_schedule = kind;
+        cfg.bits_min = bmin;
+        cfg.bits_max = bmax;
+        cfg.iters = iters;
+        let mut t = build_native(&cfg).unwrap();
+        let t0 = Instant::now();
+        let mut last_loss = f64::NAN;
+        for _ in 0..iters {
+            last_loss = t.step().unwrap().loss;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let bits = t.net.uplink_bits();
+        let rounds = t.net.uplink_rounds();
+        println!(
+            "{label:<20} rounds {rounds:>5}  bits {bits:>12}  final loss {last_loss:.6e}  ({wall:.2}s)"
+        );
+        if kind == BitScheduleKind::Fixed {
+            fixed_bits_total = bits;
+            fixed_loss = last_loss;
+        } else if fixed_bits_total > 0 {
+            println!(
+                "{:<20} {:.3}× the fixed bit budget, loss Δ {:+.2e}",
+                format!("  -> {label}"),
+                bits as f64 / fixed_bits_total as f64,
+                last_loss - fixed_loss
+            );
+        }
+        entries.push(Json::obj(vec![
+            ("group", Json::Str("trainer_bits".into())),
+            ("bench", Json::Str(format!("laq_{label}"))),
+            ("schedule", Json::Str(label.into())),
+            ("iters", Json::Num(iters as f64)),
+            ("rounds", Json::Num(rounds as f64)),
+            ("total_bits", Json::Num(bits as f64)),
+            ("final_loss", Json::Num(last_loss)),
+            ("wall_s", Json::Num(wall)),
+        ]));
+    }
+}
+
 fn write_trainer_json(entries: Vec<Json>) {
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let doc = Json::obj(vec![
@@ -519,9 +586,10 @@ fn main() {
     let mut trainer_entries: Vec<Json> = Vec::new();
     let t0 = Instant::now();
     if quick {
-        println!("LAQ bench harness — QUICK smoke (sharded server + trainer wire groups)");
+        println!("LAQ bench harness — QUICK smoke (sharded server + trainer wire/bits groups)");
         bench_server_sharded(true, &mut entries);
         bench_trainer_wire(true, &mut trainer_entries);
+        bench_bit_schedules(true, &mut trainer_entries);
     } else {
         println!("LAQ bench harness (offline substitute for criterion)");
         bench_codecs();
@@ -531,6 +599,7 @@ fn main() {
         bench_parallel_fanout(&mut entries);
         bench_server_sharded(false, &mut entries);
         bench_trainer_wire(false, &mut trainer_entries);
+        bench_bit_schedules(false, &mut trainer_entries);
         bench_experiments();
     }
     write_bench_json(entries);

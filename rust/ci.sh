@@ -16,10 +16,14 @@
 # in rust/tests/staleness_contract.rs, which runs in every leg with its
 # own pinned wire modes.
 #
-# A quick-mode bench smoke run then emits BENCH_server.json (sharded
-# absorb/apply p50/p99 over shard × dim sweeps) and BENCH_trainer.json
-# (end-to-end step throughput, sync vs async wire phase over M × p) so
-# the perf trajectory is machine-readable from every CI run.
+# A rustdoc pass with warnings denied keeps the documentation layer
+# (README/ARCHITECTURE pointers, intra-doc links, # Errors sections)
+# from bit-rotting.  A quick-mode bench smoke run then emits
+# BENCH_server.json (sharded absorb/apply p50/p99 over shard × dim
+# sweeps) and BENCH_trainer.json (end-to-end step throughput, sync vs
+# async wire phase over M × p, plus the trainer_bits fixed-vs-adaptive
+# bit-budget sweep) so the perf trajectory is machine-readable from
+# every CI run.
 #
 # Usage: rust/ci.sh   (from the repo root or from rust/)
 set -euo pipefail
@@ -38,6 +42,9 @@ cargo build --release
 
 echo "== examples build (keeps examples/*.rs from bit-rotting) =="
 cargo build --examples
+
+echo "== rustdoc, warnings denied (broken intra-doc links fail the build) =="
+RUSTDOCFLAGS="--deny warnings" cargo doc --no-deps --quiet
 
 echo "== tests, fully sequential (LAQ_THREADS=1 LAQ_SHARDS=1) =="
 LAQ_THREADS=1 LAQ_SHARDS=1 cargo test -q

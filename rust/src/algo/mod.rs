@@ -52,7 +52,8 @@
 //! **Async**: the three lanes overlap.  Each worker's pool job runs its
 //! local phase, round-trips its own payload through its wire slot, and
 //! publishes a readiness flag; the **pipelined absorber**
-//! ([`ServerState::absorb_pipelined`]) consumes decoded payloads per
+//! ([`crate::coordinator::server::ShardedServer::absorb_pipelined`])
+//! consumes decoded payloads per
 //! θ-shard while later workers are still computing, the coordinator and
 //! the shard pool acting as absorber runners.  Step latency then tracks
 //! `max(local, wire+absorb)` instead of their sum — the win grows with M
@@ -126,6 +127,25 @@
 //! wall-clock knobs: threads scale with the worker count M, shards with
 //! the parameter dimension p.
 //!
+//! # Adaptive bit-widths (the "dial-a-bit" schedule)
+//!
+//! `cfg.bit_schedule` turns the innovation codec's width from a session
+//! constant into per-(worker, round) state (see
+//! [`crate::quant::schedule`]): before each round's fan-out the
+//! coordinator asks the schedule for every worker's transmit width
+//! (shaping that round's quantization grids), and after the wire phase it
+//! folds the round's criterion outcomes back into the schedule's
+//! per-worker state — both on the coordinator in worker index order, so
+//! the width sequence is a pure function of (seed, config) like the wire
+//! landing schedules.  Adaptive sessions transmit the self-describing
+//! framed innovation layout (width rides in each message and is billed;
+//! see [`crate::comm`]), the server dequantizes every upload — including
+//! parked async-cross in-flight ones — at its own landing width, and
+//! checkpoints persist the schedule state (v4).  `bit_schedule = fixed`
+//! keeps the paper's layout and stays bit-identical to the pre-schedule
+//! trainer (goldens in `rust/tests/wire_equivalence.rs`); the adaptive
+//! contracts live in `rust/tests/bit_schedule.rs`.
+//!
 //! # Steady-state allocation
 //!
 //! For the lazy full-gradient algorithms (LAQ above all) the whole step —
@@ -143,7 +163,7 @@ pub use build::{build, build_native, build_pjrt};
 use std::sync::atomic::{AtomicU8, Ordering};
 
 use crate::comm::{LatencyModel, Network, Payload, WireSlot};
-use crate::config::{Algo, RunCfg, WireMode};
+use crate::config::{Algo, BitScheduleKind, RunCfg, WireMode};
 use crate::coordinator::server::{WireSync, WIRE_PENDING, WIRE_SKIP, WIRE_UPLOAD};
 use crate::coordinator::worker::{LazyCodec, LazyDecision, WorkerNode};
 use crate::coordinator::ServerState;
@@ -151,6 +171,9 @@ use crate::data::shard::Batcher;
 use crate::metrics::{RunResult, TracePoint};
 use crate::model::WorkerGrad;
 use crate::quant::qsgd::QsgdQuantizer;
+use crate::quant::schedule::{
+    BitSchedule, FixedBits, InnovationAdaptive, RoundDecay, WorkerBitState,
+};
 use crate::quant::signef::SignEfCompressor;
 use crate::quant::sparsify::Sparsifier;
 use crate::util::rng::Rng;
@@ -208,6 +231,14 @@ pub struct Trainer {
     /// cross-round wire mode: in-flight rings + deadline clamps (retained;
     /// inert unless `cfg.wire_mode == WireMode::AsyncCross`)
     cross: CrossState,
+    /// per-(worker, round) transmit-width policy (the "dial-a-bit" knob;
+    /// [`FixedBits`] at `cfg.bits` unless an adaptive schedule is on)
+    schedule: Box<dyn BitSchedule>,
+    /// per-worker adaptive-width state, folded on the coordinator in
+    /// worker index order (persisted in v4 checkpoints)
+    bit_states: Vec<WorkerBitState>,
+    /// this round's chosen transmit width per worker, refilled in place
+    widths: Vec<u32>,
 }
 
 /// Retained state of the async wire phase: the per-step deterministic
@@ -334,16 +365,29 @@ struct PendingUpload {
 }
 
 impl CrossState {
-    fn new(cfg: &RunCfg, n_workers: usize, dim: usize, warm_quantized: bool) -> Self {
+    /// `warm_bits` is the largest width the bit schedule can choose (the
+    /// ring buffers are pre-sized for it) and `framed` selects the
+    /// self-describing innovation framing for the parked round trips —
+    /// both must match the network's wire slots so a deferred upload
+    /// crosses the identical wire as a prompt one.
+    fn new(
+        cfg: &RunCfg,
+        n_workers: usize,
+        dim: usize,
+        warm_quantized: bool,
+        warm_bits: u32,
+        framed: bool,
+    ) -> Self {
         let on = cfg.wire_mode == WireMode::AsyncCross;
         let depth = if on { cfg.staleness_bound + 1 } else { 1 };
         let mut slots = Vec::new();
         if on {
             slots = (0..n_workers * depth).map(|_| WireSlot::default()).collect();
-            if warm_quantized {
-                for s in slots.iter_mut() {
-                    s.warm_innovation(dim, cfg.bits);
+            for s in slots.iter_mut() {
+                if warm_quantized {
+                    s.warm_innovation(dim, warm_bits);
                 }
+                s.set_framed(framed);
             }
         }
         Self {
@@ -384,14 +428,30 @@ impl Trainer {
             theta0,
         );
         server.set_shards(cfg.server_shards);
+        // the dial-a-bit policy: fixed keeps the paper's constant width
+        // (and its wire layout, bit-identically); adaptive schedules
+        // widen the server's accepted range and switch the session to the
+        // self-describing framed innovation layout
+        let schedule = build_bit_schedule(&cfg);
+        let framed = !schedule.is_fixed();
+        server.set_bit_range(schedule.min_width(), schedule.max_width());
         let mut net = Network::new(nodes.len(), latency);
+        net.set_framed(framed);
         let warm_quantized = lazy_codec_for(cfg.algo) == Some(LazyCodec::Quantized);
         if warm_quantized {
             // every slot's first innovation round trip is allocation-free,
-            // even for workers that stay silent through the warmup
-            net.warm_slots_innovation(dim, cfg.bits);
+            // even for workers that stay silent through the warmup —
+            // pre-sized for the widest message the schedule can choose
+            net.warm_slots_innovation(dim, schedule.max_width());
         }
-        let cross = CrossState::new(&cfg, nodes.len(), dim, warm_quantized);
+        let cross = CrossState::new(
+            &cfg,
+            nodes.len(),
+            dim,
+            warm_quantized,
+            schedule.max_width(),
+            framed,
+        );
         let batchers = if cfg.algo.is_stochastic() {
             let per = cfg.batch / nodes.len();
             if per == 0 {
@@ -438,6 +498,9 @@ impl Trainer {
             rows: vec![None; n_workers],
             wire: AsyncWireState::new(n_workers),
             cross,
+            bit_states: vec![WorkerBitState::default(); n_workers],
+            widths: vec![schedule.max_width(); n_workers],
+            schedule,
         })
     }
 
@@ -481,6 +544,23 @@ impl Trainer {
             self.ef = (0..m_all).map(|_| SignEfCompressor::new(dim)).collect();
         }
 
+        // per-worker transmit widths for this round, chosen on the
+        // coordinator BEFORE the fan-out (the width shapes the
+        // quantization grid itself) from each worker's schedule state —
+        // a pure function of (seed, config, round) like the wire landing
+        // schedules.  Only the quantized lazy codec consumes them.
+        if lazy {
+            for m in 0..m_all {
+                let w = self.schedule.width(&self.bit_states[m], m, k);
+                debug_assert!(
+                    (self.schedule.min_width()..=self.schedule.max_width()).contains(&w),
+                    "schedule chose width {w} outside its own range"
+                );
+                self.widths[m] = w;
+                self.bit_states[m].last_width = w;
+            }
+        }
+
         // minibatch draws, one per worker from its own deterministic
         // stream (drawn up front so the fan-out borrows them immutably;
         // deterministic algorithms leave the retained slots at None).
@@ -514,6 +594,7 @@ impl Trainer {
         let ctx = LocalCtx {
             theta: &self.theta_bc,
             rows: &self.rows,
+            widths: &self.widths,
             algo,
             force_upload: matches!(algo, Algo::Gd | Algo::Qgd),
             rhs_common,
@@ -856,13 +937,17 @@ impl Trainer {
                             .decision
                             .expect("lazy algorithms always produce a decision");
                         if decision.upload {
-                            let bits = self.nodes[m].staged.wire_bits();
+                            // billed under the session's actual framing —
+                            // adaptive sessions pay the per-message width
+                            // field the framed layout transmits
+                            let bits = self.net.payload_wire_bits(&self.nodes[m].staged);
                             self.net.account_upload(m, bits);
                             uploaded = true;
                         }
                         max_eps_sq = max_eps_sq.max(decision.eps_sq);
                     } else if let Some(payload) = self.locals[m].payload.take() {
-                        self.net.account_upload(m, payload.wire_bits());
+                        let bits = self.net.payload_wire_bits(&payload);
+                        self.net.account_upload(m, bits);
                         uploaded = true;
                     }
                     if uploaded && cross && self.cross.lags[m] > 0 {
@@ -873,6 +958,22 @@ impl Trainer {
                         });
                         self.cross.deferred_total += 1;
                     }
+                }
+            }
+        }
+
+        // 3b. fold this round's criterion outcomes into the bit
+        // schedule's per-worker state — on the coordinator in worker
+        // index order (a deterministic fold, so next round's widths stay
+        // a pure function of (seed, config) under every wire mode and
+        // thread/shard count).  Deferred async-cross uploads observe at
+        // their ORIGIN round: the decision exists now; only the landing
+        // is late.
+        if lazy {
+            for m in 0..m_all {
+                if let Some(d) = self.locals[m].decision {
+                    self.schedule
+                        .observe(&mut self.bit_states[m], d.lhs, d.rhs, d.upload);
                 }
             }
         }
@@ -994,6 +1095,20 @@ impl Trainer {
                     .collect(),
             }
         });
+        // adaptive bit schedules: the per-(worker, round) widths are
+        // algorithm state (they shape the quantization grids), and the
+        // width sequence is a fold of the per-round criterion outcomes —
+        // persist the fold state so a resume replays it bit-for-bit
+        // (checkpoint v4).  Fixed schedules write no section, as before.
+        let bits = (!self.schedule.is_fixed()).then(|| {
+            crate::coordinator::checkpoint::BitsCheckpoint {
+                kind: self.cfg.bit_schedule,
+                bits_min: self.cfg.bits_min,
+                bits_max: self.cfg.bits_max,
+                ratio_ema: self.bit_states.iter().map(|s| s.ratio_ema).collect(),
+                last_width: self.bit_states.iter().map(|s| s.last_width).collect(),
+            }
+        });
         let ck = crate::coordinator::Checkpoint {
             iter: self.k as u64,
             wire: Some((self.cfg.wire_mode, self.cfg.staleness_bound as u64)),
@@ -1004,6 +1119,7 @@ impl Trainer {
             eps_hat_sq: self.nodes.iter().map(|n| n.eps_hat_sq).collect(),
             history: self.server.history.entries_oldest_first(),
             cross,
+            bits,
         };
         ck.write_to(path)
     }
@@ -1062,13 +1178,55 @@ impl Trainer {
             // as Error::Config instead of an absurd allocation
             self.cfg.validate()?;
         }
-        // rebuild the cross-round rings for the (possibly adopted) wire
-        // schedule and re-park the recorded in-flight uploads; the
+        // adopt the recorded bit schedule (v4): the per-(worker, round)
+        // widths are part of the algorithm's arithmetic exactly like the
+        // wire landing order, so resuming must replay the same policy
+        // from the same fold state.  v1–v3 files (and fixed-schedule v4
+        // files) leave the trainer's configured schedule in place with
+        // fresh state.
+        if let Some(bc) = &ck.bits {
+            self.cfg.bit_schedule = bc.kind;
+            self.cfg.bits_min = bc.bits_min;
+            self.cfg.bits_max = bc.bits_max;
+            self.cfg.validate()?;
+        }
+        self.schedule = build_bit_schedule(&self.cfg);
+        let framed = !self.schedule.is_fixed();
+        self.net.set_framed(framed);
+        let warm_quantized = lazy_codec_for(self.cfg.algo) == Some(LazyCodec::Quantized);
+        if warm_quantized {
+            // re-size the wire buffers for the (possibly adopted)
+            // schedule's widest message
+            self.net.warm_slots_innovation(self.dim(), self.schedule.max_width());
+        }
+        self.server
+            .set_bit_range(self.schedule.min_width(), self.schedule.max_width());
+        for st in self.bit_states.iter_mut() {
+            *st = WorkerBitState::default();
+        }
+        if let Some(bc) = &ck.bits {
+            if bc.ratio_ema.len() != self.n_workers() {
+                return Err(Error::Config(
+                    "checkpoint bit-schedule worker count mismatch".into(),
+                ));
+            }
+            for (m, st) in self.bit_states.iter_mut().enumerate() {
+                st.ratio_ema = bc.ratio_ema[m];
+                st.last_width = bc.last_width[m];
+            }
+        }
+        // rebuild the cross-round rings for the (possibly adopted) wire +
+        // bit schedules and re-park the recorded in-flight uploads; the
         // payloads already crossed the wire once, so the re-store round
         // trip is a fixed point and hands the absorber identical bits
-        let warm_quantized = lazy_codec_for(self.cfg.algo) == Some(LazyCodec::Quantized);
-        let cross_state =
-            CrossState::new(&self.cfg, self.nodes.len(), self.dim(), warm_quantized);
+        let cross_state = CrossState::new(
+            &self.cfg,
+            self.nodes.len(),
+            self.dim(),
+            warm_quantized,
+            self.schedule.max_width(),
+            framed,
+        );
         self.cross = cross_state;
         if let Some(cs) = &ck.cross {
             if self.cfg.wire_mode != WireMode::AsyncCross {
@@ -1112,6 +1270,19 @@ impl Trainer {
         self.nodes.iter().map(|n| n.clock).collect()
     }
 
+    /// Observability: the transmit width the bit schedule chose for each
+    /// worker in the most recent round (meaningful for the lazy
+    /// quantized algorithms; the exact/fresh-sum codecs ignore widths).
+    pub fn bit_widths(&self) -> &[u32] {
+        &self.widths
+    }
+
+    /// The active bit-width policy's name (`fixed` after degeneration
+    /// normalization — see [`build_bit_schedule`]).
+    pub fn bit_schedule_name(&self) -> &'static str {
+        self.schedule.name()
+    }
+
     /// Cross-round wire mode observability: `(max observed landing
     /// staleness in rounds, total uploads that crossed a round boundary)`.
     /// Both stay 0 under the other wire modes — the contract harness pins
@@ -1151,6 +1322,9 @@ impl Trainer {
 struct LocalCtx<'a> {
     theta: &'a [f32],
     rows: &'a [Option<Vec<usize>>],
+    /// this round's per-worker transmit widths from the bit schedule
+    /// (consumed by the quantized lazy codec only)
+    widths: &'a [u32],
     algo: Algo,
     force_upload: bool,
     rhs_common: f64,
@@ -1214,8 +1388,13 @@ fn local_phase(
     slot.loss = loss;
     match ctx.algo {
         Algo::Gd | Algo::Qgd | Algo::Lag | Algo::Laq | Algo::Slaq => {
-            slot.decision =
-                Some(node.lazy_decide(&grad, ctx.rhs_common, ctx.t_max, ctx.force_upload));
+            slot.decision = Some(node.lazy_decide(
+                &grad,
+                ctx.rhs_common,
+                ctx.t_max,
+                ctx.force_upload,
+                ctx.widths[m],
+            ));
         }
         Algo::Sgd => slot.payload = Some(Payload::Dense(grad.clone())),
         Algo::Qsgd => {
@@ -1302,6 +1481,23 @@ fn local_and_wire_phase(
         }
     }
     state.store(publish, Ordering::Release);
+}
+
+/// Build the configured [`BitSchedule`] policy object.  An adaptive kind
+/// whose range has collapsed (`bits_min == bits_max`) is normalized to
+/// [`FixedBits`] at that width, so it degenerates **bit-identically** to
+/// a fixed run — same wire layout, same accounting (pinned in
+/// `rust/tests/bit_schedule.rs`).
+pub fn build_bit_schedule(cfg: &RunCfg) -> Box<dyn BitSchedule> {
+    match cfg.bit_schedule {
+        BitScheduleKind::Fixed => Box::new(FixedBits { bits: cfg.bits }),
+        _ if cfg.bits_min == cfg.bits_max => Box::new(FixedBits { bits: cfg.bits_min }),
+        BitScheduleKind::RoundDecay => Box::new(RoundDecay::new(cfg.bits_min, cfg.bits_max)),
+        BitScheduleKind::Innovation => Box::new(InnovationAdaptive {
+            bits_min: cfg.bits_min,
+            bits_max: cfg.bits_max,
+        }),
+    }
 }
 
 /// Map an [`Algo`] to the lazy codec it uses (where applicable).

@@ -88,6 +88,24 @@
 //! bit-identical to the fully sequential run's
 //! (`rust/tests/parallel_equivalence.rs`, `rust/tests/wire_equivalence.rs`).
 //!
+//! # Payload framing: fixed vs self-describing widths
+//!
+//! Innovation messages have two physical layouts (full field diagrams in
+//! [`crate::quant::innovation`]):
+//!
+//! ```text
+//!   fixed  (bit_schedule = fixed):   [f32 radius][b-bit code × p]            32 + b·p bits
+//!   framed (adaptive schedules):     [f32 radius][u8 width][w-bit code × p]  32 + 8 + w·p bits
+//! ```
+//!
+//! A fixed-width session negotiates `b` once (config), so it never rides
+//! the wire — the paper's accounting, untouched.  An adaptive
+//! [`crate::quant::schedule::BitSchedule`] varies the width per (worker,
+//! round), so each message must describe itself: [`Network::set_framed`]
+//! switches every retained slot to the framed layout, decoders recover
+//! the width from the wire, and [`Network::payload_wire_bits`] bills the
+//! extra 8-bit header honestly.  The other payload kinds are unaffected.
+//!
 //! # Per-worker retained wire buffers
 //!
 //! Every worker owns a [`WireSlot`]: a retained [`BitWriter`] encode
@@ -107,7 +125,7 @@
 //! [`Payload::through_wire_ref`] round trip, which allocates the decoded
 //! message as before.
 
-use crate::quant::innovation::QuantizedInnovation;
+use crate::quant::innovation::{QuantizedInnovation, WIDTH_FIELD_BITS};
 use crate::quant::qsgd::QsgdMessage;
 use crate::quant::signef::SignMessage;
 use crate::quant::sparsify::SparseMessage;
@@ -116,11 +134,20 @@ use crate::util::rng::Rng;
 use crate::Result;
 
 /// What a worker can put on the uplink.
+///
+/// Innovation payloads have two physical framings (see the layout notes
+/// in [`crate::quant::innovation`]): the paper's fixed layout
+/// (`32 + b·p` bits, width negotiated per session) and the
+/// self-describing framed layout (`32 + 8 + b·p` bits, width carried per
+/// message) used when an adaptive [`crate::quant::schedule::BitSchedule`]
+/// varies `b` per (worker, round).  [`Payload::wire_bits`] reports the
+/// fixed layout; [`Network::payload_wire_bits`] picks the layout the
+/// session actually transmits.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Payload {
     /// full-precision dense vector (GD/LAG/SGD): 32·p bits
     Dense(Vec<f32>),
-    /// LAQ/QGD innovation message: 32 + b·p bits
+    /// LAQ/QGD innovation message: 32 + b·p bits (fixed framing)
     Innovation(QuantizedInnovation),
     /// QSGD message: 32 + (b+1)·p bits
     Qsgd(QsgdMessage),
@@ -148,6 +175,12 @@ impl Payload {
     /// This is the single implementation of the round trip — the
     /// property tests in `rust/tests/prop_quant.rs` pin it, and
     /// [`Network::upload`]'s cold path reuses it.
+    ///
+    /// # Errors
+    ///
+    /// Propagates the codecs' decode errors — impossible for a payload
+    /// this function itself just encoded, but kept as `Result` so a
+    /// corrupted message surfaces instead of being absorbed.
     pub fn through_wire_ref(&self) -> Result<Payload> {
         Ok(match self {
             Payload::Dense(v) => Payload::Dense(v.clone()),
@@ -176,6 +209,10 @@ impl Payload {
 
     /// By-value form of [`Self::through_wire_ref`]; Dense passes through
     /// without any copy.
+    ///
+    /// # Errors
+    ///
+    /// Same conditions as [`Self::through_wire_ref`].
     pub fn through_wire(self) -> Result<Payload> {
         match self {
             Payload::Dense(v) => Ok(Payload::Dense(v)),
@@ -248,6 +285,10 @@ pub struct WireSlot {
     /// async fresh-sum mode: densified form of `rx` (the shard jobs add
     /// disjoint coordinate ranges of this buffer)
     dense: Vec<f32>,
+    /// innovation framing: false = the paper's fixed layout (width is
+    /// session metadata), true = the self-describing framed layout
+    /// (adaptive bit schedules; width rides in every message)
+    framed: bool,
 }
 
 impl Default for Payload {
@@ -263,12 +304,23 @@ impl WireSlot {
     /// innovation payloads pack/unpack through the retained buffers with
     /// zero steady-state allocation; the cold fresh-sum kinds reuse the
     /// property-tested [`Payload::through_wire_ref`] round trip.
+    ///
+    /// # Errors
+    ///
+    /// Propagates the codec's decode errors (truncation / bad width) —
+    /// impossible for a payload this slot itself just encoded, but kept
+    /// as `Result` so a corrupted retained buffer surfaces instead of
+    /// absorbing garbage.
     pub fn round_trip<'a>(&'a mut self, payload: &'a Payload) -> Result<&'a Payload> {
         match payload {
             // IEEE bits already — the wire cannot perturb them
             Payload::Dense(_) => Ok(payload),
             Payload::Innovation(qi) => {
-                qi.encode_into(&mut self.enc);
+                if self.framed {
+                    qi.encode_framed_into(&mut self.enc);
+                } else {
+                    qi.encode_into(&mut self.enc);
+                }
                 if !matches!(self.rx, Payload::Innovation(_)) {
                     self.rx = Payload::Innovation(QuantizedInnovation {
                         radius: 0.0,
@@ -277,12 +329,22 @@ impl WireSlot {
                     });
                 }
                 let Payload::Innovation(rx) = &mut self.rx else { unreachable!() };
-                QuantizedInnovation::decode_into(
-                    self.enc.as_bytes(),
-                    qi.bits,
-                    qi.codes.len(),
-                    rx,
-                )?;
+                if self.framed {
+                    // self-describing: the decoder learns the width from
+                    // the wire (adaptive schedules vary it per message)
+                    QuantizedInnovation::decode_framed_into(
+                        self.enc.as_bytes(),
+                        qi.codes.len(),
+                        rx,
+                    )?;
+                } else {
+                    QuantizedInnovation::decode_into(
+                        self.enc.as_bytes(),
+                        qi.bits,
+                        qi.codes.len(),
+                        rx,
+                    )?;
+                }
                 Ok(&self.rx)
             }
             _ => {
@@ -296,6 +358,10 @@ impl WireSlot {
     /// *stored* in the slot, Dense included (the absorber reads the slot
     /// after the worker's job has returned, so it cannot hold a borrow of
     /// the job's input).  The dense copy reuses the retained buffer.
+    ///
+    /// # Errors
+    ///
+    /// Same conditions as [`Self::round_trip`].
     pub fn round_trip_store(&mut self, payload: &Payload) -> Result<()> {
         match payload {
             Payload::Dense(v) => {
@@ -322,6 +388,11 @@ impl WireSlot {
     /// absorb jobs are plain disjoint-range adds).  Dense receives are
     /// already flat and are served straight from `rx` by
     /// [`Self::recv_dense`].
+    ///
+    /// # Errors
+    ///
+    /// Rejects an Innovation receive — innovation uploads feed the lazy
+    /// aggregation path, never the fresh sum.
     pub fn densify_received(&mut self) -> Result<()> {
         match &self.rx {
             Payload::Dense(_) => {}
@@ -353,12 +424,23 @@ impl WireSlot {
     /// the algorithm).  Used for the network's per-worker slots and the
     /// trainer's cross-round in-flight rings alike.
     pub fn warm_innovation(&mut self, dim: usize, bits: u32) {
-        self.enc = BitWriter::with_capacity_bits(32 + bits as usize * dim);
+        // +WIDTH_FIELD_BITS so the framed (self-describing) layout also
+        // fits without a steady-state realloc
+        self.enc = BitWriter::with_capacity_bits(
+            32 + WIDTH_FIELD_BITS as usize + bits as usize * dim,
+        );
         self.rx = Payload::Innovation(QuantizedInnovation {
             radius: 0.0,
             codes: Vec::with_capacity(dim),
             bits,
         });
+    }
+
+    /// Select the innovation framing this slot round-trips with: `true`
+    /// = the self-describing framed layout (adaptive bit schedules),
+    /// `false` = the paper's fixed layout (default).
+    pub fn set_framed(&mut self, on: bool) {
+        self.framed = on;
     }
 }
 
@@ -377,6 +459,9 @@ pub struct Network {
     sim_time: f64,
     /// one retained wire-buffer slot per worker
     slots: Vec<WireSlot>,
+    /// innovation framing for the whole session (mirrored into every
+    /// slot by [`Self::set_framed`]); adaptive bit schedules turn it on
+    framed: bool,
 }
 
 impl Network {
@@ -392,6 +477,35 @@ impl Network {
             per_worker_bits: vec![0; n_workers],
             sim_time: 0.0,
             slots: (0..n_workers).map(|_| WireSlot::default()).collect(),
+            framed: false,
+        }
+    }
+
+    /// Switch the session's innovation framing (see the layout notes in
+    /// [`crate::quant::innovation`]).  Adaptive bit schedules need the
+    /// self-describing framed layout — the width varies per message, so
+    /// it must ride on the wire and be billed ([`Self::payload_wire_bits`]).
+    /// Fixed schedules keep the paper's layout and accounting untouched.
+    pub fn set_framed(&mut self, on: bool) {
+        self.framed = on;
+        for s in self.slots.iter_mut() {
+            s.set_framed(on);
+        }
+    }
+
+    /// Is the session transmitting the self-describing framed layout?
+    pub fn framed(&self) -> bool {
+        self.framed
+    }
+
+    /// Exact billable wire size of `payload` under the session's framing:
+    /// innovation messages cost the extra [`WIDTH_FIELD_BITS`]-bit width
+    /// field when framing is on; every other payload kind (and every
+    /// payload under fixed framing) costs [`Payload::wire_bits`].
+    pub fn payload_wire_bits(&self, payload: &Payload) -> usize {
+        match payload {
+            Payload::Innovation(qi) if self.framed => qi.wire_bits_framed(),
+            _ => payload.wire_bits(),
         }
     }
 
@@ -414,9 +528,15 @@ impl Network {
     /// trip fused).  Returns the server-side view after the physical
     /// encode/decode round trip, borrowed from worker `m`'s retained slot
     /// (or the input itself for Dense payloads) until that slot's next
-    /// round trip.
+    /// round trip.  Bills the session's actual framing
+    /// ([`Self::payload_wire_bits`]).
+    ///
+    /// # Errors
+    ///
+    /// Propagates [`WireSlot::round_trip`]'s decode errors.
     pub fn upload<'a>(&'a mut self, m: usize, payload: &'a Payload) -> Result<&'a Payload> {
-        self.account_upload(m, payload.wire_bits());
+        let bits = self.payload_wire_bits(payload);
+        self.account_upload(m, bits);
         self.slots[m].round_trip(payload)
     }
 
@@ -541,6 +661,48 @@ mod tests {
             qp = q_new;
         }
         assert_eq!(net.uplink_rounds(), 5);
+    }
+
+    #[test]
+    fn framed_session_bills_and_round_trips_the_width_field() {
+        let mut net = Network::new(1, LatencyModel::default());
+        net.set_framed(true);
+        assert!(net.framed());
+        let zeros = vec![0.0f32; 100];
+        let mut total = 0usize;
+        // widths can change message to message through the same retained
+        // slot — the adaptive wire path's exact shape
+        for bits in [2u32, 4, 1, 3] {
+            let q = InnovationQuantizer::new(bits);
+            let mut rng = Rng::new(40 + bits as u64);
+            let g: Vec<f32> = (0..100).map(|_| rng.normal() as f32).collect();
+            let (qi, _) = q.quantize(&g, &zeros);
+            let sent = Payload::Innovation(qi.clone());
+            assert_eq!(net.payload_wire_bits(&sent), 32 + 8 + bits as usize * 100);
+            match net.upload(0, &sent).unwrap() {
+                Payload::Innovation(got) => assert_eq!(got, &qi, "bits={bits}"),
+                other => panic!("{other:?}"),
+            }
+            total += 32 + 8 + bits as usize * 100;
+        }
+        assert_eq!(net.uplink_bits() as usize, total);
+        // non-innovation payloads are unaffected by framing
+        let d = Payload::Dense(vec![0.0; 10]);
+        assert_eq!(net.payload_wire_bits(&d), 320);
+    }
+
+    #[test]
+    fn unframed_session_accounting_is_untouched() {
+        // bit-identity guard for bit_schedule = fixed: the default
+        // session must bill exactly the paper's 32 + b·p
+        let mut net = Network::new(1, LatencyModel::default());
+        assert!(!net.framed());
+        let q = InnovationQuantizer::new(3);
+        let (qi, _) = q.quantize(&[1.0f32; 50], &[0.0; 50]);
+        let sent = Payload::Innovation(qi);
+        assert_eq!(net.payload_wire_bits(&sent), sent.wire_bits());
+        net.upload(0, &sent).unwrap();
+        assert_eq!(net.uplink_bits() as usize, 32 + 3 * 50);
     }
 
     #[test]

@@ -195,6 +195,59 @@ impl WireMode {
     }
 }
 
+/// Which adaptive bit-width policy drives the innovation codec's
+/// transmit width (the "dial-a-bit" knob; see
+/// [`crate::quant::schedule`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BitScheduleKind {
+    /// one constant width `bits` for the whole run — the paper's
+    /// behavior, bit-identical to the pre-schedule trainer (goldens in
+    /// `rust/tests/wire_equivalence.rs` pin it)
+    Fixed,
+    /// `bits_max` for a warm prefix of rounds, then one bit fewer every
+    /// few rounds down to the `bits_min` floor — a pure function of the
+    /// round index, identical for every worker
+    RoundDecay,
+    /// per-worker width driven by the worker's lazy-criterion innovation
+    /// ratio, clamped to `[bits_min, bits_max]` — informative workers
+    /// transmit at full width, deep skippers near the floor
+    Innovation,
+}
+
+impl BitScheduleKind {
+    pub fn parse(s: &str) -> Result<BitScheduleKind> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "fixed" => BitScheduleKind::Fixed,
+            "round-decay" | "round_decay" | "rounddecay" => BitScheduleKind::RoundDecay,
+            "innovation" => BitScheduleKind::Innovation,
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown bit schedule '{other}' (expected fixed | round-decay | innovation)"
+                )))
+            }
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BitScheduleKind::Fixed => "fixed",
+            BitScheduleKind::RoundDecay => "round-decay",
+            BitScheduleKind::Innovation => "innovation",
+        }
+    }
+}
+
+/// The one parse/range check for quantization-width values, shared by
+/// the CLI flags, the TOML/JSON keys and the checkpoint reader: widths
+/// are legal only in `1..=16`, checked **before** any narrowing cast so
+/// a huge input errors instead of wrapping to a legal-looking width.
+pub fn parse_width(name: &str, v: u64) -> Result<u32> {
+    if !(1..=16).contains(&v) {
+        return Err(Error::Config(format!("{name} = {v} out of range 1..=16")));
+    }
+    Ok(v as u32)
+}
+
 /// Which right-hand side the selection rule (7a) compares against.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CritMode {
@@ -317,8 +370,23 @@ pub struct RunCfg {
     pub iters: usize,
     /// stepsize α
     pub alpha: f64,
-    /// quantization bits b (ignored by GD/LAG/SGD)
+    /// quantization bits b (ignored by GD/LAG/SGD).  Under
+    /// `bit_schedule = fixed` this is *the* transmit width; adaptive
+    /// schedules replace it with a per-(worker, round) choice in
+    /// `[bits_min, bits_max]` (it still sizes the QSGD baseline codec).
     pub bits: u32,
+    /// adaptive bit-width policy for the innovation codec (the
+    /// "dial-a-bit" knob): `fixed` (default — the paper's constant-width
+    /// behavior, bit-identical to the pre-schedule trainer),
+    /// `round-decay`, or `innovation`.  See [`crate::quant::schedule`].
+    pub bit_schedule: BitScheduleKind,
+    /// adaptive schedules only: smallest width a policy may choose
+    /// (1..=16, `<= bits_max`).  `bits_min == bits_max` degenerates to
+    /// `fixed` at that width, bit-identically.
+    pub bits_min: u32,
+    /// adaptive schedules only: largest width a policy may choose
+    /// (1..=16); wire buffers and in-flight rings are pre-sized for it
+    pub bits_max: u32,
     /// total minibatch size across workers (stochastic algos only)
     pub batch: usize,
     pub criterion: CriterionCfg,
@@ -376,6 +444,9 @@ impl RunCfg {
             iters: 800,
             alpha: 0.02,
             bits: 3,
+            bit_schedule: BitScheduleKind::Fixed,
+            bits_min: 2,
+            bits_max: 8,
             batch: 500,
             criterion: CriterionCfg::paper_default(),
             l2: 0.01,
@@ -416,6 +487,18 @@ impl RunCfg {
         if !(1..=16).contains(&self.bits) {
             return Err(Error::Config(format!("bits = {} out of range 1..=16", self.bits)));
         }
+        if !(1..=16).contains(&self.bits_min) || !(1..=16).contains(&self.bits_max) {
+            return Err(Error::Config(format!(
+                "bits_min = {} / bits_max = {} out of range 1..=16",
+                self.bits_min, self.bits_max
+            )));
+        }
+        if self.bits_min > self.bits_max {
+            return Err(Error::Config(format!(
+                "bits_min = {} > bits_max = {}",
+                self.bits_min, self.bits_max
+            )));
+        }
         if self.alpha <= 0.0 {
             return Err(Error::Config("alpha must be positive".into()));
         }
@@ -454,8 +537,40 @@ impl RunCfg {
         if let Some(v) = run.get("alpha").as_f64() {
             self.alpha = v;
         }
-        if let Some(v) = run.get("bits").as_usize() {
-            self.bits = v as u32;
+        // every width key range-checks BEFORE the u32 cast (one shared
+        // rule, [`parse_width`]): a huge value (≥ 2^32, exactly
+        // representable in the f64-backed Json number) must error like
+        // the CLI path does, not wrap to a legal-looking width
+        let width_key = |run: &Json, name: &str| -> Result<Option<u32>> {
+            let v = run.get(name);
+            if v.is_null() {
+                return Ok(None);
+            }
+            let v = v.as_usize().ok_or_else(|| {
+                Error::Config(format!("{name} must be a positive integer"))
+            })?;
+            parse_width(name, v as u64).map(Some)
+        };
+        if let Some(v) = width_key(run, "bits")? {
+            self.bits = v;
+        }
+        let bs = run.get("bit_schedule");
+        if !bs.is_null() {
+            // strict like wire_mode: a present-but-wrong-typed value must
+            // error, not silently leave the paper's fixed schedule in place
+            let s = bs.as_str().ok_or_else(|| {
+                Error::Config(
+                    "bit_schedule must be a string: \"fixed\" | \"round-decay\" | \"innovation\""
+                        .into(),
+                )
+            })?;
+            self.bit_schedule = BitScheduleKind::parse(s)?;
+        }
+        if let Some(v) = width_key(run, "bits_min")? {
+            self.bits_min = v;
+        }
+        if let Some(v) = width_key(run, "bits_max")? {
+            self.bits_max = v;
         }
         if let Some(v) = run.get("batch").as_usize() {
             self.batch = v;
@@ -574,6 +689,9 @@ impl RunCfg {
                 ("iters", Json::Num(self.iters as f64)),
                 ("alpha", Json::Num(self.alpha)),
                 ("bits", Json::Num(self.bits as f64)),
+                ("bit_schedule", Json::Str(self.bit_schedule.name().into())),
+                ("bits_min", Json::Num(self.bits_min as f64)),
+                ("bits_max", Json::Num(self.bits_max as f64)),
                 ("batch", Json::Num(self.batch as f64)),
                 ("l2", Json::Num(self.l2)),
                 ("seed", Json::Num(self.seed as f64)),
@@ -734,6 +852,53 @@ mod tests {
         assert!(c2.validate().is_err());
         c2.staleness_bound = 64;
         c2.validate().unwrap();
+    }
+
+    #[test]
+    fn bit_schedule_knob_parses_validates_and_roundtrips() {
+        for spelling in ["round-decay", "round_decay", "ROUND-DECAY"] {
+            assert_eq!(
+                BitScheduleKind::parse(spelling).unwrap(),
+                BitScheduleKind::RoundDecay
+            );
+        }
+        assert!(BitScheduleKind::parse("adaptive").is_err());
+        let doc = "\n[run]\nbit_schedule = \"innovation\"\nbits_min = 2\nbits_max = 6\n";
+        let mut c = RunCfg::paper_logreg(Algo::Laq);
+        c.apply_json(&toml::parse(doc).unwrap()).unwrap();
+        assert_eq!(c.bit_schedule, BitScheduleKind::Innovation);
+        assert_eq!((c.bits_min, c.bits_max), (2, 6));
+        let j = c.to_json();
+        let mut c2 = RunCfg::paper_logreg(Algo::Gd);
+        c2.apply_json(&j).unwrap();
+        assert_eq!(c2.bit_schedule, BitScheduleKind::Innovation);
+        assert_eq!((c2.bits_min, c2.bits_max), (2, 6));
+        // inverted or out-of-range bounds rejected — from TOML (via the
+        // same validate() the CLI path runs) and from direct mutation
+        let bad = "\n[run]\nbit_schedule = \"innovation\"\nbits_min = 5\nbits_max = 3\n";
+        let mut c3 = RunCfg::paper_logreg(Algo::Laq);
+        assert!(c3.apply_json(&toml::parse(bad).unwrap()).is_err());
+        let mut c4 = RunCfg::paper_logreg(Algo::Laq);
+        c4.bits_min = 0;
+        assert!(c4.validate().is_err());
+        c4.bits_min = 2;
+        c4.bits_max = 17;
+        assert!(c4.validate().is_err());
+        // wrong-typed values error like the CLI, not fall through
+        let wrong = "\n[run]\nbit_schedule = 3\n";
+        let mut c5 = RunCfg::paper_logreg(Algo::Laq);
+        assert!(c5.apply_json(&toml::parse(wrong).unwrap()).is_err());
+        // a ≥ 2^32 width must error, not wrap through the u32 cast to a
+        // legal-looking value — the shared rule guards every width key,
+        // the legacy `bits` included
+        for huge in [
+            "\n[run]\nbits = 4294967298\n",
+            "\n[run]\nbits_min = 4294967298\n",
+            "\n[run]\nbits_max = 4294967298\n",
+        ] {
+            let mut c6 = RunCfg::paper_logreg(Algo::Laq);
+            assert!(c6.apply_json(&toml::parse(huge).unwrap()).is_err(), "{huge}");
+        }
     }
 
     #[test]

@@ -27,13 +27,29 @@
 //! their physical wire encodings), so a resume mid-flight replays the
 //! remaining trace bit-for-bit.
 //!
-//! Format: little-endian binary, magic `LAQCKPT3`, no external deps.
-//! `LAQCKPT2` files (pre-cross-round) and `LAQCKPT1` files
-//! (pre-wire-mode) still load, with an empty in-flight set / no recorded
-//! wire schedule respectively.
+//! A second exception, for the same reason: the **bit schedule** of an
+//! adaptive-width run (`bit_schedule != fixed`).  The per-(worker, round)
+//! transmit widths are part of the algorithm's arithmetic — they shape
+//! the quantization grids themselves — and the width sequence is a fold
+//! of per-round criterion outcomes, so v4 checkpoints persist the
+//! schedule's identity (`kind`, `bits_min`, `bits_max`) plus each
+//! worker's fold state ([`crate::quant::schedule::WorkerBitState`]);
+//! resume adopts both and replays the remaining width sequence
+//! bit-for-bit.  Fixed-schedule runs write no bits section, exactly as
+//! before.
+//!
+//! Format: little-endian binary, magic `LAQCKPT4`, no external deps.
+//! Version history (all older versions still load):
+//!
+//! | magic | adds | missing sections read back as |
+//! |-------|------|-------------------------------|
+//! | `LAQCKPT1` | base state (θ, ∇, mirrors, clocks, ε̂², history) | `wire: None` |
+//! | `LAQCKPT2` | wire schedule (mode, staleness bound) | `cross: None` |
+//! | `LAQCKPT3` | cross-round in-flight uploads + deadline clamps | `bits: None` |
+//! | `LAQCKPT4` | adaptive bit-schedule state (kind, range, per-worker EMA) | — |
 
 use crate::comm::Payload;
-use crate::config::WireMode;
+use crate::config::{BitScheduleKind, WireMode};
 use crate::quant::innovation::QuantizedInnovation;
 use crate::quant::qsgd::QsgdMessage;
 use crate::quant::signef::SignMessage;
@@ -43,7 +59,8 @@ use std::io::{Read, Write};
 
 const MAGIC_V1: &[u8; 8] = b"LAQCKPT1";
 const MAGIC_V2: &[u8; 8] = b"LAQCKPT2";
-const MAGIC: &[u8; 8] = b"LAQCKPT3";
+const MAGIC_V3: &[u8; 8] = b"LAQCKPT3";
+const MAGIC: &[u8; 8] = b"LAQCKPT4";
 
 /// Everything needed to resume a run (independent of dataset/backend,
 /// which are reconstructed from the config).
@@ -66,6 +83,25 @@ pub struct Checkpoint {
     /// cross-round wire state (`wire_mode = async-cross` only); `None`
     /// when read from a v1/v2 file or written by the other modes
     pub cross: Option<CrossCheckpoint>,
+    /// adaptive bit-schedule state (`bit_schedule != fixed` only); `None`
+    /// when read from a v1–v3 file or written by fixed-schedule runs
+    pub bits: Option<BitsCheckpoint>,
+}
+
+/// The adaptive-width half of a dial-a-bit run: which policy was active,
+/// its clamp range, and each worker's deterministic fold state — enough
+/// for a resume to replay the remaining per-(worker, round) width
+/// sequence bit-for-bit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BitsCheckpoint {
+    /// active policy (adopted by the trainer on load, like the wire mode)
+    pub kind: BitScheduleKind,
+    pub bits_min: u32,
+    pub bits_max: u32,
+    /// per-worker criterion-ratio EMA (the innovation policy's signal)
+    pub ratio_ema: Vec<f64>,
+    /// per-worker width chosen for the last completed round
+    pub last_width: Vec<u32>,
 }
 
 /// The in-flight half of an `async-cross` run: everything the landing
@@ -111,6 +147,14 @@ fn r_u64(r: &mut impl Read) -> Result<u64> {
     let mut b = [0u8; 8];
     r.read_exact(&mut b)?;
     Ok(u64::from_le_bytes(b))
+}
+
+/// Read a quantization-width bound through the config layer's shared
+/// range-check-before-cast rule ([`crate::config::parse_width`]) — a
+/// corrupt file must surface as an error, not wrap to a legal width.
+fn r_width_bound(r: &mut impl Read) -> Result<u32> {
+    let v = r_u64(r)?;
+    crate::config::parse_width("checkpoint bit-width bound", v)
 }
 
 fn r_f64(r: &mut impl Read) -> Result<f64> {
@@ -277,6 +321,31 @@ impl Checkpoint {
                 }
             }
         }
+        // v4: adaptive bit-schedule section (presence flag, like cross)
+        match &self.bits {
+            None => w_u64(&mut w, 0)?,
+            Some(bc) => {
+                w_u64(&mut w, 1)?;
+                w_u64(
+                    &mut w,
+                    match bc.kind {
+                        BitScheduleKind::Fixed => 0,
+                        BitScheduleKind::RoundDecay => 1,
+                        BitScheduleKind::Innovation => 2,
+                    },
+                )?;
+                w_u64(&mut w, bc.bits_min as u64)?;
+                w_u64(&mut w, bc.bits_max as u64)?;
+                w_u64(&mut w, bc.ratio_ema.len() as u64)?;
+                for &r in &bc.ratio_ema {
+                    w_f64(&mut w, r)?;
+                }
+                w_u64(&mut w, bc.last_width.len() as u64)?;
+                for &wd in &bc.last_width {
+                    w_u64(&mut w, wd as u64)?;
+                }
+            }
+        }
         Ok(())
     }
 
@@ -284,16 +353,22 @@ impl Checkpoint {
         let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
         let mut magic = [0u8; 8];
         r.read_exact(&mut magic)?;
-        let v1 = &magic == MAGIC_V1;
-        let v2 = &magic == MAGIC_V2;
-        if !v1 && !v2 && &magic != MAGIC {
+        let version = if &magic == MAGIC_V1 {
+            1
+        } else if &magic == MAGIC_V2 {
+            2
+        } else if &magic == MAGIC_V3 {
+            3
+        } else if &magic == MAGIC {
+            4
+        } else {
             return Err(Error::Msg(format!(
                 "{}: not a LAQ checkpoint (bad magic)",
                 path.display()
             )));
-        }
+        };
         let iter = r_u64(&mut r)?;
-        let wire = if v1 {
+        let wire = if version < 2 {
             None
         } else {
             let mode = match r_u64(&mut r)? {
@@ -330,7 +405,7 @@ impl Checkpoint {
         for _ in 0..nh {
             history.push(r_f64(&mut r)?);
         }
-        let cross = if v1 || v2 {
+        let cross = if version < 3 {
             None
         } else if r_u64(&mut r)? == 0 {
             None
@@ -357,8 +432,59 @@ impl Checkpoint {
             }
             Some(CrossCheckpoint { next_deadline, pending })
         };
-        let ck =
-            Checkpoint { iter, wire, theta, agg, mirrors, clocks, eps_hat_sq, history, cross };
+        let bits = if version < 4 {
+            None
+        } else if r_u64(&mut r)? == 0 {
+            None
+        } else {
+            let kind = match r_u64(&mut r)? {
+                0 => BitScheduleKind::Fixed,
+                1 => BitScheduleKind::RoundDecay,
+                2 => BitScheduleKind::Innovation,
+                other => {
+                    return Err(Error::Msg(format!(
+                        "checkpoint: unknown bit schedule code {other}"
+                    )))
+                }
+            };
+            let bits_min = r_width_bound(&mut r)?;
+            let bits_max = r_width_bound(&mut r)?;
+            let nr = r_u64(&mut r)? as usize;
+            if nr > (1 << 24) {
+                return Err(Error::Msg("checkpoint: ratio array too large".into()));
+            }
+            let mut ratio_ema = Vec::with_capacity(nr);
+            for _ in 0..nr {
+                ratio_ema.push(r_f64(&mut r)?);
+            }
+            let nw = r_u64(&mut r)? as usize;
+            if nw > (1 << 24) {
+                return Err(Error::Msg("checkpoint: width array too large".into()));
+            }
+            let mut last_width = Vec::with_capacity(nw);
+            for _ in 0..nw {
+                let v = r_u64(&mut r)?;
+                if v > 16 {
+                    return Err(Error::Msg(format!(
+                        "checkpoint: recorded width {v} out of range"
+                    )));
+                }
+                last_width.push(v as u32);
+            }
+            Some(BitsCheckpoint { kind, bits_min, bits_max, ratio_ema, last_width })
+        };
+        let ck = Checkpoint {
+            iter,
+            wire,
+            theta,
+            agg,
+            mirrors,
+            clocks,
+            eps_hat_sq,
+            history,
+            cross,
+            bits,
+        };
         ck.validate()?;
         Ok(ck)
     }
@@ -394,6 +520,37 @@ impl Checkpoint {
                 }
             }
         }
+        if let Some(bc) = &self.bits {
+            if bc.ratio_ema.len() != m || bc.last_width.len() != m {
+                return Err(Error::Msg(
+                    "checkpoint: bit schedule worker count mismatch".into(),
+                ));
+            }
+            if !(1..=16).contains(&bc.bits_min)
+                || !(1..=16).contains(&bc.bits_max)
+                || bc.bits_min > bc.bits_max
+            {
+                return Err(Error::Msg(
+                    "checkpoint: bit schedule range inconsistent".into(),
+                ));
+            }
+            // 0 = "no round completed yet"; anything else must be a width
+            // the schedule could actually have chosen
+            if bc
+                .last_width
+                .iter()
+                .any(|&w| w != 0 && !(bc.bits_min..=bc.bits_max).contains(&w))
+            {
+                return Err(Error::Msg(
+                    "checkpoint: recorded width outside the schedule's range".into(),
+                ));
+            }
+            if bc.ratio_ema.iter().any(|r| !r.is_finite() || *r < 0.0) {
+                return Err(Error::Msg(
+                    "checkpoint: bit schedule state not finite".into(),
+                ));
+            }
+        }
         Ok(())
     }
 }
@@ -413,6 +570,7 @@ mod tests {
             eps_hat_sq: vec![1e-4, 2e-5],
             history: vec![0.1, 0.01, 0.001],
             cross: None,
+            bits: None,
         }
     }
 
@@ -558,6 +716,89 @@ mod tests {
         assert_eq!(back.theta, ck.theta);
         assert_eq!(back.history, ck.history);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bits_checkpoint_roundtrips_exactly() {
+        let dir = std::env::temp_dir().join("laq_ckpt_test_bits");
+        let path = dir.join("b.ckpt");
+        let mut ck = sample();
+        ck.bits = Some(BitsCheckpoint {
+            kind: BitScheduleKind::Innovation,
+            bits_min: 2,
+            bits_max: 6,
+            ratio_ema: vec![0.125, 3.5],
+            last_width: vec![4, 2],
+        });
+        ck.write_to(&path).unwrap();
+        let back = Checkpoint::read_from(&path).unwrap();
+        assert_eq!(ck, back);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Serialize a checkpoint in the v3 layout (cross section, no bits
+    /// section) — the compat path must read it with `bits: None`.
+    #[test]
+    fn reads_v3_checkpoints_without_bits_section() {
+        let dir = std::env::temp_dir().join("laq_ckpt_test_v3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v3.ckpt");
+        let ck = sample();
+        {
+            let mut w = std::io::BufWriter::new(std::fs::File::create(&path).unwrap());
+            w.write_all(MAGIC_V3).unwrap();
+            w_u64(&mut w, ck.iter).unwrap();
+            w_u64(&mut w, 1).unwrap(); // async
+            w_u64(&mut w, 3).unwrap();
+            w_f32s(&mut w, &ck.theta).unwrap();
+            w_f32s(&mut w, &ck.agg).unwrap();
+            w_u64(&mut w, ck.mirrors.len() as u64).unwrap();
+            for m in &ck.mirrors {
+                w_f32s(&mut w, m).unwrap();
+            }
+            w_u64(&mut w, ck.clocks.len() as u64).unwrap();
+            for &c in &ck.clocks {
+                w_u64(&mut w, c).unwrap();
+            }
+            w_u64(&mut w, ck.eps_hat_sq.len() as u64).unwrap();
+            for &e in &ck.eps_hat_sq {
+                w_f64(&mut w, e).unwrap();
+            }
+            w_u64(&mut w, ck.history.len() as u64).unwrap();
+            for &h in &ck.history {
+                w_f64(&mut w, h).unwrap();
+            }
+            w_u64(&mut w, 0).unwrap(); // empty cross section
+        }
+        let back = Checkpoint::read_from(&path).unwrap();
+        assert_eq!(back.bits, None);
+        assert_eq!(back.cross, None);
+        assert_eq!(back.wire, Some((WireMode::Async, 3)));
+        assert_eq!(back.theta, ck.theta);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn validate_catches_bits_inconsistency() {
+        let bc = BitsCheckpoint {
+            kind: BitScheduleKind::Innovation,
+            bits_min: 2,
+            bits_max: 4,
+            ratio_ema: vec![1.0, 1.0],
+            last_width: vec![3, 3],
+        };
+        let mut ck = sample();
+        ck.bits = Some(BitsCheckpoint { ratio_ema: vec![1.0], ..bc.clone() });
+        assert!(ck.validate().is_err(), "worker count mismatch accepted");
+        let mut ck = sample();
+        ck.bits = Some(BitsCheckpoint { bits_min: 5, ..bc.clone() });
+        assert!(ck.validate().is_err(), "inverted range accepted");
+        let mut ck = sample();
+        ck.bits = Some(BitsCheckpoint { last_width: vec![3, 99], ..bc.clone() });
+        assert!(ck.validate().is_err(), "absurd width accepted");
+        let mut ck = sample();
+        ck.bits = Some(BitsCheckpoint { ratio_ema: vec![1.0, f64::NAN], ..bc });
+        assert!(ck.validate().is_err(), "NaN state accepted");
     }
 
     #[test]

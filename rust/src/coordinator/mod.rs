@@ -13,7 +13,9 @@
 //! * **clock bound** — no worker goes more than `t̄` iterations without
 //!   uploading (criterion (7b));
 //! * **exact accounting** — `Σ uploads · (32 + b·p)` equals the network's
-//!   bit counter;
+//!   bit counter (adaptive bit schedules bill `32 + 8 + b·p` per upload
+//!   at that upload's own width — see the framing notes in
+//!   [`crate::comm`]);
 //! * **schedule independence** — every invariant above holds identically
 //!   under the parallel local phase (`cfg.threads > 1`), because worker
 //!   state transitions commit in the sequential wire phase

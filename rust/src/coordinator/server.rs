@@ -31,7 +31,6 @@ use std::sync::{Arc, Condvar, Mutex};
 
 use crate::comm::{Payload, WireSlot};
 use crate::coordinator::DeltaHistory;
-use crate::quant::InnovationQuantizer;
 use crate::util::threadpool::{Pool, SendPtr};
 use crate::{Error, Result};
 
@@ -135,6 +134,9 @@ fn absorb_dense_range(g: &[f32], agg: &mut [f32], mir: &mut [f32]) {
 /// Innovation absorb on one range: reconstruct `Q_m^new` from the mirror
 /// with the exact same f32 expression as the worker used (so mirrors
 /// never drift), then `∇ += Q^new − mirror`, `mirror = Q^new`.
+/// `two_tau_r` is derived from the *payload's own* width — under an
+/// adaptive bit schedule each upload lands at the width it was quantized
+/// with, which is exactly the width the worker's reconstruction used.
 #[inline]
 fn absorb_innovation_range(
     codes: &[u32],
@@ -159,6 +161,20 @@ fn absorb_fresh_range(add: &[f32], agg: &mut [f32]) {
     }
 }
 
+/// Accepted-width guard: a payload outside the session's `[min, max]`
+/// range would silently corrupt every mirror if absorbed, so it is
+/// rejected.  Fixed schedules keep `min == max ==` the session width —
+/// the old exact-width check, verbatim.
+#[inline]
+fn check_innovation_width(bits: u32, min: u32, max: u32) -> Result<()> {
+    if bits < min || bits > max {
+        return Err(Error::Msg(format!(
+            "innovation bit-width mismatch: payload b={bits} vs accepted {min}..={max}"
+        )));
+    }
+    Ok(())
+}
+
 /// One `(worker, shard)` cell of the pipelined absorber: validate the
 /// worker's received payload and fold its `[lo, hi)` coordinates into the
 /// shard's agg/mirror ranges via the shared range helpers.
@@ -171,8 +187,8 @@ fn absorb_cell(
     lo: usize,
     hi: usize,
     dim: usize,
-    levels: f32,
-    bits_expected: u32,
+    bits_min: u32,
+    bits_max: u32,
 ) -> Result<()> {
     if lazy {
         match slot.received() {
@@ -186,13 +202,9 @@ fn absorb_cell(
                 if qi.codes.len() != dim {
                     return Err(Error::Msg("innovation dim mismatch".into()));
                 }
-                if qi.bits != bits_expected {
-                    return Err(Error::Msg(format!(
-                        "innovation bit-width mismatch: payload b={} vs session b={}",
-                        qi.bits, bits_expected
-                    )));
-                }
-                let two_tau_r = 2.0f32 * qi.radius / levels;
+                check_innovation_width(qi.bits, bits_min, bits_max)?;
+                let two_tau_r =
+                    2.0f32 * qi.radius / crate::quant::innovation::grid_levels_f32(qi.bits);
                 absorb_innovation_range(&qi.codes[lo..hi], qi.radius, two_tau_r, agg, mir);
             }
             _ => {
@@ -285,7 +297,11 @@ pub struct ShardedServer {
     pub q_mirror: Vec<Vec<f32>>,
     /// ring of ||θ^{j+1} − θ^j||² for the criterion broadcast
     pub history: DeltaHistory,
-    quantizer: InnovationQuantizer,
+    /// accepted innovation widths `[bits_min, bits_max]` — the bit
+    /// schedule's range; a fixed schedule keeps min == max == the
+    /// session width (see [`Self::set_bit_range`])
+    bits_min: u32,
+    bits_max: u32,
     opt: ServerOpt,
     adam: Option<AdamState>,
     plan: ShardPlan,
@@ -317,7 +333,8 @@ impl ShardedServer {
             agg: vec![0.0; dim],
             q_mirror: vec![vec![0.0; dim]; n_workers],
             history: DeltaHistory::new(d),
-            quantizer: InnovationQuantizer::new(bits),
+            bits_min: bits,
+            bits_max: bits,
             opt: ServerOpt::Sgd,
             adam: None,
             plan: ShardPlan::new(dim, 1),
@@ -353,6 +370,20 @@ impl ShardedServer {
     /// Runners participating in a shard fan-out (spawned + caller).
     pub fn shard_runners(&self) -> usize {
         self.pool.as_ref().map(|p| p.size()).unwrap_or(0) + 1
+    }
+
+    /// Accept innovation uploads whose width lies in `min..=max` — the
+    /// trainer's bit-schedule range — and dequantize each at its own
+    /// landing width.  [`Self::new`] starts at `min == max ==` the
+    /// session width (the paper's fixed-width contract); adaptive
+    /// schedules widen the range at build time.
+    pub fn set_bit_range(&mut self, min: u32, max: u32) {
+        assert!(
+            (1..=16).contains(&min) && min <= max && max <= 16,
+            "bit range [{min}, {max}] out of order"
+        );
+        self.bits_min = min;
+        self.bits_max = max;
     }
 
     /// Select the server optimizer (default: plain GD, the paper's rule).
@@ -409,18 +440,15 @@ impl ShardedServer {
                 if qi.codes.len() != dim {
                     return Err(Error::Msg("innovation dim mismatch".into()));
                 }
-                if qi.bits != self.quantizer.bits {
-                    // the old dequantize path asserted this; keep it a
-                    // release-mode guard — a wrong-width payload would
-                    // silently corrupt every mirror otherwise
-                    return Err(Error::Msg(format!(
-                        "innovation bit-width mismatch: payload b={} vs session b={}",
-                        qi.bits, self.quantizer.bits
-                    )));
-                }
+                // release-mode guard — a payload outside the accepted
+                // width range would silently corrupt every mirror
+                check_innovation_width(qi.bits, self.bits_min, self.bits_max)?;
                 // reconstruct Q_m^new from the mirror with the exact same
-                // f32 expression as the worker used, so mirrors never drift
-                let two_tau_r = 2.0f32 * qi.radius / self.quantizer.num_levels() as f32;
+                // f32 expression as the worker used, so mirrors never
+                // drift — at the payload's own landing width (adaptive
+                // schedules vary it per (worker, round))
+                let two_tau_r =
+                    2.0f32 * qi.radius / crate::quant::innovation::grid_levels_f32(qi.bits);
                 let radius = qi.radius;
                 let codes = &qi.codes[..];
                 let agg = SendPtr::new(&mut self.agg[..]);
@@ -534,8 +562,8 @@ impl ShardedServer {
             return Ok(());
         }
         let dim = self.dim();
-        let levels = self.quantizer.num_levels() as f32;
-        let bits_expected = self.quantizer.bits;
+        let bits_min = self.bits_min;
+        let bits_max = self.bits_max;
         // raw disjoint-access pointers, captured before the fan-out: agg
         // ranges are disjoint because a shard is absorbed by one runner at
         // a time; mirror ranges additionally differ per worker.  The base
@@ -587,8 +615,8 @@ impl ShardedServer {
                                             lo,
                                             hi,
                                             dim,
-                                            levels,
-                                            bits_expected,
+                                            bits_min,
+                                            bits_max,
                                         )
                                     }),
                                 )
@@ -766,6 +794,7 @@ impl ShardedServer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::InnovationQuantizer;
     use crate::util::rng::Rng;
 
     fn grad(seed: u64, p: usize) -> Vec<f32> {
@@ -848,6 +877,30 @@ mod tests {
         let q8 = InnovationQuantizer::new(8);
         let (qi8, _) = q8.quantize(&[1.0; 4], &[0.0; 4]);
         assert!(s.absorb_lazy(0, &Payload::Innovation(qi8)).is_err());
+    }
+
+    #[test]
+    fn absorb_accepts_widths_within_the_configured_range_only() {
+        let mut s = ServerState::new(64, 1, 3, 10, vec![0.0; 64]);
+        s.set_bit_range(2, 4);
+        // in-range widths absorb at their own landing width, matching the
+        // worker-side reconstruction exactly (varying width round to round)
+        let mut q_prev = vec![0.0f32; 64];
+        for &b in &[2u32, 4, 3] {
+            let q = InnovationQuantizer::new(b);
+            let g = grad(700 + b as u64, 64);
+            let (qi, q_new) = q.quantize(&g, &q_prev);
+            s.absorb_lazy(0, &Payload::Innovation(qi)).unwrap();
+            assert_eq!(s.q_mirror[0], q_new, "b={b}: mirror drift");
+            q_prev = q_new;
+        }
+        assert!(s.check_aggregate_invariant() < 1e-4);
+        // out-of-range widths are rejected on both sides of the range
+        for &b in &[1u32, 5, 8] {
+            let q = InnovationQuantizer::new(b);
+            let (qi, _) = q.quantize(&grad(800 + b as u64, 64), &q_prev);
+            assert!(s.absorb_lazy(0, &Payload::Innovation(qi)).is_err(), "b={b}");
+        }
     }
 
     #[test]

@@ -84,9 +84,11 @@ pub struct WorkerNode<W: WorkerGrad + ?Sized> {
     pub grad: Vec<f32>,
     /// the would-be wire message, rebuilt in place by [`Self::lazy_decide`]
     /// every iteration and borrowed by the wire phase iff the criterion
-    /// fired — Innovation for the quantized codec, Dense for the exact one
+    /// fired — Innovation for the quantized codec, Dense for the exact
+    /// one.  The Innovation message's `bits` field always records the
+    /// width this round's quantization actually used (adaptive schedules
+    /// vary it per round), so the wire/absorb path is self-consistent.
     pub staged: Payload,
-    quantizer: InnovationQuantizer,
     codec: LazyCodec,
     /// scratch for q_new (avoids per-iteration allocation)
     q_scratch: Vec<f32>,
@@ -110,7 +112,6 @@ impl<W: WorkerGrad + ?Sized> WorkerNode<W> {
             clock: 0,
             grad: vec![0.0; dim],
             staged,
-            quantizer: InnovationQuantizer::new(bits),
             codec,
             q_scratch: vec![0.0; dim],
         }
@@ -128,7 +129,12 @@ impl<W: WorkerGrad + ?Sized> WorkerNode<W> {
     /// `rhs_common` is `(1/(α²M²)) Σ_d ξ_d ||Δθ||²` from the server's
     /// history (derivable worker-side from received parameters at no
     /// communication cost).  `force_upload` disables the skip (GD/QGD
-    /// behaviour).
+    /// behaviour).  `width` is this round's transmit bit-width, chosen by
+    /// the trainer's [`crate::quant::schedule::BitSchedule`] — a fixed
+    /// schedule passes the session constant every round; adaptive
+    /// schedules vary it per (worker, round), and the staged message
+    /// records it so server-side dequantization lands at the same width.
+    /// (The exact codec ignores it.)
     ///
     /// Pure w.r.t. the node's criterion state: `q_prev`, `eps_hat_sq` and
     /// `clock` are only read; the tentative reconstruction is written to
@@ -141,18 +147,22 @@ impl<W: WorkerGrad + ?Sized> WorkerNode<W> {
         rhs_common: f64,
         t_max: usize,
         force_upload: bool,
+        width: u32,
     ) -> LazyDecision {
         debug_assert_eq!(grad.len(), self.dim());
         let (lhs, rhs, eps_sq): (f64, f64, f64) = match self.codec {
             LazyCodec::Quantized => {
                 // quantize the innovation regardless of skipping — the
                 // criterion is defined on the quantized values; codes land
-                // directly in the staged wire message
+                // directly in the staged wire message, tagged with this
+                // round's width
+                let quantizer = InnovationQuantizer::new(width);
                 let qi = match &mut self.staged {
                     Payload::Innovation(qi) => qi,
                     _ => unreachable!("quantized codec stages Innovation"),
                 };
-                qi.radius = self.quantizer.quantize_into(
+                qi.bits = width;
+                qi.radius = quantizer.quantize_into(
                     grad,
                     &self.q_prev,
                     &mut qi.codes,
@@ -212,15 +222,17 @@ mod tests {
     use crate::Result;
 
     /// decide + commit in one call — the fused shape the trainer's
-    /// two-phase step unrolls.
+    /// two-phase step unrolls.  `width` plays the trainer's bit-schedule
+    /// role (the session constant for these fixed-width tests).
     fn step<W: WorkerGrad + ?Sized>(
         n: &mut WorkerNode<W>,
         grad: &[f32],
         rhs_common: f64,
         t_max: usize,
         force_upload: bool,
+        width: u32,
     ) -> LazyDecision {
-        let d = n.lazy_decide(grad, rhs_common, t_max, force_upload);
+        let d = n.lazy_decide(grad, rhs_common, t_max, force_upload, width);
         n.commit(&d);
         d
     }
@@ -257,7 +269,7 @@ mod tests {
     fn first_iteration_uploads() {
         let mut n = node(3, LazyCodec::Quantized);
         let g = rand_grad(1, 32);
-        let out = step(&mut n, &g, 0.0, 100, false);
+        let out = step(&mut n, &g, 0.0, 100, false, 3);
         assert!(out.upload, "lhs={} rhs={}", out.lhs, out.rhs);
         assert_eq!(n.clock, 0);
     }
@@ -268,8 +280,8 @@ mod tests {
         // innovation tiny; criterion (with slack 3||ε||²) must skip
         let mut n = node(3, LazyCodec::Quantized);
         let g = rand_grad(2, 32);
-        let _ = step(&mut n, &g, 0.0, 100, false);
-        let out2 = step(&mut n, &g, 0.0, 100, false);
+        let _ = step(&mut n, &g, 0.0, 100, false, 3);
+        let out2 = step(&mut n, &g, 0.0, 100, false, 3);
         assert!(!out2.upload, "lhs={} rhs={}", out2.lhs, out2.rhs);
         assert_eq!(n.clock, 1);
     }
@@ -278,10 +290,10 @@ mod tests {
     fn forced_upload_after_t_max() {
         let mut n = node(8, LazyCodec::Quantized);
         let g = rand_grad(3, 32);
-        let _ = step(&mut n, &g, 0.0, 3, false);
+        let _ = step(&mut n, &g, 0.0, 3, false, 8);
         let mut uploads = 0;
         for _ in 0..6 {
-            if step(&mut n, &g, 1e9, 3, false).upload {
+            if step(&mut n, &g, 1e9, 3, false, 8).upload {
                 uploads += 1;
                 // clock must reset after forced refresh
                 assert_eq!(n.clock, 0);
@@ -296,7 +308,7 @@ mod tests {
         let mut n = node(3, LazyCodec::Quantized);
         let g = rand_grad(4, 32);
         for _ in 0..5 {
-            let out = step(&mut n, &g, f64::INFINITY, 100, true);
+            let out = step(&mut n, &g, f64::INFINITY, 100, true, 3);
             assert!(out.upload);
         }
     }
@@ -305,7 +317,7 @@ mod tests {
     fn exact_codec_stages_dense_and_tracks_mirror() {
         let mut n = node(3, LazyCodec::Exact);
         let g = rand_grad(5, 32);
-        let out = step(&mut n, &g, 0.0, 100, false);
+        let out = step(&mut n, &g, 0.0, 100, false, 3);
         assert!(out.upload);
         match &n.staged {
             Payload::Dense(v) => assert_eq!(v, &g),
@@ -322,7 +334,7 @@ mod tests {
         let mut n = node(3, LazyCodec::Quantized);
         let g = rand_grad(9, 32);
         let q_prev_before = n.q_prev.clone();
-        let out = step(&mut n, &g, 0.0, 100, false);
+        let out = step(&mut n, &g, 0.0, 100, false, 3);
         assert!(out.upload);
         let q = InnovationQuantizer::new(3);
         match &n.staged {
@@ -338,10 +350,10 @@ mod tests {
     fn skip_preserves_q_prev() {
         let mut n = node(3, LazyCodec::Quantized);
         let g = rand_grad(6, 32);
-        step(&mut n, &g, 0.0, 100, false);
+        step(&mut n, &g, 0.0, 100, false, 3);
         let q_before = n.q_prev.clone();
         // big rhs -> skip
-        let out = step(&mut n, &g, 1e9, 100, false);
+        let out = step(&mut n, &g, 1e9, 100, false, 3);
         assert!(!out.upload);
         assert_eq!(n.q_prev, q_before);
     }
@@ -351,7 +363,7 @@ mod tests {
         let mut n = node(3, LazyCodec::Quantized);
         let g = rand_grad(8, 32);
         let before = (n.q_prev.clone(), n.clock, n.eps_hat_sq);
-        let d = n.lazy_decide(&g, 0.0, 100, false);
+        let d = n.lazy_decide(&g, 0.0, 100, false, 3);
         assert!(d.upload);
         // the local phase left all criterion state untouched
         assert_eq!((n.q_prev.clone(), n.clock, n.eps_hat_sq), before);
@@ -360,12 +372,38 @@ mod tests {
         assert_eq!(n.clock, 0);
         assert_eq!(n.eps_hat_sq, d.eps_sq);
         // skip decision: commit only ticks the clock
-        let d2 = n.lazy_decide(&g, 1e12, 100, false);
+        let d2 = n.lazy_decide(&g, 1e12, 100, false, 3);
         assert!(!d2.upload);
         let q_after = n.q_prev.clone();
         n.commit(&d2);
         assert_eq!(n.q_prev, q_after);
         assert_eq!(n.clock, 1);
+    }
+
+    #[test]
+    fn width_can_vary_per_round_and_mirrors_stay_consistent() {
+        // the dial-a-bit contract at the node level: each round's staged
+        // message records its own width, and dequantizing the wire form
+        // at that width reproduces exactly the reconstruction the commit
+        // promoted to q_prev — whatever the width sequence
+        let mut n = node(3, LazyCodec::Quantized);
+        let mut server_mirror = vec![0.0f32; 32];
+        for (round, width) in [3u32, 1, 4, 2, 8].into_iter().enumerate() {
+            let g = rand_grad(50 + round as u64, 32);
+            let d = n.lazy_decide(&g, 0.0, 100, true, width);
+            assert!(d.upload);
+            match &n.staged {
+                Payload::Innovation(qi) => {
+                    assert_eq!(qi.bits, width, "round {round}");
+                    let q = InnovationQuantizer::new(width);
+                    let rec = q.dequantize(qi, &server_mirror);
+                    n.commit(&d);
+                    assert_eq!(rec, n.q_prev, "round {round}: mirror drift");
+                    server_mirror = rec;
+                }
+                other => panic!("{other:?}"),
+            }
+        }
     }
 
     #[test]
@@ -377,7 +415,7 @@ mod tests {
             WorkerNode::new(Box::new(w), 3, LazyCodec::Quantized);
         let theta = vec![0.0f32; 18];
         let (loss, grad) = n.oracle.full(&theta).unwrap();
-        let out = step(&mut n, &grad, 0.0, 100, false);
+        let out = step(&mut n, &grad, 0.0, 100, false, 3);
         assert!(out.upload);
         assert!(loss > 0.0);
     }

@@ -7,7 +7,7 @@
 //!
 //! See README.md for the full walkthrough.
 
-use laq::config::{Algo, Backend, ModelKind, RunCfg, WireMode};
+use laq::config::{Algo, Backend, BitScheduleKind, ModelKind, RunCfg, WireMode};
 use laq::experiments::{self, ExpOpts};
 use laq::util::cli::{usage, ArgSpec, Args};
 
@@ -36,7 +36,7 @@ fn print_help() {
         "laq — Lazily Aggregated Quantized Gradients (NeurIPS 2019) reproduction\n\n\
          USAGE: laq <exp|train|list> [OPTIONS]\n\n\
          laq exp   --id <fig3|fig4|fig5|fig6|fig7|fig8|table2|table3|prop1> [--full] [--backend native|pjrt] [--out DIR] [--seed N]\n\
-         laq train --algo <gd|qgd|lag|laq|sgd|qsgd|ssgd|slaq|efsgd> [--model logreg|mlp] [--config FILE] [--iters N] [--alpha A] [--bits B] [--threads T] [--server-shards S] [--wire-mode sync|async|async-cross] [--staleness-bound K] [--backend native|pjrt]\n\
+         laq train --algo <gd|qgd|lag|laq|sgd|qsgd|ssgd|slaq|efsgd> [--model logreg|mlp] [--config FILE] [--iters N] [--alpha A] [--bits B] [--bit-schedule fixed|round-decay|innovation] [--bits-min L] [--bits-max H] [--threads T] [--server-shards S] [--wire-mode sync|async|async-cross] [--staleness-bound K] [--backend native|pjrt]\n\
          laq list\n"
     );
 }
@@ -105,6 +105,9 @@ fn train_spec() -> Vec<ArgSpec> {
         ArgSpec { name: "iters", help: "iterations", default: None, is_switch: false },
         ArgSpec { name: "alpha", help: "stepsize", default: None, is_switch: false },
         ArgSpec { name: "bits", help: "quantization bits", default: None, is_switch: false },
+        ArgSpec { name: "bit-schedule", help: "bit-width policy: fixed (paper) | round-decay | innovation (per-worker adaptive)", default: None, is_switch: false },
+        ArgSpec { name: "bits-min", help: "adaptive schedules: smallest width (1..=16)", default: None, is_switch: false },
+        ArgSpec { name: "bits-max", help: "adaptive schedules: largest width (1..=16)", default: None, is_switch: false },
         ArgSpec { name: "workers", help: "worker count", default: None, is_switch: false },
         ArgSpec { name: "threads", help: "worker fan-out: 1=sequential, 0=auto, N=pool size", default: None, is_switch: false },
         ArgSpec { name: "server-shards", help: "server θ-shards: 1=single, 0=auto, S=fixed", default: None, is_switch: false },
@@ -150,8 +153,25 @@ fn cmd_train(argv: &[String]) -> i32 {
         if let Some(v) = args.get_f64("alpha").map_err(|e| laq::Error::Config(e.to_string()))? {
             cfg.alpha = v;
         }
+        // every width flag shares the config layer's range-check-before-
+        // cast rule, so huge inputs error instead of wrapping
         if let Some(v) = args.get_usize("bits").map_err(|e| laq::Error::Config(e.to_string()))? {
-            cfg.bits = v as u32;
+            cfg.bits = laq::config::parse_width("--bits", v as u64)?;
+        }
+        if let Some(v) = args.get("bit-schedule") {
+            cfg.bit_schedule = BitScheduleKind::parse(v)?;
+        }
+        if let Some(v) = args
+            .get_usize("bits-min")
+            .map_err(|e| laq::Error::Config(e.to_string()))?
+        {
+            cfg.bits_min = laq::config::parse_width("--bits-min", v as u64)?;
+        }
+        if let Some(v) = args
+            .get_usize("bits-max")
+            .map_err(|e| laq::Error::Config(e.to_string()))?
+        {
+            cfg.bits_max = laq::config::parse_width("--bits-max", v as u64)?;
         }
         if let Some(v) = args.get_usize("workers").map_err(|e| laq::Error::Config(e.to_string()))? {
             cfg.workers = v;

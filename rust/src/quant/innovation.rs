@@ -10,9 +10,33 @@
 //! exact same reconstruction — the state-consistency the algorithm's
 //! correctness rests on (server's `q_prev` must equal worker's `q_prev`
 //! forever, with no drift).
+//!
+//! # Wire layouts
+//!
+//! The codec has two physical framings, both LSB-first bit-packed
+//! (see [`crate::util::bitio`]):
+//!
+//! * **fixed** (the paper's layout) — `[f32 radius][b-bit code × p]`,
+//!   `32 + b·p` bits.  The width `b` and dimension `p` are session
+//!   metadata, negotiated once per run, so they never ride on the wire;
+//!   [`QuantizedInnovation::decode`] takes both out of band.
+//! * **framed** (self-describing, used by adaptive bit schedules) —
+//!   `[f32 radius][u8 width][width-bit code × p]`,
+//!   `32 + 8 + width·p` bits.  The width varies per (worker, round)
+//!   under a [`crate::quant::schedule::BitSchedule`], so each message
+//!   carries its own ([`WIDTH_FIELD_BITS`]-bit) width field and
+//!   [`QuantizedInnovation::decode_framed`] recovers it from the wire;
+//!   only `p` stays out of band.  The communication accounting bills the
+//!   extra header ([`QuantizedInnovation::wire_bits_framed`]).
 
 use crate::util::bitio::{pack_codes, unpack_codes_into, BitReader, BitWriter};
 use crate::{Error, Result};
+
+/// Size of the self-describing width field in the framed wire layout.
+/// 8 bits holds every legal width (1..=16) and keeps the code section
+/// byte-aligned after the f32 radius, preserving the byte-aligned
+/// fast path in [`pack_codes`] for 8-bit codes.
+pub const WIDTH_FIELD_BITS: u32 = 8;
 
 /// Worker-side quantization output plus the wire form.
 #[derive(Clone, Debug, PartialEq)]
@@ -50,6 +74,11 @@ impl QuantizedInnovation {
 
     /// Deserialize from the wire into a caller-retained message, reusing
     /// its `codes` buffer (no allocation once the capacity has warmed up).
+    ///
+    /// # Errors
+    ///
+    /// Returns [`Error::Codec`] when `buf` is too short for the header or
+    /// for `p` codes of `bits` bits.
     pub fn decode_into(buf: &[u8], bits: u32, p: usize, out: &mut Self) -> Result<()> {
         let mut r = BitReader::new(buf);
         let radius = r
@@ -63,9 +92,80 @@ impl QuantizedInnovation {
     }
 
     /// Deserialize from the wire (needs `bits` and `p` from the session).
+    ///
+    /// # Errors
+    ///
+    /// Returns [`Error::Codec`] on a truncated buffer (see
+    /// [`Self::decode_into`]).
     pub fn decode(buf: &[u8], bits: u32, p: usize) -> Result<Self> {
         let mut out = Self { radius: 0.0, codes: Vec::with_capacity(p), bits };
         Self::decode_into(buf, bits, p, &mut out)?;
+        Ok(out)
+    }
+
+    // --- framed (self-describing) layout — adaptive bit schedules --------
+
+    /// Exact wire cost of the framed layout: `32 + 8 + b·p` (the fixed
+    /// cost plus the [`WIDTH_FIELD_BITS`]-bit width field).
+    pub fn wire_bits_framed(&self) -> usize {
+        32 + WIDTH_FIELD_BITS as usize + self.bits as usize * self.codes.len()
+    }
+
+    /// Serialize the framed layout `[f32 radius][u8 width][codes]` into a
+    /// caller-retained writer (cleared first) — same zero-allocation
+    /// contract as [`Self::encode_into`].
+    pub fn encode_framed_into(&self, w: &mut BitWriter) {
+        w.clear();
+        w.write_f32(self.radius);
+        w.write(self.bits as u64, WIDTH_FIELD_BITS);
+        pack_codes(&self.codes, self.bits, w);
+        debug_assert_eq!(w.len_bits(), self.wire_bits_framed());
+    }
+
+    /// Serialize to the framed physical wire format.
+    pub fn encode_framed(&self) -> Vec<u8> {
+        let mut w = BitWriter::with_capacity_bits(self.wire_bits_framed());
+        self.encode_framed_into(&mut w);
+        w.into_bytes()
+    }
+
+    /// Deserialize the framed layout into a caller-retained message,
+    /// recovering the width from the wire — the decoder needs only the
+    /// dimension `p` from the session.
+    ///
+    /// # Errors
+    ///
+    /// Returns [`Error::Codec`] when the buffer is truncated or the wire
+    /// width field falls outside `1..=16`.
+    pub fn decode_framed_into(buf: &[u8], p: usize, out: &mut Self) -> Result<()> {
+        let mut r = BitReader::new(buf);
+        let radius = r
+            .read_f32()
+            .ok_or_else(|| Error::Codec("truncated framed innovation header".into()))?;
+        let bits = r
+            .read(WIDTH_FIELD_BITS)
+            .ok_or_else(|| Error::Codec("truncated framed innovation width".into()))?
+            as u32;
+        if !(1..=16).contains(&bits) {
+            return Err(Error::Codec(format!(
+                "framed innovation width {bits} out of range 1..=16"
+            )));
+        }
+        unpack_codes_into(&mut r, bits, p, &mut out.codes)
+            .ok_or_else(|| Error::Codec("truncated framed innovation codes".into()))?;
+        out.radius = radius;
+        out.bits = bits;
+        Ok(())
+    }
+
+    /// Deserialize the framed layout (allocating convenience form).
+    ///
+    /// # Errors
+    ///
+    /// See [`Self::decode_framed_into`].
+    pub fn decode_framed(buf: &[u8], p: usize) -> Result<Self> {
+        let mut out = Self { radius: 0.0, codes: Vec::with_capacity(p), bits: 1 };
+        Self::decode_framed_into(buf, p, &mut out)?;
         Ok(out)
     }
 }
@@ -79,6 +179,16 @@ impl QuantizedInnovation {
 #[inline(always)]
 pub fn reconstruct_coord(q_prev: f32, two_tau_r: f32, code: u32, radius: f32) -> f32 {
     q_prev + two_tau_r * code as f32 - radius
+}
+
+/// The one grid-level count `2^b − 1`, as the exact f32 every divider
+/// uses.  Worker quantize, server dequantize and the sharded absorber
+/// (which dequantizes at each payload's own landing width under adaptive
+/// bit schedules) all MUST derive `2τR` from this same value — it lives
+/// here, next to [`reconstruct_coord`], for the same reason.
+#[inline(always)]
+pub fn grid_levels_f32(bits: u32) -> f32 {
+    ((1u32 << bits) - 1) as f32
 }
 
 /// Stateless quantizer for a fixed bit-width.
@@ -123,7 +233,7 @@ impl InnovationQuantizer {
     ) -> f32 {
         assert_eq!(g.len(), q_prev.len());
         assert_eq!(g.len(), q_new_out.len());
-        let num_levels = self.num_levels() as f32;
+        let num_levels = grid_levels_f32(self.bits);
         let radius = crate::util::tensor::norm_inf_diff(g, q_prev);
         // mirror the Pallas kernel exactly (f32 throughout):
         let two_tau_r = 2.0f32 * radius / num_levels;
@@ -163,7 +273,7 @@ impl InnovationQuantizer {
     ) {
         assert_eq!(qi.codes.len(), q_prev.len());
         assert_eq!(qi.bits, self.bits);
-        let two_tau_r = 2.0f32 * qi.radius / self.num_levels() as f32;
+        let two_tau_r = 2.0f32 * qi.radius / grid_levels_f32(self.bits);
         for i in 0..q_prev.len() {
             q_new_out[i] = reconstruct_coord(q_prev[i], two_tau_r, qi.codes[i], qi.radius);
         }
@@ -282,6 +392,56 @@ mod tests {
         assert_eq!(qi.codes[1], 0);
         assert!((q_new[0] - 2.0).abs() < 1e-6);
         assert!((q_new[1] + 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn framed_roundtrip_recovers_the_width_from_the_wire() {
+        for bits in [1u32, 2, 3, 4, 8, 16] {
+            let q = InnovationQuantizer::new(bits);
+            let (g, qp) = pair(200 + bits as u64, 321);
+            let (qi, _) = q.quantize(&g, &qp);
+            let bytes = qi.encode_framed();
+            assert_eq!(bytes.len(), qi.wire_bits_framed().div_ceil(8), "bits={bits}");
+            assert_eq!(qi.wire_bits_framed(), qi.wire_bits() + 8);
+            // decoder learns the width from the wire, not the session
+            let back = QuantizedInnovation::decode_framed(&bytes, 321).unwrap();
+            assert_eq!(back, qi, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn framed_retained_buffer_roundtrip_tracks_changing_widths() {
+        // one retained writer + rx message, widths varying message to
+        // message — the adaptive wire path's exact shape
+        let mut w = crate::util::bitio::BitWriter::new();
+        let mut rx = QuantizedInnovation { radius: 0.0, codes: Vec::new(), bits: 1 };
+        let qp = vec![0.0f32; 128];
+        for (round, bits) in [3u32, 1, 8, 2, 16].into_iter().enumerate() {
+            let q = InnovationQuantizer::new(bits);
+            let (g, _) = pair(300 + round as u64, 128);
+            let (qi, _) = q.quantize(&g, &qp);
+            qi.encode_framed_into(&mut w);
+            assert_eq!(w.as_bytes(), qi.encode_framed().as_slice(), "round {round}");
+            QuantizedInnovation::decode_framed_into(w.as_bytes(), 128, &mut rx).unwrap();
+            assert_eq!(rx, qi, "round {round}");
+        }
+    }
+
+    #[test]
+    fn framed_rejects_truncation_and_bad_width() {
+        let q = InnovationQuantizer::new(3);
+        let (g, qp) = pair(6, 64);
+        let (qi, _) = q.quantize(&g, &qp);
+        let bytes = qi.encode_framed();
+        assert!(QuantizedInnovation::decode_framed(&bytes[..3], 64).is_err());
+        assert!(QuantizedInnovation::decode_framed(&bytes[..5], 64).is_err());
+        assert!(QuantizedInnovation::decode_framed(&bytes, 65).is_err());
+        // corrupt the width field (byte 4, after the f32 radius)
+        let mut bad = bytes.clone();
+        bad[4] = 0;
+        assert!(QuantizedInnovation::decode_framed(&bad, 64).is_err());
+        bad[4] = 200;
+        assert!(QuantizedInnovation::decode_framed(&bad, 64).is_err());
     }
 
     #[test]

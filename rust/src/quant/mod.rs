@@ -11,6 +11,11 @@
 //! All codecs produce *physical* wire buffers through [`crate::util::bitio`]
 //! so the communication accounting in [`crate::comm`] counts real bits.
 //!
+//! [`schedule`] holds the adaptive per-worker bit-width policies (the
+//! "dial-a-bit" [`schedule::BitSchedule`] trait): the innovation codec's
+//! width `b` can vary per (worker, round), carried on the wire by the
+//! framed layout documented in [`innovation`].
+//!
 //! The innovation codec is the per-iteration hot path, so its whole
 //! pipeline runs on caller-retained buffers: `quantize_into` fills a
 //! caller-provided codes scratch (no `vec![0u32; p]` per upload),
@@ -22,7 +27,9 @@
 
 pub mod innovation;
 pub mod qsgd;
+pub mod schedule;
 pub mod signef;
 pub mod sparsify;
 
 pub use innovation::{InnovationQuantizer, QuantizedInnovation};
+pub use schedule::{BitSchedule, FixedBits, InnovationAdaptive, RoundDecay, WorkerBitState};

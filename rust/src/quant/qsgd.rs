@@ -38,6 +38,12 @@ impl QsgdMessage {
         w.into_bytes()
     }
 
+    /// Deserialize from the wire (needs `bits` and `p` from the session).
+    ///
+    /// # Errors
+    ///
+    /// Returns [`crate::Error::Codec`] when `buf` is too short for the
+    /// norm header or for `p` sign+level fields of `bits + 1` bits.
     pub fn decode(buf: &[u8], bits: u32, p: usize) -> Result<Self> {
         let mut r = BitReader::new(buf);
         let norm = r

@@ -1,0 +1,299 @@
+//! Adaptive per-worker bit-width ("dial-a-bit") schedules.
+//!
+//! The paper fixes the innovation quantizer's width `b` for a whole run,
+//! but its own selection criterion already measures how *informative*
+//! each worker's update is — the ratio of the criterion's left-hand side
+//! (the innovation magnitude `‖Q_m^new − Q_m^prev‖²`) to its right-hand
+//! side (the skip threshold).  Adaptive-precision schemes in the LAQ
+//! lineage (AdaQuantFL, multi-level A-LAQ) exploit exactly this signal to
+//! spend bits where they buy convergence and save them where they don't.
+//! A [`BitSchedule`] turns the session-constant `b` into a per-(worker,
+//! round) *policy*:
+//!
+//! | policy | rule |
+//! |--------|------|
+//! | [`FixedBits`] | `width = b` always — today's behavior, bit-identical |
+//! | [`RoundDecay`] | `bits_max` for the first [`RoundDecay::warm_rounds`] rounds, then one bit fewer every [`RoundDecay::decay_every`] rounds, floored at `bits_min` — a pure function of the round index |
+//! | [`InnovationAdaptive`] | per-worker: an EMA of the criterion ratio `lhs/rhs` maps linearly onto `[bits_min, bits_max]` (see [`BitSchedule::width`]) |
+//!
+//! # Determinism contract
+//!
+//! The trainer calls [`BitSchedule::width`] on the coordinator *before*
+//! each round's worker fan-out and folds the round's decisions back via
+//! [`BitSchedule::observe`] on the coordinator in worker index order —
+//! so a worker's width sequence is a pure function of (seed, config),
+//! never of thread timing or shard count, exactly like the wire landing
+//! schedules (pinned by `rust/tests/bit_schedule.rs` and the policy
+//! properties in `rust/tests/prop_quant.rs`).
+//!
+//! # Zero allocation
+//!
+//! Policies are stateless objects; all mutable state lives in the
+//! caller-retained per-worker [`WorkerBitState`], and both trait methods
+//! are plain arithmetic — the adaptive hot path allocates nothing
+//! (pinned alongside the other engines in `rust/tests/alloc_steady_state.rs`).
+
+/// Cap on a single round's criterion ratio before it enters the EMA, so
+/// one `rhs ≈ 0` round (empty Δθ-history at the very start) cannot lock
+/// the EMA at infinity.
+pub const RATIO_CAP: f64 = 4.0;
+
+/// EMA weight on the newest ratio observation (the remainder stays on
+/// the running state).  0.5 makes the width respond within a few rounds
+/// of the innovation regime changing without chattering on single-round
+/// noise.
+pub const EMA_NEW: f64 = 0.5;
+
+/// Per-worker adaptive-width state, owned by the trainer (one per
+/// worker) and persisted in v4 checkpoints so adaptive runs resume
+/// bit-exactly.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WorkerBitState {
+    /// EMA of the criterion ratio `lhs / rhs` — the informativeness
+    /// signal the [`InnovationAdaptive`] policy dials the width with
+    pub ratio_ema: f64,
+    /// width chosen for this worker's most recent round (observability /
+    /// checkpoint payload; policies never read it)
+    pub last_width: u32,
+}
+
+impl Default for WorkerBitState {
+    fn default() -> Self {
+        // start at ratio 1.0 — the upload/skip boundary — so the first
+        // rounds transmit at full width until real evidence arrives
+        Self { ratio_ema: 1.0, last_width: 0 }
+    }
+}
+
+/// A per-(worker, round) transmit-width policy for the innovation codec.
+///
+/// Implementations must keep [`Self::width`] a pure function of its
+/// arguments and [`Self::observe`] a deterministic fold — the trainer's
+/// reproducibility guarantees (same trace for the same (seed, config)
+/// across threads × shards) rest on it.
+pub trait BitSchedule: Send + Sync {
+    /// Policy name, as spelled by the `bit_schedule` config knob.
+    fn name(&self) -> &'static str;
+
+    /// Smallest width this policy can choose.
+    fn min_width(&self) -> u32;
+
+    /// Largest width this policy can choose (what the wire buffers and
+    /// in-flight rings are pre-sized for).
+    fn max_width(&self) -> u32;
+
+    /// Does every round use one constant width?  Fixed schedules keep
+    /// the paper's session-negotiated wire layout (no per-message width
+    /// field) and must stay bit-identical to the pre-schedule trainer.
+    fn is_fixed(&self) -> bool {
+        self.min_width() == self.max_width()
+    }
+
+    /// Transmit width for `(worker, round)` given the worker's state.
+    /// Always within `min_width()..=max_width()`.
+    fn width(&self, state: &WorkerBitState, worker: usize, round: usize) -> u32;
+
+    /// Fold one round's criterion outcome (`lhs` vs `rhs`, and whether
+    /// the upload fired) into the worker's state.  Called by the
+    /// coordinator in worker index order once per round.
+    fn observe(&self, _state: &mut WorkerBitState, _lhs: f64, _rhs: f64, _uploaded: bool) {}
+}
+
+/// The paper's behavior: one constant width for the whole run.
+#[derive(Clone, Copy, Debug)]
+pub struct FixedBits {
+    pub bits: u32,
+}
+
+impl BitSchedule for FixedBits {
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+
+    fn min_width(&self) -> u32 {
+        self.bits
+    }
+
+    fn max_width(&self) -> u32 {
+        self.bits
+    }
+
+    fn width(&self, _state: &WorkerBitState, _worker: usize, _round: usize) -> u32 {
+        self.bits
+    }
+}
+
+/// Warm high-bit rounds, then decay one bit at a time down to a floor —
+/// the "coarse refinement late" end of the adaptive-precision design
+/// space (early iterations need fidelity to find the right basin; late
+/// innovations are small and survive coarser grids).  A pure function of
+/// the round index, identical for every worker.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundDecay {
+    pub bits_min: u32,
+    pub bits_max: u32,
+    /// rounds spent at `bits_max` before the first decay step
+    pub warm_rounds: usize,
+    /// rounds between successive one-bit decay steps
+    pub decay_every: usize,
+}
+
+impl RoundDecay {
+    /// Default cadence: 32 warm rounds, then one bit fewer every 32
+    /// rounds until the floor.
+    pub fn new(bits_min: u32, bits_max: u32) -> Self {
+        Self { bits_min, bits_max, warm_rounds: 32, decay_every: 32 }
+    }
+}
+
+impl BitSchedule for RoundDecay {
+    fn name(&self) -> &'static str {
+        "round-decay"
+    }
+
+    fn min_width(&self) -> u32 {
+        self.bits_min
+    }
+
+    fn max_width(&self) -> u32 {
+        self.bits_max
+    }
+
+    fn width(&self, _state: &WorkerBitState, _worker: usize, round: usize) -> u32 {
+        if round < self.warm_rounds {
+            return self.bits_max;
+        }
+        let steps = ((round - self.warm_rounds) / self.decay_every.max(1)) as u32 + 1;
+        self.bits_max.saturating_sub(steps).max(self.bits_min)
+    }
+}
+
+/// Per-worker width driven by the worker's own lazy-criterion innovation
+/// ratio: the EMA of `lhs/rhs` (capped at [`RATIO_CAP`], clamped to
+/// `[0, 1]`) maps linearly onto `[bits_min, bits_max]`.
+///
+/// Intuition: a worker whose innovations hover near or above the skip
+/// threshold (`ratio ≥ 1`) is in an informative regime — its uploads
+/// move θ, so they go out at full width.  A worker deep in the skipping
+/// regime (`ratio ≪ 1`) transmits rarely, and when it does (criterion
+/// blip or the `t̄` forced refresh) the innovation is small enough that a
+/// coarse grid loses nothing the slack term `3(‖ε‖² + ‖ε̂‖²)` doesn't
+/// already budget for — those uploads go out near `bits_min`.
+#[derive(Clone, Copy, Debug)]
+pub struct InnovationAdaptive {
+    pub bits_min: u32,
+    pub bits_max: u32,
+}
+
+impl BitSchedule for InnovationAdaptive {
+    fn name(&self) -> &'static str {
+        "innovation"
+    }
+
+    fn min_width(&self) -> u32 {
+        self.bits_min
+    }
+
+    fn max_width(&self) -> u32 {
+        self.bits_max
+    }
+
+    /// `width = bits_min + round(clamp(ratio_ema, 0, 1) · (bits_max − bits_min))`.
+    fn width(&self, state: &WorkerBitState, _worker: usize, _round: usize) -> u32 {
+        let s = state.ratio_ema.clamp(0.0, 1.0);
+        let range = (self.bits_max - self.bits_min) as f64;
+        self.bits_min + (s * range).round() as u32
+    }
+
+    fn observe(&self, state: &mut WorkerBitState, lhs: f64, rhs: f64, _uploaded: bool) {
+        let ratio = if rhs > 0.0 { (lhs / rhs).min(RATIO_CAP) } else { RATIO_CAP };
+        state.ratio_ema = (1.0 - EMA_NEW) * state.ratio_ema + EMA_NEW * ratio;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_is_constant_and_fixed() {
+        let s = FixedBits { bits: 3 };
+        let st = WorkerBitState::default();
+        assert!(s.is_fixed());
+        for k in 0..100 {
+            assert_eq!(s.width(&st, k % 7, k), 3);
+        }
+        assert_eq!((s.min_width(), s.max_width()), (3, 3));
+    }
+
+    #[test]
+    fn round_decay_warms_decays_and_floors() {
+        let s = RoundDecay { bits_min: 2, bits_max: 8, warm_rounds: 10, decay_every: 5 };
+        let st = WorkerBitState::default();
+        assert!(!s.is_fixed());
+        // warm period at bits_max
+        for k in 0..10 {
+            assert_eq!(s.width(&st, 0, k), 8, "round {k}");
+        }
+        // first decay step lands immediately after the warm period
+        assert_eq!(s.width(&st, 0, 10), 7);
+        assert_eq!(s.width(&st, 0, 14), 7);
+        assert_eq!(s.width(&st, 0, 15), 6);
+        // monotone non-increasing, floored at bits_min
+        let mut prev = 8;
+        for k in 0..200 {
+            let w = s.width(&st, 0, k);
+            assert!(w <= prev, "width increased at round {k}");
+            assert!((2..=8).contains(&w));
+            prev = w;
+        }
+        assert_eq!(s.width(&st, 0, 199), 2, "floor never reached");
+    }
+
+    #[test]
+    fn innovation_tracks_the_criterion_ratio() {
+        let s = InnovationAdaptive { bits_min: 2, bits_max: 8 };
+        let mut st = WorkerBitState::default();
+        // the default state (ratio 1.0) starts at full width
+        assert_eq!(s.width(&st, 0, 0), 8);
+        // a streak of above-threshold innovations pins the width at max
+        for _ in 0..10 {
+            s.observe(&mut st, 5.0, 1.0, true);
+        }
+        assert_eq!(s.width(&st, 0, 0), 8);
+        // a long skipping streak (tiny innovations) dials down to the floor
+        for _ in 0..40 {
+            s.observe(&mut st, 1e-9, 1.0, false);
+        }
+        assert_eq!(s.width(&st, 0, 0), 2);
+        // recovery: informative rounds dial the width back up
+        for _ in 0..10 {
+            s.observe(&mut st, 2.0, 1.0, true);
+        }
+        assert_eq!(s.width(&st, 0, 0), 8);
+    }
+
+    #[test]
+    fn innovation_handles_degenerate_rhs_without_poisoning_state() {
+        let s = InnovationAdaptive { bits_min: 1, bits_max: 4 };
+        let mut st = WorkerBitState::default();
+        s.observe(&mut st, 3.0, 0.0, true); // rhs == 0: capped, not inf
+        assert!(st.ratio_ema.is_finite());
+        assert!((1..=4).contains(&s.width(&st, 0, 0)));
+    }
+
+    #[test]
+    fn observe_is_a_deterministic_fold() {
+        let s = InnovationAdaptive { bits_min: 2, bits_max: 6 };
+        let mut a = WorkerBitState::default();
+        let mut b = WorkerBitState::default();
+        for i in 0..50u32 {
+            let lhs = (i as f64 * 0.37).sin().abs();
+            let rhs = 0.5 + (i as f64 * 0.11).cos().abs();
+            s.observe(&mut a, lhs, rhs, lhs > rhs);
+            s.observe(&mut b, lhs, rhs, lhs > rhs);
+            assert_eq!(a, b, "state fold diverged at step {i}");
+            assert_eq!(s.width(&a, 0, i as usize), s.width(&b, 0, i as usize));
+        }
+    }
+}

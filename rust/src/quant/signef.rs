@@ -32,6 +32,12 @@ impl SignMessage {
         w.into_bytes()
     }
 
+    /// Deserialize from the wire (needs `p` from the session).
+    ///
+    /// # Errors
+    ///
+    /// Returns [`crate::Error::Codec`] when `buf` is too short for the
+    /// scale header plus `p` sign bits.
     pub fn decode(buf: &[u8], p: usize) -> Result<Self> {
         let mut r = BitReader::new(buf);
         let scale = r

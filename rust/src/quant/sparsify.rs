@@ -33,6 +33,12 @@ impl SparseMessage {
         w.into_bytes()
     }
 
+    /// Deserialize from the wire (needs the dimension from the session).
+    ///
+    /// # Errors
+    ///
+    /// Returns [`crate::Error::Codec`] on a truncated buffer or an index
+    /// outside `0..dim`.
     pub fn decode(buf: &[u8], dim: usize) -> Result<Self> {
         let mut r = BitReader::new(buf);
         let nnz = r

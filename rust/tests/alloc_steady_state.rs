@@ -144,6 +144,23 @@ fn laq_step_is_allocation_free_after_warmup() {
         );
     }
 
+    // adaptive bit schedule: per-(worker, round) widths ride the framed
+    // self-describing wire layout through the same retained buffers
+    // (enc scratch pre-sized for bits_max + the width field, codes/rx
+    // reused across width changes) and the schedule fold is plain
+    // arithmetic on retained per-worker state — still zero allocations
+    for (threads, shards) in [(1usize, 1usize), (2, 2)] {
+        let mut ad = laq_cfg("mnist", 240, threads, shards);
+        ad.bit_schedule = laq::config::BitScheduleKind::Innovation;
+        ad.bits_min = 2;
+        ad.bits_max = 4;
+        let n = count_steps(&ad, 30, 40);
+        assert_eq!(
+            n, 0,
+            "adaptive-width ({threads}x{shards}) LAQ step allocated {n} times after warmup"
+        );
+    }
+
     // cross-round staleness: deferred uploads park in pre-warmed
     // per-(worker, round) wire-slot rings and the in-flight bookkeeping
     // (lags, deadlines, pending list) refills retained buffers — still

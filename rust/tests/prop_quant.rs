@@ -7,6 +7,9 @@ use laq::comm::Payload;
 use laq::prop_assert;
 use laq::quant::innovation::{InnovationQuantizer, QuantizedInnovation};
 use laq::quant::qsgd::{QsgdMessage, QsgdQuantizer};
+use laq::quant::schedule::{
+    BitSchedule, FixedBits, InnovationAdaptive, RoundDecay, WorkerBitState,
+};
 use laq::quant::signef::SignEfCompressor;
 use laq::quant::sparsify::{SparseMessage, Sparsifier};
 use laq::util::prop::Prop;
@@ -208,6 +211,80 @@ fn wire_bits_equals_physically_serialized_size() {
                     bytes == declared.div_ceil(8),
                     "declared {declared} bits but serialized {bytes} bytes"
                 );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn framed_innovation_roundtrip_recovers_width_exactly() {
+    // the self-describing layout adaptive bit schedules transmit: the
+    // decoder must recover (radius, width, codes) bit-exactly from the
+    // wire alone, and the framed size must be the fixed size + the
+    // 8-bit width field
+    Prop::new().check("framed innovation wire roundtrip", |rng| {
+        let p = 1 + rng.below(2500) as usize;
+        let bits = 1 + rng.below(16) as u32;
+        let scale = 10f64.powf(rng.uniform_range(-3.0, 3.0));
+        let g = rand_vec(rng, p, scale);
+        let qp = rand_vec(rng, p, scale);
+        let (qi, _) = InnovationQuantizer::new(bits).quantize(&g, &qp);
+        prop_assert!(
+            qi.wire_bits_framed() == qi.wire_bits() + 8,
+            "framed size formula"
+        );
+        let bytes = qi.encode_framed();
+        prop_assert!(
+            bytes.len() == qi.wire_bits_framed().div_ceil(8),
+            "framed serialized size"
+        );
+        let back =
+            QuantizedInnovation::decode_framed(&bytes, p).map_err(|e| e.to_string())?;
+        prop_assert!(back == qi, "framed roundtrip mismatch p={p} bits={bits}");
+        Ok(())
+    });
+}
+
+#[test]
+fn every_bit_schedule_stays_in_range_and_is_a_pure_fold() {
+    // for every policy: the chosen width is always inside
+    // [bits_min, bits_max], is a pure function of (state, worker, round),
+    // and identical observation streams fold to identical states — the
+    // trainer's (seed, config)-purity contract at the policy level
+    Prop::new().check("bit schedules: in-range + pure", |rng| {
+        let bits_min = 1 + rng.below(8) as u32;
+        let span = rng.below((16 - bits_min) as u64 + 1) as u32;
+        let bits_max = bits_min + span;
+        let policies: Vec<Box<dyn BitSchedule>> = vec![
+            Box::new(FixedBits { bits: bits_min }),
+            Box::new(RoundDecay::new(bits_min, bits_max)),
+            Box::new(InnovationAdaptive { bits_min, bits_max }),
+        ];
+        for sched in &policies {
+            let mut st = WorkerBitState::default();
+            let mut st2 = WorkerBitState::default();
+            for k in 0..120usize {
+                let m = rng.below(8) as usize;
+                let w = sched.width(&st, m, k);
+                prop_assert!(
+                    (sched.min_width()..=sched.max_width()).contains(&w),
+                    "{}: width {w} outside [{}, {}]",
+                    sched.name(),
+                    sched.min_width(),
+                    sched.max_width()
+                );
+                prop_assert!(
+                    sched.width(&st, m, k) == w && sched.width(&st2, m, k) == w,
+                    "{}: width not a pure function of (state, worker, round)",
+                    sched.name()
+                );
+                // fold one identical observation into both state copies
+                let lhs = rng.uniform_range(0.0, 10.0);
+                let rhs = rng.uniform_range(0.0, 10.0);
+                sched.observe(&mut st, lhs, rhs, lhs > rhs);
+                sched.observe(&mut st2, lhs, rhs, lhs > rhs);
+                prop_assert!(st == st2, "{}: state fold diverged", sched.name());
             }
         }
         Ok(())
