@@ -21,7 +21,7 @@
 
 use laq::algo::{build_native, Trainer};
 use laq::comm::{LatencyModel, Payload};
-use laq::config::{Algo, BitScheduleKind, ModelKind, RunCfg, WireMode};
+use laq::config::{Algo, BitScheduleKind, DownlinkMode, ModelKind, RunCfg, WireMode};
 use laq::coordinator::worker::{LazyCodec, WorkerNode};
 use laq::coordinator::ServerState;
 use laq::experiments::{self, ExpOpts};
@@ -443,23 +443,32 @@ fn bench_trainer_wire(quick: bool, entries: &mut Vec<Json>) {
     }
 }
 
-/// Tentpole bench: the dial-a-bit win — total uploaded bits and final
-/// loss at a matched round count, fixed b=3 vs the adaptive schedules
-/// over the strongly convex logreg benchmark.  The `innovation` policy
-/// must land near the fixed final loss on strictly fewer bits (the
-/// framed layout costs each message 8 header bits, so the saving comes
-/// from genuinely narrower uploads).  Emits the `trainer_bits` group
-/// into BENCH_trainer.json.
+/// Tentpole bench: the dial-a-bit win — total traffic and final loss at
+/// a matched round count, fixed b=3 vs the adaptive schedules over the
+/// strongly convex logreg benchmark, plus the bidirectional row: the
+/// same adaptive uplink with the θ broadcast quantized
+/// (`downlink = quantized`).  Bits are recorded per direction
+/// (`uplink_bits` / `downlink_bits` / `total_bits` — the downlink has
+/// always been billed into sim_time, so the total is only honest with
+/// both), and the quantized-downlink row must land near the
+/// exact-downlink final loss on strictly fewer total bits (the hard
+/// contract lives in `rust/tests/downlink.rs`).  Emits the
+/// `trainer_bits` group into BENCH_trainer.json.
 fn bench_bit_schedules(quick: bool, entries: &mut Vec<Json>) {
-    println!("\n== dial-a-bit: uploaded bits at matched round count (LAQ logreg, sync) ==");
+    println!("\n== dial-a-bit: total traffic at matched round count (LAQ logreg, sync) ==");
     let iters = if quick { 150 } else { 400 };
-    println!("   (mnist-like p=7840, M=4, {iters} rounds, fixed b=3 vs adaptive [2,3])");
+    println!(
+        "   (mnist-like p=7840, M=4, {iters} rounds, fixed b=3 vs adaptive [2,3] vs quantized downlink [2,8])"
+    );
     let mut fixed_bits_total = 0u64;
     let mut fixed_loss = f64::NAN;
-    for (label, kind, bmin, bmax) in [
-        ("fixed-b3", BitScheduleKind::Fixed, 3u32, 3u32),
-        ("round-decay-2-3", BitScheduleKind::RoundDecay, 2, 3),
-        ("innovation-2-3", BitScheduleKind::Innovation, 2, 3),
+    let mut exact_down_total = 0u64;
+    let mut exact_down_loss = f64::NAN;
+    for (label, kind, bmin, bmax, downlink) in [
+        ("fixed-b3", BitScheduleKind::Fixed, 3u32, 3u32, DownlinkMode::Exact),
+        ("round-decay-2-3", BitScheduleKind::RoundDecay, 2, 3, DownlinkMode::Exact),
+        ("innovation-2-3", BitScheduleKind::Innovation, 2, 3, DownlinkMode::Exact),
+        ("innovation-2-3+down-2-8", BitScheduleKind::Innovation, 2, 3, DownlinkMode::Quantized),
     ] {
         let mut cfg = RunCfg::paper_logreg(Algo::Laq);
         cfg.data.n_train = 240;
@@ -473,6 +482,9 @@ fn bench_bit_schedules(quick: bool, entries: &mut Vec<Json>) {
         cfg.bit_schedule = kind;
         cfg.bits_min = bmin;
         cfg.bits_max = bmax;
+        cfg.downlink = downlink;
+        cfg.down_bits_min = 2;
+        cfg.down_bits_max = 8;
         cfg.iters = iters;
         let mut t = build_native(&cfg).unwrap();
         let t0 = Instant::now();
@@ -481,29 +493,45 @@ fn bench_bit_schedules(quick: bool, entries: &mut Vec<Json>) {
             last_loss = t.step().unwrap().loss;
         }
         let wall = t0.elapsed().as_secs_f64();
-        let bits = t.net.uplink_bits();
+        let up = t.net.uplink_bits();
+        let down = t.net.downlink_bits();
+        let total = up + down;
         let rounds = t.net.uplink_rounds();
         println!(
-            "{label:<20} rounds {rounds:>5}  bits {bits:>12}  final loss {last_loss:.6e}  ({wall:.2}s)"
+            "{label:<24} rounds {rounds:>5}  bits up {up:>12} + down {down:>12} = {total:>12}  final loss {last_loss:.6e}  ({wall:.2}s)"
         );
         if kind == BitScheduleKind::Fixed {
-            fixed_bits_total = bits;
+            fixed_bits_total = total;
             fixed_loss = last_loss;
         } else if fixed_bits_total > 0 {
             println!(
-                "{:<20} {:.3}× the fixed bit budget, loss Δ {:+.2e}",
+                "{:<24} {:.3}× the fixed total-bit budget, loss Δ {:+.2e}",
                 format!("  -> {label}"),
-                bits as f64 / fixed_bits_total as f64,
+                total as f64 / fixed_bits_total as f64,
                 last_loss - fixed_loss
+            );
+        }
+        if label == "innovation-2-3" {
+            exact_down_total = total;
+            exact_down_loss = last_loss;
+        } else if downlink == DownlinkMode::Quantized && exact_down_total > 0 {
+            println!(
+                "{:<24} {:.3}× the exact-downlink total, loss Δ {:+.2e} (quantized θ broadcast)",
+                format!("  -> {label}"),
+                total as f64 / exact_down_total as f64,
+                last_loss - exact_down_loss
             );
         }
         entries.push(Json::obj(vec![
             ("group", Json::Str("trainer_bits".into())),
             ("bench", Json::Str(format!("laq_{label}"))),
             ("schedule", Json::Str(label.into())),
+            ("downlink", Json::Str(downlink.name().into())),
             ("iters", Json::Num(iters as f64)),
             ("rounds", Json::Num(rounds as f64)),
-            ("total_bits", Json::Num(bits as f64)),
+            ("uplink_bits", Json::Num(up as f64)),
+            ("downlink_bits", Json::Num(down as f64)),
+            ("total_bits", Json::Num(total as f64)),
             ("final_loss", Json::Num(last_loss)),
             ("wall_s", Json::Num(wall)),
         ]));

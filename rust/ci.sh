@@ -6,6 +6,8 @@
 #   (3) async wire phase          — LAQ_THREADS=4 LAQ_SHARDS=4 LAQ_WIRE_MODE=async
 #   (4) cross-round staleness     — LAQ_THREADS=4 LAQ_SHARDS=4
 #                                   LAQ_WIRE_MODE=async-cross LAQ_STALENESS=2
+#   (5) quantized downlink, sync  — LAQ_DOWNLINK=quantized
+#   (6) quantized downlink, async — LAQ_DOWNLINK=quantized LAQ_WIRE_MODE=async
 # The parallel/sharded/wire equivalence tests pin all three knobs to
 # bit-identical traces (async at the default staleness_bound=0 keeps the
 # sync absorb order, so the whole suite doubles as an async regression
@@ -58,9 +60,20 @@ LAQ_THREADS=4 LAQ_SHARDS=4 LAQ_WIRE_MODE=async cargo test -q
 echo "== tests, cross-round staleness (LAQ_WIRE_MODE=async-cross LAQ_STALENESS=2) =="
 LAQ_THREADS=4 LAQ_SHARDS=4 LAQ_WIRE_MODE=async-cross LAQ_STALENESS=2 cargo test -q
 
+echo "== tests, quantized downlink, sync (LAQ_DOWNLINK=quantized) =="
+LAQ_THREADS=4 LAQ_SHARDS=4 LAQ_DOWNLINK=quantized cargo test -q
+
+echo "== tests, quantized downlink, async (LAQ_DOWNLINK=quantized LAQ_WIRE_MODE=async) =="
+LAQ_THREADS=4 LAQ_SHARDS=4 LAQ_DOWNLINK=quantized LAQ_WIRE_MODE=async cargo test -q
+
 echo "== bench smoke (quick mode -> BENCH_server.json + BENCH_trainer.json) =="
 LAQ_BENCH_QUICK=1 cargo bench
 test -f BENCH_server.json && echo "BENCH_server.json present"
 test -f BENCH_trainer.json && echo "BENCH_trainer.json present"
+# the trainer_bits group must report traffic split by direction — the
+# downlink accounting satellite's machine-readable contract
+grep -q '"uplink_bits"' BENCH_trainer.json
+grep -q '"downlink_bits"' BENCH_trainer.json
+echo "BENCH_trainer.json carries uplink_bits/downlink_bits"
 
 echo "== ci OK =="

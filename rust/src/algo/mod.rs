@@ -146,6 +146,29 @@
 //! trainer (goldens in `rust/tests/wire_equivalence.rs`); the adaptive
 //! contracts live in `rust/tests/bit_schedule.rs`.
 //!
+//! # Downlink compression
+//!
+//! `cfg.downlink` picks how θ reaches the workers each round — one
+//! broadcast message, billed through the single-source wire-size
+//! functions in [`crate::comm`].  `exact` (default) sends raw IEEE θ
+//! ([`Network::downlink_dense_bits`]), bit-identical to the
+//! pre-downlink trainer.  `quantized` sends the θ innovation
+//! `θ^k − mirror` per **fixed** `DELTA_BLOCK` coordinate shard through
+//! the same framed innovation codec the uplink uses: the coordinator
+//! picks each shard's width from a downlink [`BitSchedule`] (range
+//! `down_bits_min..=down_bits_max`, shard index in the worker seat,
+//! driven by each shard's θ movement), encodes against a mirrored
+//! downlink stream, and every worker reconstructs θ **from the wire**
+//! against the same mirror — the identical mirror-recursion discipline
+//! the uplink uses, so the worker view and the server's encoder state
+//! never drift.  The shard partition deliberately ignores
+//! `cfg.server_shards` (a pure wall-clock knob) and the whole broadcast
+//! runs on the coordinator *before* the wire-mode match, so quantized
+//! downlink traces stay a pure function of (seed, config) across
+//! threads × shards under every wire mode.  The first broadcast primes
+//! the mirror with one exact message.  Checkpoints persist the mirror
+//! and the schedule fold state (v5).
+//!
 //! # Steady-state allocation
 //!
 //! For the lazy full-gradient algorithms (LAQ above all) the whole step —
@@ -163,13 +186,14 @@ pub use build::{build, build_native, build_pjrt};
 use std::sync::atomic::{AtomicU8, Ordering};
 
 use crate::comm::{LatencyModel, Network, Payload, WireSlot};
-use crate::config::{Algo, BitScheduleKind, RunCfg, WireMode};
-use crate::coordinator::server::{WireSync, WIRE_PENDING, WIRE_SKIP, WIRE_UPLOAD};
+use crate::config::{Algo, BitScheduleKind, DownlinkMode, RunCfg, WireMode};
+use crate::coordinator::server::{DELTA_BLOCK, WireSync, WIRE_PENDING, WIRE_SKIP, WIRE_UPLOAD};
 use crate::coordinator::worker::{LazyCodec, LazyDecision, WorkerNode};
 use crate::coordinator::ServerState;
 use crate::data::shard::Batcher;
 use crate::metrics::{RunResult, TracePoint};
 use crate::model::WorkerGrad;
+use crate::quant::innovation::{InnovationQuantizer, QuantizedInnovation};
 use crate::quant::qsgd::QsgdQuantizer;
 use crate::quant::schedule::{
     BitSchedule, FixedBits, InnovationAdaptive, RoundDecay, WorkerBitState,
@@ -239,6 +263,165 @@ pub struct Trainer {
     bit_states: Vec<WorkerBitState>,
     /// this round's chosen transmit width per worker, refilled in place
     widths: Vec<u32>,
+    /// quantized-downlink state: shard partition, θ mirror, per-shard
+    /// width schedule (inert under `downlink = exact`; persisted in v5
+    /// checkpoints)
+    down: DownlinkState,
+}
+
+/// Retained state of the quantized downlink broadcast
+/// (`downlink = quantized`): the fixed shard partition, the mirrored θ
+/// both endpoints recurse on, the per-shard bit schedule with its fold
+/// state, and the one reused staged payload.  All buffers warm once in
+/// [`DownlinkState::new`]; the steady state allocates nothing.  Inert
+/// (empty vectors) under `downlink = exact`.
+struct DownlinkState {
+    /// `downlink = quantized`?
+    on: bool,
+    /// shard starts; shard `s` covers `starts[s]..starts[s + 1]` (one
+    /// trailing entry = dim).  A FIXED partition into
+    /// [`DELTA_BLOCK`]-sized blocks, deliberately independent of
+    /// `cfg.server_shards` so that knob stays purely wall-clock
+    starts: Vec<usize>,
+    /// the mirrored θ the innovation recursion encodes against —
+    /// identical on server and every worker by construction
+    mirror: Vec<f32>,
+    /// has the exact priming broadcast happened?
+    primed: bool,
+    /// per-shard downlink width policy (see [`build_downlink_schedule`])
+    schedule: Box<dyn BitSchedule>,
+    /// per-shard adaptive state, shard index in the worker seat
+    /// (persisted in v5 checkpoints)
+    states: Vec<WorkerBitState>,
+    /// this round's chosen width per shard, refilled in place
+    widths: Vec<u32>,
+    /// per-shard movement `‖θ − mirror‖²` scratch for the observe fold
+    lhs: Vec<f64>,
+    /// the one reused staged innovation message (codes refilled in place)
+    staged: Payload,
+}
+
+impl DownlinkState {
+    fn new(cfg: &RunCfg, dim: usize) -> Self {
+        let on = cfg.downlink == DownlinkMode::Quantized;
+        let mut starts = Vec::new();
+        if on {
+            let mut s = 0;
+            while s < dim {
+                starts.push(s);
+                s += DELTA_BLOCK;
+            }
+            starts.push(dim);
+        }
+        let n_shards = starts.len().saturating_sub(1);
+        Self {
+            on,
+            starts,
+            mirror: if on { vec![0.0; dim] } else { Vec::new() },
+            primed: false,
+            schedule: build_downlink_schedule(cfg),
+            states: vec![WorkerBitState::default(); n_shards],
+            widths: vec![0; n_shards],
+            lhs: vec![0.0; n_shards],
+            staged: Payload::Innovation(QuantizedInnovation {
+                radius: 0.0,
+                codes: Vec::with_capacity(dim.min(DELTA_BLOCK)),
+                bits: cfg.down_bits_max,
+            }),
+        }
+    }
+
+    fn n_shards(&self) -> usize {
+        self.starts.len().saturating_sub(1)
+    }
+}
+
+/// The quantized downlink broadcast for round `k` (a free function so
+/// the trainer can hand it field-disjoint borrows).  Per fixed shard,
+/// the server encodes the θ innovation `θ − mirror` at the shard's
+/// scheduled width, the framed message round-trips the physical
+/// downlink wire slot, and the worker view in `theta_bc` is
+/// reconstructed **from the wire** against the shared mirror; the
+/// mirror then commits to the reconstruction on both endpoints — the
+/// uplink's mirror-recursion discipline, which is what keeps every
+/// worker's θ bit-identical to the server's encoder state.  All shard
+/// messages of a round are billed as ONE broadcast message time
+/// carrying their summed framed bits ([`Network::downlink_wire_bits`]).
+/// The first call (including the first after resuming a pre-v5
+/// checkpoint) primes the mirror with one exact broadcast.
+fn quantized_broadcast(
+    k: usize,
+    theta: &[f32],
+    down: &mut DownlinkState,
+    net: &mut Network,
+    theta_bc: &mut [f32],
+) -> Result<()> {
+    if !down.primed {
+        net.broadcast(Network::downlink_dense_bits(theta.len()));
+        theta_bc.copy_from_slice(theta);
+        down.mirror.copy_from_slice(theta);
+        down.primed = true;
+        return Ok(());
+    }
+    let n_shards = down.n_shards();
+    // pass 1: per-shard movement ‖θ − mirror‖² (f64 accumulators) — the
+    // adaptive signal; rhs is the round's mean shard movement
+    let mut total = 0.0f64;
+    for s in 0..n_shards {
+        let r = down.starts[s]..down.starts[s + 1];
+        let mut acc = 0.0f64;
+        for (t, m) in theta[r.clone()].iter().zip(&down.mirror[r]) {
+            let d = (t - m) as f64;
+            acc += d * d;
+        }
+        down.lhs[s] = acc;
+        total += acc;
+    }
+    let rhs = total / n_shards.max(1) as f64;
+    // pass 2: encode → wire → reconstruct → commit, shard by shard in
+    // index order — a deterministic coordinator-side fold, so widths and
+    // bits stay a pure function of (seed, config) under every wire mode
+    // and thread/shard count
+    let mut bits_total = 0usize;
+    for s in 0..n_shards {
+        let w = down.schedule.downlink_width(&down.states[s], s, k);
+        debug_assert!(
+            (down.schedule.min_width()..=down.schedule.max_width()).contains(&w),
+            "downlink schedule chose width {w} outside its own range"
+        );
+        down.widths[s] = w;
+        down.states[s].last_width = w;
+        let quant = InnovationQuantizer::new(w);
+        let r = down.starts[s]..down.starts[s + 1];
+        {
+            let Payload::Innovation(qi) = &mut down.staged else {
+                unreachable!("the downlink stages an innovation payload");
+            };
+            qi.bits = w;
+            // theta_bc doubles as the encoder's q_new scratch; the wire
+            // reconstruction below overwrites it with the identical bits
+            qi.radius = quant.quantize_into(
+                &theta[r.clone()],
+                &down.mirror[r.clone()],
+                &mut qi.codes,
+                &mut theta_bc[r.clone()],
+            );
+        }
+        bits_total += Network::downlink_wire_bits(&down.staged);
+        let received = net.down_slot_mut().round_trip(&down.staged)?;
+        let Payload::Innovation(rx) = received else {
+            return Err(Error::Codec(
+                "downlink wire returned a non-innovation payload".into(),
+            ));
+        };
+        quant.dequantize_into(rx, &down.mirror[r.clone()], &mut theta_bc[r.clone()]);
+        // mirror recursion commit: both endpoints advance to the
+        // reconstruction, never to the raw θ
+        down.mirror[r.clone()].copy_from_slice(&theta_bc[r]);
+        down.schedule.observe(&mut down.states[s], down.lhs[s], rhs, true);
+    }
+    net.broadcast(bits_total);
+    Ok(())
 }
 
 /// Retained state of the async wire phase: the per-step deterministic
@@ -452,6 +635,12 @@ impl Trainer {
             schedule.max_width(),
             framed,
         );
+        let down = DownlinkState::new(&cfg, dim);
+        if down.on {
+            // the downlink slot carries one DELTA_BLOCK shard at a time;
+            // pre-sized for the widest message the schedule can choose
+            net.warm_down_slot(dim.min(DELTA_BLOCK), cfg.down_bits_max);
+        }
         let batchers = if cfg.algo.is_stochastic() {
             let per = cfg.batch / nodes.len();
             if per == 0 {
@@ -501,6 +690,7 @@ impl Trainer {
             bit_states: vec![WorkerBitState::default(); n_workers],
             widths: vec![schedule.max_width(); n_workers],
             schedule,
+            down,
         })
     }
 
@@ -534,10 +724,26 @@ impl Trainer {
         let m_all = self.nodes.len();
         let lazy = algo.is_lazy();
 
-        // 1. downlink broadcast of θ^k (32 bits/coordinate, one message);
-        // the broadcast copy lands in the retained scratch
-        self.net.broadcast(32 * dim);
-        self.theta_bc.clone_from(&self.server.theta);
+        // 1. downlink broadcast of θ^k — one message per round, billed
+        // through the single-source wire-size functions in `crate::comm`
+        // (raw IEEE θ under `downlink = exact`, per-shard framed
+        // innovations under `downlink = quantized`).  The worker view
+        // lands in the retained scratch either way, and the broadcast
+        // runs before the wire-mode match so one insertion point covers
+        // every mode.
+        match self.cfg.downlink {
+            DownlinkMode::Exact => {
+                self.net.broadcast(Network::downlink_dense_bits(dim));
+                self.theta_bc.clone_from(&self.server.theta);
+            }
+            DownlinkMode::Quantized => quantized_broadcast(
+                k,
+                &self.server.theta,
+                &mut self.down,
+                &mut self.net,
+                &mut self.theta_bc,
+            )?,
+        }
 
         // EF error memories must exist before the fan-out
         if algo == Algo::EfSgd && self.ef.is_empty() {
@@ -1040,6 +1246,7 @@ impl Trainer {
                     grad_norm_sq: gns,
                     rounds: self.net.uplink_rounds(),
                     bits: self.net.uplink_bits(),
+                    down_bits: self.net.downlink_bits(),
                     sim_time: self.net.sim_time(),
                     accuracy,
                     max_eps_sq: stats.max_eps_sq,
@@ -1062,7 +1269,9 @@ impl Trainer {
             final_theta: self.server.theta.clone(),
             iters_run,
             total_rounds: self.net.uplink_rounds(),
-            total_bits: self.net.uplink_bits(),
+            uplink_bits: self.net.uplink_bits(),
+            downlink_bits: self.net.downlink_bits(),
+            total_bits: self.net.uplink_bits() + self.net.downlink_bits(),
             sim_time: self.net.sim_time(),
             per_worker_rounds: self.net.per_worker_rounds().to_vec(),
             final_accuracy,
@@ -1109,6 +1318,22 @@ impl Trainer {
                 last_width: self.bit_states.iter().map(|s| s.last_width).collect(),
             }
         });
+        // quantized downlink: the θ mirror is the stream both endpoints
+        // recurse on (exactly as correctness-critical as the uplink
+        // mirrors) and the per-shard width sequence is a fold of the
+        // movement signal — persist both so a resume replays the
+        // remaining downlink stream bit-for-bit (checkpoint v5).
+        // Exact-downlink runs write no section, as before.
+        let down = self.down.on.then(|| {
+            crate::coordinator::checkpoint::DownCheckpoint {
+                bits_min: self.cfg.down_bits_min,
+                bits_max: self.cfg.down_bits_max,
+                primed: self.down.primed,
+                mirror: self.down.mirror.clone(),
+                ratio_ema: self.down.states.iter().map(|s| s.ratio_ema).collect(),
+                last_width: self.down.states.iter().map(|s| s.last_width).collect(),
+            }
+        });
         let ck = crate::coordinator::Checkpoint {
             iter: self.k as u64,
             wire: Some((self.cfg.wire_mode, self.cfg.staleness_bound as u64)),
@@ -1120,6 +1345,7 @@ impl Trainer {
             history: self.server.history.entries_oldest_first(),
             cross,
             bits,
+            down,
         };
         ck.write_to(path)
     }
@@ -1189,6 +1415,40 @@ impl Trainer {
             self.cfg.bits_min = bc.bits_min;
             self.cfg.bits_max = bc.bits_max;
             self.cfg.validate()?;
+        }
+        // adopt the recorded downlink state (v5): the mirror and the
+        // per-shard width fold are part of the algorithm's arithmetic
+        // exactly like the uplink mirrors, so a quantized-downlink
+        // resume must replay the same reconstruction stream.  Files
+        // without a down section (v1–v4, or written under exact
+        // downlink) leave the trainer's configured mode with fresh
+        // state — the next step then re-primes the mirror with one
+        // exact broadcast.
+        if let Some(dc) = &ck.down {
+            self.cfg.downlink = DownlinkMode::Quantized;
+            self.cfg.down_bits_min = dc.bits_min;
+            self.cfg.down_bits_max = dc.bits_max;
+            self.cfg.validate()?;
+        }
+        self.down = DownlinkState::new(&self.cfg, self.dim());
+        if self.down.on {
+            self.net
+                .warm_down_slot(self.dim().min(DELTA_BLOCK), self.cfg.down_bits_max);
+            if let Some(dc) = &ck.down {
+                if dc.ratio_ema.len() != self.down.n_shards() {
+                    return Err(Error::Config(
+                        "checkpoint downlink shard count mismatch".into(),
+                    ));
+                }
+                self.down.primed = dc.primed;
+                if dc.primed {
+                    self.down.mirror.copy_from_slice(&dc.mirror);
+                }
+                for (s, st) in self.down.states.iter_mut().enumerate() {
+                    st.ratio_ema = dc.ratio_ema[s];
+                    st.last_width = dc.last_width[s];
+                }
+            }
         }
         self.schedule = build_bit_schedule(&self.cfg);
         let framed = !self.schedule.is_fixed();
@@ -1281,6 +1541,20 @@ impl Trainer {
     /// normalization — see [`build_bit_schedule`]).
     pub fn bit_schedule_name(&self) -> &'static str {
         self.schedule.name()
+    }
+
+    /// Observability: the downlink width chosen for each fixed θ-shard
+    /// in the most recent quantized broadcast (empty under
+    /// `downlink = exact`, all zero before the priming round).
+    pub fn downlink_widths(&self) -> &[u32] {
+        &self.down.widths
+    }
+
+    /// Test hook: the worker-side view of θ the local phase reads —
+    /// equals `server.theta` under `downlink = exact`, the mirrored
+    /// reconstruction under `downlink = quantized`.
+    pub fn worker_theta(&self) -> &[f32] {
+        &self.theta_bc
     }
 
     /// Cross-round wire mode observability: `(max observed landing
@@ -1496,6 +1770,27 @@ pub fn build_bit_schedule(cfg: &RunCfg) -> Box<dyn BitSchedule> {
         BitScheduleKind::Innovation => Box::new(InnovationAdaptive {
             bits_min: cfg.bits_min,
             bits_max: cfg.bits_max,
+        }),
+    }
+}
+
+/// Build the downlink (per-shard) width policy from the config's
+/// `down_bits_min..=down_bits_max` range.  A collapsed range is a fixed
+/// width; otherwise the policy follows the uplink's configured kind —
+/// `round-decay` decays alongside the uplink, and every other kind gets
+/// the innovation-adaptive rule, driven per shard by its θ movement
+/// (see [`quantized_broadcast`]'s observe fold).
+pub fn build_downlink_schedule(cfg: &RunCfg) -> Box<dyn BitSchedule> {
+    if cfg.down_bits_min == cfg.down_bits_max {
+        return Box::new(FixedBits { bits: cfg.down_bits_min });
+    }
+    match cfg.bit_schedule {
+        BitScheduleKind::RoundDecay => {
+            Box::new(RoundDecay::new(cfg.down_bits_min, cfg.down_bits_max))
+        }
+        _ => Box::new(InnovationAdaptive {
+            bits_min: cfg.down_bits_min,
+            bits_max: cfg.down_bits_max,
         }),
     }
 }

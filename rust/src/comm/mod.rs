@@ -9,6 +9,12 @@
 //! clock under a latency model `T(msg) = t_fixed + bits * t_per_bit`,
 //! with sequential uplinks (workers can't talk over each other — the
 //! paper's §1.2 motivation for cutting rounds) and broadcast downlink.
+//! The downlink is billed through the same single-source machinery: one
+//! broadcast message per round ([`Network::broadcast`]), its size given
+//! by [`Network::downlink_wire_bits`] — raw IEEE θ under
+//! `downlink = exact` ([`Network::downlink_dense_bits`]), or per-shard
+//! framed innovation messages under `downlink = quantized` (the θ-delta
+//! rides the same codec as the uplink; see the framing diagram below).
 //!
 //! # Threading model: the three-lane pipeline, and why accounting stays exact
 //!
@@ -105,6 +111,17 @@
 //! switches every retained slot to the framed layout, decoders recover
 //! the width from the wire, and [`Network::payload_wire_bits`] bills the
 //! extra 8-bit header honestly.  The other payload kinds are unaffected.
+//!
+//! The quantized **downlink** always uses the framed layout — the bit
+//! schedule picks a width per coordinate *shard*, so every shard message
+//! carries its own width field and the broadcast is their concatenation
+//! (one message time, S framed sections):
+//!
+//! ```text
+//!   downlink = exact:      [f32 θ × p]                                              32·p bits
+//!   downlink = quantized:  [shard 0: f32 radius|u8 width|w₀-bit code × p₀] …
+//!                          [shard S−1: …]                    Σ_s (32 + 8 + w_s·p_s) bits
+//! ```
 //!
 //! # Per-worker retained wire buffers
 //!
@@ -459,6 +476,11 @@ pub struct Network {
     sim_time: f64,
     /// one retained wire-buffer slot per worker
     slots: Vec<WireSlot>,
+    /// retained slot for the θ-broadcast's per-shard round trips
+    /// (`downlink = quantized`); shards encode/decode through it one at
+    /// a time on the coordinator, so a single slot suffices.  Always
+    /// framed — the downlink schedule varies the width per shard.
+    down_slot: WireSlot,
     /// innovation framing for the whole session (mirrored into every
     /// slot by [`Self::set_framed`]); adaptive bit schedules turn it on
     framed: bool,
@@ -477,6 +499,11 @@ impl Network {
             per_worker_bits: vec![0; n_workers],
             sim_time: 0.0,
             slots: (0..n_workers).map(|_| WireSlot::default()).collect(),
+            down_slot: {
+                let mut s = WireSlot::default();
+                s.set_framed(true);
+                s
+            },
             framed: false,
         }
     }
@@ -568,8 +595,44 @@ impl Network {
         &mut self.slots
     }
 
+    /// Exact billable size of an *exact-mode* θ-broadcast: raw IEEE754,
+    /// 32 bits/coordinate.  The single source for downlink billing in
+    /// `downlink = exact` mode — the trainer must not hand-roll `32·p`.
+    pub fn downlink_dense_bits(dim: usize) -> usize {
+        32 * dim
+    }
+
+    /// Exact billable size of one *quantized-mode* downlink shard
+    /// message — the downlink analogue of [`Self::payload_wire_bits`].
+    /// The downlink schedule varies the width per shard, so innovation
+    /// shards always ride the framed (self-describing) layout; a Dense
+    /// payload (the priming broadcast) costs its raw IEEE size.
+    pub fn downlink_wire_bits(payload: &Payload) -> usize {
+        match payload {
+            Payload::Innovation(qi) => qi.wire_bits_framed(),
+            other => other.wire_bits(),
+        }
+    }
+
+    /// Pre-size the downlink slot's retained buffers for shard messages
+    /// of dimension `shard_dim` at `bits` bits/coordinate (the downlink
+    /// analogue of [`Self::warm_slots_innovation`]) — the quantized
+    /// broadcast's first round trip must already be allocation-free.
+    pub fn warm_down_slot(&mut self, shard_dim: usize, bits: u32) {
+        self.down_slot.warm_innovation(shard_dim, bits);
+        self.down_slot.set_framed(true);
+    }
+
+    /// The retained downlink wire slot (quantized broadcast round trips).
+    pub fn down_slot_mut(&mut self) -> &mut WireSlot {
+        &mut self.down_slot
+    }
+
     /// Server broadcasts `bits` to all workers (simultaneous downlink: one
-    /// message time, not M of them — §1.2).
+    /// message time, not M of them — §1.2).  `bits` comes from
+    /// [`Self::downlink_dense_bits`] (exact mode) or the sum of
+    /// [`Self::downlink_wire_bits`] over the round's shard messages
+    /// (quantized mode) — never a hand-rolled constant.
     pub fn broadcast(&mut self, bits: usize) {
         self.downlink_msgs += 1;
         self.downlink_bits += bits as u64;
@@ -582,6 +645,10 @@ impl Network {
 
     pub fn uplink_bits(&self) -> u64 {
         self.uplink_bits
+    }
+
+    pub fn downlink_msgs(&self) -> u64 {
+        self.downlink_msgs
     }
 
     pub fn downlink_bits(&self) -> u64 {
@@ -790,6 +857,81 @@ mod tests {
         net.broadcast(100);
         assert!((net.sim_time() - (1.0 + 0.32 + 1.0 + 0.1)).abs() < 1e-12);
         assert_eq!(net.downlink_bits(), 100);
+    }
+
+    #[test]
+    fn downlink_dense_bits_is_the_exact_broadcast_size() {
+        // exact mode bills raw IEEE754: 32 bits per coordinate, matching
+        // Payload::wire_bits on a Dense payload of the same dimension
+        for dim in [1usize, 44, 7840] {
+            assert_eq!(Network::downlink_dense_bits(dim), 32 * dim);
+            assert_eq!(
+                Network::downlink_dense_bits(dim),
+                Network::downlink_wire_bits(&Payload::Dense(vec![0.0; dim]))
+            );
+        }
+    }
+
+    #[test]
+    fn downlink_wire_bits_bills_the_framed_layout_per_shard() {
+        // quantized shards always carry their own width field: the bill
+        // is the framed size 32 + 8 + w·p, whatever the session framing
+        let zeros = vec![0.0f32; 300];
+        for bits in [1u32, 3, 8, 16] {
+            let q = InnovationQuantizer::new(bits);
+            let mut rng = Rng::new(60 + bits as u64);
+            let g: Vec<f32> = (0..300).map(|_| rng.normal() as f32).collect();
+            let (qi, _) = q.quantize(&g, &zeros);
+            let p = Payload::Innovation(qi);
+            assert_eq!(
+                Network::downlink_wire_bits(&p),
+                32 + WIDTH_FIELD_BITS as usize + bits as usize * 300
+            );
+        }
+    }
+
+    #[test]
+    fn broadcast_folds_one_message_time_per_round() {
+        // the downlink is simultaneous: S shard sections travel as ONE
+        // message, so a round bills one t_fixed — not S of them — plus
+        // the serialization time of the summed bits
+        let lat = LatencyModel { t_fixed: 1.0, t_per_bit: 0.001 };
+        let mut net = Network::new(2, lat);
+        let shard_bits = [32 + 8 + 3 * 1024, 32 + 8 + 2 * 672];
+        let total: usize = shard_bits.iter().sum();
+        net.broadcast(total);
+        assert_eq!(net.downlink_msgs(), 1);
+        assert_eq!(net.downlink_bits(), total as u64);
+        assert!((net.sim_time() - (1.0 + total as f64 * 0.001)).abs() < 1e-12);
+        // a second round folds a second message time
+        net.broadcast(total);
+        assert_eq!(net.downlink_msgs(), 2);
+        assert_eq!(net.downlink_bits(), 2 * total as u64);
+        assert!((net.sim_time() - 2.0 * (1.0 + total as f64 * 0.001)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn down_slot_round_trips_framed_shards_of_varying_width() {
+        // the quantized broadcast's exact shape: shard messages of
+        // different widths through the one retained downlink slot, each
+        // decode recovering (radius, width, codes) bit-exactly
+        let mut net = Network::new(1, LatencyModel::default());
+        net.warm_down_slot(256, 8);
+        let zeros = vec![0.0f32; 256];
+        for bits in [8u32, 2, 5, 1] {
+            let q = InnovationQuantizer::new(bits);
+            let mut rng = Rng::new(70 + bits as u64);
+            let g: Vec<f32> = (0..256).map(|_| rng.normal() as f32).collect();
+            let (qi, _) = q.quantize(&g, &zeros);
+            let sent = Payload::Innovation(qi.clone());
+            match net.down_slot_mut().round_trip(&sent).unwrap() {
+                Payload::Innovation(got) => assert_eq!(got, &qi, "bits={bits}"),
+                other => panic!("{other:?}"),
+            }
+        }
+        // uplink counters are untouched by downlink traffic
+        assert_eq!(net.uplink_rounds(), 0);
+        assert_eq!(net.uplink_bits(), 0);
     }
 
     #[test]

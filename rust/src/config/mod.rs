@@ -237,6 +237,42 @@ impl BitScheduleKind {
     }
 }
 
+/// How the server's θ-broadcast travels back to the workers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DownlinkMode {
+    /// raw IEEE754 θ at 32 bits/coordinate — today's behavior,
+    /// bit-identical to the pre-downlink-codec trainer (goldens in
+    /// `rust/tests/wire_equivalence.rs` pin it)
+    Exact,
+    /// the θ-delta rides the innovation codec's framed layout per
+    /// coordinate shard, with per-shard widths chosen by the bit
+    /// schedule over `[down_bits_min, down_bits_max]`; workers
+    /// reconstruct θ from a mirrored downlink stream (same
+    /// worker/server mirror-recursion discipline as the uplink)
+    Quantized,
+}
+
+impl DownlinkMode {
+    pub fn parse(s: &str) -> Result<DownlinkMode> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "exact" => DownlinkMode::Exact,
+            "quantized" | "quantised" => DownlinkMode::Quantized,
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown downlink mode '{other}' (expected exact | quantized)"
+                )))
+            }
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DownlinkMode::Exact => "exact",
+            DownlinkMode::Quantized => "quantized",
+        }
+    }
+}
+
 /// The one parse/range check for quantization-width values, shared by
 /// the CLI flags, the TOML/JSON keys and the checkpoint reader: widths
 /// are legal only in `1..=16`, checked **before** any narrowing cast so
@@ -359,6 +395,16 @@ fn default_staleness() -> usize {
         .unwrap_or(0)
 }
 
+/// Default downlink mode: the `LAQ_DOWNLINK` environment variable when
+/// set (`rust/ci.sh` runs the suite over the quantized broadcast path
+/// this way), else [`DownlinkMode::Exact`].
+fn default_downlink() -> DownlinkMode {
+    std::env::var("LAQ_DOWNLINK")
+        .ok()
+        .and_then(|v| DownlinkMode::parse(&v).ok())
+        .unwrap_or(DownlinkMode::Exact)
+}
+
 /// A full training run.
 #[derive(Clone, Debug)]
 pub struct RunCfg {
@@ -430,6 +476,19 @@ pub struct RunCfg {
     /// be overtaken, deterministically per (seed, config).
     /// Default: `LAQ_STALENESS` env var if set, else 0.
     pub staleness_bound: usize,
+    /// θ-broadcast transport: [`DownlinkMode::Exact`] (raw IEEE754, 32
+    /// bits/coordinate — bit-identical to the pre-codec trainer) or
+    /// [`DownlinkMode::Quantized`] (the θ-delta rides the innovation
+    /// codec's framed layout per coordinate shard, widths in
+    /// `[down_bits_min, down_bits_max]`).  Default: `LAQ_DOWNLINK` env
+    /// var if set, else exact.
+    pub downlink: DownlinkMode,
+    /// quantized downlink only: smallest per-shard width the schedule
+    /// may choose (1..=16, `<= down_bits_max`)
+    pub down_bits_min: u32,
+    /// quantized downlink only: largest per-shard width (1..=16); the
+    /// downlink wire slot is pre-sized for it
+    pub down_bits_max: u32,
 }
 
 impl RunCfg {
@@ -458,6 +517,9 @@ impl RunCfg {
             server_shards: default_shards(),
             wire_mode: default_wire_mode(),
             staleness_bound: default_staleness(),
+            downlink: default_downlink(),
+            down_bits_min: 2,
+            down_bits_max: 8,
         }
     }
 
@@ -497,6 +559,18 @@ impl RunCfg {
             return Err(Error::Config(format!(
                 "bits_min = {} > bits_max = {}",
                 self.bits_min, self.bits_max
+            )));
+        }
+        if !(1..=16).contains(&self.down_bits_min) || !(1..=16).contains(&self.down_bits_max) {
+            return Err(Error::Config(format!(
+                "down_bits_min = {} / down_bits_max = {} out of range 1..=16",
+                self.down_bits_min, self.down_bits_max
+            )));
+        }
+        if self.down_bits_min > self.down_bits_max {
+            return Err(Error::Config(format!(
+                "down_bits_min = {} > down_bits_max = {}",
+                self.down_bits_min, self.down_bits_max
             )));
         }
         if self.alpha <= 0.0 {
@@ -615,6 +689,21 @@ impl RunCfg {
             })?;
             self.staleness_bound = v;
         }
+        let dl = run.get("downlink");
+        if !dl.is_null() {
+            // same strictness as wire_mode: present-but-wrong-typed must
+            // error, not silently leave the exact broadcast in place
+            let s = dl.as_str().ok_or_else(|| {
+                Error::Config("downlink must be a string: \"exact\" | \"quantized\"".into())
+            })?;
+            self.downlink = DownlinkMode::parse(s)?;
+        }
+        if let Some(v) = width_key(run, "down_bits_min")? {
+            self.down_bits_min = v;
+        }
+        if let Some(v) = width_key(run, "down_bits_max")? {
+            self.down_bits_max = v;
+        }
         let crit = j.get("criterion");
         if !crit.is_null() {
             if let Some(d) = crit.get("d").as_usize() {
@@ -699,6 +788,9 @@ impl RunCfg {
                 ("server_shards", Json::Num(self.server_shards as f64)),
                 ("wire_mode", Json::Str(self.wire_mode.name().into())),
                 ("staleness_bound", Json::Num(self.staleness_bound as f64)),
+                ("downlink", Json::Str(self.downlink.name().into())),
+                ("down_bits_min", Json::Num(self.down_bits_min as f64)),
+                ("down_bits_max", Json::Num(self.down_bits_max as f64)),
             ])),
             ("criterion", Json::obj(vec![
                 ("d", Json::Num(self.criterion.d as f64)),
@@ -899,6 +991,40 @@ mod tests {
             let mut c6 = RunCfg::paper_logreg(Algo::Laq);
             assert!(c6.apply_json(&toml::parse(huge).unwrap()).is_err(), "{huge}");
         }
+    }
+
+    #[test]
+    fn downlink_knob_parses_validates_and_roundtrips() {
+        for spelling in ["quantized", "quantised", "QUANTIZED"] {
+            assert_eq!(DownlinkMode::parse(spelling).unwrap(), DownlinkMode::Quantized);
+        }
+        assert!(DownlinkMode::parse("compressed").is_err());
+        let doc = "\n[run]\ndownlink = \"quantized\"\ndown_bits_min = 3\ndown_bits_max = 6\n";
+        let mut c = RunCfg::paper_logreg(Algo::Laq);
+        c.downlink = DownlinkMode::Exact;
+        c.apply_json(&toml::parse(doc).unwrap()).unwrap();
+        assert_eq!(c.downlink, DownlinkMode::Quantized);
+        assert_eq!((c.down_bits_min, c.down_bits_max), (3, 6));
+        let j = c.to_json();
+        let mut c2 = RunCfg::paper_logreg(Algo::Gd);
+        c2.downlink = DownlinkMode::Exact;
+        c2.apply_json(&j).unwrap();
+        assert_eq!(c2.downlink, DownlinkMode::Quantized);
+        assert_eq!((c2.down_bits_min, c2.down_bits_max), (3, 6));
+        // inverted / out-of-range bounds rejected through the shared rule
+        let bad = "\n[run]\ndown_bits_min = 5\ndown_bits_max = 3\n";
+        let mut c3 = RunCfg::paper_logreg(Algo::Laq);
+        assert!(c3.apply_json(&toml::parse(bad).unwrap()).is_err());
+        let mut c4 = RunCfg::paper_logreg(Algo::Laq);
+        c4.down_bits_max = 17;
+        assert!(c4.validate().is_err());
+        // wrong-typed and ≥ 2^32 values error, not fall through / wrap
+        let wrong = "\n[run]\ndownlink = 1\n";
+        let mut c5 = RunCfg::paper_logreg(Algo::Laq);
+        assert!(c5.apply_json(&toml::parse(wrong).unwrap()).is_err());
+        let huge = "\n[run]\ndown_bits_max = 4294967298\n";
+        let mut c6 = RunCfg::paper_logreg(Algo::Laq);
+        assert!(c6.apply_json(&toml::parse(huge).unwrap()).is_err());
     }
 
     #[test]

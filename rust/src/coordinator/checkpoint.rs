@@ -38,7 +38,19 @@
 //! bit-for-bit.  Fixed-schedule runs write no bits section, exactly as
 //! before.
 //!
-//! Format: little-endian binary, magic `LAQCKPT4`, no external deps.
+//! A third exception, again for the same reason: the **quantized
+//! downlink** (`downlink = quantized`).  The downlink mirror is the θ
+//! stream both endpoints recurse on — exactly as correctness-critical
+//! as the per-worker uplink mirrors — and the per-shard width sequence
+//! is a fold of per-round movement signals, so v5 checkpoints persist
+//! the mirror, the priming flag, the range, and each shard's fold state
+//! ([`crate::quant::schedule::WorkerBitState`], shard in the worker
+//! seat); resume adopts them and replays the remaining downlink stream
+//! bit-for-bit.  Exact-downlink runs write no down section, and a
+//! pre-v5 file resumes with a fresh downlink state (the next step then
+//! re-primes the mirror with one exact broadcast).
+//!
+//! Format: little-endian binary, magic `LAQCKPT5`, no external deps.
 //! Version history (all older versions still load):
 //!
 //! | magic | adds | missing sections read back as |
@@ -46,7 +58,8 @@
 //! | `LAQCKPT1` | base state (θ, ∇, mirrors, clocks, ε̂², history) | `wire: None` |
 //! | `LAQCKPT2` | wire schedule (mode, staleness bound) | `cross: None` |
 //! | `LAQCKPT3` | cross-round in-flight uploads + deadline clamps | `bits: None` |
-//! | `LAQCKPT4` | adaptive bit-schedule state (kind, range, per-worker EMA) | — |
+//! | `LAQCKPT4` | adaptive bit-schedule state (kind, range, per-worker EMA) | `down: None` |
+//! | `LAQCKPT5` | quantized-downlink state (mirror, range, per-shard EMA) | — |
 
 use crate::comm::Payload;
 use crate::config::{BitScheduleKind, WireMode};
@@ -60,7 +73,8 @@ use std::io::{Read, Write};
 const MAGIC_V1: &[u8; 8] = b"LAQCKPT1";
 const MAGIC_V2: &[u8; 8] = b"LAQCKPT2";
 const MAGIC_V3: &[u8; 8] = b"LAQCKPT3";
-const MAGIC: &[u8; 8] = b"LAQCKPT4";
+const MAGIC_V4: &[u8; 8] = b"LAQCKPT4";
+const MAGIC: &[u8; 8] = b"LAQCKPT5";
 
 /// Everything needed to resume a run (independent of dataset/backend,
 /// which are reconstructed from the config).
@@ -86,6 +100,28 @@ pub struct Checkpoint {
     /// adaptive bit-schedule state (`bit_schedule != fixed` only); `None`
     /// when read from a v1–v3 file or written by fixed-schedule runs
     pub bits: Option<BitsCheckpoint>,
+    /// quantized-downlink state (`downlink = quantized` only); `None`
+    /// when read from a v1–v4 file or written by exact-downlink runs
+    pub down: Option<DownCheckpoint>,
+}
+
+/// The quantized-downlink half of a run: the mirrored θ both endpoints
+/// recurse on, the priming flag, the width range, and each shard's
+/// deterministic fold state — enough for a resume to replay the
+/// remaining downlink stream bit-for-bit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DownCheckpoint {
+    pub bits_min: u32,
+    pub bits_max: u32,
+    /// has the exact priming broadcast happened?  (A fresh trainer that
+    /// never stepped checkpoints `false`; the resume re-primes.)
+    pub primed: bool,
+    /// the downlink θ mirror (meaningful once `primed`)
+    pub mirror: Vec<f32>,
+    /// per-shard movement-ratio EMA (the adaptive policy's signal)
+    pub ratio_ema: Vec<f64>,
+    /// per-shard width chosen for the last completed round
+    pub last_width: Vec<u32>,
 }
 
 /// The adaptive-width half of a dial-a-bit run: which policy was active,
@@ -346,6 +382,25 @@ impl Checkpoint {
                 }
             }
         }
+        // v5: quantized-downlink section (presence flag, like cross/bits)
+        match &self.down {
+            None => w_u64(&mut w, 0)?,
+            Some(dc) => {
+                w_u64(&mut w, 1)?;
+                w_u64(&mut w, dc.bits_min as u64)?;
+                w_u64(&mut w, dc.bits_max as u64)?;
+                w_u64(&mut w, dc.primed as u64)?;
+                w_f32s(&mut w, &dc.mirror)?;
+                w_u64(&mut w, dc.ratio_ema.len() as u64)?;
+                for &r in &dc.ratio_ema {
+                    w_f64(&mut w, r)?;
+                }
+                w_u64(&mut w, dc.last_width.len() as u64)?;
+                for &wd in &dc.last_width {
+                    w_u64(&mut w, wd as u64)?;
+                }
+            }
+        }
         Ok(())
     }
 
@@ -359,8 +414,10 @@ impl Checkpoint {
             2
         } else if &magic == MAGIC_V3 {
             3
-        } else if &magic == MAGIC {
+        } else if &magic == MAGIC_V4 {
             4
+        } else if &magic == MAGIC {
+            5
         } else {
             return Err(Error::Msg(format!(
                 "{}: not a LAQ checkpoint (bad magic)",
@@ -473,6 +530,47 @@ impl Checkpoint {
             }
             Some(BitsCheckpoint { kind, bits_min, bits_max, ratio_ema, last_width })
         };
+        let down = if version < 5 {
+            None
+        } else if r_u64(&mut r)? == 0 {
+            None
+        } else {
+            let bits_min = r_width_bound(&mut r)?;
+            let bits_max = r_width_bound(&mut r)?;
+            let primed = match r_u64(&mut r)? {
+                0 => false,
+                1 => true,
+                other => {
+                    return Err(Error::Msg(format!(
+                        "checkpoint: bad downlink priming flag {other}"
+                    )))
+                }
+            };
+            let mirror = r_f32s(&mut r)?;
+            let nr = r_u64(&mut r)? as usize;
+            if nr > (1 << 24) {
+                return Err(Error::Msg("checkpoint: downlink ratio array too large".into()));
+            }
+            let mut ratio_ema = Vec::with_capacity(nr);
+            for _ in 0..nr {
+                ratio_ema.push(r_f64(&mut r)?);
+            }
+            let nw = r_u64(&mut r)? as usize;
+            if nw > (1 << 24) {
+                return Err(Error::Msg("checkpoint: downlink width array too large".into()));
+            }
+            let mut last_width = Vec::with_capacity(nw);
+            for _ in 0..nw {
+                let v = r_u64(&mut r)?;
+                if v > 16 {
+                    return Err(Error::Msg(format!(
+                        "checkpoint: recorded downlink width {v} out of range"
+                    )));
+                }
+                last_width.push(v as u32);
+            }
+            Some(DownCheckpoint { bits_min, bits_max, primed, mirror, ratio_ema, last_width })
+        };
         let ck = Checkpoint {
             iter,
             wire,
@@ -484,6 +582,7 @@ impl Checkpoint {
             history,
             cross,
             bits,
+            down,
         };
         ck.validate()?;
         Ok(ck)
@@ -551,6 +650,40 @@ impl Checkpoint {
                 ));
             }
         }
+        if let Some(dc) = &self.down {
+            if dc.primed && dc.mirror.len() != dim {
+                return Err(Error::Msg(
+                    "checkpoint: downlink mirror dim mismatch".into(),
+                ));
+            }
+            if dc.ratio_ema.len() != dc.last_width.len() {
+                return Err(Error::Msg(
+                    "checkpoint: downlink shard count mismatch".into(),
+                ));
+            }
+            if !(1..=16).contains(&dc.bits_min)
+                || !(1..=16).contains(&dc.bits_max)
+                || dc.bits_min > dc.bits_max
+            {
+                return Err(Error::Msg(
+                    "checkpoint: downlink range inconsistent".into(),
+                ));
+            }
+            if dc
+                .last_width
+                .iter()
+                .any(|&w| w != 0 && !(dc.bits_min..=dc.bits_max).contains(&w))
+            {
+                return Err(Error::Msg(
+                    "checkpoint: recorded downlink width outside the range".into(),
+                ));
+            }
+            if dc.ratio_ema.iter().any(|r| !r.is_finite() || *r < 0.0) {
+                return Err(Error::Msg(
+                    "checkpoint: downlink schedule state not finite".into(),
+                ));
+            }
+        }
         Ok(())
     }
 }
@@ -571,6 +704,7 @@ mod tests {
             history: vec![0.1, 0.01, 0.001],
             cross: None,
             bits: None,
+            down: None,
         }
     }
 
@@ -776,6 +910,113 @@ mod tests {
         assert_eq!(back.wire, Some((WireMode::Async, 3)));
         assert_eq!(back.theta, ck.theta);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn down_checkpoint_roundtrips_exactly() {
+        let dir = std::env::temp_dir().join("laq_ckpt_test_down");
+        let path = dir.join("d.ckpt");
+        let mut ck = sample();
+        ck.down = Some(DownCheckpoint {
+            bits_min: 2,
+            bits_max: 8,
+            primed: true,
+            mirror: vec![1.0, -2.5, 3.25],
+            ratio_ema: vec![0.75],
+            last_width: vec![4],
+        });
+        ck.write_to(&path).unwrap();
+        let back = Checkpoint::read_from(&path).unwrap();
+        assert_eq!(ck, back);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Serialize a checkpoint in the v4 layout (bits section, no down
+    /// section) — the compat path must read it with `down: None`.
+    #[test]
+    fn reads_v4_checkpoints_without_down_section() {
+        let dir = std::env::temp_dir().join("laq_ckpt_test_v4");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v4.ckpt");
+        let ck = sample();
+        {
+            let mut w = std::io::BufWriter::new(std::fs::File::create(&path).unwrap());
+            w.write_all(MAGIC_V4).unwrap();
+            w_u64(&mut w, ck.iter).unwrap();
+            w_u64(&mut w, 1).unwrap(); // async
+            w_u64(&mut w, 3).unwrap();
+            w_f32s(&mut w, &ck.theta).unwrap();
+            w_f32s(&mut w, &ck.agg).unwrap();
+            w_u64(&mut w, ck.mirrors.len() as u64).unwrap();
+            for m in &ck.mirrors {
+                w_f32s(&mut w, m).unwrap();
+            }
+            w_u64(&mut w, ck.clocks.len() as u64).unwrap();
+            for &c in &ck.clocks {
+                w_u64(&mut w, c).unwrap();
+            }
+            w_u64(&mut w, ck.eps_hat_sq.len() as u64).unwrap();
+            for &e in &ck.eps_hat_sq {
+                w_f64(&mut w, e).unwrap();
+            }
+            w_u64(&mut w, ck.history.len() as u64).unwrap();
+            for &h in &ck.history {
+                w_f64(&mut w, h).unwrap();
+            }
+            w_u64(&mut w, 0).unwrap(); // empty cross section
+            // bits section present, in the v4 layout
+            w_u64(&mut w, 1).unwrap();
+            w_u64(&mut w, 2).unwrap(); // innovation
+            w_u64(&mut w, 2).unwrap();
+            w_u64(&mut w, 6).unwrap();
+            w_u64(&mut w, 2).unwrap();
+            w_f64(&mut w, 0.5).unwrap();
+            w_f64(&mut w, 1.5).unwrap();
+            w_u64(&mut w, 2).unwrap();
+            w_u64(&mut w, 4).unwrap();
+            w_u64(&mut w, 3).unwrap();
+        }
+        let back = Checkpoint::read_from(&path).unwrap();
+        assert_eq!(back.down, None);
+        assert_eq!(
+            back.bits,
+            Some(BitsCheckpoint {
+                kind: BitScheduleKind::Innovation,
+                bits_min: 2,
+                bits_max: 6,
+                ratio_ema: vec![0.5, 1.5],
+                last_width: vec![4, 3],
+            })
+        );
+        assert_eq!(back.theta, ck.theta);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn validate_catches_down_inconsistency() {
+        let dc = DownCheckpoint {
+            bits_min: 2,
+            bits_max: 8,
+            primed: true,
+            mirror: vec![1.0, -2.5, 3.25],
+            ratio_ema: vec![1.0],
+            last_width: vec![4],
+        };
+        let mut ck = sample();
+        ck.down = Some(DownCheckpoint { mirror: vec![1.0], ..dc.clone() });
+        assert!(ck.validate().is_err(), "mirror dim mismatch accepted");
+        let mut ck = sample();
+        ck.down = Some(DownCheckpoint { ratio_ema: vec![1.0, 1.0], ..dc.clone() });
+        assert!(ck.validate().is_err(), "shard count mismatch accepted");
+        let mut ck = sample();
+        ck.down = Some(DownCheckpoint { bits_min: 9, ..dc.clone() });
+        assert!(ck.validate().is_err(), "inverted range accepted");
+        let mut ck = sample();
+        ck.down = Some(DownCheckpoint { last_width: vec![12], ..dc.clone() });
+        assert!(ck.validate().is_err(), "out-of-range width accepted");
+        let mut ck = sample();
+        ck.down = Some(DownCheckpoint { ratio_ema: vec![f64::NAN], ..dc });
+        assert!(ck.validate().is_err(), "NaN state accepted");
     }
 
     #[test]

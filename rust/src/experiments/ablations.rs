@@ -24,7 +24,7 @@ pub fn abl_bits(opts: &ExpOpts) -> Result<String> {
         "Ablation — quantization bit-width b (LAQ, logreg)\n",
     );
     let mut t = TablePrinter::new(&[
-        "b", "Iteration #", "Rounds", "Bit #", "Final loss", "Accuracy",
+        "b", "Iteration #", "Rounds", "Uplink bit #", "Final loss", "Accuracy",
     ]);
     let mut prev_bits = u64::MAX;
     let mut monotone_rounds_note = true;
@@ -41,14 +41,14 @@ pub fn abl_bits(opts: &ExpOpts) -> Result<String> {
             bits.to_string(),
             res.iters_run.to_string(),
             res.total_rounds.to_string(),
-            sci(res.total_bits as f64),
+            sci(res.uplink_bits as f64),
             format!("{:.6}", res.final_loss()),
             res.final_accuracy.map(|a| format!("{a:.4}")).unwrap_or_default(),
         ]);
         // coarser quantization costs extra rounds (bigger ε slack triggers
         // more uploads) but each round is cheaper — record the tradeoff
         let _ = prev_bits;
-        prev_bits = res.total_bits;
+        prev_bits = res.uplink_bits;
         monotone_rounds_note &= res.iters_run > 0;
     }
     out.push_str(&t.render());
@@ -64,7 +64,7 @@ pub fn abl_hetero(opts: &ExpOpts) -> Result<String> {
         "Ablation — data heterogeneity (Dirichlet concentration, LAQ, covtype)\n",
     );
     let mut t = TablePrinter::new(&[
-        "alpha", "Rounds", "Bit #", "Final loss", "max/min worker uploads",
+        "alpha", "Rounds", "Uplink bit #", "Final loss", "max/min worker uploads",
     ]);
     for alpha in [0.05, 0.2, 1.0, f64::INFINITY] {
         let mut cfg = common::logreg_cfg(Algo::Laq, opts);
@@ -77,7 +77,7 @@ pub fn abl_hetero(opts: &ExpOpts) -> Result<String> {
         t.row(&[
             if alpha.is_finite() { format!("{alpha}") } else { "uniform".into() },
             res.total_rounds.to_string(),
-            sci(res.total_bits as f64),
+            sci(res.uplink_bits as f64),
             format!("{:.6}", res.final_loss()),
             format!("{:.1}", mx / mn.max(1.0)),
         ]);
@@ -94,7 +94,7 @@ pub fn abl_xi(opts: &ExpOpts) -> Result<String> {
         "Ablation — criterion aggressiveness Σξ (LAQ, logreg; paper default 0.8)\n",
     );
     let mut t = TablePrinter::new(&[
-        "sum xi", "Rounds", "Bit #", "Final loss", "Accuracy",
+        "sum xi", "Rounds", "Uplink bit #", "Final loss", "Accuracy",
     ]);
     for sum_xi in [0.0, 0.2, 0.8, 2.4] {
         let mut cfg = common::logreg_cfg(Algo::Laq, opts);
@@ -104,7 +104,7 @@ pub fn abl_xi(opts: &ExpOpts) -> Result<String> {
         t.row(&[
             format!("{sum_xi}"),
             res.total_rounds.to_string(),
-            sci(res.total_bits as f64),
+            sci(res.uplink_bits as f64),
             format!("{:.6}", res.final_loss()),
             res.final_accuracy.map(|a| format!("{a:.4}")).unwrap_or_default(),
         ]);
@@ -134,8 +134,8 @@ pub fn abl_ef(opts: &ExpOpts) -> Result<String> {
         if ef.total_rounds >= slaq.total_rounds { "ok" } else { "FAIL" },
         ef.total_rounds,
         slaq.total_rounds,
-        sci(ef.total_bits as f64),
-        sci(slaq.total_bits as f64),
+        sci(ef.uplink_bits as f64),
+        sci(slaq.uplink_bits as f64),
     ));
     out.push_str(&format!(
         "  [{}] both converge (EF final {:.4}, SLAQ final {:.4})\n",
@@ -157,7 +157,7 @@ pub fn timing(opts: &ExpOpts) -> Result<String> {
         ("WAN 100Mb/s, 30ms setup", LatencyModel { t_fixed: 3e-2, t_per_bit: 1e-8 }),
     ];
     for (name, lat) in scenarios {
-        let mut t = TablePrinter::new(&["Algorithm", "Rounds", "Bit #", "Sim time (s)"]);
+        let mut t = TablePrinter::new(&["Algorithm", "Rounds", "Uplink bit #", "Sim time (s)"]);
         let mut times: Vec<(String, f64)> = Vec::new();
         for algo in [Algo::Gd, Algo::Qgd, Algo::Lag, Algo::Laq] {
             let mut cfg = common::logreg_cfg(algo, opts);
@@ -170,7 +170,7 @@ pub fn timing(opts: &ExpOpts) -> Result<String> {
             t.row(&[
                 res.algo.clone(),
                 res.total_rounds.to_string(),
-                sci(res.total_bits as f64),
+                sci(res.uplink_bits as f64),
                 format!("{:.3}", res.sim_time),
             ]);
             times.push((res.algo.clone(), res.sim_time));

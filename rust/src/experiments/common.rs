@@ -131,17 +131,28 @@ pub fn estimate_fstar(base: &RunCfg, factor: usize) -> Result<f64> {
     Ok(final_loss)
 }
 
-/// Shared report block: per-algorithm totals.
+/// Shared report block: per-algorithm totals.  Bits are reported per
+/// direction — the downlink has been billed into `sim_time` since the
+/// first trainer, so the headline total is only honest with both.
 pub fn totals_block(results: &[RunResult]) -> String {
     use crate::metrics::{sci, TablePrinter};
     let mut t = TablePrinter::new(&[
-        "Algorithm", "Iteration #", "Communication #", "Bit #", "Final loss", "Accuracy",
+        "Algorithm",
+        "Iteration #",
+        "Communication #",
+        "Uplink bit #",
+        "Downlink bit #",
+        "Total bit #",
+        "Final loss",
+        "Accuracy",
     ]);
     for r in results {
         t.row(&[
             r.algo.clone(),
             r.iters_run.to_string(),
             r.total_rounds.to_string(),
+            sci(r.uplink_bits as f64),
+            sci(r.downlink_bits as f64),
             sci(r.total_bits as f64),
             format!("{:.6e}", r.final_loss()),
             r.final_accuracy.map(|a| format!("{a:.4}")).unwrap_or_else(|| "-".into()),

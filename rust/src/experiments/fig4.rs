@@ -38,16 +38,16 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
     checks.push((
         format!(
             "LAQ bits ({:.2e}) < LAG bits ({:.2e})",
-            laq.total_bits as f64, lag.total_bits as f64
+            laq.uplink_bits as f64, lag.uplink_bits as f64
         ),
-        laq.total_bits < lag.total_bits,
+        laq.uplink_bits < lag.uplink_bits,
     ));
     checks.push((
         format!(
             "QGD bits ({:.2e}) < GD bits ({:.2e})",
-            qgd.total_bits as f64, gd.total_bits as f64
+            qgd.uplink_bits as f64, gd.uplink_bits as f64
         ),
-        qgd.total_bits < gd.total_bits,
+        qgd.uplink_bits < gd.uplink_bits,
     ));
     // paper: LAQ needs slightly more rounds than LAG (quantization error
     // occasionally triggers extra uploads) but the two are the same order;

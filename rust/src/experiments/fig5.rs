@@ -25,8 +25,8 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
             laq_final <= 10.0 * gd_final,
         ),
         (
-            format!("LAQ bits ({:.2e}) < GD bits ({:.2e})", laq.total_bits as f64, gd.total_bits as f64),
-            laq.total_bits < gd.total_bits,
+            format!("LAQ bits ({:.2e}) < GD bits ({:.2e})", laq.uplink_bits as f64, gd.uplink_bits as f64),
+            laq.uplink_bits < gd.uplink_bits,
         ),
         (
             format!("LAQ rounds ({}) < GD rounds ({})", laq.total_rounds, gd.total_rounds),
@@ -35,8 +35,8 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
     ];
     let qgd = by("QGD");
     checks.push((
-        format!("LAQ bits ({:.2e}) < QGD bits ({:.2e})", laq.total_bits as f64, qgd.total_bits as f64),
-        laq.total_bits < qgd.total_bits,
+        format!("LAQ bits ({:.2e}) < QGD bits ({:.2e})", laq.uplink_bits as f64, qgd.uplink_bits as f64),
+        laq.uplink_bits < qgd.uplink_bits,
     ));
     for (msg, ok) in &checks {
         out.push_str(&format!("  [{}] {msg}\n", if *ok { "ok" } else { "FAIL" }));

@@ -25,12 +25,12 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
             cfgs.push(c);
         }
         let results = common::sweep(&cfgs, &opts.out_dir, &format!("fig6_{ds}"), None)?;
-        let mut t = TablePrinter::new(&["Algorithm", "Accuracy", "Bit #"]);
+        let mut t = TablePrinter::new(&["Algorithm", "Accuracy", "Uplink bit #"]);
         for r in &results {
             t.row(&[
                 r.algo.clone(),
                 r.final_accuracy.map(|a| format!("{a:.4}")).unwrap_or_default(),
-                sci(r.total_bits as f64),
+                sci(r.uplink_bits as f64),
             ]);
         }
         out.push_str(&format!("\n[{ds}]\n{}", t.render()));
@@ -39,7 +39,7 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
         let max = accs.iter().cloned().fold(0.0, f64::max);
         let laq = results.iter().find(|r| r.algo == "LAQ").unwrap();
         let laq_acc = laq.final_accuracy.unwrap_or(0.0);
-        let fewest_bits = results.iter().all(|r| laq.total_bits <= r.total_bits);
+        let fewest_bits = results.iter().all(|r| laq.uplink_bits <= r.uplink_bits);
         let ok = laq_acc >= max - 0.01 && fewest_bits;
         all_ok &= ok;
         out.push_str(&format!(

@@ -27,17 +27,17 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
             slaq.total_rounds < sgd.total_rounds,
         ),
         (
-            format!("SLAQ bits ({:.2e}) lowest of all", slaq.total_bits as f64),
-            slaq.total_bits < sgd.total_bits
-                && slaq.total_bits < qsgd.total_bits
-                && slaq.total_bits < ssgd.total_bits,
+            format!("SLAQ bits ({:.2e}) lowest of all", slaq.uplink_bits as f64),
+            slaq.uplink_bits < sgd.uplink_bits
+                && slaq.uplink_bits < qsgd.uplink_bits
+                && slaq.uplink_bits < ssgd.uplink_bits,
         ),
         (
             format!(
                 "QSGD bits ({:.2e}) < SGD bits ({:.2e})",
-                qsgd.total_bits as f64, sgd.total_bits as f64
+                qsgd.uplink_bits as f64, sgd.uplink_bits as f64
             ),
-            qsgd.total_bits < sgd.total_bits,
+            qsgd.uplink_bits < sgd.uplink_bits,
         ),
         (
             format!(

@@ -21,8 +21,8 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
     let (sgd, slaq) = (by("SGD"), by("SLAQ"));
     let checks = vec![
         (
-            format!("SLAQ bits ({:.2e}) < SGD bits ({:.2e})", slaq.total_bits as f64, sgd.total_bits as f64),
-            slaq.total_bits < sgd.total_bits,
+            format!("SLAQ bits ({:.2e}) < SGD bits ({:.2e})", slaq.uplink_bits as f64, sgd.uplink_bits as f64),
+            slaq.uplink_bits < sgd.uplink_bits,
         ),
         (
             format!("SLAQ rounds ({}) <= SGD rounds ({})", slaq.total_rounds, sgd.total_rounds),

@@ -27,7 +27,7 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
     let mlp_results = common::sweep(&mlp_cfgs, &opts.out_dir, "table2_mlp", None)?;
 
     let mut t = TablePrinter::new(&[
-        "Algorithm", "Model", "Iteration #", "Communication #", "Bit #", "Accuracy",
+        "Algorithm", "Model", "Iteration #", "Communication #", "Uplink bit #", "Accuracy",
     ]);
     for (res, model) in log_results
         .iter()
@@ -39,7 +39,7 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
             model.into(),
             res.iters_run.to_string(),
             res.total_rounds.to_string(),
-            sci(res.total_bits as f64),
+            sci(res.uplink_bits as f64),
             res.final_accuracy.map(|a| format!("{a:.4}")).unwrap_or_default(),
         ]);
     }
@@ -65,12 +65,12 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
             [&laq, &gd, &qgd, &lag].iter().all(|r| r.iters_run < r.trace.last().map(|t| t.iter + 2).unwrap_or(usize::MAX) + 1),
         ),
         (
-            format!("bits: LAQ ({}) < QGD ({}) < GD ({})", sci(laq.total_bits as f64), sci(qgd.total_bits as f64), sci(gd.total_bits as f64)),
-            laq.total_bits < qgd.total_bits && qgd.total_bits < gd.total_bits,
+            format!("bits: LAQ ({}) < QGD ({}) < GD ({})", sci(laq.uplink_bits as f64), sci(qgd.uplink_bits as f64), sci(gd.uplink_bits as f64)),
+            laq.uplink_bits < qgd.uplink_bits && qgd.uplink_bits < gd.uplink_bits,
         ),
         (
-            format!("bits: LAQ ({}) < LAG ({})", sci(laq.total_bits as f64), sci(lag.total_bits as f64)),
-            laq.total_bits < lag.total_bits,
+            format!("bits: LAQ ({}) < LAG ({})", sci(laq.uplink_bits as f64), sci(lag.uplink_bits as f64)),
+            laq.uplink_bits < lag.uplink_bits,
         ),
         (
             format!("rounds: LAG ({}) ~ LAQ ({}) << GD ({})", lag.total_rounds, laq.total_rounds, gd.total_rounds),

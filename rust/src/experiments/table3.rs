@@ -22,7 +22,7 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
     let mlp_results = common::sweep(&mlp_cfgs, &opts.out_dir, "table3_mlp", None)?;
 
     let mut t = TablePrinter::new(&[
-        "Algorithm", "Model", "Iteration #", "Communication #", "Bit #", "Accuracy",
+        "Algorithm", "Model", "Iteration #", "Communication #", "Uplink bit #", "Accuracy",
     ]);
     for (res, model) in log_results
         .iter()
@@ -34,7 +34,7 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
             model.into(),
             res.iters_run.to_string(),
             res.total_rounds.to_string(),
-            sci(res.total_bits as f64),
+            sci(res.uplink_bits as f64),
             res.final_accuracy.map(|a| format!("{a:.4}")).unwrap_or_default(),
         ]);
     }
@@ -60,14 +60,14 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
             (
                 format!(
                     "{label}: SLAQ bits ({}) lowest (SGD {}, QSGD {}, SSGD {})",
-                    sci(slaq.total_bits as f64),
-                    sci(sgd.total_bits as f64),
-                    sci(qsgd.total_bits as f64),
-                    sci(ssgd.total_bits as f64)
+                    sci(slaq.uplink_bits as f64),
+                    sci(sgd.uplink_bits as f64),
+                    sci(qsgd.uplink_bits as f64),
+                    sci(ssgd.uplink_bits as f64)
                 ),
-                slaq.total_bits <= sgd.total_bits
-                    && slaq.total_bits <= qsgd.total_bits
-                    && slaq.total_bits <= ssgd.total_bits,
+                slaq.uplink_bits <= sgd.uplink_bits
+                    && slaq.uplink_bits <= qsgd.uplink_bits
+                    && slaq.uplink_bits <= ssgd.uplink_bits,
             ),
             (
                 format!(

@@ -7,7 +7,7 @@
 //!
 //! See README.md for the full walkthrough.
 
-use laq::config::{Algo, Backend, BitScheduleKind, ModelKind, RunCfg, WireMode};
+use laq::config::{Algo, Backend, BitScheduleKind, DownlinkMode, ModelKind, RunCfg, WireMode};
 use laq::experiments::{self, ExpOpts};
 use laq::util::cli::{usage, ArgSpec, Args};
 
@@ -36,7 +36,7 @@ fn print_help() {
         "laq — Lazily Aggregated Quantized Gradients (NeurIPS 2019) reproduction\n\n\
          USAGE: laq <exp|train|list> [OPTIONS]\n\n\
          laq exp   --id <fig3|fig4|fig5|fig6|fig7|fig8|table2|table3|prop1> [--full] [--backend native|pjrt] [--out DIR] [--seed N]\n\
-         laq train --algo <gd|qgd|lag|laq|sgd|qsgd|ssgd|slaq|efsgd> [--model logreg|mlp] [--config FILE] [--iters N] [--alpha A] [--bits B] [--bit-schedule fixed|round-decay|innovation] [--bits-min L] [--bits-max H] [--threads T] [--server-shards S] [--wire-mode sync|async|async-cross] [--staleness-bound K] [--backend native|pjrt]\n\
+         laq train --algo <gd|qgd|lag|laq|sgd|qsgd|ssgd|slaq|efsgd> [--model logreg|mlp] [--config FILE] [--iters N] [--alpha A] [--bits B] [--bit-schedule fixed|round-decay|innovation] [--bits-min L] [--bits-max H] [--downlink exact|quantized] [--down-bits-min L] [--down-bits-max H] [--threads T] [--server-shards S] [--wire-mode sync|async|async-cross] [--staleness-bound K] [--backend native|pjrt]\n\
          laq list\n"
     );
 }
@@ -108,6 +108,9 @@ fn train_spec() -> Vec<ArgSpec> {
         ArgSpec { name: "bit-schedule", help: "bit-width policy: fixed (paper) | round-decay | innovation (per-worker adaptive)", default: None, is_switch: false },
         ArgSpec { name: "bits-min", help: "adaptive schedules: smallest width (1..=16)", default: None, is_switch: false },
         ArgSpec { name: "bits-max", help: "adaptive schedules: largest width (1..=16)", default: None, is_switch: false },
+        ArgSpec { name: "downlink", help: "θ broadcast: exact (raw 32-bit, paper) | quantized (per-shard framed innovations)", default: None, is_switch: false },
+        ArgSpec { name: "down-bits-min", help: "quantized downlink: smallest shard width (1..=16)", default: None, is_switch: false },
+        ArgSpec { name: "down-bits-max", help: "quantized downlink: largest shard width (1..=16)", default: None, is_switch: false },
         ArgSpec { name: "workers", help: "worker count", default: None, is_switch: false },
         ArgSpec { name: "threads", help: "worker fan-out: 1=sequential, 0=auto, N=pool size", default: None, is_switch: false },
         ArgSpec { name: "server-shards", help: "server θ-shards: 1=single, 0=auto, S=fixed", default: None, is_switch: false },
@@ -173,6 +176,21 @@ fn cmd_train(argv: &[String]) -> i32 {
         {
             cfg.bits_max = laq::config::parse_width("--bits-max", v as u64)?;
         }
+        if let Some(v) = args.get("downlink") {
+            cfg.downlink = DownlinkMode::parse(v)?;
+        }
+        if let Some(v) = args
+            .get_usize("down-bits-min")
+            .map_err(|e| laq::Error::Config(e.to_string()))?
+        {
+            cfg.down_bits_min = laq::config::parse_width("--down-bits-min", v as u64)?;
+        }
+        if let Some(v) = args
+            .get_usize("down-bits-max")
+            .map_err(|e| laq::Error::Config(e.to_string()))?
+        {
+            cfg.down_bits_max = laq::config::parse_width("--down-bits-max", v as u64)?;
+        }
         if let Some(v) = args.get_usize("workers").map_err(|e| laq::Error::Config(e.to_string()))? {
             cfg.workers = v;
         }
@@ -215,11 +233,13 @@ fn cmd_train(argv: &[String]) -> i32 {
         )?;
 
         println!(
-            "{} on {} | iters {} | rounds {} | bits {:.3e} | final loss {:.6e} | acc {}",
+            "{} on {} | iters {} | rounds {} | bits up {:.3e} + down {:.3e} = {:.3e} | final loss {:.6e} | acc {}",
             res.algo,
             res.model,
             res.iters_run,
             res.total_rounds,
+            res.uplink_bits as f64,
+            res.downlink_bits as f64,
             res.total_bits as f64,
             res.final_loss(),
             res.final_accuracy.map(|a| format!("{a:.4}")).unwrap_or_else(|| "-".into()),

@@ -23,6 +23,8 @@ pub struct TracePoint {
     pub rounds: u64,
     /// cumulative uplink bits so far
     pub bits: u64,
+    /// cumulative downlink (broadcast) bits so far
+    pub down_bits: u64,
     /// simulated wall-clock (latency model)
     pub sim_time: f64,
     /// test accuracy, when evaluated at this point
@@ -40,6 +42,12 @@ pub struct RunResult {
     pub final_theta: Vec<f32>,
     pub iters_run: usize,
     pub total_rounds: u64,
+    /// total uplink (worker → server) bits
+    pub uplink_bits: u64,
+    /// total downlink (server → workers broadcast) bits — billed into
+    /// `sim_time` since the first trainer, now reported honestly too
+    pub downlink_bits: u64,
+    /// uplink + downlink: the honest total-traffic headline
     pub total_bits: u64,
     pub sim_time: f64,
     pub per_worker_rounds: Vec<u64>,
@@ -59,16 +67,17 @@ impl RunResult {
     /// CSV with one row per trace point.
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "iter,loss,grad_norm_sq,rounds,bits,sim_time,accuracy,max_eps_sq\n",
+            "iter,loss,grad_norm_sq,rounds,bits,down_bits,sim_time,accuracy,max_eps_sq\n",
         );
         for t in &self.trace {
             s.push_str(&format!(
-                "{},{:.10e},{:.10e},{},{},{:.6e},{},{:.6e}\n",
+                "{},{:.10e},{:.10e},{},{},{},{:.6e},{},{:.6e}\n",
                 t.iter,
                 t.loss,
                 t.grad_norm_sq,
                 t.rounds,
                 t.bits,
+                t.down_bits,
                 t.sim_time,
                 t.accuracy.map(|a| format!("{a:.4}")).unwrap_or_default(),
                 t.max_eps_sq,
@@ -85,6 +94,8 @@ impl RunResult {
             ("iters", Json::Num(self.iters_run as f64)),
             ("rounds", Json::Num(self.total_rounds as f64)),
             ("bits", Json::Num(self.total_bits as f64)),
+            ("uplink_bits", Json::Num(self.uplink_bits as f64)),
+            ("downlink_bits", Json::Num(self.downlink_bits as f64)),
             ("sim_time", Json::Num(self.sim_time)),
             ("final_loss", Json::Num(self.final_loss())),
             (
@@ -175,6 +186,7 @@ mod tests {
             grad_norm_sq: 0.1,
             rounds: i as u64,
             bits: (i * 100) as u64,
+            down_bits: (i * 32) as u64,
             sim_time: i as f64,
             accuracy: if i == 2 { Some(0.9) } else { None },
             max_eps_sq: 0.0,
@@ -189,7 +201,9 @@ mod tests {
             final_theta: vec![0.0; 4],
             iters_run: 3,
             total_rounds: 2,
-            total_bits: 200,
+            uplink_bits: 200,
+            downlink_bits: 64,
+            total_bits: 264,
             sim_time: 2.0,
             per_worker_rounds: vec![1, 1],
             final_accuracy: Some(0.9),

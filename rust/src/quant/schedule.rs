@@ -13,7 +13,7 @@
 //! | policy | rule |
 //! |--------|------|
 //! | [`FixedBits`] | `width = b` always — today's behavior, bit-identical |
-//! | [`RoundDecay`] | `bits_max` for the first [`RoundDecay::warm_rounds`] rounds, then one bit fewer every [`RoundDecay::decay_every`] rounds, floored at `bits_min` — a pure function of the round index |
+//! | [`RoundDecay`] | `bits_max` for the first [`RoundDecay::warm_rounds`] rounds, then one bit fewer after each full [`RoundDecay::decay_every`]-round interval (the first interval still runs at `bits_max`), floored at `bits_min` — a pure function of the round index |
 //! | [`InnovationAdaptive`] | per-worker: an EMA of the criterion ratio `lhs/rhs` maps linearly onto `[bits_min, bits_max]` (see [`BitSchedule::width`]) |
 //!
 //! # Determinism contract
@@ -93,6 +93,17 @@ pub trait BitSchedule: Send + Sync {
     /// Always within `min_width()..=max_width()`.
     fn width(&self, state: &WorkerBitState, worker: usize, round: usize) -> u32;
 
+    /// Transmit width for the θ-broadcast downlink, per coordinate
+    /// *shard* — the downlink analogue of [`Self::width`] with the shard
+    /// index in the worker seat.  The shard's state folds the shard's
+    /// own `‖θ − mirror‖²` movement through [`Self::observe`] (lhs =
+    /// shard movement, rhs = the round's mean shard movement), so the
+    /// same policies dial downlink widths off the same informativeness
+    /// signal.  Default: identical to the uplink rule.
+    fn downlink_width(&self, state: &WorkerBitState, shard: usize, round: usize) -> u32 {
+        self.width(state, shard, round)
+    }
+
     /// Fold one round's criterion outcome (`lhs` vs `rhs`, and whether
     /// the upload fired) into the worker's state.  Called by the
     /// coordinator in worker index order once per round.
@@ -132,7 +143,9 @@ impl BitSchedule for FixedBits {
 pub struct RoundDecay {
     pub bits_min: u32,
     pub bits_max: u32,
-    /// rounds spent at `bits_max` before the first decay step
+    /// warm period at `bits_max`; the first one-bit step lands a full
+    /// `decay_every` interval after it ends (round `warm_rounds +
+    /// decay_every`), not the moment it ends
     pub warm_rounds: usize,
     /// rounds between successive one-bit decay steps
     pub decay_every: usize,
@@ -140,7 +153,8 @@ pub struct RoundDecay {
 
 impl RoundDecay {
     /// Default cadence: 32 warm rounds, then one bit fewer every 32
-    /// rounds until the floor.
+    /// rounds until the floor — the first drop at round 64 (the first
+    /// decay interval is still full-width).
     pub fn new(bits_min: u32, bits_max: u32) -> Self {
         Self { bits_min, bits_max, warm_rounds: 32, decay_every: 32 }
     }
@@ -163,7 +177,11 @@ impl BitSchedule for RoundDecay {
         if round < self.warm_rounds {
             return self.bits_max;
         }
-        let steps = ((round - self.warm_rounds) / self.decay_every.max(1)) as u32 + 1;
+        // a bit comes off only once a FULL decay interval has elapsed:
+        // rounds [warm_rounds, warm_rounds + decay_every) still transmit
+        // at bits_max, so "one bit fewer every decay_every rounds" holds
+        // from the first interval on
+        let steps = ((round - self.warm_rounds) / self.decay_every.max(1)) as u32;
         self.bits_max.saturating_sub(steps).max(self.bits_min)
     }
 }
@@ -231,14 +249,14 @@ mod tests {
         let s = RoundDecay { bits_min: 2, bits_max: 8, warm_rounds: 10, decay_every: 5 };
         let st = WorkerBitState::default();
         assert!(!s.is_fixed());
-        // warm period at bits_max
-        for k in 0..10 {
+        // warm period AND the first full decay interval run at bits_max
+        for k in 0..15 {
             assert_eq!(s.width(&st, 0, k), 8, "round {k}");
         }
-        // first decay step lands immediately after the warm period
-        assert_eq!(s.width(&st, 0, 10), 7);
-        assert_eq!(s.width(&st, 0, 14), 7);
-        assert_eq!(s.width(&st, 0, 15), 6);
+        // first decay step lands once a full interval has elapsed
+        assert_eq!(s.width(&st, 0, 15), 7);
+        assert_eq!(s.width(&st, 0, 19), 7);
+        assert_eq!(s.width(&st, 0, 20), 6);
         // monotone non-increasing, floored at bits_min
         let mut prev = 8;
         for k in 0..200 {

@@ -65,10 +65,12 @@ fn laq_cfg(
     c.iters = 1000; // stepped manually
     c.threads = threads;
     c.server_shards = shards;
-    // pin the schedule regardless of the LAQ_WIRE_MODE env default; the
-    // async legs below re-set this explicitly
+    // pin the schedule regardless of the LAQ_WIRE_MODE / LAQ_DOWNLINK env
+    // defaults; the async and quantized-downlink legs below re-set these
+    // explicitly
     c.wire_mode = laq::config::WireMode::Sync;
     c.staleness_bound = 0;
+    c.downlink = laq::config::DownlinkMode::Exact;
     c
 }
 
@@ -160,6 +162,34 @@ fn laq_step_is_allocation_free_after_warmup() {
             "adaptive-width ({threads}x{shards}) LAQ step allocated {n} times after warmup"
         );
     }
+
+    // quantized θ broadcast: the downlink encoder reuses the staged
+    // innovation payload (codes scratch pre-sized for one DELTA_BLOCK
+    // shard), the wire round-trips through the pre-warmed framed downlink
+    // slot, and the worker view refills `theta_bc` in place — per-step
+    // allocations stay at zero with the broadcast compressed, sequential
+    // and with both fan-outs live (mnist p = 7840 ⇒ 8 downlink shards)
+    for (threads, shards) in [(1usize, 1usize), (2, 2)] {
+        let mut dq = laq_cfg("mnist", 240, threads, shards);
+        dq.downlink = laq::config::DownlinkMode::Quantized;
+        dq.down_bits_min = 2;
+        dq.down_bits_max = 8;
+        let n = count_steps(&dq, 30, 40);
+        assert_eq!(
+            n, 0,
+            "quantized-downlink ({threads}x{shards}) LAQ step allocated {n} times after warmup"
+        );
+    }
+
+    // quantized downlink composes with the pipelined wire phase — the
+    // broadcast happens on the coordinator between rounds, outside the
+    // absorb lanes, so the async engine's retained state is untouched
+    let mut dqa = laq_cfg("mnist", 240, 2, 2);
+    dqa.wire_mode = laq::config::WireMode::Async;
+    dqa.staleness_bound = 2;
+    dqa.downlink = laq::config::DownlinkMode::Quantized;
+    let n = count_steps(&dqa, 30, 40);
+    assert_eq!(n, 0, "async quantized-downlink LAQ step allocated {n} times after warmup");
 
     // cross-round staleness: deferred uploads park in pre-warmed
     // per-(worker, round) wire-slot rings and the in-flight bookkeeping

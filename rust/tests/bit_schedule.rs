@@ -48,10 +48,13 @@ fn cfg_for(
     c.record_every = 1;
     c.threads = threads;
     c.server_shards = shards;
-    // pin the wire schedule regardless of the CI env-matrix defaults;
-    // the async purity test below re-sets it explicitly
+    // pin the wire schedule and downlink mode regardless of the CI
+    // env-matrix defaults; the async purity test below re-sets the wire
+    // explicitly, and `rust/tests/downlink.rs` owns the quantized-downlink
+    // contracts
     c.wire_mode = WireMode::Sync;
     c.staleness_bound = 0;
+    c.downlink = laq::config::DownlinkMode::Exact;
     c.bit_schedule = kind;
     c.bits_min = bits_min;
     c.bits_max = bits_max;
@@ -270,9 +273,10 @@ fn one_bit_floor_trains_and_round_trips() {
         assert_eq!(t.worker_mirror(m), t.server_mirror(m), "worker {m} mirror drift");
     }
     // a genuinely adaptive range reaching the 1-bit floor also trains
-    // (round-decay 3 → 2 → 1 needs two 32-round decay periods)
+    // (round-decay 3 → 2 → 1: 32 warm rounds, first drop at 64, floor at
+    // 96 — the first decay interval is still full-width)
     let mut cfg = cfg_for(Algo::Laq, BitScheduleKind::RoundDecay, 1, 3, 1, 1);
-    cfg.iters = 70;
+    cfg.iters = 100;
     let mut t = laq::algo::build_native(&cfg).unwrap();
     for _ in 0..cfg.iters {
         assert!(t.step().unwrap().loss.is_finite());
@@ -282,6 +286,49 @@ fn one_bit_floor_trains_and_round_trips() {
         Some(1),
         "decay never hit the floor"
     );
+}
+
+#[test]
+fn round_decay_pins_the_exact_warm_and_decay_step_sequence() {
+    // regression guard for the historical `+1` off-by-one: the moment the
+    // warm period ended, the old arithmetic charged one decay step
+    // immediately, so the first drop landed at round `warm_rounds`
+    // instead of `warm_rounds + decay_every` and every later step was one
+    // interval early.  Pin the documented sequence exactly.
+    use laq::quant::{BitSchedule, RoundDecay, WorkerBitState};
+    let st = WorkerBitState::default();
+
+    // default cadence (RoundDecay::new): 32 warm rounds at bits_max, the
+    // first FULL interval also at bits_max, one bit per interval after
+    let s = RoundDecay::new(2, 5);
+    assert_eq!(s.width(&st, 0, 0), 5);
+    assert_eq!(s.width(&st, 0, 31), 5);
+    assert_eq!(s.width(&st, 0, 32), 5, "warm-period end must NOT drop (the +1 bug)");
+    assert_eq!(s.width(&st, 0, 63), 5);
+    assert_eq!(s.width(&st, 0, 64), 4, "first drop a full interval after warmup");
+    assert_eq!(s.width(&st, 0, 95), 4);
+    assert_eq!(s.width(&st, 0, 96), 3);
+    assert_eq!(s.width(&st, 0, 128), 2);
+    assert_eq!(s.width(&st, 0, 160), 2, "width fell through the floor");
+    for k in 0..256 {
+        let expect = if k < 64 {
+            5
+        } else {
+            5u32.saturating_sub(((k - 32) / 32) as u32).max(2)
+        };
+        assert_eq!(s.width(&st, 0, k), expect, "round {k}");
+    }
+
+    // compact custom cadence: the whole width sequence, literally
+    let s = RoundDecay { bits_min: 1, bits_max: 3, warm_rounds: 2, decay_every: 2 };
+    let widths: Vec<u32> = (0..10).map(|k| s.width(&st, 0, k)).collect();
+    assert_eq!(widths, vec![3, 3, 3, 3, 2, 2, 1, 1, 1, 1]);
+
+    // the downlink seat defaults to the same rule — a shard index in the
+    // worker slot must see the identical sequence
+    for k in 0..10 {
+        assert_eq!(s.downlink_width(&st, 5, k), s.width(&st, 5, k), "round {k}");
+    }
 }
 
 #[test]

@@ -1,0 +1,291 @@
+//! Contracts of the quantized θ broadcast (`cfg.downlink`):
+//!
+//! * **exact regression** — `downlink = exact` is the pre-existing
+//!   broadcast: the worker view IS the server θ every round and each
+//!   round bills exactly `32 · dim` downlink bits (the golden
+//!   fingerprints in `rust/tests/wire_equivalence.rs` additionally pin
+//!   the full traces bit-for-bit).
+//! * **the headline win** — on strongly convex logreg, `downlink =
+//!   quantized` ends within 5% of the exact-downlink final loss while
+//!   moving strictly fewer TOTAL (uplink + downlink) bits at the same
+//!   iteration count (the acceptance criterion; the `trainer_bits`
+//!   bench group records the same comparison in `BENCH_trainer.json`).
+//! * **per-seed purity** — the quantized downlink trace (losses, bits
+//!   in both directions, per-shard widths, worker θ view) is a pure
+//!   function of (seed, config): identical across reruns and across
+//!   every (threads, shards) combination — the shard partition is the
+//!   fixed `DELTA_BLOCK` grid, never the wall-clock `server_shards`.
+//! * **accounting exactness** — after the one exact priming round,
+//!   every round's downlink charge is exactly the sum of the per-shard
+//!   framed sections `Σ_s (32 + 8 + w_s · p_s)`, billed as ONE
+//!   broadcast message, and `total_bits = uplink_bits + downlink_bits`.
+//! * **mirror tracking** — the worker view reconstructed from the wire
+//!   tracks the server θ within the quantization grid, round over round.
+//! * **v5 checkpoint resume** — the downlink mirror + per-shard fold
+//!   state persist, and a mid-run resume replays the remaining
+//!   quantized stream bit-for-bit even on a trainer configured exact.
+
+use laq::config::{Algo, DownlinkMode, RunCfg, WireMode};
+use laq::coordinator::server::DELTA_BLOCK;
+
+fn cfg_for(downlink: DownlinkMode, threads: usize, shards: usize) -> RunCfg {
+    let mut c = RunCfg::paper_logreg(Algo::Laq);
+    // mnist-like keeps p = 7840 ⇒ 8 fixed downlink shards (7 full
+    // DELTA_BLOCKs + one 672-coordinate tail); tiny row counts keep the
+    // suite fast
+    c.data.n_train = 240;
+    c.data.n_test = 60;
+    c.workers = 4;
+    c.iters = 40;
+    c.batch = 40;
+    c.record_every = 1;
+    c.threads = threads;
+    c.server_shards = shards;
+    // pin the wire schedule regardless of the CI env-matrix defaults
+    c.wire_mode = WireMode::Sync;
+    c.staleness_bound = 0;
+    c.downlink = downlink;
+    c.down_bits_min = 2;
+    c.down_bits_max = 8;
+    c
+}
+
+/// Everything observable about a run, collected per iteration.
+#[derive(Debug, PartialEq)]
+struct Trace {
+    // (loss, grad_norm_sq, bits, uploads, max_eps_sq) per step
+    steps: Vec<(f64, f64, u64, usize, f64)>,
+    rounds: u64,
+    up_bits: u64,
+    down_bits: u64,
+    down_msgs: u64,
+    sim_time: f64,
+    theta: Vec<f32>,
+    worker_theta: Vec<f32>,
+    /// per-step snapshot of the chosen downlink shard widths
+    widths: Vec<Vec<u32>>,
+}
+
+fn run_trace(cfg: &RunCfg) -> Trace {
+    let mut t = laq::algo::build_native(cfg).unwrap();
+    let mut steps = Vec::with_capacity(cfg.iters);
+    let mut widths = Vec::with_capacity(cfg.iters);
+    for _ in 0..cfg.iters {
+        let s = t.step().unwrap();
+        steps.push((s.loss, s.grad_norm_sq, s.bits, s.uploads, s.max_eps_sq));
+        widths.push(t.downlink_widths().to_vec());
+    }
+    Trace {
+        steps,
+        rounds: t.net.uplink_rounds(),
+        up_bits: t.net.uplink_bits(),
+        down_bits: t.net.downlink_bits(),
+        down_msgs: t.net.downlink_msgs(),
+        sim_time: t.net.sim_time(),
+        theta: t.theta().to_vec(),
+        worker_theta: t.worker_theta().to_vec(),
+        widths,
+    }
+}
+
+#[test]
+fn exact_downlink_broadcasts_theta_verbatim_and_bills_dense_bits() {
+    let cfg = cfg_for(DownlinkMode::Exact, 1, 1);
+    let mut t = laq::algo::build_native(&cfg).unwrap();
+    let dim = t.theta().len();
+    for k in 1..=10u64 {
+        t.step().unwrap();
+        // the worker view IS the server θ, and every round bills one
+        // raw-IEEE broadcast — today's behavior, exactly
+        assert_eq!(t.worker_theta(), t.theta(), "round {k}");
+        assert_eq!(t.net.downlink_bits(), k * 32 * dim as u64);
+        assert_eq!(t.net.downlink_msgs(), k);
+    }
+}
+
+#[test]
+fn quantized_downlink_matches_exact_final_loss_on_strictly_fewer_total_bits() {
+    // the acceptance criterion: same iteration horizon on strongly
+    // convex logreg, final loss within 5%, strictly fewer TOTAL bits
+    let mut exact = cfg_for(DownlinkMode::Exact, 1, 1);
+    exact.iters = 240;
+    let e = run_trace(&exact);
+
+    let mut quant = cfg_for(DownlinkMode::Quantized, 1, 1);
+    quant.iters = 240;
+    let q = run_trace(&quant);
+
+    assert_eq!(e.steps.len(), q.steps.len());
+    let first = e.steps.first().unwrap().0;
+    let le = e.steps.last().unwrap().0;
+    let lq = q.steps.last().unwrap().0;
+    assert!(le < 0.8 * first, "exact run did not contract ({first} -> {le})");
+    assert!(lq < 0.8 * first, "quantized run did not contract ({first} -> {lq})");
+    assert!(
+        (lq - le).abs() <= 0.05 * le.abs().max(1e-9),
+        "quantized-downlink final loss {lq} strays from exact {le} beyond 5%"
+    );
+    assert!(
+        q.up_bits + q.down_bits < e.up_bits + e.down_bits,
+        "quantized moved {} total bits vs exact {} — no saving",
+        q.up_bits + q.down_bits,
+        e.up_bits + e.down_bits
+    );
+    // and the saving is genuinely a downlink saving
+    assert!(q.down_bits < e.down_bits);
+}
+
+#[test]
+fn quantized_downlink_trace_is_pure_across_threads_and_shards() {
+    let base = run_trace(&cfg_for(DownlinkMode::Quantized, 1, 1));
+    // the downlink shard grid is the fixed DELTA_BLOCK partition, so the
+    // wall-clock knobs must not perturb a single bit of the trace
+    for (threads, shards) in [(1usize, 7usize), (4, 1), (4, 7)] {
+        let t = run_trace(&cfg_for(DownlinkMode::Quantized, threads, shards));
+        assert_eq!(
+            base, t,
+            "quantized downlink threads={threads} shards={shards} not reproducible"
+        );
+    }
+    let again = run_trace(&cfg_for(DownlinkMode::Quantized, 4, 7));
+    assert_eq!(base, again, "quantized downlink rerun diverged");
+    // the schedule must have actually dialed somewhere below the ceiling
+    // at least once, or the purity claim is vacuous
+    let min_width = base.widths.iter().flatten().copied().filter(|&w| w > 0).min();
+    assert!(min_width.is_some(), "no downlink widths recorded");
+}
+
+#[test]
+fn quantized_downlink_composes_with_the_async_wire_phases() {
+    for (wire, staleness) in [(WireMode::Async, 2usize), (WireMode::AsyncCross, 2)] {
+        let mut base_cfg = cfg_for(DownlinkMode::Quantized, 1, 1);
+        base_cfg.wire_mode = wire;
+        base_cfg.staleness_bound = staleness;
+        let base = run_trace(&base_cfg);
+        for (threads, shards) in [(4usize, 1usize), (4, 7)] {
+            let mut cfg = base_cfg.clone();
+            cfg.threads = threads;
+            cfg.server_shards = shards;
+            let t = run_trace(&cfg);
+            assert_eq!(
+                base,
+                t,
+                "{} quantized downlink threads={threads} shards={shards} not reproducible",
+                wire.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn quantized_downlink_accounting_is_exact_per_round() {
+    let cfg = cfg_for(DownlinkMode::Quantized, 1, 1);
+    let mut t = laq::algo::build_native(&cfg).unwrap();
+    let dim = t.theta().len();
+    let n_shards = dim.div_ceil(DELTA_BLOCK);
+
+    // round 0 primes the mirror with one exact broadcast
+    t.step().unwrap();
+    assert_eq!(t.net.downlink_bits(), 32 * dim as u64);
+    assert_eq!(t.net.downlink_msgs(), 1);
+
+    // afterwards every round's charge is the sum of the per-shard framed
+    // sections, billed as ONE broadcast message
+    for k in 2..=12u64 {
+        let before = t.net.downlink_bits();
+        t.step().unwrap();
+        let widths = t.downlink_widths().to_vec();
+        assert_eq!(widths.len(), n_shards);
+        let mut expect = 0u64;
+        for (s, &w) in widths.iter().enumerate() {
+            assert!(
+                (cfg.down_bits_min..=cfg.down_bits_max).contains(&w),
+                "round {k} shard {s} width {w} outside [{}, {}]",
+                cfg.down_bits_min,
+                cfg.down_bits_max
+            );
+            let p_s = DELTA_BLOCK.min(dim - s * DELTA_BLOCK);
+            expect += 32 + 8 + (w as u64) * p_s as u64;
+        }
+        assert_eq!(
+            t.net.downlink_bits() - before,
+            expect,
+            "round {k} downlink charge mismatch"
+        );
+        assert_eq!(t.net.downlink_msgs(), k, "one broadcast message per round");
+    }
+}
+
+#[test]
+fn run_result_totals_split_by_direction() {
+    for mode in [DownlinkMode::Exact, DownlinkMode::Quantized] {
+        let mut t = laq::algo::build_native(&cfg_for(mode, 1, 1)).unwrap();
+        let res = t.run().unwrap();
+        assert_eq!(res.total_bits, res.uplink_bits + res.downlink_bits);
+        assert_eq!(res.uplink_bits, t.net.uplink_bits());
+        assert_eq!(res.downlink_bits, t.net.downlink_bits());
+        assert!(res.downlink_bits > 0, "{}: downlink never billed", mode.name());
+        // the trace's cumulative downlink column ends at the total
+        assert_eq!(res.trace.last().unwrap().down_bits, res.downlink_bits);
+    }
+}
+
+#[test]
+fn worker_view_tracks_theta_within_the_grid() {
+    let cfg = cfg_for(DownlinkMode::Quantized, 1, 1);
+    let mut t = laq::algo::build_native(&cfg).unwrap();
+    for _ in 0..30 {
+        t.step().unwrap();
+    }
+    // the mirror recursion quantizes each round's θ-delta, so the view
+    // error is a fraction (τ ≤ 1/3 at the 2-bit floor) of the per-round
+    // movement — far smaller than θ itself.  A loose end-to-end bound:
+    let inf: f32 = t
+        .theta()
+        .iter()
+        .zip(t.worker_theta())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f32::max);
+    let scale: f32 = t.theta().iter().map(|v| v.abs()).fold(0.0, f32::max);
+    assert!(
+        inf <= 0.05 * scale.max(1e-3),
+        "worker θ view drifted: ‖θ − θ̂‖∞ = {inf} vs ‖θ‖∞ = {scale}"
+    );
+}
+
+#[test]
+fn checkpoint_v5_resumes_the_quantized_downlink_bit_exactly() {
+    let dir = std::env::temp_dir().join("laq_downlink_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("mid.ckpt");
+
+    let cfg = cfg_for(DownlinkMode::Quantized, 1, 1);
+
+    // uninterrupted reference run
+    let mut straight = laq::algo::build_native(&cfg).unwrap();
+    for _ in 0..30 {
+        straight.step().unwrap();
+    }
+
+    let mut first = laq::algo::build_native(&cfg).unwrap();
+    for _ in 0..15 {
+        first.step().unwrap();
+    }
+    first.save_checkpoint(&path).unwrap();
+
+    // resume on a trainer configured exact — the checkpoint's recorded
+    // downlink mode, width range, mirror and per-shard fold state must
+    // take over (exactly like the wire and bit schedules)
+    let mut resumed = laq::algo::build_native(&cfg_for(DownlinkMode::Exact, 4, 7)).unwrap();
+    resumed.load_checkpoint(&path).unwrap();
+    assert_eq!(resumed.cfg.downlink, DownlinkMode::Quantized);
+    assert_eq!((resumed.cfg.down_bits_min, resumed.cfg.down_bits_max), (2, 8));
+    for _ in 0..15 {
+        resumed.step().unwrap();
+    }
+
+    assert_eq!(straight.theta(), resumed.theta());
+    assert_eq!(straight.worker_theta(), resumed.worker_theta());
+    assert_eq!(straight.downlink_widths(), resumed.downlink_widths());
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -292,6 +292,56 @@ fn every_bit_schedule_stays_in_range_and_is_a_pure_fold() {
 }
 
 #[test]
+fn downlink_mirror_recursion_round_trips_within_grid_resolution() {
+    // the quantized θ broadcast is the uplink codec pointed the other
+    // way: per round the coordinator quantizes θ against the shared
+    // downlink mirror at some width w, the worker decodes the framed
+    // message against ITS mirror copy, and both commit the wire
+    // reconstruction.  Two properties carry the whole downlink design:
+    // (a) lock-step — the worker's reconstruction is bit-identical to
+    //     the coordinator's, at every width and across width changes;
+    // (b) resolution — each round's view error obeys the §2.1 bound
+    //     ‖θ − θ̂‖∞ ≤ τ(w)·R with τ(w) = 1/(2^w − 1), so the worker view
+    //     tracks θ within the grid of whatever width the schedule chose.
+    Prop::new().check("downlink mirror recursion", |rng| {
+        let p = 1 + rng.below(2000) as usize;
+        let scale = 10f64.powf(rng.uniform_range(-3.0, 3.0));
+        let mut theta = rand_vec(rng, p, scale);
+        let mut mirror_coord = vec![0.0f32; p]; // coordinator copy
+        let mut mirror_worker = vec![0.0f32; p]; // worker copy
+        // several rounds of θ drift under schedule-varying widths
+        for round in 0..5 {
+            let w = 2 + rng.below(7) as u32; // down_bits range [2, 8]
+            let q = InnovationQuantizer::new(w);
+            let (qi, view_coord) = q.quantize(&theta, &mirror_coord);
+            let wire = QuantizedInnovation::decode_framed(&qi.encode_framed(), p)
+                .map_err(|e| e.to_string())?;
+            prop_assert!(wire.bits == w, "width lost on the downlink wire");
+            let view_worker = q.dequantize(&wire, &mirror_worker);
+            prop_assert!(
+                view_coord == view_worker,
+                "downlink mirror drift at p={p} w={w} round={round}"
+            );
+            let tau = q.tau() as f32;
+            let err = norm_inf_diff(&theta, &view_worker);
+            prop_assert!(
+                err <= tau * qi.radius * (1.0 + 1e-5) + 1e-30,
+                "downlink view error {err} > tau*R {} at w={w}",
+                tau * qi.radius
+            );
+            mirror_coord = view_coord;
+            mirror_worker = view_worker;
+            // the server moves θ before the next broadcast
+            let step = rand_vec(rng, p, scale * 0.1);
+            for (t, d) in theta.iter_mut().zip(&step) {
+                *t += d;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn quantize_is_deterministic() {
     Prop::new().check("same input -> same message", |rng| {
         let p = 1 + rng.below(300) as usize;

@@ -46,6 +46,11 @@ fn cfg_for(
     c.server_shards = shards;
     c.wire_mode = wire;
     c.staleness_bound = staleness;
+    // pin the downlink: the golden fingerprints below predate the
+    // quantized θ broadcast and must stay bit-identical under
+    // `downlink = exact` whatever the CI env matrix (`LAQ_DOWNLINK`) says;
+    // `rust/tests/downlink.rs` owns the quantized-downlink contracts
+    c.downlink = laq::config::DownlinkMode::Exact;
     if algo.is_stochastic() {
         c.alpha = 0.01;
     }
