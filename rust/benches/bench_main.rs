@@ -15,9 +15,9 @@
 //!    so CI can track the perf trajectory.
 //!
 //! Output is plain text; `cargo bench 2>&1 | tee bench_output.txt`.
-//! Set `LAQ_BENCH_QUICK=1` for the CI smoke mode: only the sharded-server
-//! and trainer-wire groups run (reduced sampling) and both JSONs are
-//! still emitted.
+//! Set `LAQ_BENCH_QUICK=1` for the CI smoke mode: only the sharded-server,
+//! trainer-wire, dial-a-bit, and scenario groups run (reduced sampling)
+//! and both JSONs are still emitted.
 
 use laq::algo::{build_native, Trainer};
 use laq::comm::{LatencyModel, Payload};
@@ -538,6 +538,100 @@ fn bench_bit_schedules(quick: bool, entries: &mut Vec<Json>) {
     }
 }
 
+/// Scenario bench: the robustness tax — traffic, simulated wall-clock,
+/// rejected uploads, and final full-fleet loss for the same LAQ run
+/// fault-free vs under a heavy-tailed straggler fleet vs an elastic
+/// mid-run dropout.  Emits the `trainer_scenario` group into
+/// BENCH_trainer.json so CI can watch how much convergence the fault
+/// model costs as the engine evolves.
+fn bench_trainer_scenario(quick: bool, entries: &mut Vec<Json>) {
+    use laq::config::WorkerFaults;
+    println!("\n== scenario engine: fault-free vs straggler vs dropout (LAQ logreg, sync) ==");
+    let iters = if quick { 100 } else { 300 };
+    println!("   (mnist-like p=7840, M=4, {iters} rounds, Pareto stragglers / mid-run outage)");
+    let fleets: [(&str, Vec<WorkerFaults>); 3] = [
+        ("fault-free", vec![]),
+        (
+            "straggler-heavy-tail",
+            vec![
+                WorkerFaults {
+                    worker: 1,
+                    straggle_alpha: Some(1.2),
+                    deadline: 5.0,
+                    ..WorkerFaults::default()
+                },
+                WorkerFaults {
+                    worker: 3,
+                    straggle_alpha: Some(2.5),
+                    deadline: 8.0,
+                    ..WorkerFaults::default()
+                },
+            ],
+        ),
+        (
+            "dropout-mid-run",
+            vec![WorkerFaults {
+                worker: 2,
+                drop_from: Some(iters / 4),
+                drop_until: Some(iters / 2),
+                ..WorkerFaults::default()
+            }],
+        ),
+    ];
+    let mut free_loss = f64::NAN;
+    for (label, fleet) in fleets {
+        let mut cfg = RunCfg::paper_logreg(Algo::Laq);
+        cfg.data.n_train = 240;
+        cfg.data.n_test = 60;
+        cfg.workers = 4;
+        cfg.threads = 1;
+        cfg.server_shards = 1;
+        cfg.wire_mode = WireMode::Sync;
+        cfg.staleness_bound = 0;
+        cfg.iters = iters;
+        cfg.scenario.workers = fleet;
+        let mut t = build_native(&cfg).unwrap();
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            t.step().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        // full-fleet loss: the per-step trace excludes dropped workers'
+        // shards, so only eval_full compares fleets apples to apples
+        let (loss, _) = t.eval_full().unwrap();
+        let up = t.net.uplink_bits();
+        let down = t.net.downlink_bits();
+        let rounds = t.net.uplink_rounds();
+        let sim = t.net.sim_time();
+        let rejected = t.scenario_rejections();
+        println!(
+            "{label:<24} rounds {rounds:>5}  bits up {up:>12} + down {down:>12}  sim {sim:>9.3}s  rejected {rejected:>3}  full loss {loss:.6e}  ({wall:.2}s)"
+        );
+        if label == "fault-free" {
+            free_loss = loss;
+        } else {
+            println!(
+                "{:<24} loss Δ {:+.2e} vs fault-free",
+                format!("  -> {label}"),
+                loss - free_loss
+            );
+        }
+        entries.push(Json::obj(vec![
+            ("group", Json::Str("trainer_scenario".into())),
+            ("bench", Json::Str(format!("laq_{label}"))),
+            ("scenario", Json::Str(label.into())),
+            ("iters", Json::Num(iters as f64)),
+            ("rounds", Json::Num(rounds as f64)),
+            ("uplink_bits", Json::Num(up as f64)),
+            ("downlink_bits", Json::Num(down as f64)),
+            ("sim_time_s", Json::Num(sim)),
+            ("rejected_uploads", Json::Num(rejected as f64)),
+            ("final_loss", Json::Num(loss)),
+            ("wall_s", Json::Num(wall)),
+        ]));
+    }
+}
+
 fn write_trainer_json(entries: Vec<Json>) {
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let doc = Json::obj(vec![
@@ -618,6 +712,7 @@ fn main() {
         bench_server_sharded(true, &mut entries);
         bench_trainer_wire(true, &mut trainer_entries);
         bench_bit_schedules(true, &mut trainer_entries);
+        bench_trainer_scenario(true, &mut trainer_entries);
     } else {
         println!("LAQ bench harness (offline substitute for criterion)");
         bench_codecs();
@@ -628,6 +723,7 @@ fn main() {
         bench_server_sharded(false, &mut entries);
         bench_trainer_wire(false, &mut trainer_entries);
         bench_bit_schedules(false, &mut trainer_entries);
+        bench_trainer_scenario(false, &mut trainer_entries);
         bench_experiments();
     }
     write_bench_json(entries);

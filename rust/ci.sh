@@ -27,6 +27,11 @@
 # bit-budget sweep) so the perf trajectory is machine-readable from
 # every CI run.
 #
+# A final scenario leg runs the fault-injection contract suite
+# (rust/tests/scenario.rs) in sequential and parallel shapes, pins the
+# empty-scenario goldens byte-identical across it, and drives the three
+# examples/scenario_*.toml configs end to end through the release binary.
+#
 # Usage: rust/ci.sh   (from the repo root or from rust/)
 set -euo pipefail
 cd "$(dirname "$0")"
@@ -75,5 +80,28 @@ test -f BENCH_trainer.json && echo "BENCH_trainer.json present"
 grep -q '"uplink_bits"' BENCH_trainer.json
 grep -q '"downlink_bits"' BENCH_trainer.json
 echo "BENCH_trainer.json carries uplink_bits/downlink_bits"
+
+echo "== scenario suite (fault injection, elastic membership, purity) =="
+# the empty-scenario goldens must be byte-identical before and after the
+# scenario suite — an engine that perturbs the fault-free path (an extra
+# RNG draw, a reordered bill) is a wire regression, not a new feature
+GOLDEN=tests/golden_sync_traces.txt
+golden_before=$(sha256sum "$GOLDEN" | cut -d' ' -f1)
+cargo test -q --test scenario
+LAQ_THREADS=4 LAQ_SHARDS=4 cargo test -q --test scenario
+golden_after=$(sha256sum "$GOLDEN" | cut -d' ' -f1)
+if [ "$golden_before" != "$golden_after" ]; then
+    echo "FAIL: empty-scenario goldens changed ($golden_before -> $golden_after)" >&2
+    exit 1
+fi
+echo "empty-scenario goldens unchanged"
+
+echo "== scenario example configs (release binary, end to end) =="
+for f in ../examples/scenario_straggler.toml \
+         ../examples/scenario_dropout.toml \
+         ../examples/scenario_corrupt.toml; do
+    echo "-- $f"
+    ./target/release/laq train --config "$f" --out results/scenario_ci
+done
 
 echo "== ci OK =="

@@ -13,12 +13,20 @@ use crate::model::{LossCfg, ModelOps, WorkerGrad};
 use crate::runtime::{PjrtGradWorker, Runtime};
 use crate::{Error, Result};
 
-/// Split the training set into per-worker shards per the config.
+/// Split the training set into per-worker shards per the config.  A
+/// scenario's `hetero_alpha` (non-IID skew as part of a fault scenario)
+/// overrides the data section's when both are set.
 fn make_shards(cfg: &RunCfg, train: &Dataset) -> Vec<Dataset> {
-    match cfg.data.hetero_alpha {
+    match cfg.scenario.hetero_alpha.or(cfg.data.hetero_alpha) {
         Some(a) => shard::dirichlet(train, cfg.workers, a, cfg.data.seed),
         None => shard::uniform(train, cfg.workers, cfg.data.seed),
     }
+}
+
+/// The latency model both builders hand the trainer, from the config's
+/// validated `t_fixed`/`t_per_bit` knobs.
+fn latency(cfg: &RunCfg) -> Result<LatencyModel> {
+    LatencyModel::new(cfg.t_fixed, cfg.t_per_bit)
 }
 
 fn loss_cfg(cfg: &RunCfg, shards: &[Dataset]) -> LossCfg {
@@ -78,7 +86,7 @@ pub fn build_native(cfg: &RunCfg) -> Result<Trainer> {
                 ))
             }
         };
-    Trainer::assemble(cfg.clone(), nodes, theta0, Some(evaluator), LatencyModel::default())
+    Trainer::assemble(cfg.clone(), nodes, theta0, Some(evaluator), latency(cfg)?)
 }
 
 /// Build with the PJRT backend over `artifacts/` (the production path).
@@ -137,7 +145,7 @@ pub fn build_pjrt(cfg: &RunCfg, rt: Arc<Runtime>) -> Result<Trainer> {
             Ok(WorkerNode::new(w, cfg.bits, codec(cfg)))
         })
         .collect::<Result<_>>()?;
-    Trainer::assemble(cfg.clone(), nodes, theta0, Some(evaluator), LatencyModel::default())
+    Trainer::assemble(cfg.clone(), nodes, theta0, Some(evaluator), latency(cfg)?)
 }
 
 /// Build per `cfg.backend`, opening `artifacts/` when needed.

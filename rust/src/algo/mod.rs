@@ -185,8 +185,8 @@ pub use build::{build, build_native, build_pjrt};
 
 use std::sync::atomic::{AtomicU8, Ordering};
 
-use crate::comm::{LatencyModel, Network, Payload, WireSlot};
-use crate::config::{Algo, BitScheduleKind, DownlinkMode, RunCfg, WireMode};
+use crate::comm::{Corruption, LatencyModel, Network, Payload, WireSlot};
+use crate::config::{Algo, BitScheduleKind, DownlinkMode, RunCfg, WireMode, WorkerFaults};
 use crate::coordinator::server::{DELTA_BLOCK, WireSync, WIRE_PENDING, WIRE_SKIP, WIRE_UPLOAD};
 use crate::coordinator::worker::{LazyCodec, LazyDecision, WorkerNode};
 use crate::coordinator::ServerState;
@@ -267,6 +267,10 @@ pub struct Trainer {
     /// width schedule (inert under `downlink = exact`; persisted in v5
     /// checkpoints)
     down: DownlinkState,
+    /// scenario-engine runtime: per-round fault draws + membership mask
+    /// (inert — all-default, zero extra RNG draws — when `cfg.scenario`
+    /// is empty, which is what keeps the empty scenario bit-identical)
+    scenario: ScenarioRt,
 }
 
 /// Retained state of the quantized downlink broadcast
@@ -585,6 +589,84 @@ impl CrossState {
     }
 }
 
+/// One worker's fault verdict for the current round, drawn once on the
+/// coordinator before the fan-out ([`Trainer::scenario_begin_round`]) so
+/// every consumer — widths, local phase, wire, accounting — sees the same
+/// verdict regardless of thread schedule.
+#[derive(Clone, Copy, Debug)]
+struct RoundFault {
+    /// worker is out of the fleet this round (dropout schedule)
+    dropped: bool,
+    /// worker computed but its straggle multiple exceeded its deadline —
+    /// the round proceeds without it (a forced skip; nothing is billed,
+    /// the message is discarded unsent)
+    missed: bool,
+    /// this round's would-be upload is damaged in flight; decode rejects
+    /// it, the frame is billed, θ is untouched
+    corrupt: Option<Corruption>,
+    /// Pareto straggle multiple on the worker's message time (≥ 1; the
+    /// excess over 1 is added to the simulated clock for billed messages)
+    mult: f64,
+}
+
+impl Default for RoundFault {
+    fn default() -> Self {
+        Self { dropped: false, missed: false, corrupt: None, mult: 1.0 }
+    }
+}
+
+/// Retained runtime of the scenario engine: the per-worker fault specs
+/// from `cfg.scenario`, this round's drawn verdicts, and the elastic
+/// membership mask.  All buffers are sized once at assemble; with an
+/// empty scenario `on` is false, `scenario_begin_round` never runs, and
+/// `faults` stays all-default forever — every scenario check in the hot
+/// path then takes its false branch with zero extra RNG draws or float
+/// ops, which is the empty-scenario bit-identity contract.
+struct ScenarioRt {
+    on: bool,
+    /// per-worker fault spec (index = worker), None for unlisted workers
+    specs: Vec<Option<WorkerFaults>>,
+    /// this round's verdict per worker, refilled in place each round
+    faults: Vec<RoundFault>,
+    /// membership as of the last `scenario_begin_round`: edges against
+    /// the dropout schedule drive mirror retirement and rejoin priming
+    active: Vec<bool>,
+    /// total corrupt uploads detected-and-rejected (test hook)
+    rejected_total: u64,
+}
+
+impl ScenarioRt {
+    fn new(cfg: &RunCfg, n_workers: usize) -> Self {
+        let mut specs: Vec<Option<WorkerFaults>> = vec![None; n_workers];
+        for wf in &cfg.scenario.workers {
+            // validate() pinned wf.worker < cfg.workers; the min guards a
+            // hand-assembled trainer with fewer nodes than the config
+            if wf.worker < n_workers {
+                specs[wf.worker] = Some(wf.clone());
+            }
+        }
+        Self {
+            on: !cfg.scenario.is_empty(),
+            specs,
+            faults: vec![RoundFault::default(); n_workers],
+            active: vec![true; n_workers],
+            rejected_total: 0,
+        }
+    }
+
+    fn dropped(&self, m: usize) -> bool {
+        self.faults[m].dropped
+    }
+
+    fn missed(&self, m: usize) -> bool {
+        self.faults[m].missed
+    }
+
+    fn corrupt(&self, m: usize) -> Option<Corruption> {
+        self.faults[m].corrupt
+    }
+}
+
 impl Trainer {
     /// Assemble a trainer from already-built worker nodes.  Most callers
     /// should use [`build::build_native`] / [`build::build_pjrt`].
@@ -668,6 +750,7 @@ impl Trainer {
             None
         };
         let n_workers = nodes.len();
+        let scenario = ScenarioRt::new(&cfg, n_workers);
         Ok(Self {
             cfg,
             nodes,
@@ -691,6 +774,7 @@ impl Trainer {
             widths: vec![schedule.max_width(); n_workers],
             schedule,
             down,
+            scenario,
         })
     }
 
@@ -711,6 +795,95 @@ impl Trainer {
         self.server.set_opt(opt);
     }
 
+    /// Test hook: corrupt uploads detected-and-rejected so far.
+    pub fn scenario_rejections(&self) -> u64 {
+        self.scenario.rejected_total
+    }
+
+    /// Scenario engine, phase 0 of a round: fire membership edges and
+    /// draw every worker's fault verdict for round `k` — on the
+    /// coordinator, before the downlink broadcast and the fan-out, so
+    /// the verdicts are a pure function of (seed, config, round) and
+    /// identical under every wire mode and thread/shard count.
+    ///
+    /// Membership edges (the dropout schedule is a pure function of
+    /// (config, round), so so is the whole membership state machine):
+    ///
+    /// * **leave** — the worker's mirror contribution is retired from
+    ///   the lazy aggregate ([`ServerState::retire_mirror`]), its
+    ///   worker-side lazy state (q_prev / ε̂² / clock) and its adaptive
+    ///   bit-width fold reset, and any of its in-flight cross-round
+    ///   uploads are withdrawn.  Both mirror sides land at zero, so the
+    ///   mirror recursion stays consistent whenever the worker returns.
+    /// * **rejoin** — the joiner warms its view of θ via one exact
+    ///   priming message, billed like the quantized downlink's priming
+    ///   broadcast; its mirrors restart from zero on both endpoints.
+    ///
+    /// Fault draws for active workers ride dedicated counter-based
+    /// streams ([`LatencyModel::straggle_mult`], [`Corruption::draw`]),
+    /// so one worker's scenario never perturbs another's randomness.
+    fn scenario_begin_round(&mut self, k: usize) {
+        let dim = self.dim();
+        for m in 0..self.nodes.len() {
+            let mut f = RoundFault::default();
+            let spec = match self.scenario.specs[m].clone() {
+                Some(s) => s,
+                None => {
+                    self.scenario.faults[m] = f;
+                    continue;
+                }
+            };
+            let dropped_now = spec.dropped(k);
+            if dropped_now && self.scenario.active[m] {
+                self.server.retire_mirror(m);
+                let node = &mut self.nodes[m];
+                node.q_prev.fill(0.0);
+                node.eps_hat_sq = 0.0;
+                node.clock = 0;
+                self.bit_states[m] = WorkerBitState::default();
+                self.cross.pending.retain(|p| p.m != m);
+                self.scenario.active[m] = false;
+                crate::log_info!("scenario: worker {m} retired at round {k}");
+            } else if !dropped_now && !self.scenario.active[m] {
+                self.net.broadcast(Network::downlink_dense_bits(dim));
+                self.scenario.active[m] = true;
+                crate::log_info!(
+                    "scenario: worker {m} rejoined at round {k} (one exact priming message)"
+                );
+            }
+            if dropped_now {
+                f.dropped = true;
+            } else {
+                if let Some(alpha) = spec.straggle_alpha {
+                    f.mult = self.net.latency.straggle_mult(
+                        self.cfg.seed,
+                        m as u64,
+                        k as u64,
+                        alpha,
+                    );
+                    f.missed = f.mult > spec.deadline;
+                }
+                f.corrupt = Corruption::draw(self.cfg.seed, m as u64, k as u64, spec.corrupt_rate);
+            }
+            self.scenario.faults[m] = f;
+        }
+    }
+
+    /// Scenario engine: add worker `m`'s straggle excess over a billed
+    /// message of `bits` to the simulated clock (the base message time
+    /// was already accounted by the upload itself).  A no-op — zero
+    /// float ops — without a scenario or for non-stragglers.
+    fn scenario_delay(&mut self, m: usize, bits: usize) {
+        if !self.scenario.on {
+            return;
+        }
+        let mult = self.scenario.faults[m].mult;
+        if mult > 1.0 {
+            let extra = (mult - 1.0) * self.net.latency.message_time(bits);
+            self.net.delay(extra);
+        }
+    }
+
     /// One full iteration of the selected algorithm: a parallel local
     /// phase (per-worker gradients + criterion + encoding) plus the wire
     /// phase (uploads, aggregation, mirror commits) — run back-to-back
@@ -723,6 +896,14 @@ impl Trainer {
         let dim = self.dim();
         let m_all = self.nodes.len();
         let lazy = algo.is_lazy();
+
+        // 0. scenario engine: membership edges + this round's fault
+        // verdicts, drawn on the coordinator before anything else sees
+        // the round.  Skipped entirely — no draws, no branches below
+        // change outcome — when no scenario is configured.
+        if self.scenario.on {
+            self.scenario_begin_round(k);
+        }
 
         // 1. downlink broadcast of θ^k — one message per round, billed
         // through the single-source wire-size functions in `crate::comm`
@@ -757,6 +938,11 @@ impl Trainer {
         // schedules.  Only the quantized lazy codec consumes them.
         if lazy {
             for m in 0..m_all {
+                if self.scenario.dropped(m) {
+                    // out of the fleet: its width fold stays frozen at
+                    // the reset state until it rejoins
+                    continue;
+                }
                 let w = self.schedule.width(&self.bit_states[m], m, k);
                 debug_assert!(
                     (self.schedule.min_width()..=self.schedule.max_width()).contains(&w),
@@ -774,6 +960,11 @@ impl Trainer {
         // stochastic steady state allocates nothing here either.
         if algo.is_stochastic() {
             for (m, b) in self.batchers.iter_mut().enumerate() {
+                if self.scenario.on && self.scenario.dropped(m) {
+                    // a dropped worker does no local work; its retained
+                    // rows go stale but nothing reads them
+                    continue;
+                }
                 b.next_batch_into(self.rows[m].get_or_insert_with(Vec::new));
             }
         }
@@ -809,6 +1000,7 @@ impl Trainer {
             sparsifier: self.sparsifier,
             seed: self.cfg.seed,
             iter: k,
+            faults: &self.scenario.faults,
         };
 
         // 2+3. local + wire phases, scheduled per `cfg.wire_mode` (the
@@ -869,27 +1061,73 @@ impl Trainer {
                 // ride along post-wire.  (Each absorb/apply fans out over
                 // θ-shards inside the server.)
                 for m in 0..m_all {
+                    if self.scenario.dropped(m) {
+                        // out of the fleet: no loss/gradient/wire seat
+                        // this round; its stale mirror was retired at the
+                        // leave edge, so the lazy aggregate never wedges
+                        continue;
+                    }
                     if let Some(e) = self.locals[m].err.take() {
                         return Err(e);
                     }
                     loss_total += self.locals[m].loss;
                     tensor::axpy(1.0, &self.nodes[m].grad, &mut self.gsum);
                     if lazy {
-                        let decision = self.locals[m]
+                        let mut decision = self.locals[m]
                             .decision
                             .expect("lazy algorithms always produce a decision");
+                        if decision.upload && self.scenario.missed(m) {
+                            // deadline passed: the round proceeds without
+                            // this worker — a forced skip, nothing billed,
+                            // its mirror contribution reused as-is under
+                            // the lazy-criterion semantics
+                            decision.upload = false;
+                        }
                         if decision.upload {
-                            // staged payload borrowed from the node; the
-                            // wire round trip reuses the worker's
-                            // retained slot buffers
-                            let received = self.net.upload(m, &self.nodes[m].staged)?;
-                            self.server.absorb_lazy(m, received)?;
+                            if let Some(kind) = self.scenario.corrupt(m) {
+                                // fault injector: the frame is damaged in
+                                // flight and decode rejects it — billed
+                                // (it crossed the wire), logged, never
+                                // absorbed; the worker commits a skip so
+                                // both mirror sides stay in lock-step
+                                let bits =
+                                    self.net.payload_wire_bits(&self.nodes[m].staged);
+                                let e = self
+                                    .net
+                                    .slot_mut(m)
+                                    .round_trip_corrupt(&self.nodes[m].staged, kind)
+                                    .expect_err("the fault injector always damages the frame");
+                                self.net.account_upload(m, bits);
+                                self.scenario_delay(m, bits);
+                                self.scenario.rejected_total += 1;
+                                crate::log_warn!(
+                                    "scenario: rejected corrupt upload from worker {m} at round {k}: {e}"
+                                );
+                                decision.upload = false;
+                            } else {
+                                // staged payload borrowed from the node;
+                                // the wire round trip reuses the worker's
+                                // retained slot buffers
+                                let bits =
+                                    self.net.payload_wire_bits(&self.nodes[m].staged);
+                                let received =
+                                    self.net.upload(m, &self.nodes[m].staged)?;
+                                self.server.absorb_lazy(m, received)?;
+                                self.scenario_delay(m, bits);
+                            }
                         }
                         max_eps_sq = max_eps_sq.max(decision.eps_sq);
                         self.nodes[m].commit(&decision);
+                        self.locals[m].decision = Some(decision);
+                    } else if self.scenario.missed(m) {
+                        // deadline passed: the fresh-sum message is
+                        // discarded unsent
+                        self.locals[m].payload = None;
                     } else if let Some(payload) = self.locals[m].payload.take() {
+                        let bits = self.net.payload_wire_bits(&payload);
                         let received = self.net.upload(m, &payload)?;
                         self.server.absorb_fresh(received)?;
+                        self.scenario_delay(m, bits);
                     }
                 }
             }
@@ -1132,6 +1370,10 @@ impl Trainer {
                 // *origin* round: the message enters the (sequential,
                 // simulated) uplink now even if it lands rounds later.
                 for m in 0..m_all {
+                    if self.scenario.dropped(m) {
+                        // out of the fleet: no loss/gradient/wire seat
+                        continue;
+                    }
                     if let Some(e) = self.locals[m].err.take() {
                         return Err(e);
                     }
@@ -1142,18 +1384,28 @@ impl Trainer {
                         let decision = self.locals[m]
                             .decision
                             .expect("lazy algorithms always produce a decision");
-                        if decision.upload {
+                        if decision.upload || self.locals[m].rejected {
                             // billed under the session's actual framing —
                             // adaptive sessions pay the per-message width
-                            // field the framed layout transmits
+                            // field the framed layout transmits.  A
+                            // corrupt-rejected frame is billed too: it
+                            // crossed the wire before decode refused it.
                             let bits = self.net.payload_wire_bits(&self.nodes[m].staged);
                             self.net.account_upload(m, bits);
-                            uploaded = true;
+                            self.scenario_delay(m, bits);
+                            uploaded = decision.upload;
+                            if self.locals[m].rejected {
+                                self.scenario.rejected_total += 1;
+                                crate::log_warn!(
+                                    "scenario: rejected corrupt upload from worker {m} at round {k}"
+                                );
+                            }
                         }
                         max_eps_sq = max_eps_sq.max(decision.eps_sq);
                     } else if let Some(payload) = self.locals[m].payload.take() {
                         let bits = self.net.payload_wire_bits(&payload);
                         self.net.account_upload(m, bits);
+                        self.scenario_delay(m, bits);
                         uploaded = true;
                     }
                     if uploaded && cross && self.cross.lags[m] > 0 {
@@ -1517,6 +1769,20 @@ impl Trainer {
                 self.cross.pending.push(PendingUpload { m, origin, deadline });
             }
         }
+        // scenario engine: no checkpoint section — the dropout schedule
+        // (and with it the whole membership state machine) is a pure
+        // function of (config, round), so the active mask is recomputed
+        // for the resumed round instead of persisted.  The rejection
+        // counter restarts at zero, like the network counters
+        // (checkpoints capture algorithm state, not accounting).
+        self.scenario = ScenarioRt::new(&self.cfg, self.nodes.len());
+        if self.scenario.on && self.k > 0 {
+            for m in 0..self.nodes.len() {
+                if let Some(spec) = &self.scenario.specs[m] {
+                    self.scenario.active[m] = !spec.dropped(self.k - 1);
+                }
+            }
+        }
         Ok(())
     }
 
@@ -1607,6 +1873,24 @@ struct LocalCtx<'a> {
     sparsifier: Sparsifier,
     seed: u64,
     iter: usize,
+    /// scenario engine: this round's per-worker fault verdicts
+    /// (all-default — every check takes its false branch — when no
+    /// scenario is configured)
+    faults: &'a [RoundFault],
+}
+
+impl LocalCtx<'_> {
+    fn dropped(&self, m: usize) -> bool {
+        self.faults[m].dropped
+    }
+
+    fn missed(&self, m: usize) -> bool {
+        self.faults[m].missed
+    }
+
+    fn corrupt(&self, m: usize) -> Option<Corruption> {
+        self.faults[m].corrupt
+    }
 }
 
 /// What one worker's local phase hands the sequential wire phase —
@@ -1623,6 +1907,10 @@ struct LocalSlot {
     /// a failed local phase parks its error here; the wire phase
     /// propagates the first one in worker order
     err: Option<Error>,
+    /// scenario engine, async wire paths only: this worker's upload was
+    /// corrupt-rejected at decode this round — the coordinator's
+    /// accounting phase bills the frame and logs the rejection
+    rejected: bool,
 }
 
 /// The embarrassingly parallel half of one iteration for worker `m`:
@@ -1643,6 +1931,13 @@ fn local_phase(
     slot.decision = None;
     slot.payload = None;
     slot.err = None;
+    slot.rejected = false;
+    if ctx.dropped(m) {
+        // scenario engine: the worker is out of the fleet this round —
+        // no gradient, no decision, no payload; the coordinator skips
+        // its seat in every fold
+        return;
+    }
     // evaluate into the node-retained gradient buffer (taken out for the
     // call so the oracle and the buffer don't fight the borrow checker;
     // mem::take swaps in an empty vec — no allocation)
@@ -1735,6 +2030,27 @@ fn local_and_wire_phase(
     let mut publish = WIRE_SKIP;
     if slot.err.is_none() {
         if let Some(d) = slot.decision {
+            let mut d = d;
+            if d.upload && ctx.missed(m) {
+                // scenario: the straggler's message missed its deadline —
+                // a forced skip; nothing lands, nothing is billed
+                d.upload = false;
+            }
+            if d.upload {
+                if let Some(kind) = ctx.corrupt(m) {
+                    // scenario: the frame is damaged in flight and decode
+                    // rejects it right here on the wire path — nothing is
+                    // parked (even a deferred upload dies at its origin),
+                    // nothing published for the absorber; the coordinator
+                    // bills + logs off `slot.rejected` in index order,
+                    // and the worker commits a skip below so both mirror
+                    // sides stay in lock-step
+                    if wire.round_trip_corrupt(&node.staged, kind).is_err() {
+                        slot.rejected = true;
+                    }
+                    d.upload = false;
+                }
+            }
             if d.upload {
                 match wire.round_trip_store(&node.staged) {
                     Ok(()) if !defer => publish = WIRE_UPLOAD,
@@ -1743,6 +2059,12 @@ fn local_and_wire_phase(
                 }
             }
             node.commit(&d);
+            // the coordinator's accounting + observe folds must see the
+            // decision that actually happened, not the pre-fault one
+            slot.decision = Some(d);
+        } else if slot.payload.is_some() && ctx.missed(m) {
+            // scenario: the fresh-sum message is discarded unsent
+            slot.payload = None;
         } else if let Some(p) = &slot.payload {
             // fresh-sum kinds densify once here, on the worker's thread,
             // so the absorber's shard jobs are plain disjoint-range adds

@@ -255,8 +255,46 @@ impl Default for LatencyModel {
 }
 
 impl LatencyModel {
+    /// Build a validated model.  `t_fixed`/`t_per_bit` feed straight into
+    /// sim-time sums; a NaN or negative would silently poison every clock
+    /// reading downstream, so both are rejected here as
+    /// [`crate::Error::Config`] — the same check [`crate::config::RunCfg::validate`]
+    /// runs, guarding direct constructions that bypass the config layer.
+    ///
+    /// # Errors
+    ///
+    /// [`crate::Error::Config`] if either knob is NaN, infinite or negative.
+    pub fn new(t_fixed: f64, t_per_bit: f64) -> Result<Self> {
+        if !t_fixed.is_finite() || t_fixed < 0.0 {
+            return Err(crate::Error::Config(format!(
+                "t_fixed = {t_fixed} must be finite and non-negative seconds"
+            )));
+        }
+        if !t_per_bit.is_finite() || t_per_bit < 0.0 {
+            return Err(crate::Error::Config(format!(
+                "t_per_bit = {t_per_bit} must be finite and non-negative seconds/bit"
+            )));
+        }
+        Ok(Self { t_fixed, t_per_bit })
+    }
+
     pub fn message_time(&self, bits: usize) -> f64 {
         self.t_fixed + bits as f64 * self.t_per_bit
+    }
+
+    /// Heavy-tailed straggle multiplier for scenario-injected slow
+    /// workers: a Pareto(α) draw ≥ 1 scaling worker `worker`'s message
+    /// time in round `iter`, from its own counter-based stream — a pure
+    /// function of `(seed, worker, iter)`, so a straggler scenario
+    /// reproduces across runs, threads and shards, and skipping one
+    /// worker's draw never shifts another's.  Smaller `alpha` = heavier
+    /// tail (`alpha <= 1` has infinite mean — the adversarial regime the
+    /// scenario engine exists to exercise).
+    pub fn straggle_mult(&self, seed: u64, worker: u64, iter: u64, alpha: f64) -> f64 {
+        // inverse-CDF Pareto with x_min = 1: u in [0,1) keeps the base
+        // finite and >= 1
+        let u = Rng::stream(seed ^ 0x73_7472_6167, worker, iter).uniform();
+        (1.0 - u).powf(-1.0 / alpha)
     }
 
     /// Deterministic landing jitter for the async wire phase: a pure
@@ -283,6 +321,46 @@ impl LatencyModel {
         }
         (Rng::stream(seed ^ 0xC055_1A65_0DD5, worker, iter).next_u64()
             % (bound as u64 + 1)) as usize
+    }
+}
+
+/// Which way a scenario-injected corrupt upload damages its wire frame.
+/// Every kind is *detectable at decode* — the point of the fault model is
+/// that the server bills, rejects and logs the message instead of letting
+/// it poison θ ([`WireSlot::round_trip_corrupt`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Corruption {
+    /// the 32-bit radius field is forced to all-ones (an IEEE754 NaN);
+    /// the decoder's finiteness check rejects it
+    NanRadius,
+    /// the framed layout's 8-bit width field is forced to 255 (legal
+    /// widths are 1..=16); under the fixed layout — which carries no
+    /// width on the wire — this degrades to radius damage
+    BadWidth,
+    /// the frame is cut to half its bytes; the decoder's length check
+    /// rejects the short `codes` section
+    Truncated,
+}
+
+impl Corruption {
+    /// Scenario draw: does worker `worker`'s would-be upload in round
+    /// `iter` get corrupted, and how?  A pure function of
+    /// `(seed, worker, iter, rate)` on a dedicated counter-based stream,
+    /// so corrupt rounds reproduce across runs, threads and shards and
+    /// never perturb any other RNG consumer.
+    pub fn draw(seed: u64, worker: u64, iter: u64, rate: f64) -> Option<Corruption> {
+        if rate <= 0.0 {
+            return None;
+        }
+        let mut s = Rng::stream(seed ^ 0x63_6F72_7275, worker, iter);
+        if s.uniform() >= rate {
+            return None;
+        }
+        Some(match s.next_u64() % 3 {
+            0 => Corruption::NanRadius,
+            1 => Corruption::BadWidth,
+            _ => Corruption::Truncated,
+        })
     }
 }
 
@@ -458,6 +536,68 @@ impl WireSlot {
     /// `false` = the paper's fixed layout (default).
     pub fn set_framed(&mut self, on: bool) {
         self.framed = on;
+    }
+
+    /// Fault-injected round trip: encode `payload`, damage the frame per
+    /// `kind`, and decode — the decode is expected to *fail*, which is
+    /// the scenario engine's detection event (the caller bills, rejects
+    /// and logs).  The damaged bytes decode into scratch, never the
+    /// retained receive payload, so a rejected upload leaves the slot's
+    /// last good message intact.  Cold path (allocates): corrupt rounds
+    /// are off the steady-state allocation contract.
+    ///
+    /// # Errors
+    ///
+    /// Always — the decode error from the damaged frame, or
+    /// [`crate::Error::Codec`] if damage somehow survived decode (a
+    /// Dense payload, whose raw IEEE frame carries no decodable
+    /// structure, is rejected via its length check unconditionally).
+    pub fn round_trip_corrupt(&mut self, payload: &Payload, kind: Corruption) -> Result<()> {
+        let Payload::Innovation(qi) = payload else {
+            // full-precision uploads (GD/LAG): any of the damage kinds is
+            // a length/structure mismatch on a raw IEEE frame — caught by
+            // the transport's size check, modelled here directly
+            return Err(crate::Error::Codec(format!(
+                "corrupt dense upload rejected ({kind:?}: frame size mismatch)"
+            )));
+        };
+        if self.framed {
+            qi.encode_framed_into(&mut self.enc);
+        } else {
+            qi.encode_into(&mut self.enc);
+        }
+        let mut bytes = self.enc.as_bytes().to_vec();
+        match kind {
+            // all-ones damage is bit-order independent: the first 32 bits
+            // are the radius whatever the packing direction, and an
+            // all-ones f32 is a NaN
+            Corruption::NanRadius => bytes[..4.min(bytes.len())].fill(0xFF),
+            Corruption::BadWidth => {
+                if self.framed && bytes.len() > 4 {
+                    // byte 4 is exactly the 8-bit width field
+                    bytes[4] = 0xFF;
+                } else {
+                    // fixed layout carries no width — degrade to radius
+                    // damage so the fault is still detectable
+                    bytes[..4.min(bytes.len())].fill(0xFF);
+                }
+            }
+            Corruption::Truncated => bytes.truncate(bytes.len() / 2),
+        }
+        let mut scratch = QuantizedInnovation { radius: 0.0, codes: Vec::new(), bits: qi.bits };
+        let res = if self.framed {
+            QuantizedInnovation::decode_framed_into(&bytes, qi.codes.len(), &mut scratch)
+        } else {
+            QuantizedInnovation::decode_into(&bytes, qi.bits, qi.codes.len(), &mut scratch)
+        };
+        match res {
+            Err(e) => Err(e),
+            // belt and braces: even if a damaged frame decoded cleanly it
+            // must never be absorbed
+            Ok(()) => Err(crate::Error::Codec(
+                "corrupt upload decoded cleanly; rejected by fault injector".into(),
+            )),
+        }
     }
 }
 
@@ -637,6 +777,15 @@ impl Network {
         self.downlink_msgs += 1;
         self.downlink_bits += bits as u64;
         self.sim_time += self.latency.message_time(bits);
+    }
+
+    /// Advance the simulated clock by `dt` seconds without touching any
+    /// bit/round counter — the scenario engine's straggler hook: a
+    /// Pareto-multiplied message pays `(mult − 1) × message_time` *extra*
+    /// on top of the nominal time that [`Self::account_upload`] already
+    /// folded, keeping the empty scenario's clock bit-identical.
+    pub fn delay(&mut self, dt: f64) {
+        self.sim_time += dt;
     }
 
     pub fn uplink_rounds(&self) -> u64 {
@@ -932,6 +1081,127 @@ mod tests {
         // uplink counters are untouched by downlink traffic
         assert_eq!(net.uplink_rounds(), 0);
         assert_eq!(net.uplink_bits(), 0);
+    }
+
+    #[test]
+    fn latency_model_new_rejects_nonfinite_and_negative() {
+        LatencyModel::new(0.0, 0.0).unwrap();
+        LatencyModel::new(1e-3, 1e-9).unwrap();
+        for (tf, tb) in [
+            (f64::NAN, 1e-9),
+            (1e-3, f64::NAN),
+            (f64::INFINITY, 1e-9),
+            (1e-3, f64::NEG_INFINITY),
+            (-1e-3, 1e-9),
+            (1e-3, -1e-9),
+        ] {
+            let e = LatencyModel::new(tf, tb).unwrap_err();
+            assert!(
+                matches!(e, crate::Error::Config(_)),
+                "t_fixed={tf} t_per_bit={tb}: {e:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn straggle_mult_is_pure_bounded_below_and_heavy_tailed() {
+        let lat = LatencyModel::default();
+        for seed in [1u64, 7] {
+            for m in 0..4u64 {
+                for k in 0..50u64 {
+                    let x = lat.straggle_mult(seed, m, k, 1.1);
+                    assert!(x >= 1.0 && x.is_finite(), "mult {x}");
+                    assert_eq!(
+                        x.to_bits(),
+                        lat.straggle_mult(seed, m, k, 1.1).to_bits(),
+                        "not pure"
+                    );
+                }
+            }
+        }
+        // distinct workers/rounds draw from distinct streams
+        assert_ne!(lat.straggle_mult(1, 0, 0, 1.1), lat.straggle_mult(1, 1, 0, 1.1));
+        assert_ne!(lat.straggle_mult(1, 0, 0, 1.1), lat.straggle_mult(1, 0, 1, 1.1));
+        // α = 1.1 is genuinely heavy-tailed: big multipliers do occur
+        let big = (0..2000u64)
+            .filter(|&k| lat.straggle_mult(3, 0, k, 1.1) > 5.0)
+            .count();
+        assert!(big > 20, "only {big}/2000 draws exceeded 5x");
+        // a large α concentrates near 1 (sanity on the direction)
+        let tame = (0..2000u64)
+            .filter(|&k| lat.straggle_mult(3, 0, k, 50.0) < 1.2)
+            .count();
+        assert!(tame > 1900, "only {tame}/2000 draws near 1 at alpha=50");
+    }
+
+    #[test]
+    fn corruption_draw_is_pure_and_rate_gated() {
+        for m in 0..4u64 {
+            for k in 0..100u64 {
+                assert_eq!(Corruption::draw(5, m, k, 0.0), None);
+                assert!(Corruption::draw(5, m, k, 1.0).is_some());
+                assert_eq!(
+                    Corruption::draw(5, m, k, 0.3),
+                    Corruption::draw(5, m, k, 0.3),
+                    "not pure"
+                );
+            }
+        }
+        // a middling rate corrupts roughly its share of rounds
+        let hits = (0..1000u64)
+            .filter(|&k| Corruption::draw(9, 2, k, 0.3).is_some())
+            .count();
+        assert!((200..400).contains(&hits), "{hits}/1000 at rate 0.3");
+        // all three kinds occur
+        for kind in [Corruption::NanRadius, Corruption::BadWidth, Corruption::Truncated] {
+            assert!(
+                (0..200u64).any(|k| Corruption::draw(9, 2, k, 1.0) == Some(kind)),
+                "{kind:?} never drawn"
+            );
+        }
+    }
+
+    #[test]
+    fn corrupt_round_trip_is_detected_never_absorbed() {
+        let q = InnovationQuantizer::new(3);
+        let mut rng = Rng::new(21);
+        let g: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+        let (qi, _) = q.quantize(&g, &vec![0.0; 64]);
+        let sent = Payload::Innovation(qi.clone());
+        for framed in [false, true] {
+            let mut slot = WireSlot::default();
+            slot.set_framed(framed);
+            // park a good message first: a rejected upload must not
+            // clobber the retained receive payload
+            slot.round_trip_store(&sent).unwrap();
+            for kind in [Corruption::NanRadius, Corruption::BadWidth, Corruption::Truncated] {
+                let err = slot.round_trip_corrupt(&sent, kind).unwrap_err();
+                assert!(
+                    matches!(err, crate::Error::Codec(_)),
+                    "framed={framed} {kind:?}: {err:?}"
+                );
+            }
+            match slot.received() {
+                Payload::Innovation(got) => assert_eq!(got, &qi, "framed={framed}"),
+                other => panic!("{other:?}"),
+            }
+            // dense (full-precision lazy) uploads are rejected too
+            let dense = Payload::Dense(g.clone());
+            assert!(slot.round_trip_corrupt(&dense, Corruption::Truncated).is_err());
+        }
+    }
+
+    #[test]
+    fn delay_advances_the_clock_without_touching_counters() {
+        let lat = LatencyModel { t_fixed: 1.0, t_per_bit: 0.001 };
+        let mut net = Network::new(1, lat);
+        net.upload(0, &Payload::Dense(vec![0.0; 10])).unwrap(); // 320 bits
+        let base = net.sim_time();
+        net.delay(2.5);
+        assert!((net.sim_time() - (base + 2.5)).abs() < 1e-12);
+        assert_eq!(net.uplink_rounds(), 1);
+        assert_eq!(net.uplink_bits(), 320);
+        assert_eq!(net.downlink_msgs(), 0);
     }
 
     #[test]

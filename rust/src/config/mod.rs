@@ -356,6 +356,196 @@ impl DataCfg {
     }
 }
 
+/// Declarative fault/heterogeneity scenario driving the trainer: a
+/// `[scenario]` TOML table plus per-worker `[[scenario.worker]]`
+/// override tables.  The **empty** scenario (no table, or a table with
+/// no effective overrides) is the contract baseline: the trainer runs
+/// bit-identically to a scenario-less build.  Every non-empty scenario
+/// is still a pure function of (seed, config) — all fault draws come
+/// from counter-based RNG streams keyed by (worker, round), so traces
+/// reproduce across reruns, thread counts and shard counts
+/// (`rust/tests/scenario.rs`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ScenarioCfg {
+    /// override the data layer's Dirichlet concentration (non-IID skew)
+    /// without touching `[data]` — scenario files stay self-contained
+    pub hetero_alpha: Option<f64>,
+    /// per-worker fault overrides; workers not listed behave normally
+    pub workers: Vec<WorkerFaults>,
+}
+
+impl ScenarioCfg {
+    /// No overrides at all — the trainer must not even branch on
+    /// scenario state (bit-identity to the scenario-less build).
+    pub fn is_empty(&self) -> bool {
+        self.hetero_alpha.is_none() && self.workers.is_empty()
+    }
+
+    pub fn validate(&self, n_workers: usize, algo: Algo) -> Result<()> {
+        if let Some(a) = self.hetero_alpha {
+            if !a.is_finite() || a <= 0.0 {
+                return Err(Error::Config(format!(
+                    "scenario.hetero_alpha = {a} must be a positive finite number"
+                )));
+            }
+        }
+        let mut seen = vec![false; n_workers];
+        for w in &self.workers {
+            if w.worker >= n_workers {
+                return Err(Error::Config(format!(
+                    "scenario.worker index {} out of range (workers = {n_workers})",
+                    w.worker
+                )));
+            }
+            if seen[w.worker] {
+                return Err(Error::Config(format!(
+                    "scenario.worker {} listed twice",
+                    w.worker
+                )));
+            }
+            seen[w.worker] = true;
+            if let Some(a) = w.straggle_alpha {
+                // Pareto tail index: must be positive; <= 1 means infinite
+                // mean (legal — that's what "heavy-tailed" is for)
+                if !a.is_finite() || a <= 0.0 {
+                    return Err(Error::Config(format!(
+                        "scenario.worker {}: straggle_alpha = {a} must be positive finite",
+                        w.worker
+                    )));
+                }
+            }
+            if w.deadline.is_nan() || w.deadline <= 0.0 {
+                return Err(Error::Config(format!(
+                    "scenario.worker {}: deadline = {} must be a positive multiple of the \
+                     nominal message time (+inf = never miss)",
+                    w.worker, w.deadline
+                )));
+            }
+            if !w.corrupt_rate.is_finite() || !(0.0..=1.0).contains(&w.corrupt_rate) {
+                return Err(Error::Config(format!(
+                    "scenario.worker {}: corrupt_rate = {} must lie in [0, 1]",
+                    w.worker, w.corrupt_rate
+                )));
+            }
+            if w.corrupt_rate > 0.0 && !algo.is_lazy() {
+                return Err(Error::Config(format!(
+                    "scenario.worker {}: corrupt-upload injection targets the lazy \
+                     uplink codecs ({} is a fresh-sum algorithm)",
+                    w.worker,
+                    algo.name()
+                )));
+            }
+            match (w.drop_from, w.drop_until) {
+                (Some(f), Some(u)) if f >= u => {
+                    return Err(Error::Config(format!(
+                        "scenario.worker {}: drop_from = {f} must be < drop_until = {u}",
+                        w.worker
+                    )));
+                }
+                (None, Some(_)) => {
+                    return Err(Error::Config(format!(
+                        "scenario.worker {}: drop_until without drop_from",
+                        w.worker
+                    )));
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialized form (recorded beside run outputs); only non-default
+    /// fields are written, so re-applying it reproduces the scenario.
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = Vec::new();
+        if let Some(a) = self.hetero_alpha {
+            fields.push(("hetero_alpha", Json::Num(a)));
+        }
+        if !self.workers.is_empty() {
+            let arr = self
+                .workers
+                .iter()
+                .map(|w| {
+                    let mut f: Vec<(&str, Json)> =
+                        vec![("worker", Json::Num(w.worker as f64))];
+                    if let Some(a) = w.straggle_alpha {
+                        f.push(("straggle_alpha", Json::Num(a)));
+                    }
+                    if w.deadline.is_finite() {
+                        f.push(("deadline", Json::Num(w.deadline)));
+                    }
+                    if let Some(d) = w.drop_from {
+                        f.push(("drop_from", Json::Num(d as f64)));
+                    }
+                    if let Some(d) = w.drop_until {
+                        f.push(("drop_until", Json::Num(d as f64)));
+                    }
+                    if w.corrupt_rate > 0.0 {
+                        f.push(("corrupt_rate", Json::Num(w.corrupt_rate)));
+                    }
+                    Json::obj(f)
+                })
+                .collect();
+            fields.push(("worker", Json::Arr(arr)));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// One worker's fault model — one `[[scenario.worker]]` table.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkerFaults {
+    /// which worker this table overrides (0-based)
+    pub worker: usize,
+    /// heavy-tailed straggling: each round the worker's message time is
+    /// multiplied by a Pareto(α) draw ≥ 1 from its own counter-based
+    /// stream.  Smaller α = heavier tail (α ≤ 1 has infinite mean).
+    /// `None` = never straggles.
+    pub straggle_alpha: Option<f64>,
+    /// round deadline as a multiple of the nominal message time: the
+    /// round's straggle multiplier exceeding this skips the worker for
+    /// the round (its upload is withheld; the stale mirror carries it
+    /// under the lazy-criterion semantics).  Default +inf = never miss.
+    pub deadline: f64,
+    /// dropout schedule: the worker leaves the fleet at round
+    /// `drop_from` (mirror retired) ...
+    pub drop_from: Option<usize>,
+    /// ... and rejoins at round `drop_until` (mirror re-primed from the
+    /// current θ via one exact broadcast).  `None` with `drop_from` set
+    /// = never rejoins.
+    pub drop_until: Option<usize>,
+    /// probability (per would-be upload) that the upload is corrupted on
+    /// the wire — NaN radius, out-of-range width or truncated frame,
+    /// drawn deterministically per (worker, round).  The decode detects
+    /// it; the server bills, rejects and logs it.  Lazy algorithms only.
+    pub corrupt_rate: f64,
+}
+
+impl Default for WorkerFaults {
+    fn default() -> Self {
+        Self {
+            worker: 0,
+            straggle_alpha: None,
+            deadline: f64::INFINITY,
+            drop_from: None,
+            drop_until: None,
+            corrupt_rate: 0.0,
+        }
+    }
+}
+
+impl WorkerFaults {
+    /// Is this worker out of the fleet at `round`?  Pure function of
+    /// (config, round) — membership needs no runtime state, so resume
+    /// from any checkpoint derives it.
+    pub fn dropped(&self, round: usize) -> bool {
+        match self.drop_from {
+            Some(f) => round >= f && round < self.drop_until.unwrap_or(usize::MAX),
+            None => false,
+        }
+    }
+}
+
 /// Default worker fan-out: the `LAQ_THREADS` environment variable when
 /// set (this is how `rust/ci.sh` runs the whole suite over both the
 /// sequential and the parallel code path), else 1 (sequential).
@@ -489,6 +679,17 @@ pub struct RunCfg {
     /// quantized downlink only: largest per-shard width (1..=16); the
     /// downlink wire slot is pre-sized for it
     pub down_bits_max: u32,
+    /// simulated link latency: fixed per-message cost in seconds
+    /// (handshake + propagation), fed to [`crate::comm::LatencyModel`].
+    /// Must be finite and non-negative.
+    pub t_fixed: f64,
+    /// simulated link latency: per-bit serialization cost in seconds.
+    /// Must be finite and non-negative.
+    pub t_per_bit: f64,
+    /// fault/heterogeneity scenario ([`ScenarioCfg`]); empty by default,
+    /// in which case the trainer is bit-identical to a scenario-less
+    /// build
+    pub scenario: ScenarioCfg,
 }
 
 impl RunCfg {
@@ -520,6 +721,9 @@ impl RunCfg {
             downlink: default_downlink(),
             down_bits_min: 2,
             down_bits_max: 8,
+            t_fixed: 1e-3,
+            t_per_bit: 1e-9,
+            scenario: ScenarioCfg::default(),
         }
     }
 
@@ -587,6 +791,21 @@ impl RunCfg {
                 self.staleness_bound
             )));
         }
+        // the latency knobs feed straight into sim-time arithmetic: a NaN
+        // or negative here would silently poison every recorded sim_time
+        if !self.t_fixed.is_finite() || self.t_fixed < 0.0 {
+            return Err(Error::Config(format!(
+                "t_fixed = {} must be finite and non-negative seconds",
+                self.t_fixed
+            )));
+        }
+        if !self.t_per_bit.is_finite() || self.t_per_bit < 0.0 {
+            return Err(Error::Config(format!(
+                "t_per_bit = {} must be finite and non-negative seconds/bit",
+                self.t_per_bit
+            )));
+        }
+        self.scenario.validate(self.workers, self.algo)?;
         self.criterion.validate()
     }
 
@@ -704,6 +923,21 @@ impl RunCfg {
         if let Some(v) = width_key(run, "down_bits_max")? {
             self.down_bits_max = v;
         }
+        // latency knobs are strict like wire_mode: a present-but-wrong
+        // -typed value (quoted number, table, ...) must error, not fall
+        // through and silently keep the default link model
+        let tf = run.get("t_fixed");
+        if !tf.is_null() {
+            self.t_fixed = tf.as_f64().ok_or_else(|| {
+                Error::Config("t_fixed must be a number (seconds per message)".into())
+            })?;
+        }
+        let tb = run.get("t_per_bit");
+        if !tb.is_null() {
+            self.t_per_bit = tb.as_f64().ok_or_else(|| {
+                Error::Config("t_per_bit must be a number (seconds per bit)".into())
+            })?;
+        }
         let crit = j.get("criterion");
         if !crit.is_null() {
             if let Some(d) = crit.get("d").as_usize() {
@@ -750,6 +984,68 @@ impl RunCfg {
                 self.data.seed = v as u64;
             }
         }
+        let sc = j.get("scenario");
+        if !sc.is_null() {
+            let ha = sc.get("hetero_alpha");
+            if !ha.is_null() {
+                let v = ha.as_f64().ok_or_else(|| {
+                    Error::Config("scenario.hetero_alpha must be a number".into())
+                })?;
+                self.scenario.hetero_alpha = Some(v);
+            }
+            let ws = sc.get("worker");
+            if !ws.is_null() {
+                // `[[scenario.worker]]` tables; a scalar/table here means
+                // the user wrote `[scenario.worker]` — reject loudly
+                let arr = ws.as_arr().ok_or_else(|| {
+                    Error::Config(
+                        "scenario.worker must be an array of tables ([[scenario.worker]])"
+                            .into(),
+                    )
+                })?;
+                let mut workers = Vec::with_capacity(arr.len());
+                for (i, e) in arr.iter().enumerate() {
+                    let at = |key: &str, what: &str| {
+                        Error::Config(format!("scenario.worker[{i}].{key} must be {what}"))
+                    };
+                    let mut wf = WorkerFaults::default();
+                    wf.worker = e
+                        .get("worker")
+                        .as_usize()
+                        .ok_or_else(|| at("worker", "a worker index (required)"))?;
+                    let sa = e.get("straggle_alpha");
+                    if !sa.is_null() {
+                        wf.straggle_alpha =
+                            Some(sa.as_f64().ok_or_else(|| at("straggle_alpha", "a number"))?);
+                    }
+                    let dl = e.get("deadline");
+                    if !dl.is_null() {
+                        wf.deadline = dl.as_f64().ok_or_else(|| at("deadline", "a number"))?;
+                    }
+                    let df = e.get("drop_from");
+                    if !df.is_null() {
+                        wf.drop_from = Some(
+                            df.as_usize()
+                                .ok_or_else(|| at("drop_from", "a round index"))?,
+                        );
+                    }
+                    let du = e.get("drop_until");
+                    if !du.is_null() {
+                        wf.drop_until = Some(
+                            du.as_usize()
+                                .ok_or_else(|| at("drop_until", "a round index"))?,
+                        );
+                    }
+                    let cr = e.get("corrupt_rate");
+                    if !cr.is_null() {
+                        wf.corrupt_rate =
+                            cr.as_f64().ok_or_else(|| at("corrupt_rate", "a number"))?;
+                    }
+                    workers.push(wf);
+                }
+                self.scenario.workers = workers;
+            }
+        }
         self.validate()
     }
 
@@ -766,7 +1062,7 @@ impl RunCfg {
 
     /// Serialize the resolved config (recorded beside run outputs).
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut doc = vec![
             ("run", Json::obj(vec![
                 ("algo", Json::Str(self.algo.name().into())),
                 ("model", Json::Str(self.model.name().into())),
@@ -791,6 +1087,8 @@ impl RunCfg {
                 ("downlink", Json::Str(self.downlink.name().into())),
                 ("down_bits_min", Json::Num(self.down_bits_min as f64)),
                 ("down_bits_max", Json::Num(self.down_bits_max as f64)),
+                ("t_fixed", Json::Num(self.t_fixed)),
+                ("t_per_bit", Json::Num(self.t_per_bit)),
             ])),
             ("criterion", Json::obj(vec![
                 ("d", Json::Num(self.criterion.d as f64)),
@@ -803,7 +1101,11 @@ impl RunCfg {
                 ("n_test", Json::Num(self.data.n_test as f64)),
                 ("seed", Json::Num(self.data.seed as f64)),
             ])),
-        ])
+        ];
+        if !self.scenario.is_empty() {
+            doc.push(("scenario", self.scenario.to_json()));
+        }
+        Json::obj(doc)
     }
 }
 
@@ -1041,5 +1343,132 @@ mod tests {
         // 0 = auto is a valid setting
         c2.server_shards = 0;
         c2.validate().unwrap();
+    }
+
+    #[test]
+    fn latency_knobs_parse_validate_and_roundtrip() {
+        let doc = "\n[run]\nt_fixed = 0.002\nt_per_bit = 2e-9\n";
+        let mut c = RunCfg::paper_logreg(Algo::Laq);
+        c.apply_json(&toml::parse(doc).unwrap()).unwrap();
+        assert_eq!(c.t_fixed, 0.002);
+        assert_eq!(c.t_per_bit, 2e-9);
+        let j = c.to_json();
+        let mut c2 = RunCfg::paper_logreg(Algo::Gd);
+        c2.apply_json(&j).unwrap();
+        assert_eq!(c2.t_fixed, 0.002);
+        assert_eq!(c2.t_per_bit, 2e-9);
+        // 0 is legal (a free wire); NaN, inf and negatives are not — the
+        // satellite bug was exactly these sliding into sim-time arithmetic
+        let mut c3 = RunCfg::paper_logreg(Algo::Laq);
+        c3.t_fixed = 0.0;
+        c3.t_per_bit = 0.0;
+        c3.validate().unwrap();
+        for (tf, tb) in [
+            (f64::NAN, 1e-9),
+            (1e-3, f64::NAN),
+            (f64::INFINITY, 1e-9),
+            (1e-3, f64::NEG_INFINITY),
+            (-1e-3, 1e-9),
+            (1e-3, -1e-9),
+        ] {
+            let mut bad = RunCfg::paper_logreg(Algo::Laq);
+            bad.t_fixed = tf;
+            bad.t_per_bit = tb;
+            assert!(bad.validate().is_err(), "t_fixed={tf} t_per_bit={tb}");
+        }
+        // the TOML path funnels through the same validate(): `nan` parses
+        // as an f64 number but must still be rejected as Error::Config
+        for doc in [
+            "\n[run]\nt_fixed = nan\n",
+            "\n[run]\nt_per_bit = nan\n",
+            "\n[run]\nt_fixed = -0.001\n",
+            "\n[run]\nt_per_bit = -1e-9\n",
+        ] {
+            let mut c4 = RunCfg::paper_logreg(Algo::Laq);
+            assert!(c4.apply_json(&toml::parse(doc).unwrap()).is_err(), "{doc}");
+        }
+        // wrong-typed values error like the CLI, not fall through
+        let wrong = "\n[run]\nt_fixed = \"fast\"\n";
+        let mut c5 = RunCfg::paper_logreg(Algo::Laq);
+        assert!(c5.apply_json(&toml::parse(wrong).unwrap()).is_err());
+    }
+
+    #[test]
+    fn scenario_parses_validates_and_roundtrips() {
+        let doc = "\n[run]\nworkers = 4\n[scenario]\nhetero_alpha = 0.3\n\n\
+                   [[scenario.worker]]\nworker = 2\nstraggle_alpha = 1.1\ndeadline = 3.0\n\n\
+                   [[scenario.worker]]\nworker = 0\ndrop_from = 10\ndrop_until = 20\ncorrupt_rate = 0.05\n";
+        let mut c = RunCfg::paper_logreg(Algo::Laq);
+        c.apply_json(&toml::parse(doc).unwrap()).unwrap();
+        assert!(!c.scenario.is_empty());
+        assert_eq!(c.scenario.hetero_alpha, Some(0.3));
+        assert_eq!(c.scenario.workers.len(), 2);
+        let w2 = &c.scenario.workers[0];
+        assert_eq!((w2.worker, w2.straggle_alpha, w2.deadline), (2, Some(1.1), 3.0));
+        assert!(!w2.dropped(0));
+        let w0 = &c.scenario.workers[1];
+        assert_eq!((w0.worker, w0.drop_from, w0.drop_until), (0, Some(10), Some(20)));
+        assert_eq!(w0.corrupt_rate, 0.05);
+        assert!(!w0.dropped(9) && w0.dropped(10) && w0.dropped(19) && !w0.dropped(20));
+        // roundtrip: to_json -> apply_json reproduces the scenario
+        let j = c.to_json();
+        let mut c2 = RunCfg::paper_logreg(Algo::Laq);
+        c2.workers = 4;
+        c2.apply_json(&j).unwrap();
+        assert_eq!(c2.scenario, c.scenario);
+        // the empty scenario serializes to nothing: the recorded config of
+        // a fault-free run is byte-identical to the pre-scenario layout
+        let plain = RunCfg::paper_logreg(Algo::Laq);
+        assert!(plain.to_json().get("scenario").is_null());
+        // open-ended dropout: drop_from without drop_until = never rejoins
+        let gone = WorkerFaults { drop_from: Some(5), ..WorkerFaults::default() };
+        assert!(!gone.dropped(4) && gone.dropped(5) && gone.dropped(usize::MAX - 1));
+    }
+
+    #[test]
+    fn scenario_validation_rejects_bad_specs() {
+        let base = RunCfg::paper_logreg(Algo::Laq); // 10 workers
+        let check = |mutate: &dyn Fn(&mut WorkerFaults)| {
+            let mut c = base.clone();
+            let mut w = WorkerFaults::default();
+            mutate(&mut w);
+            c.scenario.workers = vec![w];
+            c.validate()
+        };
+        check(&|_| {}).unwrap();
+        assert!(check(&|w| w.worker = 10).is_err()); // out of range
+        assert!(check(&|w| w.straggle_alpha = Some(0.0)).is_err());
+        assert!(check(&|w| w.straggle_alpha = Some(f64::NAN)).is_err());
+        assert!(check(&|w| w.deadline = 0.0).is_err());
+        assert!(check(&|w| w.deadline = f64::NAN).is_err());
+        assert!(check(&|w| w.corrupt_rate = 1.5).is_err());
+        assert!(check(&|w| w.corrupt_rate = -0.1).is_err());
+        assert!(check(&|w| w.corrupt_rate = f64::NAN).is_err());
+        assert!(check(&|w| { w.drop_from = Some(7); w.drop_until = Some(7) }).is_err());
+        assert!(check(&|w| w.drop_until = Some(7)).is_err()); // until without from
+        // duplicate worker tables
+        let mut c = base.clone();
+        c.scenario.workers = vec![WorkerFaults::default(), WorkerFaults::default()];
+        assert!(c.validate().is_err());
+        // hetero_alpha must be positive finite
+        let mut c = base.clone();
+        c.scenario.hetero_alpha = Some(0.0);
+        assert!(c.validate().is_err());
+        // corrupt injection targets the lazy uplink codecs only
+        let mut c = RunCfg::paper_stochastic(Algo::Sgd, ModelKind::LogReg);
+        c.scenario.workers =
+            vec![WorkerFaults { corrupt_rate: 0.1, ..WorkerFaults::default() }];
+        assert!(c.validate().is_err());
+        c.algo = Algo::Slaq;
+        c.validate().unwrap();
+        // wrong shapes from TOML: `[scenario.worker]` (plain table) and
+        // wrong-typed fields must error, not fall through
+        let mut c = base.clone();
+        let plain_table = "\n[scenario.worker]\nworker = 0\n";
+        assert!(c.apply_json(&toml::parse(plain_table).unwrap()).is_err());
+        let missing_idx = "\n[[scenario.worker]]\ndeadline = 2.0\n";
+        assert!(c.apply_json(&toml::parse(missing_idx).unwrap()).is_err());
+        let wrong_typed = "\n[[scenario.worker]]\nworker = 0\ndeadline = \"soon\"\n";
+        assert!(c.apply_json(&toml::parse(wrong_typed).unwrap()).is_err());
     }
 }

@@ -1,11 +1,15 @@
 //! TOML-subset parser — the config-file substrate.
 //!
 //! Supports the subset real experiment configs need: `[section]` and
-//! `[section.sub]` headers, `key = value` with string / integer / float /
-//! boolean / homogeneous-array values, `#` comments, and bare or quoted
-//! keys.  Parsed into the same [`Json`] value model the rest of the crate
-//! uses (sections become nested objects), so config lookup code is shared
-//! between TOML and JSON inputs.
+//! `[section.sub]` headers, `[[section.list]]` array-of-tables headers
+//! (each occurrence appends one table; following keys land in the newest
+//! element), `key = value` with string / integer / float / boolean /
+//! homogeneous-array values, `#` comments, and bare or quoted keys.
+//! Parsed into the same [`Json`] value model the rest of the crate uses
+//! (sections become nested objects, array-of-tables become arrays of
+//! objects), so config lookup code is shared between TOML and JSON
+//! inputs.  Sub-sections *inside* an array element are not supported —
+//! no config here needs them.
 
 use crate::util::json::Json;
 use std::collections::BTreeMap;
@@ -27,6 +31,9 @@ impl std::error::Error for TomlError {}
 pub fn parse(text: &str) -> Result<Json, TomlError> {
     let mut root: BTreeMap<String, Json> = BTreeMap::new();
     let mut section: Vec<String> = Vec::new();
+    // true while the active section is the newest element of an
+    // array-of-tables (`[[path]]`); plain `[path]` headers reset it
+    let mut in_array = false;
 
     for (lineno, raw) in text.lines().enumerate() {
         let line = strip_comment(raw).trim();
@@ -35,22 +42,30 @@ pub fn parse(text: &str) -> Result<Json, TomlError> {
         }
         let err = |msg: &str| TomlError { line: lineno + 1, msg: msg.to_string() };
 
-        if let Some(hdr) = line.strip_prefix('[') {
+        // `[[` must be checked before `[` — every `[[x]]` also starts
+        // with `[` and would otherwise mis-parse as a section named `[x`
+        if let Some(hdr) = line.strip_prefix("[[") {
+            let hdr =
+                hdr.strip_suffix("]]").ok_or_else(|| err("unterminated array-of-tables header"))?;
+            section = parse_header_path(hdr).map_err(|m| err(&m))?;
+            in_array = true;
+            // materialize (or extend) the array and open a fresh element
+            push_array_element(&mut root, &section).map_err(|m| err(&m))?;
+        } else if let Some(hdr) = line.strip_prefix('[') {
             let hdr = hdr.strip_suffix(']').ok_or_else(|| err("unterminated section header"))?;
-            if hdr.is_empty() {
-                return Err(err("empty section name"));
-            }
-            section = hdr.split('.').map(|s| s.trim().to_string()).collect();
-            if section.iter().any(|s| s.is_empty()) {
-                return Err(err("empty section path component"));
-            }
+            section = parse_header_path(hdr).map_err(|m| err(&m))?;
+            in_array = false;
             // materialize the section object
             ensure_path(&mut root, &section).map_err(|m| err(&m))?;
         } else {
             let (k, v) = line.split_once('=').ok_or_else(|| err("expected key = value"))?;
             let key = parse_key(k.trim()).ok_or_else(|| err("bad key"))?;
             let val = parse_value(v.trim()).map_err(|m| err(&m))?;
-            let obj = ensure_path(&mut root, &section).map_err(|m| err(&m))?;
+            let obj = if in_array {
+                last_array_element(&mut root, &section).map_err(|m| err(&m))?
+            } else {
+                ensure_path(&mut root, &section).map_err(|m| err(&m))?
+            };
             if obj.contains_key(&key) {
                 return Err(err(&format!("duplicate key '{key}'")));
             }
@@ -58,6 +73,17 @@ pub fn parse(text: &str) -> Result<Json, TomlError> {
         }
     }
     Ok(Json::Obj(root))
+}
+
+fn parse_header_path(hdr: &str) -> Result<Vec<String>, String> {
+    if hdr.is_empty() {
+        return Err("empty section name".into());
+    }
+    let path: Vec<String> = hdr.split('.').map(|s| s.trim().to_string()).collect();
+    if path.iter().any(|s| s.is_empty()) {
+        return Err("empty section path component".into());
+    }
+    Ok(path)
 }
 
 fn strip_comment(line: &str) -> &str {
@@ -101,6 +127,38 @@ fn ensure_path<'a>(
         }
     }
     Ok(cur)
+}
+
+/// `[[path]]`: materialize parents as objects, the leaf as an array, and
+/// append one fresh table element to it.
+fn push_array_element(root: &mut BTreeMap<String, Json>, path: &[String]) -> Result<(), String> {
+    let (leaf, parents) = path.split_last().expect("header path is nonempty");
+    let obj = ensure_path(root, parents)?;
+    let entry = obj.entry(leaf.clone()).or_insert_with(|| Json::Arr(Vec::new()));
+    match entry {
+        Json::Arr(a) => {
+            a.push(Json::Obj(BTreeMap::new()));
+            Ok(())
+        }
+        _ => Err(format!("'{leaf}' is not an array of tables")),
+    }
+}
+
+/// Resolve the newest element of the `[[path]]` array the parser is
+/// inside — the table subsequent `key = value` lines fill.
+fn last_array_element<'a>(
+    root: &'a mut BTreeMap<String, Json>,
+    path: &[String],
+) -> Result<&'a mut BTreeMap<String, Json>, String> {
+    let (leaf, parents) = path.split_last().expect("header path is nonempty");
+    let obj = ensure_path(root, parents)?;
+    match obj.get_mut(leaf.as_str()) {
+        Some(Json::Arr(a)) => match a.last_mut() {
+            Some(Json::Obj(o)) => Ok(o),
+            _ => Err(format!("array '{leaf}' has no open table element")),
+        },
+        _ => Err(format!("'{leaf}' is not an array of tables")),
+    }
 }
 
 fn parse_value(v: &str) -> Result<Json, String> {
@@ -231,6 +289,47 @@ mod tests {
     #[test]
     fn section_vs_value_conflict_rejected() {
         assert!(parse("a = 1\n[a]\nb = 2\n").is_err());
+    }
+
+    #[test]
+    fn array_of_tables_appends_elements_in_order() {
+        let doc = "\n[scenario]\nhetero_alpha = 0.3\n\n[[scenario.worker]]\nworker = 2\ndeadline = 3.0\n\n[[scenario.worker]]\nworker = 0\ncorrupt_rate = 0.05\n";
+        let j = parse(doc).unwrap();
+        assert_eq!(j.get("scenario").get("hetero_alpha").as_f64(), Some(0.3));
+        let workers = j.get("scenario").get("worker").as_arr().unwrap();
+        assert_eq!(workers.len(), 2);
+        assert_eq!(workers[0].get("worker").as_usize(), Some(2));
+        assert_eq!(workers[0].get("deadline").as_f64(), Some(3.0));
+        assert_eq!(workers[1].get("worker").as_usize(), Some(0));
+        assert_eq!(workers[1].get("corrupt_rate").as_f64(), Some(0.05));
+    }
+
+    #[test]
+    fn array_of_tables_duplicate_key_within_element_rejected() {
+        assert!(parse("[[w]]\na = 1\na = 2\n").is_err());
+        // ...but the same key in *different* elements is fine
+        assert!(parse("[[w]]\na = 1\n[[w]]\na = 2\n").is_ok());
+    }
+
+    #[test]
+    fn array_of_tables_conflicts_rejected() {
+        // plain section, then array of the same name
+        assert!(parse("[w]\na = 1\n[[w]]\nb = 2\n").is_err());
+        // array, then plain section of the same name
+        assert!(parse("[[w]]\na = 1\n[w]\nb = 2\n").is_err());
+        // scalar, then array
+        assert!(parse("w = 1\n[[w]]\na = 2\n").is_err());
+        // unterminated double bracket carries its line number
+        let e = parse("x = 1\n[[w]\na = 2\n").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn plain_section_after_array_resets_key_routing() {
+        let doc = "[[w]]\na = 1\n[other]\nb = 2\n";
+        let j = parse(doc).unwrap();
+        assert_eq!(j.get("w").as_arr().unwrap().len(), 1);
+        assert_eq!(j.get("other").get("b").as_usize(), Some(2));
     }
 
     /// Regression: an unknown `wire_mode` in a TOML config must surface as

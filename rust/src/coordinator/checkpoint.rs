@@ -1055,6 +1055,61 @@ mod tests {
         assert!(ck3.validate().is_err());
     }
 
+    /// Retirement → rejoin must survive a checkpoint boundary: a run
+    /// whose worker drops out mid-training, saved INSIDE the outage (the
+    /// mirror already retired) and resumed from the v5 file by a fresh
+    /// trainer, must replay the remaining trace — rejoin and priming
+    /// broadcast included — bit-for-bit against the uninterrupted run.
+    /// The membership mask is not persisted; load recomputes it from the
+    /// scenario spec, and this test is what pins that reconstruction.
+    #[test]
+    fn scenario_outage_resumes_bit_exactly_from_a_v5_checkpoint() {
+        use crate::config::{Algo, RunCfg, WorkerFaults};
+
+        let mut cfg = RunCfg::paper_logreg(Algo::Laq);
+        cfg.data.name = "ijcnn1".into();
+        cfg.data.n_train = 200;
+        cfg.data.n_test = 50;
+        cfg.workers = 4;
+        cfg.iters = 20;
+        cfg.batch = 40;
+        cfg.scenario.workers.push(WorkerFaults {
+            worker: 2,
+            drop_from: Some(5),
+            drop_until: Some(12),
+            ..WorkerFaults::default()
+        });
+        cfg.validate().unwrap();
+
+        // the uninterrupted reference trace
+        let mut reference = crate::algo::build_native(&cfg).unwrap();
+        for _ in 0..cfg.iters {
+            reference.step().unwrap();
+        }
+
+        // run into the middle of the outage, snapshot, resume fresh
+        let dir = std::env::temp_dir().join("laq_ckpt_test_scenario");
+        let path = dir.join("outage.ckpt");
+        let mut first = crate::algo::build_native(&cfg).unwrap();
+        for _ in 0..8 {
+            first.step().unwrap();
+        }
+        first.save_checkpoint(&path).unwrap();
+        let mut resumed = crate::algo::build_native(&cfg).unwrap();
+        resumed.load_checkpoint(&path).unwrap();
+        for _ in 8..cfg.iters {
+            resumed.step().unwrap();
+        }
+
+        assert_eq!(
+            reference.theta(),
+            resumed.theta(),
+            "θ diverged across the checkpoint boundary"
+        );
+        assert_eq!(reference.clocks(), resumed.clocks(), "clocks diverged");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
     #[test]
     fn validate_catches_inconsistency() {
         let mut ck = sample();

@@ -789,6 +789,26 @@ impl ShardedServer {
         }
         worst
     }
+
+    /// Retire worker `m`'s mirror from the lazy aggregate — the elastic
+    /// -membership leave event: `∇ -= mirror_m; mirror_m = 0`.  After
+    /// this the aggregate invariant `∇ == Σ_m mirror_m` holds with the
+    /// leaver contributing nothing, so the remaining fleet's updates are
+    /// exactly what a fleet that never included `m` would compute from
+    /// the current θ.  A later rejoin primes the worker from θ (one
+    /// exact broadcast) and its first upload rebuilds the mirror through
+    /// the ordinary absorb recursion from this zero state.
+    ///
+    /// Runs sequentially on the coordinator: membership edges are rare,
+    /// cold events, and a plain index-order loop keeps the result
+    /// bit-identical across thread and shard counts.
+    pub fn retire_mirror(&mut self, m: usize) {
+        let mir = &mut self.q_mirror[m];
+        for i in 0..self.agg.len() {
+            self.agg[i] -= mir[i];
+            mir[i] = 0.0;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -825,6 +845,46 @@ mod tests {
             assert_eq!(s.q_mirror[0], q_new, "round {round}");
             q_prev = q_new;
         }
+        assert!(s.check_aggregate_invariant() < 1e-5);
+    }
+
+    #[test]
+    fn retire_mirror_removes_exactly_one_workers_contribution() {
+        let q = InnovationQuantizer::new(3);
+        let mut s = ServerState::new(48, 3, 3, 10, vec![0.0; 48]);
+        let mut prevs = vec![vec![0.0f32; 48]; 3];
+        for round in 0..3u64 {
+            for m in 0..3usize {
+                let g = grad(10 + round * 3 + m as u64, 48);
+                let (qi, q_new) = q.quantize(&g, &prevs[m]);
+                s.absorb_lazy(m, &Payload::Innovation(qi)).unwrap();
+                prevs[m] = q_new;
+            }
+        }
+        assert!(s.check_aggregate_invariant() < 1e-5);
+        s.retire_mirror(1);
+        // the leaver's mirror is zero, the invariant still holds, and the
+        // aggregate equals the sum of the surviving mirrors
+        assert!(s.q_mirror[1].iter().all(|&v| v == 0.0));
+        assert!(s.check_aggregate_invariant() < 1e-5);
+        for i in 0..48 {
+            let survivors = prevs[0][i] as f64 + prevs[2][i] as f64;
+            assert!(
+                (s.agg[i] as f64 - survivors).abs() < 1e-4,
+                "coord {i}: {} vs {survivors}",
+                s.agg[i]
+            );
+        }
+        // retiring an already-zero mirror is a no-op
+        let snapshot = s.agg.clone();
+        s.retire_mirror(1);
+        assert_eq!(s.agg, snapshot);
+        // a rejoined worker behaves exactly like a fresh one: its first
+        // absorb rebuilds the mirror through the ordinary recursion
+        let g = grad(99, 48);
+        let (qi, q_new) = q.quantize(&g, &vec![0.0f32; 48]);
+        s.absorb_lazy(1, &Payload::Innovation(qi)).unwrap();
+        assert_eq!(s.q_mirror[1], q_new);
         assert!(s.check_aggregate_invariant() < 1e-5);
     }
 

@@ -36,7 +36,7 @@ fn print_help() {
         "laq — Lazily Aggregated Quantized Gradients (NeurIPS 2019) reproduction\n\n\
          USAGE: laq <exp|train|list> [OPTIONS]\n\n\
          laq exp   --id <fig3|fig4|fig5|fig6|fig7|fig8|table2|table3|prop1> [--full] [--backend native|pjrt] [--out DIR] [--seed N]\n\
-         laq train --algo <gd|qgd|lag|laq|sgd|qsgd|ssgd|slaq|efsgd> [--model logreg|mlp] [--config FILE] [--iters N] [--alpha A] [--bits B] [--bit-schedule fixed|round-decay|innovation] [--bits-min L] [--bits-max H] [--downlink exact|quantized] [--down-bits-min L] [--down-bits-max H] [--threads T] [--server-shards S] [--wire-mode sync|async|async-cross] [--staleness-bound K] [--backend native|pjrt]\n\
+         laq train --algo <gd|qgd|lag|laq|sgd|qsgd|ssgd|slaq|efsgd> [--model logreg|mlp] [--config FILE] [--iters N] [--alpha A] [--bits B] [--bit-schedule fixed|round-decay|innovation] [--bits-min L] [--bits-max H] [--downlink exact|quantized] [--down-bits-min L] [--down-bits-max H] [--threads T] [--server-shards S] [--wire-mode sync|async|async-cross] [--staleness-bound K] [--t-fixed S] [--t-per-bit S] [--backend native|pjrt]\n\
          laq list\n"
     );
 }
@@ -116,6 +116,8 @@ fn train_spec() -> Vec<ArgSpec> {
         ArgSpec { name: "server-shards", help: "server θ-shards: 1=single, 0=auto, S=fixed", default: None, is_switch: false },
         ArgSpec { name: "wire-mode", help: "wire phase: sync (reference) | async (pipelined) | async-cross (cross-round staleness)", default: None, is_switch: false },
         ArgSpec { name: "staleness-bound", help: "async: absorb reorder window (positions); async-cross: max upload lag (rounds); 0 = sync order", default: None, is_switch: false },
+        ArgSpec { name: "t-fixed", help: "latency model: per-message setup time (s, finite, >= 0)", default: None, is_switch: false },
+        ArgSpec { name: "t-per-bit", help: "latency model: per-bit transfer time (s, finite, >= 0)", default: None, is_switch: false },
         ArgSpec { name: "backend", help: "native|pjrt", default: Some("native"), is_switch: false },
         ArgSpec { name: "dataset", help: "mnist|ijcnn1|covtype", default: None, is_switch: false },
         ArgSpec { name: "out", help: "trace output dir", default: Some("results/train"), is_switch: false },
@@ -211,6 +213,14 @@ fn cmd_train(argv: &[String]) -> i32 {
             .map_err(|e| laq::Error::Config(e.to_string()))?
         {
             cfg.staleness_bound = v;
+        }
+        // latency knobs: validate() rejects NaN/negatives from either
+        // source (CLI here, TOML via apply_json) with the same message
+        if let Some(v) = args.get_f64("t-fixed").map_err(|e| laq::Error::Config(e.to_string()))? {
+            cfg.t_fixed = v;
+        }
+        if let Some(v) = args.get_f64("t-per-bit").map_err(|e| laq::Error::Config(e.to_string()))? {
+            cfg.t_per_bit = v;
         }
         if let Some(v) = args.get("dataset") {
             cfg.data.name = v.to_string();

@@ -78,12 +78,20 @@ impl QuantizedInnovation {
     /// # Errors
     ///
     /// Returns [`Error::Codec`] when `buf` is too short for the header or
-    /// for `p` codes of `bits` bits.
+    /// for `p` codes of `bits` bits, or when the wire radius is not a
+    /// finite number — a NaN/inf radius would propagate through the
+    /// reconstruction into every coordinate of the server's mirror and
+    /// from there into θ, so a corrupted header must die at decode.
     pub fn decode_into(buf: &[u8], bits: u32, p: usize, out: &mut Self) -> Result<()> {
         let mut r = BitReader::new(buf);
         let radius = r
             .read_f32()
             .ok_or_else(|| Error::Codec("truncated innovation header".into()))?;
+        if !radius.is_finite() {
+            return Err(Error::Codec(format!(
+                "innovation radius {radius} is not finite"
+            )));
+        }
         unpack_codes_into(&mut r, bits, p, &mut out.codes)
             .ok_or_else(|| Error::Codec("truncated innovation codes".into()))?;
         out.radius = radius;
@@ -135,13 +143,19 @@ impl QuantizedInnovation {
     ///
     /// # Errors
     ///
-    /// Returns [`Error::Codec`] when the buffer is truncated or the wire
-    /// width field falls outside `1..=16`.
+    /// Returns [`Error::Codec`] when the buffer is truncated, the wire
+    /// width field falls outside `1..=16`, or the wire radius is not a
+    /// finite number (see [`Self::decode_into`]).
     pub fn decode_framed_into(buf: &[u8], p: usize, out: &mut Self) -> Result<()> {
         let mut r = BitReader::new(buf);
         let radius = r
             .read_f32()
             .ok_or_else(|| Error::Codec("truncated framed innovation header".into()))?;
+        if !radius.is_finite() {
+            return Err(Error::Codec(format!(
+                "framed innovation radius {radius} is not finite"
+            )));
+        }
         let bits = r
             .read(WIDTH_FIELD_BITS)
             .ok_or_else(|| Error::Codec("truncated framed innovation width".into()))?
@@ -452,6 +466,27 @@ mod tests {
         let bytes = qi.encode();
         assert!(QuantizedInnovation::decode(&bytes[..2], 3, 64).is_err());
         assert!(QuantizedInnovation::decode(&bytes, 3, 65).is_err());
+    }
+
+    #[test]
+    fn nonfinite_radius_rejected_at_decode_both_layouts() {
+        // a NaN/inf radius would smear through reconstruct_coord into the
+        // whole mirror; the decoders must kill it at the header
+        let q = InnovationQuantizer::new(3);
+        let (g, qp) = pair(8, 32);
+        let (qi, _) = q.quantize(&g, &qp);
+        for bad_radius in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let mut evil = qi.clone();
+            evil.radius = bad_radius;
+            let e = QuantizedInnovation::decode(&evil.encode(), 3, 32).unwrap_err();
+            assert!(matches!(e, Error::Codec(_)), "{bad_radius}: {e:?}");
+            let e = QuantizedInnovation::decode_framed(&evil.encode_framed(), 32).unwrap_err();
+            assert!(matches!(e, Error::Codec(_)), "framed {bad_radius}: {e:?}");
+        }
+        // all-ones header damage (the fault injector's NanRadius) too
+        let mut bytes = qi.encode();
+        bytes[..4].fill(0xFF);
+        assert!(QuantizedInnovation::decode(&bytes, 3, 32).is_err());
     }
 
     #[test]

@@ -342,6 +342,104 @@ fn downlink_mirror_recursion_round_trips_within_grid_resolution() {
 }
 
 #[test]
+fn truncated_frames_surface_as_decode_errors_never_panics() {
+    // a faulty transport can hand the decoder any prefix of a valid
+    // frame; every strict prefix must die with a codec error — no panic
+    // and no silent zero-fill of the missing codes — in BOTH layouts
+    Prop::new().check("every strict prefix errors", |rng| {
+        let p = 1 + rng.below(200) as usize;
+        let bits = 1 + rng.below(16) as u32;
+        let g = rand_vec(rng, p, 1.0);
+        let qp = rand_vec(rng, p, 1.0);
+        let (qi, _) = InnovationQuantizer::new(bits).quantize(&g, &qp);
+
+        let fixed = qi.encode();
+        prop_assert!(
+            QuantizedInnovation::decode(&fixed, bits, p).is_ok(),
+            "full fixed-layout frame must decode"
+        );
+        for cut in 0..fixed.len() {
+            prop_assert!(
+                QuantizedInnovation::decode(&fixed[..cut], bits, p).is_err(),
+                "fixed-layout prefix of {cut}/{} bytes decoded silently",
+                fixed.len()
+            );
+        }
+
+        let framed = qi.encode_framed();
+        prop_assert!(
+            QuantizedInnovation::decode_framed(&framed, p).is_ok(),
+            "full framed frame must decode"
+        );
+        for cut in 0..framed.len() {
+            prop_assert!(
+                QuantizedInnovation::decode_framed(&framed[..cut], p).is_err(),
+                "framed prefix of {cut}/{} bytes decoded silently",
+                framed.len()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn damaged_framed_width_field_is_rejected() {
+    // byte 4 of the framed layout is the self-describing width field;
+    // 0, 255 and the bitwise complement of any legal width all fall
+    // outside 1..=16 and must be rejected before the decoder sizes the
+    // codes section from the damaged value
+    Prop::new().check("width byte damage -> Err", |rng| {
+        let p = 1 + rng.below(500) as usize;
+        let bits = 1 + rng.below(16) as u32;
+        let g = rand_vec(rng, p, 1.0);
+        let qp = rand_vec(rng, p, 1.0);
+        let (qi, _) = InnovationQuantizer::new(bits).quantize(&g, &qp);
+        let mut bytes = qi.encode_framed();
+        let orig = bytes[4];
+        for bad in [0x00u8, 0xFF, orig ^ 0xFF] {
+            bytes[4] = bad;
+            prop_assert!(
+                QuantizedInnovation::decode_framed(&bytes, p).is_err(),
+                "width byte {bad:#04x} accepted (orig {orig:#04x})"
+            );
+        }
+        bytes[4] = orig;
+        let restored =
+            QuantizedInnovation::decode_framed(&bytes, p).map_err(|e| e.to_string())?;
+        prop_assert!(restored == qi, "restored frame must decode to the original");
+        Ok(())
+    });
+}
+
+#[test]
+fn non_finite_wire_radius_is_rejected_in_both_layouts() {
+    // a NaN or ±inf radius would multiply into every reconstructed
+    // coordinate of the server mirror and from there into θ; both
+    // decoders must kill it at the header, never return it
+    Prop::new().check("non-finite radius -> Err", |rng| {
+        let p = 1 + rng.below(300) as usize;
+        let bits = 1 + rng.below(8) as u32;
+        let g = rand_vec(rng, p, 1.0);
+        let qp = rand_vec(rng, p, 1.0);
+        let (qi, _) = InnovationQuantizer::new(bits).quantize(&g, &qp);
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let mut damaged = qi.clone();
+            damaged.radius = bad;
+            prop_assert!(
+                QuantizedInnovation::decode(&damaged.encode(), bits, p).is_err(),
+                "fixed layout accepted radius {bad}"
+            );
+            prop_assert!(
+                QuantizedInnovation::decode_framed(&damaged.encode_framed(), p)
+                    .is_err(),
+                "framed layout accepted radius {bad}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn quantize_is_deterministic() {
     Prop::new().check("same input -> same message", |rng| {
         let p = 1 + rng.below(300) as usize;

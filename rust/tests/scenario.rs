@@ -1,0 +1,295 @@
+//! Contracts of the scenario engine (`cfg.scenario`): fault-injected,
+//! heterogeneous, elastic fleets under the convergence contract.
+//!
+//! * **empty-scenario identity** — a config whose `[scenario]` table is
+//!   absent or empty drives the exact pre-scenario trainer: traces are
+//!   bit-identical across the (threads, shards) grid, and the
+//!   `wire_equivalence` goldens (which predate the engine) stay
+//!   unchanged.
+//! * **purity** — every scenario trace is a pure function of
+//!   (seed, config): identical across reruns and across every
+//!   (threads, shards) combination, under sync and async wire modes.
+//!   All fault randomness rides dedicated counter-based streams.
+//! * **degeneration** — `wire_mode = async, staleness_bound = 0` with a
+//!   scenario is bit-identical to sync with the same scenario (the same
+//!   contract the fault-free engine honors).
+//! * **graceful degradation** — a fleet with one worker dropped for 30%
+//!   of the run plus one heavy-tailed straggler still contracts on
+//!   strongly convex logreg, to within a scenario-dependent tolerance
+//!   of the fault-free final loss; mirror retirement/repriming keeps the
+//!   lazy-aggregate invariant tight throughout.
+//! * **corrupt-upload rejection** — injected corrupt frames are detected
+//!   at decode, billed (they crossed the wire), logged and rejected;
+//!   NaN never reaches θ and the bit/round accounting stays exact.
+
+use laq::config::{Algo, RunCfg, ScenarioCfg, WireMode, WorkerFaults};
+
+fn cfg_for(algo: Algo, wire: WireMode, staleness: usize, threads: usize, shards: usize) -> RunCfg {
+    let mut c = RunCfg::paper_logreg(algo);
+    // mnist-like keeps p = 7840 (8 coordinate blocks ⇒ real shard plans);
+    // tiny row counts keep the suite fast
+    c.data.n_train = 240;
+    c.data.n_test = 60;
+    c.workers = 4;
+    c.iters = 30;
+    c.batch = 40;
+    c.record_every = 1;
+    c.threads = threads;
+    c.server_shards = shards;
+    c.wire_mode = wire;
+    c.staleness_bound = staleness;
+    c.downlink = laq::config::DownlinkMode::Exact;
+    if algo.is_stochastic() {
+        c.alpha = 0.01;
+    }
+    c
+}
+
+/// The reference fault fleet: worker 0 corrupt-prone, worker 1 a
+/// heavy-tailed straggler with a finite deadline, worker 3 dropped for
+/// the middle 30% of a 30-round run.
+fn fault_fleet() -> ScenarioCfg {
+    let mut s = ScenarioCfg::default();
+    s.workers = vec![
+        WorkerFaults { worker: 0, corrupt_rate: 0.3, ..WorkerFaults::default() },
+        WorkerFaults {
+            worker: 1,
+            straggle_alpha: Some(1.2),
+            deadline: 4.0,
+            ..WorkerFaults::default()
+        },
+        WorkerFaults {
+            worker: 3,
+            drop_from: Some(9),
+            drop_until: Some(18),
+            ..WorkerFaults::default()
+        },
+    ];
+    s
+}
+
+/// Everything observable about a run, collected per iteration and
+/// compared exactly — the contracts here are bit-for-bit unless a test
+/// says otherwise.
+#[derive(Debug, PartialEq)]
+struct Trace {
+    steps: Vec<(f64, f64, u64, usize, f64)>,
+    rounds: u64,
+    bits: u64,
+    down_bits: u64,
+    sim_time: f64,
+    per_worker_rounds: Vec<u64>,
+    clocks: Vec<usize>,
+    rejections: u64,
+    theta: Vec<f32>,
+}
+
+fn run_trace(cfg: &RunCfg) -> Trace {
+    let mut t = laq::algo::build_native(cfg).unwrap();
+    let mut steps = Vec::with_capacity(cfg.iters);
+    for _ in 0..cfg.iters {
+        let s = t.step().unwrap();
+        steps.push((s.loss, s.grad_norm_sq, s.bits, s.uploads, s.max_eps_sq));
+    }
+    Trace {
+        steps,
+        rounds: t.net.uplink_rounds(),
+        bits: t.net.uplink_bits(),
+        down_bits: t.net.downlink_bits(),
+        sim_time: t.net.sim_time(),
+        per_worker_rounds: t.net.per_worker_rounds().to_vec(),
+        clocks: t.clocks(),
+        rejections: t.scenario_rejections(),
+        theta: t.theta().to_vec(),
+    }
+}
+
+#[test]
+fn empty_scenario_is_bit_identical_across_the_grid() {
+    // acceptance (a): the empty scenario drives the pre-scenario trainer
+    // bit-for-bit at every (threads, shards) ∈ {1,4} × {1,7} — and a
+    // TOML config with a present-but-empty [scenario] table parses to
+    // the same empty scenario
+    let toml = "[scenario]\n";
+    for algo in [Algo::Laq, Algo::Slaq] {
+        let base = run_trace(&cfg_for(algo, WireMode::Sync, 0, 1, 1));
+        for (threads, shards) in [(1usize, 7usize), (4, 1), (4, 7)] {
+            let mut cfg = cfg_for(algo, WireMode::Sync, 0, threads, shards);
+            let j = laq::config::toml::parse(toml).unwrap();
+            cfg.apply_json(&j).unwrap();
+            assert!(cfg.scenario.is_empty(), "an empty [scenario] table must stay empty");
+            let t = run_trace(&cfg);
+            assert_eq!(
+                base,
+                t,
+                "{}: empty scenario threads={threads} shards={shards} diverged",
+                algo.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn scenario_trace_is_a_pure_function_of_seed_and_config() {
+    // acceptance (b): the full fault fleet — corrupt + straggler +
+    // dropout — reproduces bit-for-bit across reruns and across the
+    // thread/shard grid, under sync and pipelined-async wire phases
+    for (wire, staleness) in [(WireMode::Sync, 0usize), (WireMode::Async, 2)] {
+        let mut base_cfg = cfg_for(Algo::Laq, wire, staleness, 1, 1);
+        base_cfg.scenario = fault_fleet();
+        let base = run_trace(&base_cfg);
+        assert!(base.rounds > 0, "the faulted fleet must still communicate");
+        for (threads, shards) in [(1usize, 7usize), (4, 1), (4, 7)] {
+            let mut cfg = cfg_for(Algo::Laq, wire, staleness, threads, shards);
+            cfg.scenario = fault_fleet();
+            let t = run_trace(&cfg);
+            assert_eq!(
+                base, t,
+                "scenario {wire:?} s={staleness} threads={threads} shards={shards} not reproducible"
+            );
+        }
+        // racing schedules across two identical runs must still agree
+        let mut cfg = cfg_for(Algo::Laq, wire, staleness, 4, 7);
+        cfg.scenario = fault_fleet();
+        let again = run_trace(&cfg);
+        assert_eq!(base, again, "scenario {wire:?} rerun diverged");
+    }
+}
+
+#[test]
+fn async_zero_staleness_scenario_degenerates_to_sync() {
+    // the scenario paths keep the fault-free engine's degeneration
+    // contract: at staleness 0 the async machinery — including the
+    // worker-side corrupt rejection and the phase-4 billing — is
+    // bit-identical to the sync wire loop's inline handling
+    let mut s_cfg = cfg_for(Algo::Laq, WireMode::Sync, 0, 1, 1);
+    s_cfg.scenario = fault_fleet();
+    let sync = run_trace(&s_cfg);
+    for (threads, shards) in [(1usize, 1usize), (4, 7)] {
+        let mut a_cfg = cfg_for(Algo::Laq, WireMode::Async, 0, threads, shards);
+        a_cfg.scenario = fault_fleet();
+        let asy = run_trace(&a_cfg);
+        assert_eq!(
+            sync, asy,
+            "async s=0 threads={threads} shards={shards} diverged from sync under the scenario"
+        );
+    }
+}
+
+#[test]
+fn faulted_fleet_still_contracts_on_strongly_convex_logreg() {
+    // acceptance (c): one worker dropped for 30% of rounds + one
+    // heavy-tailed straggler → the strongly convex logreg objective
+    // still contracts, and lands within a scenario-dependent tolerance
+    // of the fault-free final loss.  Losses compare via eval_full (all
+    // workers, no scenario involvement) because the per-step trace loss
+    // legitimately excludes dropped workers' shards.
+    let mut free_cfg = cfg_for(Algo::Laq, WireMode::Sync, 0, 1, 1);
+    free_cfg.iters = 60;
+    let mut faulted_cfg = free_cfg.clone();
+    faulted_cfg.scenario.workers = vec![
+        WorkerFaults {
+            worker: 1,
+            straggle_alpha: Some(1.2),
+            deadline: 5.0,
+            ..WorkerFaults::default()
+        },
+        WorkerFaults {
+            worker: 3,
+            drop_from: Some(18),
+            drop_until: Some(36),
+            ..WorkerFaults::default()
+        },
+    ];
+
+    let mut free = laq::algo::build_native(&free_cfg).unwrap();
+    let mut faulted = laq::algo::build_native(&faulted_cfg).unwrap();
+    let (first, _) = faulted.eval_full().unwrap();
+    for _ in 0..free_cfg.iters {
+        free.step().unwrap();
+        faulted.step().unwrap();
+    }
+    let (last_free, _) = free.eval_full().unwrap();
+    let (last, _) = faulted.eval_full().unwrap();
+
+    assert!(
+        last < 0.9 * first,
+        "faulted fleet failed to contract: {first} -> {last}"
+    );
+    assert!(
+        (last - last_free).abs() <= 0.25 * last_free.abs().max(1e-9),
+        "faulted final loss {last} too far from fault-free {last_free}"
+    );
+    // mirror lifecycle: retirement + rejoin never wedged the lazy
+    // aggregate — the Σ-mirrors invariant holds to float accumulation
+    assert!(
+        faulted.aggregate_drift() < 1e-2,
+        "lazy aggregate drifted from Σ mirrors: {}",
+        faulted.aggregate_drift()
+    );
+}
+
+#[test]
+fn corrupt_uploads_are_rejected_billed_and_never_poison_theta() {
+    // acceptance (d): QGD forces an upload from every worker every
+    // round, so with corrupt_rate = 0.5 on worker 0 roughly half its
+    // frames are damaged in flight.  Every damaged frame must be
+    // detected at decode and rejected — θ stays finite — while the
+    // accounting stays exact: a rejected frame is billed like a landed
+    // one (it crossed the wire), so rounds and bits match the fault-free
+    // totals of the forced-upload schedule to the bit.
+    let mut cfg = cfg_for(Algo::Qgd, WireMode::Sync, 0, 1, 1);
+    cfg.iters = 25;
+    cfg.scenario.workers =
+        vec![WorkerFaults { worker: 0, corrupt_rate: 0.5, ..WorkerFaults::default() }];
+
+    let mut t = laq::algo::build_native(&cfg).unwrap();
+    for _ in 0..cfg.iters {
+        t.step().unwrap();
+        assert!(
+            t.theta().iter().all(|x| x.is_finite()),
+            "a corrupt upload poisoned θ at round {}",
+            t.scenario_rejections()
+        );
+    }
+    let rejections = t.scenario_rejections();
+    assert!(rejections > 0, "corrupt_rate = 0.5 over 25 forced rounds drew no corruption");
+    assert!(
+        rejections < cfg.iters as u64,
+        "every round rejected — the rate gate is broken"
+    );
+
+    // exact accounting: forced uploads ⇒ iters × workers billed rounds,
+    // each a fixed-layout innovation frame of 32 + b·p bits
+    let rounds = t.net.uplink_rounds();
+    assert_eq!(rounds, (cfg.iters * cfg.workers) as u64);
+    assert_eq!(t.net.per_worker_rounds()[0], cfg.iters as u64);
+    let frame_bits = 32 + (cfg.bits as u64) * (t.dim() as u64);
+    assert_eq!(t.net.uplink_bits(), rounds * frame_bits);
+}
+
+#[test]
+fn membership_accounting_is_exact_through_leave_and_rejoin() {
+    // elastic membership: the dropped worker holds no wire seat during
+    // its outage (its silence clock freezes; QGD's forced schedule makes
+    // the expected round counts exact), and the rejoin is billed as
+    // exactly one extra exact priming broadcast on the downlink.
+    let mut cfg = cfg_for(Algo::Qgd, WireMode::Sync, 0, 1, 1);
+    cfg.iters = 20;
+    cfg.scenario.workers = vec![WorkerFaults {
+        worker: 2,
+        drop_from: Some(5),
+        drop_until: Some(12),
+        ..WorkerFaults::default()
+    }];
+    let t = run_trace(&cfg);
+
+    // worker 2 misses exactly rounds 5..12 of its forced uploads
+    let expect: Vec<u64> = (0..4u64).map(|m| if m == 2 { 20 - 7 } else { 20 }).collect();
+    assert_eq!(t.per_worker_rounds, expect);
+    // downlink: 20 per-round broadcasts + 1 rejoin priming message, all
+    // exact dense θ frames
+    let dense = laq::comm::Network::downlink_dense_bits(7840) as u64;
+    assert_eq!(t.down_bits, 21 * dense);
+    assert_eq!(t.rejections, 0);
+}
