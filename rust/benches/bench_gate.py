@@ -1,0 +1,65 @@
+#!/usr/bin/env python3
+"""Bench-regression gate: compare a fresh BENCH_*.json against the
+checked-in baseline and fail on sampled-timing regressions.
+
+Usage: bench_gate.py BASELINE.json FRESH.json [BUDGET]
+
+Entries are keyed by (group, bench); only entries carrying a sampled
+``p50_s`` are gated (the trajectory groups — trainer_bits,
+trainer_scenario, trainer_resilience — record counters and losses, not
+wall-time percentiles, and drift there is pinned by the test suite
+instead).  A fresh p50 more than BUDGET (default 15%) above the baseline
+fails the gate; disappeared or brand-new benches are reported but do not
+fail, so adding a group does not require regenerating every baseline at
+once.  Stdlib only — CI has no third-party Python.
+"""
+
+import json
+import sys
+
+
+def timed_entries(path):
+    with open(path) as fh:
+        doc = json.load(fh)
+    out = {}
+    for e in doc.get("entries", []):
+        if "p50_s" in e:
+            out[(e.get("group", "?"), e.get("bench", "?"))] = float(e["p50_s"])
+    return out
+
+
+def main():
+    if len(sys.argv) < 3:
+        sys.exit(__doc__)
+    baseline_path, fresh_path = sys.argv[1], sys.argv[2]
+    budget = float(sys.argv[3]) if len(sys.argv) > 3 else 0.15
+    baseline = timed_entries(baseline_path)
+    fresh = timed_entries(fresh_path)
+
+    failures = []
+    for key in sorted(baseline.keys() & fresh.keys()):
+        base, now = baseline[key], fresh[key]
+        if base <= 0.0:
+            continue
+        ratio = now / base
+        flag = "FAIL" if ratio > 1.0 + budget else "ok"
+        print(f"  {flag:<4} {key[0]}/{key[1]}: p50 {base:.3e}s -> {now:.3e}s ({ratio:.2f}x)")
+        if ratio > 1.0 + budget:
+            failures.append((key, base, now, ratio))
+    for key in sorted(baseline.keys() - fresh.keys()):
+        print(f"  note {key[0]}/{key[1]}: in baseline but missing from this run")
+    for key in sorted(fresh.keys() - baseline.keys()):
+        print(f"  note {key[0]}/{key[1]}: new bench, no baseline yet")
+
+    if failures:
+        print(
+            f"FAIL: {len(failures)} bench(es) regressed more than "
+            f"{budget:.0%} over {baseline_path}",
+            file=sys.stderr,
+        )
+        sys.exit(1)
+    print(f"bench gate OK ({len(baseline.keys() & fresh.keys())} benches within {budget:.0%})")
+
+
+if __name__ == "__main__":
+    main()

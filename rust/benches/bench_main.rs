@@ -16,8 +16,8 @@
 //!
 //! Output is plain text; `cargo bench 2>&1 | tee bench_output.txt`.
 //! Set `LAQ_BENCH_QUICK=1` for the CI smoke mode: only the sharded-server,
-//! trainer-wire, dial-a-bit, and scenario groups run (reduced sampling)
-//! and both JSONs are still emitted.
+//! trainer-wire, dial-a-bit, scenario, and resilience groups run (reduced
+//! sampling) and both JSONs are still emitted.
 
 use laq::algo::{build_native, Trainer};
 use laq::comm::{LatencyModel, Payload};
@@ -632,6 +632,98 @@ fn bench_trainer_scenario(quick: bool, entries: &mut Vec<Json>) {
     }
 }
 
+/// Resilience bench: what the self-healing coordinator buys back — the
+/// same heavy-tail straggler fleet run resilience-off vs resilience-on
+/// (reduced cadence + retry ladder + quorum), reporting simulated
+/// wall-clock, per-direction traffic, demotions/retries/clamps, and the
+/// final full-fleet loss.  Emits the `trainer_resilience` group into
+/// BENCH_trainer.json; the hard contract (less sim_time, no more uplink
+/// bits, loss within tolerance) lives in `rust/tests/resilience.rs`.
+fn bench_trainer_resilience(quick: bool, entries: &mut Vec<Json>) {
+    use laq::config::{ResilienceCfg, WorkerFaults};
+    println!("\n== self-healing coordinator: straggler fleet, resilience off vs on (LAQ logreg, sync) ==");
+    let iters = if quick { 100 } else { 300 };
+    println!("   (mnist-like p=7840, M=4, {iters} rounds, Pareto α=1.2 straggler, cadence 4 + 2 retries + 0.75 quorum)");
+    let fleet = || {
+        vec![
+            WorkerFaults {
+                worker: 1,
+                straggle_alpha: Some(1.2),
+                deadline: 3.0,
+                ..WorkerFaults::default()
+            },
+            WorkerFaults { worker: 2, corrupt_rate: 0.1, ..WorkerFaults::default() },
+        ]
+    };
+    let healing = ResilienceCfg {
+        cadence: 4,
+        miss_threshold: 1,
+        restore_rounds: 30,
+        max_retries: 2,
+        backoff_base: 1e-3,
+        backoff_cap: 4e-3,
+        quorum: 0.75,
+        ..ResilienceCfg::default()
+    };
+    let mut off_sim = f64::NAN;
+    let mut off_loss = f64::NAN;
+    for (label, resilience) in [("resilience-off", ResilienceCfg::default()), ("resilience-on", healing)] {
+        let mut cfg = RunCfg::paper_logreg(Algo::Laq);
+        cfg.data.n_train = 240;
+        cfg.data.n_test = 60;
+        cfg.workers = 4;
+        cfg.threads = 1;
+        cfg.server_shards = 1;
+        cfg.wire_mode = WireMode::Sync;
+        cfg.staleness_bound = 0;
+        cfg.iters = iters;
+        cfg.scenario.workers = fleet();
+        cfg.resilience = resilience;
+        let mut t = build_native(&cfg).unwrap();
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            t.step().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let (loss, _) = t.eval_full().unwrap();
+        let up = t.net.uplink_bits();
+        let down = t.net.downlink_bits();
+        let rounds = t.net.uplink_rounds();
+        let sim = t.net.sim_time();
+        let rejected = t.scenario_rejections();
+        let (demotions, retries, clamps) = t.resilience_stats();
+        println!(
+            "{label:<24} rounds {rounds:>5}  bits up {up:>12} + down {down:>12}  sim {sim:>9.3}s  rejected {rejected:>3}  demoted {demotions}  retries {retries}  clamped {clamps}  full loss {loss:.6e}  ({wall:.2}s)"
+        );
+        if label == "resilience-off" {
+            off_sim = sim;
+            off_loss = loss;
+        } else {
+            println!(
+                "{:<24} {:.3}× the resilience-off sim_time, loss Δ {:+.2e}",
+                format!("  -> {label}"),
+                sim / off_sim,
+                loss - off_loss
+            );
+        }
+        entries.push(Json::obj(vec![
+            ("group", Json::Str("trainer_resilience".into())),
+            ("bench", Json::Str(format!("laq_{label}"))),
+            ("iters", Json::Num(iters as f64)),
+            ("rounds", Json::Num(rounds as f64)),
+            ("uplink_bits", Json::Num(up as f64)),
+            ("downlink_bits", Json::Num(down as f64)),
+            ("sim_time_s", Json::Num(sim)),
+            ("rejected_uploads", Json::Num(rejected as f64)),
+            ("demotions", Json::Num(demotions as f64)),
+            ("retries", Json::Num(retries as f64)),
+            ("quorum_clamps", Json::Num(clamps as f64)),
+            ("final_loss", Json::Num(loss)),
+            ("wall_s", Json::Num(wall)),
+        ]));
+    }
+}
+
 fn write_trainer_json(entries: Vec<Json>) {
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let doc = Json::obj(vec![
@@ -713,6 +805,7 @@ fn main() {
         bench_trainer_wire(true, &mut trainer_entries);
         bench_bit_schedules(true, &mut trainer_entries);
         bench_trainer_scenario(true, &mut trainer_entries);
+        bench_trainer_resilience(true, &mut trainer_entries);
     } else {
         println!("LAQ bench harness (offline substitute for criterion)");
         bench_codecs();
@@ -724,6 +817,7 @@ fn main() {
         bench_trainer_wire(false, &mut trainer_entries);
         bench_bit_schedules(false, &mut trainer_entries);
         bench_trainer_scenario(false, &mut trainer_entries);
+        bench_trainer_resilience(false, &mut trainer_entries);
         bench_experiments();
     }
     write_bench_json(entries);

@@ -27,10 +27,18 @@
 # bit-budget sweep) so the perf trajectory is machine-readable from
 # every CI run.
 #
+# A bench-regression gate then compares the fresh BENCH_*.json p50s
+# against the checked-in baselines in benches/baseline/ (15% budget,
+# benches/bench_gate.py); a missing baseline bootstraps from the current
+# run so the first CI pass after a new group stays green.
+#
 # A final scenario leg runs the fault-injection contract suite
 # (rust/tests/scenario.rs) in sequential and parallel shapes, pins the
 # empty-scenario goldens byte-identical across it, and drives the three
 # examples/scenario_*.toml configs end to end through the release binary.
+# The resilience leg does the same for the self-healing coordinator
+# (rust/tests/resilience.rs at threads 1 and 4, goldens re-pinned, the
+# examples/scenario_resilient.toml fleet driven end to end).
 #
 # Usage: rust/ci.sh   (from the repo root or from rust/)
 set -euo pipefail
@@ -81,6 +89,20 @@ grep -q '"uplink_bits"' BENCH_trainer.json
 grep -q '"downlink_bits"' BENCH_trainer.json
 echo "BENCH_trainer.json carries uplink_bits/downlink_bits"
 
+echo "== bench-regression gate (p50 vs benches/baseline/, 15% budget) =="
+mkdir -p benches/baseline
+for j in BENCH_server.json BENCH_trainer.json; do
+    if [ ! -f "benches/baseline/$j" ]; then
+        cp "$j" "benches/baseline/$j"
+        echo "bootstrapped benches/baseline/$j from this run -- commit it to arm the gate"
+    elif command -v python3 >/dev/null 2>&1; then
+        echo "-- $j"
+        python3 benches/bench_gate.py "benches/baseline/$j" "$j" 0.15
+    else
+        echo "WARN: python3 unavailable; skipping bench gate for $j"
+    fi
+done
+
 echo "== scenario suite (fault injection, elastic membership, purity) =="
 # the empty-scenario goldens must be byte-identical before and after the
 # scenario suite — an engine that perturbs the fault-free path (an extra
@@ -103,5 +125,22 @@ for f in ../examples/scenario_straggler.toml \
     echo "-- $f"
     ./target/release/laq train --config "$f" --out results/scenario_ci
 done
+
+echo "== resilience suite (self-healing coordinator: cadence, retry, quorum) =="
+# same golden discipline as the scenario leg: the empty-[resilience]
+# section must leave the fault-free wire traces byte-identical — the
+# headline bit-identity contract of the self-healing coordinator
+golden_before=$(sha256sum "$GOLDEN" | cut -d' ' -f1)
+LAQ_THREADS=1 LAQ_SHARDS=1 cargo test -q --test resilience
+LAQ_THREADS=4 LAQ_SHARDS=4 cargo test -q --test resilience
+golden_after=$(sha256sum "$GOLDEN" | cut -d' ' -f1)
+if [ "$golden_before" != "$golden_after" ]; then
+    echo "FAIL: empty-resilience goldens changed ($golden_before -> $golden_after)" >&2
+    exit 1
+fi
+echo "empty-resilience goldens unchanged"
+
+echo "== resilient fleet config (release binary, end to end) =="
+./target/release/laq train --config ../examples/scenario_resilient.toml --out results/scenario_ci
 
 echo "== ci OK =="

@@ -180,11 +180,16 @@
 //! allocations** (pinned by `rust/tests/alloc_steady_state.rs`).
 
 pub mod build;
+pub mod resilience;
 
 pub use build::{build, build_native, build_pjrt};
 
 use std::sync::atomic::{AtomicU8, Ordering};
 
+use crate::algo::resilience::{
+    backoff_delay, cadence_scheduled, observe_round, retry_seed, HealthPhase, ResilienceRt,
+    RoundPlan, WorkerHealth,
+};
 use crate::comm::{Corruption, LatencyModel, Network, Payload, WireSlot};
 use crate::config::{Algo, BitScheduleKind, DownlinkMode, RunCfg, WireMode, WorkerFaults};
 use crate::coordinator::server::{DELTA_BLOCK, WireSync, WIRE_PENDING, WIRE_SKIP, WIRE_UPLOAD};
@@ -271,6 +276,11 @@ pub struct Trainer {
     /// (inert — all-default, zero extra RNG draws — when `cfg.scenario`
     /// is empty, which is what keeps the empty scenario bit-identical)
     scenario: ScenarioRt,
+    /// self-healing runtime: per-worker health records + this round's
+    /// scheduling/retry/quorum plans (inert — all-default, zero extra
+    /// RNG draws or float ops — when `cfg.resilience` is empty, which
+    /// is what keeps the empty section bit-identical)
+    resilience: ResilienceRt,
 }
 
 /// Retained state of the quantized downlink broadcast
@@ -566,7 +576,15 @@ impl CrossState {
         framed: bool,
     ) -> Self {
         let on = cfg.wire_mode == WireMode::AsyncCross;
-        let depth = if on { cfg.staleness_bound + 1 } else { 1 };
+        // resilience staleness slack widens demoted workers' landing
+        // window past the fleet-wide bound, so the rings must hold the
+        // extra rounds (staleness_slack is 0 whenever `[resilience]` is
+        // empty — the depth then matches the pre-resilience trainer)
+        let depth = if on {
+            cfg.staleness_bound + cfg.resilience.staleness_slack + 1
+        } else {
+            1
+        };
         let mut slots = Vec::new();
         if on {
             slots = (0..n_workers * depth).map(|_| WireSlot::default()).collect();
@@ -751,6 +769,7 @@ impl Trainer {
         };
         let n_workers = nodes.len();
         let scenario = ScenarioRt::new(&cfg, n_workers);
+        let resilience = ResilienceRt::new(&cfg, n_workers);
         Ok(Self {
             cfg,
             nodes,
@@ -775,6 +794,7 @@ impl Trainer {
             schedule,
             down,
             scenario,
+            resilience,
         })
     }
 
@@ -884,6 +904,138 @@ impl Trainer {
         }
     }
 
+    /// Self-healing coordinator, phase 0b of a round (right after the
+    /// scenario draws): resolve every worker's resilience plan for round
+    /// `k` — cadence verdicts, the retry ladder, the quorum clamp — on
+    /// the coordinator, before the fan-out, so every consumer (widths,
+    /// local phase, wire, accounting, health fold) sees the same plan
+    /// under every wire mode and thread/shard count.
+    ///
+    /// * **Reduced cadence**: a demoted worker is unscheduled except
+    ///   every `cadence`-th round counted from its demotion; its fault
+    ///   verdict is cleared (it takes no wire seat, nothing bills).
+    /// * **Retry ladder**: while the round's verdict is an upload
+    ///   failure (missed or corrupt) and attempts remain, the verdict is
+    ///   redrawn from the attempt's own counter-based stream
+    ///   ([`retry_seed`]); each superseded *corrupt* frame is recorded —
+    ///   it crossed the wire and the accounting seat bills + rejects it
+    ///   — and each attempt accrues its backoff into the plan.  Retry
+    ///   frames are billed at nominal wire time (the retransmission is
+    ///   a fresh message; its own straggle is what the redraw decides),
+    ///   and the whole ladder only bills if the worker actually wanted
+    ///   to upload — the lazy criterion's skip never retries.
+    /// * **Quorum**: with `quorum = q`, the round commits once
+    ///   `ceil(q · |scheduled|)` workers have landed; workers behind
+    ///   that boundary have their straggle multiplier clamped to the
+    ///   boundary's (the round stops waiting for them) and, under
+    ///   `async-cross`, their uploads ride the cross-round landing
+    ///   machinery instead ([`RoundPlan::quorum_late`]).
+    fn resilience_begin_round(&mut self, k: usize) {
+        let rcfg = self.cfg.resilience.clone();
+        for m in 0..self.nodes.len() {
+            let mut plan = RoundPlan { orig_mult: self.scenario.faults[m].mult, ..RoundPlan::default() };
+            if self.scenario.dropped(m) {
+                // out of the fleet: no schedule seat, no retries; health
+                // freezes until the worker returns
+                self.resilience.plans[m] = plan;
+                continue;
+            }
+            if !cadence_scheduled(&self.resilience.health[m], rcfg.cadence, k) {
+                plan.scheduled = false;
+                // no wire seat this round — clear the verdict so no
+                // fault path can bill or mutate for this worker
+                self.scenario.faults[m] = RoundFault::default();
+                self.resilience.plans[m] = plan;
+                continue;
+            }
+            if rcfg.max_retries > 0 {
+                let (alpha, deadline, corrupt_rate) = match &self.scenario.specs[m] {
+                    Some(s) => (s.straggle_alpha, s.deadline, s.corrupt_rate),
+                    None => (None, f64::INFINITY, 0.0),
+                };
+                let mut attempt = 0u32;
+                while attempt < rcfg.max_retries
+                    && (self.scenario.faults[m].missed
+                        || self.scenario.faults[m].corrupt.is_some())
+                {
+                    attempt += 1;
+                    if self.scenario.faults[m].corrupt.is_some() {
+                        // the superseded frame crossed the wire before
+                        // the re-request: billed + rejected at this
+                        // worker's accounting seat
+                        plan.extra_rejected_frames += 1;
+                    }
+                    plan.backoff_time += backoff_delay(&rcfg, attempt);
+                    let rs = retry_seed(self.cfg.seed, attempt);
+                    let mut missed = false;
+                    let mut mult = 1.0;
+                    if let Some(alpha) = alpha {
+                        mult = self.net.latency.straggle_mult(rs, m as u64, k as u64, alpha);
+                        missed = mult > deadline;
+                    }
+                    let f = &mut self.scenario.faults[m];
+                    f.mult = mult;
+                    f.missed = missed;
+                    f.corrupt = Corruption::draw(rs, m as u64, k as u64, corrupt_rate);
+                }
+                plan.retries_used = attempt;
+                self.resilience.retries_total += attempt as u64;
+            }
+            self.resilience.plans[m] = plan;
+        }
+        if rcfg.quorum > 0.0 {
+            self.resilience.quorum_scratch.clear();
+            for m in 0..self.nodes.len() {
+                if self.scenario.dropped(m) || !self.resilience.plans[m].scheduled {
+                    continue;
+                }
+                self.resilience.quorum_scratch.push((self.scenario.faults[m].mult, m));
+            }
+            let n_sched = self.resilience.quorum_scratch.len();
+            if n_sched > 0 {
+                let q_count =
+                    ((rcfg.quorum * n_sched as f64).ceil() as usize).clamp(1, n_sched);
+                self.resilience
+                    .quorum_scratch
+                    .sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+                let quorum_mult = self.resilience.quorum_scratch[q_count - 1].0;
+                for i in q_count..n_sched {
+                    let (mult, m) = self.resilience.quorum_scratch[i];
+                    if mult > quorum_mult {
+                        self.scenario.faults[m].mult = quorum_mult;
+                        self.resilience.plans[m].quorum_late = true;
+                        self.resilience.quorum_clamped_total += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Bill worker `m`'s retry ladder for round `k` at its accounting
+    /// seat: each superseded corrupt frame crossed the wire before its
+    /// re-request — billed at the staged payload's nominal wire size and
+    /// counted as a rejection — and the ladder's accrued backoff waits
+    /// enter the simulated clock.  Called only when the worker actually
+    /// wanted to upload (a lazy skip retries nothing); a no-op — zero
+    /// float ops — for plans without retry activity.
+    fn bill_retry_ladder(&mut self, m: usize, k: usize) {
+        let plan = self.resilience.plans[m];
+        if plan.extra_rejected_frames > 0 {
+            let bits = self.net.payload_wire_bits(&self.nodes[m].staged);
+            for _ in 0..plan.extra_rejected_frames {
+                self.net.account_upload(m, bits);
+                self.scenario.rejected_total += 1;
+            }
+            crate::log_warn!(
+                "resilience: worker {m} burned {} corrupt frame(s) in the retry ladder at round {k}",
+                plan.extra_rejected_frames
+            );
+        }
+        if plan.backoff_time > 0.0 {
+            self.net.delay(plan.backoff_time);
+        }
+    }
+
     /// One full iteration of the selected algorithm: a parallel local
     /// phase (per-worker gradients + criterion + encoding) plus the wire
     /// phase (uploads, aggregation, mirror commits) — run back-to-back
@@ -903,6 +1055,14 @@ impl Trainer {
         // change outcome — when no scenario is configured.
         if self.scenario.on {
             self.scenario_begin_round(k);
+        }
+
+        // 0b. self-healing coordinator: resolve this round's resilience
+        // plans (cadence / retries / quorum) against the fresh fault
+        // verdicts.  Skipped entirely — no draws, no float ops, every
+        // plan stays all-default — when `[resilience]` is empty.
+        if self.resilience.on {
+            self.resilience_begin_round(k);
         }
 
         // 1. downlink broadcast of θ^k — one message per round, billed
@@ -943,6 +1103,11 @@ impl Trainer {
                     // the reset state until it rejoins
                     continue;
                 }
+                if self.resilience.on && !self.resilience.plans[m].scheduled {
+                    // reduced cadence: no local work this round, so the
+                    // width fold holds position until the next selection
+                    continue;
+                }
                 let w = self.schedule.width(&self.bit_states[m], m, k);
                 debug_assert!(
                     (self.schedule.min_width()..=self.schedule.max_width()).contains(&w),
@@ -963,6 +1128,11 @@ impl Trainer {
                 if self.scenario.on && self.scenario.dropped(m) {
                     // a dropped worker does no local work; its retained
                     // rows go stale but nothing reads them
+                    continue;
+                }
+                if self.resilience.on && !self.resilience.plans[m].scheduled {
+                    // reduced cadence: no local work; the worker's batch
+                    // stream holds position until its next selection
                     continue;
                 }
                 b.next_batch_into(self.rows[m].get_or_insert_with(Vec::new));
@@ -1001,6 +1171,7 @@ impl Trainer {
             seed: self.cfg.seed,
             iter: k,
             faults: &self.scenario.faults,
+            plans: &self.resilience.plans,
         };
 
         // 2+3. local + wire phases, scheduled per `cfg.wire_mode` (the
@@ -1067,6 +1238,15 @@ impl Trainer {
                         // leave edge, so the lazy aggregate never wedges
                         continue;
                     }
+                    if self.resilience.on && !self.resilience.plans[m].scheduled {
+                        // reduced cadence: no loss/gradient/wire seat —
+                        // the stale mirror carries the worker (a forced
+                        // lazy skip, LASG-style) — but its silence clock
+                        // still ticks, so criterion (7b)'s t̄ bound
+                        // forces a refresh at the next scheduled round
+                        self.nodes[m].clock += 1;
+                        continue;
+                    }
                     if let Some(e) = self.locals[m].err.take() {
                         return Err(e);
                     }
@@ -1082,6 +1262,13 @@ impl Trainer {
                             // its mirror contribution reused as-is under
                             // the lazy-criterion semantics
                             decision.upload = false;
+                        }
+                        if self.resilience.on && self.locals[m].wanted_upload {
+                            // the retry ladder's superseded frames +
+                            // backoff bill here, before the round's final
+                            // verdict, so sync and async accounting fold
+                            // the identical per-worker event sequence
+                            self.bill_retry_ladder(m, k);
                         }
                         if decision.upload {
                             if let Some(kind) = self.scenario.corrupt(m) {
@@ -1144,14 +1331,37 @@ impl Trainer {
                     // ride at the tail of the claim order (their results
                     // are not consumed until their landing round).
                     let bound = self.cfg.staleness_bound;
+                    let slack = self.cfg.resilience.staleness_slack;
                     self.wire.order.clear();
                     for m in 0..m_all {
-                        let lag = self.net.latency.round_lag(
+                        // resilience: a demoted worker gets per-worker
+                        // staleness slack on top of the fleet-wide bound
+                        // (its uploads may ride the wire a little longer
+                        // instead of missing); the ring depth already
+                        // accounts for the widened window
+                        let bm = if self.resilience.on
+                            && slack > 0
+                            && self.resilience.health[m].phase == HealthPhase::Reduced
+                        {
+                            bound + slack
+                        } else {
+                            bound
+                        };
+                        let mut lag = self.net.latency.round_lag(
                             self.cfg.seed,
                             m as u64,
                             k as u64,
-                            bound,
+                            bm,
                         );
+                        if self.resilience.on
+                            && self.resilience.plans[m].quorum_late
+                            && bm > 0
+                        {
+                            // quorum: the late upload rides the
+                            // cross-round landing machinery instead of
+                            // holding this round open
+                            lag = lag.max(1);
+                        }
                         let deadline = cross_deadline(self.cross.next_deadline[m], k, lag);
                         self.cross.next_deadline[m] = deadline;
                         self.cross.lags[m] = deadline - k;
@@ -1374,6 +1584,13 @@ impl Trainer {
                         // out of the fleet: no loss/gradient/wire seat
                         continue;
                     }
+                    if self.resilience.on && !self.resilience.plans[m].scheduled {
+                        // reduced cadence: no loss/gradient/wire seat —
+                        // a forced lazy skip whose silence clock still
+                        // ticks (see the sync arm's notes)
+                        self.nodes[m].clock += 1;
+                        continue;
+                    }
                     if let Some(e) = self.locals[m].err.take() {
                         return Err(e);
                     }
@@ -1381,6 +1598,13 @@ impl Trainer {
                     tensor::axpy(1.0, &self.nodes[m].grad, &mut self.gsum);
                     let mut uploaded = false;
                     if lazy {
+                        if self.resilience.on && self.locals[m].wanted_upload {
+                            // retry ladder first, then the final verdict:
+                            // the identical per-worker event sequence the
+                            // sync arm folds, so accounting stays
+                            // bit-equal across wire modes
+                            self.bill_retry_ladder(m, k);
+                        }
                         let decision = self.locals[m]
                             .decision
                             .expect("lazy algorithms always produce a decision");
@@ -1432,6 +1656,40 @@ impl Trainer {
                 if let Some(d) = self.locals[m].decision {
                     self.schedule
                         .observe(&mut self.bit_states[m], d.lhs, d.rhs, d.upload);
+                }
+            }
+        }
+
+        // 3c. fold this round's outcomes into the per-worker health
+        // records — on the coordinator in worker index order, like the
+        // bit-schedule fold, so next round's cadence verdicts stay a
+        // pure function of (seed, config) under every wire mode and
+        // thread/shard count.  A round only counts against (or for) a
+        // worker when it was scheduled and in the fleet; an effective
+        // failure is a wanted upload whose final post-retry verdict was
+        // still missed or corrupt.
+        if self.resilience.on {
+            for m in 0..m_all {
+                if self.scenario.dropped(m) || !self.resilience.plans[m].scheduled {
+                    continue;
+                }
+                let wanted = self.locals[m].wanted_upload;
+                let corrupt = wanted && self.scenario.corrupt(m).is_some();
+                let failed = wanted && (self.scenario.missed(m) || corrupt);
+                let plan = self.resilience.plans[m];
+                let demoted = observe_round(
+                    &mut self.resilience.health[m],
+                    &self.cfg.resilience,
+                    k,
+                    plan.orig_mult,
+                    failed,
+                    corrupt,
+                );
+                if demoted {
+                    self.resilience.demotions_total += 1;
+                    crate::log_info!(
+                        "resilience: worker {m} demoted to reduced cadence at round {k}"
+                    );
                 }
             }
         }
@@ -1586,6 +1844,32 @@ impl Trainer {
                 last_width: self.down.states.iter().map(|s| s.last_width).collect(),
             }
         });
+        // resilience: the health records drive the cadence schedule, so
+        // they are algorithm state exactly like the bit-schedule fold —
+        // persist them so a resume replays the same scheduling decisions
+        // (checkpoint v6).  Empty-resilience runs write no section, as
+        // before.  The demotion/retry counters are accounting and
+        // restart at zero on resume, like the network counters.
+        let resilience = self.resilience.on.then(|| {
+            crate::coordinator::checkpoint::ResilienceCheckpoint {
+                lat_ema: self.resilience.health.iter().map(|h| h.lat_ema).collect(),
+                miss_streak: self
+                    .resilience
+                    .health
+                    .iter()
+                    .map(|h| h.miss_streak as u64)
+                    .collect(),
+                corrupt_total: self.resilience.health.iter().map(|h| h.corrupt_total).collect(),
+                phase: self.resilience.health.iter().map(|h| h.phase.code()).collect(),
+                demoted_round: self.resilience.health.iter().map(|h| h.demoted_round).collect(),
+                clean_streak: self
+                    .resilience
+                    .health
+                    .iter()
+                    .map(|h| h.clean_streak as u64)
+                    .collect(),
+            }
+        });
         let ck = crate::coordinator::Checkpoint {
             iter: self.k as u64,
             wire: Some((self.cfg.wire_mode, self.cfg.staleness_bound as u64)),
@@ -1598,6 +1882,7 @@ impl Trainer {
             cross,
             bits,
             down,
+            resilience,
         };
         ck.write_to(path)
     }
@@ -1753,7 +2038,8 @@ impl Trainer {
             for pc in &cs.pending {
                 let (m, origin, deadline) =
                     (pc.worker as usize, pc.origin as usize, pc.deadline as usize);
-                if deadline.saturating_sub(origin) > self.cfg.staleness_bound
+                if deadline.saturating_sub(origin)
+                    > self.cfg.staleness_bound + self.cfg.resilience.staleness_slack
                     || deadline < self.k
                 {
                     return Err(Error::Config(
@@ -1781,6 +2067,38 @@ impl Trainer {
                 if let Some(spec) = &self.scenario.specs[m] {
                     self.scenario.active[m] = !spec.dropped(self.k - 1);
                 }
+            }
+        }
+        // resilience runtime: the health records ARE algorithm state —
+        // they drive the cadence schedule — so v6 files restore them
+        // bit-exactly; older files (and empty-resilience runs) start
+        // from fresh inert records.  The demotion/retry counters restart
+        // at zero, like the network counters.
+        self.resilience = ResilienceRt::new(&self.cfg, self.nodes.len());
+        if let Some(rc) = &ck.resilience {
+            if !self.resilience.on {
+                return Err(Error::Config(
+                    "checkpoint has resilience health state but no [resilience] section is configured"
+                        .into(),
+                ));
+            }
+            if rc.lat_ema.len() != self.n_workers() {
+                return Err(Error::Config(
+                    "checkpoint resilience worker count mismatch".into(),
+                ));
+            }
+            for (m, h) in self.resilience.health.iter_mut().enumerate() {
+                let phase = HealthPhase::from_code(rc.phase[m]).ok_or_else(|| {
+                    Error::Config("checkpoint resilience phase code out of range".into())
+                })?;
+                *h = WorkerHealth {
+                    lat_ema: rc.lat_ema[m],
+                    miss_streak: rc.miss_streak[m].min(u32::MAX as u64) as u32,
+                    corrupt_total: rc.corrupt_total[m],
+                    phase,
+                    demoted_round: rc.demoted_round[m],
+                    clean_streak: rc.clean_streak[m].min(u32::MAX as u64) as u32,
+                };
             }
         }
         Ok(())
@@ -1850,6 +2168,28 @@ impl Trainer {
         &self.nodes[m].q_prev
     }
 
+    /// Resilience observability: lifetime `(demotions to reduced
+    /// cadence, retry attempts, quorum straggle clamps)`.  All stay 0
+    /// with an empty `[resilience]` section.
+    pub fn resilience_stats(&self) -> (u64, u64, u64) {
+        (
+            self.resilience.demotions_total,
+            self.resilience.retries_total,
+            self.resilience.quorum_clamped_total,
+        )
+    }
+
+    /// Test hook: worker `m`'s health record.
+    pub fn worker_health(&self, m: usize) -> &WorkerHealth {
+        &self.resilience.health[m]
+    }
+
+    /// Test hook: this round's per-worker resilience plans (the most
+    /// recent round's after a step).
+    pub fn round_plans(&self) -> &[RoundPlan] {
+        &self.resilience.plans
+    }
+
     /// Test hook: server-side mirrors.
     pub fn server_mirror(&self, m: usize) -> &[f32] {
         &self.server.q_mirror[m]
@@ -1877,11 +2217,18 @@ struct LocalCtx<'a> {
     /// (all-default — every check takes its false branch — when no
     /// scenario is configured)
     faults: &'a [RoundFault],
+    /// resilience runtime: this round's per-worker plans (all-default —
+    /// every worker scheduled — when no `[resilience]` is configured)
+    plans: &'a [RoundPlan],
 }
 
 impl LocalCtx<'_> {
     fn dropped(&self, m: usize) -> bool {
         self.faults[m].dropped
+    }
+
+    fn unscheduled(&self, m: usize) -> bool {
+        !self.plans[m].scheduled
     }
 
     fn missed(&self, m: usize) -> bool {
@@ -1911,6 +2258,10 @@ struct LocalSlot {
     /// corrupt-rejected at decode this round — the coordinator's
     /// accounting phase bills the frame and logs the rejection
     rejected: bool,
+    /// lazy path: the criterion's verdict BEFORE any fault mutated it —
+    /// the resilience layer bills retries and folds health off what the
+    /// worker *attempted*, not what survived the wire
+    wanted_upload: bool,
 }
 
 /// The embarrassingly parallel half of one iteration for worker `m`:
@@ -1932,10 +2283,17 @@ fn local_phase(
     slot.payload = None;
     slot.err = None;
     slot.rejected = false;
+    slot.wanted_upload = false;
     if ctx.dropped(m) {
         // scenario engine: the worker is out of the fleet this round —
         // no gradient, no decision, no payload; the coordinator skips
         // its seat in every fold
+        return;
+    }
+    if ctx.unscheduled(m) {
+        // resilience: reduced cadence — no local work this round; the
+        // worker's stale mirror serves in its place (LASG-style skip)
+        // and the coordinator ticks its silence clock at its seat
         return;
     }
     // evaluate into the node-retained gradient buffer (taken out for the
@@ -1957,13 +2315,15 @@ fn local_phase(
     slot.loss = loss;
     match ctx.algo {
         Algo::Gd | Algo::Qgd | Algo::Lag | Algo::Laq | Algo::Slaq => {
-            slot.decision = Some(node.lazy_decide(
+            let d = node.lazy_decide(
                 &grad,
                 ctx.rhs_common,
                 ctx.t_max,
                 ctx.force_upload,
                 ctx.widths[m],
-            ));
+            );
+            slot.wanted_upload = d.upload;
+            slot.decision = Some(d);
         }
         Algo::Sgd => slot.payload = Some(Payload::Dense(grad.clone())),
         Algo::Qsgd => {

@@ -1,0 +1,382 @@
+//! The coordinator's self-healing layer: per-worker health tracking and
+//! the three resilience policies a `[resilience]` config section
+//! composes on top of the scenario engine.
+//!
+//! * **Reduced cadence** — a worker whose uploads keep failing (missed
+//!   deadlines, corrupt frames) is demoted: it is *selected* only every
+//!   `cadence`-th round, its stale quantized gradient carried by the
+//!   lazy aggregate in between (LASG-style worker selection — the lazy
+//!   recursion already treats a silent worker's mirror as first-class
+//!   state, so an unscheduled round is exactly a forced skip that costs
+//!   neither compute nor wire time).  The worker's silence clock keeps
+//!   ticking, so criterion (7b)'s `t̄` bound still forces a refresh at
+//!   the next scheduled round.
+//! * **Retry with capped exponential backoff** — a corrupt or missed
+//!   upload is re-requested up to `max_retries` times *within* the
+//!   round, each attempt redrawn from a dedicated retry stream, each
+//!   billed at its own wire cost plus
+//!   `min(backoff_base · 2^(attempt−1), backoff_cap)` seconds of
+//!   backoff, before degrading to the ordinary lazy skip path.
+//! * **Quorum rounds** — once a `quorum` fraction of the scheduled
+//!   workers has landed, the round stops waiting: stragglers behind the
+//!   quorum no longer charge their full straggle excess into the
+//!   simulated clock (their latency multiplier is clamped to the
+//!   quorum boundary), and under `wire_mode = async-cross` their
+//!   uploads ride the existing cross-round landing machinery instead.
+//!
+//! Everything here is a **pure function of (seed, config)**: the health
+//! state is a deterministic fold of per-round outcomes on the
+//! coordinator in worker index order, retries redraw their outcomes
+//! from counter-based streams, and no decision reads thread timing.
+//! The health state machine per worker:
+//!
+//! ```text
+//!              (effective upload failure)        (miss_streak ≥ threshold)
+//!   Healthy ───────────────────────────▶ Probation ──────────────────▶ Reduced
+//!      ▲                                     │                            │
+//!      └──────────(clean round)──────────────┘                            │
+//!      └────────(restore_rounds consecutive clean scheduled rounds)───────┘
+//! ```
+//!
+//! The empty `[resilience]` section keeps the runtime off: no plan is
+//! consulted, no retry stream is drawn, no float op runs — which is the
+//! bit-identity contract `rust/tests/resilience.rs` pins.
+
+use crate::config::{ResilienceCfg, RunCfg};
+
+/// EMA weight for folding a round's observed latency multiplier into
+/// [`WorkerHealth::lat_ema`] (same freshness as the bit schedule's
+/// criterion-ratio EMA).
+pub const LAT_EMA_NEW: f64 = 0.25;
+
+/// Dedicated seed-XOR for the retry redraw streams ("retry" in ASCII),
+/// mixed per attempt — retries never perturb the round's primary fault
+/// draws or any other RNG consumer.
+pub const RETRY_STREAM: u64 = 0x72_6574_7279;
+
+/// The seed the `attempt`-th retry (1-based) redraws its straggle and
+/// corruption outcomes under: a per-attempt perturbation of the run
+/// seed, so every attempt is its own counter-based pure function of
+/// (seed, worker, round, attempt).
+pub fn retry_seed(seed: u64, attempt: u32) -> u64 {
+    seed ^ RETRY_STREAM ^ (attempt as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Where a worker sits in the health state machine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HealthPhase {
+    /// full cadence, no recent failures
+    Healthy,
+    /// failing, but not yet past `miss_threshold` — still scheduled
+    /// every round
+    Probation,
+    /// demoted to reduced cadence: selected every `cadence`-th round
+    /// counted from `demoted_round`
+    Reduced,
+}
+
+impl HealthPhase {
+    /// Stable on-disk code (checkpoint v6).
+    pub fn code(self) -> u8 {
+        match self {
+            HealthPhase::Healthy => 0,
+            HealthPhase::Probation => 1,
+            HealthPhase::Reduced => 2,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<Self> {
+        Some(match c {
+            0 => HealthPhase::Healthy,
+            1 => HealthPhase::Probation,
+            2 => HealthPhase::Reduced,
+            _ => return None,
+        })
+    }
+}
+
+/// One worker's health record — the per-worker state the resilience
+/// policies fold, on the coordinator in index order, once per round
+/// (persisted in v6 checkpoints).  `Default` is the inert
+/// fresh-worker state.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WorkerHealth {
+    /// EMA of the observed per-round latency multiplier (1.0 = nominal)
+    pub lat_ema: f64,
+    /// consecutive effective upload failures (missed deadline or
+    /// corrupt frame on a round the worker wanted to upload)
+    pub miss_streak: u32,
+    /// lifetime corrupt frames attributed to this worker
+    pub corrupt_total: u64,
+    pub phase: HealthPhase,
+    /// round the worker was demoted at — the reduced cadence counts
+    /// from here, so the schedule is a pure function of the fold state
+    pub demoted_round: u64,
+    /// consecutive clean scheduled rounds while demoted (restoration
+    /// progress)
+    pub clean_streak: u32,
+}
+
+impl Default for WorkerHealth {
+    fn default() -> Self {
+        Self {
+            lat_ema: 1.0,
+            miss_streak: 0,
+            corrupt_total: 0,
+            phase: HealthPhase::Healthy,
+            demoted_round: 0,
+            clean_streak: 0,
+        }
+    }
+}
+
+/// Is worker health `h` selected in round `k` under `cadence`?
+/// Full-cadence phases are always selected; a demoted worker only on
+/// the rounds `demoted_round + i·cadence`.  (Public for the property
+/// tests in `rust/tests/prop_coordinator.rs`.)
+pub fn cadence_scheduled(h: &WorkerHealth, cadence: usize, k: usize) -> bool {
+    if cadence == 0 || h.phase != HealthPhase::Reduced {
+        return true;
+    }
+    (k as u64).wrapping_sub(h.demoted_round) % cadence as u64 == 0
+}
+
+/// Backoff charged into the simulated clock before retry `attempt`
+/// (1-based): `min(backoff_base · 2^(attempt−1), backoff_cap)` seconds.
+/// (Public for the property tests — the billing must be *exact* to this
+/// formula.)
+pub fn backoff_delay(cfg: &ResilienceCfg, attempt: u32) -> f64 {
+    debug_assert!(attempt >= 1, "retry attempts are 1-based");
+    (cfg.backoff_base * ((attempt - 1) as f64).exp2()).min(cfg.backoff_cap)
+}
+
+/// Fold one scheduled round's outcome for a worker into its health
+/// record — the deterministic state-machine transition (see the module
+/// diagram).  `mult` is the round's *original* straggle multiplier
+/// (pre-quorum-clamp), `failed` whether the round ended in an effective
+/// upload failure (the worker wanted to upload and the final post-retry
+/// verdict was still missed or corrupt), `corrupt` whether that failure
+/// was a corrupt frame.  Returns `true` when this transition demoted
+/// the worker.  (Public for the property tests.)
+pub fn observe_round(
+    h: &mut WorkerHealth,
+    cfg: &ResilienceCfg,
+    k: usize,
+    mult: f64,
+    failed: bool,
+    corrupt: bool,
+) -> bool {
+    h.lat_ema = (1.0 - LAT_EMA_NEW) * h.lat_ema + LAT_EMA_NEW * mult;
+    if corrupt {
+        h.corrupt_total += 1;
+    }
+    if failed {
+        h.miss_streak = h.miss_streak.saturating_add(1);
+        h.clean_streak = 0;
+        if h.phase != HealthPhase::Reduced {
+            if cfg.cadence > 0 && h.miss_streak >= cfg.miss_threshold {
+                h.phase = HealthPhase::Reduced;
+                h.demoted_round = k as u64;
+                return true;
+            }
+            h.phase = HealthPhase::Probation;
+        }
+        return false;
+    }
+    match h.phase {
+        HealthPhase::Healthy | HealthPhase::Probation => {
+            h.miss_streak = 0;
+            h.phase = HealthPhase::Healthy;
+        }
+        HealthPhase::Reduced => {
+            h.clean_streak = h.clean_streak.saturating_add(1);
+            if h.clean_streak >= cfg.restore_rounds {
+                *h = WorkerHealth { lat_ema: h.lat_ema, corrupt_total: h.corrupt_total, ..WorkerHealth::default() };
+            }
+        }
+    }
+    false
+}
+
+/// One worker's resilience verdict for the current round, resolved on
+/// the coordinator in phase 0b ([`crate::algo::Trainer`]'s
+/// `resilience_begin_round`) so every consumer — the local fan-out, the
+/// wire seats, the accounting folds — sees the same plan under every
+/// wire mode and thread/shard count.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundPlan {
+    /// cadence verdict: an unscheduled worker does no local work and
+    /// takes no wire seat this round (its silence clock still ticks)
+    pub scheduled: bool,
+    /// retry attempts actually made this round
+    pub retries_used: u32,
+    /// corrupt frames superseded by a retry — each crossed the wire and
+    /// is billed (frame + rejection) at this worker's wire seat, on top
+    /// of whatever the round's *final* verdict bills through the
+    /// ordinary path
+    pub extra_rejected_frames: u32,
+    /// total backoff wait to charge into `sim_time` at this worker's
+    /// wire seat: `Σ_{i=1..retries_used} backoff_delay(i)`
+    pub backoff_time: f64,
+    /// quorum verdict: this worker landed behind the round's quorum
+    /// (its straggle excess is clamped; under async-cross its upload is
+    /// nudged onto the cross-round path)
+    pub quorum_late: bool,
+    /// the round's original straggle multiplier, before retries or the
+    /// quorum clamp rewrote the fault record — what the health EMA
+    /// observes
+    pub orig_mult: f64,
+}
+
+impl Default for RoundPlan {
+    fn default() -> Self {
+        Self {
+            scheduled: true,
+            retries_used: 0,
+            extra_rejected_frames: 0,
+            backoff_time: 0.0,
+            quorum_late: false,
+            orig_mult: 1.0,
+        }
+    }
+}
+
+/// Retained runtime of the resilience layer: per-worker health records,
+/// this round's plans, and the counters the contract tests read.  All
+/// buffers are sized once at assemble; with an empty `[resilience]`
+/// section `on` is false, no phase-0b pass runs, and every plan stays
+/// all-default forever — zero extra RNG draws or float ops on the hot
+/// path, which is the empty-section bit-identity contract.
+pub struct ResilienceRt {
+    pub on: bool,
+    /// per-worker health, folded in index order (persisted in v6
+    /// checkpoints)
+    pub health: Vec<WorkerHealth>,
+    /// this round's per-worker plan, refilled in place each round
+    pub plans: Vec<RoundPlan>,
+    /// retained scratch for the quorum selection (no steady-state
+    /// allocation)
+    pub quorum_scratch: Vec<(f64, usize)>,
+    /// lifetime demotions to reduced cadence (test hook)
+    pub demotions_total: u64,
+    /// lifetime retry attempts (test hook)
+    pub retries_total: u64,
+    /// lifetime quorum straggle clamps (test hook)
+    pub quorum_clamped_total: u64,
+}
+
+impl ResilienceRt {
+    pub fn new(cfg: &RunCfg, n_workers: usize) -> Self {
+        Self {
+            on: !cfg.resilience.is_empty(),
+            health: vec![WorkerHealth::default(); n_workers],
+            plans: vec![RoundPlan::default(); n_workers],
+            quorum_scratch: Vec::with_capacity(n_workers),
+            demotions_total: 0,
+            retries_total: 0,
+            quorum_clamped_total: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ResilienceCfg;
+
+    fn cfg() -> ResilienceCfg {
+        ResilienceCfg {
+            cadence: 4,
+            miss_threshold: 2,
+            restore_rounds: 3,
+            max_retries: 2,
+            backoff_base: 0.01,
+            backoff_cap: 0.03,
+            ..ResilienceCfg::default()
+        }
+    }
+
+    #[test]
+    fn backoff_doubles_then_caps() {
+        let c = cfg();
+        assert_eq!(backoff_delay(&c, 1), 0.01);
+        assert_eq!(backoff_delay(&c, 2), 0.02);
+        assert_eq!(backoff_delay(&c, 3), 0.03); // 0.04 capped
+        assert_eq!(backoff_delay(&c, 10), 0.03);
+    }
+
+    #[test]
+    fn health_machine_demotes_and_restores() {
+        let c = cfg();
+        let mut h = WorkerHealth::default();
+        // one failure: probation, not yet demoted
+        assert!(!observe_round(&mut h, &c, 0, 3.0, true, false));
+        assert_eq!(h.phase, HealthPhase::Probation);
+        assert_eq!(h.miss_streak, 1);
+        // a clean round resets probation back to healthy
+        assert!(!observe_round(&mut h, &c, 1, 1.0, false, false));
+        assert_eq!(h.phase, HealthPhase::Healthy);
+        assert_eq!(h.miss_streak, 0);
+        // threshold consecutive failures demote
+        assert!(!observe_round(&mut h, &c, 2, 3.0, true, true));
+        assert!(observe_round(&mut h, &c, 3, 3.0, true, false));
+        assert_eq!(h.phase, HealthPhase::Reduced);
+        assert_eq!(h.demoted_round, 3);
+        assert_eq!(h.corrupt_total, 1);
+        // the reduced cadence selects every 4th round from the demotion
+        assert!(!cadence_scheduled(&h, c.cadence, 4));
+        assert!(!cadence_scheduled(&h, c.cadence, 6));
+        assert!(cadence_scheduled(&h, c.cadence, 7));
+        assert!(cadence_scheduled(&h, c.cadence, 11));
+        // restore_rounds clean scheduled rounds restore full cadence
+        assert!(!observe_round(&mut h, &c, 7, 1.0, false, false));
+        assert!(!observe_round(&mut h, &c, 11, 1.0, false, false));
+        assert_eq!(h.phase, HealthPhase::Reduced);
+        assert!(!observe_round(&mut h, &c, 15, 1.0, false, false));
+        assert_eq!(h.phase, HealthPhase::Healthy);
+        assert_eq!(h.miss_streak, 0);
+        assert_eq!(h.clean_streak, 0);
+        // lifetime counters survive restoration
+        assert_eq!(h.corrupt_total, 1);
+        // a failure while demoted resets restoration progress
+        let mut h2 = WorkerHealth {
+            phase: HealthPhase::Reduced,
+            clean_streak: 2,
+            miss_streak: 2,
+            ..WorkerHealth::default()
+        };
+        assert!(!observe_round(&mut h2, &c, 8, 5.0, true, false));
+        assert_eq!(h2.phase, HealthPhase::Reduced);
+        assert_eq!(h2.clean_streak, 0);
+        assert_eq!(h2.miss_streak, 3);
+    }
+
+    #[test]
+    fn healthy_workers_are_always_scheduled() {
+        let h = WorkerHealth::default();
+        for k in 0..50 {
+            assert!(cadence_scheduled(&h, 4, k));
+            assert!(cadence_scheduled(&h, 0, k));
+        }
+        let p = WorkerHealth { phase: HealthPhase::Probation, ..WorkerHealth::default() };
+        for k in 0..50 {
+            assert!(cadence_scheduled(&p, 4, k));
+        }
+    }
+
+    #[test]
+    fn phase_codes_roundtrip() {
+        for p in [HealthPhase::Healthy, HealthPhase::Probation, HealthPhase::Reduced] {
+            assert_eq!(HealthPhase::from_code(p.code()), Some(p));
+        }
+        assert_eq!(HealthPhase::from_code(3), None);
+    }
+
+    #[test]
+    fn retry_seeds_are_distinct_per_attempt() {
+        let s = 42;
+        assert_ne!(retry_seed(s, 1), retry_seed(s, 2));
+        assert_ne!(retry_seed(s, 1), s);
+        assert_eq!(retry_seed(s, 3), retry_seed(s, 3));
+    }
+}

@@ -546,6 +546,153 @@ impl WorkerFaults {
     }
 }
 
+/// The coordinator's self-healing layer: a `[resilience]` TOML table
+/// driving the [`crate::algo::resilience`] runtime.  Three composable
+/// policies — reduced cadence for chronic stragglers, in-round retry
+/// with capped exponential backoff, and quorum rounds — all pure
+/// functions of (seed, config).  The **empty** section (no table, or a
+/// table with every policy off) is the contract baseline: the trainer
+/// runs bit-identically to a resilience-less build, exactly like the
+/// empty `[scenario]` (`rust/tests/resilience.rs` pins it).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResilienceCfg {
+    /// reduced-cadence scheduling: a demoted worker is selected only
+    /// every `cadence`-th round, its stale quantized gradient carried by
+    /// the lazy aggregate in between (LASG-style).  0 = policy off;
+    /// otherwise must be ≥ 2.
+    pub cadence: usize,
+    /// consecutive effective upload failures (missed deadline or
+    /// corrupt frame) that demote a worker to reduced cadence (≥ 1)
+    pub miss_threshold: u32,
+    /// consecutive clean scheduled rounds a demoted worker needs before
+    /// it is restored to the full cadence (≥ 1)
+    pub restore_rounds: u32,
+    /// in-round retry: a corrupt or missed upload is re-requested up to
+    /// this many times before degrading to the lazy skip path.  Each
+    /// retry is billed at its own wire cost plus backoff.  0 = off.
+    pub max_retries: u32,
+    /// backoff before retry attempt r (1-based):
+    /// `min(backoff_base · 2^(r−1), backoff_cap)` seconds into
+    /// `sim_time`.  Finite, ≥ 0.
+    pub backoff_base: f64,
+    /// cap on a single backoff wait, seconds (finite, ≥ `backoff_base`)
+    pub backoff_cap: f64,
+    /// quorum rounds: the round commits once this fraction of the
+    /// scheduled workers has landed by the deadline; the stragglers
+    /// behind the quorum stop charging their full straggle excess into
+    /// the simulated clock (the round no longer waits on them).
+    /// 0 = policy off; otherwise in (0, 1].
+    pub quorum: f64,
+    /// per-worker staleness slack: demoted workers may land uploads up
+    /// to `staleness_bound + staleness_slack` rounds late under
+    /// `wire_mode = async-cross` (healthy workers keep the fleet-wide
+    /// bound).  0 = off.
+    pub staleness_slack: usize,
+}
+
+impl Default for ResilienceCfg {
+    fn default() -> Self {
+        Self {
+            cadence: 0,
+            miss_threshold: 3,
+            restore_rounds: 4,
+            max_retries: 0,
+            backoff_base: 0.0,
+            backoff_cap: 0.0,
+            quorum: 0.0,
+            staleness_slack: 0,
+        }
+    }
+}
+
+impl ResilienceCfg {
+    /// Every policy off — the trainer must not even branch on
+    /// resilience state (bit-identity to the resilience-less build).
+    pub fn is_empty(&self) -> bool {
+        self.cadence == 0
+            && self.max_retries == 0
+            && self.quorum == 0.0
+            && self.staleness_slack == 0
+    }
+
+    pub fn validate(&self, algo: Algo, wire_mode: WireMode, staleness_bound: usize) -> Result<()> {
+        if self.is_empty() {
+            return Ok(());
+        }
+        if !algo.is_lazy() {
+            return Err(Error::Config(format!(
+                "[resilience] drives the lazy uplink (stale-gradient reuse, retryable \
+                 frames); {} is a fresh-sum algorithm",
+                algo.name()
+            )));
+        }
+        if self.cadence == 1 {
+            return Err(Error::Config(
+                "resilience.cadence = 1 is every round (use 0 to disable, or >= 2)".into(),
+            ));
+        }
+        if self.miss_threshold == 0 {
+            return Err(Error::Config("resilience.miss_threshold must be >= 1".into()));
+        }
+        if self.restore_rounds == 0 {
+            return Err(Error::Config("resilience.restore_rounds must be >= 1".into()));
+        }
+        if !self.backoff_base.is_finite() || self.backoff_base < 0.0 {
+            return Err(Error::Config(format!(
+                "resilience.backoff_base = {} must be finite and non-negative seconds",
+                self.backoff_base
+            )));
+        }
+        if !self.backoff_cap.is_finite() || self.backoff_cap < self.backoff_base {
+            return Err(Error::Config(format!(
+                "resilience.backoff_cap = {} must be finite and >= backoff_base = {}",
+                self.backoff_cap, self.backoff_base
+            )));
+        }
+        if self.quorum != 0.0
+            && (!self.quorum.is_finite() || self.quorum <= 0.0 || self.quorum > 1.0)
+        {
+            return Err(Error::Config(format!(
+                "resilience.quorum = {} must lie in (0, 1] (0 = off)",
+                self.quorum
+            )));
+        }
+        if self.staleness_slack > 0 && wire_mode != WireMode::AsyncCross {
+            return Err(Error::Config(
+                "resilience.staleness_slack extends the cross-round landing window and \
+                 needs wire_mode = async-cross"
+                    .into(),
+            ));
+        }
+        if wire_mode == WireMode::AsyncCross && staleness_bound + self.staleness_slack > 64 {
+            // the in-flight ring is sized for bound + slack rounds; the
+            // same sanity cap as the fleet-wide staleness_bound check
+            return Err(Error::Config(format!(
+                "staleness_bound = {} + resilience.staleness_slack = {} exceeds the \
+                 64-round in-flight cap",
+                staleness_bound, self.staleness_slack
+            )));
+        }
+        Ok(())
+    }
+
+    /// Serialized form (recorded beside run outputs); the empty section
+    /// writes nothing, so a fault-free run's recorded config stays
+    /// byte-identical to the pre-resilience layout.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("cadence", Json::Num(self.cadence as f64)),
+            ("miss_threshold", Json::Num(self.miss_threshold as f64)),
+            ("restore_rounds", Json::Num(self.restore_rounds as f64)),
+            ("max_retries", Json::Num(self.max_retries as f64)),
+            ("backoff_base", Json::Num(self.backoff_base)),
+            ("backoff_cap", Json::Num(self.backoff_cap)),
+            ("quorum", Json::Num(self.quorum)),
+            ("staleness_slack", Json::Num(self.staleness_slack as f64)),
+        ])
+    }
+}
+
 /// Default worker fan-out: the `LAQ_THREADS` environment variable when
 /// set (this is how `rust/ci.sh` runs the whole suite over both the
 /// sequential and the parallel code path), else 1 (sequential).
@@ -690,6 +837,10 @@ pub struct RunCfg {
     /// in which case the trainer is bit-identical to a scenario-less
     /// build
     pub scenario: ScenarioCfg,
+    /// coordinator self-healing policies ([`ResilienceCfg`]); empty by
+    /// default, in which case the trainer is bit-identical to a
+    /// resilience-less build
+    pub resilience: ResilienceCfg,
 }
 
 impl RunCfg {
@@ -724,6 +875,7 @@ impl RunCfg {
             t_fixed: 1e-3,
             t_per_bit: 1e-9,
             scenario: ScenarioCfg::default(),
+            resilience: ResilienceCfg::default(),
         }
     }
 
@@ -806,6 +958,8 @@ impl RunCfg {
             )));
         }
         self.scenario.validate(self.workers, self.algo)?;
+        self.resilience
+            .validate(self.algo, self.wire_mode, self.staleness_bound)?;
         self.criterion.validate()
     }
 
@@ -1046,6 +1200,62 @@ impl RunCfg {
                 self.scenario.workers = workers;
             }
         }
+        let rz = j.get("resilience");
+        if !rz.is_null() {
+            // strict like every other knob family: a present-but-wrong
+            // -typed value must error, not silently leave a policy off
+            let at = |key: &str, what: &str| {
+                Error::Config(format!("resilience.{key} must be {what}"))
+            };
+            let cd = rz.get("cadence");
+            if !cd.is_null() {
+                self.resilience.cadence = cd
+                    .as_usize()
+                    .ok_or_else(|| at("cadence", "a non-negative round count (0 = off)"))?;
+            }
+            let int_key = |v: &Json, key: &str| -> Result<Option<u32>> {
+                if v.is_null() {
+                    return Ok(None);
+                }
+                let n = v
+                    .as_usize()
+                    .ok_or_else(|| at(key, "a non-negative integer"))?;
+                if n > u32::MAX as usize {
+                    return Err(Error::Config(format!("resilience.{key} = {n} too large")));
+                }
+                Ok(Some(n as u32))
+            };
+            if let Some(v) = int_key(rz.get("miss_threshold"), "miss_threshold")? {
+                self.resilience.miss_threshold = v;
+            }
+            if let Some(v) = int_key(rz.get("restore_rounds"), "restore_rounds")? {
+                self.resilience.restore_rounds = v;
+            }
+            if let Some(v) = int_key(rz.get("max_retries"), "max_retries")? {
+                self.resilience.max_retries = v;
+            }
+            let bb = rz.get("backoff_base");
+            if !bb.is_null() {
+                self.resilience.backoff_base =
+                    bb.as_f64().ok_or_else(|| at("backoff_base", "a number (seconds)"))?;
+            }
+            let bc = rz.get("backoff_cap");
+            if !bc.is_null() {
+                self.resilience.backoff_cap =
+                    bc.as_f64().ok_or_else(|| at("backoff_cap", "a number (seconds)"))?;
+            }
+            let q = rz.get("quorum");
+            if !q.is_null() {
+                self.resilience.quorum =
+                    q.as_f64().ok_or_else(|| at("quorum", "a fraction in (0, 1] (0 = off)"))?;
+            }
+            let ss = rz.get("staleness_slack");
+            if !ss.is_null() {
+                self.resilience.staleness_slack = ss
+                    .as_usize()
+                    .ok_or_else(|| at("staleness_slack", "a non-negative round count"))?;
+            }
+        }
         self.validate()
     }
 
@@ -1104,6 +1314,9 @@ impl RunCfg {
         ];
         if !self.scenario.is_empty() {
             doc.push(("scenario", self.scenario.to_json()));
+        }
+        if !self.resilience.is_empty() {
+            doc.push(("resilience", self.resilience.to_json()));
         }
         Json::obj(doc)
     }
@@ -1470,5 +1683,87 @@ mod tests {
         assert!(c.apply_json(&toml::parse(missing_idx).unwrap()).is_err());
         let wrong_typed = "\n[[scenario.worker]]\nworker = 0\ndeadline = \"soon\"\n";
         assert!(c.apply_json(&toml::parse(wrong_typed).unwrap()).is_err());
+    }
+
+    #[test]
+    fn resilience_parses_validates_and_roundtrips() {
+        let doc = "\n[resilience]\ncadence = 4\nmiss_threshold = 2\nrestore_rounds = 6\n\
+                   max_retries = 3\nbackoff_base = 0.002\nbackoff_cap = 0.01\nquorum = 0.75\n";
+        let mut c = RunCfg::paper_logreg(Algo::Laq);
+        c.apply_json(&toml::parse(doc).unwrap()).unwrap();
+        assert!(!c.resilience.is_empty());
+        assert_eq!(c.resilience.cadence, 4);
+        assert_eq!(c.resilience.miss_threshold, 2);
+        assert_eq!(c.resilience.restore_rounds, 6);
+        assert_eq!(c.resilience.max_retries, 3);
+        assert_eq!(c.resilience.backoff_base, 0.002);
+        assert_eq!(c.resilience.backoff_cap, 0.01);
+        assert_eq!(c.resilience.quorum, 0.75);
+        // roundtrip: to_json -> apply_json reproduces the section
+        let j = c.to_json();
+        let mut c2 = RunCfg::paper_logreg(Algo::Laq);
+        c2.apply_json(&j).unwrap();
+        assert_eq!(c2.resilience, c.resilience);
+        // the empty section serializes to nothing: a resilience-less
+        // run's recorded config stays byte-identical to the old layout
+        let plain = RunCfg::paper_logreg(Algo::Laq);
+        assert!(plain.resilience.is_empty());
+        assert!(plain.to_json().get("resilience").is_null());
+        // an explicitly-empty [resilience] table is still empty
+        let mut c3 = RunCfg::paper_logreg(Algo::Laq);
+        c3.apply_json(&toml::parse("\n[resilience]\n").unwrap()).unwrap();
+        assert!(c3.resilience.is_empty());
+    }
+
+    #[test]
+    fn resilience_validation_rejects_bad_specs() {
+        let check = |mutate: &dyn Fn(&mut ResilienceCfg)| {
+            let mut c = RunCfg::paper_logreg(Algo::Laq);
+            c.resilience.cadence = 4; // non-empty so validation engages
+            mutate(&mut c.resilience);
+            c.validate()
+        };
+        check(&|_| {}).unwrap();
+        assert!(check(&|r| r.cadence = 1).is_err()); // 1 = every round
+        assert!(check(&|r| r.miss_threshold = 0).is_err());
+        assert!(check(&|r| r.restore_rounds = 0).is_err());
+        assert!(check(&|r| r.backoff_base = -1e-3).is_err());
+        assert!(check(&|r| r.backoff_base = f64::NAN).is_err());
+        assert!(check(&|r| {
+            r.backoff_base = 0.01;
+            r.backoff_cap = 0.001 // cap below base
+        })
+        .is_err());
+        assert!(check(&|r| r.backoff_cap = f64::INFINITY).is_err());
+        assert!(check(&|r| r.quorum = 1.5).is_err());
+        assert!(check(&|r| r.quorum = -0.1).is_err());
+        assert!(check(&|r| r.quorum = f64::NAN).is_err());
+        // staleness slack needs the cross-round wire mode
+        assert!(check(&|r| r.staleness_slack = 2).is_err());
+        let mut c = RunCfg::paper_logreg(Algo::Laq);
+        c.wire_mode = WireMode::AsyncCross;
+        c.staleness_bound = 2;
+        c.resilience.cadence = 4;
+        c.resilience.staleness_slack = 2;
+        c.validate().unwrap();
+        // ... and bound + slack obeys the same 64-round in-flight cap
+        c.staleness_bound = 63;
+        assert!(c.validate().is_err());
+        // resilience drives the lazy uplink only
+        let mut c = RunCfg::paper_stochastic(Algo::Sgd, ModelKind::LogReg);
+        c.resilience.cadence = 4;
+        assert!(c.validate().is_err());
+        c.algo = Algo::Slaq;
+        c.validate().unwrap();
+        // wrong-typed values error like the CLI, not fall through
+        for doc in [
+            "\n[resilience]\ncadence = \"often\"\n",
+            "\n[resilience]\nmax_retries = 1.5\n",
+            "\n[resilience]\nbackoff_base = \"slow\"\n",
+            "\n[resilience]\nquorum = \"most\"\n",
+        ] {
+            let mut c = RunCfg::paper_logreg(Algo::Laq);
+            assert!(c.apply_json(&toml::parse(doc).unwrap()).is_err(), "{doc}");
+        }
     }
 }

@@ -50,7 +50,21 @@
 //! pre-v5 file resumes with a fresh downlink state (the next step then
 //! re-primes the mirror with one exact broadcast).
 //!
-//! Format: little-endian binary, magic `LAQCKPT5`, no external deps.
+//! A fourth exception: the **resilience health records** of a
+//! self-healing run (`[resilience]` non-empty).  The per-worker health
+//! state drives the reduced-cadence schedule — which workers are even
+//! *selected* each round — so it is part of the algorithm's arithmetic
+//! exactly like the bit-schedule fold; v6 checkpoints persist each
+//! worker's record (latency EMA, miss streak, corrupt count, phase,
+//! demotion round, restoration streak) and resume restores them
+//! bit-exactly.  Empty-resilience runs write no section.
+//!
+//! Saves are **atomic**: the bytes land in a sibling `.tmp` file which
+//! is flushed, fsynced, and only then renamed over the destination — a
+//! crash mid-save leaves at worst a torn temp beside an intact
+//! original, never a corrupt resume file.
+//!
+//! Format: little-endian binary, magic `LAQCKPT6`, no external deps.
 //! Version history (all older versions still load):
 //!
 //! | magic | adds | missing sections read back as |
@@ -59,7 +73,8 @@
 //! | `LAQCKPT2` | wire schedule (mode, staleness bound) | `cross: None` |
 //! | `LAQCKPT3` | cross-round in-flight uploads + deadline clamps | `bits: None` |
 //! | `LAQCKPT4` | adaptive bit-schedule state (kind, range, per-worker EMA) | `down: None` |
-//! | `LAQCKPT5` | quantized-downlink state (mirror, range, per-shard EMA) | — |
+//! | `LAQCKPT5` | quantized-downlink state (mirror, range, per-shard EMA) | `resilience: None` |
+//! | `LAQCKPT6` | resilience health records (per-worker EMA/streaks/phase) | — |
 
 use crate::comm::Payload;
 use crate::config::{BitScheduleKind, WireMode};
@@ -74,7 +89,8 @@ const MAGIC_V1: &[u8; 8] = b"LAQCKPT1";
 const MAGIC_V2: &[u8; 8] = b"LAQCKPT2";
 const MAGIC_V3: &[u8; 8] = b"LAQCKPT3";
 const MAGIC_V4: &[u8; 8] = b"LAQCKPT4";
-const MAGIC: &[u8; 8] = b"LAQCKPT5";
+const MAGIC_V5: &[u8; 8] = b"LAQCKPT5";
+const MAGIC: &[u8; 8] = b"LAQCKPT6";
 
 /// Everything needed to resume a run (independent of dataset/backend,
 /// which are reconstructed from the config).
@@ -103,6 +119,30 @@ pub struct Checkpoint {
     /// quantized-downlink state (`downlink = quantized` only); `None`
     /// when read from a v1–v4 file or written by exact-downlink runs
     pub down: Option<DownCheckpoint>,
+    /// resilience health records (`[resilience]` non-empty only); `None`
+    /// when read from a v1–v5 file or written by empty-resilience runs
+    pub resilience: Option<ResilienceCheckpoint>,
+}
+
+/// The self-healing half of a resilience run: each worker's health
+/// record, the deterministic fold state the reduced-cadence schedule
+/// reads — enough for a resume to replay the remaining scheduling
+/// decisions bit-for-bit.  All six arrays are per-worker (index =
+/// worker).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResilienceCheckpoint {
+    /// EMA of the observed per-round latency multiplier
+    pub lat_ema: Vec<f64>,
+    /// consecutive effective upload failures
+    pub miss_streak: Vec<u64>,
+    /// lifetime corrupt frames attributed to the worker
+    pub corrupt_total: Vec<u64>,
+    /// health phase code (0 = healthy, 1 = probation, 2 = reduced)
+    pub phase: Vec<u8>,
+    /// round the worker was demoted at (cadence counts from here)
+    pub demoted_round: Vec<u64>,
+    /// consecutive clean scheduled rounds while demoted
+    pub clean_streak: Vec<u64>,
 }
 
 /// The quantized-downlink half of a run: the mirrored θ both endpoints
@@ -191,6 +231,18 @@ fn r_u64(r: &mut impl Read) -> Result<u64> {
 fn r_width_bound(r: &mut impl Read) -> Result<u32> {
     let v = r_u64(r)?;
     crate::config::parse_width("checkpoint bit-width bound", v)
+}
+
+fn r_u64s(r: &mut impl Read, what: &str) -> Result<Vec<u64>> {
+    let n = r_u64(r)? as usize;
+    if n > (1 << 24) {
+        return Err(Error::Msg(format!("checkpoint: {what} array too large")));
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(r_u64(r)?);
+    }
+    Ok(out)
 }
 
 fn r_f64(r: &mut impl Read) -> Result<f64> {
@@ -307,9 +359,22 @@ fn r_payload(r: &mut impl Read) -> Result<Payload> {
 impl Checkpoint {
     pub fn write_to(&self, path: &std::path::Path) -> Result<()> {
         if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
         }
-        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        // Atomic save: the bytes land in a sibling temp file which is
+        // flushed, fsynced, and only then renamed over `path`.  A crash
+        // at any point leaves either the complete old file or the
+        // complete new one — never a torn resume file (a stray `.tmp`
+        // is harmless and overwritten by the next save).
+        let mut tmp_name = path
+            .file_name()
+            .map(|n| n.to_os_string())
+            .unwrap_or_else(|| std::ffi::OsString::from("checkpoint"));
+        tmp_name.push(".tmp");
+        let tmp = path.with_file_name(tmp_name);
+        let mut w = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
         w.write_all(MAGIC)?;
         w_u64(&mut w, self.iter)?;
         let (mode, staleness) = match self.wire {
@@ -401,6 +466,43 @@ impl Checkpoint {
                 }
             }
         }
+        // v6: resilience health section (presence flag, like the others)
+        match &self.resilience {
+            None => w_u64(&mut w, 0)?,
+            Some(rc) => {
+                w_u64(&mut w, 1)?;
+                w_u64(&mut w, rc.lat_ema.len() as u64)?;
+                for &v in &rc.lat_ema {
+                    w_f64(&mut w, v)?;
+                }
+                w_u64(&mut w, rc.miss_streak.len() as u64)?;
+                for &v in &rc.miss_streak {
+                    w_u64(&mut w, v)?;
+                }
+                w_u64(&mut w, rc.corrupt_total.len() as u64)?;
+                for &v in &rc.corrupt_total {
+                    w_u64(&mut w, v)?;
+                }
+                w_u64(&mut w, rc.phase.len() as u64)?;
+                for &v in &rc.phase {
+                    w_u64(&mut w, v as u64)?;
+                }
+                w_u64(&mut w, rc.demoted_round.len() as u64)?;
+                for &v in &rc.demoted_round {
+                    w_u64(&mut w, v)?;
+                }
+                w_u64(&mut w, rc.clean_streak.len() as u64)?;
+                for &v in &rc.clean_streak {
+                    w_u64(&mut w, v)?;
+                }
+            }
+        }
+        w.flush()?;
+        // the data must be durable BEFORE the rename makes it visible,
+        // or a power cut could publish an empty file under the real name
+        w.get_ref().sync_all()?;
+        drop(w);
+        std::fs::rename(&tmp, path)?;
         Ok(())
     }
 
@@ -416,8 +518,10 @@ impl Checkpoint {
             3
         } else if &magic == MAGIC_V4 {
             4
-        } else if &magic == MAGIC {
+        } else if &magic == MAGIC_V5 {
             5
+        } else if &magic == MAGIC {
+            6
         } else {
             return Err(Error::Msg(format!(
                 "{}: not a LAQ checkpoint (bad magic)",
@@ -571,6 +675,42 @@ impl Checkpoint {
             }
             Some(DownCheckpoint { bits_min, bits_max, primed, mirror, ratio_ema, last_width })
         };
+        let resilience = if version < 6 {
+            None
+        } else if r_u64(&mut r)? == 0 {
+            None
+        } else {
+            let lat_ema_n = r_u64(&mut r)? as usize;
+            if lat_ema_n > (1 << 24) {
+                return Err(Error::Msg("checkpoint: health array too large".into()));
+            }
+            let mut lat_ema = Vec::with_capacity(lat_ema_n);
+            for _ in 0..lat_ema_n {
+                lat_ema.push(r_f64(&mut r)?);
+            }
+            let miss_streak = r_u64s(&mut r, "miss streak")?;
+            let corrupt_total = r_u64s(&mut r, "corrupt count")?;
+            let phase_raw = r_u64s(&mut r, "health phase")?;
+            let mut phase = Vec::with_capacity(phase_raw.len());
+            for v in phase_raw {
+                if v > 2 {
+                    return Err(Error::Msg(format!(
+                        "checkpoint: unknown health phase code {v}"
+                    )));
+                }
+                phase.push(v as u8);
+            }
+            let demoted_round = r_u64s(&mut r, "demotion round")?;
+            let clean_streak = r_u64s(&mut r, "clean streak")?;
+            Some(ResilienceCheckpoint {
+                lat_ema,
+                miss_streak,
+                corrupt_total,
+                phase,
+                demoted_round,
+                clean_streak,
+            })
+        };
         let ck = Checkpoint {
             iter,
             wire,
@@ -583,6 +723,7 @@ impl Checkpoint {
             cross,
             bits,
             down,
+            resilience,
         };
         ck.validate()?;
         Ok(ck)
@@ -684,6 +825,34 @@ impl Checkpoint {
                 ));
             }
         }
+        if let Some(rc) = &self.resilience {
+            let n = rc.lat_ema.len();
+            if rc.miss_streak.len() != n
+                || rc.corrupt_total.len() != n
+                || rc.phase.len() != n
+                || rc.demoted_round.len() != n
+                || rc.clean_streak.len() != n
+            {
+                return Err(Error::Msg(
+                    "checkpoint: resilience array lengths inconsistent".into(),
+                ));
+            }
+            if n != m {
+                return Err(Error::Msg(
+                    "checkpoint: resilience worker count mismatch".into(),
+                ));
+            }
+            if rc.phase.iter().any(|&p| p > 2) {
+                return Err(Error::Msg(
+                    "checkpoint: resilience phase code out of range".into(),
+                ));
+            }
+            if rc.lat_ema.iter().any(|v| !v.is_finite() || *v < 0.0) {
+                return Err(Error::Msg(
+                    "checkpoint: resilience latency EMA not finite".into(),
+                ));
+            }
+        }
         Ok(())
     }
 }
@@ -705,6 +874,7 @@ mod tests {
             cross: None,
             bits: None,
             down: None,
+            resilience: None,
         }
     }
 
@@ -1118,5 +1288,126 @@ mod tests {
         let mut ck2 = sample();
         ck2.clocks.pop();
         assert!(ck2.validate().is_err());
+    }
+
+    fn sample_resilience() -> ResilienceCheckpoint {
+        ResilienceCheckpoint {
+            lat_ema: vec![1.25, 3.75],
+            miss_streak: vec![0, 4],
+            corrupt_total: vec![1, 0],
+            phase: vec![0, 2],
+            demoted_round: vec![0, 17],
+            clean_streak: vec![0, 2],
+        }
+    }
+
+    #[test]
+    fn resilience_checkpoint_roundtrips_exactly() {
+        let dir = std::env::temp_dir().join("laq_ckpt_test_res");
+        let path = dir.join("r.ckpt");
+        let mut ck = sample();
+        ck.resilience = Some(sample_resilience());
+        ck.write_to(&path).unwrap();
+        let back = Checkpoint::read_from(&path).unwrap();
+        assert_eq!(ck, back);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Serialize a checkpoint in the v5 layout (down section, no
+    /// resilience section) — the compat path must read it with
+    /// `resilience: None`.
+    #[test]
+    fn reads_v5_checkpoints_without_resilience_section() {
+        let dir = std::env::temp_dir().join("laq_ckpt_test_v5");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v5.ckpt");
+        let ck = sample();
+        {
+            let mut w = std::io::BufWriter::new(std::fs::File::create(&path).unwrap());
+            w.write_all(MAGIC_V5).unwrap();
+            w_u64(&mut w, ck.iter).unwrap();
+            w_u64(&mut w, 1).unwrap(); // async
+            w_u64(&mut w, 3).unwrap();
+            w_f32s(&mut w, &ck.theta).unwrap();
+            w_f32s(&mut w, &ck.agg).unwrap();
+            w_u64(&mut w, ck.mirrors.len() as u64).unwrap();
+            for m in &ck.mirrors {
+                w_f32s(&mut w, m).unwrap();
+            }
+            w_u64(&mut w, ck.clocks.len() as u64).unwrap();
+            for &c in &ck.clocks {
+                w_u64(&mut w, c).unwrap();
+            }
+            w_u64(&mut w, ck.eps_hat_sq.len() as u64).unwrap();
+            for &e in &ck.eps_hat_sq {
+                w_f64(&mut w, e).unwrap();
+            }
+            w_u64(&mut w, ck.history.len() as u64).unwrap();
+            for &h in &ck.history {
+                w_f64(&mut w, h).unwrap();
+            }
+            w_u64(&mut w, 0).unwrap(); // empty cross section
+            w_u64(&mut w, 0).unwrap(); // empty bits section
+            w_u64(&mut w, 0).unwrap(); // empty down section
+        }
+        let back = Checkpoint::read_from(&path).unwrap();
+        assert_eq!(back.resilience, None);
+        assert_eq!(back.down, None);
+        assert_eq!(back.wire, Some((WireMode::Async, 3)));
+        assert_eq!(back.theta, ck.theta);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn validate_catches_resilience_inconsistency() {
+        let rc = sample_resilience();
+        let mut ck = sample();
+        ck.resilience = Some(ResilienceCheckpoint { miss_streak: vec![0], ..rc.clone() });
+        assert!(ck.validate().is_err(), "ragged arrays accepted");
+        let mut ck = sample();
+        ck.resilience = Some(ResilienceCheckpoint {
+            lat_ema: vec![1.0],
+            miss_streak: vec![0],
+            corrupt_total: vec![0],
+            phase: vec![0],
+            demoted_round: vec![0],
+            clean_streak: vec![0],
+        });
+        assert!(ck.validate().is_err(), "worker count mismatch accepted");
+        let mut ck = sample();
+        ck.resilience = Some(ResilienceCheckpoint { phase: vec![0, 7], ..rc.clone() });
+        assert!(ck.validate().is_err(), "unknown phase code accepted");
+        let mut ck = sample();
+        ck.resilience = Some(ResilienceCheckpoint { lat_ema: vec![1.0, f64::NAN], ..rc });
+        assert!(ck.validate().is_err(), "NaN latency EMA accepted");
+    }
+
+    /// A crash mid-save must never destroy the previous checkpoint: the
+    /// save goes to a sibling `.tmp` and renames into place, so a
+    /// truncated temp sitting next to an intact original is harmless,
+    /// and a completed save leaves no temp behind.
+    #[test]
+    fn torn_write_leaves_original_checkpoint_loadable() {
+        let dir = std::env::temp_dir().join("laq_ckpt_test_torn");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("state.ckpt");
+        let tmp = dir.join("state.ckpt.tmp");
+        let ck = sample();
+        ck.write_to(&path).unwrap();
+        assert!(!tmp.exists(), "completed save left its temp file behind");
+
+        // simulate a crash mid-save: a truncated temp beside the original
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&tmp, &bytes[..bytes.len() / 3]).unwrap();
+        let back = Checkpoint::read_from(&path).unwrap();
+        assert_eq!(ck, back, "intact original corrupted by a torn temp");
+
+        // the next successful save replaces the stale temp and the original
+        let mut ck2 = sample();
+        ck2.iter = 43;
+        ck2.write_to(&path).unwrap();
+        assert!(!tmp.exists(), "save did not consume the temp file");
+        assert_eq!(Checkpoint::read_from(&path).unwrap().iter, 43);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -36,7 +36,7 @@ fn print_help() {
         "laq — Lazily Aggregated Quantized Gradients (NeurIPS 2019) reproduction\n\n\
          USAGE: laq <exp|train|list> [OPTIONS]\n\n\
          laq exp   --id <fig3|fig4|fig5|fig6|fig7|fig8|table2|table3|prop1> [--full] [--backend native|pjrt] [--out DIR] [--seed N]\n\
-         laq train --algo <gd|qgd|lag|laq|sgd|qsgd|ssgd|slaq|efsgd> [--model logreg|mlp] [--config FILE] [--iters N] [--alpha A] [--bits B] [--bit-schedule fixed|round-decay|innovation] [--bits-min L] [--bits-max H] [--downlink exact|quantized] [--down-bits-min L] [--down-bits-max H] [--threads T] [--server-shards S] [--wire-mode sync|async|async-cross] [--staleness-bound K] [--t-fixed S] [--t-per-bit S] [--backend native|pjrt]\n\
+         laq train --algo <gd|qgd|lag|laq|sgd|qsgd|ssgd|slaq|efsgd> [--model logreg|mlp] [--config FILE] [--iters N] [--alpha A] [--bits B] [--bit-schedule fixed|round-decay|innovation] [--bits-min L] [--bits-max H] [--downlink exact|quantized] [--down-bits-min L] [--down-bits-max H] [--threads T] [--server-shards S] [--wire-mode sync|async|async-cross] [--staleness-bound K] [--resilience-cadence C] [--miss-threshold N] [--restore-rounds N] [--max-retries R] [--backoff-base S] [--backoff-cap S] [--quorum Q] [--staleness-slack K] [--t-fixed S] [--t-per-bit S] [--backend native|pjrt]\n\
          laq list\n"
     );
 }
@@ -116,6 +116,14 @@ fn train_spec() -> Vec<ArgSpec> {
         ArgSpec { name: "server-shards", help: "server θ-shards: 1=single, 0=auto, S=fixed", default: None, is_switch: false },
         ArgSpec { name: "wire-mode", help: "wire phase: sync (reference) | async (pipelined) | async-cross (cross-round staleness)", default: None, is_switch: false },
         ArgSpec { name: "staleness-bound", help: "async: absorb reorder window (positions); async-cross: max upload lag (rounds); 0 = sync order", default: None, is_switch: false },
+        ArgSpec { name: "resilience-cadence", help: "self-healing: demoted workers selected every C-th round (0 = off, else >= 2)", default: None, is_switch: false },
+        ArgSpec { name: "miss-threshold", help: "self-healing: consecutive upload failures before demotion (>= 1)", default: None, is_switch: false },
+        ArgSpec { name: "restore-rounds", help: "self-healing: clean scheduled rounds before a demoted worker is restored (>= 1)", default: None, is_switch: false },
+        ArgSpec { name: "max-retries", help: "self-healing: in-round re-requests of a corrupt/missed upload (0 = off)", default: None, is_switch: false },
+        ArgSpec { name: "backoff-base", help: "self-healing: backoff before retry r = min(base*2^(r-1), cap) seconds", default: None, is_switch: false },
+        ArgSpec { name: "backoff-cap", help: "self-healing: cap on a single retry backoff (s, >= base)", default: None, is_switch: false },
+        ArgSpec { name: "quorum", help: "self-healing: fraction of scheduled workers that commits a round, in (0, 1] (0 = off)", default: None, is_switch: false },
+        ArgSpec { name: "staleness-slack", help: "self-healing: extra landing-lag rounds for demoted workers (async-cross only)", default: None, is_switch: false },
         ArgSpec { name: "t-fixed", help: "latency model: per-message setup time (s, finite, >= 0)", default: None, is_switch: false },
         ArgSpec { name: "t-per-bit", help: "latency model: per-bit transfer time (s, finite, >= 0)", default: None, is_switch: false },
         ArgSpec { name: "backend", help: "native|pjrt", default: Some("native"), is_switch: false },
@@ -213,6 +221,51 @@ fn cmd_train(argv: &[String]) -> i32 {
             .map_err(|e| laq::Error::Config(e.to_string()))?
         {
             cfg.staleness_bound = v;
+        }
+        // self-healing coordinator knobs: validate() holds the combined
+        // [resilience] section to the same rules as the TOML path
+        if let Some(v) = args
+            .get_usize("resilience-cadence")
+            .map_err(|e| laq::Error::Config(e.to_string()))?
+        {
+            cfg.resilience.cadence = v;
+        }
+        if let Some(v) = args
+            .get_usize("miss-threshold")
+            .map_err(|e| laq::Error::Config(e.to_string()))?
+        {
+            cfg.resilience.miss_threshold = v as u32;
+        }
+        if let Some(v) = args
+            .get_usize("restore-rounds")
+            .map_err(|e| laq::Error::Config(e.to_string()))?
+        {
+            cfg.resilience.restore_rounds = v as u32;
+        }
+        if let Some(v) = args
+            .get_usize("max-retries")
+            .map_err(|e| laq::Error::Config(e.to_string()))?
+        {
+            cfg.resilience.max_retries = v as u32;
+        }
+        if let Some(v) =
+            args.get_f64("backoff-base").map_err(|e| laq::Error::Config(e.to_string()))?
+        {
+            cfg.resilience.backoff_base = v;
+        }
+        if let Some(v) =
+            args.get_f64("backoff-cap").map_err(|e| laq::Error::Config(e.to_string()))?
+        {
+            cfg.resilience.backoff_cap = v;
+        }
+        if let Some(v) = args.get_f64("quorum").map_err(|e| laq::Error::Config(e.to_string()))? {
+            cfg.resilience.quorum = v;
+        }
+        if let Some(v) = args
+            .get_usize("staleness-slack")
+            .map_err(|e| laq::Error::Config(e.to_string()))?
+        {
+            cfg.resilience.staleness_slack = v;
         }
         // latency knobs: validate() rejects NaN/negatives from either
         // source (CLI here, TOML via apply_json) with the same message

@@ -1,8 +1,10 @@
 //! Property tests on the coordinator invariants (DESIGN.md §6): mirror
-//! consistency, aggregate identity, clock bound (7b), and exact bit
-//! accounting — under randomized algorithms, sizes and seeds.
+//! consistency, aggregate identity, clock bound (7b), exact bit
+//! accounting, and the self-healing policy layer (cadence demotion,
+//! retry caps, backoff billing, grid purity) — under randomized
+//! algorithms, sizes, fault fleets and seeds.
 
-use laq::config::{Algo, ModelKind, RunCfg};
+use laq::config::{Algo, ModelKind, ResilienceCfg, RunCfg, WireMode, WorkerFaults};
 use laq::prop_assert;
 use laq::util::prop::Prop;
 use laq::util::rng::Rng;
@@ -228,6 +230,201 @@ fn deterministic_replay() {
         let a = run(&cfg)?;
         let b = run(&cfg)?;
         prop_assert!(a == b, "nondeterministic run for {}", cfg.algo.name());
+        Ok(())
+    });
+}
+
+fn rand_resilience(rng: &mut Rng) -> ResilienceCfg {
+    let base = 1e-4 + rng.uniform() * 1e-3;
+    ResilienceCfg {
+        cadence: 2 + rng.below(4) as usize,
+        miss_threshold: 1 + rng.below(3) as u32,
+        restore_rounds: 1 + rng.below(6) as u32,
+        max_retries: rng.below(4) as u32,
+        backoff_base: base,
+        backoff_cap: base * (1.0 + rng.uniform() * 7.0),
+        quorum: if rng.bernoulli(0.5) { 0.3 + rng.uniform() * 0.7 } else { 0.0 },
+        staleness_slack: 0,
+    }
+}
+
+/// A lazy-algorithm config with a random fault fleet and a random
+/// resilience policy — the input space of the self-healing contracts.
+fn rand_resilient_cfg(rng: &mut Rng) -> RunCfg {
+    let mut c = rand_cfg(rng);
+    c.algo = [Algo::Lag, Algo::Laq, Algo::Slaq][rng.below(3) as usize];
+    c.resilience = rand_resilience(rng);
+    let mut fleet = Vec::new();
+    for m in 0..c.workers {
+        if !rng.bernoulli(0.6) {
+            continue;
+        }
+        let straggles = rng.bernoulli(0.7);
+        fleet.push(WorkerFaults {
+            worker: m,
+            straggle_alpha: straggles.then(|| 1.05 + rng.uniform() * 1.5),
+            deadline: if straggles && rng.bernoulli(0.7) {
+                1.3 + rng.uniform() * 3.0
+            } else {
+                f64::INFINITY
+            },
+            corrupt_rate: if rng.bernoulli(0.4) { 0.2 + rng.uniform() * 0.4 } else { 0.0 },
+            ..WorkerFaults::default()
+        });
+    }
+    c.scenario.workers = fleet;
+    c
+}
+
+#[test]
+fn cadence_demotion_is_monotone_in_miss_streak() {
+    use laq::algo::resilience::{observe_round, HealthPhase, WorkerHealth};
+    // the health machine's demotion rule: for a fixed policy, a worker
+    // with a longer accumulated miss streak never demotes later than one
+    // with a shorter streak — and the demotion lands exactly when the
+    // streak reaches miss_threshold
+    Prop::with_cases(200).check("demotion monotone in miss streak", |rng| {
+        let rcfg = rand_resilience(rng);
+        let lo = rng.below(rcfg.miss_threshold as u64 + 2) as u32;
+        let hi = lo + rng.below(4) as u32;
+        let mk = |streak: u32| WorkerHealth {
+            miss_streak: streak,
+            phase: if streak == 0 { HealthPhase::Healthy } else { HealthPhase::Probation },
+            ..WorkerHealth::default()
+        };
+        let rounds_to_demote = |mut h: WorkerHealth| -> u32 {
+            for r in 1..=64u32 {
+                if observe_round(&mut h, &rcfg, r as usize, 1.0, true, false) {
+                    return r;
+                }
+            }
+            65
+        };
+        let fast = rounds_to_demote(mk(hi));
+        let slow = rounds_to_demote(mk(lo));
+        prop_assert!(
+            fast <= slow,
+            "streak {hi} demoted after {fast} misses, streak {lo} after {slow}"
+        );
+        let expect = rcfg.miss_threshold.saturating_sub(lo).max(1);
+        prop_assert!(
+            slow == expect,
+            "streak {lo}, threshold {}: demoted after {slow} misses, expected {expect}",
+            rcfg.miss_threshold
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn backoff_delay_is_exact_to_the_formula() {
+    use laq::algo::resilience::backoff_delay;
+    // min(backoff_base · 2^(r−1), backoff_cap), bit-exactly — scaling by
+    // a power of two is lossless, so the contract is == not ≈
+    Prop::with_cases(300).check("backoff == min(base·2^(r−1), cap)", |rng| {
+        let rcfg = rand_resilience(rng);
+        let r = 1 + rng.below(8) as u32;
+        let got = backoff_delay(&rcfg, r);
+        let expect =
+            (rcfg.backoff_base * f64::powi(2.0, (r - 1) as i32)).min(rcfg.backoff_cap);
+        prop_assert!(
+            got == expect,
+            "attempt {r}, base {}, cap {}: got {got}, expected {expect}",
+            rcfg.backoff_base,
+            rcfg.backoff_cap
+        );
+        prop_assert!(
+            got <= rcfg.backoff_cap && got >= 0.0,
+            "backoff {got} escaped [0, cap = {}]",
+            rcfg.backoff_cap
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn retry_ladder_respects_the_cap_and_bills_backoff_exactly() {
+    use laq::algo::resilience::backoff_delay;
+    // live trainer, random fault fleet: no round plan ever uses more
+    // than max_retries attempts, every superseded corrupt frame maps to
+    // an attempt, and the billed backoff is exactly the formula summed
+    // over the attempts actually used
+    Prop::with_cases(15).check("retries <= max, backoff billed exactly", |rng| {
+        let mut cfg = rand_resilient_cfg(rng);
+        cfg.resilience.max_retries = 1 + rng.below(3) as u32;
+        cfg.validate().map_err(|e| e.to_string())?;
+        let mut t = laq::algo::build_native(&cfg).map_err(|e| e.to_string())?;
+        for _ in 0..cfg.iters {
+            t.step().map_err(|e| e.to_string())?;
+            for (m, plan) in t.round_plans().iter().enumerate() {
+                prop_assert!(
+                    plan.retries_used <= cfg.resilience.max_retries,
+                    "worker {m} used {} retries > max {}",
+                    plan.retries_used,
+                    cfg.resilience.max_retries
+                );
+                prop_assert!(
+                    plan.extra_rejected_frames <= plan.retries_used,
+                    "worker {m}: {} superseded frames from {} attempts",
+                    plan.extra_rejected_frames,
+                    plan.retries_used
+                );
+                let mut expect = 0.0;
+                for r in 1..=plan.retries_used {
+                    expect += backoff_delay(&cfg.resilience, r);
+                }
+                prop_assert!(
+                    plan.backoff_time == expect,
+                    "worker {m}: billed backoff {} drifted from the formula {expect}",
+                    plan.backoff_time
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn resilience_policy_is_pure_across_the_thread_shard_grid() {
+    // the whole policy layer — cadence verdicts, retry ladders, quorum
+    // clamps, health folds — is a pure function of (seed, config):
+    // reruns and every {1,4}×{1,7} grid point agree bit-for-bit, under
+    // sync and async wire phases
+    Prop::with_cases(8).check("resilience (seed, config)-pure", |rng| {
+        let mut cfg = rand_resilient_cfg(rng);
+        if rng.bernoulli(0.4) {
+            cfg.wire_mode = WireMode::Async;
+            cfg.staleness_bound = 1 + rng.below(3) as usize;
+        }
+        cfg.validate().map_err(|e| e.to_string())?;
+        let run = |cfg: &RunCfg| -> Result<_, String> {
+            let mut t = laq::algo::build_native(cfg).map_err(|e| e.to_string())?;
+            for _ in 0..cfg.iters {
+                t.step().map_err(|e| e.to_string())?;
+            }
+            let health: Vec<_> = (0..cfg.workers).map(|m| *t.worker_health(m)).collect();
+            Ok((
+                t.theta().to_vec(),
+                t.net.uplink_bits(),
+                t.net.sim_time().to_bits(),
+                t.resilience_stats(),
+                health,
+            ))
+        };
+        let base = run(&cfg)?;
+        let again = run(&cfg)?;
+        prop_assert!(base == again, "resilient rerun diverged ({})", cfg.algo.name());
+        for (threads, shards) in [(1usize, 7usize), (4, 1), (4, 7)] {
+            let mut c = cfg.clone();
+            c.threads = threads;
+            c.server_shards = shards;
+            let t = run(&c)?;
+            prop_assert!(
+                base == t,
+                "resilience threads={threads} shards={shards} diverged ({})",
+                cfg.algo.name()
+            );
+        }
         Ok(())
     });
 }

@@ -1,0 +1,381 @@
+//! Contracts of the self-healing coordinator (`cfg.resilience`):
+//! fault-aware scheduling, retry/backoff, and quorum rounds layered on
+//! the scenario engine.
+//!
+//! * **empty-resilience identity** — a config whose `[resilience]` table
+//!   is absent or empty drives the exact pre-resilience trainer:
+//!   bit-identical traces across the (threads, shards) grid under sync
+//!   and async wire modes, faulted fleet included.  The
+//!   `wire_equivalence` goldens (which predate the runtime) stay
+//!   unchanged — `ci.sh` pins their hashes.
+//! * **headline contract** — under the heavy-tail straggler fleet,
+//!   resilience-on reaches the fault-free final loss within tolerance on
+//!   strictly less `sim_time` and no more uplink bits than
+//!   resilience-off.
+//! * **purity** — every resilience decision (cadence verdicts, retry
+//!   ladders, quorum clamps, health folds) is a pure function of
+//!   (seed, config): identical across reruns and the thread/shard grid,
+//!   under every wire mode.
+//! * **quorum accounting** — under sync wire, the quorum clamp touches
+//!   only the simulated clock: θ and the bit ledger are bit-identical to
+//!   quorum-off, `sim_time` strictly smaller once a clamp fires.
+//! * **checkpoint v6** — health state (EMAs, streaks, phases, demotion
+//!   rounds) resumes bit-exactly across a save/load boundary placed
+//!   after a demotion; a checkpoint carrying health state refuses to
+//!   load into a resilience-less trainer.
+
+use laq::algo::resilience::WorkerHealth;
+use laq::config::{Algo, ResilienceCfg, RunCfg, WireMode, WorkerFaults};
+
+fn cfg_for(algo: Algo, wire: WireMode, staleness: usize, threads: usize, shards: usize) -> RunCfg {
+    let mut c = RunCfg::paper_logreg(algo);
+    // mnist-like keeps p = 7840 (8 coordinate blocks ⇒ real shard plans);
+    // tiny row counts keep the suite fast
+    c.data.n_train = 240;
+    c.data.n_test = 60;
+    c.workers = 4;
+    c.iters = 30;
+    c.batch = 40;
+    c.record_every = 1;
+    c.threads = threads;
+    c.server_shards = shards;
+    c.wire_mode = wire;
+    c.staleness_bound = staleness;
+    c.downlink = laq::config::DownlinkMode::Exact;
+    c
+}
+
+/// The heavy-tail straggler: Pareto α = 1.2 latency multiples with a
+/// deadline at 3× — roughly a quarter of its wanted uploads miss, and
+/// the ones that land each charge up to 2 extra message-times into the
+/// simulated clock.
+fn straggler_fleet() -> Vec<WorkerFaults> {
+    vec![WorkerFaults {
+        worker: 1,
+        straggle_alpha: Some(1.2),
+        deadline: 3.0,
+        ..WorkerFaults::default()
+    }]
+}
+
+/// The resilience policy under test: one effective miss demotes, reduced
+/// cadence selects the worker every 4th round, and `restore_rounds` is
+/// far beyond what a 60-round run can accumulate at that cadence — a
+/// demoted worker stays demoted for the horizon.
+fn healing_policy() -> ResilienceCfg {
+    ResilienceCfg {
+        cadence: 4,
+        miss_threshold: 1,
+        restore_rounds: 30,
+        ..ResilienceCfg::default()
+    }
+}
+
+/// Everything observable about a run, compared exactly for the identity
+/// and purity contracts.
+#[derive(Debug, PartialEq)]
+struct Trace {
+    steps: Vec<(f64, f64, u64, usize, f64)>,
+    rounds: u64,
+    bits: u64,
+    down_bits: u64,
+    sim_time: f64,
+    per_worker_rounds: Vec<u64>,
+    clocks: Vec<usize>,
+    rejections: u64,
+    stats: (u64, u64, u64),
+    health: Vec<WorkerHealth>,
+    theta: Vec<f32>,
+}
+
+fn run_trace(cfg: &RunCfg) -> Trace {
+    let mut t = laq::algo::build_native(cfg).unwrap();
+    let mut steps = Vec::with_capacity(cfg.iters);
+    for _ in 0..cfg.iters {
+        let s = t.step().unwrap();
+        steps.push((s.loss, s.grad_norm_sq, s.bits, s.uploads, s.max_eps_sq));
+    }
+    let health = (0..cfg.workers).map(|m| *t.worker_health(m)).collect();
+    Trace {
+        steps,
+        rounds: t.net.uplink_rounds(),
+        bits: t.net.uplink_bits(),
+        down_bits: t.net.downlink_bits(),
+        sim_time: t.net.sim_time(),
+        per_worker_rounds: t.net.per_worker_rounds().to_vec(),
+        clocks: t.clocks(),
+        rejections: t.scenario_rejections(),
+        stats: t.resilience_stats(),
+        health,
+        theta: t.theta().to_vec(),
+    }
+}
+
+#[test]
+fn empty_resilience_section_is_bit_identical_across_the_grid() {
+    // acceptance: an empty [resilience] table — whether absent or
+    // present-but-empty in the TOML — drives the pre-resilience trainer
+    // bit-for-bit, fault fleet included, at every grid point
+    let toml = "[resilience]\n";
+    for (wire, staleness) in [(WireMode::Sync, 0usize), (WireMode::Async, 2)] {
+        let mut base_cfg = cfg_for(Algo::Laq, wire, staleness, 1, 1);
+        base_cfg.scenario.workers = straggler_fleet();
+        let base = run_trace(&base_cfg);
+        for (threads, shards) in [(1usize, 7usize), (4, 1), (4, 7)] {
+            let mut cfg = cfg_for(Algo::Laq, wire, staleness, threads, shards);
+            cfg.scenario.workers = straggler_fleet();
+            let j = laq::config::toml::parse(toml).unwrap();
+            cfg.apply_json(&j).unwrap();
+            assert!(
+                cfg.resilience.is_empty(),
+                "an empty [resilience] table must stay empty"
+            );
+            let t = run_trace(&cfg);
+            assert_eq!(
+                base, t,
+                "empty resilience {wire:?} s={staleness} threads={threads} shards={shards} diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn self_healing_beats_resilience_off_under_heavy_tail_stragglers() {
+    // THE headline contract (ISSUE 8): under the PR 7 heavy-tail
+    // straggler fleet, resilience-on reaches the fault-free final loss
+    // within tolerance on strictly less sim_time and no more uplink
+    // bits than resilience-off.  The mechanism: the first missed
+    // deadline demotes the straggler to a 4-round cadence, so three
+    // quarters of its billed message-times and straggle excesses — and
+    // all of its missed-deadline stalls — leave the critical path, while
+    // the lazy aggregate carries its stale gradient exactly as LAQ
+    // already does for criterion skips.
+    let mut free_cfg = cfg_for(Algo::Laq, WireMode::Sync, 0, 1, 1);
+    free_cfg.iters = 60;
+    let mut off_cfg = free_cfg.clone();
+    off_cfg.scenario.workers = straggler_fleet();
+    let mut on_cfg = off_cfg.clone();
+    on_cfg.resilience = healing_policy();
+    on_cfg.validate().unwrap();
+
+    let mut free = laq::algo::build_native(&free_cfg).unwrap();
+    let mut off = laq::algo::build_native(&off_cfg).unwrap();
+    let mut on = laq::algo::build_native(&on_cfg).unwrap();
+    for _ in 0..free_cfg.iters {
+        free.step().unwrap();
+        off.step().unwrap();
+        on.step().unwrap();
+    }
+
+    let (demotions, _, _) = on.resilience_stats();
+    assert!(demotions >= 1, "the chronic straggler was never demoted");
+    assert!(
+        on.net.sim_time() < off.net.sim_time(),
+        "resilience-on must cost strictly less sim_time: on={} off={}",
+        on.net.sim_time(),
+        off.net.sim_time()
+    );
+    assert!(
+        on.net.uplink_bits() <= off.net.uplink_bits(),
+        "resilience-on must cost no more uplink bits: on={} off={}",
+        on.net.uplink_bits(),
+        off.net.uplink_bits()
+    );
+
+    let (last_free, _) = free.eval_full().unwrap();
+    let (last_on, _) = on.eval_full().unwrap();
+    assert!(
+        (last_on - last_free).abs() <= 0.25 * last_free.abs().max(1e-9),
+        "self-healed final loss {last_on} too far from fault-free {last_free}"
+    );
+}
+
+#[test]
+fn resilience_decisions_are_a_pure_function_of_seed_and_config() {
+    // every policy at once — cadence + retries + quorum (+ per-worker
+    // staleness slack under async-cross) — reproduces bit-for-bit
+    // across reruns and the {1,4}×{1,7} grid under every wire mode
+    for (wire, staleness) in
+        [(WireMode::Sync, 0usize), (WireMode::Async, 2), (WireMode::AsyncCross, 2)]
+    {
+        let policy = ResilienceCfg {
+            cadence: 4,
+            miss_threshold: 1,
+            restore_rounds: 5,
+            max_retries: 2,
+            backoff_base: 1e-3,
+            backoff_cap: 2e-3,
+            quorum: 0.75,
+            staleness_slack: if wire == WireMode::AsyncCross { 2 } else { 0 },
+            ..ResilienceCfg::default()
+        };
+        let mut base_cfg = cfg_for(Algo::Laq, wire, staleness, 1, 1);
+        base_cfg.scenario.workers = vec![
+            WorkerFaults { worker: 0, corrupt_rate: 0.3, ..WorkerFaults::default() },
+            WorkerFaults {
+                worker: 1,
+                straggle_alpha: Some(1.2),
+                deadline: 3.0,
+                ..WorkerFaults::default()
+            },
+            WorkerFaults {
+                worker: 3,
+                drop_from: Some(9),
+                drop_until: Some(18),
+                ..WorkerFaults::default()
+            },
+        ];
+        base_cfg.resilience = policy.clone();
+        base_cfg.validate().unwrap();
+        let base = run_trace(&base_cfg);
+        assert!(base.rounds > 0, "the healed fleet must still communicate");
+        for (threads, shards) in [(1usize, 7usize), (4, 1), (4, 7)] {
+            let mut cfg = cfg_for(Algo::Laq, wire, staleness, threads, shards);
+            cfg.scenario.workers = base_cfg.scenario.workers.clone();
+            cfg.resilience = policy.clone();
+            let t = run_trace(&cfg);
+            assert_eq!(
+                base, t,
+                "resilience {wire:?} s={staleness} threads={threads} shards={shards} not reproducible"
+            );
+        }
+        let again = run_trace(&base_cfg);
+        assert_eq!(base, again, "resilience {wire:?} rerun diverged");
+    }
+}
+
+#[test]
+fn retry_ladder_burns_billed_frames_and_salvages_corrupt_rounds() {
+    // a corrupt-prone worker with two in-round retries: superseded
+    // corrupt frames are billed AND rejected (they crossed the wire),
+    // backoff lands in sim_time, and the salvage shows up as strictly
+    // fewer final-verdict corruptions than the retry-less run
+    let mut off_cfg = cfg_for(Algo::Laq, WireMode::Sync, 0, 1, 1);
+    off_cfg.scenario.workers =
+        vec![WorkerFaults { worker: 0, corrupt_rate: 0.5, ..WorkerFaults::default() }];
+    let mut on_cfg = off_cfg.clone();
+    on_cfg.resilience = ResilienceCfg {
+        max_retries: 2,
+        backoff_base: 1e-3,
+        backoff_cap: 4e-3,
+        ..ResilienceCfg::default()
+    };
+    on_cfg.validate().unwrap();
+
+    let off = run_trace(&off_cfg);
+    let on = run_trace(&on_cfg);
+    assert!(off.rejections > 0, "corrupt_rate = 0.5 drew no corruption at all");
+    let (_, retries, _) = on.stats;
+    assert!(retries > 0, "a 0.5 corrupt rate never triggered the retry ladder");
+    assert!(
+        on.rejections > 0,
+        "retry-superseded corrupt frames must still be billed + rejected"
+    );
+    assert!(
+        on.sim_time > off.sim_time,
+        "backoff waits must land in sim_time: on={} off={}",
+        on.sim_time,
+        off.sim_time
+    );
+    assert!(
+        on.theta.iter().all(|x| x.is_finite()),
+        "a corrupt frame slipped past the retry ladder into θ"
+    );
+}
+
+#[test]
+fn quorum_clamp_touches_only_the_simulated_clock_under_sync() {
+    // quorum rounds with deadline-less stragglers: under sync wire the
+    // clamp stops charging the slowest workers' straggle excess but
+    // changes no upload decision — θ, the bit ledger, and every round
+    // count are bit-identical to quorum-off while sim_time strictly
+    // drops once a clamp fires
+    let mut off_cfg = cfg_for(Algo::Laq, WireMode::Sync, 0, 1, 1);
+    off_cfg.scenario.workers = vec![
+        WorkerFaults { worker: 1, straggle_alpha: Some(1.2), ..WorkerFaults::default() },
+        WorkerFaults { worker: 2, straggle_alpha: Some(2.5), ..WorkerFaults::default() },
+    ];
+    let mut on_cfg = off_cfg.clone();
+    on_cfg.resilience = ResilienceCfg { quorum: 0.5, ..ResilienceCfg::default() };
+    on_cfg.validate().unwrap();
+
+    let off = run_trace(&off_cfg);
+    let on = run_trace(&on_cfg);
+    let (_, _, clamped) = on.stats;
+    assert!(clamped > 0, "two Pareto stragglers never fell behind a 0.5 quorum");
+    assert_eq!(on.theta, off.theta, "the quorum clamp must not touch θ");
+    assert_eq!(on.bits, off.bits, "the quorum clamp must not touch the bit ledger");
+    assert_eq!(on.rounds, off.rounds);
+    assert_eq!(on.per_worker_rounds, off.per_worker_rounds);
+    assert!(
+        on.sim_time < off.sim_time,
+        "a fired quorum clamp must strictly shrink sim_time: on={} off={}",
+        on.sim_time,
+        off.sim_time
+    );
+}
+
+#[test]
+fn checkpoint_v6_resumes_health_state_bit_exactly() {
+    // a save placed after the straggler's demotion must carry the whole
+    // health machine — EMAs, streaks, phases, demotion rounds — so the
+    // resumed run replays the remaining cadence schedule bit-for-bit
+    // against the uninterrupted one
+    let mut cfg = cfg_for(Algo::Laq, WireMode::Sync, 0, 1, 1);
+    cfg.iters = 60;
+    cfg.scenario.workers = straggler_fleet();
+    cfg.resilience = healing_policy();
+    cfg.validate().unwrap();
+
+    let mut reference = laq::algo::build_native(&cfg).unwrap();
+    for _ in 0..cfg.iters {
+        reference.step().unwrap();
+    }
+
+    let dir = std::env::temp_dir().join("laq_resilience_ckpt");
+    let path = dir.join("healing.ckpt");
+    let mut first = laq::algo::build_native(&cfg).unwrap();
+    for _ in 0..30 {
+        first.step().unwrap();
+    }
+    first.save_checkpoint(&path).unwrap();
+    let mut resumed = laq::algo::build_native(&cfg).unwrap();
+    resumed.load_checkpoint(&path).unwrap();
+    for m in 0..cfg.workers {
+        assert_eq!(
+            resumed.worker_health(m),
+            first.worker_health(m),
+            "worker {m} health state did not survive the checkpoint"
+        );
+    }
+    for _ in 30..cfg.iters {
+        resumed.step().unwrap();
+    }
+
+    assert_eq!(
+        reference.theta(),
+        resumed.theta(),
+        "θ diverged across the checkpoint boundary"
+    );
+    assert_eq!(reference.clocks(), resumed.clocks(), "clocks diverged");
+    for m in 0..cfg.workers {
+        assert_eq!(
+            reference.worker_health(m),
+            resumed.worker_health(m),
+            "worker {m} health state diverged after resume"
+        );
+    }
+
+    // a checkpoint carrying health state must refuse a resilience-less
+    // trainer — silently dropping the health machine would fork the
+    // cadence schedule from the saved run
+    let mut bare_cfg = cfg.clone();
+    bare_cfg.resilience = ResilienceCfg::default();
+    let mut bare = laq::algo::build_native(&bare_cfg).unwrap();
+    let err = bare.load_checkpoint(&path).unwrap_err().to_string();
+    assert!(
+        err.contains("resilience"),
+        "wrong error for a health-bearing checkpoint: {err}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
