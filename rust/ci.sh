@@ -143,4 +143,25 @@ echo "empty-resilience goldens unchanged"
 echo "== resilient fleet config (release binary, end to end) =="
 ./target/release/laq train --config ../examples/scenario_resilient.toml --out results/scenario_ci
 
+echo "== transport loopback (real laq-server/laq-worker processes) =="
+# build the fleet binaries explicitly (the loopback tests skip with a
+# logged reason when they're missing — CI must never take that branch),
+# then run the harness: healthy fleets at M=2 (sync) and M=4 (bounded
+# staleness), plus a mid-run worker kill + rejoin.  Each test is capped
+# so a wedged fleet fails fast instead of hanging CI.  transport = sim
+# stays the default, so the wire goldens must come out byte-identical.
+cargo build --release --bin laq-server --bin laq-worker
+golden_before=$(sha256sum "$GOLDEN" | cut -d' ' -f1)
+if command -v timeout >/dev/null 2>&1; then
+    timeout 600 cargo test -q --release --test transport_loopback -- --test-threads=1
+else
+    cargo test -q --release --test transport_loopback -- --test-threads=1
+fi
+golden_after=$(sha256sum "$GOLDEN" | cut -d' ' -f1)
+if [ "$golden_before" != "$golden_after" ]; then
+    echo "FAIL: wire goldens changed across the transport leg ($golden_before -> $golden_after)" >&2
+    exit 1
+fi
+echo "wire goldens unchanged across the transport leg"
+
 echo "== ci OK =="

@@ -1,0 +1,116 @@
+//! `laq-server` — the coordinator side of the real TCP transport.
+//!
+//! Binds a listener, waits for all `--workers` `laq-worker` processes to
+//! hand in a matching handshake, trains under the bounded-staleness
+//! arrival-order contract, and prints a machine-readable `RESULT` line
+//! (see `laq::coordinator::tcp`).  Prints `LISTENING <addr>` once bound
+//! so harnesses can bind port 0 and parse the chosen port.
+//!
+//! Both binaries must be launched from the same config (file + flags):
+//! the handshake carries a config fingerprint and rejects mismatches.
+
+use std::time::Duration;
+
+use laq::config::{Algo, ModelKind, RunCfg, TransportMode};
+use laq::coordinator::tcp::{serve, ServeOpts};
+use laq::util::cli::{usage, ArgSpec, Args};
+
+fn spec() -> Vec<ArgSpec> {
+    vec![
+        ArgSpec { name: "config", help: "TOML/JSON config file (shared with the workers)", default: None, is_switch: false },
+        ArgSpec { name: "listen", help: "bind address (port 0 = ephemeral, parsed from LISTENING line)", default: Some("127.0.0.1:0"), is_switch: false },
+        ArgSpec { name: "algo", help: "gd|qgd|lag|laq", default: Some("laq"), is_switch: false },
+        ArgSpec { name: "model", help: "logreg|mlp", default: Some("logreg"), is_switch: false },
+        ArgSpec { name: "dataset", help: "mnist|ijcnn1|covtype", default: None, is_switch: false },
+        ArgSpec { name: "workers", help: "fleet size M", default: None, is_switch: false },
+        ArgSpec { name: "iters", help: "training rounds", default: None, is_switch: false },
+        ArgSpec { name: "bits", help: "quantization bits (1..=16)", default: None, is_switch: false },
+        ArgSpec { name: "alpha", help: "stepsize", default: None, is_switch: false },
+        ArgSpec { name: "seed", help: "rng seed", default: None, is_switch: false },
+        ArgSpec { name: "staleness-bound", help: "max rounds a report may lag its broadcast (0 = synchronous)", default: None, is_switch: false },
+        ArgSpec { name: "io-timeout-ms", help: "handshake/write timeout and fleet-assembly deadline", default: Some("30000"), is_switch: false },
+        ArgSpec { name: "round-timeout-ms", help: "wait per mandatory report before a miss is folded", default: Some("5000"), is_switch: false },
+        ArgSpec { name: "quiet", help: "suppress ROUND progress lines", default: None, is_switch: true },
+    ]
+}
+
+fn main() {
+    laq::util::logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let spec = spec();
+    let args = match Args::parse(&argv, &spec) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}\n\n{}", usage("laq-server", "TCP parameter server", &spec));
+            std::process::exit(2);
+        }
+    };
+    let run = || -> laq::Result<()> {
+        let cfg = cfg_from(&args)?;
+        let opts = ServeOpts {
+            cfg,
+            listen: args.get("listen").unwrap_or("127.0.0.1:0").to_string(),
+            io_timeout: ms_flag(&args, "io-timeout-ms", 30_000)?,
+            round_timeout: ms_flag(&args, "round-timeout-ms", 5_000)?,
+            quiet: args.switch("quiet"),
+        };
+        serve(&opts)?;
+        Ok(())
+    };
+    match run() {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("laq-server failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn ms_flag(args: &Args, name: &str, default_ms: u64) -> laq::Result<Duration> {
+    let v = args
+        .get_u64(name)
+        .map_err(|e| laq::Error::Config(e.to_string()))?
+        .unwrap_or(default_ms);
+    Ok(Duration::from_millis(v))
+}
+
+/// Shared config assembly: paper defaults → config file → explicit
+/// flags.  `laq-worker` applies the identical sequence, so a fleet
+/// launched from the same command line agrees on the fingerprint.
+fn cfg_from(args: &Args) -> laq::Result<RunCfg> {
+    let algo = Algo::parse(args.get("algo").unwrap_or("laq"))?;
+    let model = ModelKind::parse(args.get("model").unwrap_or("logreg"))?;
+    let mut cfg = match model {
+        ModelKind::Mlp => RunCfg::paper_mlp(algo),
+        _ => RunCfg::paper_logreg(algo),
+    };
+    if let Some(path) = args.get("config") {
+        cfg.load_file(path)?;
+    }
+    if let Some(v) = args.get("dataset") {
+        cfg.data.name = v.to_string();
+    }
+    if let Some(v) = args.get_usize("workers").map_err(|e| laq::Error::Config(e.to_string()))? {
+        cfg.workers = v;
+    }
+    if let Some(v) = args.get_usize("iters").map_err(|e| laq::Error::Config(e.to_string()))? {
+        cfg.iters = v;
+    }
+    if let Some(v) = args.get_usize("bits").map_err(|e| laq::Error::Config(e.to_string()))? {
+        cfg.bits = laq::config::parse_width("--bits", v as u64)?;
+    }
+    if let Some(v) = args.get_f64("alpha").map_err(|e| laq::Error::Config(e.to_string()))? {
+        cfg.alpha = v;
+    }
+    if let Some(v) = args.get_u64("seed").map_err(|e| laq::Error::Config(e.to_string()))? {
+        cfg.seed = v;
+    }
+    if let Some(v) = args
+        .get_usize("staleness-bound")
+        .map_err(|e| laq::Error::Config(e.to_string()))?
+    {
+        cfg.staleness_bound = v;
+    }
+    cfg.transport = TransportMode::Tcp;
+    Ok(cfg)
+}

@@ -1,0 +1,115 @@
+//! `laq-worker` — one worker process of the real TCP transport.
+//!
+//! Derives its data shard deterministically from the shared config (no
+//! training data crosses the wire), connects to `laq-server`, and runs
+//! Algorithm 2's worker side — full gradient, quantize, lazy-skip
+//! criterion, report — once per received broadcast until the server
+//! says shutdown (see `laq::coordinator::tcp`).
+//!
+//! Must be launched from the same config (file + flags) as the server:
+//! the handshake carries a config fingerprint and rejects mismatches.
+
+use std::time::Duration;
+
+use laq::config::{Algo, ModelKind, RunCfg, TransportMode};
+use laq::coordinator::tcp::{run_worker, WorkerOpts};
+use laq::util::cli::{usage, ArgSpec, Args};
+
+fn spec() -> Vec<ArgSpec> {
+    vec![
+        ArgSpec { name: "connect", help: "server address, e.g. 127.0.0.1:47000", default: None, is_switch: false },
+        ArgSpec { name: "worker", help: "this worker's index in 0..workers", default: None, is_switch: false },
+        ArgSpec { name: "config", help: "TOML/JSON config file (shared with the server)", default: None, is_switch: false },
+        ArgSpec { name: "algo", help: "gd|qgd|lag|laq", default: Some("laq"), is_switch: false },
+        ArgSpec { name: "model", help: "logreg|mlp", default: Some("logreg"), is_switch: false },
+        ArgSpec { name: "dataset", help: "mnist|ijcnn1|covtype", default: None, is_switch: false },
+        ArgSpec { name: "workers", help: "fleet size M", default: None, is_switch: false },
+        ArgSpec { name: "iters", help: "training rounds", default: None, is_switch: false },
+        ArgSpec { name: "bits", help: "quantization bits (1..=16)", default: None, is_switch: false },
+        ArgSpec { name: "alpha", help: "stepsize", default: None, is_switch: false },
+        ArgSpec { name: "seed", help: "rng seed", default: None, is_switch: false },
+        ArgSpec { name: "staleness-bound", help: "max rounds a report may lag its broadcast (0 = synchronous)", default: None, is_switch: false },
+        ArgSpec { name: "io-timeout-ms", help: "connect-retry budget and read/write timeout", default: Some("30000"), is_switch: false },
+    ]
+}
+
+fn main() {
+    laq::util::logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let spec = spec();
+    let args = match Args::parse(&argv, &spec) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}\n\n{}", usage("laq-worker", "TCP gradient worker", &spec));
+            std::process::exit(2);
+        }
+    };
+    let run = || -> laq::Result<()> {
+        let cfg = cfg_from(&args)?;
+        let connect = args
+            .require("connect")
+            .map_err(|e| laq::Error::Config(e.to_string()))?
+            .to_string();
+        let worker = args
+            .get_usize("worker")
+            .map_err(|e| laq::Error::Config(e.to_string()))?
+            .ok_or_else(|| laq::Error::Config("--worker is required".into()))?;
+        let io_ms = args
+            .get_u64("io-timeout-ms")
+            .map_err(|e| laq::Error::Config(e.to_string()))?
+            .unwrap_or(30_000);
+        run_worker(&WorkerOpts {
+            cfg,
+            connect,
+            worker,
+            io_timeout: Duration::from_millis(io_ms),
+        })
+    };
+    match run() {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("laq-worker failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// Identical assembly sequence to `laq-server` — fingerprint agreement
+/// depends on it.
+fn cfg_from(args: &Args) -> laq::Result<RunCfg> {
+    let algo = Algo::parse(args.get("algo").unwrap_or("laq"))?;
+    let model = ModelKind::parse(args.get("model").unwrap_or("logreg"))?;
+    let mut cfg = match model {
+        ModelKind::Mlp => RunCfg::paper_mlp(algo),
+        _ => RunCfg::paper_logreg(algo),
+    };
+    if let Some(path) = args.get("config") {
+        cfg.load_file(path)?;
+    }
+    if let Some(v) = args.get("dataset") {
+        cfg.data.name = v.to_string();
+    }
+    if let Some(v) = args.get_usize("workers").map_err(|e| laq::Error::Config(e.to_string()))? {
+        cfg.workers = v;
+    }
+    if let Some(v) = args.get_usize("iters").map_err(|e| laq::Error::Config(e.to_string()))? {
+        cfg.iters = v;
+    }
+    if let Some(v) = args.get_usize("bits").map_err(|e| laq::Error::Config(e.to_string()))? {
+        cfg.bits = laq::config::parse_width("--bits", v as u64)?;
+    }
+    if let Some(v) = args.get_f64("alpha").map_err(|e| laq::Error::Config(e.to_string()))? {
+        cfg.alpha = v;
+    }
+    if let Some(v) = args.get_u64("seed").map_err(|e| laq::Error::Config(e.to_string()))? {
+        cfg.seed = v;
+    }
+    if let Some(v) = args
+        .get_usize("staleness-bound")
+        .map_err(|e| laq::Error::Config(e.to_string()))?
+    {
+        cfg.staleness_bound = v;
+    }
+    cfg.transport = TransportMode::Tcp;
+    Ok(cfg)
+}

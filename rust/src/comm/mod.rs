@@ -142,6 +142,8 @@
 //! [`Payload::through_wire_ref`] round trip, which allocates the decoded
 //! message as before.
 
+pub mod transport;
+
 use crate::quant::innovation::{QuantizedInnovation, WIDTH_FIELD_BITS};
 use crate::quant::qsgd::QsgdMessage;
 use crate::quant::signef::SignMessage;

@@ -1,0 +1,735 @@
+//! Length-prefixed TCP framing for the real multi-process transport
+//! (`laq-server` / `laq-worker`).
+//!
+//! Every message on the socket is one frame:
+//!
+//! ```text
+//!   byte 0      bytes 1..5 (LE)     bytes 5..5+len
+//! ┌─────────┬────────────────────┬──────────────────┐
+//! │ kind u8 │ body length u32    │ body (len bytes) │
+//! └─────────┴────────────────────┴──────────────────┘
+//! ```
+//!
+//! The body of an upload frame carries the **existing** physical wire
+//! layouts unchanged: the framed innovation codec
+//! ([`crate::quant::QuantizedInnovation::encode_framed_into`] —
+//! self-describing, `[f32 radius][u8 width][w-bit codes]`) for the
+//! quantized lazy family, raw little-endian IEEE754 for the exact
+//! (GD/LAG) family.  TCP framing adds exactly the 5-byte header per
+//! message; both directions are billed from the bytes actually written
+//! (`8 × frame length`), and the shutdown handshake cross-checks the
+//! two processes' byte counters against each other.
+//!
+//! ## Decode hardening
+//!
+//! A frame decoder faces bytes from an arbitrary peer, so every parse
+//! here is total: a strict prefix of a frame, a declared length above
+//! [`MAX_FRAME_BYTES`], or a garbage kind byte surfaces as
+//! [`Error::Transport`] — never a panic and never an allocation sized
+//! by attacker-controlled input (the length cap is checked **before**
+//! any `Vec` is reserved).  `rust/tests/prop_transport.rs` pins all
+//! three properties over every frame kind.
+//!
+//! ## Connection state machine
+//!
+//! ```text
+//!             Hello ok                    Shutdown sent
+//!  AwaitHello ────────▶ Active ──────────▶ Draining ───▶ Closed
+//!      │  bad hello        │ io error / kill     │ Bye verified
+//!      ▼                   ▼                     ▼
+//!    Closed              Dead (mirror retired; may rejoin as a fresh
+//!                              AwaitHello connection with the same id)
+//! ```
+//!
+//! [`FramedConn`] enforces the frame grammar; the per-link phase lives
+//! with the trainer loop in [`crate::coordinator::tcp`], which is the
+//! only writer of those transitions.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use crate::{Error, Result};
+
+/// Protocol version carried in every [`Hello`]; bumped on any frame or
+/// body layout change so mismatched binaries fail the handshake instead
+/// of mis-parsing each other.
+pub const PROTO_VERSION: u32 = 1;
+
+/// Frame header size: kind byte + u32 little-endian body length.
+pub const HEADER_BYTES: usize = 5;
+
+/// Upper bound on a declared frame body.  Checked before any buffer is
+/// reserved, so a hostile 4 GiB length field costs nothing; generous
+/// enough for a dense f32 broadcast at transformer dim (64 MiB ≈ 16M
+/// coordinates).
+pub const MAX_FRAME_BYTES: usize = 64 << 20;
+
+/// Every message kind the two binaries exchange.  Codes are wire-stable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameKind {
+    /// worker → server, first frame on a connection: identity + config
+    /// fingerprint
+    Hello = 1,
+    /// server → worker: handshake accepted
+    HelloAck = 2,
+    /// server → worker: one round's θ + criterion broadcast (flag bit 0:
+    /// re-prime after a rejoin)
+    Broadcast = 3,
+    /// worker → server: one round's verdict (loss + criterion stats,
+    /// plus the payload bytes iff the criterion fired)
+    Report = 4,
+    /// server → worker: evaluate the final θ (end of training)
+    Eval = 5,
+    /// worker → server: the shard's loss at the evaluated θ
+    EvalReply = 6,
+    /// server → worker: clean-shutdown request
+    Shutdown = 7,
+    /// worker → server: shutdown handshake reply carrying the worker's
+    /// byte counters for the cross-process accounting check
+    Bye = 8,
+}
+
+impl FrameKind {
+    pub fn from_code(c: u8) -> Option<FrameKind> {
+        Some(match c {
+            1 => FrameKind::Hello,
+            2 => FrameKind::HelloAck,
+            3 => FrameKind::Broadcast,
+            4 => FrameKind::Report,
+            5 => FrameKind::Eval,
+            6 => FrameKind::EvalReply,
+            7 => FrameKind::Shutdown,
+            8 => FrameKind::Bye,
+            _ => return None,
+        })
+    }
+}
+
+/// One length-prefixed frame: the unit every socket read/write moves.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub body: Vec<u8>,
+}
+
+/// Parse and validate a 5-byte frame header.  The length cap is applied
+/// here — before the caller allocates anything — which is the
+/// no-unbounded-allocation contract the adversarial tests pin.
+fn parse_header(h: &[u8; HEADER_BYTES]) -> Result<(FrameKind, usize)> {
+    let kind = FrameKind::from_code(h[0])
+        .ok_or_else(|| Error::Transport(format!("unknown frame kind 0x{:02x}", h[0])))?;
+    let len = u32::from_le_bytes([h[1], h[2], h[3], h[4]]) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(Error::Transport(format!(
+            "declared frame length {len} exceeds cap {MAX_FRAME_BYTES}"
+        )));
+    }
+    Ok((kind, len))
+}
+
+impl Frame {
+    pub fn new(kind: FrameKind, body: Vec<u8>) -> Self {
+        Self { kind, body }
+    }
+
+    /// Total bytes this frame occupies on the wire (header + body) —
+    /// the quantity both directions bill at 8 bits/byte.
+    pub fn wire_len(&self) -> usize {
+        HEADER_BYTES + self.body.len()
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        debug_assert!(self.body.len() <= MAX_FRAME_BYTES);
+        let mut out = Vec::with_capacity(self.wire_len());
+        out.push(self.kind as u8);
+        out.extend_from_slice(&(self.body.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.body);
+        out
+    }
+
+    /// Decode one frame from the front of `buf`, returning it and the
+    /// bytes consumed.  Total over arbitrary input: every strict prefix
+    /// of a valid frame, any over-cap length and any unknown kind byte
+    /// is an [`Error::Transport`], and nothing is allocated before the
+    /// length passes the [`MAX_FRAME_BYTES`] check.
+    ///
+    /// # Errors
+    ///
+    /// [`Error::Transport`] on any of the malformations above.
+    pub fn decode(buf: &[u8]) -> Result<(Frame, usize)> {
+        if buf.len() < HEADER_BYTES {
+            return Err(Error::Transport(format!(
+                "truncated frame header ({} of {HEADER_BYTES} bytes)",
+                buf.len()
+            )));
+        }
+        let mut h = [0u8; HEADER_BYTES];
+        h.copy_from_slice(&buf[..HEADER_BYTES]);
+        let (kind, len) = parse_header(&h)?;
+        if buf.len() < HEADER_BYTES + len {
+            return Err(Error::Transport(format!(
+                "truncated frame body ({} of {len} bytes)",
+                buf.len() - HEADER_BYTES
+            )));
+        }
+        let body = buf[HEADER_BYTES..HEADER_BYTES + len].to_vec();
+        Ok((Frame { kind, body }, HEADER_BYTES + len))
+    }
+}
+
+/// Little-endian body writer — the one encoder every typed message uses.
+#[derive(Default)]
+pub struct BodyWriter {
+    buf: Vec<u8>,
+}
+
+impl BodyWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn u8(&mut self, v: u8) -> &mut Self {
+        self.buf.push(v);
+        self
+    }
+
+    pub fn u32(&mut self, v: u32) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn u64(&mut self, v: u64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn f64(&mut self, v: f64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn f32_slice(&mut self, v: &[f32]) -> &mut Self {
+        self.buf.reserve(4 * v.len());
+        for x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+        self
+    }
+
+    pub fn bytes(&mut self, v: &[u8]) -> &mut Self {
+        self.buf.extend_from_slice(v);
+        self
+    }
+
+    pub fn into_frame(self, kind: FrameKind) -> Frame {
+        Frame::new(kind, self.buf)
+    }
+}
+
+/// Little-endian body reader: every accessor is total, erroring with
+/// [`Error::Transport`] instead of panicking when the body runs short.
+pub struct BodyReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> BodyReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            return Err(Error::Transport(format!(
+                "frame body truncated reading {what} ({} bytes left, need {n})",
+                self.buf.len() - self.pos
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    pub fn u32(&mut self, what: &str) -> Result<u32> {
+        let s = self.take(4, what)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    pub fn u64(&mut self, what: &str) -> Result<u64> {
+        let s = self.take(8, what)?;
+        Ok(u64::from_le_bytes(s.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self, what: &str) -> Result<f64> {
+        Ok(f64::from_bits(self.u64(what)?))
+    }
+
+    /// Exactly `n` f32 coordinates into `out` (cleared first).
+    pub fn f32_into(&mut self, n: usize, out: &mut Vec<f32>, what: &str) -> Result<()> {
+        let s = self.take(4 * n, what)?;
+        out.clear();
+        out.reserve(n);
+        for c in s.chunks_exact(4) {
+            out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        Ok(())
+    }
+
+    /// The unread remainder of the body (upload payload bytes ride at
+    /// the tail of a Report frame).
+    pub fn rest(&mut self) -> &'a [u8] {
+        let s = &self.buf[self.pos..];
+        self.pos = self.buf.len();
+        s
+    }
+
+    pub fn expect_end(&self, what: &str) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(Error::Transport(format!(
+                "{} trailing bytes after {what} body",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Worker → server handshake: identity plus everything that must agree
+/// between the two processes before gradients flow.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Hello {
+    pub proto: u32,
+    pub worker: u32,
+    pub n_workers: u32,
+    pub dim: u32,
+    pub seed: u64,
+    /// FNV-1a over the run-defining config fields
+    /// ([`crate::coordinator::tcp::config_fingerprint`]) — a worker
+    /// launched with a different α or dataset must be rejected at
+    /// handshake, not diverge silently
+    pub fingerprint: u64,
+}
+
+impl Hello {
+    pub fn to_frame(&self) -> Frame {
+        let mut w = BodyWriter::new();
+        w.u32(self.proto)
+            .u32(self.worker)
+            .u32(self.n_workers)
+            .u32(self.dim)
+            .u64(self.seed)
+            .u64(self.fingerprint);
+        w.into_frame(FrameKind::Hello)
+    }
+
+    pub fn from_frame(f: &Frame) -> Result<Hello> {
+        if f.kind != FrameKind::Hello {
+            return Err(Error::Transport(format!(
+                "expected Hello, got {:?}",
+                f.kind
+            )));
+        }
+        let mut r = BodyReader::new(&f.body);
+        let h = Hello {
+            proto: r.u32("proto")?,
+            worker: r.u32("worker")?,
+            n_workers: r.u32("n_workers")?,
+            dim: r.u32("dim")?,
+            seed: r.u64("seed")?,
+            fingerprint: r.u64("fingerprint")?,
+        };
+        r.expect_end("Hello")?;
+        Ok(h)
+    }
+}
+
+/// Re-prime flag on a [`Broadcast`]: the one exact broadcast a
+/// rejoining worker receives before re-entering the round fan-out (the
+/// scenario engine's membership rule — the server retired the dead
+/// worker's mirror, so both sides restart the recursion from zero).
+pub const BCAST_FLAG_PRIME: u8 = 1;
+
+/// Server → worker, once per round: round index, this worker's transmit
+/// width, the criterion's common right-hand term, and θ itself (exact
+/// downlink: raw IEEE754, 32 bits/coordinate — the same quantity
+/// [`crate::comm::Network::downlink_dense_bits`] bills in the sim).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Broadcast {
+    pub round: u64,
+    pub width: u8,
+    pub flags: u8,
+    pub force_upload: bool,
+    pub rhs_common: f64,
+    pub theta: Vec<f32>,
+}
+
+impl Broadcast {
+    pub fn to_frame(&self) -> Frame {
+        let mut w = BodyWriter::new();
+        w.u64(self.round)
+            .u8(self.width)
+            .u8(self.flags)
+            .u8(self.force_upload as u8)
+            .f64(self.rhs_common)
+            .f32_slice(&self.theta);
+        w.into_frame(FrameKind::Broadcast)
+    }
+
+    /// Decode into retained buffers (`theta` reused across rounds).
+    pub fn read_into(f: &Frame, dim: usize, out: &mut Broadcast) -> Result<()> {
+        if f.kind != FrameKind::Broadcast {
+            return Err(Error::Transport(format!(
+                "expected Broadcast, got {:?}",
+                f.kind
+            )));
+        }
+        let mut r = BodyReader::new(&f.body);
+        out.round = r.u64("round")?;
+        out.width = r.u8("width")?;
+        out.flags = r.u8("flags")?;
+        out.force_upload = r.u8("force_upload")? != 0;
+        out.rhs_common = r.f64("rhs_common")?;
+        r.f32_into(dim, &mut out.theta, "theta")?;
+        r.expect_end("Broadcast")
+    }
+}
+
+/// Worker → server, once per round: the criterion verdict and, iff it
+/// fired, the payload bytes in the existing physical layouts (framed
+/// innovation for the quantized codec, raw IEEE754 for the exact one).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Report {
+    pub round: u64,
+    pub loss: f64,
+    pub lhs: f64,
+    pub rhs: f64,
+    pub eps_sq: f64,
+    pub uploaded: bool,
+    pub payload: Vec<u8>,
+}
+
+impl Report {
+    pub fn to_frame(&self) -> Frame {
+        let mut w = BodyWriter::new();
+        w.u64(self.round)
+            .f64(self.loss)
+            .f64(self.lhs)
+            .f64(self.rhs)
+            .f64(self.eps_sq)
+            .u8(self.uploaded as u8);
+        if self.uploaded {
+            w.bytes(&self.payload);
+        }
+        w.into_frame(FrameKind::Report)
+    }
+
+    pub fn from_frame(f: &Frame) -> Result<Report> {
+        if f.kind != FrameKind::Report {
+            return Err(Error::Transport(format!(
+                "expected Report, got {:?}",
+                f.kind
+            )));
+        }
+        let mut r = BodyReader::new(&f.body);
+        let round = r.u64("round")?;
+        let loss = r.f64("loss")?;
+        let lhs = r.f64("lhs")?;
+        let rhs = r.f64("rhs")?;
+        let eps_sq = r.f64("eps_sq")?;
+        let uploaded = r.u8("uploaded")? != 0;
+        let payload = if uploaded { r.rest().to_vec() } else { Vec::new() };
+        if !uploaded {
+            r.expect_end("Report")?;
+        }
+        Ok(Report { round, loss, lhs, rhs, eps_sq, uploaded, payload })
+    }
+}
+
+/// Worker → server shutdown reply: the worker's own byte counters.  The
+/// server cross-checks them against what it billed — the loopback
+/// harness's "bits billed == bytes framed on the wire" contract is this
+/// comparison, made by two different processes over the same socket.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Bye {
+    /// bytes of Report frames this worker wrote
+    pub report_tx_bytes: u64,
+    /// bytes of Broadcast + Eval frames this worker read
+    pub bcast_rx_bytes: u64,
+}
+
+impl Bye {
+    pub fn to_frame(&self) -> Frame {
+        let mut w = BodyWriter::new();
+        w.u64(self.report_tx_bytes).u64(self.bcast_rx_bytes);
+        w.into_frame(FrameKind::Bye)
+    }
+
+    pub fn from_frame(f: &Frame) -> Result<Bye> {
+        if f.kind != FrameKind::Bye {
+            return Err(Error::Transport(format!("expected Bye, got {:?}", f.kind)));
+        }
+        let mut r = BodyReader::new(&f.body);
+        let b = Bye {
+            report_tx_bytes: r.u64("report_tx_bytes")?,
+            bcast_rx_bytes: r.u64("bcast_rx_bytes")?,
+        };
+        r.expect_end("Bye")?;
+        Ok(b)
+    }
+}
+
+/// One framed TCP connection: frame-grammar reads/writes plus the byte
+/// counters both ends of the accounting contract fold.
+pub struct FramedConn {
+    stream: TcpStream,
+    /// total bytes written through [`Self::send`]
+    pub tx_bytes: u64,
+    /// total bytes read through [`Self::recv`]
+    pub rx_bytes: u64,
+}
+
+impl FramedConn {
+    /// Wrap a connected stream: Nagle off (every frame is a complete
+    /// protocol step; batching them adds round-trip latency for
+    /// nothing) and the per-connection write timeout armed.  The read
+    /// timeout is the caller's to manage ([`Self::set_read_timeout`]):
+    /// handshakes read under a deadline, steady-state reader threads
+    /// block indefinitely and rely on peer shutdown for liveness.
+    ///
+    /// # Errors
+    ///
+    /// Propagates the socket-option syscalls.
+    pub fn new(stream: TcpStream, write_timeout: Duration) -> Result<Self> {
+        stream.set_nodelay(true)?;
+        stream.set_write_timeout(Some(write_timeout))?;
+        Ok(Self { stream, tx_bytes: 0, rx_bytes: 0 })
+    }
+
+    pub fn set_read_timeout(&self, t: Option<Duration>) -> Result<()> {
+        self.stream.set_read_timeout(t)?;
+        Ok(())
+    }
+
+    /// Independently-owned handle to the same socket (the server writes
+    /// broadcasts from the trainer loop while a reader thread blocks on
+    /// the same connection's uploads).
+    ///
+    /// # Errors
+    ///
+    /// Propagates `TcpStream::try_clone`.
+    pub fn try_clone(&self) -> Result<FramedConn> {
+        Ok(FramedConn {
+            stream: self.stream.try_clone()?,
+            tx_bytes: 0,
+            rx_bytes: 0,
+        })
+    }
+
+    /// Tear the socket down in both directions — parks a blocked reader
+    /// thread's `read` with an error so a retired link never leaks a
+    /// wedged thread.  Best-effort: an already-dead peer is fine.
+    pub fn shutdown(&self) {
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
+    }
+
+    /// Write one frame, returning the bytes put on the wire.
+    ///
+    /// # Errors
+    ///
+    /// [`Error::Io`] on socket failure (including the write timeout).
+    pub fn send(&mut self, f: &Frame) -> Result<u64> {
+        let bytes = f.encode();
+        self.stream.write_all(&bytes)?;
+        self.tx_bytes += bytes.len() as u64;
+        Ok(bytes.len() as u64)
+    }
+
+    /// Read exactly one frame.
+    ///
+    /// # Errors
+    ///
+    /// [`Error::Transport`] for protocol-level damage (bad kind,
+    /// over-cap length, peer closed mid-frame), [`Error::Io`] when the
+    /// socket itself fails or times out.
+    pub fn recv(&mut self) -> Result<Frame> {
+        let mut h = [0u8; HEADER_BYTES];
+        read_exact_transport(&mut self.stream, &mut h, "frame header")?;
+        let (kind, len) = parse_header(&h)?;
+        // cap already enforced by parse_header — this allocation is
+        // bounded by MAX_FRAME_BYTES whatever the peer declared
+        let mut body = vec![0u8; len];
+        read_exact_transport(&mut self.stream, &mut body, "frame body")?;
+        self.rx_bytes += (HEADER_BYTES + len) as u64;
+        Ok(Frame { kind, body })
+    }
+}
+
+/// `read_exact` that reports a peer closing mid-frame as the protocol
+/// violation it is ([`Error::Transport`]) instead of a bare IO error.
+fn read_exact_transport(s: &mut TcpStream, buf: &mut [u8], what: &str) -> Result<()> {
+    s.read_exact(buf).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            Error::Transport(format!("connection closed mid-{what}"))
+        } else {
+            Error::Io(e)
+        }
+    })
+}
+
+/// Accept-loop step: wait up to `deadline` for one worker connection
+/// and its [`Hello`].  The listener must be in non-blocking mode; the
+/// handshake read itself runs under `io_timeout` so a connected-but-
+/// silent client cannot wedge the accept loop.
+///
+/// Returns `Ok(None)` when the deadline passes with no connection —
+/// the caller decides whether that is fatal (initial fleet assembly)
+/// or routine (the per-round rejoin poll, deadline ≈ 0).
+///
+/// # Errors
+///
+/// Propagates socket errors and handshake-frame violations.
+pub fn accept_hello(
+    listener: &TcpListener,
+    io_timeout: Duration,
+    deadline: Duration,
+) -> Result<Option<(FramedConn, Hello)>> {
+    let start = Instant::now();
+    loop {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let conn = FramedConn::new(stream, io_timeout)?;
+                conn.set_read_timeout(Some(io_timeout))?;
+                let frame = conn_recv_handshake(conn)?;
+                return Ok(Some(frame));
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if start.elapsed() >= deadline {
+                    return Ok(None);
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => return Err(Error::Io(e)),
+        }
+    }
+}
+
+fn conn_recv_handshake(mut conn: FramedConn) -> Result<(FramedConn, Hello)> {
+    let f = conn.recv()?;
+    let hello = Hello::from_frame(&f)?;
+    if hello.proto != PROTO_VERSION {
+        return Err(Error::Transport(format!(
+            "protocol version mismatch: peer {}, ours {PROTO_VERSION}",
+            hello.proto
+        )));
+    }
+    Ok((conn, hello))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip_all_kinds() {
+        for code in 1..=8u8 {
+            let kind = FrameKind::from_code(code).unwrap();
+            let f = Frame::new(kind, vec![7u8; code as usize]);
+            let enc = f.encode();
+            assert_eq!(enc.len(), f.wire_len());
+            let (back, used) = Frame::decode(&enc).unwrap();
+            assert_eq!(back, f);
+            assert_eq!(used, enc.len());
+        }
+        assert!(FrameKind::from_code(0).is_none());
+        assert!(FrameKind::from_code(9).is_none());
+    }
+
+    #[test]
+    fn hello_report_broadcast_bye_roundtrip() {
+        let h = Hello {
+            proto: PROTO_VERSION,
+            worker: 3,
+            n_workers: 4,
+            dim: 44,
+            seed: 7,
+            fingerprint: 0xDEADBEEF,
+        };
+        assert_eq!(Hello::from_frame(&h.to_frame()).unwrap(), h);
+
+        let b = Broadcast {
+            round: 12,
+            width: 3,
+            flags: BCAST_FLAG_PRIME,
+            force_upload: false,
+            rhs_common: 0.25,
+            theta: vec![1.0, -2.5, 0.0],
+        };
+        let mut out = Broadcast {
+            round: 0,
+            width: 0,
+            flags: 0,
+            force_upload: true,
+            rhs_common: 0.0,
+            theta: Vec::new(),
+        };
+        Broadcast::read_into(&b.to_frame(), 3, &mut out).unwrap();
+        assert_eq!(out, b);
+
+        let r = Report {
+            round: 12,
+            loss: 0.5,
+            lhs: 1.0,
+            rhs: 2.0,
+            eps_sq: 0.125,
+            uploaded: true,
+            payload: vec![1, 2, 3],
+        };
+        assert_eq!(Report::from_frame(&r.to_frame()).unwrap(), r);
+        let skip = Report { uploaded: false, payload: Vec::new(), ..r };
+        assert_eq!(Report::from_frame(&skip.to_frame()).unwrap(), skip);
+
+        let bye = Bye { report_tx_bytes: 123, bcast_rx_bytes: 456 };
+        assert_eq!(Bye::from_frame(&bye.to_frame()).unwrap(), bye);
+    }
+
+    #[test]
+    fn oversized_length_rejected_before_allocation() {
+        let mut h = vec![FrameKind::Report as u8];
+        h.extend_from_slice(&u32::MAX.to_le_bytes());
+        match Frame::decode(&h) {
+            Err(Error::Transport(msg)) => assert!(msg.contains("cap")),
+            other => panic!("expected Transport error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn wrong_kind_body_rejected() {
+        let f = Frame::new(FrameKind::Shutdown, Vec::new());
+        assert!(Hello::from_frame(&f).is_err());
+        assert!(Report::from_frame(&f).is_err());
+        assert!(Bye::from_frame(&f).is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let h = Hello {
+            proto: PROTO_VERSION,
+            worker: 0,
+            n_workers: 1,
+            dim: 1,
+            seed: 0,
+            fingerprint: 0,
+        };
+        let mut f = h.to_frame();
+        f.body.push(0xAB);
+        assert!(Hello::from_frame(&f).is_err());
+    }
+}

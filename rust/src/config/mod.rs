@@ -273,6 +273,42 @@ impl DownlinkMode {
     }
 }
 
+/// Which transport carries the protocol: the in-memory simulated
+/// network, or real TCP between `laq-server`/`laq-worker` processes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportMode {
+    /// in-process [`crate::comm::Network`] with the seeded latency
+    /// clock — the default, bit-identical to every pre-transport golden
+    Sim,
+    /// real sockets via [`crate::coordinator::tcp`]: landing order is
+    /// actual arrival order, bits are billed from bytes written.  Only
+    /// the deterministic lazy family (gd/qgd/lag/laq) with a fixed bit
+    /// schedule, exact downlink and no `[scenario]` may cross the wire
+    /// (`coordinator::tcp::check_tcp_cfg` is the gate).
+    Tcp,
+}
+
+impl TransportMode {
+    pub fn parse(s: &str) -> Result<TransportMode> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "sim" => TransportMode::Sim,
+            "tcp" => TransportMode::Tcp,
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown transport '{other}' (expected sim | tcp)"
+                )))
+            }
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportMode::Sim => "sim",
+            TransportMode::Tcp => "tcp",
+        }
+    }
+}
+
 /// The one parse/range check for quantization-width values, shared by
 /// the CLI flags, the TOML/JSON keys and the checkpoint reader: widths
 /// are legal only in `1..=16`, checked **before** any narrowing cast so
@@ -841,6 +877,12 @@ pub struct RunCfg {
     /// default, in which case the trainer is bit-identical to a
     /// resilience-less build
     pub resilience: ResilienceCfg,
+    /// protocol transport: [`TransportMode::Sim`] (in-memory network,
+    /// the default — every golden is pinned under it) or
+    /// [`TransportMode::Tcp`] (real `laq-server`/`laq-worker` sockets).
+    /// No env-var default: crossing a process boundary is always an
+    /// explicit choice.
+    pub transport: TransportMode,
 }
 
 impl RunCfg {
@@ -876,6 +918,7 @@ impl RunCfg {
             t_per_bit: 1e-9,
             scenario: ScenarioCfg::default(),
             resilience: ResilienceCfg::default(),
+            transport: TransportMode::Sim,
         }
     }
 
@@ -1061,6 +1104,15 @@ impl RunCfg {
                 Error::Config("staleness_bound must be a non-negative integer".into())
             })?;
             self.staleness_bound = v;
+        }
+        let tp = run.get("transport");
+        if !tp.is_null() {
+            // strict like wire_mode: present-but-wrong-typed must error,
+            // not silently stay on the sim network
+            let s = tp.as_str().ok_or_else(|| {
+                Error::Config("transport must be a string: \"sim\" | \"tcp\"".into())
+            })?;
+            self.transport = TransportMode::parse(s)?;
         }
         let dl = run.get("downlink");
         if !dl.is_null() {
@@ -1272,8 +1324,7 @@ impl RunCfg {
 
     /// Serialize the resolved config (recorded beside run outputs).
     pub fn to_json(&self) -> Json {
-        let mut doc = vec![
-            ("run", Json::obj(vec![
+        let mut run_keys = vec![
                 ("algo", Json::Str(self.algo.name().into())),
                 ("model", Json::Str(self.model.name().into())),
                 ("backend", Json::Str(match self.backend {
@@ -1299,7 +1350,15 @@ impl RunCfg {
                 ("down_bits_max", Json::Num(self.down_bits_max as f64)),
                 ("t_fixed", Json::Num(self.t_fixed)),
                 ("t_per_bit", Json::Num(self.t_per_bit)),
-            ])),
+        ];
+        // sim is the implicit default everywhere a config is recorded:
+        // emitting the key only for tcp keeps every pre-transport
+        // config artifact byte-identical
+        if self.transport != TransportMode::Sim {
+            run_keys.push(("transport", Json::Str(self.transport.name().into())));
+        }
+        let mut doc = vec![
+            ("run", Json::obj(run_keys)),
             ("criterion", Json::obj(vec![
                 ("d", Json::Num(self.criterion.d as f64)),
                 ("xi", Json::arr_f64(&self.criterion.xi)),
@@ -1388,6 +1447,34 @@ mod tests {
         assert_eq!(c2.algo, Algo::Laq);
         assert_eq!(c2.model, ModelKind::Mlp);
         assert_eq!(c2.bits, 8);
+    }
+
+    #[test]
+    fn transport_knob_parses_strictly() {
+        let mut c = RunCfg::paper_logreg(Algo::Laq);
+        assert_eq!(c.transport, TransportMode::Sim, "sim must be the default");
+        c.apply_json(&toml::parse("\n[run]\ntransport = \"tcp\"\n").unwrap())
+            .unwrap();
+        assert_eq!(c.transport, TransportMode::Tcp);
+        // present-but-wrong-typed and unknown values must error, not
+        // silently stay on the sim network
+        assert!(c
+            .apply_json(&toml::parse("\n[run]\ntransport = 3\n").unwrap())
+            .is_err());
+        assert!(c
+            .apply_json(&toml::parse("\n[run]\ntransport = \"udp\"\n").unwrap())
+            .is_err());
+        // the recorded config carries the key only when it deviates from
+        // sim, so pre-transport config artifacts stay byte-identical
+        let mut c2 = RunCfg::paper_logreg(Algo::Laq);
+        c2.apply_json(&c.to_json()).unwrap();
+        assert_eq!(c2.transport, TransportMode::Tcp, "tcp must roundtrip");
+        c.transport = TransportMode::Sim;
+        let recorded = format!("{:?}", c.to_json());
+        assert!(
+            !recorded.contains("transport"),
+            "sim runs must not grow a transport key"
+        );
     }
 
     #[test]

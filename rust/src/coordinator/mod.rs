@@ -24,6 +24,7 @@
 pub mod checkpoint;
 pub mod history;
 pub mod server;
+pub mod tcp;
 pub mod worker;
 
 pub use checkpoint::Checkpoint;

@@ -1,0 +1,1249 @@
+//! TCP-backed trainer: the real multi-process parameter server.
+//!
+//! The sim trainer ([`crate::algo::Trainer`]) drives the LAQ recursion
+//! against an in-memory [`crate::comm::Network`] whose landing order is a
+//! seeded shuffle.  This module runs the *same* recursion across a
+//! process boundary: `serve` is the coordinator loop behind the
+//! `laq-server` binary, `run_worker` the per-worker loop behind
+//! `laq-worker`.  The seeded landing schedule is replaced by actual
+//! arrival order — reports are absorbed in the order their frames land
+//! on the accept socket, under the async-cross bounded-staleness
+//! contract:
+//!
+//! > before round `k`'s `apply_update`, every live worker's reports for
+//! > origins `≤ k − staleness_bound` must have been absorbed.
+//!
+//! The server blocks (with a timeout budget) on exactly those mandatory
+//! origins and absorbs everything newer opportunistically, so the
+//! observed lag of every absorbed upload is `≤ staleness_bound` *by
+//! construction* — the loopback harness asserts it.  `bound = 0`
+//! degenerates to the synchronous protocol.
+//!
+//! ## One round, over the wire
+//!
+//! ```text
+//!   server                                   worker m
+//!     │ rejoin poll (non-blocking accept)       │
+//!     │ rhs_common from Δθ history              │
+//!     ├── Broadcast{k, width, rhs, θ_k} ──────► │  (billed once/round)
+//!     │                                         │ full gradient at θ_k
+//!     │                                         │ lazy_decide (crit. 7)
+//!     │ ◄── Report{k, lhs, rhs, payload?} ──────┤  (billed per frame)
+//!     │ drain: block on origins ≤ k − bound,    │
+//!     │        try_recv the rest                │
+//!     │ absorb in arrival order (waves through  │
+//!     │   ShardedServer::absorb_pipelined)      │
+//!     │ apply_update(α)                         │
+//! ```
+//!
+//! After the last round: `Eval{θ_final}` fans out, each worker answers
+//! its exact shard loss (their sum is the global objective), then a
+//! `Shutdown`/`Bye` handshake closes every link.  The `Bye` carries the
+//! worker's own byte counters; the server cross-checks them against
+//! what it billed per link, so "bits billed == bytes framed on the
+//! wire" is verified by two independent processes counting the same
+//! socket.
+//!
+//! ## Billing
+//!
+//! Both directions bill `8 × frame_wire_bytes` — header included, the
+//! honest cost of the transport.  The downlink is billed once per
+//! broadcast round (the sim's §1.2 semantics: one broadcast serves all
+//! M workers) even though it is physically written M times; `Eval` is
+//! part of the protocol and billed the same way, `Hello`/`HelloAck`/
+//! `Shutdown`/`Bye` are control traffic and not billed (they are,
+//! however, still counted in the per-link cross-check).
+//!
+//! ## Failure path
+//!
+//! A reader error (worker process died, frame grammar violated) retires
+//! the link immediately: [`ShardedServer::retire_mirror`] zeroes the
+//! server half of the recursion, and the health record takes a failure
+//! fold ([`observe_round`]) exactly like the sim's `[resilience]` miss
+//! path.  A silent worker first accrues miss events (one per exhausted
+//! `round_timeout`) and is retired after `miss_threshold` consecutive
+//! strikes.  A worker may rejoin: the per-round accept poll re-admits a
+//! `Hello` bearing a dead worker's id and re-primes it with one exact
+//! `Broadcast` (flag [`BCAST_FLAG_PRIME`]) — the scenario engine's
+//! membership rule: both halves of the recursion restart from zero
+//! (fresh process ⇒ `q_prev = 0`, retired mirror ⇒ `0`).
+
+use std::io::Write as _;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::mpsc::{self, RecvTimeoutError};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::algo::lazy_codec_for;
+use crate::algo::resilience::{observe_round, WorkerHealth};
+use crate::comm::transport::{
+    accept_hello, BodyReader, BodyWriter, Broadcast, Bye, Frame, FrameKind, FramedConn,
+    Hello, Report, BCAST_FLAG_PRIME, PROTO_VERSION,
+};
+use crate::comm::{Payload, WireSlot};
+use crate::config::{Algo, BitScheduleKind, CritMode, DownlinkMode, ModelKind, RunCfg};
+use crate::coordinator::server::{ShardedServer, WireSync, WIRE_UPLOAD};
+use crate::coordinator::worker::{LazyCodec, WorkerNode};
+use crate::data::{self, shard, Dataset};
+use crate::model::logreg::{LogRegModel, LogRegWorker};
+use crate::model::mlp::{MlpModel, MlpWorker};
+use crate::model::{LossCfg, ModelOps, WorkerGrad};
+use crate::quant::QuantizedInnovation;
+use crate::util::bitio::BitWriter;
+use crate::util::tensor;
+use crate::util::threadpool::SendPtr;
+use crate::{Error, Result};
+
+/// Miss strikes before a silent-but-connected worker is retired when no
+/// `[resilience]` section configures `miss_threshold`.
+const DEFAULT_MISS_STRIKES: u32 = 3;
+
+/// Reject configs the TCP path cannot honour.  The transport carries
+/// the deterministic lazy family (GD/QGD/LAG/LAQ): full gradients, a
+/// fixed bit-width, exact downlink.  Stochastic algorithms and the
+/// fault-injection scenario engine stay sim-only (a real network *is*
+/// the fault injector), and adaptive bit schedules would need the
+/// server's per-worker width feedback loop on the wire.
+pub fn check_tcp_cfg(cfg: &RunCfg) -> Result<()> {
+    cfg.validate()?;
+    if lazy_codec_for(cfg.algo).is_none() || cfg.algo.is_stochastic() {
+        return Err(Error::Config(format!(
+            "transport = tcp supports the deterministic lazy family \
+             (gd/qgd/lag/laq), not {}",
+            cfg.algo.name()
+        )));
+    }
+    if cfg.bit_schedule != BitScheduleKind::Fixed {
+        return Err(Error::Config(
+            "transport = tcp requires bit_schedule = \"fixed\"".into(),
+        ));
+    }
+    if cfg.downlink != DownlinkMode::Exact {
+        return Err(Error::Config(
+            "transport = tcp requires downlink = \"exact\"".into(),
+        ));
+    }
+    if !cfg.scenario.is_empty() {
+        return Err(Error::Config(
+            "transport = tcp is incompatible with [scenario] fault injection \
+             (kill a worker process instead)"
+                .into(),
+        ));
+    }
+    Ok(())
+}
+
+/// FNV-1a over every run-defining config field.  Carried in the
+/// [`Hello`] so a worker launched with a different α, dataset, seed or
+/// criterion is rejected at handshake instead of silently diverging
+/// from the fleet.
+pub fn config_fingerprint(cfg: &RunCfg) -> u64 {
+    let mut s = format!(
+        "{}|{}|{}|{}|{}|{}|{:?}|{}|{}|{:?}|{:?}|{}|{}|{}|{}|{:?}|{}|{}",
+        cfg.algo.name(),
+        cfg.model.name(),
+        cfg.data.name,
+        cfg.data.n_train,
+        cfg.data.n_test,
+        cfg.data.seed,
+        cfg.data.hetero_alpha,
+        cfg.workers,
+        cfg.bits,
+        cfg.alpha,
+        cfg.l2,
+        cfg.iters,
+        cfg.seed,
+        cfg.hidden,
+        cfg.staleness_bound,
+        cfg.criterion.mode,
+        cfg.criterion.t_max,
+        cfg.criterion.d,
+    );
+    for x in &cfg.criterion.xi {
+        s.push_str(&format!("|{x:?}"));
+    }
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Deterministic shard split shared by every process: both sides derive
+/// it from the config alone (dataset loading and sharding are pure in
+/// `data.seed`), so no training data ever crosses the wire.
+fn make_shards(cfg: &RunCfg, train: &Dataset) -> Vec<Dataset> {
+    match cfg.data.hetero_alpha {
+        Some(a) => shard::dirichlet(train, cfg.workers, a, cfg.data.seed),
+        None => shard::uniform(train, cfg.workers, cfg.data.seed),
+    }
+}
+
+/// θ₀ for the run — the server needs it without building any worker.
+pub fn init_theta(cfg: &RunCfg) -> Result<Vec<f32>> {
+    let tt = data::load(&cfg.data.name, cfg.data.n_train, cfg.data.n_test, cfg.data.seed)?;
+    let (features, classes) = (tt.train.features, tt.train.classes);
+    match cfg.model {
+        ModelKind::LogReg => Ok(LogRegModel::new(features, classes).init_params(cfg.seed)),
+        ModelKind::Mlp => {
+            Ok(MlpModel::new(features, cfg.hidden, classes).init_params(cfg.seed))
+        }
+        ModelKind::Transformer => Err(Error::Config(
+            "transport = tcp drives the native backend (logreg/mlp)".into(),
+        )),
+    }
+}
+
+/// Build worker `m`'s gradient node from the config alone — the worker
+/// process's half of the deterministic-derivation contract.
+pub fn worker_node(cfg: &RunCfg, m: usize) -> Result<WorkerNode<dyn WorkerGrad>> {
+    if m >= cfg.workers {
+        return Err(Error::Config(format!(
+            "worker index {m} out of range (workers = {})",
+            cfg.workers
+        )));
+    }
+    let codec = lazy_codec_for(cfg.algo).unwrap_or(LazyCodec::Quantized);
+    let tt = data::load(&cfg.data.name, cfg.data.n_train, cfg.data.n_test, cfg.data.seed)?;
+    let shards = make_shards(cfg, &tt.train);
+    let lc = LossCfg {
+        n_global: shards.iter().map(|s| s.n).sum(),
+        l2: cfg.l2,
+        n_workers: cfg.workers,
+    };
+    let s = shards
+        .into_iter()
+        .nth(m)
+        .expect("m < workers implies a shard");
+    let oracle: Box<dyn WorkerGrad> = match cfg.model {
+        ModelKind::LogReg => Box::new(LogRegWorker::new(s, lc)),
+        ModelKind::Mlp => Box::new(MlpWorker::new(s, cfg.hidden, lc)),
+        ModelKind::Transformer => {
+            return Err(Error::Config(
+                "transport = tcp drives the native backend (logreg/mlp)".into(),
+            ))
+        }
+    };
+    Ok(WorkerNode::new(oracle, cfg.bits, codec))
+}
+
+// ---------------------------------------------------------------------------
+// server side
+// ---------------------------------------------------------------------------
+
+/// Knobs for [`serve`] beyond the run config itself.
+pub struct ServeOpts {
+    pub cfg: RunCfg,
+    /// bind address, e.g. `127.0.0.1:0` (the chosen port is printed as
+    /// `LISTENING <addr>` for harnesses to parse)
+    pub listen: String,
+    /// handshake + per-write timeout, and the fleet-assembly deadline
+    pub io_timeout: Duration,
+    /// how long one round waits on a mandatory report before folding a
+    /// miss event; `miss_threshold` consecutive misses retire the link
+    pub round_timeout: Duration,
+    /// suppress `ROUND` progress lines (the `RESULT` line always prints)
+    pub quiet: bool,
+}
+
+/// What a TCP run measured — the `RESULT` line's fields, returned
+/// structured for in-process callers.
+#[derive(Clone, Debug, Default)]
+pub struct TcpRunStats {
+    pub rounds: usize,
+    /// Σ over live workers of the exact shard loss at θ_final
+    pub final_loss: f64,
+    /// 8 × bytes of every Report frame received
+    pub uplink_bits: u64,
+    /// 8 × bytes of each round's Broadcast frame + the Eval frame,
+    /// billed once per round (one broadcast serves all M workers)
+    pub downlink_bits: u64,
+    pub uploads: u64,
+    pub skips: u64,
+    /// max over absorbed uploads of (absorb round − origin round);
+    /// ≤ staleness_bound by construction, asserted by the harness
+    pub max_lag: usize,
+    /// uploads absorbed with lag ≥ 1 (the cross-round path)
+    pub deferred: u64,
+    /// links retired (death, frame violation, or miss strikes)
+    pub retired: u64,
+    /// re-admitted links (each re-primed with one exact broadcast)
+    pub rejoined: u64,
+    pub primed: u64,
+    pub miss_events: u64,
+    pub demotions: u64,
+    /// every live worker's Bye counters matched the server's per-link
+    /// billing — the two-process byte-accounting cross-check
+    pub bytes_verified: bool,
+    /// workers that completed the full Eval + Bye handshake
+    pub workers_done: usize,
+    pub final_theta: Vec<f32>,
+}
+
+impl TcpRunStats {
+    /// The machine-readable summary the harness parses from stdout.
+    pub fn result_line(&self) -> String {
+        format!(
+            "RESULT rounds={} final_loss={:.9} uplink_bits={} downlink_bits={} \
+             uploads={} skips={} max_lag={} deferred={} retired={} rejoined={} \
+             primed={} miss_events={} demotions={} bytes_verified={} workers_done={}",
+            self.rounds,
+            self.final_loss,
+            self.uplink_bits,
+            self.downlink_bits,
+            self.uploads,
+            self.skips,
+            self.max_lag,
+            self.deferred,
+            self.retired,
+            self.rejoined,
+            self.primed,
+            self.miss_events,
+            self.demotions,
+            u8::from(self.bytes_verified),
+            self.workers_done,
+        )
+    }
+}
+
+/// Connection lifecycle (see the module diagram): `Active` links take
+/// the round fan-out; `Dead` slots keep their id reserved for rejoin.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum LinkPhase {
+    Active,
+    Dead,
+}
+
+/// Server-side per-worker link state: the write half of the socket plus
+/// the billing counters the `Bye` cross-check compares.
+struct Link {
+    conn: FramedConn,
+    phase: LinkPhase,
+    /// reader-thread generation — events from a pre-rejoin reader of the
+    /// same worker id are stale and must be ignored
+    gen: u64,
+    /// next origin round this worker owes a report for
+    next_report: usize,
+    /// last round this link was sent a Broadcast for
+    last_bcast: usize,
+    /// bytes of Report frames received (what uplink billing saw)
+    report_rx_bytes: u64,
+    /// bytes of Broadcast + Eval frames written to this link
+    down_tx_bytes: u64,
+    /// consecutive exhausted round_timeouts while this worker was owed
+    /// a mandatory report
+    strikes: u32,
+    health: WorkerHealth,
+}
+
+/// What a reader thread posts per received frame (or terminal error).
+type Event = (usize, u64, Result<Frame>);
+
+fn spawn_reader(m: usize, gen: u64, mut conn: FramedConn, tx: mpsc::Sender<Event>) {
+    thread::spawn(move || loop {
+        match conn.recv() {
+            Ok(f) => {
+                let last = f.kind == FrameKind::Bye;
+                if tx.send((m, gen, Ok(f))).is_err() || last {
+                    return;
+                }
+            }
+            Err(e) => {
+                let _ = tx.send((m, gen, Err(e)));
+                return;
+            }
+        }
+    });
+}
+
+/// The coordinator loop behind `laq-server`.  Binds, assembles the
+/// fleet, trains `cfg.iters` rounds under the bounded-staleness
+/// contract, evaluates, shuts every link down cleanly, and prints the
+/// `RESULT` line.
+pub fn serve(opts: &ServeOpts) -> Result<TcpRunStats> {
+    let cfg = &opts.cfg;
+    check_tcp_cfg(cfg)?;
+    let codec = lazy_codec_for(cfg.algo).unwrap_or(LazyCodec::Quantized);
+    let force_upload = matches!(cfg.algo, Algo::Gd | Algo::Qgd);
+    let theta0 = init_theta(cfg)?;
+    let dim = theta0.len();
+    let m_all = cfg.workers;
+    let bound = cfg.staleness_bound;
+    let fp = config_fingerprint(cfg);
+    let rz_on = !cfg.resilience.is_empty();
+    let strikes_max = if rz_on {
+        cfg.resilience.miss_threshold.max(1)
+    } else {
+        DEFAULT_MISS_STRIKES
+    };
+
+    let listener = TcpListener::bind(opts.listen.as_str())?;
+    listener.set_nonblocking(true)?;
+    println!("LISTENING {}", listener.local_addr()?);
+    std::io::stdout().flush()?;
+
+    let (tx, rx) = mpsc::channel::<Event>();
+    let mut links: Vec<Option<Link>> = (0..m_all).map(|_| None).collect();
+    let mut stats = TcpRunStats { bytes_verified: true, ..TcpRunStats::default() };
+
+    // fleet assembly: all M workers must hand in a matching Hello
+    // before round 0 (the run is undefined with a partial fleet)
+    let mut joined = 0usize;
+    while joined < m_all {
+        let Some((conn, hello)) = accept_hello(&listener, opts.io_timeout, opts.io_timeout)?
+        else {
+            return Err(Error::Transport(format!(
+                "fleet assembly timed out with {joined}/{m_all} workers"
+            )));
+        };
+        let m = admit(&mut links, &tx, conn, &hello, fp, dim, cfg, 0)?;
+        eprintln!("laq-server: worker {m} joined");
+        joined += 1;
+    }
+
+    let mut server = ShardedServer::new(dim, m_all, cfg.bits, cfg.criterion.d, theta0);
+
+    // absorb machinery shared with the sim path: one wire slot per
+    // worker, absorbed in arrival-order waves through absorb_pipelined
+    let mut slots: Vec<WireSlot> = (0..m_all)
+        .map(|_| {
+            let mut s = WireSlot::default();
+            if codec == LazyCodec::Quantized {
+                s.warm_innovation(dim, cfg.bits);
+            }
+            s.set_framed(true);
+            s
+        })
+        .collect();
+    let states: Vec<AtomicU8> = (0..m_all).map(|_| AtomicU8::new(WIRE_UPLOAD)).collect();
+    let wsync = WireSync::new();
+
+    // decode scratch, reused across every report
+    let mut rx_payload = match codec {
+        LazyCodec::Quantized => Payload::Innovation(QuantizedInnovation {
+            radius: 0.0,
+            codes: vec![0; dim],
+            bits: cfg.bits,
+        }),
+        LazyCodec::Exact => Payload::Dense(vec![0.0; dim]),
+    };
+
+    let mut wave: Vec<usize> = Vec::with_capacity(m_all);
+    let mut in_wave = vec![false; m_all];
+
+    for k in 0..cfg.iters {
+        // --- rejoin poll: re-admit Hellos bearing a dead worker's id ---
+        loop {
+            match accept_hello(&listener, opts.io_timeout, Duration::ZERO) {
+                Ok(Some((conn, hello))) => {
+                    let m = hello.worker as usize;
+                    let dead = m < m_all
+                        && links[m].as_ref().map_or(true, |l| l.phase == LinkPhase::Dead);
+                    if !dead {
+                        eprintln!(
+                            "laq-server: rejecting duplicate/unknown worker {}",
+                            hello.worker
+                        );
+                        conn.shutdown();
+                        continue;
+                    }
+                    match admit(&mut links, &tx, conn, &hello, fp, dim, cfg, k) {
+                        Ok(m) => {
+                            // one exact re-prime broadcast (θ only — the
+                            // recursion restarts from zero on both sides)
+                            let bc = Broadcast {
+                                round: k as u64,
+                                width: cfg.bits as u8,
+                                flags: BCAST_FLAG_PRIME,
+                                force_upload,
+                                rhs_common: 0.0,
+                                theta: server.theta.clone(),
+                            };
+                            let f = bc.to_frame();
+                            let link = links[m].as_mut().expect("just admitted");
+                            match link.conn.send(&f) {
+                                Ok(n) => {
+                                    stats.downlink_bits += 8 * n;
+                                    link.down_tx_bytes += n;
+                                    stats.rejoined += 1;
+                                    stats.primed += 1;
+                                    eprintln!("laq-server: worker {m} rejoined at round {k}");
+                                }
+                                Err(_) => kill_link(&mut links, &mut server, &mut stats, m, "prime write failed"),
+                            }
+                        }
+                        Err(e) => eprintln!("laq-server: rejoin rejected: {e}"),
+                    }
+                }
+                Ok(None) => break,
+                Err(e) => {
+                    eprintln!("laq-server: rejoin handshake failed: {e}");
+                    break;
+                }
+            }
+        }
+
+        // --- broadcast round k ---
+        let rhs_common = match cfg.criterion.mode {
+            CritMode::Movement => {
+                server.criterion_rhs_common(cfg.alpha, m_all, &cfg.criterion.xi)
+            }
+            CritMode::GradNorm => {
+                tensor::norm2_sq(&server.agg) / (2.0 * (m_all * m_all) as f64)
+            }
+        };
+        let bc = Broadcast {
+            round: k as u64,
+            width: cfg.bits as u8,
+            flags: 0,
+            force_upload,
+            rhs_common,
+            theta: server.theta.clone(),
+        };
+        let f = bc.to_frame();
+        stats.downlink_bits += 8 * f.wire_len() as u64;
+        for m in 0..m_all {
+            let Some(link) = links[m].as_mut() else { continue };
+            if link.phase != LinkPhase::Active {
+                continue;
+            }
+            match link.conn.send(&f) {
+                Ok(n) => {
+                    link.down_tx_bytes += n;
+                    link.last_bcast = k;
+                }
+                Err(_) => kill_link(&mut links, &mut server, &mut stats, m, "broadcast write failed"),
+            }
+        }
+
+        // --- drain: mandatory origins block, the rest land opportunistically ---
+        let mand = k.checked_sub(bound);
+        loop {
+            // opportunistic sweep first — everything already queued
+            while let Ok(ev) = rx.try_recv() {
+                process_event(
+                    ev, cfg, codec, dim, k, &mut links, &mut server, &mut stats,
+                    &mut rx_payload, &mut slots, &states, &wsync, &mut wave, &mut in_wave,
+                )?;
+            }
+            let Some(mand) = mand else { break };
+            if !any_laggard(&links, mand) {
+                break;
+            }
+            match rx.recv_timeout(opts.round_timeout) {
+                Ok(ev) => process_event(
+                    ev, cfg, codec, dim, k, &mut links, &mut server, &mut stats,
+                    &mut rx_payload, &mut slots, &states, &wsync, &mut wave, &mut in_wave,
+                )?,
+                Err(RecvTimeoutError::Timeout) => {
+                    strike_laggards(cfg, rz_on, strikes_max, mand, k, &mut links, &mut server, &mut stats);
+                }
+                Err(RecvTimeoutError::Disconnected) => unreachable!("serve holds a sender"),
+            }
+        }
+        flush_wave(&mut server, &mut slots, &states, &wsync, &mut wave, &mut in_wave)?;
+
+        server.apply_update(cfg.alpha);
+
+        if !opts.quiet && k % cfg.record_every.max(1) == 0 {
+            println!(
+                "ROUND {k} uploads={} skips={} retired={}",
+                stats.uploads, stats.skips, stats.retired
+            );
+            std::io::stdout().flush()?;
+        }
+    }
+    stats.rounds = cfg.iters;
+
+    // --- eval: exact shard losses at θ_final, summed = global objective ---
+    let mut ew = BodyWriter::new();
+    ew.f32_slice(&server.theta);
+    let eval_frame = ew.into_frame(FrameKind::Eval);
+    stats.downlink_bits += 8 * eval_frame.wire_len() as u64;
+    for m in 0..m_all {
+        let Some(link) = links[m].as_mut() else { continue };
+        if link.phase != LinkPhase::Active {
+            continue;
+        }
+        match link.conn.send(&eval_frame) {
+            Ok(n) => link.down_tx_bytes += n,
+            Err(_) => kill_link(&mut links, &mut server, &mut stats, m, "eval write failed"),
+        }
+    }
+    let mut eval_got = vec![false; m_all];
+    let eval_deadline = Instant::now() + opts.round_timeout.times(strikes_max);
+    while (0..m_all).any(|m| is_active(&links, m) && !eval_got[m]) {
+        match rx.recv_timeout(remaining(eval_deadline)) {
+            Ok((m, gen, res)) => {
+                if !event_current(&links, m, gen) {
+                    continue;
+                }
+                match res {
+                    // leftover cross-round reports: billed, not absorbed
+                    // (training is over; FIFO guarantees they precede the
+                    // EvalReply on the same link)
+                    Ok(f) if f.kind == FrameKind::Report => {
+                        if let Err(e) = bill_late_report(cfg, rz_on, &f, m, &mut links, &mut stats) {
+                            stats.bytes_verified = false;
+                            kill_link(&mut links, &mut server, &mut stats, m,
+                                      &format!("late report rejected: {e}"));
+                        }
+                    }
+                    Ok(f) if f.kind == FrameKind::EvalReply => {
+                        let mut r = BodyReader::new(&f.body);
+                        let parsed = r
+                            .f64("eval loss")
+                            .and_then(|l| r.expect_end("EvalReply").map(|()| l));
+                        match parsed {
+                            Ok(loss) => {
+                                stats.final_loss += loss;
+                                eval_got[m] = true;
+                            }
+                            Err(e) => kill_link(&mut links, &mut server, &mut stats, m,
+                                                &format!("bad EvalReply: {e}")),
+                        }
+                    }
+                    Ok(f) => {
+                        kill_link(&mut links, &mut server, &mut stats, m,
+                                  &format!("unexpected {:?} during eval", f.kind));
+                    }
+                    Err(e) => {
+                        kill_link(&mut links, &mut server, &mut stats, m,
+                                  &format!("reader failed during eval: {e}"));
+                    }
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                for m in 0..m_all {
+                    if is_active(&links, m) && !eval_got[m] {
+                        kill_link(&mut links, &mut server, &mut stats, m, "eval timed out");
+                    }
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => unreachable!("serve holds a sender"),
+        }
+    }
+
+    // --- shutdown handshake + two-process byte cross-check ---
+    let shutdown_frame = Frame::new(FrameKind::Shutdown, Vec::new());
+    for m in 0..m_all {
+        let Some(link) = links[m].as_mut() else { continue };
+        if link.phase != LinkPhase::Active {
+            continue;
+        }
+        if link.conn.send(&shutdown_frame).is_err() {
+            kill_link(&mut links, &mut server, &mut stats, m, "shutdown write failed");
+        }
+    }
+    let mut bye_got = vec![false; m_all];
+    let bye_deadline = Instant::now() + opts.round_timeout;
+    while (0..m_all).any(|m| is_active(&links, m) && !bye_got[m]) {
+        match rx.recv_timeout(remaining(bye_deadline)) {
+            Ok((m, gen, res)) => {
+                if !event_current(&links, m, gen) {
+                    continue;
+                }
+                match res {
+                    Ok(f) if f.kind == FrameKind::Report => {
+                        if let Err(e) = bill_late_report(cfg, rz_on, &f, m, &mut links, &mut stats) {
+                            stats.bytes_verified = false;
+                            kill_link(&mut links, &mut server, &mut stats, m,
+                                      &format!("late report rejected: {e}"));
+                        }
+                    }
+                    Ok(f) if f.kind == FrameKind::Bye => {
+                        let bye = match Bye::from_frame(&f) {
+                            Ok(b) => b,
+                            Err(e) => {
+                                stats.bytes_verified = false;
+                                kill_link(&mut links, &mut server, &mut stats, m,
+                                          &format!("bad Bye: {e}"));
+                                continue;
+                            }
+                        };
+                        let link = links[m].as_ref().expect("active link");
+                        if bye.report_tx_bytes != link.report_rx_bytes
+                            || bye.bcast_rx_bytes != link.down_tx_bytes
+                        {
+                            stats.bytes_verified = false;
+                            eprintln!(
+                                "laq-server: byte mismatch worker {m}: \
+                                 reports {} (worker) vs {} (server), \
+                                 downlink {} (worker) vs {} (server)",
+                                bye.report_tx_bytes, link.report_rx_bytes,
+                                bye.bcast_rx_bytes, link.down_tx_bytes,
+                            );
+                        }
+                        bye_got[m] = true;
+                        stats.workers_done += 1;
+                    }
+                    Ok(_) | Err(_) => {
+                        stats.bytes_verified = false;
+                        kill_link(&mut links, &mut server, &mut stats, m, "broken shutdown handshake");
+                    }
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                for m in 0..m_all {
+                    if is_active(&links, m) && !bye_got[m] {
+                        stats.bytes_verified = false;
+                        kill_link(&mut links, &mut server, &mut stats, m, "no Bye before deadline");
+                    }
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => unreachable!("serve holds a sender"),
+        }
+    }
+
+    stats.final_theta = server.theta.clone();
+    println!("{}", stats.result_line());
+    std::io::stdout().flush()?;
+    Ok(stats)
+}
+
+/// Validate a Hello against the run, ack it, and install the link
+/// (spawning its reader thread).  Returns the worker index.
+#[allow(clippy::too_many_arguments)]
+fn admit(
+    links: &mut [Option<Link>],
+    tx: &mpsc::Sender<Event>,
+    mut conn: FramedConn,
+    hello: &Hello,
+    fp: u64,
+    dim: usize,
+    cfg: &RunCfg,
+    round: usize,
+) -> Result<usize> {
+    let m = hello.worker as usize;
+    if m >= cfg.workers {
+        return Err(Error::Transport(format!(
+            "worker id {m} out of range (workers = {})",
+            cfg.workers
+        )));
+    }
+    if hello.n_workers as usize != cfg.workers
+        || hello.dim as usize != dim
+        || hello.seed != cfg.seed
+        || hello.fingerprint != fp
+    {
+        return Err(Error::Transport(format!(
+            "worker {m} handshake mismatch (n_workers/dim/seed/fingerprint) — \
+             launched with a different config?"
+        )));
+    }
+    if links[m].as_ref().is_some_and(|l| l.phase == LinkPhase::Active) {
+        return Err(Error::Transport(format!("worker id {m} already connected")));
+    }
+    conn.send(&Frame::new(FrameKind::HelloAck, Vec::new()))?;
+    // steady state: the reader thread blocks without a read timeout;
+    // liveness comes from the channel timeout + shutdown-on-retire
+    conn.set_read_timeout(None)?;
+    let gen = links[m].as_ref().map_or(0, |l| l.gen) + 1;
+    let reader = conn.try_clone()?;
+    spawn_reader(m, gen, reader, tx.clone());
+    links[m] = Some(Link {
+        conn,
+        phase: LinkPhase::Active,
+        gen,
+        next_report: round,
+        last_bcast: round.saturating_sub(1),
+        report_rx_bytes: 0,
+        down_tx_bytes: 0,
+        strikes: 0,
+        health: WorkerHealth::default(),
+    });
+    Ok(m)
+}
+
+fn is_active(links: &[Option<Link>], m: usize) -> bool {
+    links[m].as_ref().is_some_and(|l| l.phase == LinkPhase::Active)
+}
+
+/// Ignore events from a reader generation that predates a rejoin.
+fn event_current(links: &[Option<Link>], m: usize, gen: u64) -> bool {
+    m < links.len() && links[m].as_ref().is_some_and(|l| l.gen == gen)
+}
+
+/// Any live worker still owing a report for an origin ≤ `mand`?
+fn any_laggard(links: &[Option<Link>], mand: usize) -> bool {
+    links.iter().any(|l| {
+        l.as_ref()
+            .is_some_and(|l| l.phase == LinkPhase::Active && l.next_report <= mand)
+    })
+}
+
+fn remaining(deadline: Instant) -> Duration {
+    deadline.saturating_duration_since(Instant::now())
+}
+
+trait DurationExt {
+    fn times(self, n: u32) -> Duration;
+}
+impl DurationExt for Duration {
+    fn times(self, n: u32) -> Duration {
+        self.checked_mul(n.max(1)).unwrap_or(Duration::from_secs(3600))
+    }
+}
+
+/// Retire a link: zero the server-side mirror (the recursion half we
+/// own), mark the slot Dead (reserving the id for rejoin), and tear the
+/// socket down so the reader thread parks out with an error.
+fn kill_link(
+    links: &mut [Option<Link>],
+    server: &mut ShardedServer,
+    stats: &mut TcpRunStats,
+    m: usize,
+    why: &str,
+) {
+    let Some(link) = links[m].as_mut() else { return };
+    if link.phase == LinkPhase::Dead {
+        return;
+    }
+    link.phase = LinkPhase::Dead;
+    link.conn.shutdown();
+    server.retire_mirror(m);
+    stats.retired += 1;
+    eprintln!("laq-server: retiring worker {m}: {why}");
+}
+
+/// Fold one exhausted round_timeout into every laggard's health; retire
+/// links that reach the strike limit.
+#[allow(clippy::too_many_arguments)]
+fn strike_laggards(
+    cfg: &RunCfg,
+    rz_on: bool,
+    strikes_max: u32,
+    mand: usize,
+    k: usize,
+    links: &mut [Option<Link>],
+    server: &mut ShardedServer,
+    stats: &mut TcpRunStats,
+) {
+    for m in 0..links.len() {
+        let Some(link) = links[m].as_mut() else { continue };
+        if link.phase != LinkPhase::Active || link.next_report > mand {
+            continue;
+        }
+        stats.miss_events += 1;
+        link.strikes += 1;
+        if rz_on && observe_round(&mut link.health, &cfg.resilience, k, 1.0, true, false) {
+            stats.demotions += 1;
+        }
+        if link.strikes >= strikes_max {
+            kill_link(links, server, stats, m, "missed deadline");
+        }
+    }
+}
+
+/// Absorb the pending arrival-order wave through the sim path's
+/// pipelined absorber, then clear it.
+fn flush_wave(
+    server: &mut ShardedServer,
+    slots: &mut [WireSlot],
+    states: &[AtomicU8],
+    wsync: &WireSync,
+    wave: &mut Vec<usize>,
+    in_wave: &mut [bool],
+) -> Result<()> {
+    if wave.is_empty() {
+        return Ok(());
+    }
+    server.absorb_pipelined(true, wave, states, SendPtr::new(slots), wsync)?;
+    for &m in wave.iter() {
+        in_wave[m] = false;
+    }
+    wave.clear();
+    Ok(())
+}
+
+/// Handle one reader event during the round loop: a report (bill,
+/// decode, queue for absorb) or a reader failure (retire the link).
+#[allow(clippy::too_many_arguments)]
+fn process_event(
+    (m, gen, res): Event,
+    cfg: &RunCfg,
+    codec: LazyCodec,
+    dim: usize,
+    k: usize,
+    links: &mut [Option<Link>],
+    server: &mut ShardedServer,
+    stats: &mut TcpRunStats,
+    rx_payload: &mut Payload,
+    slots: &mut [WireSlot],
+    states: &[AtomicU8],
+    wsync: &WireSync,
+    wave: &mut Vec<usize>,
+    in_wave: &mut [bool],
+) -> Result<()> {
+    if !event_current(links, m, gen) {
+        return Ok(());
+    }
+    let frame = match res {
+        Ok(f) => f,
+        Err(e) => {
+            kill_link(links, server, stats, m, &format!("reader failed: {e}"));
+            return Ok(());
+        }
+    };
+    if frame.kind != FrameKind::Report {
+        kill_link(links, server, stats, m,
+                  &format!("unexpected {:?} during training", frame.kind));
+        return Ok(());
+    }
+    let rep = match Report::from_frame(&frame) {
+        Ok(r) => r,
+        Err(e) => {
+            kill_link(links, server, stats, m, &format!("bad report: {e}"));
+            return Ok(());
+        }
+    };
+    let wire = frame.wire_len() as u64;
+    {
+        let link = links[m].as_mut().expect("event_current checked");
+        // reports are strictly ordered per link (TCP FIFO + one report
+        // per broadcast) — anything else is a protocol violation
+        if rep.round != link.next_report as u64 || rep.round > k as u64 {
+            // out-of-order, or a round the server never broadcast —
+            // either way the link's protocol state is unrecoverable
+            let why = format!(
+                "bad report origin {} at round {k} (expected {})",
+                rep.round, link.next_report
+            );
+            kill_link(links, server, stats, m, &why);
+            return Ok(());
+        }
+        link.next_report += 1;
+        link.strikes = 0;
+        link.report_rx_bytes += wire;
+        stats.uplink_bits += 8 * wire;
+        if !cfg.resilience.is_empty() {
+            observe_round(&mut link.health, &cfg.resilience, k, 1.0, false, false);
+        }
+    }
+    let origin = rep.round as usize;
+    let lag = k - origin;
+    debug_assert!(lag <= cfg.staleness_bound, "staleness contract violated");
+    if !rep.uploaded {
+        stats.skips += 1;
+        return Ok(());
+    }
+    stats.uploads += 1;
+    stats.max_lag = stats.max_lag.max(lag);
+    if lag >= 1 {
+        stats.deferred += 1;
+    }
+    // decode the physical payload into the retained scratch, then park
+    // it in the worker's wire slot (the slot re-encodes through the
+    // same codec — the property-tested sim absorb path, bit for bit)
+    let decoded = match (codec, &mut *rx_payload) {
+        (LazyCodec::Quantized, Payload::Innovation(qi)) => {
+            QuantizedInnovation::decode_framed_into(&rep.payload, dim, qi)
+        }
+        (LazyCodec::Exact, Payload::Dense(v)) => dense_from_bytes(&rep.payload, dim, v),
+        _ => unreachable!("scratch payload matches the codec"),
+    };
+    if let Err(e) = decoded {
+        // billed but unusable — the sim's corrupt-frame verdict
+        let link = links[m].as_mut().expect("event_current checked");
+        if !cfg.resilience.is_empty()
+            && observe_round(&mut link.health, &cfg.resilience, k, 1.0, true, true)
+        {
+            stats.demotions += 1;
+        }
+        eprintln!("laq-server: worker {m} payload rejected: {e}");
+        return Ok(());
+    }
+    if in_wave[m] {
+        // same worker twice in one drain (it was catching up): the slot
+        // is single-occupancy, so absorb the pending wave first
+        flush_wave(server, slots, states, wsync, wave, in_wave)?;
+    }
+    slots[m].round_trip_store(rx_payload)?;
+    states[m].store(WIRE_UPLOAD, Ordering::Release);
+    in_wave[m] = true;
+    wave.push(m);
+    Ok(())
+}
+
+/// Reports arriving after the training horizon (the tail of the
+/// cross-round pipeline): billed for the accounting cross-check, health
+/// folded, but never absorbed — θ_final is already fixed.
+fn bill_late_report(
+    cfg: &RunCfg,
+    rz_on: bool,
+    frame: &Frame,
+    m: usize,
+    links: &mut [Option<Link>],
+    stats: &mut TcpRunStats,
+) -> Result<()> {
+    let rep = Report::from_frame(frame)?;
+    let link = links[m].as_mut().expect("caller checked liveness");
+    if rep.round != link.next_report as u64 {
+        return Err(Error::Transport(format!(
+            "out-of-order late report from worker {m}: origin {} expected {}",
+            rep.round, link.next_report
+        )));
+    }
+    link.next_report += 1;
+    let wire = frame.wire_len() as u64;
+    link.report_rx_bytes += wire;
+    stats.uplink_bits += 8 * wire;
+    if rep.uploaded {
+        stats.uploads += 1;
+    } else {
+        stats.skips += 1;
+    }
+    if rz_on {
+        observe_round(&mut link.health, &cfg.resilience, cfg.iters, 1.0, false, false);
+    }
+    Ok(())
+}
+
+/// Exact-codec payload: raw little-endian IEEE754, 4·dim bytes.
+fn dense_from_bytes(buf: &[u8], dim: usize, out: &mut Vec<f32>) -> Result<()> {
+    if buf.len() != 4 * dim {
+        return Err(Error::Codec(format!(
+            "dense payload is {} bytes, expected {}",
+            buf.len(),
+            4 * dim
+        )));
+    }
+    out.clear();
+    out.extend(
+        buf.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// worker side
+// ---------------------------------------------------------------------------
+
+/// Knobs for [`run_worker`].
+pub struct WorkerOpts {
+    pub cfg: RunCfg,
+    /// server address, e.g. `127.0.0.1:47000`
+    pub connect: String,
+    /// this process's worker index in `0..cfg.workers`
+    pub worker: usize,
+    /// connect-retry budget and per-read/write timeout
+    pub io_timeout: Duration,
+}
+
+fn connect_retry(addr: &str, budget: Duration) -> Result<TcpStream> {
+    let start = Instant::now();
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if start.elapsed() >= budget {
+                    return Err(Error::Io(e));
+                }
+                thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// The per-worker loop behind `laq-worker`: derive the shard from the
+/// config, handshake, then answer every Broadcast with one Report
+/// (Algorithm 2's worker side, verbatim from the sim's [`WorkerNode`])
+/// until the server says Shutdown.
+pub fn run_worker(opts: &WorkerOpts) -> Result<()> {
+    let cfg = &opts.cfg;
+    check_tcp_cfg(cfg)?;
+    let codec = lazy_codec_for(cfg.algo).unwrap_or(LazyCodec::Quantized);
+    let mut node = worker_node(cfg, opts.worker)?;
+    let dim = node.dim();
+    let force_upload_algo = matches!(cfg.algo, Algo::Gd | Algo::Qgd);
+
+    let stream = connect_retry(&opts.connect, opts.io_timeout)?;
+    let mut conn = FramedConn::new(stream, opts.io_timeout)?;
+    // the worker always has a frame owed to it within a round_timeout;
+    // a silent server means the run is over or dead either way.  Reads
+    // are budgeted generously (server rounds wait on the whole fleet).
+    conn.set_read_timeout(Some(opts.io_timeout.times(4)))?;
+    conn.send(
+        &Hello {
+            proto: PROTO_VERSION,
+            worker: opts.worker as u32,
+            n_workers: cfg.workers as u32,
+            dim: dim as u32,
+            seed: cfg.seed,
+            fingerprint: config_fingerprint(cfg),
+        }
+        .to_frame(),
+    )?;
+    let ack = conn.recv()?;
+    if ack.kind != FrameKind::HelloAck {
+        return Err(Error::Transport(format!(
+            "expected HelloAck, got {:?}",
+            ack.kind
+        )));
+    }
+
+    let mut bc = Broadcast {
+        round: 0,
+        width: 0,
+        flags: 0,
+        force_upload: false,
+        rhs_common: 0.0,
+        theta: vec![0.0; dim],
+    };
+    let mut grad = vec![0.0f32; dim];
+    let mut enc = BitWriter::with_capacity_bits(32 + 8 + cfg.bits as usize * dim);
+    let mut report_tx = 0u64;
+    let mut bcast_rx = 0u64;
+
+    loop {
+        let f = conn.recv()?;
+        match f.kind {
+            FrameKind::Broadcast => {
+                bcast_rx += f.wire_len() as u64;
+                Broadcast::read_into(&f, dim, &mut bc)?;
+                if bc.flags & BCAST_FLAG_PRIME != 0 {
+                    // θ sync only: a fresh process already holds the
+                    // zeroed recursion state the server re-primed for
+                    continue;
+                }
+                let width = u32::from(bc.width);
+                if width != cfg.bits {
+                    return Err(Error::Transport(format!(
+                        "server width {width} != configured bits {}",
+                        cfg.bits
+                    )));
+                }
+                // full deterministic gradient — the only oracle the
+                // deterministic lazy family uses
+                let loss = node.oracle.full_into(&bc.theta, &mut grad)?;
+                let d = node.lazy_decide(
+                    &grad,
+                    bc.rhs_common,
+                    cfg.criterion.t_max,
+                    force_upload_algo || bc.force_upload,
+                    width,
+                );
+                let payload: &[u8] = if d.upload {
+                    match &node.staged {
+                        Payload::Innovation(qi) => {
+                            enc.clear();
+                            qi.encode_framed_into(&mut enc);
+                            enc.as_bytes()
+                        }
+                        Payload::Dense(v) => {
+                            // byte-aligned f32 writes in the LSB-first
+                            // writer are exactly the little-endian layout
+                            // dense_from_bytes expects
+                            enc.clear();
+                            for x in v {
+                                enc.write_f32(*x);
+                            }
+                            enc.as_bytes()
+                        }
+                        _ => unreachable!("lazy codecs stage Innovation or Dense"),
+                    }
+                } else {
+                    &[]
+                };
+                let rep = Report {
+                    round: bc.round,
+                    loss,
+                    lhs: d.lhs,
+                    rhs: d.rhs,
+                    eps_sq: d.eps_sq,
+                    uploaded: d.upload,
+                    payload: payload.to_vec(),
+                };
+                report_tx += conn.send(&rep.to_frame())?;
+                node.commit(&d);
+            }
+            FrameKind::Eval => {
+                bcast_rx += f.wire_len() as u64;
+                let mut r = BodyReader::new(&f.body);
+                let mut theta = Vec::new();
+                r.f32_into(dim, &mut theta, "eval theta")?;
+                r.expect_end("Eval")?;
+                let loss = node.oracle.full_into(&theta, &mut grad)?;
+                let mut w = BodyWriter::new();
+                w.f64(loss);
+                conn.send(&w.into_frame(FrameKind::EvalReply))?;
+            }
+            FrameKind::Shutdown => {
+                conn.send(
+                    &Bye { report_tx_bytes: report_tx, bcast_rx_bytes: bcast_rx }.to_frame(),
+                )?;
+                return Ok(());
+            }
+            other => {
+                return Err(Error::Transport(format!(
+                    "unexpected {other:?} from server"
+                )))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tcp_cfg() -> RunCfg {
+        let mut c = RunCfg::paper_logreg(Algo::Laq);
+        c.data.name = "ijcnn1".into();
+        c.data.n_train = 200;
+        c.data.n_test = 50;
+        c.workers = 4;
+        c.iters = 5;
+        c
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_sensitive() {
+        let a = config_fingerprint(&tcp_cfg());
+        let b = config_fingerprint(&tcp_cfg());
+        assert_eq!(a, b, "fingerprint must be a pure function of the config");
+        let mut c = tcp_cfg();
+        c.alpha *= 2.0;
+        assert_ne!(a, config_fingerprint(&c), "α must be run-defining");
+        let mut c = tcp_cfg();
+        c.data.seed += 1;
+        assert_ne!(a, config_fingerprint(&c), "data seed must be run-defining");
+    }
+
+    #[test]
+    fn tcp_cfg_gate() {
+        assert!(check_tcp_cfg(&tcp_cfg()).is_ok());
+        for algo in [Algo::Sgd, Algo::Slaq, Algo::Qsgd, Algo::EfSgd, Algo::Ssgd] {
+            let mut c = tcp_cfg();
+            c.algo = algo;
+            assert!(check_tcp_cfg(&c).is_err(), "{algo:?} must be rejected");
+        }
+        let mut c = tcp_cfg();
+        c.scenario.hetero_alpha = Some(0.2);
+        assert!(check_tcp_cfg(&c).is_err(), "scenarios must be rejected");
+    }
+
+    #[test]
+    fn worker_nodes_match_server_theta() {
+        let cfg = tcp_cfg();
+        let theta0 = init_theta(&cfg).unwrap();
+        for m in 0..cfg.workers {
+            let node = worker_node(&cfg, m).unwrap();
+            assert_eq!(node.dim(), theta0.len());
+        }
+        assert!(worker_node(&cfg, cfg.workers).is_err());
+    }
+
+    #[test]
+    fn dense_codec_roundtrip() {
+        let v = [1.0f32, -2.5, 0.0, 3.25];
+        let bytes: Vec<u8> = v.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let mut out = Vec::new();
+        dense_from_bytes(&bytes, 4, &mut out).unwrap();
+        assert_eq!(out, v);
+        assert!(dense_from_bytes(&bytes[..15], 4, &mut out).is_err());
+    }
+}

@@ -7,7 +7,9 @@
 //!
 //! See README.md for the full walkthrough.
 
-use laq::config::{Algo, Backend, BitScheduleKind, DownlinkMode, ModelKind, RunCfg, WireMode};
+use laq::config::{
+    Algo, Backend, BitScheduleKind, DownlinkMode, ModelKind, RunCfg, TransportMode, WireMode,
+};
 use laq::experiments::{self, ExpOpts};
 use laq::util::cli::{usage, ArgSpec, Args};
 
@@ -36,7 +38,7 @@ fn print_help() {
         "laq — Lazily Aggregated Quantized Gradients (NeurIPS 2019) reproduction\n\n\
          USAGE: laq <exp|train|list> [OPTIONS]\n\n\
          laq exp   --id <fig3|fig4|fig5|fig6|fig7|fig8|table2|table3|prop1> [--full] [--backend native|pjrt] [--out DIR] [--seed N]\n\
-         laq train --algo <gd|qgd|lag|laq|sgd|qsgd|ssgd|slaq|efsgd> [--model logreg|mlp] [--config FILE] [--iters N] [--alpha A] [--bits B] [--bit-schedule fixed|round-decay|innovation] [--bits-min L] [--bits-max H] [--downlink exact|quantized] [--down-bits-min L] [--down-bits-max H] [--threads T] [--server-shards S] [--wire-mode sync|async|async-cross] [--staleness-bound K] [--resilience-cadence C] [--miss-threshold N] [--restore-rounds N] [--max-retries R] [--backoff-base S] [--backoff-cap S] [--quorum Q] [--staleness-slack K] [--t-fixed S] [--t-per-bit S] [--backend native|pjrt]\n\
+         laq train --algo <gd|qgd|lag|laq|sgd|qsgd|ssgd|slaq|efsgd> [--model logreg|mlp] [--config FILE] [--iters N] [--alpha A] [--bits B] [--bit-schedule fixed|round-decay|innovation] [--bits-min L] [--bits-max H] [--downlink exact|quantized] [--down-bits-min L] [--down-bits-max H] [--threads T] [--server-shards S] [--wire-mode sync|async|async-cross] [--staleness-bound K] [--resilience-cadence C] [--miss-threshold N] [--restore-rounds N] [--max-retries R] [--backoff-base S] [--backoff-cap S] [--quorum Q] [--staleness-slack K] [--t-fixed S] [--t-per-bit S] [--transport sim|tcp] [--listen ADDR] [--backend native|pjrt]\n\
          laq list\n"
     );
 }
@@ -126,6 +128,8 @@ fn train_spec() -> Vec<ArgSpec> {
         ArgSpec { name: "staleness-slack", help: "self-healing: extra landing-lag rounds for demoted workers (async-cross only)", default: None, is_switch: false },
         ArgSpec { name: "t-fixed", help: "latency model: per-message setup time (s, finite, >= 0)", default: None, is_switch: false },
         ArgSpec { name: "t-per-bit", help: "latency model: per-bit transfer time (s, finite, >= 0)", default: None, is_switch: false },
+        ArgSpec { name: "transport", help: "sim (in-memory network, default) | tcp (serve real laq-worker processes)", default: None, is_switch: false },
+        ArgSpec { name: "listen", help: "tcp transport: bind address (port 0 = ephemeral)", default: Some("127.0.0.1:0"), is_switch: false },
         ArgSpec { name: "backend", help: "native|pjrt", default: Some("native"), is_switch: false },
         ArgSpec { name: "dataset", help: "mnist|ijcnn1|covtype", default: None, is_switch: false },
         ArgSpec { name: "out", help: "trace output dir", default: Some("results/train"), is_switch: false },
@@ -282,7 +286,39 @@ fn cmd_train(argv: &[String]) -> i32 {
             cfg.seed = v;
         }
         cfg.backend = Backend::parse(args.get("backend").unwrap_or("native"))?;
+        if let Some(v) = args.get("transport") {
+            cfg.transport = TransportMode::parse(v)?;
+        }
         cfg.validate()?;
+
+        if cfg.transport == TransportMode::Tcp {
+            // delegate to the real parameter server: same loop as the
+            // laq-server binary, workers connect as separate processes
+            let listen = args.get("listen").unwrap_or("127.0.0.1:0").to_string();
+            eprintln!(
+                "transport = tcp: waiting for {} `laq-worker` processes \
+                 (launch each with the same config and --connect <LISTENING addr>)",
+                cfg.workers
+            );
+            let stats = laq::coordinator::tcp::serve(&laq::coordinator::tcp::ServeOpts {
+                cfg: cfg.clone(),
+                listen,
+                io_timeout: std::time::Duration::from_secs(30),
+                round_timeout: std::time::Duration::from_secs(5),
+                quiet: false,
+            })?;
+            println!(
+                "{} on {} | rounds {} | bits up {:.3e} + down {:.3e} | final loss {:.6e} | max lag {}",
+                cfg.algo.name(),
+                cfg.model.name(),
+                stats.rounds,
+                stats.uplink_bits as f64,
+                stats.downlink_bits as f64,
+                stats.final_loss,
+                stats.max_lag,
+            );
+            return Ok(());
+        }
 
         let mut trainer = laq::algo::build(&cfg, "artifacts")?;
         let res = trainer.run()?;

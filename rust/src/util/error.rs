@@ -12,6 +12,12 @@ pub enum Error {
     Experiment(String),
     Io(std::io::Error),
     Json(crate::util::json::ParseError),
+    /// TCP transport protocol violation: malformed frame header, an
+    /// oversized declared length, an out-of-order handshake, a peer that
+    /// closed mid-frame.  Distinct from [`Error::Codec`] (payload-level
+    /// damage inside a well-formed frame) and [`Error::Io`] (the socket
+    /// itself failed).
+    Transport(String),
     Msg(String),
 }
 
@@ -25,6 +31,7 @@ impl std::fmt::Display for Error {
             Error::Experiment(s) => write!(f, "experiment error: {s}"),
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Json(e) => write!(f, "json error: {e}"),
+            Error::Transport(s) => write!(f, "transport error: {s}"),
             Error::Msg(s) => write!(f, "{s}"),
         }
     }

@@ -3,7 +3,7 @@
 //! relies on: every payload survives the physical encode/decode roundtrip
 //! exactly, and `wire_bits()` equals the physically serialized size.
 
-use laq::comm::Payload;
+use laq::comm::{LatencyModel, Network, Payload};
 use laq::prop_assert;
 use laq::quant::innovation::{InnovationQuantizer, QuantizedInnovation};
 use laq::quant::qsgd::{QsgdMessage, QsgdQuantizer};
@@ -14,6 +14,7 @@ use laq::quant::signef::SignEfCompressor;
 use laq::quant::sparsify::{SparseMessage, Sparsifier};
 use laq::util::prop::Prop;
 use laq::util::rng::Rng;
+use laq::util::bitio::BitWriter;
 use laq::util::tensor::norm_inf_diff;
 
 fn rand_vec(rng: &mut Rng, p: usize, scale: f64) -> Vec<f32> {
@@ -449,6 +450,70 @@ fn quantize_is_deterministic() {
         let (a, _) = q.quantize(&g, &qp);
         let (b, _) = q.quantize(&g, &qp);
         prop_assert!(a == b, "nondeterministic quantization");
+        Ok(())
+    });
+}
+
+#[test]
+fn network_billing_matches_framed_encoder_output() {
+    // The billing entry points the trainer charges through —
+    // `Network::payload_wire_bits` (uplink, per session framing) and
+    // `Network::downlink_wire_bits` (quantized downlink) — must equal
+    // the bit count the framed encoder physically produces, with the
+    // wire byte buffer exactly ⌈bits/8⌉ long.  The TCP transport bills
+    // 8 bits per byte actually written, so any drift here would make
+    // `transport = sim` and `transport = tcp` disagree on cost.
+    Prop::new().check("billing == encoder output", |rng| {
+        let p = 1 + rng.below(1500) as usize;
+        let unframed = Network::new(1, LatencyModel::default());
+        let mut framed = Network::new(1, LatencyModel::default());
+        framed.set_framed(true);
+        for payload in random_payloads(rng, p) {
+            // fixed-framing session: billing is the payload's own size
+            prop_assert!(
+                unframed.payload_wire_bits(&payload) == payload.wire_bits(),
+                "unframed session billed differently from the payload"
+            );
+            match &payload {
+                Payload::Innovation(qi) => {
+                    let mut w = BitWriter::with_capacity_bits(qi.wire_bits_framed());
+                    qi.encode_framed_into(&mut w);
+                    let billed = framed.payload_wire_bits(&payload);
+                    prop_assert!(
+                        billed == w.len_bits(),
+                        "framed uplink billed {billed} bits, encoder wrote {}",
+                        w.len_bits()
+                    );
+                    prop_assert!(
+                        w.as_bytes().len() == billed.div_ceil(8),
+                        "framed buffer {} bytes != ceil({billed}/8)",
+                        w.as_bytes().len()
+                    );
+                    prop_assert!(
+                        Network::downlink_wire_bits(&payload) == w.len_bits(),
+                        "downlink billed differently from the framed encoder"
+                    );
+                }
+                other => {
+                    // only innovations change layout with the session
+                    // framing; everything else bills its fixed size
+                    prop_assert!(
+                        framed.payload_wire_bits(&payload) == other.wire_bits(),
+                        "framed session changed a non-innovation bill"
+                    );
+                    prop_assert!(
+                        Network::downlink_wire_bits(&payload) == other.wire_bits(),
+                        "downlink changed a non-innovation bill"
+                    );
+                }
+            }
+        }
+        // the exact-downlink helper (what the TCP broadcast bills per
+        // coordinate) is the dense payload's IEEE754 size
+        prop_assert!(
+            Network::downlink_dense_bits(p) == 32 * p,
+            "dense downlink is not raw IEEE754"
+        );
         Ok(())
     });
 }

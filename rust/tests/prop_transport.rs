@@ -1,0 +1,264 @@
+//! Adversarial property tests for the TCP transport's frame grammar
+//! (`laq::comm::transport`).  The decoder sits on a network socket, so
+//! its contract is total over arbitrary bytes:
+//!
+//!   * every strict byte prefix of a valid frame is an error — never a
+//!     panic, never a partial parse;
+//!   * an oversized declared length is rejected from the 5-byte header
+//!     alone, before any allocation can happen;
+//!   * an unknown frame-kind byte is rejected;
+//!   * every typed message parser (`Hello`/`Broadcast`/`Report`/`Bye`)
+//!     is total over truncated and over-long bodies;
+//!   * random garbage never panics the decoder.
+
+use laq::comm::transport::{
+    Broadcast, Bye, Frame, FrameKind, Hello, Report, HEADER_BYTES, MAX_FRAME_BYTES,
+    PROTO_VERSION,
+};
+use laq::prop_assert;
+use laq::quant::innovation::{InnovationQuantizer, QuantizedInnovation};
+use laq::util::prop::Prop;
+use laq::util::rng::Rng;
+
+// ---- representative frames ------------------------------------------------
+
+fn sample_hello() -> Frame {
+    Hello {
+        proto: PROTO_VERSION,
+        worker: 3,
+        n_workers: 8,
+        dim: 7841,
+        seed: 0xDEAD_BEEF,
+        fingerprint: 0x0123_4567_89AB_CDEF,
+    }
+    .to_frame()
+}
+
+fn sample_broadcast(dim: usize) -> Frame {
+    Broadcast {
+        round: 41,
+        width: 3,
+        flags: 0,
+        force_upload: false,
+        rhs_common: 0.25,
+        theta: (0..dim).map(|i| i as f32 * 0.5 - 1.0).collect(),
+    }
+    .to_frame()
+}
+
+fn sample_report(payload: Vec<u8>) -> Frame {
+    Report {
+        round: 41,
+        loss: 0.693,
+        lhs: 1.5,
+        rhs: 2.5,
+        eps_sq: 1e-4,
+        uploaded: !payload.is_empty(),
+        payload,
+    }
+    .to_frame()
+}
+
+fn sample_bye() -> Frame {
+    Bye { report_tx_bytes: 123_456, bcast_rx_bytes: 654_321 }.to_frame()
+}
+
+fn sample_frames() -> Vec<Frame> {
+    vec![
+        sample_hello(),
+        Frame::new(FrameKind::HelloAck, Vec::new()),
+        sample_broadcast(17),
+        sample_report(vec![0xAB; 37]),
+        sample_report(Vec::new()),
+        Frame::new(FrameKind::Eval, Vec::new()),
+        Frame::new(FrameKind::EvalReply, vec![0; 8]),
+        Frame::new(FrameKind::Shutdown, Vec::new()),
+        sample_bye(),
+    ]
+}
+
+// ---- frame-level grammar --------------------------------------------------
+
+#[test]
+fn every_strict_prefix_of_every_frame_errors() {
+    for f in sample_frames() {
+        let enc = f.encode();
+        assert_eq!(enc.len(), f.wire_len());
+        for cut in 0..enc.len() {
+            let r = Frame::decode(&enc[..cut]);
+            assert!(
+                r.is_err(),
+                "strict prefix {cut}/{} of {:?} frame decoded",
+                enc.len(),
+                f.kind
+            );
+        }
+        // the full buffer round-trips and consumes exactly itself
+        let (back, used) = Frame::decode(&enc).expect("full frame decodes");
+        assert_eq!(used, enc.len());
+        assert_eq!(back, f);
+        // trailing bytes belong to the next frame, not this one
+        let mut stream = enc.clone();
+        stream.extend_from_slice(&[0x55; 9]);
+        let (back2, used2) = Frame::decode(&stream).expect("frame + tail decodes");
+        assert_eq!(used2, enc.len());
+        assert_eq!(back2, f);
+    }
+}
+
+#[test]
+fn oversized_declared_length_is_rejected_from_the_header() {
+    // A hostile peer declares a huge body.  The cap check must fire from
+    // the 5 header bytes alone — before `Vec::with_capacity` — so the
+    // decoder can never be driven into an unbounded allocation.
+    for len in [MAX_FRAME_BYTES as u32 + 1, u32::MAX / 2, u32::MAX] {
+        let mut h = vec![FrameKind::Report as u8];
+        h.extend_from_slice(&len.to_le_bytes());
+        assert!(Frame::decode(&h).is_err(), "declared len {len} accepted");
+        // ...and a longer buffer with the same header fails identically,
+        // proving it is the cap (not truncation) doing the rejecting
+        let mut padded = h.clone();
+        padded.extend_from_slice(&[0; 64]);
+        assert!(Frame::decode(&padded).is_err());
+    }
+    // the cap itself is legal: a zero-length body at any valid kind is a
+    // well-formed frame
+    let empty = Frame::new(FrameKind::Shutdown, Vec::new());
+    assert!(Frame::decode(&empty.encode()).is_ok());
+}
+
+#[test]
+fn unknown_kind_bytes_are_rejected() {
+    for c in 0u8..=255 {
+        let mut buf = vec![c];
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        let r = Frame::decode(&buf);
+        match FrameKind::from_code(c) {
+            Some(kind) => {
+                let (f, used) = r.expect("valid kind with empty body decodes");
+                assert_eq!((f.kind, used), (kind, HEADER_BYTES));
+                assert!(f.body.is_empty());
+            }
+            None => assert!(r.is_err(), "kind byte 0x{c:02x} accepted"),
+        }
+    }
+}
+
+#[test]
+fn random_garbage_never_panics_the_decoder() {
+    Prop::new().check("Frame::decode is total", |rng| {
+        let n = rng.below(256) as usize;
+        let buf: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        match Frame::decode(&buf) {
+            Ok((f, used)) => {
+                prop_assert!(used <= buf.len(), "consumed past the buffer");
+                prop_assert!(used == HEADER_BYTES + f.body.len(), "consumed != frame size");
+            }
+            Err(_) => {}
+        }
+        Ok(())
+    });
+}
+
+// ---- typed-body grammar ---------------------------------------------------
+
+/// Re-frame `body[..cut]` under `kind` — a valid frame whose body was
+/// truncated in flight (the length prefix is self-consistent, so this
+/// exercises the typed parsers, not the frame decoder).
+fn truncated(kind: FrameKind, body: &[u8], cut: usize) -> Frame {
+    Frame::new(kind, body[..cut].to_vec())
+}
+
+#[test]
+fn truncated_hello_bodies_error() {
+    let f = sample_hello();
+    for cut in 0..f.body.len() {
+        assert!(Hello::from_frame(&truncated(FrameKind::Hello, &f.body, cut)).is_err());
+    }
+    assert!(Hello::from_frame(&f).is_ok());
+    // over-long bodies are a protocol violation, not silently ignored
+    let mut long = f.clone();
+    long.body.push(0);
+    assert!(Hello::from_frame(&long).is_err());
+    // so is the wrong frame kind
+    assert!(Hello::from_frame(&sample_bye()).is_err());
+}
+
+#[test]
+fn truncated_broadcast_bodies_error() {
+    let dim = 17;
+    let f = sample_broadcast(dim);
+    let mut out = Broadcast {
+        round: 0,
+        width: 0,
+        flags: 0,
+        force_upload: false,
+        rhs_common: 0.0,
+        theta: Vec::new(),
+    };
+    for cut in 0..f.body.len() {
+        let t = truncated(FrameKind::Broadcast, &f.body, cut);
+        assert!(Broadcast::read_into(&t, dim, &mut out).is_err(), "cut {cut} parsed");
+    }
+    assert!(Broadcast::read_into(&f, dim, &mut out).is_ok());
+    assert_eq!(out.theta.len(), dim);
+    let mut long = f.clone();
+    long.body.push(0);
+    assert!(Broadcast::read_into(&long, dim, &mut out).is_err());
+    // a θ sized for a different model dimension must not parse either
+    assert!(Broadcast::read_into(&f, dim + 1, &mut out).is_err());
+}
+
+#[test]
+fn truncated_report_and_bye_bodies_error() {
+    // Report: the fixed head (round + 4 metrics + uploaded flag) must be
+    // complete; everything after it is payload, whose own truncation is
+    // the payload codec's job (see the framed-innovation test below).
+    let head_len = 8 + 4 * 8 + 1;
+    let f = sample_report(vec![0xCD; 21]);
+    for cut in 0..head_len {
+        assert!(Report::from_frame(&truncated(FrameKind::Report, &f.body, cut)).is_err());
+    }
+    let r = Report::from_frame(&f).expect("full report parses");
+    assert!(r.uploaded && r.payload.len() == 21);
+    // a skip report carries no payload — trailing bytes are a violation
+    let skip = sample_report(Vec::new());
+    assert!(Report::from_frame(&skip).is_ok());
+    let mut long = skip.clone();
+    long.body.push(0);
+    assert!(Report::from_frame(&long).is_err());
+
+    let b = sample_bye();
+    for cut in 0..b.body.len() {
+        assert!(Bye::from_frame(&truncated(FrameKind::Bye, &b.body, cut)).is_err());
+    }
+    assert!(Bye::from_frame(&b).is_ok());
+    let mut long = b.clone();
+    long.body.push(0);
+    assert!(Bye::from_frame(&long).is_err());
+}
+
+#[test]
+fn truncated_framed_innovation_payloads_error() {
+    // The payload inside an uploaded Report rides the framed innovation
+    // layout; a payload cut anywhere must surface as Err(Codec) from the
+    // codec, never a panic and never a silent short vector.
+    Prop::new().check("framed innovation decode is total", |rng| {
+        let p = 1 + rng.below(64) as usize;
+        let bits = 1 + rng.below(8) as u32;
+        let g: Vec<f32> = (0..p).map(|_| rng.normal() as f32).collect();
+        let qp = vec![0.0f32; p];
+        let (qi, _) = InnovationQuantizer::new(bits).quantize(&g, &qp);
+        let enc = qi.encode_framed();
+        for cut in 0..enc.len() {
+            prop_assert!(
+                QuantizedInnovation::decode_framed(&enc[..cut], p).is_err(),
+                "prefix {cut}/{} of framed innovation (p={p} b={bits}) decoded",
+                enc.len()
+            );
+        }
+        let back = QuantizedInnovation::decode_framed(&enc, p).map_err(|e| e.to_string())?;
+        prop_assert!(back == qi, "framed roundtrip mismatch");
+        Ok(())
+    });
+}

@@ -1,0 +1,414 @@
+//! Loopback contract tests for the real TCP transport.
+//!
+//! Spawns the release `laq-server` binary plus M `laq-worker` processes
+//! on `127.0.0.1:0` (ephemeral port, parsed from the server's
+//! `LISTENING` line), trains strongly convex logistic regression, and
+//! checks the bounded-staleness contract against an in-process
+//! simulated run:
+//!
+//!   (1) observed `max_lag` never exceeds the configured bound;
+//!   (2) per-direction bit accounting equals the bytes actually framed
+//!       on the wire (the server cross-checks its counters against each
+//!       worker's `Bye` counters and reports `bytes_verified`);
+//!   (3) the final loss lands within the same tolerance band
+//!       `tests/staleness_contract.rs` uses for the in-memory
+//!       async-cross runs — `tol = 0.04 * (1 + bound)` relative to the
+//!       synchronous baseline;
+//!   (4) a worker process killed mid-run is retired through the
+//!       `[resilience]` miss/demote path instead of wedging the fleet,
+//!       and a replacement process with the same `--worker` index is
+//!       re-admitted and primed with exactly one broadcast.
+//!
+//! Every fleet member is launched from the same config file + flags, so
+//! the handshake fingerprint agrees.  Tests skip (with a logged reason)
+//! when the binaries are missing — e.g. under a harness that compiled
+//! only the test target.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use laq::config::{Algo, DownlinkMode, RunCfg, WireMode};
+
+const SERVER_BIN: &str = env!("CARGO_BIN_EXE_laq-server");
+const WORKER_BIN: &str = env!("CARGO_BIN_EXE_laq-worker");
+
+/// Both transport binaries, or `None` (with a logged reason) when the
+/// harness didn't build them.
+fn bins() -> Option<(&'static str, &'static str)> {
+    if Path::new(SERVER_BIN).exists() && Path::new(WORKER_BIN).exists() {
+        Some((SERVER_BIN, WORKER_BIN))
+    } else {
+        eprintln!(
+            "skipping transport loopback test: laq-server/laq-worker not built \
+             (expected at {SERVER_BIN} and {WORKER_BIN}; run `cargo build --bins`)"
+        );
+        None
+    }
+}
+
+// ---- process plumbing -----------------------------------------------------
+
+/// Kills every child on drop so a failed assertion can't leak worker
+/// processes into the test harness.
+struct Reaper {
+    children: Vec<Child>,
+}
+
+impl Reaper {
+    fn new() -> Self {
+        Reaper { children: Vec::new() }
+    }
+
+    fn push(&mut self, c: Child) -> usize {
+        self.children.push(c);
+        self.children.len() - 1
+    }
+}
+
+impl Drop for Reaper {
+    fn drop(&mut self) {
+        for c in &mut self.children {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+/// Shared config file: everything not expressible as a CLI flag.  The
+/// same file is handed to the server and every worker, so the
+/// handshake fingerprint (which covers the dataset shape) matches.
+fn write_cfg(tag: &str, body: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!(
+        "laq_loopback_{tag}_{}.toml",
+        std::process::id()
+    ));
+    std::fs::write(&p, body).expect("write loopback config");
+    p
+}
+
+struct FleetSpec<'a> {
+    cfg_path: &'a Path,
+    workers: usize,
+    iters: usize,
+    bound: usize,
+}
+
+impl FleetSpec<'_> {
+    fn common_flags(&self) -> Vec<String> {
+        vec![
+            "--config".into(),
+            self.cfg_path.display().to_string(),
+            "--workers".into(),
+            self.workers.to_string(),
+            "--iters".into(),
+            self.iters.to_string(),
+            "--staleness-bound".into(),
+            self.bound.to_string(),
+            "--io-timeout-ms".into(),
+            "20000".into(),
+        ]
+    }
+
+    fn spawn_server(&self) -> Child {
+        Command::new(SERVER_BIN)
+            .args(self.common_flags())
+            .args(["--listen", "127.0.0.1:0", "--round-timeout-ms", "2000"])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .expect("spawn laq-server")
+    }
+
+    fn spawn_worker(&self, addr: &str, m: usize) -> Child {
+        Command::new(WORKER_BIN)
+            .args(self.common_flags())
+            .args(["--connect", addr, "--worker", &m.to_string()])
+            .stdout(Stdio::null())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .expect("spawn laq-worker")
+    }
+}
+
+/// First line of server stdout must be `LISTENING <addr>`.
+fn read_listening(lines: &mut impl Iterator<Item = std::io::Result<String>>) -> String {
+    for line in lines {
+        let line = line.expect("read server stdout");
+        if let Some(addr) = line.strip_prefix("LISTENING ") {
+            return addr.trim().to_string();
+        }
+    }
+    panic!("server exited before printing LISTENING line");
+}
+
+/// The `RESULT key=value ...` line, parsed.
+struct ResultLine(HashMap<String, String>);
+
+impl ResultLine {
+    fn parse(line: &str) -> Self {
+        let mut kv = HashMap::new();
+        for tok in line.split_whitespace().skip(1) {
+            if let Some((k, v)) = tok.split_once('=') {
+                kv.insert(k.to_string(), v.to_string());
+            }
+        }
+        ResultLine(kv)
+    }
+
+    fn u(&self, key: &str) -> u64 {
+        self.0
+            .get(key)
+            .unwrap_or_else(|| panic!("RESULT missing {key}"))
+            .parse()
+            .unwrap_or_else(|_| panic!("RESULT {key} not an integer"))
+    }
+
+    fn f(&self, key: &str) -> f64 {
+        self.0
+            .get(key)
+            .unwrap_or_else(|| panic!("RESULT missing {key}"))
+            .parse()
+            .unwrap_or_else(|_| panic!("RESULT {key} not a number"))
+    }
+}
+
+// ---- in-process baselines -------------------------------------------------
+
+/// Contract (d) dataset from `tests/staleness_contract.rs`: strongly
+/// convex regularized logreg on ijcnn1, tiny row count for speed.
+fn contract_cfg(workers: usize, iters: usize) -> RunCfg {
+    let mut c = RunCfg::paper_logreg(Algo::Laq);
+    c.data.name = "ijcnn1".into();
+    c.data.n_train = 400;
+    c.data.n_test = 100;
+    c.workers = workers;
+    c.iters = iters;
+    c.record_every = 1;
+    // the CI matrix exports LAQ_DOWNLINK etc. as env defaults; the TCP
+    // gate requires the exact downlink, so pin it on both sides (the
+    // config file pins the subprocesses, this pins the baseline)
+    c.downlink = DownlinkMode::Exact;
+    c
+}
+
+const CONTRACT_TOML: &str = "[run]\ndownlink = \"exact\"\n\n\
+[data]\nname = \"ijcnn1\"\nn_train = 400\nn_test = 100\n";
+
+/// (first, last) recorded loss of the synchronous in-memory run the
+/// TCP fleet must reproduce up to the staleness tolerance.
+fn sim_sync_losses(mut cfg: RunCfg) -> (f64, f64) {
+    cfg.wire_mode = WireMode::Sync;
+    cfg.staleness_bound = 0;
+    let mut t = laq::algo::build_native(&cfg).expect("build sync baseline");
+    let mut first = f64::NAN;
+    let mut last = f64::NAN;
+    for i in 0..cfg.iters {
+        let s = t.step().expect("sync baseline step");
+        if i == 0 {
+            first = s.loss;
+        }
+        last = s.loss;
+    }
+    (first, last)
+}
+
+// ---- healthy-fleet contract runs ------------------------------------------
+
+/// Spawn one server + M workers, wait for RESULT, and check the full
+/// contract against the in-process synchronous baseline.
+fn run_contract_fleet(workers: usize, bound: usize) {
+    let iters = 120;
+    let cfg_path = write_cfg(&format!("m{workers}b{bound}"), CONTRACT_TOML);
+    let spec = FleetSpec { cfg_path: &cfg_path, workers, iters, bound };
+
+    let mut reap = Reaper::new();
+    let mut server = spec.spawn_server();
+    let stdout = server.stdout.take().expect("server stdout piped");
+    reap.push(server);
+    let mut lines = BufReader::new(stdout).lines();
+    let addr = read_listening(&mut lines);
+    for m in 0..workers {
+        reap.push(spec.spawn_worker(&addr, m));
+    }
+
+    let mut result = None;
+    for line in &mut lines {
+        let line = line.expect("read server stdout");
+        if line.starts_with("RESULT ") {
+            result = Some(ResultLine::parse(&line));
+            break;
+        }
+    }
+    let r = result.expect("server exited without a RESULT line");
+    drop(reap);
+    let _ = std::fs::remove_file(&cfg_path);
+
+    // protocol-level contract
+    assert_eq!(r.u("rounds"), iters as u64, "fleet must finish all rounds");
+    assert_eq!(r.u("workers_done"), workers as u64, "all workers complete shutdown");
+    assert_eq!(r.u("retired"), 0, "healthy fleet retires nobody");
+    assert_eq!(r.u("rejoined"), 0);
+    assert_eq!(
+        r.u("bytes_verified"),
+        1,
+        "billed bits must equal bytes framed on the wire (Bye cross-check)"
+    );
+    assert!(
+        r.u("max_lag") as usize <= bound,
+        "observed staleness {} exceeds bound {bound}",
+        r.u("max_lag")
+    );
+    assert!(r.u("uplink_bits") > 0 && r.u("downlink_bits") > 0);
+    assert_eq!(
+        r.u("uploads") + r.u("skips"),
+        (iters * workers) as u64,
+        "every (round, worker) pair resolves to exactly one upload or skip"
+    );
+
+    // loss-level contract: same tolerance band as staleness_contract.rs
+    // contract (d) — bounded staleness may only perturb the trajectory
+    // within 4% per round of allowed lag.
+    let (first, sync_last) = sim_sync_losses(contract_cfg(workers, iters));
+    let last = r.f("final_loss");
+    assert!(
+        last.is_finite() && last < 0.8 * first,
+        "TCP run failed to contract: first {first}, last {last}"
+    );
+    let tol = 0.04 * (1.0 + bound as f64);
+    assert!(
+        (last - sync_last).abs() <= tol * sync_last.abs().max(1e-9),
+        "bound {bound}: TCP final loss {last} drifted beyond {tol} of sync {sync_last}"
+    );
+}
+
+#[test]
+fn loopback_sync_m2_matches_sim() {
+    if bins().is_none() {
+        return;
+    }
+    run_contract_fleet(2, 0);
+}
+
+#[test]
+fn loopback_bounded_m4_within_contract() {
+    if bins().is_none() {
+        return;
+    }
+    run_contract_fleet(4, 2);
+}
+
+// ---- fault injection: kill a worker process mid-run -----------------------
+
+/// Many cheap rounds (ijcnn1, p = 22) so the kill → retire → rejoin
+/// sequence reliably fits inside the training horizon even on a slow
+/// CI box, without making the test itself slow.
+const FAULT_TOML: &str = "[run]\ndownlink = \"exact\"\n\n\
+[data]\nname = \"ijcnn1\"\nn_train = 4000\nn_test = 400\n\n\
+[resilience]\ncadence = 1\nmiss_threshold = 3\n";
+
+#[test]
+fn loopback_worker_death_and_rejoin() {
+    if bins().is_none() {
+        return;
+    }
+    let workers = 3;
+    let iters = 600;
+    let victim = 1;
+    let cfg_path = write_cfg("fault", FAULT_TOML);
+    let spec = FleetSpec { cfg_path: &cfg_path, workers, iters, bound: 2 };
+
+    let mut reap = Reaper::new();
+    let mut server = spec.spawn_server();
+    let stdout = server.stdout.take().expect("server stdout piped");
+    reap.push(server);
+    let mut lines = BufReader::new(stdout).lines();
+    let addr = read_listening(&mut lines);
+    let mut worker_ids = Vec::new();
+    for m in 0..workers {
+        worker_ids.push(reap.push(spec.spawn_worker(&addr, m)));
+    }
+
+    // Drive the fault from the server's own ROUND stream: kill the
+    // victim at the first observed round, then respawn a replacement
+    // with the same --worker index.  A replacement that connects before
+    // the server has folded the death is rejected by the handshake and
+    // exits; we respawn on subsequent ROUND lines until one sticks.
+    let mut killed = false;
+    let mut replacement: Option<usize> = None;
+    let mut respawns = 0usize;
+    let start = Instant::now();
+    let mut result = None;
+    for line in &mut lines {
+        let line = line.expect("read server stdout");
+        if line.starts_with("RESULT ") {
+            result = Some(ResultLine::parse(&line));
+            break;
+        }
+        if !line.starts_with("ROUND ") {
+            continue;
+        }
+        if !killed {
+            let w = &mut reap.children[worker_ids[victim]];
+            w.kill().expect("kill victim worker");
+            let _ = w.wait();
+            killed = true;
+            continue;
+        }
+        // respawn (or re-respawn after a handshake rejection), capped so
+        // a genuinely broken rejoin path can't loop forever
+        let rejected = match replacement {
+            None => true,
+            Some(idx) => reap.children[idx]
+                .try_wait()
+                .expect("poll replacement worker")
+                .is_some(),
+        };
+        if rejected && respawns < 20 {
+            replacement = Some(reap.push(spec.spawn_worker(&addr, victim)));
+            respawns += 1;
+        }
+        assert!(
+            start.elapsed() < Duration::from_secs(300),
+            "fault run exceeded its deadline"
+        );
+    }
+    let r = result.expect("server exited without a RESULT line");
+    assert!(killed, "run finished before the harness could inject the fault");
+    drop(reap);
+    let _ = std::fs::remove_file(&cfg_path);
+
+    // The fleet must ride the miss/retire path, not wedge: all rounds
+    // complete, the victim is retired, and the replacement is
+    // re-admitted with exactly one priming broadcast.
+    assert_eq!(r.u("rounds"), iters as u64, "fleet wedged after worker death");
+    assert!(r.u("retired") >= 1, "killed worker was never retired");
+    assert!(r.u("rejoined") >= 1, "replacement worker was never re-admitted");
+    assert!(r.u("primed") >= 1, "re-admitted worker was never primed");
+    assert_eq!(
+        r.u("primed"),
+        r.u("rejoined"),
+        "membership rules: one priming broadcast per rejoin"
+    );
+    assert_eq!(r.u("workers_done"), workers as u64, "post-rejoin fleet is whole");
+    assert!(r.u("max_lag") as usize <= 2);
+
+    // Remaining fleet still contracts: compare against the first-round
+    // loss of the equivalent in-memory run (one step is enough — the
+    // objective is the same).
+    let mut cfg = RunCfg::paper_logreg(Algo::Laq);
+    cfg.data.name = "ijcnn1".into();
+    cfg.data.n_train = 4000;
+    cfg.data.n_test = 400;
+    cfg.workers = workers;
+    cfg.iters = 1;
+    cfg.downlink = DownlinkMode::Exact;
+    let (first, _) = sim_sync_losses(cfg);
+    let last = r.f("final_loss");
+    assert!(
+        last.is_finite() && last < 0.8 * first,
+        "faulted fleet failed to contract: first {first}, last {last}"
+    );
+}
