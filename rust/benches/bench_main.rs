@@ -255,6 +255,140 @@ fn bench_server_sharded(quick: bool, entries: &mut Vec<Json>) {
     }
 }
 
+/// Tentpole bench: the block-tiled kernel twins vs their scalar
+/// references at transformer-scale dimensions — p = 512k (the sharding
+/// regime), 8M (GPT-2-small order) and 64M (out-of-core order).  Every
+/// twin pair is bit-identical (pinned by `kernel_equivalence.rs`), so
+/// this sweep measures pure wall-clock: the tiled column must never lose
+/// to scalar by more than noise, and CI gates its p50s through the
+/// `kernel_sweep` group in BENCH_trainer.json.  The 64M points run at
+/// minimal sampling (the working set alone is ~1 GB); trainer-level
+/// benches stop at 8M — the 64M regime is covered here at the kernel
+/// level where the memory footprint stays bounded.
+fn bench_kernel_sweep(quick: bool, entries: &mut Vec<Json>) {
+    use laq::coordinator::server::{
+        absorb_innovation_range_scalar, absorb_innovation_range_tiled,
+    };
+    use laq::util::bitio::{
+        pack_codes_scalar, pack_codes_tiled, unpack_codes_into_scalar,
+        unpack_codes_into_tiled, BitReader, BitWriter,
+    };
+    use laq::util::tensor::{dot_f32_scalar, dot_f32_tiled};
+
+    println!("\n== kernel twins: scalar vs block-tiled at transformer scale ==");
+    println!("   (bit-identical by contract — wall-clock only; b=3 codecs)");
+    let bits = 3u32;
+    let kernel_entry = |kernel: &str, mode: &str, p: usize, s: &Summary| {
+        Json::obj(vec![
+            ("group", Json::Str("kernel_sweep".into())),
+            ("bench", Json::Str(format!("{kernel}_{mode}_p{p}"))),
+            ("kernel", Json::Str(kernel.into())),
+            ("mode", Json::Str(mode.into())),
+            ("p", Json::Num(p as f64)),
+            ("p50_s", Json::Num(s.p50)),
+            ("p99_s", Json::Num(s.p99)),
+            ("mean_s", Json::Num(s.mean)),
+        ])
+    };
+    for &p in &[512 * 1024usize, 8 * 1024 * 1024, 64 * 1024 * 1024] {
+        // minimal sampling at the big end: the sweep is a trajectory
+        // tracker, not a microscope
+        let (w, smp, it) = if p >= 32 * 1024 * 1024 {
+            (1, 3, 1)
+        } else if quick {
+            (1, 4, 1)
+        } else {
+            (2, 10, 2)
+        };
+        let mut rng = Rng::new(11);
+        let g: Vec<f32> = (0..p).map(|_| rng.normal() as f32).collect();
+        let qp: Vec<f32> = (0..p).map(|_| rng.normal() as f32).collect();
+
+        type DotFn = fn(&[f32], &[f32]) -> f32;
+        for (mode, dot) in
+            [("scalar", dot_f32_scalar as DotFn), ("tiled", dot_f32_tiled as DotFn)]
+        {
+            let s = sample(|| { black_box(dot(black_box(&g), black_box(&qp))); }, w, smp, it);
+            let summ = report(&format!("dot_f32 [{mode}] p={p}"), &s, Some(p * 8));
+            entries.push(kernel_entry("dot_f32", mode, p, &summ));
+        }
+
+        let q = InnovationQuantizer::new(bits);
+        let mut codes: Vec<u32> = Vec::with_capacity(p);
+        let mut q_new = vec![0.0f32; p];
+        let s = sample(
+            || { black_box(q.quantize_into_scalar(&g, &qp, &mut codes, &mut q_new)); },
+            w, smp, it,
+        );
+        let summ = report(&format!("quantize [scalar] p={p}"), &s, Some(p * 4));
+        entries.push(kernel_entry("quantize", "scalar", p, &summ));
+        let s = sample(
+            || { black_box(q.quantize_into_tiled(&g, &qp, &mut codes, &mut q_new)); },
+            w, smp, it,
+        );
+        let summ = report(&format!("quantize [tiled] p={p}"), &s, Some(p * 4));
+        entries.push(kernel_entry("quantize", "tiled", p, &summ));
+        let radius = q.quantize_into_scalar(&g, &qp, &mut codes, &mut q_new);
+
+        type PackFn = fn(&[u32], u32, &mut BitWriter);
+        let mut bw = BitWriter::with_capacity_bits(p * bits as usize);
+        for (mode, pack) in
+            [("scalar", pack_codes_scalar as PackFn), ("tiled", pack_codes_tiled as PackFn)]
+        {
+            let s = sample(
+                || {
+                    bw.clear();
+                    pack(black_box(&codes), bits, &mut bw);
+                    black_box(bw.as_bytes());
+                },
+                w, smp, it,
+            );
+            let summ = report(&format!("pack b={bits} [{mode}] p={p}"), &s, Some(p * 4));
+            entries.push(kernel_entry("pack", mode, p, &summ));
+        }
+
+        type UnpackFn = fn(&mut BitReader, u32, usize, &mut Vec<u32>) -> Option<()>;
+        let bytes = bw.into_bytes();
+        let mut out: Vec<u32> = Vec::with_capacity(p);
+        for (mode, unpack) in [
+            ("scalar", unpack_codes_into_scalar as UnpackFn),
+            ("tiled", unpack_codes_into_tiled as UnpackFn),
+        ] {
+            let s = sample(
+                || {
+                    let mut r = BitReader::new(&bytes);
+                    unpack(&mut r, bits, p, &mut out).unwrap();
+                    black_box(&out);
+                },
+                w, smp, it,
+            );
+            let summ = report(&format!("unpack b={bits} [{mode}] p={p}"), &s, Some(p * 4));
+            entries.push(kernel_entry("unpack", mode, p, &summ));
+        }
+
+        // fused dequantize + aggregate + mirror-commit — the server's
+        // per-upload sweep; reuse the big buffers as agg/mirror
+        type AbsorbFn = fn(&[u32], f32, f32, &mut [f32], &mut [f32]);
+        let two_tau_r = 2.0 * radius / ((1u32 << bits) - 1) as f32;
+        let mut agg = q_new;
+        let mut mir = g;
+        for (mode, absorb) in [
+            ("scalar", absorb_innovation_range_scalar as AbsorbFn),
+            ("tiled", absorb_innovation_range_tiled as AbsorbFn),
+        ] {
+            let s = sample(
+                || {
+                    absorb(black_box(&codes), radius, two_tau_r, &mut agg, &mut mir);
+                    black_box(&agg);
+                },
+                w, smp, it,
+            );
+            let summ = report(&format!("absorb [{mode}] p={p}"), &s, Some(p * (4 + 8 + 8)));
+            entries.push(kernel_entry("absorb", mode, p, &summ));
+        }
+    }
+}
+
 fn bench_trainer_steps() {
     println!("\n== end-to-end iteration latency per algorithm (ijcnn1 1k × 5 workers) ==");
     for algo in Algo::all() {
@@ -387,8 +521,11 @@ fn bench_trainer_wire(quick: bool, entries: &mut Vec<Json>) {
     println!("\n== trainer step throughput: sync vs async vs async-cross wire phase ==");
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     println!("   (host cores: {cores}; threads=2, shards=2, LAQ b=3, staleness=4)");
+    // 8M is the trainer-level ceiling (each worker holds a p-dim mirror,
+    // so M × p already dominates RAM); the 64M regime is swept at the
+    // kernel level by `bench_kernel_sweep` instead
     let combos: &[(usize, usize)] = if quick {
-        &[(5, 7840), (100, 7840), (5, 512 * 1024)]
+        &[(5, 7840), (100, 7840), (5, 512 * 1024), (2, 8 * 1024 * 1024)]
     } else {
         &[
             (5, 7840),
@@ -397,6 +534,8 @@ fn bench_trainer_wire(quick: bool, entries: &mut Vec<Json>) {
             (5, 512 * 1024),
             (20, 512 * 1024),
             (100, 512 * 1024),
+            (2, 8 * 1024 * 1024),
+            (5, 8 * 1024 * 1024),
         ]
     };
     for &(m, p) in combos {
@@ -800,8 +939,9 @@ fn main() {
     let mut trainer_entries: Vec<Json> = Vec::new();
     let t0 = Instant::now();
     if quick {
-        println!("LAQ bench harness — QUICK smoke (sharded server + trainer wire/bits groups)");
+        println!("LAQ bench harness — QUICK smoke (sharded server + kernel sweep + trainer wire/bits groups)");
         bench_server_sharded(true, &mut entries);
+        bench_kernel_sweep(true, &mut trainer_entries);
         bench_trainer_wire(true, &mut trainer_entries);
         bench_bit_schedules(true, &mut trainer_entries);
         bench_trainer_scenario(true, &mut trainer_entries);
@@ -814,6 +954,7 @@ fn main() {
         bench_trainer_steps();
         bench_parallel_fanout(&mut entries);
         bench_server_sharded(false, &mut entries);
+        bench_kernel_sweep(false, &mut trainer_entries);
         bench_trainer_wire(false, &mut trainer_entries);
         bench_bit_schedules(false, &mut trainer_entries);
         bench_trainer_scenario(false, &mut trainer_entries);

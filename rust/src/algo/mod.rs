@@ -696,6 +696,9 @@ impl Trainer {
         latency: LatencyModel,
     ) -> Result<Self> {
         cfg.validate()?;
+        // pin the process-wide kernel twins before any hot path runs;
+        // scalar and tiled are bit-identical, so this is wall-clock only
+        crate::util::kernel::set_mode(cfg.kernels);
         if nodes.is_empty() {
             return Err(Error::Config("no workers".into()));
         }

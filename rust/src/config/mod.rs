@@ -10,6 +10,7 @@
 pub mod toml;
 
 use crate::util::json::Json;
+use crate::util::kernel::KernelMode;
 use crate::{Error, Result};
 
 /// Which optimization algorithm drives the run (paper §4 comparisons).
@@ -778,6 +779,16 @@ fn default_downlink() -> DownlinkMode {
         .unwrap_or(DownlinkMode::Exact)
 }
 
+/// Default kernel mode: the `LAQ_KERNELS` environment variable when set
+/// (`rust/ci.sh` runs the suite over both kernel twins this way), else
+/// [`KernelMode::Tiled`].
+fn default_kernels() -> KernelMode {
+    std::env::var("LAQ_KERNELS")
+        .ok()
+        .and_then(|v| KernelMode::parse(&v).ok())
+        .unwrap_or(KernelMode::Tiled)
+}
+
 /// A full training run.
 #[derive(Clone, Debug)]
 pub struct RunCfg {
@@ -883,6 +894,14 @@ pub struct RunCfg {
     /// No env-var default: crossing a process boundary is always an
     /// explicit choice.
     pub transport: TransportMode,
+    /// hot-kernel implementation: [`KernelMode::Tiled`] (block-tiled
+    /// rewrites, the default) or [`KernelMode::Scalar`] (the plain
+    /// reference loops).  Both evaluate the same fixed reduction order,
+    /// so every trace is bit-identical across the knob
+    /// (`rust/tests/kernel_equivalence.rs`) — purely a wall-clock dial
+    /// like `threads`/`server_shards`.  Default: `LAQ_KERNELS` env var
+    /// if set, else tiled.
+    pub kernels: KernelMode,
 }
 
 impl RunCfg {
@@ -919,6 +938,7 @@ impl RunCfg {
             scenario: ScenarioCfg::default(),
             resilience: ResilienceCfg::default(),
             transport: TransportMode::Sim,
+            kernels: default_kernels(),
         }
     }
 
@@ -1113,6 +1133,15 @@ impl RunCfg {
                 Error::Config("transport must be a string: \"sim\" | \"tcp\"".into())
             })?;
             self.transport = TransportMode::parse(s)?;
+        }
+        let kn = run.get("kernels");
+        if !kn.is_null() {
+            // strict like wire_mode: present-but-wrong-typed must error,
+            // not silently leave the tiled kernels in place
+            let s = kn.as_str().ok_or_else(|| {
+                Error::Config("kernels must be a string: \"scalar\" | \"tiled\"".into())
+            })?;
+            self.kernels = KernelMode::parse(s)?;
         }
         let dl = run.get("downlink");
         if !dl.is_null() {
@@ -1357,6 +1386,12 @@ impl RunCfg {
         if self.transport != TransportMode::Sim {
             run_keys.push(("transport", Json::Str(self.transport.name().into())));
         }
+        // tiled is the implicit default, and the knob never changes a
+        // result: emitting the key only for scalar keeps every recorded
+        // config artifact byte-identical to the pre-kernel layout
+        if self.kernels != KernelMode::Tiled {
+            run_keys.push(("kernels", Json::Str(self.kernels.name().into())));
+        }
         let mut doc = vec![
             ("run", Json::obj(run_keys)),
             ("criterion", Json::obj(vec![
@@ -1474,6 +1509,35 @@ mod tests {
         assert!(
             !recorded.contains("transport"),
             "sim runs must not grow a transport key"
+        );
+    }
+
+    #[test]
+    fn kernels_knob_parses_strictly() {
+        let mut c = RunCfg::paper_logreg(Algo::Laq);
+        c.kernels = KernelMode::Tiled; // pin, independent of LAQ_KERNELS
+        c.apply_json(&toml::parse("\n[run]\nkernels = \"scalar\"\n").unwrap())
+            .unwrap();
+        assert_eq!(c.kernels, KernelMode::Scalar);
+        // present-but-wrong-typed and unknown values must error, not
+        // silently leave the tiled kernels in place
+        assert!(c
+            .apply_json(&toml::parse("\n[run]\nkernels = 1\n").unwrap())
+            .is_err());
+        assert!(c
+            .apply_json(&toml::parse("\n[run]\nkernels = \"simd\"\n").unwrap())
+            .is_err());
+        // the recorded config carries the key only when it deviates from
+        // tiled, so pre-kernel config artifacts stay byte-identical
+        let mut c2 = RunCfg::paper_logreg(Algo::Laq);
+        c2.kernels = KernelMode::Tiled;
+        c2.apply_json(&c.to_json()).unwrap();
+        assert_eq!(c2.kernels, KernelMode::Scalar, "scalar must roundtrip");
+        c.kernels = KernelMode::Tiled;
+        let recorded = format!("{:?}", c.to_json());
+        assert!(
+            !recorded.contains("kernels"),
+            "tiled runs must not grow a kernels key"
         );
     }
 

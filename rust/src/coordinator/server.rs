@@ -123,9 +123,43 @@ impl WireSync {
 
 /// LAG-style full-precision refresh on one range: `∇ += g − mirror`,
 /// `mirror = g`.  Slices are pre-cut to the same shard range.
+/// Dispatches to the scalar/tiled twins on [`crate::util::kernel::mode`];
+/// the sweep is a per-coordinate map (no cross-coordinate reduction) so
+/// the twins are bit-identical.
 #[inline]
-fn absorb_dense_range(g: &[f32], agg: &mut [f32], mir: &mut [f32]) {
+pub fn absorb_dense_range(g: &[f32], agg: &mut [f32], mir: &mut [f32]) {
+    match crate::util::kernel::mode() {
+        crate::util::kernel::KernelMode::Scalar => absorb_dense_range_scalar(g, agg, mir),
+        crate::util::kernel::KernelMode::Tiled => absorb_dense_range_tiled(g, agg, mir),
+    }
+}
+
+/// Scalar reference twin of [`absorb_dense_range`].
+pub fn absorb_dense_range_scalar(g: &[f32], agg: &mut [f32], mir: &mut [f32]) {
     for i in 0..g.len() {
+        agg[i] += g[i] - mir[i];
+        mir[i] = g[i];
+    }
+}
+
+/// Block-tiled twin of [`absorb_dense_range`]: 16-wide fixed-size blocks
+/// so the three streams (read g, read-modify agg, write mir) vectorize
+/// without the compiler having to reason about aliasing across the whole
+/// slice.  Same per-coordinate expression — bit-identical.
+pub fn absorb_dense_range_tiled(g: &[f32], agg: &mut [f32], mir: &mut [f32]) {
+    let n = g.len();
+    let blocks = n / 16;
+    for blk in 0..blocks {
+        let o = blk * 16;
+        let gs = &g[o..o + 16];
+        let ags = &mut agg[o..o + 16];
+        let mis = &mut mir[o..o + 16];
+        for l in 0..16 {
+            ags[l] += gs[l] - mis[l];
+            mis[l] = gs[l];
+        }
+    }
+    for i in blocks * 16..n {
         agg[i] += g[i] - mir[i];
         mir[i] = g[i];
     }
@@ -137,8 +171,28 @@ fn absorb_dense_range(g: &[f32], agg: &mut [f32], mir: &mut [f32]) {
 /// `two_tau_r` is derived from the *payload's own* width — under an
 /// adaptive bit schedule each upload lands at the width it was quantized
 /// with, which is exactly the width the worker's reconstruction used.
+/// Dispatches to the scalar/tiled twins on [`crate::util::kernel::mode`];
+/// per-coordinate map, so the twins are bit-identical.
 #[inline]
-fn absorb_innovation_range(
+pub fn absorb_innovation_range(
+    codes: &[u32],
+    radius: f32,
+    two_tau_r: f32,
+    agg: &mut [f32],
+    mir: &mut [f32],
+) {
+    match crate::util::kernel::mode() {
+        crate::util::kernel::KernelMode::Scalar => {
+            absorb_innovation_range_scalar(codes, radius, two_tau_r, agg, mir)
+        }
+        crate::util::kernel::KernelMode::Tiled => {
+            absorb_innovation_range_tiled(codes, radius, two_tau_r, agg, mir)
+        }
+    }
+}
+
+/// Scalar reference twin of [`absorb_innovation_range`].
+pub fn absorb_innovation_range_scalar(
     codes: &[u32],
     radius: f32,
     two_tau_r: f32,
@@ -153,10 +207,69 @@ fn absorb_innovation_range(
     }
 }
 
-/// Fresh-sum absorb on one range: `∇ += g`.
+/// Block-tiled twin of [`absorb_innovation_range`]: 16-wide blocks over
+/// the identical [`crate::quant::innovation::reconstruct_coord`]
+/// expression — bit-identical to the scalar twin.
+pub fn absorb_innovation_range_tiled(
+    codes: &[u32],
+    radius: f32,
+    two_tau_r: f32,
+    agg: &mut [f32],
+    mir: &mut [f32],
+) {
+    let n = codes.len();
+    let blocks = n / 16;
+    for blk in 0..blocks {
+        let o = blk * 16;
+        let cs = &codes[o..o + 16];
+        let ags = &mut agg[o..o + 16];
+        let mis = &mut mir[o..o + 16];
+        for l in 0..16 {
+            let q_new =
+                crate::quant::innovation::reconstruct_coord(mis[l], two_tau_r, cs[l], radius);
+            ags[l] += q_new - mis[l];
+            mis[l] = q_new;
+        }
+    }
+    for i in blocks * 16..n {
+        let q_new =
+            crate::quant::innovation::reconstruct_coord(mir[i], two_tau_r, codes[i], radius);
+        agg[i] += q_new - mir[i];
+        mir[i] = q_new;
+    }
+}
+
+/// Fresh-sum absorb on one range: `∇ += g`.  Dispatches to the
+/// scalar/tiled twins on [`crate::util::kernel::mode`]; bit-identical.
 #[inline]
-fn absorb_fresh_range(add: &[f32], agg: &mut [f32]) {
+pub fn absorb_fresh_range(add: &[f32], agg: &mut [f32]) {
+    match crate::util::kernel::mode() {
+        crate::util::kernel::KernelMode::Scalar => absorb_fresh_range_scalar(add, agg),
+        crate::util::kernel::KernelMode::Tiled => absorb_fresh_range_tiled(add, agg),
+    }
+}
+
+/// Scalar reference twin of [`absorb_fresh_range`].
+pub fn absorb_fresh_range_scalar(add: &[f32], agg: &mut [f32]) {
     for i in 0..add.len() {
+        agg[i] += add[i];
+    }
+}
+
+/// Block-tiled twin of [`absorb_fresh_range`] (16-wide blocks; this is
+/// `axpy` with `a = 1` — same shape as `tensor::axpy_tiled`).
+pub fn absorb_fresh_range_tiled(add: &[f32], agg: &mut [f32]) {
+    let n = add.len();
+    let blocks = n / 16;
+    for blk in 0..blocks {
+        let o = blk * 16;
+        let xs = &add[o..o + 16];
+        let ys = &mut agg[o..o + 16];
+        for l in 0..16 {
+            ys[l] += xs[l];
+        }
+    }
+    for i in blocks * 16..n {
         agg[i] += add[i];
     }
 }
@@ -886,6 +999,40 @@ mod tests {
         s.absorb_lazy(1, &Payload::Innovation(qi)).unwrap();
         assert_eq!(s.q_mirror[1], q_new);
         assert!(s.check_aggregate_invariant() < 1e-5);
+    }
+
+    #[test]
+    fn absorb_range_twins_bit_identical_across_shapes() {
+        // shapes straddling the 16-wide tile and the DELTA_BLOCK shard
+        // boundary: empty, tile-1, tile+1, block-1/block/block+1
+        for p in [0usize, 1, 15, 16, 17, 100, DELTA_BLOCK - 1, DELTA_BLOCK, DELTA_BLOCK + 1] {
+            let g = grad(900 + p as u64, p);
+            let agg0 = grad(901 + p as u64, p);
+            let mir0 = grad(902 + p as u64, p);
+
+            let (mut ag_s, mut mi_s) = (agg0.clone(), mir0.clone());
+            let (mut ag_t, mut mi_t) = (agg0.clone(), mir0.clone());
+            absorb_dense_range_scalar(&g, &mut ag_s, &mut mi_s);
+            absorb_dense_range_tiled(&g, &mut ag_t, &mut mi_t);
+            let b = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(b(&ag_s), b(&ag_t), "dense agg drift p={p}");
+            assert_eq!(b(&mi_s), b(&mi_t), "dense mir drift p={p}");
+
+            let codes: Vec<u32> = (0..p).map(|i| (i % 8) as u32).collect();
+            let (radius, two_tau_r) = (1.5f32, 0.375f32);
+            let (mut ag_s, mut mi_s) = (agg0.clone(), mir0.clone());
+            let (mut ag_t, mut mi_t) = (agg0.clone(), mir0.clone());
+            absorb_innovation_range_scalar(&codes, radius, two_tau_r, &mut ag_s, &mut mi_s);
+            absorb_innovation_range_tiled(&codes, radius, two_tau_r, &mut ag_t, &mut mi_t);
+            assert_eq!(b(&ag_s), b(&ag_t), "innovation agg drift p={p}");
+            assert_eq!(b(&mi_s), b(&mi_t), "innovation mir drift p={p}");
+
+            let mut ag_s = agg0.clone();
+            let mut ag_t = agg0.clone();
+            absorb_fresh_range_scalar(&g, &mut ag_s);
+            absorb_fresh_range_tiled(&g, &mut ag_t);
+            assert_eq!(b(&ag_s), b(&ag_t), "fresh agg drift p={p}");
+        }
     }
 
     #[test]

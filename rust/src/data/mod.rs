@@ -9,22 +9,165 @@
 //! [`shard`] splits a dataset across M workers either uniformly (the
 //! paper's main setting) or with Dirichlet class skew (the heterogeneity
 //! study / Proposition 1).
+//!
+//! # Out-of-core storage
+//!
+//! Feature/label arrays live in a [`FlatStore`], which is either an owned
+//! `Vec` (the historical layout, still the default for every synthesized
+//! dataset) or a zero-copy view into a read-only memory-mapped shard file
+//! (`"shard:<path>"` datasets, see [`shard::open_shard`]).  `FlatStore`
+//! derefs to `&[T]`, so every consumer — the models, the `Batcher`, the
+//! trainers — reads both representations through the identical slice
+//! code path: an out-of-core run is bit-identical to an in-RAM run by
+//! construction (pinned in `rust/tests/integration.rs`).  Mutation
+//! (`DerefMut`) copies a mapped store to an owned one first, so the
+//! synthesizer's in-place transforms keep working unchanged and the
+//! read-only mapping is never written through.
 
 pub mod shard;
 pub mod synth;
 
+use std::ops::{Deref, DerefMut};
+use std::sync::Arc;
+
 use crate::{Error, Result};
 
-/// Dense in-memory classification dataset (row-major features).
+/// Flat element storage: an owned `Vec<T>` or a zero-copy window into a
+/// read-only [`shard::Mmap`].  See the module doc for the contract.
+pub struct FlatStore<T: Copy> {
+    repr: Repr<T>,
+}
+
+enum Repr<T: Copy> {
+    Owned(Vec<T>),
+    /// `len` elements starting `off` bytes into the mapping.  Only
+    /// constructed by [`FlatStore::from_mmap`], which proves alignment
+    /// and little-endianness first.
+    Mapped { map: Arc<shard::Mmap>, off: usize, len: usize },
+}
+
+impl<T: Copy> FlatStore<T> {
+    /// Zero-copy view of `len` elements at byte offset `off` in `map`.
+    /// Returns `None` — callers fall back to an owned decode — unless the
+    /// window is in bounds, the start address is aligned for `T`, and the
+    /// target is little-endian (the on-disk byte order; a byte-swapping
+    /// host must copy).
+    pub fn from_mmap(map: Arc<shard::Mmap>, off: usize, len: usize) -> Option<Self> {
+        if !cfg!(target_endian = "little") {
+            return None;
+        }
+        let bytes = len.checked_mul(std::mem::size_of::<T>())?;
+        let end = off.checked_add(bytes)?;
+        if end > map.len() {
+            return None;
+        }
+        if (map.as_bytes().as_ptr() as usize + off) % std::mem::align_of::<T>() != 0 {
+            return None;
+        }
+        Some(Self { repr: Repr::Mapped { map, off, len } })
+    }
+
+    /// Whether this store is a live mmap window (used by the out-of-core
+    /// tests to assert the zero-copy path actually engaged).
+    pub fn is_mapped(&self) -> bool {
+        matches!(self.repr, Repr::Mapped { .. })
+    }
+
+    /// Owned copy of the elements.
+    pub fn to_vec(&self) -> Vec<T> {
+        self[..].to_vec()
+    }
+
+    /// Sub-store over elements `start..end`.  On a mapped store this is
+    /// another zero-copy window sharing the same mapping (the out-of-core
+    /// splitter's building block, see [`shard::contiguous`]); on an owned
+    /// store it copies the range.
+    pub fn slice(&self, start: usize, end: usize) -> FlatStore<T> {
+        assert!(start <= end && end <= self.len());
+        match &self.repr {
+            Repr::Owned(v) => FlatStore::from(v[start..end].to_vec()),
+            Repr::Mapped { map, off, .. } => FlatStore {
+                repr: Repr::Mapped {
+                    map: Arc::clone(map),
+                    off: off + start * std::mem::size_of::<T>(),
+                    len: end - start,
+                },
+            },
+        }
+    }
+}
+
+impl<T: Copy> From<Vec<T>> for FlatStore<T> {
+    fn from(v: Vec<T>) -> Self {
+        Self { repr: Repr::Owned(v) }
+    }
+}
+
+impl<T: Copy> Deref for FlatStore<T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        match &self.repr {
+            Repr::Owned(v) => v,
+            Repr::Mapped { map, off, len } => unsafe {
+                // SAFETY: from_mmap proved bounds and alignment; the Arc
+                // keeps the mapping alive for the store's lifetime and
+                // the mapping is PROT_READ/MAP_PRIVATE (never mutated).
+                std::slice::from_raw_parts(
+                    map.as_bytes().as_ptr().add(*off) as *const T,
+                    *len,
+                )
+            },
+        }
+    }
+}
+
+impl<T: Copy> DerefMut for FlatStore<T> {
+    /// Copy-on-write: first mutable access to a mapped store detaches it
+    /// into an owned copy, so the read-only mapping is never written.
+    fn deref_mut(&mut self) -> &mut [T] {
+        if self.is_mapped() {
+            self.repr = Repr::Owned(self.to_vec());
+        }
+        match &mut self.repr {
+            Repr::Owned(v) => v,
+            Repr::Mapped { .. } => unreachable!("detached above"),
+        }
+    }
+}
+
+impl<T: Copy> Clone for FlatStore<T> {
+    fn clone(&self) -> Self {
+        match &self.repr {
+            Repr::Owned(v) => Self { repr: Repr::Owned(v.clone()) },
+            Repr::Mapped { map, off, len } => Self {
+                repr: Repr::Mapped { map: Arc::clone(map), off: *off, len: *len },
+            },
+        }
+    }
+}
+
+impl<T: Copy + std::fmt::Debug> std::fmt::Debug for FlatStore<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_list().entries(self.iter()).finish()
+    }
+}
+
+impl<T: Copy + PartialEq> PartialEq for FlatStore<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self[..] == other[..]
+    }
+}
+
+/// Dense classification dataset (row-major features), in-RAM or mapped.
 #[derive(Clone, Debug)]
 pub struct Dataset {
     pub n: usize,
     pub features: usize,
     pub classes: usize,
     /// n × features, row-major
-    pub x: Vec<f32>,
+    pub x: FlatStore<f32>,
     /// class ids in [0, classes)
-    pub y: Vec<u32>,
+    pub y: FlatStore<u32>,
 }
 
 impl Dataset {
@@ -32,7 +175,7 @@ impl Dataset {
         &self.x[i * self.features..(i + 1) * self.features]
     }
 
-    /// Select rows by index into a new dataset.
+    /// Select rows by index into a new (owned) dataset.
     pub fn select(&self, idx: &[usize]) -> Dataset {
         let mut x = Vec::with_capacity(idx.len() * self.features);
         let mut y = Vec::with_capacity(idx.len());
@@ -40,7 +183,13 @@ impl Dataset {
             x.extend_from_slice(self.row(i));
             y.push(self.y[i]);
         }
-        Dataset { n: idx.len(), features: self.features, classes: self.classes, x, y }
+        Dataset {
+            n: idx.len(),
+            features: self.features,
+            classes: self.classes,
+            x: x.into(),
+            y: y.into(),
+        }
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -63,7 +212,7 @@ impl Dataset {
     /// Per-class counts (used by the heterogeneity experiments).
     pub fn class_histogram(&self) -> Vec<usize> {
         let mut h = vec![0usize; self.classes];
-        for &c in &self.y {
+        for &c in self.y.iter() {
             h[c as usize] += 1;
         }
         h
@@ -77,8 +226,15 @@ pub struct TrainTest {
     pub test: Dataset,
 }
 
-/// Build the named dataset at the requested size (see [`synth`]).
+/// Build the named dataset at the requested size (see [`synth`]), or map
+/// an on-disk shard file with the `"shard:<path>"` name form (see
+/// [`shard::open_shard`]).  For shard files the dimensions recorded in
+/// the file win over the requested `n_train`/`n_test` — the file is the
+/// dataset; the config sizes only describe synthesized data.
 pub fn load(name: &str, n_train: usize, n_test: usize, seed: u64) -> Result<TrainTest> {
+    if let Some(path) = name.strip_prefix("shard:") {
+        return shard::open_shard(path);
+    }
     match name {
         "mnist" => Ok(synth::mnist_like(n_train, n_test, seed)),
         "ijcnn1" => Ok(synth::ijcnn1_like(n_train, n_test, seed)),
@@ -118,5 +274,22 @@ mod tests {
     fn histogram_sums_to_n() {
         let tt = load("covtype", 200, 10, 2).unwrap();
         assert_eq!(tt.train.class_histogram().iter().sum::<usize>(), 200);
+    }
+
+    #[test]
+    fn flat_store_owned_semantics() {
+        let s: FlatStore<f32> = vec![1.0f32, 2.0, 3.0].into();
+        assert!(!s.is_mapped());
+        assert_eq!(s.len(), 3);
+        assert_eq!(s[1], 2.0);
+        assert_eq!(s.to_vec(), vec![1.0, 2.0, 3.0]);
+        let sub = s.slice(1, 3);
+        assert_eq!(&sub[..], &[2.0, 3.0]);
+        let mut m = s.clone();
+        m[0] = 9.0;
+        assert_eq!(m[0], 9.0);
+        assert_eq!(s[0], 1.0, "clone must not alias an owned store");
+        assert_ne!(s, m);
+        assert_eq!(s, s.clone());
     }
 }

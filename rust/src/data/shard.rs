@@ -1,4 +1,4 @@
-//! Sharding a dataset across M workers.
+//! Sharding a dataset across M workers, plus out-of-core shard files.
 //!
 //! * [`uniform`] — the paper's main setting: i.i.d. random equal split.
 //! * [`dirichlet`] — heterogeneous class skew per worker (concentration
@@ -7,9 +7,40 @@
 //!   communication-frequency ordering is about.
 //! * [`Batcher`] — deterministic minibatch sampler for the stochastic
 //!   algorithms (each worker draws `batch/M` of its shard per step).
+//! * [`write_shard`] / [`open_shard`] — the on-disk `LAQSHRD1` format:
+//!   a memory-mapped, read-only train/test pair whose feature/label
+//!   arrays stream through training without ever being copied into RAM
+//!   (std-only `mmap(2)` via a local `extern "C"` declaration, with a
+//!   plain-file-read fallback on non-unix targets, unmappable files, or
+//!   byte-swapping hosts).  Mapped and read-fallback datasets are
+//!   bit-identical — both hand the models the same `&[f32]`/`&[u32]`.
+//! * [`contiguous`] — zero-copy contiguous row split of a mapped dataset
+//!   (each worker's shard is another window into the same mapping), for
+//!   fleets whose combined shards exceed RAM.  Note [`uniform`] /
+//!   [`dirichlet`] intentionally keep materializing owned permuted
+//!   copies — their row orders are the bit-pinned historical ones.
+//!
+//! # `LAQSHRD1` layout (all integers/floats little-endian)
+//!
+//! ```text
+//! [0..8)   magic  b"LAQSHRD1"
+//! [8..24)  u32 ×4: features, classes, n_train, n_test
+//! then, back to back (4-byte aligned because the header is 24 bytes):
+//!   y_train  n_train × u32
+//!   x_train  n_train·features × f32
+//!   y_test   n_test × u32
+//!   x_test   n_test·features × f32
+//! ```
+//!
+//! The file length must match the header *exactly* — torn, truncated or
+//! over-long files are rejected with [`Error::Data`] at open, never
+//! panics mid-training.
 
-use super::Dataset;
+use std::sync::Arc;
+
+use super::{Dataset, FlatStore, TrainTest};
 use crate::util::rng::Rng;
+use crate::{Error, Result};
 
 /// Equal-sized i.i.d. shards (drops the <M remainder rows).
 pub fn uniform(d: &Dataset, m: usize, seed: u64) -> Vec<Dataset> {
@@ -130,6 +161,324 @@ impl Batcher {
     }
 }
 
+// --- out-of-core shard files ----------------------------------------------
+
+/// Magic prefix of the on-disk shard format (see the module doc).
+pub const SHARD_MAGIC: [u8; 8] = *b"LAQSHRD1";
+
+/// Header size in bytes: magic + four u32 dims.  A multiple of 4, so
+/// every section behind it is 4-byte aligned within the (page-aligned)
+/// mapping — the alignment [`FlatStore::from_mmap`] requires.
+pub const SHARD_HEADER: usize = 24;
+
+#[cfg(unix)]
+mod sys {
+    //! Minimal `mmap(2)` surface, declared locally — the crate is
+    //! dependency-free, so no libc crate.  Constants are the POSIX
+    //! values shared by Linux and the BSDs/macOS for these two flags.
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+    extern "C" {
+        pub fn mmap(
+            addr: *mut u8,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut u8;
+        pub fn munmap(addr: *mut u8, len: usize) -> i32;
+    }
+}
+
+/// A read-only, private memory mapping of a whole file.  Pages fault in
+/// on first touch and the OS evicts them under pressure, so a dataset
+/// larger than RAM streams through training.  Dropped mappings are
+/// unmapped; the mapping is never written ([`FlatStore`] copies on
+/// write), so `MAP_PRIVATE` semantics never materialize dirty pages.
+pub struct Mmap {
+    ptr: *mut u8,
+    len: usize,
+}
+
+// SAFETY: the mapping is PROT_READ and nothing ever writes through it;
+// shared &[u8] reads from any thread are safe.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Map `file` read-only.  `None` when mapping is unavailable (empty
+    /// file, non-unix target, or the syscall failed) — callers fall back
+    /// to [`open_shard_read`].
+    #[cfg(unix)]
+    pub fn map(file: &std::fs::File) -> Option<Mmap> {
+        use std::os::unix::io::AsRawFd;
+        let len = file.metadata().ok()?.len();
+        if len == 0 || len > usize::MAX as u64 {
+            return None;
+        }
+        let len = len as usize;
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as usize == usize::MAX {
+            return None; // MAP_FAILED
+        }
+        Some(Mmap { ptr, len })
+    }
+
+    #[cfg(not(unix))]
+    pub fn map(_file: &std::fs::File) -> Option<Mmap> {
+        None
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        unsafe {
+            sys::munmap(self.ptr, self.len);
+        }
+    }
+}
+
+impl std::fmt::Debug for Mmap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Mmap({} bytes)", self.len)
+    }
+}
+
+/// Parsed `LAQSHRD1` header plus the derived section offsets (bytes).
+struct ShardLayout {
+    features: usize,
+    classes: usize,
+    n_train: usize,
+    n_test: usize,
+    y_train: usize,
+    x_train: usize,
+    y_test: usize,
+    x_test: usize,
+    total: usize,
+}
+
+fn parse_header(bytes: &[u8], file_len: u64, path: &str) -> Result<ShardLayout> {
+    if bytes.len() < SHARD_HEADER {
+        return Err(Error::Data(format!(
+            "shard file '{path}' too short for the {SHARD_HEADER}-byte header ({} bytes)",
+            bytes.len()
+        )));
+    }
+    if bytes[..8] != SHARD_MAGIC {
+        return Err(Error::Data(format!(
+            "'{path}' is not a LAQSHRD1 shard file (bad magic)"
+        )));
+    }
+    let dim = |at: usize| -> usize {
+        u32::from_le_bytes(bytes[at..at + 4].try_into().unwrap()) as usize
+    };
+    let (features, classes, n_train, n_test) = (dim(8), dim(12), dim(16), dim(20));
+    if features == 0 || classes == 0 {
+        return Err(Error::Data(format!(
+            "shard file '{path}': features = {features}, classes = {classes} must be > 0"
+        )));
+    }
+    // all section sizes via checked u64 math: a hostile header must not
+    // overflow into a bogus-but-matching total
+    let total = (|| -> Option<u64> {
+        let sz = |elems: u64| elems.checked_mul(4);
+        let mut t = SHARD_HEADER as u64;
+        t = t.checked_add(sz(n_train as u64)?)?;
+        t = t.checked_add(sz((n_train as u64).checked_mul(features as u64)?)?)?;
+        t = t.checked_add(sz(n_test as u64)?)?;
+        t = t.checked_add(sz((n_test as u64).checked_mul(features as u64)?)?)?;
+        Some(t).filter(|&t| t <= usize::MAX as u64)
+    })()
+    .ok_or_else(|| {
+        Error::Data(format!("shard file '{path}': header dimensions overflow"))
+    })?;
+    if total != file_len {
+        return Err(Error::Data(format!(
+            "shard file '{path}' is torn: {file_len} bytes on disk, header \
+             promises {total}"
+        )));
+    }
+    let y_train = SHARD_HEADER;
+    let x_train = y_train + n_train * 4;
+    let y_test = x_train + n_train * features * 4;
+    let x_test = y_test + n_test * 4;
+    Ok(ShardLayout {
+        features,
+        classes,
+        n_train,
+        n_test,
+        y_train,
+        x_train,
+        y_test,
+        x_test,
+        total: total as usize,
+    })
+}
+
+/// Write `tt` to `path` in the `LAQSHRD1` format (see the module doc).
+pub fn write_shard(path: &str, tt: &TrainTest) -> Result<()> {
+    tt.train.validate()?;
+    tt.test.validate()?;
+    if tt.train.features != tt.test.features || tt.train.classes != tt.test.classes {
+        return Err(Error::Data(
+            "train/test feature or class dimensions differ".into(),
+        ));
+    }
+    let mut buf = Vec::with_capacity(
+        SHARD_HEADER + 4 * (tt.train.y.len() + tt.train.x.len() + tt.test.y.len() + tt.test.x.len()),
+    );
+    buf.extend_from_slice(&SHARD_MAGIC);
+    for dim in [tt.train.features, tt.train.classes, tt.train.n, tt.test.n] {
+        let v = u32::try_from(dim)
+            .map_err(|_| Error::Data(format!("dimension {dim} exceeds u32")))?;
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    for v in tt.train.y.iter() {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    for v in tt.train.x.iter() {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    for v in tt.test.y.iter() {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    for v in tt.test.x.iter() {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(path, &buf)?;
+    Ok(())
+}
+
+fn dataset_from_layout(
+    map: &Arc<Mmap>,
+    l: &ShardLayout,
+    n: usize,
+    y_off: usize,
+    x_off: usize,
+) -> Option<Dataset> {
+    let d = Dataset {
+        n,
+        features: l.features,
+        classes: l.classes,
+        x: FlatStore::from_mmap(Arc::clone(map), x_off, n * l.features)?,
+        y: FlatStore::from_mmap(Arc::clone(map), y_off, n)?,
+    };
+    Some(d)
+}
+
+/// Open an on-disk shard file as a zero-copy memory-mapped [`TrainTest`].
+/// Falls back to [`open_shard_read`] (owned buffers, bit-identical data)
+/// when mapping is unavailable.  Labels are validated up front, so a
+/// damaged file errors here rather than panicking mid-training.
+pub fn open_shard(path: &str) -> Result<TrainTest> {
+    let file = std::fs::File::open(path)
+        .map_err(|e| Error::Data(format!("cannot open shard file '{path}': {e}")))?;
+    let file_len = file
+        .metadata()
+        .map_err(|e| Error::Data(format!("cannot stat shard file '{path}': {e}")))?
+        .len();
+    let map = match Mmap::map(&file) {
+        Some(m) => Arc::new(m),
+        None => return open_shard_read(path),
+    };
+    let l = parse_header(map.as_bytes(), file_len, path)?;
+    let built = (|| {
+        Some(TrainTest {
+            train: dataset_from_layout(&map, &l, l.n_train, l.y_train, l.x_train)?,
+            test: dataset_from_layout(&map, &l, l.n_test, l.y_test, l.x_test)?,
+        })
+    })();
+    let tt = match built {
+        Some(tt) => tt,
+        // unaligned mapping or byte-swapping host: decode owned instead
+        None => return open_shard_read(path),
+    };
+    debug_assert_eq!(l.total, map.len());
+    tt.train.validate()?;
+    tt.test.validate()?;
+    Ok(tt)
+}
+
+/// Plain-file-read decode of a shard file into owned buffers — the
+/// fallback behind [`open_shard`] and the reference the mmap path is
+/// tested bit-identical against.
+pub fn open_shard_read(path: &str) -> Result<TrainTest> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| Error::Data(format!("cannot read shard file '{path}': {e}")))?;
+    let l = parse_header(&bytes, bytes.len() as u64, path)?;
+    let u32s = |off: usize, n: usize| -> Vec<u32> {
+        bytes[off..off + 4 * n]
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    };
+    let f32s = |off: usize, n: usize| -> Vec<f32> {
+        bytes[off..off + 4 * n]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    };
+    let train = Dataset {
+        n: l.n_train,
+        features: l.features,
+        classes: l.classes,
+        x: f32s(l.x_train, l.n_train * l.features).into(),
+        y: u32s(l.y_train, l.n_train).into(),
+    };
+    let test = Dataset {
+        n: l.n_test,
+        features: l.features,
+        classes: l.classes,
+        x: f32s(l.x_test, l.n_test * l.features).into(),
+        y: u32s(l.y_test, l.n_test).into(),
+    };
+    train.validate()?;
+    test.validate()?;
+    Ok(TrainTest { train, test })
+}
+
+/// Contiguous row split into M equal shards (drops the < M remainder,
+/// like [`uniform`]) — zero-copy on a mapped dataset: every shard is
+/// another window into the same mapping, so a fleet whose combined
+/// shards exceed RAM still streams from disk.  Unlike [`uniform`] there
+/// is no permutation; row order is the file's.
+pub fn contiguous(d: &Dataset, m: usize) -> Vec<Dataset> {
+    assert!(m > 0 && d.n >= m);
+    let per = d.n / m;
+    (0..m)
+        .map(|w| Dataset {
+            n: per,
+            features: d.features,
+            classes: d.classes,
+            x: d.x.slice(w * per * d.features, (w + 1) * per * d.features),
+            y: d.y.slice(w * per, (w + 1) * per),
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -231,5 +580,158 @@ mod tests {
         let mut b1 = Batcher::new(100, 10, 42, 0);
         let mut b2 = Batcher::new(100, 10, 42, 1);
         assert_ne!(b1.next_batch(), b2.next_batch());
+    }
+
+    // --- out-of-core shard files -----------------------------------------
+
+    fn tmp_path(tag: &str) -> String {
+        let dir = std::env::temp_dir();
+        dir.join(format!("laq_shard_{tag}_{}.bin", std::process::id()))
+            .to_string_lossy()
+            .into_owned()
+    }
+
+    /// n_train = 123, features = 7: every section boundary lands off any
+    /// page boundary, exercising the non-page-aligned tail.
+    fn odd_tt() -> crate::data::TrainTest {
+        synth::ijcnn1_like(123, 31, 9)
+    }
+
+    #[test]
+    fn shard_file_mmap_and_read_paths_bit_identical() {
+        let tt = odd_tt();
+        let path = tmp_path("roundtrip");
+        write_shard(&path, &tt).unwrap();
+        let mapped = open_shard(&path).unwrap();
+        let read = open_shard_read(&path).unwrap();
+        for (a, b, what) in [
+            (&mapped.train, &read.train, "train"),
+            (&mapped.test, &read.test, "test"),
+        ] {
+            assert_eq!(a.n, b.n, "{what}");
+            assert_eq!(a.features, b.features, "{what}");
+            assert_eq!(a.classes, b.classes, "{what}");
+            let ab: Vec<u32> = a.x.iter().map(|v| v.to_bits()).collect();
+            let bb: Vec<u32> = b.x.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(ab, bb, "{what} features drift");
+            assert_eq!(a.y.to_vec(), b.y.to_vec(), "{what} labels drift");
+        }
+        // and both match the original in-RAM dataset bit-for-bit
+        let orig: Vec<u32> = tt.train.x.iter().map(|v| v.to_bits()).collect();
+        let back: Vec<u32> = mapped.train.x.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(orig, back, "mmap vs in-RAM drift");
+        assert_eq!(tt.train.y.to_vec(), mapped.train.y.to_vec());
+        #[cfg(all(unix, target_endian = "little"))]
+        assert!(
+            mapped.train.x.is_mapped() && mapped.train.y.is_mapped(),
+            "the zero-copy path must actually engage on unix"
+        );
+        assert!(!read.train.x.is_mapped());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn torn_and_damaged_shard_files_error_instead_of_panicking() {
+        let tt = odd_tt();
+        let path = tmp_path("torn");
+        write_shard(&path, &tt).unwrap();
+        let whole = std::fs::read(&path).unwrap();
+
+        // every kind of tear: header cut, section cut, one byte short
+        for cut in [0usize, 4, SHARD_HEADER - 1, SHARD_HEADER + 3, whole.len() - 1] {
+            std::fs::write(&path, &whole[..cut]).unwrap();
+            assert!(open_shard(&path).is_err(), "cut at {cut} must error");
+            assert!(open_shard_read(&path).is_err(), "cut at {cut} must error");
+        }
+        // over-long files are torn too (a partial second write)
+        let mut long = whole.clone();
+        long.extend_from_slice(&[0u8; 13]);
+        std::fs::write(&path, &long).unwrap();
+        assert!(open_shard(&path).is_err(), "over-long file must error");
+
+        // bad magic
+        let mut bad = whole.clone();
+        bad[0] ^= 0xFF;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(open_shard(&path).is_err(), "bad magic must error");
+
+        // out-of-range label caught by validate at open
+        let mut evil = whole.clone();
+        let y0 = SHARD_HEADER;
+        evil[y0..y0 + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&path, &evil).unwrap();
+        assert!(open_shard(&path).is_err(), "wild label must error");
+        assert!(open_shard_read(&path).is_err(), "wild label must error");
+
+        // a header promising overflowing sections must error, not wrap
+        let mut huge = whole.clone();
+        huge[16..20].copy_from_slice(&u32::MAX.to_le_bytes()); // n_train
+        std::fs::write(&path, &huge).unwrap();
+        assert!(open_shard(&path).is_err(), "overflowing header must error");
+
+        assert!(open_shard("/nonexistent/laq_shard").is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn contiguous_split_matches_select_and_stays_zero_copy() {
+        let tt = odd_tt();
+        let path = tmp_path("contig");
+        write_shard(&path, &tt).unwrap();
+        let mapped = open_shard(&path).unwrap();
+        let shards = contiguous(&mapped.train, 4);
+        assert_eq!(shards.len(), 4);
+        let per = mapped.train.n / 4;
+        for (w, s) in shards.iter().enumerate() {
+            assert_eq!(s.n, per);
+            let idx: Vec<usize> = (w * per..(w + 1) * per).collect();
+            let want = mapped.train.select(&idx);
+            assert_eq!(s.x.to_vec(), want.x.to_vec(), "worker {w} features");
+            assert_eq!(s.y.to_vec(), want.y.to_vec(), "worker {w} labels");
+            #[cfg(all(unix, target_endian = "little"))]
+            assert!(
+                s.x.is_mapped() && s.y.is_mapped(),
+                "worker {w}: contiguous shards of a mapped dataset must stay views"
+            );
+            s.validate().unwrap();
+        }
+        // Batcher draws depend only on (shard_n, batch, seed, worker),
+        // so mapped and owned shards see identical index streams
+        let mut bm = Batcher::new(per, 10, 7, 2);
+        let mut bo = Batcher::new(per, 10, 7, 2);
+        for _ in 0..4 {
+            assert_eq!(bm.next_batch(), bo.next_batch());
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn mutating_a_mapped_store_detaches_without_touching_the_file() {
+        let tt = odd_tt();
+        let path = tmp_path("cow");
+        write_shard(&path, &tt).unwrap();
+        let mapped = open_shard(&path).unwrap();
+        let before = std::fs::read(&path).unwrap();
+        let mut d = mapped.train.clone();
+        let first = d.x[0];
+        d.x[0] = first + 1.0;
+        assert_eq!(d.x[0], first + 1.0);
+        assert!(!d.x.is_mapped(), "mutation must detach to an owned copy");
+        assert_eq!(mapped.train.x[0], first, "sibling views must be untouched");
+        assert_eq!(std::fs::read(&path).unwrap(), before, "file must be untouched");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_accepts_the_shard_name_form() {
+        let tt = odd_tt();
+        let path = tmp_path("loadname");
+        write_shard(&path, &tt).unwrap();
+        // the file's dims win over the requested sizes
+        let got = crate::data::load(&format!("shard:{path}"), 9999, 9999, 0).unwrap();
+        assert_eq!(got.train.n, tt.train.n);
+        assert_eq!(got.test.n, tt.test.n);
+        assert_eq!(got.train.features, tt.train.features);
+        std::fs::remove_file(&path).ok();
     }
 }

@@ -30,7 +30,7 @@ fn mixture(
         }
         y.push(c as u32);
     }
-    Dataset { n, features, classes, x, y }
+    Dataset { n, features, classes, x: x.into(), y: y.into() }
 }
 
 fn prototypes(classes: usize, features: usize, rng: &mut Rng) -> Vec<Vec<f32>> {

@@ -38,7 +38,7 @@ fn print_help() {
         "laq — Lazily Aggregated Quantized Gradients (NeurIPS 2019) reproduction\n\n\
          USAGE: laq <exp|train|list> [OPTIONS]\n\n\
          laq exp   --id <fig3|fig4|fig5|fig6|fig7|fig8|table2|table3|prop1> [--full] [--backend native|pjrt] [--out DIR] [--seed N]\n\
-         laq train --algo <gd|qgd|lag|laq|sgd|qsgd|ssgd|slaq|efsgd> [--model logreg|mlp] [--config FILE] [--iters N] [--alpha A] [--bits B] [--bit-schedule fixed|round-decay|innovation] [--bits-min L] [--bits-max H] [--downlink exact|quantized] [--down-bits-min L] [--down-bits-max H] [--threads T] [--server-shards S] [--wire-mode sync|async|async-cross] [--staleness-bound K] [--resilience-cadence C] [--miss-threshold N] [--restore-rounds N] [--max-retries R] [--backoff-base S] [--backoff-cap S] [--quorum Q] [--staleness-slack K] [--t-fixed S] [--t-per-bit S] [--transport sim|tcp] [--listen ADDR] [--backend native|pjrt]\n\
+         laq train --algo <gd|qgd|lag|laq|sgd|qsgd|ssgd|slaq|efsgd> [--model logreg|mlp] [--config FILE] [--iters N] [--alpha A] [--bits B] [--bit-schedule fixed|round-decay|innovation] [--bits-min L] [--bits-max H] [--downlink exact|quantized] [--down-bits-min L] [--down-bits-max H] [--threads T] [--server-shards S] [--wire-mode sync|async|async-cross] [--staleness-bound K] [--resilience-cadence C] [--miss-threshold N] [--restore-rounds N] [--max-retries R] [--backoff-base S] [--backoff-cap S] [--quorum Q] [--staleness-slack K] [--t-fixed S] [--t-per-bit S] [--transport sim|tcp] [--listen ADDR] [--kernels scalar|tiled] [--dataset mnist|ijcnn1|covtype|shard:PATH] [--backend native|pjrt]\n\
          laq list\n"
     );
 }
@@ -130,8 +130,9 @@ fn train_spec() -> Vec<ArgSpec> {
         ArgSpec { name: "t-per-bit", help: "latency model: per-bit transfer time (s, finite, >= 0)", default: None, is_switch: false },
         ArgSpec { name: "transport", help: "sim (in-memory network, default) | tcp (serve real laq-worker processes)", default: None, is_switch: false },
         ArgSpec { name: "listen", help: "tcp transport: bind address (port 0 = ephemeral)", default: Some("127.0.0.1:0"), is_switch: false },
+        ArgSpec { name: "kernels", help: "hot-kernel twins: tiled (block-tiled, default) | scalar (reference) — bit-identical, wall-clock only", default: None, is_switch: false },
         ArgSpec { name: "backend", help: "native|pjrt", default: Some("native"), is_switch: false },
-        ArgSpec { name: "dataset", help: "mnist|ijcnn1|covtype", default: None, is_switch: false },
+        ArgSpec { name: "dataset", help: "mnist|ijcnn1|covtype|shard:<path> (mmap an on-disk LAQSHRD1 file)", default: None, is_switch: false },
         ArgSpec { name: "out", help: "trace output dir", default: Some("results/train"), is_switch: false },
         ArgSpec { name: "seed", help: "rng seed", default: None, is_switch: false },
     ]
@@ -288,6 +289,9 @@ fn cmd_train(argv: &[String]) -> i32 {
         cfg.backend = Backend::parse(args.get("backend").unwrap_or("native"))?;
         if let Some(v) = args.get("transport") {
             cfg.transport = TransportMode::parse(v)?;
+        }
+        if let Some(v) = args.get("kernels") {
+            cfg.kernels = laq::util::kernel::KernelMode::parse(v)?;
         }
         cfg.validate()?;
 

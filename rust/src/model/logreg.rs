@@ -60,7 +60,7 @@ impl ModelOps for LogRegModel {
 
     fn accuracy(&self, theta: &[f32], test: &Dataset) -> f64 {
         let pred = self.predict(theta, test);
-        let correct = pred.iter().zip(&test.y).filter(|(a, b)| a == b).count();
+        let correct = pred.iter().zip(test.y.iter()).filter(|(a, b)| a == b).count();
         correct as f64 / test.n.max(1) as f64
     }
 }
@@ -352,7 +352,7 @@ mod tests {
             x.extend(row);
             y.push(c);
         }
-        let test = Dataset { n: 4, features: 4, classes: 4, x, y };
+        let test = Dataset { n: 4, features: 4, classes: 4, x: x.into(), y: y.into() };
         // identity weights classify perfectly
         let mut theta = vec![0.0f32; 16];
         for c in 0..4 {

@@ -94,9 +94,9 @@ pub(crate) mod testutil {
     /// Small random classification shard for backend tests.
     pub fn tiny_shard(seed: u64, n: usize, f: usize, c: usize) -> Dataset {
         let mut rng = Rng::new(seed);
-        let x = (0..n * f).map(|_| rng.normal() as f32).collect();
-        let y = (0..n).map(|_| rng.below(c as u64) as u32).collect();
-        Dataset { n, features: f, classes: c, x, y }
+        let x: Vec<f32> = (0..n * f).map(|_| rng.normal() as f32).collect();
+        let y: Vec<u32> = (0..n).map(|_| rng.below(c as u64) as u32).collect();
+        Dataset { n, features: f, classes: c, x: x.into(), y: y.into() }
     }
 
     /// Directional finite-difference check of a (loss, grad) oracle.

@@ -238,7 +238,34 @@ impl InnovationQuantizer {
     /// the worker node keeps both buffers alive across iterations so the
     /// steady-state criterion evaluation performs zero heap allocation.
     /// `q_new_out` may alias a scratch buffer; length must equal `g.len()`.
+    ///
+    /// Dispatches to the [`Self::quantize_into_scalar`] /
+    /// [`Self::quantize_into_tiled`] twins on the process-wide
+    /// [`crate::util::kernel::mode`].  Both twins apply the identical
+    /// per-coordinate projection and [`reconstruct_coord`] expression
+    /// (each coordinate is independent — no cross-coordinate reduction),
+    /// so they are bit-identical by construction; the tiled twin only
+    /// reshapes the traversal into 16-wide blocks the compiler can
+    /// vectorize without reasoning about the `codes_out` push pattern.
     pub fn quantize_into(
+        &self,
+        g: &[f32],
+        q_prev: &[f32],
+        codes_out: &mut Vec<u32>,
+        q_new_out: &mut [f32],
+    ) -> f32 {
+        match crate::util::kernel::mode() {
+            crate::util::kernel::KernelMode::Scalar => {
+                self.quantize_into_scalar(g, q_prev, codes_out, q_new_out)
+            }
+            crate::util::kernel::KernelMode::Tiled => {
+                self.quantize_into_tiled(g, q_prev, codes_out, q_new_out)
+            }
+        }
+    }
+
+    /// Scalar reference twin of [`Self::quantize_into`].
+    pub fn quantize_into_scalar(
         &self,
         g: &[f32],
         q_prev: &[f32],
@@ -269,6 +296,53 @@ impl InnovationQuantizer {
         radius
     }
 
+    /// Block-tiled twin of [`Self::quantize_into`]: 16-wide coordinate
+    /// blocks with fixed-size slice views, so the projection and the
+    /// reconstruction vectorize as two independent 16-lane streams.
+    /// Per-coordinate arithmetic is the exact expression of the scalar
+    /// twin — bit-identical output.
+    pub fn quantize_into_tiled(
+        &self,
+        g: &[f32],
+        q_prev: &[f32],
+        codes_out: &mut Vec<u32>,
+        q_new_out: &mut [f32],
+    ) -> f32 {
+        assert_eq!(g.len(), q_prev.len());
+        assert_eq!(g.len(), q_new_out.len());
+        let num_levels = grid_levels_f32(self.bits);
+        let radius = crate::util::tensor::norm_inf_diff(g, q_prev);
+        let two_tau_r = 2.0f32 * radius / num_levels;
+        let safe = two_tau_r.max(1e-30f32);
+        let inv_safe = 1.0f32 / safe;
+        let n = g.len();
+        codes_out.clear();
+        codes_out.resize(n, 0);
+        let blocks = n / 16;
+        for blk in 0..blocks {
+            let o = blk * 16;
+            let gs = &g[o..o + 16];
+            let qs = &q_prev[o..o + 16];
+            let cs = &mut codes_out[o..o + 16];
+            let ns = &mut q_new_out[o..o + 16];
+            for l in 0..16 {
+                let t = (gs[l] - qs[l] + radius) * inv_safe + 0.5;
+                let t = t.clamp(0.0, num_levels);
+                let c = (t as i32 as f32) as u32;
+                cs[l] = c;
+                ns[l] = reconstruct_coord(qs[l], two_tau_r, c, radius);
+            }
+        }
+        for i in blocks * 16..n {
+            let t = (g[i] - q_prev[i] + radius) * inv_safe + 0.5;
+            let t = t.clamp(0.0, num_levels);
+            let c = (t as i32 as f32) as u32;
+            codes_out[i] = c;
+            q_new_out[i] = reconstruct_coord(q_prev[i], two_tau_r, c, radius);
+        }
+        radius
+    }
+
     /// Allocating convenience form of [`Self::quantize_into`].
     pub fn quantize(&self, g: &[f32], q_prev: &[f32]) -> (QuantizedInnovation, Vec<f32>) {
         let mut q_new = vec![0.0f32; g.len()];
@@ -279,7 +353,28 @@ impl InnovationQuantizer {
 
     /// Server-side reconstruction: `q_new = q_prev + 2 tau R c - R`.
     /// Must be the exact same f32 expression as the worker side.
+    ///
+    /// Dispatches to the scalar/tiled twins on the process-wide
+    /// [`crate::util::kernel::mode`]; both twins are bit-identical
+    /// (per-coordinate map, no reduction).
     pub fn dequantize_into(
+        &self,
+        qi: &QuantizedInnovation,
+        q_prev: &[f32],
+        q_new_out: &mut [f32],
+    ) {
+        match crate::util::kernel::mode() {
+            crate::util::kernel::KernelMode::Scalar => {
+                self.dequantize_into_scalar(qi, q_prev, q_new_out)
+            }
+            crate::util::kernel::KernelMode::Tiled => {
+                self.dequantize_into_tiled(qi, q_prev, q_new_out)
+            }
+        }
+    }
+
+    /// Scalar reference twin of [`Self::dequantize_into`].
+    pub fn dequantize_into_scalar(
         &self,
         qi: &QuantizedInnovation,
         q_prev: &[f32],
@@ -289,6 +384,33 @@ impl InnovationQuantizer {
         assert_eq!(qi.bits, self.bits);
         let two_tau_r = 2.0f32 * qi.radius / grid_levels_f32(self.bits);
         for i in 0..q_prev.len() {
+            q_new_out[i] = reconstruct_coord(q_prev[i], two_tau_r, qi.codes[i], qi.radius);
+        }
+    }
+
+    /// Block-tiled twin of [`Self::dequantize_into`]: 16-wide blocks over
+    /// the same [`reconstruct_coord`] expression — bit-identical.
+    pub fn dequantize_into_tiled(
+        &self,
+        qi: &QuantizedInnovation,
+        q_prev: &[f32],
+        q_new_out: &mut [f32],
+    ) {
+        assert_eq!(qi.codes.len(), q_prev.len());
+        assert_eq!(qi.bits, self.bits);
+        let two_tau_r = 2.0f32 * qi.radius / grid_levels_f32(self.bits);
+        let n = q_prev.len();
+        let blocks = n / 16;
+        for blk in 0..blocks {
+            let o = blk * 16;
+            let qs = &q_prev[o..o + 16];
+            let cs = &qi.codes[o..o + 16];
+            let ns = &mut q_new_out[o..o + 16];
+            for l in 0..16 {
+                ns[l] = reconstruct_coord(qs[l], two_tau_r, cs[l], qi.radius);
+            }
+        }
+        for i in blocks * 16..n {
             q_new_out[i] = reconstruct_coord(q_prev[i], two_tau_r, qi.codes[i], qi.radius);
         }
     }
@@ -487,6 +609,38 @@ mod tests {
         let mut bytes = qi.encode();
         bytes[..4].fill(0xFF);
         assert!(QuantizedInnovation::decode(&bytes, 3, 32).is_err());
+    }
+
+    #[test]
+    fn quantize_twins_bit_identical_across_remainder_shapes() {
+        // shapes straddling the 16-wide tile: empty, tile-1, tile,
+        // tile+1, and a p that is no multiple of anything
+        for p in [0usize, 1, 15, 16, 17, 31, 32, 33, 100, 503] {
+            for bits in [1u32, 3, 8, 16] {
+                let q = InnovationQuantizer::new(bits);
+                let (g, qp) = pair(7000 + p as u64 + bits as u64, p);
+                let mut cs = Vec::new();
+                let mut ct = Vec::new();
+                let mut ns = vec![0.0f32; p];
+                let mut nt = vec![0.0f32; p];
+                let rs = q.quantize_into_scalar(&g, &qp, &mut cs, &mut ns);
+                let rt = q.quantize_into_tiled(&g, &qp, &mut ct, &mut nt);
+                assert_eq!(rs.to_bits(), rt.to_bits(), "p={p} bits={bits}");
+                assert_eq!(cs, ct, "codes drift p={p} bits={bits}");
+                let bs: Vec<u32> = ns.iter().map(|v| v.to_bits()).collect();
+                let bt: Vec<u32> = nt.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(bs, bt, "q_new drift p={p} bits={bits}");
+
+                let qi = QuantizedInnovation { radius: rs, codes: cs, bits };
+                let mut ds = vec![0.0f32; p];
+                let mut dt = vec![0.0f32; p];
+                q.dequantize_into_scalar(&qi, &qp, &mut ds);
+                q.dequantize_into_tiled(&qi, &qp, &mut dt);
+                let bs: Vec<u32> = ds.iter().map(|v| v.to_bits()).collect();
+                let bt: Vec<u32> = dt.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(bs, bt, "dequantize drift p={p} bits={bits}");
+            }
+        }
     }
 
     #[test]

@@ -54,7 +54,7 @@ impl PjrtGradWorker {
             Some(b) => rt.signature(b)?.inputs[2].elements(),
             None => 0,
         };
-        let x_value = Value::F32(shard.x.clone());
+        let x_value = Value::F32(shard.x.to_vec());
         let y_value = Value::I32(shard.y.iter().map(|&v| v as i32).collect());
         Ok(Self {
             rt,

@@ -123,9 +123,20 @@ impl<'a> BitReader<'a> {
     }
 }
 
-/// Pack a slice of small integer codes at `bits` bits each (hot path:
-/// specialized fast paths for the common widths used by the paper).
+/// Pack a slice of small integer codes at `bits` bits each — dispatches
+/// on the process-wide [`crate::util::kernel::mode`].  Both twins emit
+/// byte-identical buffers (pinned by the `prop_quant.rs` properties and
+/// `kernel_equivalence.rs`), so the knob never changes a wire byte.
 pub fn pack_codes(codes: &[u32], bits: u32, w: &mut BitWriter) {
+    match crate::util::kernel::mode() {
+        crate::util::kernel::KernelMode::Scalar => pack_codes_scalar(codes, bits, w),
+        crate::util::kernel::KernelMode::Tiled => pack_codes_tiled(codes, bits, w),
+    }
+}
+
+/// Scalar twin of [`pack_codes`]: one [`BitWriter::write`] per code
+/// (with the byte-aligned 8-bit fast path).  The differential reference.
+pub fn pack_codes_scalar(codes: &[u32], bits: u32, w: &mut BitWriter) {
     match bits {
         8 => {
             // byte-aligned if the writer is aligned: fall through generic
@@ -146,9 +157,66 @@ pub fn pack_codes(codes: &[u32], bits: u32, w: &mut BitWriter) {
     }
 }
 
+/// Tiled twin of [`pack_codes`]: a u64 bit accumulator drained a byte at
+/// a time, instead of per-code read-modify-write on the buffer tail.
+/// LSB-first like the writer, and it starts from the writer's current
+/// partial byte, so the emitted bytes are identical to the scalar twin's
+/// for every (codes, bits, writer-alignment) combination.
+pub fn pack_codes_tiled(codes: &[u32], bits: u32, w: &mut BitWriter) {
+    debug_assert!(bits >= 1 && bits <= 32);
+    if bits == 8 && w.used == 0 {
+        // same byte-aligned fast path as the scalar twin
+        w.buf.extend(codes.iter().map(|&c| c as u8));
+        return;
+    }
+    let mask: u64 = if bits >= 32 { u32::MAX as u64 } else { (1u64 << bits) - 1 };
+    // absorb the writer's partial tail byte into the accumulator so the
+    // stream continues mid-byte exactly where the scalar path would
+    let mut accum: u64 = 0;
+    let mut nbits: u32 = 0;
+    if w.used > 0 {
+        accum = w.buf.pop().unwrap() as u64;
+        nbits = w.used;
+    }
+    for &c in codes {
+        accum |= (c as u64 & mask) << nbits;
+        nbits += bits;
+        while nbits >= 8 {
+            w.buf.push((accum & 0xFF) as u8);
+            accum >>= 8;
+            nbits -= 8;
+        }
+    }
+    if nbits > 0 {
+        w.buf.push((accum & 0xFF) as u8);
+    }
+    w.used = nbits;
+}
+
 /// Unpack `n` codes of width `bits` into a caller-retained vector
-/// (cleared first; no allocation once its capacity has warmed up).
+/// (cleared first; no allocation once its capacity has warmed up) —
+/// dispatches on the process-wide [`crate::util::kernel::mode`].  Both
+/// twins return `None` (never panic, never zero-fill) on a truncated
+/// buffer, leaving `Error::Codec` handling to the decoders.
 pub fn unpack_codes_into(
+    r: &mut BitReader,
+    bits: u32,
+    n: usize,
+    out: &mut Vec<u32>,
+) -> Option<()> {
+    match crate::util::kernel::mode() {
+        crate::util::kernel::KernelMode::Scalar => {
+            unpack_codes_into_scalar(r, bits, n, out)
+        }
+        crate::util::kernel::KernelMode::Tiled => {
+            unpack_codes_into_tiled(r, bits, n, out)
+        }
+    }
+}
+
+/// Scalar twin of [`unpack_codes_into`]: one [`BitReader::read`] per
+/// code.  The differential reference.
+pub fn unpack_codes_into_scalar(
     r: &mut BitReader,
     bits: u32,
     n: usize,
@@ -159,6 +227,53 @@ pub fn unpack_codes_into(
     for _ in 0..n {
         out.push(r.read(bits)? as u32);
     }
+    Some(())
+}
+
+/// Tiled twin of [`unpack_codes_into`]: one upfront bounds check, then a
+/// byte-fed u64 window sliced `bits` at a time — no per-code bounds
+/// arithmetic.  Reads the same LSB-first layout, leaves the reader at
+/// the same position, and returns the same codes as the scalar twin;
+/// truncated buffers fail the upfront check with the reader position
+/// untouched (the scalar twin may leave the reader mid-stream on
+/// failure; every decoder discards the reader on `None`, so only the
+/// success-path position is contractual).
+pub fn unpack_codes_into_tiled(
+    r: &mut BitReader,
+    bits: u32,
+    n: usize,
+    out: &mut Vec<u32>,
+) -> Option<()> {
+    debug_assert!(bits >= 1 && bits <= 32);
+    let total = (bits as usize).checked_mul(n)?;
+    if r.pos_bits + total > r.buf.len() * 8 {
+        return None;
+    }
+    out.clear();
+    out.reserve(n);
+    let mask: u64 = if bits >= 32 { u32::MAX as u64 } else { (1u64 << bits) - 1 };
+    let mut byte_pos = r.pos_bits / 8;
+    let mut accum: u64 = 0;
+    let mut nbits: u32 = 0;
+    // pre-load the partial byte the reader is parked in, discarding the
+    // bits already consumed
+    let off = (r.pos_bits % 8) as u32;
+    if off > 0 {
+        accum = (r.buf[byte_pos] >> off) as u64;
+        nbits = 8 - off;
+        byte_pos += 1;
+    }
+    for _ in 0..n {
+        while nbits < bits {
+            accum |= (r.buf[byte_pos] as u64) << nbits;
+            byte_pos += 1;
+            nbits += 8;
+        }
+        out.push((accum & mask) as u32);
+        accum >>= bits;
+        nbits -= bits;
+    }
+    r.pos_bits += total;
     Some(())
 }
 
@@ -270,5 +385,86 @@ mod tests {
         assert_eq!(w.len_bits(), 256 * 8);
         let bytes = w.into_bytes();
         assert_eq!(bytes, (0u8..=255).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pack_twins_byte_identical_across_widths_and_alignments() {
+        // every width 1..=16 × every writer misalignment 0..8 × a code
+        // count that is not a multiple of any byte boundary
+        for bits in 1..=16u32 {
+            let max = (1u64 << bits) - 1;
+            let codes: Vec<u32> =
+                (0..203).map(|i| ((i as u64 * 2654435761) & max) as u32).collect();
+            for pre in 0..8u32 {
+                let mut ws = BitWriter::new();
+                let mut wt = BitWriter::new();
+                if pre > 0 {
+                    ws.write(0b1011_0110 & ((1 << pre) - 1), pre);
+                    wt.write(0b1011_0110 & ((1 << pre) - 1), pre);
+                }
+                pack_codes_scalar(&codes, bits, &mut ws);
+                pack_codes_tiled(&codes, bits, &mut wt);
+                assert_eq!(ws.len_bits(), wt.len_bits(), "bits={bits} pre={pre}");
+                assert_eq!(
+                    ws.as_bytes(),
+                    wt.as_bytes(),
+                    "pack twins drift at bits={bits} pre={pre}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn unpack_twins_agree_and_restore_position() {
+        for bits in 1..=16u32 {
+            let max = (1u64 << bits) - 1;
+            let codes: Vec<u32> =
+                (0..151).map(|i| ((i as u64).wrapping_mul(0x9E3779B9) & max) as u32).collect();
+            for pre in 0..8u32 {
+                let mut w = BitWriter::new();
+                if pre > 0 {
+                    w.write(0x55 & ((1 << pre) - 1), pre);
+                }
+                pack_codes_scalar(&codes, bits, &mut w);
+                w.write(0xA, 4); // trailing field read after the codes
+                let bytes = w.into_bytes();
+
+                let mut out_s = Vec::new();
+                let mut out_t = Vec::new();
+                let mut rs = BitReader::new(&bytes);
+                let mut rt = BitReader::new(&bytes);
+                if pre > 0 {
+                    rs.read(pre).unwrap();
+                    rt.read(pre).unwrap();
+                }
+                unpack_codes_into_scalar(&mut rs, bits, codes.len(), &mut out_s).unwrap();
+                unpack_codes_into_tiled(&mut rt, bits, codes.len(), &mut out_t).unwrap();
+                assert_eq!(out_s, codes, "scalar unpack bits={bits} pre={pre}");
+                assert_eq!(out_t, codes, "tiled unpack bits={bits} pre={pre}");
+                // both readers must park at the same bit so the next
+                // field decodes identically
+                assert_eq!(rs.read(4), Some(0xA), "bits={bits} pre={pre}");
+                assert_eq!(rt.read(4), Some(0xA), "bits={bits} pre={pre}");
+            }
+        }
+    }
+
+    #[test]
+    fn unpack_tiled_rejects_truncation_like_scalar() {
+        let codes: Vec<u32> = (0..64).map(|i| i % 8).collect();
+        let mut w = BitWriter::new();
+        pack_codes_scalar(&codes, 3, &mut w);
+        let bytes = w.into_bytes();
+        // every strict prefix is short by at least one code's bits
+        for cut in 0..bytes.len() {
+            let mut out = Vec::new();
+            let mut rt = BitReader::new(&bytes[..cut]);
+            assert!(
+                unpack_codes_into_tiled(&mut rt, 3, 64, &mut out).is_none(),
+                "tiled unpack accepted a {cut}-byte prefix"
+            );
+            let mut rs = BitReader::new(&bytes[..cut]);
+            assert!(unpack_codes_into_scalar(&mut rs, 3, 64, &mut out).is_none());
+        }
     }
 }

@@ -1,0 +1,123 @@
+//! Process-wide kernel implementation selector: `scalar` | `tiled`.
+//!
+//! Every hot kernel in the crate ships as a twin pair — a plain scalar
+//! reference and a block-tiled, autovectorization-friendly rewrite — that
+//! implement the SAME fixed blocked reduction order, so the two modes are
+//! **bit-identical** end to end (pinned by
+//! `rust/tests/kernel_equivalence.rs` over all nine algorithms).  The
+//! knob is therefore a pure wall-clock dial, exactly like `threads` /
+//! `server_shards`: flipping it never changes a trace, a golden, or a
+//! recorded artifact.
+//!
+//! The twins live next to each other in their home modules and both stay
+//! `pub`, so the differential harness tests them against each other
+//! directly, without flipping the global:
+//!
+//! * [`crate::util::tensor`] — `dot_f32_{scalar,tiled}`,
+//!   `axpy_{scalar,tiled}`, `gemm_a_bt_{scalar,tiled}`
+//! * [`crate::util::bitio`] — `pack_codes_{scalar,tiled}`,
+//!   `unpack_codes_into_{scalar,tiled}`
+//! * [`crate::quant::innovation`] — `quantize_into_{scalar,tiled}`,
+//!   `dequantize_into_{scalar,tiled}`
+//! * [`crate::coordinator::server`] — the fused
+//!   `absorb_{dense,innovation,fresh}_range_{scalar,tiled}` sweeps
+//!
+//! Resolution order for the mode: explicit [`set_mode`] (the config /
+//! CLI `kernels` knob, applied by `Trainer::assemble`), else the
+//! `LAQ_KERNELS` environment variable on first use, else `tiled`.
+//! The global is process-wide mutable state — safe precisely because the
+//! modes are bit-identical; tests that flip it for contrast must
+//! serialize around it (see `kernel_equivalence.rs`).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use crate::{Error, Result};
+
+/// Which member of each kernel twin pair executes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelMode {
+    /// Plain scalar reference loops — the differential-test anchor.
+    Scalar,
+    /// Block-tiled rewrites (register blocking + cache tiling), same
+    /// pinned reduction order. The default.
+    Tiled,
+}
+
+impl KernelMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "scalar" => Ok(KernelMode::Scalar),
+            "tiled" => Ok(KernelMode::Tiled),
+            other => Err(Error::Config(format!(
+                "unknown kernels mode '{other}' (expected \"scalar\" | \"tiled\")"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelMode::Scalar => "scalar",
+            KernelMode::Tiled => "tiled",
+        }
+    }
+}
+
+const UNSET: u8 = 0;
+const SCALAR: u8 = 1;
+const TILED: u8 = 2;
+
+static MODE: AtomicU8 = AtomicU8::new(UNSET);
+
+/// The active mode.  One relaxed atomic load — cheap enough for kernel
+/// entry points that dispatch once per call (never per element).
+#[inline]
+pub fn mode() -> KernelMode {
+    match MODE.load(Ordering::Relaxed) {
+        SCALAR => KernelMode::Scalar,
+        TILED => KernelMode::Tiled,
+        _ => init_from_env(),
+    }
+}
+
+#[cold]
+fn init_from_env() -> KernelMode {
+    let m = std::env::var("LAQ_KERNELS")
+        .ok()
+        .and_then(|v| KernelMode::parse(&v).ok())
+        .unwrap_or(KernelMode::Tiled);
+    set_mode(m);
+    m
+}
+
+/// Pin the process-wide mode (config/CLI wins over the env default).
+pub fn set_mode(m: KernelMode) {
+    let v = match m {
+        KernelMode::Scalar => SCALAR,
+        KernelMode::Tiled => TILED,
+    };
+    MODE.store(v, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_name_roundtrip() {
+        for m in [KernelMode::Scalar, KernelMode::Tiled] {
+            assert_eq!(KernelMode::parse(m.name()).unwrap(), m);
+        }
+        assert!(KernelMode::parse("simd").is_err());
+        assert!(KernelMode::parse("").is_err());
+    }
+
+    #[test]
+    fn mode_resolves_and_set_wins() {
+        // whatever the env said, an explicit set_mode is observable; then
+        // restore the default so parallel tests see the usual tiled mode
+        let before = mode();
+        set_mode(KernelMode::Tiled);
+        assert_eq!(mode(), KernelMode::Tiled);
+        set_mode(before);
+    }
+}

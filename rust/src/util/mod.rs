@@ -7,6 +7,7 @@ pub mod bitio;
 pub mod cli;
 pub mod error;
 pub mod json;
+pub mod kernel;
 pub mod logging;
 pub mod prop;
 pub mod rng;

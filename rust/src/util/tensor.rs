@@ -3,9 +3,14 @@
 //! The coordinator's hot path works on flat `f32` parameter/gradient
 //! vectors; the native model backend needs small GEMMs, softmax and
 //! reductions.  No external BLAS is available offline, so this module
-//! implements the handful of kernels we need, with cache-blocked matmul
-//! and (on x86_64) an 8-wide manually unrolled inner loop the compiler
-//! auto-vectorizes.
+//! implements the handful of kernels we need.  The hot entry points
+//! (`dot_f32`, `axpy`, `gemm_a_bt`) ship as scalar/tiled twin pairs
+//! dispatched on [`crate::util::kernel::mode`]; both twins share one
+//! pinned blocked reduction order (see the `dot_f32` contract), so the
+//! modes are bit-identical and the knob is wall-clock only.  The f64
+//! reductions (`dot`, `norm2_sq_diff`) are deliberately strictly
+//! sequential — the criterion and trace fingerprints rest on that order
+//! — and have no tiled variant.
 
 /// Row-major dense matrix view helpers live on plain `Vec<f32>`/slices —
 /// a deliberate choice: everything that crosses the PJRT boundary or the
@@ -47,12 +52,44 @@ impl Mat {
 // Vector ops
 // ---------------------------------------------------------------------------
 
-/// y += a * x
+/// y += a * x — dispatches on the process-wide
+/// [`crate::util::kernel::mode`].  Elementwise, so the scalar and tiled
+/// twins are bit-identical by construction (no cross-element reduction).
 #[inline]
 pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    match crate::util::kernel::mode() {
+        crate::util::kernel::KernelMode::Scalar => axpy_scalar(a, x, y),
+        crate::util::kernel::KernelMode::Tiled => axpy_tiled(a, x, y),
+    }
+}
+
+/// Scalar twin of [`axpy`]: the differential-test reference.
+#[inline]
+pub fn axpy_scalar(a: f32, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
     for (yi, xi) in y.iter_mut().zip(x) {
         *yi += a * xi;
+    }
+}
+
+/// Tiled twin of [`axpy`]: 16-wide register blocks with a scalar tail.
+/// Each element sees the identical `y[i] + a * x[i]` expression, so the
+/// result is bit-equal to [`axpy_scalar`] for every input.
+#[inline]
+pub fn axpy_tiled(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len().min(y.len());
+    let blocks = n / 16;
+    for blk in 0..blocks {
+        let o = blk * 16;
+        let xs = &x[o..o + 16];
+        let ys = &mut y[o..o + 16];
+        for l in 0..16 {
+            ys[l] += a * xs[l];
+        }
+    }
+    for i in blocks * 16..n {
+        y[i] += a * x[i];
     }
 }
 
@@ -192,8 +229,23 @@ pub fn gemm_at_b_acc(k: usize, m: usize, n: usize, a: &[f32], b: &[f32], c: &mut
     }
 }
 
-/// C (m×n) = A (m×k) * B^T where B is (n×k):  C = A Bᵀ.
+/// C (m×n) = A (m×k) * B^T where B is (n×k):  C = A Bᵀ — dispatches on
+/// the process-wide [`crate::util::kernel::mode`].
+///
+/// Both twins compute every output element with the pinned
+/// [`dot_f32`] reduction order (see its accumulation-order contract), so
+/// the tiling only reorders WHICH elements are computed when — never the
+/// additions inside one element — and the modes stay bit-identical.
 pub fn gemm_a_bt(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+    match crate::util::kernel::mode() {
+        crate::util::kernel::KernelMode::Scalar => gemm_a_bt_scalar(m, k, n, a, b),
+        crate::util::kernel::KernelMode::Tiled => gemm_a_bt_tiled(m, k, n, a, b),
+    }
+}
+
+/// Scalar twin of [`gemm_a_bt`]: row-at-a-time, every element one
+/// [`dot_f32_scalar`] call.  The differential-test reference.
+pub fn gemm_a_bt_scalar(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
     let mut c = vec![0.0f32; m * n];
@@ -202,22 +254,120 @@ pub fn gemm_a_bt(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32>
         let crow = &mut c[i * n..(i + 1) * n];
         for (j, cj) in crow.iter_mut().enumerate() {
             let brow = &b[j * k..(j + 1) * k];
-            *cj = dot_f32(arow, brow);
+            *cj = dot_f32_scalar(arow, brow);
         }
     }
     c
 }
 
-/// f32-accumulated dot for inner GEMM loops (speed over the f64 `dot`).
-/// 16-lane accumulator: fills one AVX-512 zmm (or two AVX2 ymm) FMA
-/// chains — §Perf iteration 5.
+/// i-block size for [`gemm_a_bt_tiled`]: A-rows kept hot while a B tile
+/// is resident.
+const ABT_MB: usize = 32;
+/// j-block size for [`gemm_a_bt_tiled`]: B-rows (length k each) reused
+/// across the whole i-block from L1/L2 instead of being re-streamed per
+/// output row.
+const ABT_NB: usize = 8;
+
+/// Tiled twin of [`gemm_a_bt`]: (MB × NB) register/cache blocking over
+/// the output.  Each element is still one [`dot_f32_tiled`] over the
+/// full k extent — the pinned reduction order — so results are bit-equal
+/// to [`gemm_a_bt_scalar`]; only the traversal order of output elements
+/// (and therefore cache behaviour) changes.
+pub fn gemm_a_bt_tiled(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    let mut c = vec![0.0f32; m * n];
+    for j0 in (0..n).step_by(ABT_NB) {
+        let j1 = (j0 + ABT_NB).min(n);
+        for i0 in (0..m).step_by(ABT_MB) {
+            let i1 = (i0 + ABT_MB).min(m);
+            for i in i0..i1 {
+                let arow = &a[i * k..(i + 1) * k];
+                let crow = &mut c[i * n..(i + 1) * n];
+                for j in j0..j1 {
+                    let brow = &b[j * k..(j + 1) * k];
+                    crow[j] = dot_f32_tiled(arow, brow);
+                }
+            }
+        }
+    }
+    c
+}
+
+/// f32-accumulated dot for inner GEMM loops (speed over the f64 `dot`)
+/// — dispatches on the process-wide [`crate::util::kernel::mode`].
+///
+/// # Accumulation-order contract
+///
+/// Both twins implement one pinned blocked reduction order, and every
+/// caller (GEMMs, the logreg/mlp per-row logits) may rely on it:
+///
+/// 1. lane `l ∈ [0, 16)` accumulates `Σ_c x[16c + l] · y[16c + l]` over
+///    the full 16-element chunks, additions in ascending chunk order;
+/// 2. the 16 lane partials are summed in lane-index order
+///    (`acc.iter().sum()`);
+/// 3. the `< 16` tail elements are added sequentially onto that sum.
+///
+/// The 16-lane shape is sized so the compiler CAN map step 1 onto one
+/// AVX-512 zmm (or two AVX2 ymm) FMA chains — that is an optimization
+/// hint, not an asserted guarantee; what IS guaranteed (and pinned by
+/// `rust/tests/kernel_equivalence.rs` plus the shape-coverage tests
+/// below) is the order above, which makes `scalar` and `tiled` — and
+/// therefore whole training traces — bit-identical.
 #[inline]
 pub fn dot_f32(x: &[f32], y: &[f32]) -> f32 {
+    match crate::util::kernel::mode() {
+        crate::util::kernel::KernelMode::Scalar => dot_f32_scalar(x, y),
+        crate::util::kernel::KernelMode::Tiled => dot_f32_tiled(x, y),
+    }
+}
+
+/// Scalar twin of [`dot_f32`]: the plainest expression of the
+/// accumulation-order contract, and the differential-test reference.
+#[inline]
+pub fn dot_f32_scalar(x: &[f32], y: &[f32]) -> f32 {
     let n = x.len().min(y.len());
     let (xc, yc) = (&x[..n], &y[..n]);
     let mut acc = [0.0f32; 16];
     let chunks = n / 16;
     for c in 0..chunks {
+        let o = c * 16;
+        for l in 0..16 {
+            acc[l] += xc[o + l] * yc[o + l];
+        }
+    }
+    let mut s = acc.iter().sum::<f32>();
+    for i in chunks * 16..n {
+        s += xc[i] * yc[i];
+    }
+    s
+}
+
+/// Tiled twin of [`dot_f32`]: 4×16 register blocks.  Per lane the four
+/// products of a block are independent (ILP across FMA chains) but are
+/// added onto the accumulator in ascending chunk order — exactly the
+/// order the scalar twin uses — so the result is bit-equal for every
+/// input.  Leftover full chunks and the scalar tail follow the contract
+/// steps 1–3 unchanged.
+#[inline]
+pub fn dot_f32_tiled(x: &[f32], y: &[f32]) -> f32 {
+    let n = x.len().min(y.len());
+    let (xc, yc) = (&x[..n], &y[..n]);
+    let mut acc = [0.0f32; 16];
+    let chunks = n / 16;
+    let quads = chunks / 4;
+    for q in 0..quads {
+        let o = q * 64;
+        for l in 0..16 {
+            let p0 = xc[o + l] * yc[o + l];
+            let p1 = xc[o + 16 + l] * yc[o + 16 + l];
+            let p2 = xc[o + 32 + l] * yc[o + 32 + l];
+            let p3 = xc[o + 48 + l] * yc[o + 48 + l];
+            // chunk-ordered adds: (((acc + p0) + p1) + p2) + p3
+            acc[l] = (((acc[l] + p0) + p1) + p2) + p3;
+        }
+    }
+    for c in quads * 4..chunks {
         let o = c * 16;
         for l in 0..16 {
             acc[l] += xc[o + l] * yc[o + l];
@@ -383,6 +533,89 @@ mod tests {
         let d1 = dot_f32(&x, &y) as f64;
         let d2 = dot(&x, &y);
         assert!((d1 - d2).abs() < 1e-2 * (1.0 + d2.abs()));
+    }
+
+    /// Shape sweep for the accumulation-order contract: every remainder
+    /// regime of the 16-lane blocked order (empty, sub-chunk n < 16, one
+    /// chunk, 16k ± 1 around the chunk AND the 64-wide tiled-quad
+    /// boundaries) must agree bit-for-bit between the scalar and tiled
+    /// twins, and track the f64 reference.
+    #[test]
+    fn dot_f32_twins_bit_equal_across_remainder_shapes() {
+        let mut rng = crate::util::rng::Rng::new(6);
+        for &n in &[
+            0usize, 1, 2, 7, 15, 16, 17, 31, 32, 33, 47, 48, 63, 64, 65, 79, 80, 127,
+            128, 129, 255, 256, 257, 1023, 1024, 1025,
+        ] {
+            let x: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let y: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let ds = dot_f32_scalar(&x, &y);
+            let dt = dot_f32_tiled(&x, &y);
+            assert_eq!(
+                ds.to_bits(),
+                dt.to_bits(),
+                "scalar/tiled dot drift at n={n}: {ds} vs {dt}"
+            );
+            let dref = dot(&x, &y);
+            assert!(
+                (ds as f64 - dref).abs() < 1e-3 * (1.0 + dref.abs()),
+                "n={n}: {ds} vs f64 {dref}"
+            );
+        }
+    }
+
+    #[test]
+    fn dot_f32_twins_handle_mismatched_lengths() {
+        // both twins clamp to min(len) — the GEMM callers rely on it
+        let x: Vec<f32> = (0..70).map(|i| i as f32 * 0.25).collect();
+        let y: Vec<f32> = (0..65).map(|i| 1.0 - i as f32 * 0.125).collect();
+        assert_eq!(
+            dot_f32_scalar(&x, &y).to_bits(),
+            dot_f32_tiled(&x, &y).to_bits()
+        );
+        assert_eq!(
+            dot_f32_scalar(&y, &x).to_bits(),
+            dot_f32_scalar(&x, &y).to_bits()
+        );
+    }
+
+    #[test]
+    fn axpy_twins_bit_equal() {
+        let mut rng = crate::util::rng::Rng::new(7);
+        for &n in &[0usize, 1, 15, 16, 17, 64, 100, 1025] {
+            let x: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let y0: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let a = rng.normal() as f32;
+            let mut ys = y0.clone();
+            let mut yt = y0.clone();
+            axpy_scalar(a, &x, &mut ys);
+            axpy_tiled(a, &x, &mut yt);
+            assert_eq!(ys, yt, "axpy twins drift at n={n}");
+        }
+    }
+
+    #[test]
+    fn gemm_a_bt_twins_bit_equal_over_adversarial_shapes() {
+        // shapes straddling the (MB, NB) = (32, 8) tile: exact multiples,
+        // tile ± 1, single row/col, and empty extents
+        let mut rng = crate::util::rng::Rng::new(8);
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (1, 17, 9),
+            (31, 16, 7),
+            (32, 33, 8),
+            (33, 64, 9),
+            (64, 65, 16),
+            (5, 0, 3),
+            (0, 4, 2),
+            (3, 4, 0),
+        ] {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
+            let cs = gemm_a_bt_scalar(m, k, n, &a, &b);
+            let ct = gemm_a_bt_tiled(m, k, n, &a, &b);
+            assert_eq!(cs, ct, "gemm_a_bt twins drift at ({m},{k},{n})");
+        }
     }
 
     #[test]

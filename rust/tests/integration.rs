@@ -255,6 +255,43 @@ fn gradnorm_criterion_mode_trains_and_skips() {
 }
 
 #[test]
+fn out_of_core_shard_training_is_bit_identical_to_in_ram() {
+    // write the exact dataset a small_cfg run synthesizes to an on-disk
+    // LAQSHRD1 file, then train once from RAM and once from the mmap —
+    // θ and every communication counter must match bit-for-bit
+    let cfg = small_cfg(Algo::Laq);
+    let tt = laq::data::load(&cfg.data.name, cfg.data.n_train, cfg.data.n_test, cfg.data.seed)
+        .unwrap();
+    let dir = std::env::temp_dir().join("laq_ooc_int");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("ijcnn1.shard");
+    laq::data::shard::write_shard(path.to_str().unwrap(), &tt).unwrap();
+
+    // the mapped view really is the same data, zero-copy where available
+    let mapped = laq::data::shard::open_shard(path.to_str().unwrap()).unwrap();
+    let a: Vec<u32> = tt.train.x.iter().map(|v| v.to_bits()).collect();
+    let b: Vec<u32> = mapped.train.x.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(a, b, "mapped features differ from the in-RAM dataset");
+
+    let mut shard_cfg = cfg.clone();
+    shard_cfg.data.name = format!("shard:{}", path.to_str().unwrap());
+
+    let mut in_ram = laq::algo::build_native(&cfg).unwrap();
+    let mut ooc = laq::algo::build_native(&shard_cfg).unwrap();
+    for i in 0..40 {
+        let sa = in_ram.step().unwrap();
+        let sb = ooc.step().unwrap();
+        assert_eq!(sa.loss.to_bits(), sb.loss.to_bits(), "loss drift at step {i}");
+    }
+    let ta: Vec<u32> = in_ram.theta().iter().map(|v| v.to_bits()).collect();
+    let tb: Vec<u32> = ooc.theta().iter().map(|v| v.to_bits()).collect();
+    assert_eq!(ta, tb, "θ drift between in-RAM and out-of-core runs");
+    assert_eq!(in_ram.net.uplink_rounds(), ooc.net.uplink_rounds());
+    assert_eq!(in_ram.net.uplink_bits(), ooc.net.uplink_bits());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn adam_server_opt_trains_logreg() {
     let mut cfg = small_cfg(Algo::Laq);
     cfg.criterion.mode = laq::config::CritMode::GradNorm;

@@ -441,6 +441,90 @@ fn non_finite_wire_radius_is_rejected_in_both_layouts() {
 }
 
 #[test]
+fn tiled_bitio_twins_match_scalar_on_random_streams() {
+    // the kernel-twin contract at the property level: for ANY width,
+    // code stream and writer/reader misalignment, the tiled pack/unpack
+    // paths produce byte-identical buffers and identical codes to the
+    // scalar reference (the differential harness pins fixed shapes;
+    // this sweeps the space)
+    use laq::util::bitio::{
+        pack_codes_scalar, pack_codes_tiled, unpack_codes_into_scalar,
+        unpack_codes_into_tiled, BitReader,
+    };
+    Prop::new().check("tiled bitio == scalar bitio", |rng| {
+        let p = rng.below(600) as usize;
+        let bits = 1 + rng.below(16) as u32;
+        let pre = rng.below(8) as u32;
+        let mask = (1u64 << bits) - 1;
+        let codes: Vec<u32> = (0..p).map(|_| (rng.next_u64() & mask) as u32).collect();
+
+        let mut ws = BitWriter::new();
+        let mut wt = BitWriter::new();
+        if pre > 0 {
+            let filler = rng.next_u64() & ((1 << pre) - 1);
+            ws.write(filler, pre);
+            wt.write(filler, pre);
+        }
+        pack_codes_scalar(&codes, bits, &mut ws);
+        pack_codes_tiled(&codes, bits, &mut wt);
+        prop_assert!(
+            ws.as_bytes() == wt.as_bytes() && ws.len_bits() == wt.len_bits(),
+            "pack drift p={p} bits={bits} pre={pre}"
+        );
+
+        let bytes = ws.into_bytes();
+        let mut rs = BitReader::new(&bytes);
+        let mut rt = BitReader::new(&bytes);
+        if pre > 0 {
+            rs.read(pre);
+            rt.read(pre);
+        }
+        let (mut out_s, mut out_t) = (Vec::new(), Vec::new());
+        let oks = unpack_codes_into_scalar(&mut rs, bits, p, &mut out_s);
+        let okt = unpack_codes_into_tiled(&mut rt, bits, p, &mut out_t);
+        prop_assert!(oks.is_some() && okt.is_some(), "well-formed stream rejected");
+        prop_assert!(out_s == codes && out_t == codes, "unpack drift p={p} bits={bits}");
+        Ok(())
+    });
+}
+
+#[test]
+fn truncated_streams_fail_both_bitio_twins_identically() {
+    // the adversarial-prefix recipe applied at the twin level: every
+    // strict byte prefix of a packed stream must be rejected by BOTH
+    // unpack twins (None, never panic, never zero-fill) — so the
+    // decoders surface Error::Codec whichever kernel mode is live
+    use laq::util::bitio::{
+        pack_codes_scalar, unpack_codes_into_scalar, unpack_codes_into_tiled, BitReader,
+    };
+    Prop::new().check("every prefix -> None in both twins", |rng| {
+        let p = 1 + rng.below(120) as usize;
+        let bits = 1 + rng.below(16) as u32;
+        let mask = (1u64 << bits) - 1;
+        let codes: Vec<u32> = (0..p).map(|_| (rng.next_u64() & mask) as u32).collect();
+        let mut w = BitWriter::new();
+        pack_codes_scalar(&codes, bits, &mut w);
+        let bytes = w.into_bytes();
+        for cut in 0..bytes.len() {
+            let mut out = Vec::new();
+            prop_assert!(
+                unpack_codes_into_scalar(&mut BitReader::new(&bytes[..cut]), bits, p, &mut out)
+                    .is_none(),
+                "scalar twin accepted a {cut}/{}-byte prefix",
+                bytes.len()
+            );
+            prop_assert!(
+                unpack_codes_into_tiled(&mut BitReader::new(&bytes[..cut]), bits, p, &mut out)
+                    .is_none(),
+                "tiled twin accepted a {cut}/{}-byte prefix",
+                bytes.len()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn quantize_is_deterministic() {
     Prop::new().check("same input -> same message", |rng| {
         let p = 1 + rng.below(300) as usize;
